@@ -1,0 +1,182 @@
+//! **End-to-end driver** (paper §4.1, Fig. 4d/e): the complete retinal-scan
+//! denoising pipeline on a real (synthetic) workload, proving all layers
+//! compose:
+//!
+//! 1. generate a layered 3-D volume + speckle noise (`datagen::retina`);
+//! 2. compute proxy ground-truth statistics with the **sync** mechanism;
+//! 3. run **simultaneous parameter learning and BP inference**: the engine
+//!    applies residual-scheduled BP updates while the background sync takes
+//!    gradient steps on λ (Alg. 3);
+//! 4. read out expectations per voxel, report error-rate / PSNR, and write
+//!    noisy/denoised mid-volume slices as PGM images;
+//! 5. `--accel` reruns inference through the AOT-compiled Pallas kernel via
+//!    PJRT (Layer 1/2) and cross-checks the beliefs.
+//!
+//! Run: `cargo run --release --example denoise_pipeline -- [--accel]`
+
+use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
+use graphlab::apps::learn::{learning_sync, target_stats, STEPS_KEY, TARGET_KEY};
+use graphlab::apps::mrf::GridDims;
+use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::datagen::retina;
+use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+use graphlab::metrics::write_pgm;
+use graphlab::scheduler::{Scheduler, SplashScheduler, Task};
+use graphlab::sdt::Sdt;
+use graphlab::util::stats::psnr;
+use graphlab::util::{Cli, Pcg32, Timer};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("denoise_pipeline", "3-D retinal denoising with learned MRF parameters")
+        .opt("nx", "24", "volume x size")
+        .opt("ny", "24", "volume y size")
+        .opt("nz", "12", "volume z size")
+        .opt("levels", "5", "intensity levels (MRF arity)")
+        .opt("noise", "0.25", "speckle corruption probability")
+        .opt("workers", "4", "engine worker threads")
+        .opt("sync-ms", "2", "background gradient-step interval (ms)")
+        .opt("seed", "42", "rng seed")
+        .opt("out-dir", "results", "output directory for PGM slices")
+        .flag("accel", "rerun inference through the PJRT Pallas kernel");
+    let args = match cli.parse(&std::env::args().skip(1).collect::<Vec<_>>()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+
+    let dims = GridDims::new(
+        args.get_usize("nx")?,
+        args.get_usize("ny")?,
+        args.get_usize("nz")?,
+    );
+    let k = args.get_usize("levels")?;
+    let mut rng = Pcg32::seed_from_u64(args.get_u64("seed")?);
+
+    // 1. Workload.
+    let vol = retina::generate(dims, k, args.get_f64("noise")?, &mut rng);
+    let noisy_err = retina::error_rate(&vol.clean, &vol.noisy);
+    println!(
+        "volume {}x{}x{} (k={k}), noisy error rate {:.3}",
+        dims.nx, dims.ny, dims.nz, noisy_err
+    );
+    let mut mrf = retina::build_mrf(&vol, 0.8);
+
+    // 2. Proxy ground-truth statistics via the sync machinery.
+    let proxy = retina::smoothed_proxy(&vol, 1);
+    let targets = target_stats(dims, &proxy);
+    println!("target axis stats: [{:.3} {:.3} {:.3}]", targets[0], targets[1], targets[2]);
+
+    // 3. Simultaneous learning + inference.
+    let sdt = Sdt::new();
+    sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+    sdt.set(TARGET_KEY, targets);
+    let n = mrf.graph.num_vertices();
+    let locks = LockTable::new(n);
+    let sched = SplashScheduler::new(n, |v| mrf.graph.neighbors(v), 32, args.get_usize("workers")?);
+    for v in 0..n as u32 {
+        sched.add_task(Task::with_priority(v, 1.0));
+    }
+    let mut upd = BpUpdate::new(k, 1e-4, Arc::new(Vec::new()));
+    upd.learn_stats = true;
+    upd.damping = 0.1;
+    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
+    let sync = learning_sync(
+        0.8,
+        Some(Duration::from_millis(args.get_u64("sync-ms")?)),
+    );
+    let timer = Timer::start();
+    let report = ThreadedEngine::run(
+        &mrf.graph,
+        &locks,
+        &sched,
+        &fns,
+        &sdt,
+        &[sync],
+        &[],
+        &EngineConfig::default()
+            .with_workers(args.get_usize("workers")?)
+            .with_model(ConsistencyModel::Edge)
+            .with_max_updates(4_000_000),
+    );
+    let lambda = sdt.get::<[f64; 3]>(LAMBDA_KEY).unwrap();
+    println!(
+        "learning+inference: {} updates, {} gradient steps, {:.2}s, learned lambda [{:.3} {:.3} {:.3}]",
+        report.updates,
+        sdt.get_or::<u64>(STEPS_KEY, 0),
+        timer.elapsed_secs(),
+        lambda[0],
+        lambda[1],
+        lambda[2]
+    );
+
+    // 4. Read out denoised levels (MAP per voxel) + metrics + images.
+    let argmax = |b: &[f32]| -> u32 {
+        b.iter().enumerate().max_by(|a, c| a.1.partial_cmp(c.1).unwrap()).unwrap().0 as u32
+    };
+    let denoised: Vec<u32> =
+        (0..n as u32).map(|v| argmax(&mrf.graph.vertex_data(v).belief)).collect();
+    let err = retina::error_rate(&vol.clean, &denoised);
+    let to_f = |levels: &[u32]| -> Vec<f32> {
+        levels.iter().map(|&l| l as f32 / (k - 1) as f32).collect()
+    };
+    let clean_f = to_f(&vol.clean);
+    let psnr_noisy = psnr(&clean_f, &to_f(&vol.noisy), 1.0);
+    let psnr_denoised = psnr(&clean_f, &to_f(&denoised), 1.0);
+    println!(
+        "error rate: noisy {noisy_err:.3} -> denoised {err:.3}; PSNR {psnr_noisy:.2} dB -> {psnr_denoised:.2} dB"
+    );
+    assert!(err < noisy_err, "denoising must improve the error rate");
+
+    let out_dir = args.get("out-dir").to_string();
+    let z = dims.nz / 2;
+    let slice = |levels: &[u32]| -> Vec<f32> {
+        (0..dims.ny * dims.nx)
+            .map(|i| {
+                let (x, y) = (i % dims.nx, i / dims.nx);
+                levels[dims.index(x, y, z) as usize] as f32 / (k - 1) as f32
+            })
+            .collect()
+    };
+    write_pgm(Path::new(&out_dir).join("fig4d_noisy.pgm").as_path(), &slice(&vol.noisy), dims.nx, dims.ny)?;
+    write_pgm(Path::new(&out_dir).join("fig4e_denoised.pgm").as_path(), &slice(&denoised), dims.nx, dims.ny)?;
+    println!("wrote {out_dir}/fig4d_noisy.pgm and {out_dir}/fig4e_denoised.pgm");
+
+    // 5. Optional: PJRT-accelerated inference cross-check.
+    if args.get_flag("accel") {
+        use graphlab::runtime::AccelGridBp;
+        let dir = graphlab::runtime::default_artifact_dir();
+        let mut accel_mrf = retina::build_mrf(&vol, 0.8);
+        let mut accel = AccelGridBp::open(&dir, 256, k)?;
+        let timer = Timer::start();
+        let (sweeps, residual) = accel.run(&mut accel_mrf, lambda, 250, 1e-4)?;
+        println!(
+            "accel (PJRT {}): {} Jacobi sweeps to residual {:.2e} in {:.2}s",
+            accel.platform(),
+            sweeps,
+            residual,
+            timer.elapsed_secs()
+        );
+        let accel_denoised: Vec<u32> =
+            (0..n as u32).map(|v| argmax(&accel_mrf.graph.vertex_data(v).belief)).collect();
+        let agree = denoised
+            .iter()
+            .zip(&accel_denoised)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / denoised.len() as f64;
+        // NOTE: the engine's beliefs converged while λ was still moving
+        // (simultaneous learning), the accel pass uses the final λ only —
+        // so agreement is high but not exact. The strict fixed-λ
+        // equivalence check lives in rust/tests/runtime_pjrt.rs.
+        println!("accel/engine denoised agreement: {:.1}%", agree * 100.0);
+        assert!(agree > 0.8, "accelerated path must agree with the engine");
+    }
+
+    println!("denoise pipeline OK");
+    Ok(())
+}

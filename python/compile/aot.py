@@ -1,0 +1,125 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO **text** artifacts for the
+rust PJRT runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Artifacts land in ``artifacts/`` together with ``manifest.tsv``:
+
+    name <TAB> path <TAB> in:<shape;...> <TAB> out:<shape;...>
+
+(shape = dtype:d0xd1x...). TSV keeps the rust-side parser dependency-free.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default artifact shapes. The rust runtime pads batches to these sizes;
+# several B variants let the batcher trade padding waste against launches.
+BP_K = 5
+BP_BATCHES = (256, 1024)
+GABP_BATCHES = (1024, 4096)
+COEM_DEGREE = 32
+COEM_K = 4
+COEM_BATCHES = (256,)
+CHAIN_N = 64
+CHAIN_SWEEPS = 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _fmt(specs):
+    return ";".join("f32:" + "x".join(str(d) for d in s.shape) for s in specs)
+
+
+def entry_points():
+    """(name, fn, input ShapeDtypeStructs) for every artifact."""
+    out = []
+    for b in BP_BATCHES:
+        out.append(
+            (
+                f"bp_batch_b{b}_k{BP_K}",
+                model.bp_batch,
+                [_spec(b, BP_K), _spec(BP_K, BP_K), _spec(b, BP_K)],
+            )
+        )
+    for b in GABP_BATCHES:
+        out.append(
+            (f"gabp_batch_b{b}", model.gabp_batch, [_spec(b), _spec(b), _spec(b)])
+        )
+    for b in COEM_BATCHES:
+        out.append(
+            (
+                f"coem_batch_b{b}_d{COEM_DEGREE}_k{COEM_K}",
+                model.coem_batch,
+                [_spec(b, COEM_DEGREE, COEM_K), _spec(b, COEM_DEGREE)],
+            )
+        )
+    out.append(
+        (
+            f"bp_chain_n{CHAIN_N}_k{BP_K}_s{CHAIN_SWEEPS}",
+            lambda pot, psi, f, bwd: model.bp_grid_sweeps(pot, psi, f, bwd, CHAIN_SWEEPS),
+            [
+                _spec(CHAIN_N, BP_K),
+                _spec(BP_K, BP_K),
+                _spec(CHAIN_N - 1, BP_K),
+                _spec(CHAIN_N - 1, BP_K),
+            ],
+        )
+    )
+    return out
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_rows = []
+    for name, fn, in_specs in entry_points():
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *in_specs)
+        out_flat = jax.tree_util.tree_leaves(out_specs)
+        manifest_rows.append(
+            f"{name}\t{fname}\tin:{_fmt(in_specs)}\tout:{_fmt(out_flat)}"
+        )
+        print(f"  {name}: {len(text)} chars, out {_fmt(out_flat)}")
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"wrote {len(manifest_rows)} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored if --out-dir set")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out and not args.out_dir:
+        out_dir = os.path.dirname(args.out)
+    build(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Layer-1 Pallas kernels (build-time only; interpret=True on CPU PJRT)."""
+
+from .bp_msgs import bp_message_batch  # noqa: F401
+from .coem import coem_belief_batch  # noqa: F401
+from .gabp import gabp_message_batch  # noqa: F401

@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernel: batched BP message computation.
+
+The GraphLab coordinator (Layer 3, rust) drains a consistency-safe batch of
+BP tasks and executes all of their outbound-message computations as one
+tensor program. Per batch row b (one directed edge v->t):
+
+    raw[b, j]   = sum_i psi[b // 1, i, j] * cavity[b, i]     (MXU contraction)
+    msg[b, j]   = raw[b, j] / sum_j raw[b, j]                (normalize)
+    res[b]      = sum_j |msg[b, j] - old_msg[b, j]|          (L1 residual)
+
+The potential is shared across the batch (grid MRFs have one Laplace psi per
+axis; the L2 wrapper selects the axis before the call), so the contraction
+is ``[B, K] @ [K, K]`` — a clean systolic-array (MXU) shape once K is padded
+to the lane width.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * the batch dimension is tiled by BlockSpec into VMEM-resident blocks
+    (``block_b`` rows at a time); psi is small and replicated per block;
+  * ``interpret=True`` everywhere in this repo — the CPU PJRT plugin cannot
+    execute Mosaic custom-calls; real-TPU efficiency is *estimated* from the
+    block geometry (see EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM block. 128 rows x K(<=16) f32 is tiny; the figure is chosen
+# so psi + 3 row-blocks stay far below the ~16 MiB VMEM budget while keeping
+# the MXU contraction shape (128, K) x (K, K).
+DEFAULT_BLOCK_B = 128
+
+
+def _bp_kernel(cavity_ref, psi_ref, old_ref, msg_ref, res_ref):
+    """One block: rows of cavity/old, full psi."""
+    cavity = cavity_ref[...]          # [bm, K]
+    psi = psi_ref[...]                # [K, K]
+    old = old_ref[...]                # [bm, K]
+    raw = jnp.dot(cavity, psi, preferred_element_type=jnp.float32)
+    total = jnp.sum(raw, axis=1, keepdims=True)
+    msg = raw / jnp.maximum(total, 1e-30)
+    msg_ref[...] = msg
+    res_ref[...] = jnp.sum(jnp.abs(msg - old), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def bp_message_batch(cavity, psi, old_msg, *, block_b=DEFAULT_BLOCK_B):
+    """Batched BP message update.
+
+    Args:
+      cavity:  f32[B, K] cavity distributions (belief / inbound message).
+      psi:     f32[K, K] edge potential, msg[j] = sum_i psi[i, j] cavity[i].
+      old_msg: f32[B, K] previous messages (for the residuals).
+      block_b: rows per Pallas block (B must be a multiple).
+
+    Returns:
+      (msg f32[B, K], residual f32[B]).
+    """
+    b, k = cavity.shape
+    assert psi.shape == (k, k), psi.shape
+    assert old_msg.shape == (b, k)
+    assert b % block_b == 0, f"B={b} must be a multiple of block_b={block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _bp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(cavity, psi, old_msg)

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: batched GaBP message updates.
+
+One batch row = one directed edge i->j of the Gaussian BP solver
+(apps/gabp.rs). Inputs are the cavity precision / precision-mean and the
+coupling A_ij; outputs the outbound message pair:
+
+    P_out[b] = -a[b]^2 / P_cav[b]
+    h_out[b] = -a[b] * h_cav[b] / P_cav[b]
+
+Purely elementwise (VPU work, no MXU); the value of offloading is batching
+thousands of scalar edge updates into one device launch. Blocked along the
+batch so arbitrarily large batches stream through VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 512
+
+
+def _gabp_kernel(p_cav_ref, h_cav_ref, a_ref, p_out_ref, h_out_ref):
+    p_cav = p_cav_ref[...]
+    h_cav = h_cav_ref[...]
+    a = a_ref[...]
+    denom = jnp.where(jnp.abs(p_cav) > 1e-300, p_cav, 1.0)
+    p_out = -(a * a) / denom
+    h_out = -(a * h_cav) / denom
+    keep = jnp.abs(p_cav) > 1e-300
+    p_out_ref[...] = jnp.where(keep, p_out, 0.0)
+    h_out_ref[...] = jnp.where(keep, h_out, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def gabp_message_batch(p_cav, h_cav, a, *, block_b=DEFAULT_BLOCK_B):
+    """Batched GaBP messages.
+
+    Args:
+      p_cav: f32[B] cavity precisions (P_i - P_{j->i}).
+      h_cav: f32[B] cavity precision-means.
+      a:     f32[B] couplings A_ij.
+
+    Returns:
+      (P_out f32[B], h_out f32[B]).
+    """
+    (b,) = p_cav.shape
+    assert h_cav.shape == (b,) and a.shape == (b,)
+    assert b % block_b == 0, f"B={b} must be a multiple of block_b={block_b}"
+    grid = (b // block_b,)
+    spec = pl.BlockSpec((block_b,), lambda i: (i,))
+    return pl.pallas_call(
+        _gabp_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(p_cav, h_cav, a)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package is validated against these references by
+``python/tests`` (exact math, no blocking, no Pallas) before the AOT
+artifacts are built.
+"""
+
+import jax.numpy as jnp
+
+
+def bp_message_batch_ref(cavity, psi, old_msg):
+    """Reference for kernels.bp_msgs.bp_message_batch."""
+    raw = cavity @ psi
+    total = jnp.sum(raw, axis=1, keepdims=True)
+    msg = raw / jnp.maximum(total, 1e-30)
+    res = jnp.sum(jnp.abs(msg - old_msg), axis=1)
+    return msg, res
+
+
+def gabp_message_batch_ref(p_cav, h_cav, a):
+    """Reference for kernels.gabp.gabp_message_batch."""
+    keep = jnp.abs(p_cav) > 1e-300
+    denom = jnp.where(keep, p_cav, 1.0)
+    p_out = jnp.where(keep, -(a * a) / denom, 0.0)
+    h_out = jnp.where(keep, -(a * h_cav) / denom, 0.0)
+    return p_out, h_out
+
+
+def coem_belief_batch_ref(nb, w):
+    """Reference for kernels.coem.coem_belief_batch."""
+    acc = jnp.einsum("bdk,bd->bk", nb, w)
+    total = jnp.sum(w, axis=1, keepdims=True)
+    return acc / jnp.maximum(total, 1e-30)

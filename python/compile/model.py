@@ -1,0 +1,91 @@
+"""Layer-2 JAX compute graphs wrapping the Layer-1 Pallas kernels.
+
+These are the functions that get AOT-lowered (by ``aot.py``) to the HLO
+artifacts the rust coordinator executes via PJRT — python never runs on the
+request path. Each entry point keeps the kernel call inside the jitted
+function so the Pallas program lowers into the same HLO module.
+
+Entry points (all f32):
+
+  * ``bp_batch``      — one batched BP message step (cavity, psi, old) ->
+                        (msg, residual).
+  * ``bp_grid_sweeps``— fused multi-sweep grid BP: ``lax.scan`` over S
+                        Jacobi sweeps of a 1-D chain decomposition (used by
+                        the denoise pipeline's accelerated inner loop).
+                        Scan keeps the artifact small (no unrolling) and
+                        lets XLA pipeline the sweeps.
+  * ``gabp_batch``    — batched GaBP edge messages.
+  * ``coem_batch``    — batched CoEM belief averaging.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import bp_message_batch, coem_belief_batch, gabp_message_batch
+
+
+def bp_batch(cavity, psi, old_msg):
+    """Single batched BP message step (see kernels.bp_msgs)."""
+    return bp_message_batch(cavity, psi, old_msg)
+
+
+def gabp_batch(p_cav, h_cav, a):
+    """Batched GaBP edge messages (see kernels.gabp)."""
+    return gabp_message_batch(p_cav, h_cav, a)
+
+
+def coem_batch(nb, w):
+    """Batched CoEM belief averaging (see kernels.coem)."""
+    return coem_belief_batch(nb, w)
+
+
+def bp_grid_sweeps(potentials, psi, msgs_fwd, msgs_bwd, num_sweeps: int):
+    """Fused multi-sweep BP along a chain of length N with K levels.
+
+    The 3-D grid BP decomposes into axis-aligned chains; the rust
+    coordinator extracts chains (one batch row per chain position is
+    overkill — entire chains are contiguous), runs S sweeps on-device, and
+    scatters messages back.
+
+    Args:
+      potentials: f32[N, K] node potentials along the chain.
+      psi:        f32[K, K] symmetric edge potential for this axis.
+      msgs_fwd:   f32[N-1, K] messages i -> i+1.
+      msgs_bwd:   f32[N-1, K] messages i+1 -> i.
+      num_sweeps: static sweep count.
+
+    Returns:
+      (msgs_fwd', msgs_bwd', beliefs f32[N, K]).
+    """
+    n, k = potentials.shape
+
+    def normalize(x):
+        return x / jnp.maximum(jnp.sum(x, axis=-1, keepdims=True), 1e-30)
+
+    def sweep(carry, _):
+        fwd, bwd = carry
+        # beliefs use current messages: inbound fwd (from left) + bwd (right)
+        inbound_left = jnp.concatenate([jnp.ones((1, k)), fwd], axis=0)
+        inbound_right = jnp.concatenate([bwd, jnp.ones((1, k))], axis=0)
+        belief = normalize(potentials * inbound_left * inbound_right)
+        # cavity for fwd messages: belief[i] / inbound from the right at i
+        cav_f = normalize(belief[:-1] / jnp.maximum(inbound_right[:-1], 1e-30))
+        cav_b = normalize(belief[1:] / jnp.maximum(inbound_left[1:], 1e-30))
+        new_fwd, _ = bp_message_batch(cav_f, psi, fwd, block_b=_chain_block(n - 1))
+        new_bwd, _ = bp_message_batch(cav_b, psi, bwd, block_b=_chain_block(n - 1))
+        return (new_fwd, new_bwd), None
+
+    (fwd, bwd), _ = lax.scan(sweep, (msgs_fwd, msgs_bwd), None, length=num_sweeps)
+    inbound_left = jnp.concatenate([jnp.ones((1, k)), fwd], axis=0)
+    inbound_right = jnp.concatenate([bwd, jnp.ones((1, k))], axis=0)
+    belief = normalize(potentials * inbound_left * inbound_right)
+    return fwd, bwd, belief
+
+
+def _chain_block(rows: int) -> int:
+    """Largest power-of-two block that divides the row count (<=128)."""
+    b = 1
+    while b < 128 and rows % (b * 2) == 0:
+        b *= 2
+    return b

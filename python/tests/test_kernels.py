@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles — the build-time correctness gate.
+
+hypothesis sweeps shapes and values; every kernel must match its ref.py
+oracle to float32 tolerance across the sweep.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bp_message_batch, coem_belief_batch, gabp_message_batch
+from compile.kernels.ref import (
+    bp_message_batch_ref,
+    coem_belief_batch_ref,
+    gabp_message_batch_ref,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_array(seed, shape, lo=0.0, hi=1.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- BP ------
+
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(1, 4),
+    block_b=st.sampled_from([8, 32, 128]),
+    k=st.integers(2, 9),
+    seed=st.integers(0, 2**31),
+)
+def test_bp_matches_ref(blocks, block_b, k, seed):
+    b = blocks * block_b
+    cavity = rng_array(seed, (b, k), 0.01, 1.0)
+    psi = rng_array(seed + 1, (k, k), 0.05, 1.0)
+    old = rng_array(seed + 2, (b, k), 0.01, 1.0)
+    msg, res = bp_message_batch(cavity, psi, old, block_b=block_b)
+    msg_ref, res_ref = bp_message_batch_ref(cavity, psi, old)
+    np.testing.assert_allclose(msg, msg_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(res, res_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_bp_messages_are_normalized():
+    cavity = rng_array(0, (256, 5), 0.01, 1.0)
+    psi = rng_array(1, (5, 5), 0.05, 1.0)
+    old = rng_array(2, (256, 5), 0.01, 1.0)
+    msg, _ = bp_message_batch(cavity, psi, old)
+    np.testing.assert_allclose(jnp.sum(msg, axis=1), np.ones(256), rtol=1e-5)
+
+
+def test_bp_zero_residual_at_fixed_point():
+    cavity = rng_array(3, (128, 4), 0.01, 1.0)
+    psi = rng_array(4, (4, 4), 0.05, 1.0)
+    msg, _ = bp_message_batch(cavity, psi, jnp.zeros((128, 4)))
+    _, res = bp_message_batch(cavity, psi, msg)
+    np.testing.assert_allclose(res, np.zeros(128), atol=1e-6)
+
+
+def test_bp_rejects_ragged_batch():
+    with pytest.raises(AssertionError):
+        bp_message_batch(
+            jnp.ones((100, 4)), jnp.ones((4, 4)), jnp.ones((100, 4)), block_b=128
+        )
+
+
+# -------------------------------------------------------------- GaBP ------
+
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(1, 3),
+    block_b=st.sampled_from([64, 512]),
+    seed=st.integers(0, 2**31),
+)
+def test_gabp_matches_ref(blocks, block_b, seed):
+    b = blocks * block_b
+    p_cav = rng_array(seed, (b,), 0.5, 5.0)
+    h_cav = rng_array(seed + 1, (b,), -3.0, 3.0)
+    a = rng_array(seed + 2, (b,), -1.0, 1.0)
+    p_out, h_out = gabp_message_batch(p_cav, h_cav, a, block_b=block_b)
+    p_ref, h_ref = gabp_message_batch_ref(p_cav, h_cav, a)
+    np.testing.assert_allclose(p_out, p_ref, rtol=1e-6)
+    np.testing.assert_allclose(h_out, h_ref, rtol=1e-6)
+
+
+def test_gabp_message_signs():
+    # outbound precision is always negative for nonzero coupling & positive cavity
+    p_cav = jnp.full((512,), 2.0)
+    h_cav = jnp.full((512,), 1.0)
+    a = jnp.full((512,), 0.5)
+    p_out, h_out = gabp_message_batch(p_cav, h_cav, a)
+    assert np.all(np.asarray(p_out) < 0)
+    np.testing.assert_allclose(p_out, np.full(512, -0.125), rtol=1e-6)
+    np.testing.assert_allclose(h_out, np.full(512, -0.25), rtol=1e-6)
+
+
+# -------------------------------------------------------------- CoEM ------
+
+
+@settings(**SETTINGS)
+@given(
+    block_b=st.sampled_from([8, 128]),
+    d=st.integers(1, 16),
+    k=st.integers(2, 6),
+    seed=st.integers(0, 2**31),
+)
+def test_coem_matches_ref(block_b, d, k, seed):
+    b = block_b
+    nb = rng_array(seed, (b, d, k), 0.0, 1.0)
+    w = rng_array(seed + 1, (b, d), 0.0, 3.0)
+    out = coem_belief_batch(nb, w, block_b=block_b)
+    out_ref = coem_belief_batch_ref(nb, w)
+    np.testing.assert_allclose(out, out_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_coem_padding_is_neutral():
+    # appending zero-weight neighbors must not change the result
+    nb = rng_array(7, (128, 4, 3), 0.0, 1.0)
+    w = rng_array(8, (128, 4), 0.1, 2.0)
+    out = coem_belief_batch(nb, w)
+    nb_pad = jnp.concatenate([nb, rng_array(9, (128, 4, 3))], axis=1)
+    w_pad = jnp.concatenate([w, jnp.zeros((128, 4))], axis=1)
+    out_pad = coem_belief_batch(nb_pad, w_pad)
+    np.testing.assert_allclose(out, out_pad, rtol=1e-5, atol=1e-6)
+
+
+def test_coem_normalized_inputs_stay_normalized():
+    nb = rng_array(10, (128, 6, 4), 0.01, 1.0)
+    nb = nb / jnp.sum(nb, axis=2, keepdims=True)
+    w = rng_array(11, (128, 6), 0.1, 1.0)
+    out = coem_belief_batch(nb, w)
+    np.testing.assert_allclose(jnp.sum(out, axis=1), np.ones(128), rtol=1e-5)

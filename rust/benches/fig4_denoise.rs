@@ -1,0 +1,207 @@
+//! **Figure 4 — Retinal Scan Denoising** (paper §4.1).
+//!
+//! (a) Speedup of parameter learning under the priority, approx-priority and
+//!     Splash schedules (paper: Splash wins, ~15x on 16 procs). Measured by
+//!     capturing a sequential task trace per scheduler and replaying it on
+//!     the multicore simulator (DESIGN.md §Testbed-substitutions).
+//! (b) Total runtime vs the background gradient-step interval.
+//! (c) Average % deviation of the learned parameters vs the interval.
+//!
+//! Output: tables on stdout + results/fig4{a,bc}.tsv.
+
+use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
+use graphlab::apps::learn::{learning_sync, target_stats, TARGET_KEY};
+use graphlab::apps::mrf::GridDims;
+use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::datagen::retina;
+use graphlab::engine::sequential::SeqOptions;
+use graphlab::engine::{EngineConfig, SequentialEngine, ThreadedEngine, UpdateFn};
+use graphlab::metrics::{Figure, Series};
+use graphlab::scheduler::{
+    ApproxPriorityScheduler, PriorityScheduler, Scheduler, SplashScheduler, Task,
+};
+use graphlab::sdt::Sdt;
+use graphlab::sim::{self, SimConfig};
+use graphlab::util::{Pcg32, Timer};
+use std::path::Path;
+use std::sync::Arc;
+
+const PROCS: &[usize] = &[1, 2, 4, 8, 16];
+const MAX_UPDATES: u64 = 600_000;
+
+fn make_workload() -> (retina::RetinaVolume, [f64; 3]) {
+    let mut rng = Pcg32::seed_from_u64(42);
+    let dims = GridDims::new(20, 20, 10);
+    let vol = retina::generate(dims, 5, 0.25, &mut rng);
+    let proxy = retina::smoothed_proxy(&vol, 1);
+    let targets = target_stats(dims, &proxy);
+    (vol, targets)
+}
+
+/// Capture a sequential learning trace under the given scheduler.
+fn capture(
+    vol: &retina::RetinaVolume,
+    targets: [f64; 3],
+    scheduler: &dyn Scheduler,
+    initial: &[Task],
+) -> (graphlab::engine::trace::TaskTrace, usize) {
+    let mut mrf = retina::build_mrf(vol, 0.8);
+    let n = mrf.graph.num_vertices();
+    let sdt = Sdt::new();
+    sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+    sdt.set(TARGET_KEY, targets);
+    let mut upd = BpUpdate::new(5, 5e-4, Arc::new(Vec::new()));
+    upd.learn_stats = true;
+    upd.damping = 0.1;
+    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
+    let sync = learning_sync(0.25, None);
+    for t in initial {
+        scheduler.add_task(*t);
+    }
+    let (_, trace) = SequentialEngine::run(
+        &mut mrf.graph,
+        scheduler,
+        &fns,
+        &sdt,
+        &[sync],
+        &[],
+        &EngineConfig::sequential(ConsistencyModel::Edge).with_max_updates(MAX_UPDATES),
+        &SeqOptions { capture_trace: true, sync_every: 2_000, virtual_workers: 1 },
+    );
+    (trace, n)
+}
+
+fn fig4a(vol: &retina::RetinaVolume, targets: [f64; 3]) -> Figure {
+    let mrf = {
+        let m = retina::build_mrf(vol, 0.8);
+        m
+    };
+    let n = mrf.graph.num_vertices();
+    let initial: Vec<Task> = (0..n as u32).map(|v| Task::with_priority(v, 1.0)).collect();
+
+    let mut fig = Figure::new("fig4a", "param-learning speedup by scheduler", "procs", "speedup");
+    // (scheduler name, strict/serialized dispatch?, per-pop overhead ns)
+    let schedulers: Vec<(&str, bool, f64)> =
+        vec![("priority", true, 250.0), ("approx-priority", false, 150.0), ("splash", false, 90.0)];
+    for (name, serialized, overhead) in schedulers {
+        let timer = Timer::start();
+        let (trace, _) = match name {
+            "priority" => capture(vol, targets, &PriorityScheduler::new(n), &initial),
+            "approx-priority" => {
+                capture(vol, targets, &ApproxPriorityScheduler::new(n, 16), &initial)
+            }
+            "splash" => capture(
+                vol,
+                targets,
+                &SplashScheduler::new(n, |v| mrf.graph.neighbors(v), 48, 16),
+                &initial,
+            ),
+            _ => unreachable!(),
+        };
+        let cfg = SimConfig {
+            model: ConsistencyModel::Edge,
+            sched_overhead_ns: overhead,
+            sched_serialized: serialized,
+            ..Default::default()
+        };
+        let results = sim::sweep_processors(&trace, &initial, n, &mrf.graph, &cfg, PROCS);
+        let curve = sim::speedups(&results);
+        println!(
+            "  {name}: {} updates traced in {:.1}s, speedup@16 = {:.2}",
+            trace.len(),
+            timer.elapsed_secs(),
+            curve.last().unwrap().1
+        );
+        fig.add(Series::from_points(
+            name,
+            curve.iter().map(|&(p, s)| (p as f64, s)),
+        ));
+    }
+    fig
+}
+
+/// Fig 4b/c: real threaded runs sweeping the background sync interval.
+fn fig4bc(vol: &retina::RetinaVolume, targets: [f64; 3]) -> (Figure, Figure) {
+    // Reference lambda* from a tight-interval run.
+    let reference = run_learning(vol, targets, 1);
+    let mut fig_b = Figure::new("fig4b", "runtime vs gradient-step interval", "interval_ms", "seconds");
+    let mut fig_c =
+        Figure::new("fig4c", "param deviation vs gradient-step interval", "interval_ms", "percent");
+    let mut runtime = Series::new("runtime");
+    let mut deviation = Series::new("deviation");
+    for interval_ms in [1u64, 2, 5, 10, 25, 50] {
+        let timer = Timer::start();
+        let lambda = run_learning(vol, targets, interval_ms);
+        let secs = timer.elapsed_secs();
+        let dev = (0..3)
+            .map(|a| ((lambda[a] - reference[a]) / reference[a].max(1e-9)).abs())
+            .sum::<f64>()
+            / 3.0
+            * 100.0;
+        println!(
+            "  interval {interval_ms:>3} ms: {secs:.2}s, lambda [{:.3} {:.3} {:.3}], deviation {dev:.2}%",
+            lambda[0], lambda[1], lambda[2]
+        );
+        runtime.push(interval_ms as f64, secs);
+        deviation.push(interval_ms as f64, dev);
+    }
+    fig_b.add(runtime);
+    fig_c.add(deviation);
+    (fig_b, fig_c)
+}
+
+fn run_learning(vol: &retina::RetinaVolume, targets: [f64; 3], interval_ms: u64) -> [f64; 3] {
+    let mrf = retina::build_mrf(vol, 0.8);
+    let n = mrf.graph.num_vertices();
+    let sdt = Sdt::new();
+    sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+    sdt.set(TARGET_KEY, targets);
+    let locks = LockTable::new(n);
+    let sched = SplashScheduler::new(n, |v| mrf.graph.neighbors(v), 48, 2);
+    for v in 0..n as u32 {
+        sched.add_task(Task::with_priority(v, 1.0));
+    }
+    let mut upd = BpUpdate::new(5, 5e-4, Arc::new(Vec::new()));
+    upd.learn_stats = true;
+    upd.damping = 0.1;
+    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
+    let sync = learning_sync(0.25, Some(std::time::Duration::from_millis(interval_ms)));
+    ThreadedEngine::run(
+        &mrf.graph,
+        &locks,
+        &sched,
+        &fns,
+        &sdt,
+        &[sync],
+        &[],
+        &EngineConfig::default()
+            .with_workers(2)
+            .with_model(ConsistencyModel::Edge)
+            .with_max_updates(MAX_UPDATES),
+    );
+    sdt.get::<[f64; 3]>(LAMBDA_KEY).unwrap()
+}
+
+fn main() {
+    println!("=== Fig 4: retinal-scan denoising / parameter learning ===");
+    let (vol, targets) = make_workload();
+    println!(
+        "workload: {}x{}x{} grid, noisy error rate {:.3}",
+        vol.dims.nx,
+        vol.dims.ny,
+        vol.dims.nz,
+        retina::error_rate(&vol.clean, &vol.noisy)
+    );
+
+    let fig_a = fig4a(&vol, targets);
+    print!("{}", fig_a.render());
+    let (fig_b, fig_c) = fig4bc(&vol, targets);
+    print!("{}", fig_b.render());
+    print!("{}", fig_c.render());
+
+    let out = Path::new("results");
+    for f in [&fig_a, &fig_b, &fig_c] {
+        let p = f.write_tsv(out).expect("write tsv");
+        println!("wrote {}", p.display());
+    }
+}

@@ -1,0 +1,247 @@
+//! **Figure 5 — MRF Inference on the protein-interaction network** (§4.2).
+//!
+//! (a) Gibbs speedup: planned set schedule vs round-robin vs unplanned
+//!     (barrier) set schedule — paper: plan ~10x/16, barrier suffers.
+//! (b) Vertex distribution over colors (strongly skewed — the cause of the
+//!     sequential component).
+//! (c) Samples/sec/processor vs processors (plan vs no plan).
+//! (d) Loopy BP speedup: Splash vs priority (paper: splash ~15x/16).
+//! (e) Engine efficiency vs processors.
+//!
+//! Output: tables on stdout + results/fig5{a,b,c,d,e}.tsv.
+
+use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
+use graphlab::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
+use graphlab::apps::gibbs::{chromatic_sets, GibbsUpdate, GibbsVertex};
+use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::datagen::protein;
+use graphlab::engine::sequential::SeqOptions;
+use graphlab::engine::{EngineConfig, SequentialEngine, ThreadedEngine, UpdateFn};
+use graphlab::metrics::{Figure, Series};
+use graphlab::scheduler::set_scheduler::ExecutionPlan;
+use graphlab::scheduler::{
+    FifoScheduler, PriorityScheduler, RoundRobinScheduler, Scheduler, SplashScheduler, Task,
+};
+use graphlab::sdt::Sdt;
+use graphlab::sim::{self, SimConfig, SimResult};
+use graphlab::util::Pcg32;
+use std::path::Path;
+use std::sync::Arc;
+
+const PROCS: &[usize] = &[1, 2, 4, 8, 16];
+const N: usize = 2800; // scaled protein network (paper: 14K)
+const M: usize = 20000; // undirected edges (paper: ~100K)
+const SWEEPS: usize = 6;
+
+fn main() {
+    println!("=== Fig 5: protein-network MRF inference ===");
+    let mut rng = Pcg32::seed_from_u64(5);
+    let net = protein::generate(N, M, 3, &mut rng);
+    let g = net.graph;
+    let n = g.num_vertices();
+    println!("MRF: {} vertices, {} directed edges", n, g.num_edges());
+
+    // ---- coloring phase (GraphLab program, threaded) --------------------
+    let locks = LockTable::new(n);
+    {
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let upd = ColoringUpdate;
+        let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
+        ThreadedEngine::run(&g, &locks, &sched, &fns, &sdt, &[], &[], &EngineConfig::default());
+    }
+    let mut g = g;
+    let ncolors = validate_coloring(&mut g).expect("coloring");
+    let classes = color_classes(&mut g);
+
+    // ---- Fig 5b: color histogram ----------------------------------------
+    let mut fig_b = Figure::new("fig5b", "vertex distribution over colors", "color", "vertices");
+    let mut hist = Series::new("vertices");
+    for (c, class) in classes.iter().enumerate() {
+        hist.push(c as f64, class.len() as f64);
+    }
+    fig_b.add(hist);
+    println!("coloring: {ncolors} colors; sizes skew from {} down to {}",
+        classes.iter().map(|c| c.len()).max().unwrap(),
+        classes.iter().filter(|c| !c.is_empty()).map(|c| c.len()).min().unwrap());
+    print!("{}", fig_b.render());
+
+    // ---- measure per-vertex Gibbs update costs (sequential, 1 sweep) ----
+    let upd = GibbsUpdate::new(3, Arc::new(net.tables.clone()), 1, 77);
+    let cost_of: Vec<f64> = {
+        let sched = RoundRobinScheduler::new(n, 1);
+        let fns: Vec<&dyn UpdateFn<GibbsVertex, _>> = vec![&upd];
+        let sdt = Sdt::new();
+        let (_, trace) = SequentialEngine::run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::sequential(ConsistencyModel::Edge),
+            &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
+        );
+        let mut cost = vec![300.0f64; n];
+        for e in &trace.events {
+            cost[e.vertex as usize] = e.cost_ns.max(60) as f64;
+        }
+        cost
+    };
+
+    // ---- Fig 5a/c: chromatic Gibbs, planned vs barrier vs round-robin ---
+    let sets = chromatic_sets(&classes, SWEEPS, 0);
+    let plan = ExecutionPlan::compile(&sets, n, |v| g.neighbors(v), ConsistencyModel::Edge);
+    println!(
+        "plan: {} tasks, {} dep edges, critical path {}",
+        plan.len(),
+        plan.num_edges,
+        plan.critical_path_len()
+    );
+    let base = SimConfig {
+        model: ConsistencyModel::Vertex, // chromatic schedule: vertex locking
+        sched_overhead_ns: 120.0,
+        sched_serialized: false,
+        ..Default::default()
+    };
+    let planned: Vec<SimResult> = PROCS
+        .iter()
+        .map(|&p| {
+            sim::simulate_plan(&plan, n, &g, &|i| cost_of[plan.tasks[i as usize].0 as usize], false, &base.clone().with_processors(p))
+        })
+        .collect();
+    let barrier: Vec<SimResult> = PROCS
+        .iter()
+        .map(|&p| {
+            sim::simulate_plan(&plan, n, &g, &|i| cost_of[plan.tasks[i as usize].0 as usize], true, &base.clone().with_processors(p))
+        })
+        .collect();
+    // round-robin trace: relies on edge consistency (paper Fig 5a)
+    let rr_trace = {
+        let sched = RoundRobinScheduler::new(n, SWEEPS);
+        let fns: Vec<&dyn UpdateFn<GibbsVertex, _>> = vec![&upd];
+        let sdt = Sdt::new();
+        let (_, trace) = SequentialEngine::run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::sequential(ConsistencyModel::Edge),
+            &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
+        );
+        trace
+    };
+    let initial: Vec<Task> = (0..n as u32).map(Task::new).collect();
+    let rr_cfg = SimConfig {
+        model: ConsistencyModel::Edge,
+        sched_overhead_ns: 100.0,
+        sched_serialized: false,
+        ..Default::default()
+    };
+    let rr: Vec<SimResult> = sim::sweep_processors(&rr_trace, &initial, n, &g, &rr_cfg, PROCS);
+
+    let mut fig_a = Figure::new("fig5a", "Gibbs speedup by schedule", "procs", "speedup");
+    for (label, results) in
+        [("planned-set", &planned), ("round-robin", &rr), ("barrier-set", &barrier)]
+    {
+        let curve = sim::speedups(results);
+        println!("  gibbs {label}: speedup@16 = {:.2}", curve.last().unwrap().1);
+        fig_a.add(Series::from_points(label, curve.iter().map(|&(p, s)| (p as f64, s))));
+    }
+    print!("{}", fig_a.render());
+
+    let mut fig_c =
+        Figure::new("fig5c", "samples/sec/processor", "procs", "samples_per_sec_per_proc");
+    for (label, results) in [("planned-set", &planned), ("barrier-set", &barrier)] {
+        fig_c.add(Series::from_points(
+            label,
+            results.iter().map(|r| (r.processors as f64, r.rate_per_proc())),
+        ));
+    }
+    print!("{}", fig_c.render());
+
+    // ---- Fig 5d: Loopy BP speedup, splash vs priority -------------------
+    let mut fig_d = Figure::new("fig5d", "Loopy BP speedup", "procs", "speedup");
+    let mut fig_e = Figure::new("fig5e", "engine efficiency", "procs", "efficiency");
+    let mut bp_eff: Vec<(String, Vec<SimResult>)> = Vec::new();
+    for (label, serialized, overhead) in
+        [("splash", false, 90.0f64), ("priority", true, 250.0)]
+    {
+        // fresh BP-typed MRF with the same structural profile per run
+        let mut rng2 = Pcg32::seed_from_u64(5);
+        let mut bp_mrf = graphlab::apps::mrf::random_mrf(N, M, 3, &mut rng2);
+        let bp_tables_run = Arc::new(bp_mrf.tables.clone());
+        let bp_graph = &mut bp_mrf.graph;
+        let nb = bp_graph.num_vertices();
+        let sdt = Sdt::new();
+        sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+        let bp = BpUpdate::new(3, 1e-3, bp_tables_run);
+        let fns: Vec<&dyn UpdateFn<_, _>> = vec![&bp];
+        let trace = {
+            let initial: Vec<Task> =
+                (0..nb as u32).map(|v| Task::with_priority(v, 1.0)).collect();
+            let mut run = |sched: &dyn Scheduler| {
+                for t in &initial {
+                    sched.add_task(*t);
+                }
+                SequentialEngine::run(
+                    bp_graph,
+                    sched,
+                    &fns,
+                    &sdt,
+                    &[],
+                    &[],
+                    &EngineConfig::sequential(ConsistencyModel::Edge)
+                        .with_max_updates(400_000),
+                    &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
+                )
+                .1
+            };
+            match label {
+                "splash" => {
+                    let adj: Vec<Vec<u32>> =
+                        (0..nb as u32).map(|v| g.neighbors(v).to_vec()).collect();
+                    run(&SplashScheduler::new(nb, |v| adj[v as usize].as_slice(), 48, 16))
+                }
+                _ => run(&PriorityScheduler::new(nb)),
+            }
+        };
+        let cfg = SimConfig {
+            model: ConsistencyModel::Edge,
+            sched_overhead_ns: overhead,
+            sched_serialized: serialized,
+            ..Default::default()
+        };
+        let initial: Vec<Task> = (0..nb as u32).map(|v| Task::with_priority(v, 1.0)).collect();
+        let results = sim::sweep_processors(&trace, &initial, nb, &g, &cfg, PROCS);
+        let curve = sim::speedups(&results);
+        println!("  bp {label}: {} updates, speedup@16 = {:.2}", trace.len(), curve.last().unwrap().1);
+        fig_d.add(Series::from_points(label, curve.iter().map(|&(p, s)| (p as f64, s))));
+        bp_eff.push((label.to_string(), results));
+    }
+    print!("{}", fig_d.render());
+
+    // ---- Fig 5e: efficiency -----------------------------------------------
+    fig_e.add(Series::from_points(
+        "gibbs-planned",
+        planned.iter().map(|r| (r.processors as f64, r.efficiency())),
+    ));
+    for (label, results) in &bp_eff {
+        fig_e.add(Series::from_points(
+            &format!("bp-{label}"),
+            results.iter().map(|r| (r.processors as f64, r.efficiency())),
+        ));
+    }
+    print!("{}", fig_e.render());
+
+    let out = Path::new("results");
+    for f in [&fig_a, &fig_b, &fig_c, &fig_d, &fig_e] {
+        let p = f.write_tsv(out).expect("write tsv");
+        println!("wrote {}", p.display());
+    }
+}

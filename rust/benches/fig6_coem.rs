@@ -1,0 +1,243 @@
+//! **Figure 6 + §4.3 — CoEM named-entity recognition** (paper §4.3).
+//!
+//! * dataset table (the §4.3 table, for the generated stand-ins);
+//! * (a, b) speedup of MultiQueue FIFO vs Partitioned on both datasets
+//!   (paper: similar, near-linear; large scales better);
+//! * (c) convergence (updates to reach a quality level) for dynamic
+//!   (MultiQueue FIFO) vs Round-robin scheduling;
+//! * (d) speedup at 16 cpus vs graph size (subsampled);
+//! * the Hadoop comparison (data persistence vs per-iteration copying).
+//!
+//! Output: tables on stdout + results/fig6{ab,c,d}.tsv.
+
+use graphlab::apps::coem::{belief_distance, CoemUpdate, CoemVertex};
+use graphlab::apps::coem::CoemEdge;
+use graphlab::baselines::mapreduce::{compare, MapReduceCosts};
+use graphlab::baselines::sequential::coem_jacobi;
+use graphlab::consistency::ConsistencyModel;
+use graphlab::datagen::ner::{self, NerConfig};
+use graphlab::engine::sequential::SeqOptions;
+use graphlab::engine::{EngineConfig, SequentialEngine, UpdateFn};
+use graphlab::graph::{induced_subgraph, DataGraph};
+use graphlab::metrics::{Figure, Series};
+use graphlab::scheduler::{MultiQueueFifo, PartitionedScheduler, RoundRobinScheduler, Scheduler, Task};
+use graphlab::sdt::Sdt;
+use graphlab::sim::{self, SimConfig};
+use graphlab::util::Pcg32;
+use std::path::Path;
+
+const PROCS: &[usize] = &[1, 2, 4, 8, 16];
+
+fn capture_trace(
+    graph: &mut DataGraph<CoemVertex, CoemEdge>,
+    classes: usize,
+    scheduler: &dyn Scheduler,
+) -> graphlab::engine::trace::TaskTrace {
+    let n = graph.num_vertices();
+    for v in 0..n as u32 {
+        scheduler.add_task(Task::new(v));
+    }
+    let sdt = Sdt::new();
+    let mut upd = CoemUpdate::new(classes);
+    upd.threshold = 1e-4; // bench-scale convergence
+    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
+    let (_, trace) = SequentialEngine::run(
+        graph,
+        scheduler,
+        &fns,
+        &sdt,
+        &[],
+        &[],
+        &EngineConfig::sequential(ConsistencyModel::Vertex).with_max_updates(350_000),
+        &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 16 },
+    );
+    trace
+}
+
+fn speedup_figure(
+    label_prefix: &str,
+    cfg: &NerConfig,
+    seed: u64,
+    fig: &mut Figure,
+) -> f64 {
+    let initial: Vec<Task> = {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let g = ner::generate(cfg, &mut rng);
+        (0..g.num_vertices() as u32).map(Task::new).collect()
+    };
+    let mut speedup16 = 0.0f64;
+    for (sched_name, overhead) in [("multiqueue", 130.0f64), ("partitioned", 90.0)] {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let mut g = ner::generate(cfg, &mut rng);
+        let n = g.num_vertices();
+        let trace = match sched_name {
+            "multiqueue" => capture_trace(&mut g, cfg.classes, &MultiQueueFifo::new(n, 16)),
+            _ => capture_trace(&mut g, cfg.classes, &PartitionedScheduler::new(n, 16)),
+        };
+        let sim_cfg = SimConfig {
+            model: ConsistencyModel::Vertex,
+            sched_overhead_ns: overhead,
+            sched_serialized: false,
+            // multiqueue shares 2P queue heads; partitioned queues are
+            // worker-private (paper §3.4's locality argument)
+            contention_factor: if sched_name == "multiqueue" { 0.09 } else { 0.06 },
+            ..Default::default()
+        };
+        let results = sim::sweep_processors(&trace, &initial, n, &g, &sim_cfg, PROCS);
+        let curve = sim::speedups(&results);
+        println!(
+            "  {label_prefix}/{sched_name}: {} updates, speedup@16 = {:.2}",
+            trace.len(),
+            curve.last().unwrap().1
+        );
+        speedup16 = speedup16.max(curve.last().unwrap().1);
+        fig.add(Series::from_points(
+            &format!("{label_prefix}-{sched_name}"),
+            curve.iter().map(|&(p, s)| (p as f64, s)),
+        ));
+    }
+    speedup16
+}
+
+fn main() {
+    println!("=== Fig 6 / §4.3: CoEM ===");
+    let small = NerConfig::small(0.06);
+    let large = NerConfig::large(0.018);
+
+    // §4.3 dataset table
+    println!("{:<7} {:>8} {:>9} {:>10} {:>8}", "name", "classes", "verts", "edges", "seeds%");
+    for (name, cfg) in [("small", &small), ("large", &large)] {
+        println!(
+            "{:<7} {:>8} {:>9} {:>10} {:>8.1}",
+            name,
+            cfg.classes,
+            cfg.num_np + cfg.num_ct,
+            cfg.num_edges,
+            cfg.seed_fraction * 100.0
+        );
+    }
+
+    // ---- Fig 6a/b --------------------------------------------------------
+    let mut fig_ab =
+        Figure::new("fig6ab", "CoEM speedup by scheduler and dataset", "procs", "speedup");
+    speedup_figure("small", &small, 61, &mut fig_ab);
+    speedup_figure("large", &large, 62, &mut fig_ab);
+    print!("{}", fig_ab.render());
+
+    // ---- Fig 6c: updates-to-quality, dynamic vs round-robin --------------
+    let mut fig_c = Figure::new(
+        "fig6c",
+        "updates to reach quality (L1 distance to fixed point)",
+        "updates_per_vertex",
+        "l1_distance",
+    );
+    {
+        // well-mixed instance so both stopping rules actually converge
+        let mut cfg_c = small.clone();
+        cfg_c.seed_fraction = 0.25;
+        let mk = || {
+            let mut rng = Pcg32::seed_from_u64(63);
+            ner::generate(&cfg_c, &mut rng)
+        };
+        // empirical fixed point from a long synchronous run
+        let mut gstar = mk();
+        let reference = coem_jacobi(&mut gstar, small.classes, 400, 0.5);
+        let n = gstar.num_vertices();
+
+        let mut dyn_series = Series::new("multiqueue-dynamic");
+        let mut rr_series = Series::new("round-robin");
+        for budget_per_vertex in [1usize, 2, 4, 8, 16] {
+            let budget = (budget_per_vertex * n) as u64;
+            // dynamic
+            let mut g = mk();
+            let sched = MultiQueueFifo::new(n, 16);
+            for v in 0..n as u32 {
+                sched.add_task(Task::new(v));
+            }
+            let sdt = Sdt::new();
+            let mut upd = CoemUpdate::new(small.classes);
+            upd.threshold = 1e-3; // only meaningful moves reschedule
+            let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
+            SequentialEngine::run(
+                &mut g,
+                &sched,
+                &fns,
+                &sdt,
+                &[],
+                &[],
+                &EngineConfig::sequential(ConsistencyModel::Vertex).with_max_updates(budget),
+                &SeqOptions { virtual_workers: 16, ..Default::default() },
+            );
+            dyn_series.push(budget_per_vertex as f64, belief_distance(&mut g, &reference));
+            // round-robin
+            let mut g = mk();
+            let sched = RoundRobinScheduler::new(n, budget_per_vertex);
+            let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
+            SequentialEngine::run(
+                &mut g,
+                &sched,
+                &fns,
+                &sdt,
+                &[],
+                &[],
+                &EngineConfig::sequential(ConsistencyModel::Vertex).with_max_updates(budget),
+                &SeqOptions::default(),
+            );
+            rr_series.push(budget_per_vertex as f64, belief_distance(&mut g, &reference));
+        }
+        fig_c.add(dyn_series);
+        fig_c.add(rr_series);
+    }
+    print!("{}", fig_c.render());
+
+    // ---- Fig 6d: speedup@16 vs graph size --------------------------------
+    let mut fig_d = Figure::new("fig6d", "speedup at 16 cpus vs graph size", "fraction", "speedup16");
+    {
+        let mut series = Series::new("multiqueue");
+        for fraction in [0.33f64, 0.66, 1.0] {
+            let mut rng = Pcg32::seed_from_u64(64);
+            let mut full = ner::generate(&large, &mut rng);
+            let (mut sub, _) = induced_subgraph(&mut full, fraction, &mut rng);
+            let n = sub.num_vertices();
+            let trace = capture_trace(&mut sub, large.classes, &MultiQueueFifo::new(n, 16));
+            let initial: Vec<Task> = (0..n as u32).map(Task::new).collect();
+            let sim_cfg = SimConfig {
+                model: ConsistencyModel::Vertex,
+                sched_overhead_ns: 130.0,
+                contention_factor: 0.09,
+                ..Default::default()
+            };
+            let results =
+                sim::sweep_processors(&trace, &initial, n, &sub, &sim_cfg, &[1, 16]);
+            let s16 = results[0].makespan_ns / results[1].makespan_ns;
+            println!("  fraction {fraction}: n={n}, speedup@16 = {s16:.2}");
+            series.push(fraction, s16);
+        }
+        fig_d.add(series);
+    }
+    print!("{}", fig_d.render());
+
+    // ---- Hadoop comparison (§4.3 text) ------------------------------------
+    {
+        let mut rng = Pcg32::seed_from_u64(65);
+        let mut g = ner::generate(&small, &mut rng);
+        let cmp = compare(&mut g, small.classes, 3, &MapReduceCosts::default());
+        println!(
+            "Hadoop-model comparison (3 sweeps, this graph): GraphLab compute {:.3}s; \
+             MapReduce charges {:.1}s data-motion per iteration ({:.0}s total on 95 nodes).",
+            cmp.graphlab_s, cmp.per_iteration_io_s, cmp.mapreduce_s
+        );
+        println!(
+            "  -> per-iteration data motion dominates compute by {:.0}x at this scale; the paper \
+             measured 15x wall-clock (30 min on 16 cores vs 7.5 h on ~95) — same mechanism, \
+             data persistence vs per-iteration materialization."  ,
+            cmp.ratio() / cmp.iterations as f64
+        );
+    }
+
+    let out = Path::new("results");
+    for f in [&fig_ab, &fig_c, &fig_d] {
+        let p = f.write_tsv(out).expect("write tsv");
+        println!("wrote {}", p.display());
+    }
+}

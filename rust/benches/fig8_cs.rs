@@ -1,0 +1,102 @@
+//! **Figure 8 — Compressed sensing** (paper §4.5).
+//!
+//! (a) Speedup of the interior-point algorithm: the sequential Newton outer
+//!     loop drives GaBP inner solves; the inner solves are the parallel
+//!     part (paper: ~8x at 16 cpus with round-robin scheduling). Measured
+//!     by capturing the GaBP trace of each Newton iteration and replaying
+//!     all of them on P simulated processors (the outer loop stays serial —
+//!     exactly the paper's Amdahl structure).
+//!
+//! (b/c) The image outputs are produced by `examples/compressed_sensing.rs`.
+//!
+//! Output: table on stdout + results/fig8a.tsv.
+
+use graphlab::apps::cs::{sparse_measurements, CsProblem, CsSolver};
+use graphlab::apps::gabp::{GabpUpdate, GabpVertex};
+use graphlab::apps::wavelet::{haar2d, sparsify};
+use graphlab::consistency::ConsistencyModel;
+use graphlab::datagen::image;
+use graphlab::engine::sequential::SeqOptions;
+use graphlab::engine::{EngineConfig, SequentialEngine, UpdateFn};
+use graphlab::metrics::{Figure, Series};
+use graphlab::scheduler::{RoundRobinScheduler, Task};
+use graphlab::sdt::Sdt;
+use graphlab::sim::{self, SimConfig};
+use graphlab::util::Pcg32;
+use std::path::Path;
+
+const PROCS: &[usize] = &[1, 2, 4, 8, 16];
+const OUTER: usize = 10;
+
+fn main() {
+    println!("=== Fig 8: compressed sensing interior point ===");
+    let size = 32usize;
+    let n = size * size;
+    let mut rng = Pcg32::seed_from_u64(12);
+    let original = image::generate(size, &mut rng);
+    let mut coeffs = original;
+    haar2d(&mut coeffs, size);
+    sparsify(&mut coeffs, n / 12);
+    let w_true: Vec<f64> = coeffs.iter().map(|&c| c as f64).collect();
+    let m = (0.55 * n as f64) as usize;
+    let rows = sparse_measurements(n, m, 6, &mut rng);
+    let clean = CsProblem { n, rows: rows.clone(), y: vec![], lambda: 0.0, rho: 0.0, eps: 1.0 };
+    let y = clean.forward(&w_true);
+    let problem = CsProblem { n, rows, y, lambda: 0.02, rho: 1e-4, eps: 1e-6 };
+    println!("{n} coefficients, {m} measurements");
+
+    let mut solver = CsSolver::new(problem);
+    let upd = GabpUpdate::new(1e-9);
+    // accumulated makespans per processor count across Newton iterations
+    let mut totals = vec![0.0f64; PROCS.len()];
+    let mut serial_ns = 0.0f64; // outer-loop work, charged at 1x
+    for outer in 0..OUTER {
+        let t_outer = graphlab::util::Timer::start();
+        solver.prepare_newton();
+        serial_ns += t_outer.elapsed_ns() as f64;
+        let sched = RoundRobinScheduler::new(n, 40);
+        let fns: Vec<&dyn UpdateFn<GabpVertex, _>> = vec![&upd];
+        let sdt = Sdt::new();
+        let (_, trace) = SequentialEngine::run(
+            &mut solver.graph,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::sequential(ConsistencyModel::Edge),
+            &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
+        );
+        let initial: Vec<Task> = (0..n as u32).map(Task::new).collect();
+        let cfg = SimConfig {
+            model: ConsistencyModel::Edge,
+            sched_overhead_ns: 100.0,
+            sched_serialized: false,
+            ..Default::default()
+        };
+        let results = sim::sweep_processors(&trace, &initial, n, &solver.graph, &cfg, PROCS);
+        for (t, r) in totals.iter_mut().zip(&results) {
+            *t += r.makespan_ns;
+        }
+        let t_outer = graphlab::util::Timer::start();
+        let alpha = solver.apply_direction();
+        let gap = solver.problem.duality_gap(&solver.w);
+        serial_ns += t_outer.elapsed_ns() as f64;
+        if outer % 3 == 0 {
+            println!("  newton iter {outer}: {} gabp updates, step {alpha:.3}, gap {gap:.3e}", trace.len());
+        }
+    }
+
+    let mut fig = Figure::new("fig8a", "interior point speedup", "procs", "speedup");
+    let base = totals[0] + serial_ns;
+    let mut series = Series::new("round-robin-gabp");
+    for (i, &p) in PROCS.iter().enumerate() {
+        let s = base / (totals[i] + serial_ns);
+        println!("  P={p}: speedup {s:.2}");
+        series.push(p as f64, s);
+    }
+    fig.add(series);
+    print!("{}", fig.render());
+    let p = fig.write_tsv(Path::new("results")).expect("write tsv");
+    println!("wrote {}", p.display());
+}

@@ -1,0 +1,210 @@
+//! Micro-benchmarks of the framework hot paths — the §Perf baseline
+//! (EXPERIMENTS.md). Measures, per layer-3 component:
+//!
+//! * scheduler add/pop throughput per scheduler type;
+//! * scope lock acquisition per consistency model and degree;
+//! * end-to-end engine overhead per trivial update (1..4 workers);
+//! * PJRT batched-kernel dispatch latency (if artifacts are built).
+//!
+//! Output: bench table on stdout + results/micro.tsv.
+
+use graphlab::consistency::{ConsistencyModel, LockTable, Scope};
+use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateContext, UpdateFn};
+use graphlab::graph::{DataGraph, GraphBuilder};
+use graphlab::scheduler::{
+    by_name, FifoScheduler, MultiQueueFifo, PriorityScheduler, Scheduler, Task,
+};
+use graphlab::sdt::Sdt;
+use graphlab::util::timer::{bench, bench_header, fmt_secs, BenchResult};
+use graphlab::util::Timer;
+use std::io::Write as _;
+
+fn ring(n: usize, degree: usize) -> DataGraph<u64, ()> {
+    let mut b = GraphBuilder::new();
+    for _ in 0..n {
+        b.add_vertex(0u64);
+    }
+    for i in 0..n {
+        for d in 1..=degree / 2 {
+            b.add_undirected(i as u32, ((i + d) % n) as u32, (), ());
+        }
+    }
+    b.build()
+}
+
+fn main() {
+    let mut rows: Vec<BenchResult> = Vec::new();
+    println!("{}", bench_header());
+    let mut push = |r: BenchResult| {
+        println!("{}", r.row());
+        rows.push(r);
+    };
+
+    // ---- scheduler ops ----------------------------------------------------
+    let n = 100_000;
+    for name in ["fifo", "multiqueue", "partitioned", "priority", "approx-priority"] {
+        let sched = by_name(name, n, 4).unwrap();
+        let r = bench(&format!("sched/{name}/add+pop x10k"), 3, 30, || {
+            for v in 0..10_000u32 {
+                sched.add_task(Task::with_priority(v, (v % 97) as f64));
+            }
+            // cycle worker ids: worker-affine schedulers (partitioned) only
+            // serve their own partition
+            let mut popped = 0;
+            let mut idle = 0;
+            let mut w = 0usize;
+            while idle < 4 {
+                if sched.next_task(w).is_some() {
+                    popped += 1;
+                    idle = 0;
+                } else {
+                    idle += 1;
+                    w = (w + 1) % 4;
+                }
+            }
+            assert_eq!(popped, 10_000);
+        });
+        push(r);
+    }
+
+    // ---- scope locking ------------------------------------------------------
+    for degree in [4usize, 16] {
+        let g = ring(4096, degree);
+        let locks = LockTable::new(4096);
+        for model in
+            [ConsistencyModel::Vertex, ConsistencyModel::Edge, ConsistencyModel::Full]
+        {
+            let r = bench(
+                &format!("scope/{}/deg{degree} x4096", model.name()),
+                3,
+                30,
+                || {
+                    for v in 0..4096u32 {
+                        let s = Scope::lock(&g, &locks, v, model);
+                        std::hint::black_box(s.center());
+                    }
+                },
+            );
+            push(r);
+        }
+    }
+
+    // ---- engine per-update overhead ----------------------------------------
+    struct Noop;
+    impl UpdateFn<u64, ()> for Noop {
+        fn update(&self, scope: &mut Scope<'_, u64, ()>, _ctx: &mut UpdateContext<'_>) {
+            *scope.vertex_mut() += 1;
+        }
+    }
+    for workers in [1usize, 2, 4] {
+        let g = ring(65_536, 4);
+        let locks = LockTable::new(65_536);
+        let sdt = Sdt::new();
+        let noop = Noop;
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&noop];
+        let sched = MultiQueueFifo::new(65_536, workers);
+        let timer = Timer::start();
+        for v in 0..65_536u32 {
+            sched.add_task(Task::new(v));
+        }
+        let report = ThreadedEngine::run(
+            &g,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default().with_workers(workers).with_model(ConsistencyModel::Edge),
+        );
+        let per_task = timer.elapsed_secs() / report.updates as f64;
+        println!(
+            "{:<44} {:>12} (engine trivial-update cost, {} workers)",
+            format!("engine/noop/{workers}w"),
+            fmt_secs(per_task),
+            workers
+        );
+    }
+
+    // throughput with a single queue for contrast
+    {
+        let g = ring(65_536, 4);
+        let locks = LockTable::new(65_536);
+        let sdt = Sdt::new();
+        let noop = Noop;
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&noop];
+        let sched = FifoScheduler::new(65_536);
+        for v in 0..65_536u32 {
+            sched.add_task(Task::new(v));
+        }
+        let timer = Timer::start();
+        let report = ThreadedEngine::run(
+            &g,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default().with_workers(2).with_model(ConsistencyModel::Edge),
+        );
+        println!(
+            "{:<44} {:>12} (strict single-queue, 2 workers)",
+            "engine/noop/fifo-2w",
+            fmt_secs(timer.elapsed_secs() / report.updates as f64)
+        );
+        // priority scheduler contrast
+        let sched = PriorityScheduler::new(65_536);
+        for v in 0..65_536u32 {
+            sched.add_task(Task::with_priority(v, (v % 13) as f64));
+        }
+        let timer = Timer::start();
+        let report = ThreadedEngine::run(
+            &g,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default().with_workers(2).with_model(ConsistencyModel::Edge),
+        );
+        println!(
+            "{:<44} {:>12} (strict priority heap, 2 workers)",
+            "engine/noop/priority-2w",
+            fmt_secs(timer.elapsed_secs() / report.updates as f64)
+        );
+    }
+
+    // ---- PJRT dispatch ------------------------------------------------------
+    let dir = graphlab::runtime::default_artifact_dir();
+    if dir.join("manifest.tsv").exists() {
+        let mut reg = graphlab::runtime::ArtifactRegistry::open(&dir).unwrap();
+        for name in ["bp_batch_b256_k5", "bp_batch_b1024_k5", "gabp_batch_b4096"] {
+            let exe = reg.load(name).unwrap();
+            let inputs: Vec<Vec<f32>> =
+                exe.meta.inputs.iter().map(|s| vec![0.5f32; s.elements()]).collect();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let r = bench(&format!("pjrt/{name}"), 3, 50, || {
+                exe.run_f32(&refs).unwrap();
+            });
+            push(r);
+        }
+    } else {
+        println!("(skipping PJRT rows: run `make artifacts`)");
+    }
+
+    // TSV dump
+    std::fs::create_dir_all("results").unwrap();
+    let mut f = std::fs::File::create("results/micro.tsv").unwrap();
+    writeln!(f, "benchmark\tmean_s\tstddev_s\tp50_s\tp95_s").unwrap();
+    for r in &rows {
+        writeln!(
+            f,
+            "{}\t{}\t{}\t{}\t{}",
+            r.name, r.summary.mean, r.summary.stddev, r.summary.p50, r.summary.p95
+        )
+        .unwrap();
+    }
+    println!("wrote results/micro.tsv");
+}

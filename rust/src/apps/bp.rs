@@ -1,0 +1,371 @@
+//! Loopy Belief Propagation update function (paper Alg. 2) — the running
+//! example of the GraphLab abstraction.
+//!
+//! The update at vertex `v` recomputes the local belief from the inbound
+//! messages, then for every out-edge `(v -> t)` computes the new message
+//! from the cavity distribution (belief with `t`'s contribution divided
+//! out), writes it to the edge, and — residual scheduling — re-schedules `t`
+//! with the message's L1 change as priority when it exceeds the termination
+//! bound. Under the **edge consistency** model this update is sequentially
+//! consistent (Prop. 3.1: it modifies only `v` and its adjacent edges).
+
+use super::mrf::{normalize, BpEdge, BpVertex, EdgePotential};
+use crate::engine::{UpdateContext, UpdateFn};
+use crate::consistency::Scope;
+use std::sync::Arc;
+
+/// SDT key for the learnable Laplace smoothing parameters ([f64; 3]).
+pub const LAMBDA_KEY: &str = "lambda";
+
+/// The BP update function (Alg. 2). One instance is shared by all workers.
+pub struct BpUpdate {
+    pub arity: usize,
+    /// Termination bound on the message residual (Alg. 2).
+    pub bound: f32,
+    /// Damping factor in [0, 1): new = (1-d)·computed + d·old.
+    pub damping: f32,
+    /// Shared K×K potential tables for `EdgePotential::Table` edges.
+    pub tables: Arc<Vec<Vec<f32>>>,
+    /// Cache per-axis smoothness statistics on the vertex for the
+    /// parameter-learning sync (§4.1, Alg. 3).
+    pub learn_stats: bool,
+}
+
+impl BpUpdate {
+    pub fn new(arity: usize, bound: f32, tables: Arc<Vec<Vec<f32>>>) -> BpUpdate {
+        BpUpdate { arity, bound, damping: 0.0, tables, learn_stats: false }
+    }
+
+    /// ψ(x_src = i, x_dst = j) for the given edge potential.
+    #[inline]
+    fn psi(&self, pot: EdgePotential, lambda: &[f64; 3], i: usize, j: usize) -> f32 {
+        match pot {
+            EdgePotential::Laplace { axis } => {
+                let d = (i as f64 - j as f64).abs();
+                (-lambda[axis as usize] * d).exp() as f32
+            }
+            EdgePotential::Table(t) => self.tables[t as usize][i * self.arity + j],
+        }
+    }
+}
+
+impl UpdateFn<BpVertex, BpEdge> for BpUpdate {
+    fn update(&self, scope: &mut Scope<'_, BpVertex, BpEdge>, ctx: &mut UpdateContext<'_>) {
+        let k = self.arity;
+        let lambda = ctx.sdt.get_or::<[f64; 3]>(LAMBDA_KEY, [1.0, 1.0, 1.0]);
+
+        // 1. Local belief b(x_v) ∝ φ_v(x) · Π_{u->v} m_{u->v}(x).
+        let mut belief = scope.vertex().potential.clone();
+        for &e in scope.in_edges() {
+            let msg = &scope.edge_data(e).message;
+            for (b, m) in belief.iter_mut().zip(msg) {
+                *b *= *m;
+            }
+        }
+        normalize(&mut belief);
+
+        // 2. Outbound messages from cavity distributions.
+        let mut new_msg = vec![0.0f32; k];
+        for &e in scope.out_edges() {
+            let t = scope.edge(e).dst;
+            // cavity: divide out t's inbound contribution m_{t->v}
+            let mut cavity = belief.clone();
+            if let Some(rev) = scope.reverse_edge(e) {
+                let m_in = &scope.edge_data(rev).message;
+                for (c, m) in cavity.iter_mut().zip(m_in) {
+                    *c = if *m > 1e-30 { *c / *m } else { 0.0 };
+                }
+            }
+            normalize(&mut cavity);
+
+            let edge = scope.edge_data(e);
+            let pot = edge.potential;
+            for (j, out) in new_msg.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (i, c) in cavity.iter().enumerate() {
+                    acc += self.psi(pot, &lambda, i, j) * c;
+                }
+                *out = acc;
+            }
+            normalize(&mut new_msg);
+
+            let edge = scope.edge_data_mut(e);
+            let mut residual = 0.0f32;
+            for (m_old, &m_new) in edge.message.iter_mut().zip(&new_msg) {
+                let blended = self.damping * *m_old + (1.0 - self.damping) * m_new;
+                residual += (blended - *m_old).abs();
+                *m_old = blended;
+            }
+
+            // Residual scheduling (Alg. 2): AddTask(t, residual).
+            if residual > self.bound {
+                ctx.add_task(t, residual as f64);
+            }
+        }
+
+        // 3. Learning statistics: E|x_v - x_u| per axis under the mean-field
+        // pairwise approximation b_v(i)·b_u(j) (cached for Alg. 3's fold).
+        if self.learn_stats {
+            let mut stats = [0.0f32; 3];
+            let mut counts = [0.0f32; 3];
+            for &e in scope.out_edges() {
+                let edge = scope.edge_data(e);
+                if let EdgePotential::Laplace { axis } = edge.potential {
+                    let u = scope.edge(e).dst;
+                    let nb = &scope.neighbor(u).belief;
+                    let mut exp_absdiff = 0.0f32;
+                    for (i, bi) in belief.iter().enumerate() {
+                        for (j, bj) in nb.iter().enumerate() {
+                            exp_absdiff += bi * bj * (i as f32 - j as f32).abs();
+                        }
+                    }
+                    stats[axis as usize] += exp_absdiff;
+                    counts[axis as usize] += 1.0;
+                }
+            }
+            let vd = scope.vertex_mut();
+            for a in 0..3 {
+                vd.axis_stats[a] = if counts[a] > 0.0 { stats[a] / counts[a] } else { 0.0 };
+            }
+        }
+
+        scope.vertex_mut().belief = belief;
+    }
+
+    fn name(&self) -> &'static str {
+        "bp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::mrf::{grid3d, random_mrf, GridDims, Mrf};
+    use crate::consistency::{ConsistencyModel, LockTable};
+    use crate::engine::{EngineConfig, SequentialEngine, ThreadedEngine};
+    use crate::engine::sequential::SeqOptions;
+    use crate::scheduler::{FifoScheduler, PriorityScheduler, Scheduler, Task};
+    use crate::sdt::Sdt;
+    use crate::util::Pcg32;
+
+    /// Exact marginals by brute-force enumeration (tiny models only). Each
+    /// undirected pair contributes its ψ once (messages live on both
+    /// directions but the model has one potential per pair).
+    fn enumerate_marginals(mrf: &mut Mrf, lambda: [f64; 3]) -> Vec<Vec<f32>> {
+        let n = mrf.graph.num_vertices();
+        let k = mrf.arity;
+        assert!(k.pow(n as u32) <= 1 << 20, "enumeration too large");
+        let upd = BpUpdate::new(k, 1e-3, Arc::new(mrf.tables.clone()));
+        // collect undirected pairs (src < dst)
+        let mut pairs = Vec::new();
+        for e in 0..mrf.graph.num_edges() as u32 {
+            let edge = mrf.graph.edge(e);
+            if edge.src < edge.dst {
+                pairs.push((edge.src, edge.dst, mrf.graph.edge_data(e).potential));
+            }
+        }
+        let pots: Vec<Vec<f32>> =
+            (0..n as u32).map(|v| mrf.graph.vertex_data(v).potential.clone()).collect();
+        let mut marg = vec![vec![0.0f32; k]; n];
+        let total_assignments = k.pow(n as u32);
+        for code in 0..total_assignments {
+            let mut x = vec![0usize; n];
+            let mut c = code;
+            for xi in x.iter_mut() {
+                *xi = c % k;
+                c /= k;
+            }
+            let mut p = 1.0f64;
+            for (v, &xv) in x.iter().enumerate() {
+                p *= pots[v][xv] as f64;
+            }
+            for &(u, v, pot) in &pairs {
+                p *= upd.psi(pot, &lambda, x[u as usize], x[v as usize]) as f64;
+            }
+            for (v, &xv) in x.iter().enumerate() {
+                marg[v][xv] += p as f32;
+            }
+        }
+        for m in marg.iter_mut() {
+            normalize(m);
+        }
+        marg
+    }
+
+    fn run_bp_sequential(mrf: &mut Mrf, lambda: [f64; 3], bound: f32) -> u64 {
+        let n = mrf.graph.num_vertices();
+        let sdt = Sdt::new();
+        sdt.set(LAMBDA_KEY, lambda);
+        let sched = PriorityScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::with_priority(v, 1.0));
+        }
+        let upd = BpUpdate::new(mrf.arity, bound, Arc::new(mrf.tables.clone()));
+        let fns: Vec<&dyn crate::engine::UpdateFn<_, _>> = vec![&upd];
+        let (report, _) = SequentialEngine::run(
+            &mut mrf.graph,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::sequential(ConsistencyModel::Edge).with_max_updates(200_000),
+            &SeqOptions::default(),
+        );
+        report.updates
+    }
+
+    #[test]
+    fn bp_exact_on_tree() {
+        // 4-vertex chain with table potentials: BP on a tree is exact.
+        let mut rng = Pcg32::seed_from_u64(11);
+        let k = 3;
+        let mut b = crate::graph::GraphBuilder::new();
+        for _ in 0..4 {
+            let pot: Vec<f32> = (0..k).map(|_| 0.3 + rng.next_f32()).collect();
+            b.add_vertex(BpVertex::with_potential(pot));
+        }
+        // Pairwise tables must be symmetric: both directed edges of a pair
+        // share one table (undirected model semantics).
+        let mut tables = Vec::new();
+        for _ in 0..3 {
+            let mut tab = vec![0.0f32; k * k];
+            for i in 0..k {
+                for j in i..k {
+                    let v = 0.2 + rng.next_f32();
+                    tab[i * k + j] = v;
+                    tab[j * k + i] = v;
+                }
+            }
+            tables.push(tab);
+        }
+        for (i, t) in [(0u32, 0u32), (1, 1), (2, 2)].iter().enumerate() {
+            let _ = t;
+            b.add_undirected(
+                i as u32,
+                i as u32 + 1,
+                BpEdge::uniform(k, EdgePotential::Table(i as u32)),
+                BpEdge::uniform(k, EdgePotential::Table(i as u32)),
+            );
+        }
+        let mut mrf = Mrf { graph: b.build(), tables, arity: k };
+        let exact = enumerate_marginals(&mut mrf, [1.0; 3]);
+        run_bp_sequential(&mut mrf, [1.0; 3], 1e-7);
+        for v in 0..4u32 {
+            let got = &mrf.graph.vertex_data(v).belief;
+            for (g, e) in got.iter().zip(&exact[v as usize]) {
+                assert!((g - e).abs() < 1e-4, "vertex {v}: {got:?} vs {:?}", exact[v as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn bp_close_on_small_loopy_graph() {
+        // 2x2x1 grid (a 4-cycle): loopy BP approximates but should be close
+        // for weak couplings.
+        let mut rng = Pcg32::seed_from_u64(3);
+        let dims = GridDims::new(2, 2, 1);
+        let mut mrf = grid3d(dims, 3, |_| (0..3).map(|_| 0.5 + rng.next_f32()).collect());
+        let lambda = [0.3, 0.3, 0.3];
+        let exact = enumerate_marginals(&mut mrf, lambda);
+        run_bp_sequential(&mut mrf, lambda, 1e-7);
+        for v in 0..4u32 {
+            let got = &mrf.graph.vertex_data(v).belief;
+            for (g, e) in got.iter().zip(&exact[v as usize]) {
+                assert!((g - e).abs() < 0.05, "vertex {v}: {got:?} vs {:?}", exact[v as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn residual_scheduling_converges() {
+        let mut rng = Pcg32::seed_from_u64(7);
+        let mut mrf = random_mrf(60, 120, 3, &mut rng);
+        let updates = run_bp_sequential(&mut mrf, [1.0; 3], 1e-4);
+        assert!(updates > 60, "must iterate beyond the seed sweep");
+        assert!(updates < 200_000, "must converge before the update cap");
+        // beliefs are normalized distributions
+        for v in 0..60u32 {
+            let b = &mrf.graph.vertex_data(v).belief;
+            let sum: f32 = b.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+            assert!(b.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn threaded_bp_matches_sequential_beliefs() {
+        let mk = || {
+            let mut rng = Pcg32::seed_from_u64(42);
+            random_mrf(80, 160, 3, &mut rng)
+        };
+        let mut seq = mk();
+        run_bp_sequential(&mut seq, [1.0; 3], 1e-6);
+
+        let mut par = mk();
+        let n = par.graph.num_vertices();
+        let sdt = Sdt::new();
+        sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let upd = BpUpdate::new(par.arity, 1e-6, Arc::new(par.tables.clone()));
+        let fns: Vec<&dyn crate::engine::UpdateFn<_, _>> = vec![&upd];
+        let locks = LockTable::new(n);
+        let report = ThreadedEngine::run(
+            &par.graph,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default().with_workers(4).with_model(ConsistencyModel::Edge).with_max_updates(500_000),
+        );
+        assert!(report.updates > 0);
+        // Both executions converge to the same fixed point.
+        for v in 0..n as u32 {
+            let a = &seq.graph.vertex_data(v).belief.clone();
+            let b = &par.graph.vertex_data(v).belief;
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x - y).abs() < 5e-3, "vertex {v}: seq={a:?} par={b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn learn_stats_cached_on_vertices() {
+        let dims = GridDims::new(3, 3, 1);
+        let mut mrf = grid3d(dims, 3, |v| {
+            let mut p = vec![0.1; 3];
+            p[(v % 3) as usize] = 1.0;
+            p
+        });
+        let n = mrf.graph.num_vertices();
+        let sdt = Sdt::new();
+        sdt.set(LAMBDA_KEY, [0.5f64; 3]);
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let mut upd = BpUpdate::new(3, 1e-3, Arc::new(Vec::new()));
+        upd.learn_stats = true;
+        let fns: Vec<&dyn crate::engine::UpdateFn<_, _>> = vec![&upd];
+        let (_, _) = SequentialEngine::run(
+            &mut mrf.graph,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::sequential(ConsistencyModel::Edge).with_max_updates(10_000),
+            &SeqOptions::default(),
+        );
+        // interior vertices must have x- and y-axis stats populated
+        let center = dims.index(1, 1, 0);
+        let stats = mrf.graph.vertex_data(center).axis_stats;
+        assert!(stats[0] > 0.0 && stats[1] > 0.0);
+        assert_eq!(stats[2], 0.0, "flat volume has no z edges");
+    }
+}

@@ -1,0 +1,212 @@
+//! **CoEM** — semi-supervised named-entity recognition (paper §4.3, Fig. 6).
+//!
+//! The graph is bipartite: noun phrases (NP) and contexts (CT) are vertices,
+//! edges carry co-occurrence counts. Each vertex holds a belief over entity
+//! classes; the update recomputes the belief as the weighted average of the
+//! adjacent vertices' beliefs and re-schedules the neighbors when the belief
+//! moved more than a threshold (paper: 1e-5). Seed vertices are pinned.
+//!
+//! The update "is relatively fast, requiring only a few floating point
+//! operations" — it stresses scheduler overhead, which is why the paper runs
+//! it with the relaxed MultiQueue FIFO / Partitioned schedulers, and uses
+//! vertex consistency (racy neighbor reads are benign for this fixed-point
+//! iteration).
+
+use crate::consistency::Scope;
+use crate::engine::{UpdateContext, UpdateFn};
+use crate::util::stats::l1_distance;
+
+/// Vertex: NP or CT entity with a class-probability estimate.
+#[derive(Debug, Clone)]
+pub struct CoemVertex {
+    /// Belief over entity classes (length = #classes, sums to 1).
+    pub belief: Vec<f32>,
+    /// Seed vertices keep their label fixed (the supervised anchors).
+    pub seed: bool,
+    /// True for noun phrases, false for contexts.
+    pub is_np: bool,
+}
+
+impl CoemVertex {
+    pub fn unlabeled(classes: usize, is_np: bool) -> CoemVertex {
+        CoemVertex { belief: vec![1.0 / classes as f32; classes], seed: false, is_np }
+    }
+
+    pub fn seeded(classes: usize, label: usize, is_np: bool) -> CoemVertex {
+        let mut belief = vec![0.0; classes];
+        belief[label] = 1.0;
+        CoemVertex { belief, seed: true, is_np }
+    }
+}
+
+/// Edge: NP–CT co-occurrence count.
+#[derive(Debug, Clone, Copy)]
+pub struct CoemEdge {
+    pub weight: f32,
+}
+
+/// The CoEM update function.
+pub struct CoemUpdate {
+    pub classes: usize,
+    /// Reschedule neighbors when the belief moves more than this (1e-5).
+    pub threshold: f32,
+}
+
+impl CoemUpdate {
+    pub fn new(classes: usize) -> CoemUpdate {
+        CoemUpdate { classes, threshold: 1e-5 }
+    }
+}
+
+impl UpdateFn<CoemVertex, CoemEdge> for CoemUpdate {
+    fn update(&self, scope: &mut Scope<'_, CoemVertex, CoemEdge>, ctx: &mut UpdateContext<'_>) {
+        if scope.vertex().seed {
+            return; // labels of seed vertices are fixed
+        }
+        let mut new_belief = vec![0.0f32; self.classes];
+        let mut total_w = 0.0f32;
+        for &e in scope.out_edges() {
+            let u = scope.edge(e).dst;
+            let w = scope.edge_data(e).weight;
+            let nb = &scope.neighbor(u).belief;
+            for (nbf, b) in new_belief.iter_mut().zip(nb) {
+                *nbf += w * *b;
+            }
+            total_w += w;
+        }
+        if total_w <= 0.0 {
+            return;
+        }
+        for b in new_belief.iter_mut() {
+            *b /= total_w;
+        }
+        let moved = l1_distance(&new_belief, &scope.vertex().belief);
+        // In-place write (not a Vec replacement): under the vertex model
+        // neighbors read this buffer concurrently — the paper's contract
+        // tolerates *value* races, but the storage must stay stable.
+        scope.vertex_mut().belief.copy_from_slice(&new_belief);
+        if moved > self.threshold {
+            for &u in scope.neighbors() {
+                ctx.add_task(u, moved as f64);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "coem"
+    }
+}
+
+/// L1 distance of all beliefs to a reference fixed point — the Fig 6c
+/// quality metric ("L1 parameter distance to an empirical estimate of the
+/// fixed point x*").
+pub fn belief_distance(
+    graph: &mut crate::graph::DataGraph<CoemVertex, CoemEdge>,
+    reference: &[Vec<f32>],
+) -> f64 {
+    let mut total = 0.0f64;
+    for v in 0..graph.num_vertices() as u32 {
+        total += l1_distance(&graph.vertex_data(v).belief, &reference[v as usize]) as f64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consistency::{ConsistencyModel, LockTable};
+    use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+    use crate::graph::{DataGraph, GraphBuilder};
+    use crate::scheduler::{MultiQueueFifo, Scheduler, Task};
+    use crate::sdt::Sdt;
+
+    /// Tiny bipartite instance: NP {0: seed class 0, 1}, CT {2, 3}.
+    fn tiny() -> DataGraph<CoemVertex, CoemEdge> {
+        let mut b = GraphBuilder::new();
+        b.add_vertex(CoemVertex::seeded(2, 0, true)); // 0: seed NP
+        b.add_vertex(CoemVertex::unlabeled(2, true)); // 1: NP
+        b.add_vertex(CoemVertex::unlabeled(2, false)); // 2: CT
+        b.add_vertex(CoemVertex::unlabeled(2, false)); // 3: CT
+        let w = |w: f32| CoemEdge { weight: w };
+        b.add_undirected(0, 2, w(3.0), w(3.0));
+        b.add_undirected(1, 2, w(1.0), w(1.0));
+        b.add_undirected(1, 3, w(1.0), w(1.0));
+        b.add_undirected(0, 3, w(2.0), w(2.0));
+        b.build()
+    }
+
+    fn run(g: &DataGraph<CoemVertex, CoemEdge>, workers: usize) -> u64 {
+        let n = g.num_vertices();
+        let locks = LockTable::new(n);
+        let sched = MultiQueueFifo::new(n, workers);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let upd = CoemUpdate::new(2);
+        let fns: Vec<&dyn UpdateFn<CoemVertex, CoemEdge>> = vec![&upd];
+        let report = ThreadedEngine::run(
+            g,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default()
+                .with_workers(workers)
+                .with_model(ConsistencyModel::Vertex)
+                .with_max_updates(1_000_000),
+        );
+        report.updates
+    }
+
+    #[test]
+    fn seed_propagates_labels() {
+        let g = tiny();
+        let updates = run(&g, 2);
+        assert!(updates >= 4);
+        let mut g = g;
+        // everything should converge to class 0 (the only seed)
+        for v in 1..4u32 {
+            let b = &g.vertex_data(v).belief;
+            assert!(b[0] > 0.99, "vertex {v}: {b:?}");
+        }
+        // seed itself untouched
+        assert_eq!(g.vertex_data(0).belief[0], 1.0);
+    }
+
+    #[test]
+    fn converges_and_terminates() {
+        let g = tiny();
+        let updates = run(&g, 1);
+        assert!(updates < 1_000_000, "must converge, used {updates}");
+    }
+
+    #[test]
+    fn competing_seeds_split_mass() {
+        let mut b = GraphBuilder::new();
+        b.add_vertex(CoemVertex::seeded(2, 0, true)); // class 0 seed
+        b.add_vertex(CoemVertex::seeded(2, 1, true)); // class 1 seed
+        b.add_vertex(CoemVertex::unlabeled(2, false)); // CT between them
+        let w = |x: f32| CoemEdge { weight: x };
+        b.add_undirected(0, 2, w(1.0), w(1.0));
+        b.add_undirected(1, 2, w(3.0), w(3.0));
+        let g = b.build();
+        run(&g, 2);
+        let mut g = g;
+        let belief = g.vertex_data(2).belief.clone();
+        // class 1 has 3x the evidence
+        assert!((belief[1] - 0.75).abs() < 1e-4, "{belief:?}");
+    }
+
+    #[test]
+    fn belief_distance_zero_at_fixed_point() {
+        let g = tiny();
+        run(&g, 1);
+        let mut g = g;
+        let reference: Vec<Vec<f32>> =
+            (0..4u32).map(|v| g.vertex_data(v).belief.clone()).collect();
+        assert_eq!(belief_distance(&mut g, &reference), 0.0);
+    }
+}

@@ -1,0 +1,329 @@
+//! The **Shooting algorithm** for the Lasso (paper §4.4, Alg. 4; Fu 1998):
+//! coordinate descent on `L(w) = Σ_j (wᵀx_j − y_j)² + λ‖w‖₁`.
+//!
+//! GraphLab formulation: a bipartite graph with a vertex per weight `w_i`
+//! and per observation `y_j`, and an edge `(w_i, y_j)` with weight `X_{j,i}`
+//! wherever the design matrix is non-zero. The update function runs on
+//! weight vertices only and performs one exact coordinate minimization;
+//! when the weight moves it revises the residuals on the adjacent
+//! observation vertices (a *neighbor write* — sequentially consistent only
+//! under the **full consistency** model, Prop. 3.1 cond. 1) and schedules
+//! the two-hop weight vertices.
+//!
+//! The paper's experiment: full consistency gives an automatically
+//! parallelized *sequentially consistent* shooting algorithm; relaxing to
+//! **vertex consistency** is no longer provably safe yet "still converges,
+//! obtaining solutions with only 0.5% higher loss" — Fig 7 measures both.
+
+use crate::consistency::Scope;
+use crate::engine::{UpdateContext, UpdateFn};
+use crate::graph::{DataGraph, GraphBuilder, VertexId};
+use crate::util::linalg::soft_threshold;
+
+/// Bipartite vertex: a weight coordinate or an observation.
+#[derive(Debug, Clone)]
+pub enum LassoVertex {
+    Weight {
+        /// Current value w_i.
+        w: f32,
+        /// Cached a_i = Σ_j X_{j,i}² (constant).
+        a: f32,
+    },
+    Obs {
+        /// Target y_j.
+        y: f32,
+        /// Current residual r_j = y_j − x_jᵀ w.
+        residual: f32,
+    },
+}
+
+impl LassoVertex {
+    pub fn weight(&self) -> f32 {
+        match self {
+            LassoVertex::Weight { w, .. } => *w,
+            _ => panic!("not a weight vertex"),
+        }
+    }
+    pub fn residual(&self) -> f32 {
+        match self {
+            LassoVertex::Obs { residual, .. } => *residual,
+            _ => panic!("not an observation vertex"),
+        }
+    }
+}
+
+/// Edge: the design-matrix entry X_{j,i} between weight i and observation j.
+#[derive(Debug, Clone, Copy)]
+pub struct LassoEdge {
+    pub x: f32,
+}
+
+/// A Lasso problem instance as a GraphLab graph. Weight vertices come first
+/// (ids `0..d`), observation vertices after (ids `d..d+n`).
+pub struct LassoProblem {
+    pub graph: DataGraph<LassoVertex, LassoEdge>,
+    pub num_weights: usize,
+    pub num_obs: usize,
+}
+
+impl LassoProblem {
+    /// Build from a sparse design matrix: `rows[j]` lists `(i, X_{j,i})` for
+    /// observation j with target `y[j]`.
+    pub fn from_sparse(d: usize, rows: &[Vec<(u32, f32)>], y: &[f32]) -> LassoProblem {
+        assert_eq!(rows.len(), y.len());
+        let n = rows.len();
+        let mut a = vec![0.0f32; d];
+        for row in rows {
+            for &(i, x) in row {
+                a[i as usize] += x * x;
+            }
+        }
+        let mut b: GraphBuilder<LassoVertex, LassoEdge> = GraphBuilder::with_capacity(d + n, 0);
+        for &ai in a.iter().take(d) {
+            b.add_vertex(LassoVertex::Weight { w: 0.0, a: ai });
+        }
+        for &yj in y {
+            b.add_vertex(LassoVertex::Obs { y: yj, residual: yj });
+        }
+        for (j, row) in rows.iter().enumerate() {
+            let obs = (d + j) as VertexId;
+            for &(i, x) in row {
+                assert!((i as usize) < d);
+                b.add_undirected(i, obs, LassoEdge { x }, LassoEdge { x });
+            }
+        }
+        LassoProblem { graph: b.build(), num_weights: d, num_obs: n }
+    }
+
+    /// Current objective `Σ r_j² + λ‖w‖₁` (exclusive access).
+    pub fn loss(&mut self, lambda: f32) -> f64 {
+        let mut loss = 0.0f64;
+        for v in 0..self.graph.num_vertices() as u32 {
+            match self.graph.vertex_data(v) {
+                LassoVertex::Weight { w, .. } => loss += lambda as f64 * w.abs() as f64,
+                LassoVertex::Obs { residual, .. } => {
+                    loss += (*residual as f64) * (*residual as f64)
+                }
+            }
+        }
+        loss
+    }
+
+    /// Extract the weight vector.
+    pub fn weights(&mut self) -> Vec<f32> {
+        (0..self.num_weights as u32).map(|v| self.graph.vertex_data(v).weight()).collect()
+    }
+}
+
+/// The shooting update (Alg. 4). Runs on weight vertices; no-op on
+/// observation vertices (guarded, so sweep schedulers over all vertices are
+/// also safe).
+pub struct ShootingUpdate {
+    pub lambda: f32,
+    /// Movement threshold ε below which the update is considered converged.
+    pub epsilon: f32,
+}
+
+impl ShootingUpdate {
+    pub fn new(lambda: f32) -> ShootingUpdate {
+        ShootingUpdate { lambda, epsilon: 1e-5 }
+    }
+}
+
+impl UpdateFn<LassoVertex, LassoEdge> for ShootingUpdate {
+    fn update(&self, scope: &mut Scope<'_, LassoVertex, LassoEdge>, ctx: &mut UpdateContext<'_>) {
+        let (w_old, a) = match scope.vertex() {
+            LassoVertex::Weight { w, a } => (*w, *a),
+            LassoVertex::Obs { .. } => return,
+        };
+        if a <= 0.0 {
+            return; // unused feature
+        }
+        // ρ = Σ_j X_{j,i} (r_j + X_{j,i} w_i): correlation with the partial
+        // residual that excludes w_i's own contribution.
+        let mut rho = 0.0f32;
+        for &e in scope.out_edges() {
+            let obs = scope.edge(e).dst;
+            let x = scope.edge_data(e).x;
+            rho += x * (scope.neighbor(obs).residual() + x * w_old);
+        }
+        // minimize r² term + λ|w_i|: w = soft(ρ, λ/2) / a
+        let w_new = soft_threshold(rho as f64, self.lambda as f64 / 2.0) as f32 / a;
+        let delta = w_new - w_old;
+        if delta.abs() <= self.epsilon {
+            return;
+        }
+        match scope.vertex_mut() {
+            LassoVertex::Weight { w, .. } => *w = w_new,
+            _ => unreachable!(),
+        }
+        // Revise residuals on adjacent observations (neighbor writes: needs
+        // full consistency for sequential consistency) and schedule the
+        // two-hop weights (Alg. 4).
+        for &e in scope.out_edges().to_vec().iter() {
+            let obs = scope.edge(e).dst;
+            let x = scope.edge_data(e).x;
+            match scope.neighbor_mut(obs) {
+                LassoVertex::Obs { residual, .. } => *residual -= x * delta,
+                _ => unreachable!("weight connected to weight"),
+            }
+            for &w2 in scope.neighbors_of(obs) {
+                if w2 != scope.center() {
+                    ctx.add_task(w2, delta.abs() as f64);
+                }
+            }
+        }
+        // keep refining this coordinate while it moves
+        ctx.add_task(scope.center(), delta.abs() as f64);
+    }
+
+    fn name(&self) -> &'static str {
+        "shooting"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consistency::{ConsistencyModel, LockTable};
+    use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+    use crate::scheduler::{FifoScheduler, Scheduler, Task};
+    use crate::sdt::Sdt;
+    use crate::util::linalg::{matvec, solve_dense};
+    use crate::util::Pcg32;
+
+    fn run_shooting(p: &LassoProblem, lambda: f32, model: ConsistencyModel, workers: usize) -> u64 {
+        let n = p.graph.num_vertices();
+        let locks = LockTable::new(n);
+        let sched = FifoScheduler::new(n);
+        for v in 0..p.num_weights as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let upd = ShootingUpdate::new(lambda);
+        let fns: Vec<&dyn UpdateFn<LassoVertex, LassoEdge>> = vec![&upd];
+        let report = ThreadedEngine::run(
+            &p.graph,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default()
+                .with_workers(workers)
+                .with_model(model)
+                .with_max_updates(2_000_000),
+        );
+        report.updates
+    }
+
+    /// Random (n x d) dense problem as sparse rows.
+    fn random_problem(n: usize, d: usize, seed: u64) -> (LassoProblem, Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let mut rows = Vec::new();
+        let mut dense_rows = Vec::new();
+        let mut y = Vec::new();
+        let w_true: Vec<f64> = (0..d).map(|i| if i % 3 == 0 { 1.5 } else { 0.0 }).collect();
+        for _ in 0..n {
+            let xs: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+            let target: f64 = xs.iter().zip(&w_true).map(|(x, w)| x * w).sum::<f64>()
+                + 0.01 * rng.next_gaussian();
+            rows.push(xs.iter().enumerate().map(|(i, &x)| (i as u32, x as f32)).collect());
+            dense_rows.push(xs);
+            y.push(target);
+        }
+        let prob =
+            LassoProblem::from_sparse(d, &rows, &y.iter().map(|&v| v as f32).collect::<Vec<_>>());
+        (prob, dense_rows, y)
+    }
+
+    #[test]
+    fn lambda_zero_recovers_least_squares() {
+        let (prob, rows, y) = random_problem(24, 6, 3);
+        let mut prob = prob;
+        run_shooting(&prob, 0.0, ConsistencyModel::Full, 2);
+        // normal equations: (XᵀX) w = Xᵀ y
+        let d = 6;
+        let mut xtx = vec![0.0f64; d * d];
+        let mut xty = vec![0.0f64; d];
+        for (row, &target) in rows.iter().zip(&y) {
+            for i in 0..d {
+                xty[i] += row[i] * target;
+                for j in 0..d {
+                    xtx[i * d + j] += row[i] * row[j];
+                }
+            }
+        }
+        let w_ls = solve_dense(&xtx, &xty);
+        let w_got = prob.weights();
+        for (g, e) in w_got.iter().zip(&w_ls) {
+            assert!((*g as f64 - e).abs() < 1e-3, "{w_got:?} vs {w_ls:?}");
+        }
+    }
+
+    #[test]
+    fn huge_lambda_zeroes_everything() {
+        let (prob, _, _) = random_problem(20, 5, 7);
+        let mut prob = prob;
+        run_shooting(&prob, 1e6, ConsistencyModel::Full, 1);
+        for w in prob.weights() {
+            assert_eq!(w, 0.0);
+        }
+        // residuals must equal y (w = 0)
+        for j in 0..prob.num_obs as u32 {
+            let v = prob.num_weights as u32 + j;
+            match prob.graph.vertex_data(v) {
+                LassoVertex::Obs { y, residual } => assert!((*y - *residual).abs() < 1e-5),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_increases_with_lambda() {
+        let (mut p1, _, _) = random_problem(40, 12, 11);
+        run_shooting(&p1, 0.5, ConsistencyModel::Full, 2);
+        let nz_small = p1.weights().iter().filter(|w| w.abs() > 1e-6).count();
+        let (mut p2, _, _) = random_problem(40, 12, 11);
+        run_shooting(&p2, 50.0, ConsistencyModel::Full, 2);
+        let nz_large = p2.weights().iter().filter(|w| w.abs() > 1e-6).count();
+        assert!(nz_large <= nz_small, "{nz_large} > {nz_small}");
+    }
+
+    #[test]
+    fn vertex_consistency_converges_close_to_full() {
+        // the paper's §4.4 relaxation experiment: vertex consistency still
+        // converges, with loss within a fraction of a percent.
+        let (mut full, _, _) = random_problem(60, 16, 21);
+        run_shooting(&full, 2.0, ConsistencyModel::Full, 4);
+        let loss_full = full.loss(2.0);
+        let (mut vtx, _, _) = random_problem(60, 16, 21);
+        run_shooting(&vtx, 2.0, ConsistencyModel::Vertex, 4);
+        let loss_vtx = vtx.loss(2.0);
+        let rel = (loss_vtx - loss_full).abs() / loss_full.max(1e-12);
+        assert!(rel < 0.02, "relaxed loss {loss_vtx} vs full {loss_full} (rel {rel})");
+    }
+
+    #[test]
+    fn residual_invariant_holds_after_convergence() {
+        let (mut prob, rows, _) = random_problem(30, 8, 5);
+        run_shooting(&prob, 1.0, ConsistencyModel::Full, 2);
+        let w: Vec<f64> = prob.weights().iter().map(|&x| x as f64).collect();
+        for (j, row) in rows.iter().enumerate() {
+            let pred: f64 = row.iter().zip(&w).map(|(x, wi)| x * wi).sum();
+            let v = (prob.num_weights + j) as u32;
+            match prob.graph.vertex_data(v) {
+                LassoVertex::Obs { y, residual } => {
+                    let expect = *y as f64 - pred;
+                    assert!(
+                        (*residual as f64 - expect).abs() < 1e-3,
+                        "obs {j}: stored {residual}, expected {expect}"
+                    );
+                }
+                _ => unreachable!(),
+            }
+        }
+        let _ = matvec; // referenced to keep oracle helpers in scope
+    }
+}

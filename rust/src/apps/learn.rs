@@ -1,0 +1,180 @@
+//! **MRF parameter learning** for 3-D retinal-scan denoising (paper §4.1,
+//! Alg. 3, Fig. 4) — the complete ML "pipeline": composite statistics via
+//! sync, simultaneous gradient learning of the three axis-aligned Laplace
+//! smoothing parameters λ = (λx, λy, λz), and Loopy BP inference.
+//!
+//! The gradient is the exponential-family moment match: for each axis `a`,
+//! the sufficient statistic is the expected absolute level difference
+//! `E|x_v − x_u|` along that axis. Before learning, a sync pass over the
+//! *proxy ground truth* (axis-aligned smoothed observations — the paper's
+//! "axis-aligned averages as a proxy for ground-truth smoothed images")
+//! fixes target statistics `T_a`; during learning, the background sync
+//! (Alg. 3) folds the model statistics `S_a` cached on the vertices by the
+//! BP update, and Apply takes the gradient step
+//! `λ_a ← λ_a + η (S_a − T_a)` (more smoothing while the model is rougher
+//! than the target), writing λ back to the SDT that the BP updates read —
+//! learning and inference run *concurrently*.
+
+use super::bp::LAMBDA_KEY;
+use super::mrf::BpVertex;
+use crate::sdt::{Sdt, SyncOp, SyncOpBuilder};
+use std::time::Duration;
+
+/// SDT key for the per-axis target statistics ([f64; 3]).
+pub const TARGET_KEY: &str = "lambda_target_stats";
+/// SDT key tracking the number of gradient steps taken (u64).
+pub const STEPS_KEY: &str = "lambda_steps";
+
+/// Accumulator for per-axis statistics: (sum, count) per axis.
+type AxisAcc = ([f64; 3], [f64; 3]);
+
+/// The Alg. 3 sync operation: Fold accumulates the per-vertex cached axis
+/// statistics, Apply performs one projected-gradient step on λ.
+///
+/// `interval` — background period ("time between gradient steps", the Fig 4b/c
+/// x-axis); `None` = on-demand.
+pub fn learning_sync(
+    learning_rate: f64,
+    interval: Option<Duration>,
+) -> SyncOp<BpVertex> {
+    let builder = SyncOpBuilder::<BpVertex, AxisAcc>::new("lambda_sync", ([0.0; 3], [0.0; 3]));
+    let builder = match interval {
+        Some(iv) => builder.every(iv),
+        None => builder,
+    };
+    builder.build_with_merge(
+        |(mut s, mut c), v| {
+            for a in 0..3 {
+                if v.axis_stats[a] > 0.0 {
+                    s[a] += v.axis_stats[a] as f64;
+                    c[a] += 1.0;
+                }
+            }
+            (s, c)
+        },
+        |(mut s1, mut c1), (s2, c2)| {
+            for a in 0..3 {
+                s1[a] += s2[a];
+                c1[a] += c2[a];
+            }
+            (s1, c1)
+        },
+        move |(s, c), sdt: &Sdt| {
+            let target = sdt.get_or::<[f64; 3]>(TARGET_KEY, [0.0; 3]);
+            let mut lambda = sdt.get_or::<[f64; 3]>(LAMBDA_KEY, [1.0; 3]);
+            for a in 0..3 {
+                if c[a] > 0.0 {
+                    let model_stat = s[a] / c[a];
+                    // more smoothing while the model is rougher than target
+                    lambda[a] = (lambda[a] + learning_rate * (model_stat - target[a]))
+                        .clamp(0.01, 20.0);
+                }
+            }
+            sdt.set(LAMBDA_KEY, lambda);
+            sdt.update::<u64>(STEPS_KEY, |n| n.unwrap_or(0) + 1);
+        },
+    )
+}
+
+/// Compute the target statistics from the proxy ground truth: the mean
+/// absolute level difference of axis-smoothed observations along each axis.
+/// `observed(v)` = noisy level of voxel v, `smoothed` = window-averaged
+/// volume (see [`crate::datagen::retina`]).
+pub fn target_stats(
+    dims: super::mrf::GridDims,
+    smoothed: &[f32],
+) -> [f64; 3] {
+    let mut sums = [0.0f64; 3];
+    let mut counts = [0.0f64; 3];
+    for z in 0..dims.nz {
+        for y in 0..dims.ny {
+            for x in 0..dims.nx {
+                let v = dims.index(x, y, z) as usize;
+                if x + 1 < dims.nx {
+                    sums[0] += (smoothed[v] - smoothed[dims.index(x + 1, y, z) as usize]).abs()
+                        as f64;
+                    counts[0] += 1.0;
+                }
+                if y + 1 < dims.ny {
+                    sums[1] += (smoothed[v] - smoothed[dims.index(x, y + 1, z) as usize]).abs()
+                        as f64;
+                    counts[1] += 1.0;
+                }
+                if z + 1 < dims.nz {
+                    sums[2] += (smoothed[v] - smoothed[dims.index(x, y, z + 1) as usize]).abs()
+                        as f64;
+                    counts[2] += 1.0;
+                }
+            }
+        }
+    }
+    [
+        if counts[0] > 0.0 { sums[0] / counts[0] } else { 0.0 },
+        if counts[1] > 0.0 { sums[1] / counts[1] } else { 0.0 },
+        if counts[2] > 0.0 { sums[2] / counts[2] } else { 0.0 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::mrf::GridDims;
+    use crate::engine::SequentialEngine;
+    use crate::graph::GraphBuilder;
+
+    fn vertex_with_stats(stats: [f32; 3]) -> BpVertex {
+        let mut v = BpVertex::uniform(3);
+        v.axis_stats = stats;
+        v
+    }
+
+    #[test]
+    fn gradient_step_moves_lambda_toward_target() {
+        // Model stats (1.0) rougher than target (0.4): λ must increase.
+        let mut b = GraphBuilder::<BpVertex, ()>::new();
+        for _ in 0..4 {
+            b.add_vertex(vertex_with_stats([1.0, 1.0, 0.0]));
+        }
+        let mut g = b.build();
+        let sdt = Sdt::new();
+        sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+        sdt.set(TARGET_KEY, [0.4f64, 2.0, 0.0]);
+        let op = learning_sync(0.5, None);
+        SequentialEngine::run_sync(&mut g, &op, &sdt);
+        let lambda = sdt.get::<[f64; 3]>(LAMBDA_KEY).unwrap();
+        assert!(lambda[0] > 1.0, "x-axis rougher than target: {lambda:?}");
+        assert!(lambda[1] < 1.0, "y-axis smoother than target: {lambda:?}");
+        assert_eq!(lambda[2], 1.0, "no z stats: unchanged");
+        assert_eq!(sdt.get::<u64>(STEPS_KEY), Some(1));
+    }
+
+    #[test]
+    fn lambda_stays_in_bounds() {
+        let mut b = GraphBuilder::<BpVertex, ()>::new();
+        b.add_vertex(vertex_with_stats([100.0, 0.0, 0.0]));
+        let mut g = b.build();
+        let sdt = Sdt::new();
+        sdt.set(LAMBDA_KEY, [19.9f64; 3]);
+        sdt.set(TARGET_KEY, [0.0f64; 3]);
+        let op = learning_sync(10.0, None);
+        SequentialEngine::run_sync(&mut g, &op, &sdt);
+        let lambda = sdt.get::<[f64; 3]>(LAMBDA_KEY).unwrap();
+        assert!(lambda[0] <= 20.0);
+    }
+
+    #[test]
+    fn target_stats_measure_axis_roughness() {
+        // volume varying along x only
+        let dims = GridDims::new(4, 3, 2);
+        let vol: Vec<f32> = (0..dims.len())
+            .map(|v| {
+                let (x, _, _) = dims.coords(v as u32);
+                x as f32
+            })
+            .collect();
+        let t = target_stats(dims, &vol);
+        assert!((t[0] - 1.0).abs() < 1e-6);
+        assert_eq!(t[1], 0.0);
+        assert_eq!(t[2], 0.0);
+    }
+}

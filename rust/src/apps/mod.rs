@@ -1,0 +1,26 @@
+//! The paper's five case studies (§4), each written against the public
+//! GraphLab API (data graph + update functions + sync + schedulers):
+//!
+//! * [`mrf`] / [`bp`] — pairwise Markov Random Fields and Loopy Belief
+//!   Propagation (the running example; Alg. 2).
+//! * [`learn`] — MRF parameter learning for 3-D retinal-scan denoising with
+//!   simultaneous learning and inference (§4.1, Alg. 3, Fig. 4).
+//! * [`coloring`] / [`gibbs`] — greedy parallel graph coloring and the
+//!   chromatic (set-scheduled) parallel Gibbs sampler (§4.2, Fig. 5).
+//! * [`coem`] — CoEM semi-supervised NER (§4.3, Fig. 6).
+//! * [`lasso`] — the Shooting algorithm under full vs vertex consistency
+//!   (§4.4, Alg. 4, Fig. 7).
+//! * [`gabp`] — Gaussian Belief Propagation linear solver (Bickson 2008).
+//! * [`cs`] / [`wavelet`] — compressed sensing by an interior-point outer
+//!   loop with GaBP inner solves (§4.5, Alg. 5, Fig. 8).
+
+pub mod bp;
+pub mod coem;
+pub mod coloring;
+pub mod cs;
+pub mod gabp;
+pub mod gibbs;
+pub mod lasso;
+pub mod learn;
+pub mod mrf;
+pub mod wavelet;

@@ -1,0 +1,288 @@
+//! Pairwise Markov Random Fields over the data graph (paper §3, §4.1).
+//!
+//! Vertex data holds node potentials and the current belief; directed edge
+//! data holds the BP message `m_{u->v}` — exactly the paper's mapping of
+//! Loopy BP onto the GraphLab data model.
+
+use crate::graph::{DataGraph, GraphBuilder, VertexId};
+use crate::util::Pcg32;
+
+/// Per-vertex BP state: unnormalized node potential and current belief,
+/// plus the fields used by the parameter-learning pipeline (§4.1).
+#[derive(Debug, Clone)]
+pub struct BpVertex {
+    /// Node potential φ_v(x) (length K).
+    pub potential: Vec<f32>,
+    /// Current belief b_v(x) (length K, normalized).
+    pub belief: Vec<f32>,
+    /// Observed (noisy) level for denoising tasks; u32::MAX = unobserved.
+    pub observed: u32,
+    /// Per-axis local smoothness statistic E|x_v - x_u| cached by the BP
+    /// update for the learning sync (Alg. 3 folds over vertex data only).
+    pub axis_stats: [f32; 3],
+}
+
+impl BpVertex {
+    pub fn uniform(k: usize) -> BpVertex {
+        BpVertex {
+            potential: vec![1.0; k],
+            belief: vec![1.0 / k as f32; k],
+            observed: u32::MAX,
+            axis_stats: [0.0; 3],
+        }
+    }
+
+    pub fn with_potential(potential: Vec<f32>) -> BpVertex {
+        let k = potential.len();
+        BpVertex { potential, belief: vec![1.0 / k as f32; k], observed: u32::MAX, axis_stats: [0.0; 3] }
+    }
+
+    /// Expected level under the current belief.
+    pub fn expectation(&self) -> f32 {
+        self.belief.iter().enumerate().map(|(i, b)| i as f32 * b).sum()
+    }
+}
+
+/// Edge potential family for a directed edge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EdgePotential {
+    /// Laplace smoothing ψ(x_u, x_v) = exp(-λ_axis |x_u - x_v|); λ read from
+    /// the SDT key `"lambda"` ([f64; 3]) — the learnable parameters of §4.1.
+    Laplace { axis: u8 },
+    /// Index into a shared table of K×K potentials (protein MRF etc.).
+    Table(u32),
+}
+
+/// Per-directed-edge BP state.
+#[derive(Debug, Clone)]
+pub struct BpEdge {
+    /// Message m_{src->dst}(x_dst), normalized (length K).
+    pub message: Vec<f32>,
+    pub potential: EdgePotential,
+}
+
+impl BpEdge {
+    pub fn uniform(k: usize, potential: EdgePotential) -> BpEdge {
+        BpEdge { message: vec![1.0 / k as f32; k], potential }
+    }
+}
+
+/// A pairwise MRF: the data graph plus shared edge-potential tables.
+pub struct Mrf {
+    pub graph: DataGraph<BpVertex, BpEdge>,
+    /// K×K row-major tables referenced by `EdgePotential::Table`.
+    pub tables: Vec<Vec<f32>>,
+    pub arity: usize,
+}
+
+/// Dimensions of a 3-D grid.
+#[derive(Debug, Clone, Copy)]
+pub struct GridDims {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+}
+
+impl GridDims {
+    pub fn new(nx: usize, ny: usize, nz: usize) -> GridDims {
+        GridDims { nx, ny, nz }
+    }
+    pub fn len(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    #[inline]
+    pub fn index(&self, x: usize, y: usize, z: usize) -> VertexId {
+        debug_assert!(x < self.nx && y < self.ny && z < self.nz);
+        ((z * self.ny + y) * self.nx + x) as VertexId
+    }
+    #[inline]
+    pub fn coords(&self, v: VertexId) -> (usize, usize, usize) {
+        let v = v as usize;
+        let x = v % self.nx;
+        let y = (v / self.nx) % self.ny;
+        let z = v / (self.nx * self.ny);
+        (x, y, z)
+    }
+}
+
+/// Build a 6-connected 3-D grid MRF with Laplace edge potentials labelled by
+/// axis (x=0, y=1, z=2) and node potentials from `node_potential(v)`.
+pub fn grid3d(dims: GridDims, k: usize, mut node_potential: impl FnMut(VertexId) -> Vec<f32>) -> Mrf {
+    let n = dims.len();
+    let mut b: GraphBuilder<BpVertex, BpEdge> = GraphBuilder::with_capacity(n, 6 * n);
+    for v in 0..n as VertexId {
+        let pot = node_potential(v);
+        assert_eq!(pot.len(), k);
+        b.add_vertex(BpVertex::with_potential(pot));
+    }
+    let mut link = |u: VertexId, v: VertexId, axis: u8| {
+        b.add_undirected(
+            u,
+            v,
+            BpEdge::uniform(k, EdgePotential::Laplace { axis }),
+            BpEdge::uniform(k, EdgePotential::Laplace { axis }),
+        );
+    };
+    for z in 0..dims.nz {
+        for y in 0..dims.ny {
+            for x in 0..dims.nx {
+                let v = dims.index(x, y, z);
+                if x + 1 < dims.nx {
+                    link(v, dims.index(x + 1, y, z), 0);
+                }
+                if y + 1 < dims.ny {
+                    link(v, dims.index(x, y + 1, z), 1);
+                }
+                if z + 1 < dims.nz {
+                    link(v, dims.index(x, y, z + 1), 2);
+                }
+            }
+        }
+    }
+    Mrf { graph: b.build(), tables: Vec::new(), arity: k }
+}
+
+/// Build a random sparse MRF with tabular attractive/repulsive potentials —
+/// the protein–protein-interaction-network stand-in (§4.2; see DESIGN.md).
+/// `n` vertices, ~`m` undirected edges with a skewed (hub-heavy) degree
+/// profile, arity `k`.
+pub fn random_mrf(n: usize, m: usize, k: usize, rng: &mut Pcg32) -> Mrf {
+    let mut b: GraphBuilder<BpVertex, BpEdge> = GraphBuilder::with_capacity(n, 2 * m);
+    for _ in 0..n {
+        let pot: Vec<f32> = (0..k).map(|_| 0.2 + rng.next_f32()).collect();
+        b.add_vertex(BpVertex::with_potential(pot));
+    }
+    // A few shared tables: attractive (Potts-like) and repulsive.
+    let mut tables = Vec::new();
+    for t in 0..8 {
+        let strength = 0.3 + 0.2 * (t as f32 % 4.0);
+        let attract = t % 2 == 0;
+        let mut tab = vec![0.0f32; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                let same = i == j;
+                tab[i * k + j] = if same == attract { 1.0 } else { (1.0 - strength).max(0.05) };
+            }
+        }
+        tables.push(tab);
+    }
+    // Skewed endpoints: hub-biased choice via zipf, with a degree cap —
+    // real interaction networks have hubs in the tens, not hundreds, and
+    // unbounded hubs would serialize edge-consistency scheduling in a way
+    // the paper's graphs do not.
+    let mut seen = std::collections::HashSet::new();
+    let mut degree = vec![0usize; n];
+    let cap = (8 * m / n).clamp(12, 64);
+    let mut added = 0usize;
+    let mut attempts = 0usize;
+    while added < m && attempts < m * 20 {
+        attempts += 1;
+        let u = rng.next_zipf(n, 0.8) as u32;
+        let v = rng.gen_range(n as u32);
+        if u == v || degree[u as usize] >= cap || degree[v as usize] >= cap {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if !seen.insert(key) {
+            continue;
+        }
+        degree[u as usize] += 1;
+        degree[v as usize] += 1;
+        let t = rng.gen_range(tables.len() as u32);
+        b.add_undirected(
+            u,
+            v,
+            BpEdge::uniform(k, EdgePotential::Table(t)),
+            BpEdge::uniform(k, EdgePotential::Table(t)),
+        );
+        added += 1;
+    }
+    Mrf { graph: b.build(), tables, arity: k }
+}
+
+/// Normalize a distribution in place (L1); uniform fallback on zero mass.
+pub fn normalize(dist: &mut [f32]) {
+    let total: f32 = dist.iter().sum();
+    if total > 1e-30 {
+        for d in dist.iter_mut() {
+            *d /= total;
+        }
+    } else {
+        let u = 1.0 / dist.len() as f32;
+        dist.iter_mut().for_each(|d| *d = u);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_dims_roundtrip() {
+        let dims = GridDims::new(4, 3, 2);
+        assert_eq!(dims.len(), 24);
+        for v in 0..24u32 {
+            let (x, y, z) = dims.coords(v);
+            assert_eq!(dims.index(x, y, z), v);
+        }
+    }
+
+    #[test]
+    fn grid3d_structure() {
+        let dims = GridDims::new(3, 3, 3);
+        let mrf = grid3d(dims, 4, |_| vec![1.0; 4]);
+        assert_eq!(mrf.graph.num_vertices(), 27);
+        // 6-connectivity: 2*(edges) directed; edges = 3 * 2*3*3 axes... count:
+        // x-edges: 2*3*3=18, y: 18, z: 18 => 54 undirected => 108 directed.
+        assert_eq!(mrf.graph.num_edges(), 108);
+        // center vertex has 6 neighbors
+        assert_eq!(mrf.graph.degree(dims.index(1, 1, 1)), 6);
+        // corner has 3
+        assert_eq!(mrf.graph.degree(dims.index(0, 0, 0)), 3);
+    }
+
+    #[test]
+    fn grid_axis_labels() {
+        let dims = GridDims::new(2, 2, 2);
+        let mut mrf = grid3d(dims, 2, |_| vec![1.0; 2]);
+        let e = mrf.graph.find_edge(dims.index(0, 0, 0), dims.index(1, 0, 0)).unwrap();
+        assert_eq!(mrf.graph.edge_data(e).potential, EdgePotential::Laplace { axis: 0 });
+        let e = mrf.graph.find_edge(dims.index(0, 0, 0), dims.index(0, 0, 1)).unwrap();
+        assert_eq!(mrf.graph.edge_data(e).potential, EdgePotential::Laplace { axis: 2 });
+    }
+
+    #[test]
+    fn random_mrf_size_and_tables() {
+        let mut rng = Pcg32::seed_from_u64(5);
+        let mrf = random_mrf(200, 600, 3, &mut rng);
+        assert_eq!(mrf.graph.num_vertices(), 200);
+        assert!(mrf.graph.num_edges() >= 1000, "got {}", mrf.graph.num_edges());
+        assert_eq!(mrf.tables.len(), 8);
+        for t in &mrf.tables {
+            assert_eq!(t.len(), 9);
+            assert!(t.iter().all(|&p| p > 0.0));
+        }
+        // hubs exist (skewed degree)
+        let max_deg = (0..200u32).map(|v| mrf.graph.degree(v)).max().unwrap();
+        assert!(max_deg > 15, "expected hubs, max degree {max_deg}");
+    }
+
+    #[test]
+    fn normalize_handles_zero() {
+        let mut d = vec![0.0f32; 4];
+        normalize(&mut d);
+        assert_eq!(d, vec![0.25; 4]);
+        let mut d = vec![2.0, 6.0];
+        normalize(&mut d);
+        assert_eq!(d, vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn expectation() {
+        let v = BpVertex { potential: vec![], belief: vec![0.5, 0.0, 0.5], observed: 0, axis_stats: [0.0; 3] };
+        assert_eq!(v.expectation(), 1.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! 2-D Haar wavelet transform — the sparsifying basis for the compressed
+//! sensing pipeline (paper §4.5: "a sparse linear combination of basis
+//! functions to represent the image").
+
+/// One level of the 1-D Haar transform (orthonormal): averages in the first
+/// half, details in the second.
+fn haar1d(data: &mut [f32], len: usize, tmp: &mut [f32]) {
+    let half = len / 2;
+    let s = std::f32::consts::FRAC_1_SQRT_2;
+    for i in 0..half {
+        tmp[i] = s * (data[2 * i] + data[2 * i + 1]);
+        tmp[half + i] = s * (data[2 * i] - data[2 * i + 1]);
+    }
+    data[..len].copy_from_slice(&tmp[..len]);
+}
+
+fn ihaar1d(data: &mut [f32], len: usize, tmp: &mut [f32]) {
+    let half = len / 2;
+    let s = std::f32::consts::FRAC_1_SQRT_2;
+    for i in 0..half {
+        tmp[2 * i] = s * (data[i] + data[half + i]);
+        tmp[2 * i + 1] = s * (data[i] - data[half + i]);
+    }
+    data[..len].copy_from_slice(&tmp[..len]);
+}
+
+/// Full multi-level 2-D Haar transform in place. `size` must be a power of
+/// two; `img` is `size * size`, row-major.
+pub fn haar2d(img: &mut [f32], size: usize) {
+    assert!(size.is_power_of_two());
+    assert_eq!(img.len(), size * size);
+    let mut tmp = vec![0.0f32; size];
+    let mut len = size;
+    let mut col = vec![0.0f32; size];
+    while len > 1 {
+        // rows
+        for r in 0..len {
+            haar1d(&mut img[r * size..r * size + len], len, &mut tmp);
+        }
+        // columns
+        for c in 0..len {
+            for r in 0..len {
+                col[r] = img[r * size + c];
+            }
+            haar1d(&mut col, len, &mut tmp);
+            for r in 0..len {
+                img[r * size + c] = col[r];
+            }
+        }
+        len /= 2;
+    }
+}
+
+/// Inverse multi-level 2-D Haar transform in place.
+pub fn ihaar2d(img: &mut [f32], size: usize) {
+    assert!(size.is_power_of_two());
+    assert_eq!(img.len(), size * size);
+    let mut tmp = vec![0.0f32; size];
+    let mut col = vec![0.0f32; size];
+    let mut len = 2;
+    while len <= size {
+        for c in 0..len {
+            for r in 0..len {
+                col[r] = img[r * size + c];
+            }
+            ihaar1d(&mut col, len, &mut tmp);
+            for r in 0..len {
+                img[r * size + c] = col[r];
+            }
+        }
+        for r in 0..len {
+            ihaar1d(&mut img[r * size..r * size + len], len, &mut tmp);
+        }
+        len *= 2;
+    }
+}
+
+/// Hard-threshold small coefficients (keep the `keep` largest magnitudes).
+pub fn sparsify(coeffs: &mut [f32], keep: usize) {
+    if keep >= coeffs.len() {
+        return;
+    }
+    let mut mags: Vec<f32> = coeffs.iter().map(|c| c.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let cut = mags[keep];
+    for c in coeffs.iter_mut() {
+        if c.abs() <= cut {
+            *c = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn roundtrip_identity() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        let size = 32;
+        let orig: Vec<f32> = (0..size * size).map(|_| rng.next_f32()).collect();
+        let mut img = orig.clone();
+        haar2d(&mut img, size);
+        ihaar2d(&mut img, size);
+        for (a, b) in img.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn transform_is_orthonormal() {
+        // energy preservation (Parseval)
+        let mut rng = Pcg32::seed_from_u64(3);
+        let size = 16;
+        let orig: Vec<f32> = (0..size * size).map(|_| rng.next_f32() - 0.5).collect();
+        let energy: f32 = orig.iter().map(|x| x * x).sum();
+        let mut img = orig;
+        haar2d(&mut img, size);
+        let energy2: f32 = img.iter().map(|x| x * x).sum();
+        assert!((energy - energy2).abs() / energy < 1e-4);
+    }
+
+    #[test]
+    fn constant_image_compacts_to_dc() {
+        let size = 8;
+        let mut img = vec![1.0f32; size * size];
+        haar2d(&mut img, size);
+        // all energy in the DC coefficient
+        assert!((img[0] - size as f32).abs() < 1e-4);
+        let rest: f32 = img[1..].iter().map(|x| x.abs()).sum();
+        assert!(rest < 1e-4);
+    }
+
+    #[test]
+    fn smooth_images_are_sparse() {
+        let size = 32;
+        let mut img: Vec<f32> = (0..size * size)
+            .map(|i| {
+                let (x, y) = ((i % size) as f32, (i / size) as f32);
+                (x / size as f32) + 0.5 * (y / size as f32)
+            })
+            .collect();
+        let orig = img.clone();
+        haar2d(&mut img, size);
+        sparsify(&mut img, size * size / 10); // keep 10%
+        ihaar2d(&mut img, size);
+        let err: f32 = img.iter().zip(&orig).map(|(a, b)| (a - b).powi(2)).sum::<f32>()
+            / (size * size) as f32;
+        assert!(err < 1e-3, "10% of Haar coeffs reconstruct a smooth ramp, mse={err}");
+    }
+}

@@ -1,0 +1,137 @@
+//! MapReduce-style execution model of CoEM — the paper's Hadoop comparison
+//! (§4.3): "a comparable Hadoop implementation took approximately 7.5 hours
+//! ... on an average of 95 cpus. Our large performance gain can be
+//! attributed to data persistence in the GraphLab framework. Data
+//! persistence allows us to avoid the extensive data copying and
+//! synchronization required by the Hadoop implementation of MapReduce."
+//!
+//! This module is a *cost model with measured inputs*, not a Hadoop cluster:
+//! we execute the same Jacobi CoEM sweeps the MapReduce program would run,
+//! measure the pure compute time, and charge each iteration the data-motion
+//! costs MapReduce cannot avoid — materializing the graph + belief state to
+//! the distributed FS, the shuffle, and per-job startup latency — using
+//! published Hadoop-era constants. The GraphLab side keeps state in shared
+//! memory across iterations (data persistence), paying the compute cost
+//! only. The output is the runtime ratio on equal work.
+
+use crate::apps::coem::{CoemEdge, CoemVertex};
+use crate::baselines::sequential::coem_jacobi;
+use crate::graph::DataGraph;
+use crate::util::Timer;
+
+/// Hadoop-era cost constants (defaults from published MapReduce
+/// measurements of the 2010 time frame; overridable by benches).
+#[derive(Debug, Clone)]
+pub struct MapReduceCosts {
+    /// Per-job startup + scheduling latency (seconds). Hadoop ~10-30 s.
+    pub job_startup_s: f64,
+    /// Sustained materialize+shuffle bandwidth per node (bytes/sec).
+    pub io_bandwidth: f64,
+    /// Replication factor for intermediate writes.
+    pub replication: f64,
+    /// Number of worker nodes (the paper's comparison used ~95 CPUs).
+    pub nodes: usize,
+}
+
+impl Default for MapReduceCosts {
+    fn default() -> Self {
+        MapReduceCosts {
+            job_startup_s: 15.0,
+            io_bandwidth: 50e6, // 50 MB/s HDFS-era effective per node
+            replication: 3.0,
+            nodes: 95,
+        }
+    }
+}
+
+/// Estimated per-entry bytes of the serialized graph + state (key, value,
+/// belief vector, edge list entries).
+fn state_bytes(graph: &DataGraph<CoemVertex, CoemEdge>, classes: usize) -> f64 {
+    let per_vertex = 16.0 + 4.0 * classes as f64;
+    let per_edge = 12.0;
+    graph.num_vertices() as f64 * per_vertex + graph.num_edges() as f64 * per_edge
+}
+
+/// Result of the comparison.
+#[derive(Debug, Clone)]
+pub struct MapReduceComparison {
+    /// Measured GraphLab-side compute time for the sweeps (s).
+    pub graphlab_s: f64,
+    /// Modeled MapReduce runtime for the same sweeps (s).
+    pub mapreduce_s: f64,
+    /// Per-iteration data-motion cost charged to MapReduce (s).
+    pub per_iteration_io_s: f64,
+    pub iterations: usize,
+}
+
+impl MapReduceComparison {
+    pub fn ratio(&self) -> f64 {
+        self.mapreduce_s / self.graphlab_s.max(1e-9)
+    }
+}
+
+/// Run `sweeps` Jacobi CoEM iterations measuring compute, then model the
+/// MapReduce runtime for the identical work.
+pub fn compare(
+    graph: &mut DataGraph<CoemVertex, CoemEdge>,
+    classes: usize,
+    sweeps: usize,
+    costs: &MapReduceCosts,
+) -> MapReduceComparison {
+    let timer = Timer::start();
+    coem_jacobi(graph, classes, sweeps, 0.0);
+    let compute_s = timer.elapsed_secs();
+
+    let bytes = state_bytes(graph, classes);
+    // Each iteration: map reads the full state, shuffle moves messages,
+    // reduce writes the state back with replication. Aggregate cluster
+    // bandwidth = per-node bandwidth × nodes.
+    let cluster_bw = costs.io_bandwidth * costs.nodes as f64;
+    let io_per_iter = (bytes * (2.0 + costs.replication)) / cluster_bw + costs.job_startup_s;
+    // MapReduce compute: same FLOPs spread over the cluster, but against the
+    // single-node measurement here we conservatively grant perfect scaling.
+    let mr_compute = compute_s / costs.nodes as f64;
+    MapReduceComparison {
+        graphlab_s: compute_s,
+        mapreduce_s: (mr_compute + io_per_iter * sweeps as f64),
+        per_iteration_io_s: io_per_iter,
+        iterations: sweeps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::ner;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn persistence_advantage_shows_up() {
+        let mut rng = Pcg32::seed_from_u64(5);
+        let mut g = ner::generate(&ner::NerConfig::small(0.02), &mut rng);
+        let cmp = compare(&mut g, 2, 3, &MapReduceCosts::default());
+        assert!(cmp.graphlab_s > 0.0);
+        assert!(
+            cmp.ratio() > 5.0,
+            "barrier+copy model must dominate on small iterations: ratio {}",
+            cmp.ratio()
+        );
+        assert!(cmp.per_iteration_io_s > costs_floor());
+    }
+
+    fn costs_floor() -> f64 {
+        MapReduceCosts::default().job_startup_s * 0.9
+    }
+
+    #[test]
+    fn io_cost_scales_with_graph_size() {
+        let mut rng = Pcg32::seed_from_u64(6);
+        let mut small = ner::generate(&ner::NerConfig::small(0.01), &mut rng);
+        let mut rng = Pcg32::seed_from_u64(6);
+        let mut large = ner::generate(&ner::NerConfig::small(0.04), &mut rng);
+        let costs = MapReduceCosts { job_startup_s: 0.0, ..Default::default() };
+        let a = compare(&mut small, 2, 1, &costs);
+        let b = compare(&mut large, 2, 1, &costs);
+        assert!(b.per_iteration_io_s > 2.0 * a.per_iteration_io_s);
+    }
+}

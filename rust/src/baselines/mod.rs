@@ -1,0 +1,13 @@
+//! Baselines the paper compares against:
+//!
+//! * [`sequential`] — plain single-threaded reference implementations of the
+//!   case-study algorithms, independent of the GraphLab engine. Used both as
+//!   correctness oracles (the engine must match them) and as the
+//!   single-processor timing baseline the speedup figures normalize to.
+//! * [`mapreduce`] — an iteration-barrier MapReduce-style execution model of
+//!   CoEM (the paper's Hadoop comparison, §4.3): every iteration pays full
+//!   data materialization + shuffle costs because MapReduce has no data
+//!   persistence, which is exactly where the paper locates its 15× advantage.
+
+pub mod mapreduce;
+pub mod sequential;

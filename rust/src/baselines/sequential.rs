@@ -1,0 +1,179 @@
+//! Plain sequential reference implementations (no GraphLab machinery) used
+//! as correctness oracles and single-processor baselines.
+
+use crate::apps::coem::{CoemEdge, CoemVertex};
+use crate::apps::lasso::{LassoProblem, LassoVertex};
+use crate::graph::DataGraph;
+use crate::util::linalg::soft_threshold;
+
+/// Jacobi CoEM: synchronous sweeps with double buffering, `sweeps` times.
+/// `damping` (0 = undamped) suppresses the period-2 Jacobi mode that pure
+/// synchronous iteration exhibits on bipartite graphs; the fixed point is
+/// unchanged. Returns the final beliefs.
+pub fn coem_jacobi(
+    graph: &mut DataGraph<CoemVertex, CoemEdge>,
+    classes: usize,
+    sweeps: usize,
+    damping: f32,
+) -> Vec<Vec<f32>> {
+    let n = graph.num_vertices();
+    let mut beliefs: Vec<Vec<f32>> =
+        (0..n as u32).map(|v| graph.vertex_data(v).belief.clone()).collect();
+    for _ in 0..sweeps {
+        let mut next = beliefs.clone();
+        for v in 0..n as u32 {
+            if graph.vertex_data(v).seed {
+                continue;
+            }
+            let mut acc = vec![0.0f32; classes];
+            let mut total = 0.0f32;
+            for &e in graph.out_edges(v).to_vec().iter() {
+                let u = graph.edge(e).dst;
+                let w = graph.edge_data(e).weight;
+                for (a, b) in acc.iter_mut().zip(&beliefs[u as usize]) {
+                    *a += w * *b;
+                }
+                total += w;
+            }
+            if total > 0.0 {
+                for (a, old) in acc.iter_mut().zip(&beliefs[v as usize]) {
+                    *a = damping * *old + (1.0 - damping) * (*a / total);
+                }
+                next[v as usize] = acc;
+            }
+        }
+        beliefs = next;
+    }
+    // write back
+    for v in 0..n as u32 {
+        graph.vertex_data(v).belief = beliefs[v as usize].clone();
+    }
+    beliefs
+}
+
+/// Textbook sequential shooting algorithm on dense-ish data: cyclic
+/// coordinate descent until no coordinate moves more than `eps`.
+/// Returns (weights, sweeps used).
+pub fn shooting_reference(
+    problem: &mut LassoProblem,
+    lambda: f32,
+    eps: f32,
+    max_sweeps: usize,
+) -> (Vec<f32>, usize) {
+    let d = problem.num_weights;
+    for sweep in 0..max_sweeps {
+        let mut max_move = 0.0f32;
+        for i in 0..d as u32 {
+            let (w_old, a) = match problem.graph.vertex_data(i) {
+                LassoVertex::Weight { w, a } => (*w, *a),
+                _ => unreachable!(),
+            };
+            if a <= 0.0 {
+                continue;
+            }
+            let mut rho = 0.0f32;
+            let edges = problem.graph.out_edges(i).to_vec();
+            for &e in &edges {
+                let obs = problem.graph.edge(e).dst;
+                let x = problem.graph.edge_data(e).x;
+                let r = problem.graph.vertex_data(obs).residual();
+                rho += x * (r + x * w_old);
+            }
+            let w_new = soft_threshold(rho as f64, lambda as f64 / 2.0) as f32 / a;
+            let delta = w_new - w_old;
+            if delta.abs() > eps {
+                match problem.graph.vertex_data(i) {
+                    LassoVertex::Weight { w, .. } => *w = w_new,
+                    _ => unreachable!(),
+                }
+                for &e in &edges {
+                    let obs = problem.graph.edge(e).dst;
+                    let x = problem.graph.edge_data(e).x;
+                    match problem.graph.vertex_data(obs) {
+                        LassoVertex::Obs { residual, .. } => *residual -= x * delta,
+                        _ => unreachable!(),
+                    }
+                }
+                max_move = max_move.max(delta.abs());
+            }
+        }
+        if max_move <= eps {
+            return (problem.weights(), sweep + 1);
+        }
+    }
+    (problem.weights(), max_sweeps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::coem::CoemUpdate;
+    use crate::consistency::{ConsistencyModel, LockTable};
+    use crate::datagen::{finance, ner};
+    use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+    use crate::scheduler::{MultiQueueFifo, Scheduler, Task};
+    use crate::sdt::Sdt;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn engine_coem_matches_jacobi_fixed_point() {
+        // High seed fraction => fast mixing, so both methods actually reach
+        // the (unique, well-conditioned) fixed point within their stopping
+        // rules and the comparison is meaningful.
+        let mut cfg = ner::NerConfig::small(0.01);
+        cfg.seed_fraction = 0.25;
+        let mut rng = Pcg32::seed_from_u64(11);
+        let mut ref_graph = ner::generate(&cfg, &mut rng);
+        let mut rng = Pcg32::seed_from_u64(11);
+        let engine_graph = ner::generate(&cfg, &mut rng);
+
+        let reference = coem_jacobi(&mut ref_graph, cfg.classes, 2000, 0.5);
+
+        let n = engine_graph.num_vertices();
+        let locks = LockTable::new(n);
+        let sched = MultiQueueFifo::new(n, 2);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let upd = CoemUpdate::new(cfg.classes);
+        let fns: Vec<&dyn UpdateFn<CoemVertex, CoemEdge>> = vec![&upd];
+        ThreadedEngine::run(
+            &engine_graph,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default()
+                .with_workers(2)
+                .with_model(ConsistencyModel::Vertex)
+                .with_max_updates(5_000_000),
+        );
+        let mut engine_graph = engine_graph;
+        // both reach the same fixed point (within tolerance)
+        let mut max_diff = 0.0f32;
+        for v in 0..n as u32 {
+            let got = &engine_graph.vertex_data(v).belief;
+            for (g, r) in got.iter().zip(&reference[v as usize]) {
+                max_diff = max_diff.max((g - r).abs());
+            }
+        }
+        assert!(max_diff < 0.05, "fixed points differ by {max_diff}");
+    }
+
+    #[test]
+    fn shooting_reference_converges() {
+        let mut rng = Pcg32::seed_from_u64(21);
+        let (mut p, _) = finance::generate(&finance::FinanceConfig::sparser(0.02), &mut rng);
+        let (w, sweeps) = shooting_reference(&mut p, 1.0, 1e-5, 500);
+        assert!(sweeps < 500, "did not converge");
+        assert_eq!(w.len(), p.num_weights);
+        // objective should beat the all-zeros solution
+        let loss = p.loss(1.0);
+        let mut rng = Pcg32::seed_from_u64(21);
+        let (mut zero, _) = finance::generate(&finance::FinanceConfig::sparser(0.02), &mut rng);
+        assert!(loss < zero.loss(1.0));
+    }
+}

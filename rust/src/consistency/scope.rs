@@ -1,0 +1,295 @@
+//! The **scope** object (paper §3.2.1, Fig. 1a): the window `S_v` — vertex
+//! `v`, its adjacent edges, and its neighboring vertices — handed to an
+//! update function, with the consistency-model locks held for its lifetime.
+
+use super::{ConsistencyModel, LockTable, ScopeGuards};
+use crate::graph::{DataGraph, Edge, EdgeId, VertexId};
+
+/// Locked neighborhood view passed to update functions:
+/// `D_{S_v} <- f(D_{S_v}, T)`.
+///
+/// Access outside `S_v` panics. What is actually *protected* depends on the
+/// model the scope was locked with (see [`ConsistencyModel`]); in particular
+/// under [`ConsistencyModel::Vertex`] neighbor reads/writes are permitted but
+/// racy — the paper's documented trade-off for maximum parallelism.
+pub struct Scope<'a, V, E> {
+    graph: &'a DataGraph<V, E>,
+    center: VertexId,
+    model: ConsistencyModel,
+    _guards: Option<ScopeGuards<'a>>,
+}
+
+impl<'a, V, E> Scope<'a, V, E> {
+    /// Acquire the scope of `v` under `model`.
+    pub fn lock(
+        graph: &'a DataGraph<V, E>,
+        locks: &'a LockTable,
+        v: VertexId,
+        model: ConsistencyModel,
+    ) -> Scope<'a, V, E> {
+        let guards = locks.lock_scope(v, graph.neighbors(v), model);
+        Scope { graph, center: v, model, _guards: Some(guards) }
+    }
+
+    /// Construct without taking locks — for the sequential engine and
+    /// single-threaded contexts that are externally synchronized.
+    pub(crate) fn unlocked(
+        graph: &'a DataGraph<V, E>,
+        v: VertexId,
+        model: ConsistencyModel,
+    ) -> Scope<'a, V, E> {
+        Scope { graph, center: v, model, _guards: None }
+    }
+
+    #[inline]
+    pub fn center(&self) -> VertexId {
+        self.center
+    }
+
+    #[inline]
+    pub fn model(&self) -> ConsistencyModel {
+        self.model
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.graph.num_vertices()
+    }
+
+    // ---- structure -------------------------------------------------------
+
+    /// Sorted unique neighbors of the center.
+    #[inline]
+    pub fn neighbors(&self) -> &'a [VertexId] {
+        self.graph.neighbors(self.center)
+    }
+
+    /// In-edge ids `(* -> v)`.
+    #[inline]
+    pub fn in_edges(&self) -> &'a [EdgeId] {
+        self.graph.in_edges(self.center)
+    }
+
+    /// Out-edge ids `(v -> *)`.
+    #[inline]
+    pub fn out_edges(&self) -> &'a [EdgeId] {
+        self.graph.out_edges(self.center)
+    }
+
+    #[inline]
+    pub fn edge(&self, e: EdgeId) -> Edge {
+        self.graph.edge(e)
+    }
+
+    /// Reverse edge id of `e` if present.
+    #[inline]
+    pub fn reverse_edge(&self, e: EdgeId) -> Option<EdgeId> {
+        self.graph.reverse_edge(e)
+    }
+
+    /// The directed edge `u -> v` within the scope, if present.
+    pub fn find_edge(&self, u: VertexId, v: VertexId) -> Option<EdgeId> {
+        self.graph.find_edge(u, v)
+    }
+
+    /// Neighbor list of an arbitrary vertex — **structure only** (graph
+    /// structure is immutable, so this is always safe). Needed by programs
+    /// that schedule two-hop vertices, e.g. the Shooting algorithm's
+    /// "schedule all w's connected to neighboring y's" (Alg. 4).
+    #[inline]
+    pub fn neighbors_of(&self, u: VertexId) -> &'a [VertexId] {
+        self.graph.neighbors(u)
+    }
+
+    #[inline]
+    fn assert_in_scope_vertex(&self, u: VertexId) {
+        debug_assert!(
+            u == self.center || self.neighbors().binary_search(&u).is_ok(),
+            "vertex {u} is outside the scope of {}",
+            self.center
+        );
+    }
+
+    #[inline]
+    fn assert_in_scope_edge(&self, e: EdgeId) {
+        let edge = self.graph.edge(e);
+        debug_assert!(
+            edge.src == self.center || edge.dst == self.center,
+            "edge {e} ({}->{}) is not adjacent to scope center {}",
+            edge.src,
+            edge.dst,
+            self.center
+        );
+    }
+
+    // ---- data ------------------------------------------------------------
+
+    /// Center vertex data `D_v` (read).
+    #[inline]
+    pub fn vertex(&self) -> &V {
+        // SAFETY: scope holds (at least) the center write lock; sequential
+        // contexts are externally synchronized.
+        unsafe { self.graph.vertex_data_unchecked(self.center) }
+    }
+
+    /// Center vertex data `D_v` (write).
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub fn vertex_mut(&self) -> &mut V {
+        // SAFETY: as above — the center is write-locked in every model.
+        unsafe { self.graph.vertex_data_mut_unchecked(self.center) }
+    }
+
+    /// Neighbor vertex data (read). Protected under Edge/Full; racy under
+    /// Vertex (paper semantics).
+    #[inline]
+    pub fn neighbor(&self, u: VertexId) -> &V {
+        self.assert_in_scope_vertex(u);
+        // SAFETY: Edge/Full hold a read lock on `u`; Vertex-model racy access
+        // is the documented contract of that model.
+        unsafe { self.graph.vertex_data_unchecked(u) }
+    }
+
+    /// Neighbor vertex data (write). Sequentially consistent only under
+    /// Full (Prop. 3.1 condition 1); racy otherwise.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub fn neighbor_mut(&self, u: VertexId) -> &mut V {
+        self.assert_in_scope_vertex(u);
+        debug_assert!(
+            u == self.center || self.model == ConsistencyModel::Full
+                || self.model == ConsistencyModel::Vertex,
+            "writing neighbor {u} under the edge model violates Prop 3.1 cond. 2"
+        );
+        // SAFETY: Full holds write locks on neighbors; Vertex-model racy
+        // writes are the application's documented responsibility.
+        unsafe { self.graph.vertex_data_mut_unchecked(u) }
+    }
+
+    /// Adjacent edge data (read).
+    #[inline]
+    pub fn edge_data(&self, e: EdgeId) -> &E {
+        self.assert_in_scope_edge(e);
+        // SAFETY: adjacent edges are covered by the center's write lock plus
+        // the neighbor's read lock under Edge/Full.
+        unsafe { self.graph.edge_data_unchecked(e) }
+    }
+
+    /// Adjacent edge data (write). Protected under Edge/Full.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub fn edge_data_mut(&self, e: EdgeId) -> &mut E {
+        self.assert_in_scope_edge(e);
+        // SAFETY: as above.
+        unsafe { self.graph.edge_data_mut_unchecked(e) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path3() -> (DataGraph<i64, i64>, LockTable) {
+        // 0 <-> 1 <-> 2
+        let mut b = GraphBuilder::new();
+        for i in 0..3 {
+            b.add_vertex(i as i64 * 10);
+        }
+        b.add_undirected(0, 1, 1, -1);
+        b.add_undirected(1, 2, 2, -2);
+        let g = b.build();
+        let n = g.num_vertices();
+        (g, LockTable::new(n))
+    }
+
+    #[test]
+    fn center_read_write() {
+        let (g, locks) = path3();
+        {
+            let s = Scope::lock(&g, &locks, 1, ConsistencyModel::Edge);
+            assert_eq!(*s.vertex(), 10);
+            *s.vertex_mut() = 99;
+        }
+        let s = Scope::lock(&g, &locks, 1, ConsistencyModel::Vertex);
+        assert_eq!(*s.vertex(), 99);
+    }
+
+    #[test]
+    fn neighbor_read_and_edges() {
+        let (g, locks) = path3();
+        let s = Scope::lock(&g, &locks, 1, ConsistencyModel::Edge);
+        assert_eq!(s.neighbors(), &[0, 2]);
+        assert_eq!(*s.neighbor(0), 0);
+        assert_eq!(*s.neighbor(2), 20);
+        assert_eq!(s.in_edges().len(), 2);
+        assert_eq!(s.out_edges().len(), 2);
+        let e01 = s.find_edge(1, 0).unwrap();
+        assert_eq!(*s.edge_data(e01), -1);
+        *s.edge_data_mut(e01) = 7;
+        assert_eq!(*s.edge_data(e01), 7);
+        // reverse edge wiring
+        let e10 = s.find_edge(0, 1).unwrap();
+        assert_eq!(s.reverse_edge(e01), Some(e10));
+    }
+
+    #[test]
+    fn full_model_neighbor_write() {
+        let (g, locks) = path3();
+        {
+            let s = Scope::lock(&g, &locks, 1, ConsistencyModel::Full);
+            *s.neighbor_mut(0) += 5;
+        }
+        let s = Scope::lock(&g, &locks, 0, ConsistencyModel::Vertex);
+        assert_eq!(*s.vertex(), 5);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "outside the scope")]
+    fn out_of_scope_vertex_panics() {
+        let (g, locks) = path3();
+        let s = Scope::lock(&g, &locks, 0, ConsistencyModel::Edge);
+        let _ = s.neighbor(2); // 2 is not adjacent to 0
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "not adjacent")]
+    fn out_of_scope_edge_panics() {
+        let (g, locks) = path3();
+        let e12 = g.find_edge(1, 2).unwrap();
+        let s = Scope::lock(&g, &locks, 0, ConsistencyModel::Edge);
+        let _ = s.edge_data(e12);
+    }
+
+    /// Two threads incrementing a shared neighbor through Full scopes must
+    /// never lose an update (write locks serialize them).
+    #[test]
+    fn full_consistency_serializes_neighbor_writes() {
+        use std::sync::Arc;
+        let mut b = GraphBuilder::new();
+        let hub = b.add_vertex(0i64);
+        let a = b.add_vertex(0);
+        let c = b.add_vertex(0);
+        b.add_undirected(a, hub, 0, 0);
+        b.add_undirected(c, hub, 0, 0);
+        let g = Arc::new(b.build());
+        let locks = Arc::new(LockTable::new(3));
+        let mut handles = Vec::new();
+        for center in [a, c] {
+            let g = Arc::clone(&g);
+            let locks = Arc::clone(&locks);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    let s = Scope::lock(&g, &locks, center, ConsistencyModel::Full);
+                    *s.neighbor_mut(hub) += 1;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = Scope::lock(&g, &locks, hub, ConsistencyModel::Vertex);
+        assert_eq!(*s.vertex(), 20_000);
+    }
+}

@@ -1,0 +1,119 @@
+//! Synthetic financial-report regression data for the Lasso experiment
+//! (paper §4.4): word counts of 10-K reports predicting stock volatility
+//! (Kogan et al. 2009). The paper derives two variants by deleting common
+//! words: *sparser* (209K features, 1.2M non-zeros) and *denser* (217K
+//! features, 3.5M non-zeros) — the density contrast is what drives the
+//! full-consistency contention result in Fig 7.
+//!
+//! The generator emits a scaled bag-of-words-like design matrix: Zipf word
+//! frequencies (common words appear in many documents — exactly what makes
+//! the graph denser), log-count values, and a sparse ground-truth weight
+//! vector producing the targets.
+
+use crate::apps::lasso::LassoProblem;
+use crate::util::Pcg32;
+
+/// Configuration: `docs` observations, `features` words.
+#[derive(Debug, Clone)]
+pub struct FinanceConfig {
+    pub docs: usize,
+    pub features: usize,
+    /// Average non-zeros per document.
+    pub nnz_per_doc: usize,
+    /// Zipf skew of word frequencies (higher = a few very common words).
+    pub skew: f64,
+}
+
+impl FinanceConfig {
+    /// Sparser variant (common words deleted): low per-doc density.
+    pub fn sparser(scale: f64) -> FinanceConfig {
+        FinanceConfig {
+            docs: (1500.0 * scale) as usize,
+            features: (10_000.0 * scale) as usize,
+            nnz_per_doc: 40,
+            skew: 0.7,
+        }
+    }
+
+    /// Denser variant (common words kept): ~3x the non-zeros, heavier skew
+    /// (hub features shared by many documents).
+    pub fn denser(scale: f64) -> FinanceConfig {
+        FinanceConfig {
+            docs: (1500.0 * scale) as usize,
+            features: (10_000.0 * scale) as usize,
+            nnz_per_doc: 120,
+            skew: 1.1,
+        }
+    }
+}
+
+/// Generate the problem plus the ground-truth weights used for the targets.
+pub fn generate(cfg: &FinanceConfig, rng: &mut Pcg32) -> (LassoProblem, Vec<f64>) {
+    let d = cfg.features;
+    // sparse ground truth: 2% of features matter
+    let mut w_true = vec![0.0f64; d];
+    for _ in 0..(d / 50).max(2) {
+        w_true[rng.gen_range(d as u32) as usize] = rng.range_f64(-2.0, 2.0);
+    }
+    let mut rows = Vec::with_capacity(cfg.docs);
+    let mut y = Vec::with_capacity(cfg.docs);
+    for _ in 0..cfg.docs {
+        let mut idx = std::collections::HashSet::new();
+        while idx.len() < cfg.nnz_per_doc.min(d) {
+            idx.insert(rng.next_zipf(d, cfg.skew) as u32);
+        }
+        let row: Vec<(u32, f32)> = idx
+            .into_iter()
+            .map(|i| {
+                // log(1 + count) with Zipf-ish counts
+                let count = 1 + rng.next_zipf(30, 1.4);
+                (i, (1.0 + count as f32).ln())
+            })
+            .collect();
+        let target: f64 = row
+            .iter()
+            .map(|&(i, x)| x as f64 * w_true[i as usize])
+            .sum::<f64>()
+            + 0.05 * rng.next_gaussian();
+        rows.push(row);
+        y.push(target as f32);
+    }
+    (LassoProblem::from_sparse(d, &rows, &y), w_true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn denser_variant_has_more_nonzeros() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        let (sparse, _) = generate(&FinanceConfig::sparser(0.05), &mut rng);
+        let mut rng = Pcg32::seed_from_u64(1);
+        let (dense, _) = generate(&FinanceConfig::denser(0.05), &mut rng);
+        assert!(dense.graph.num_edges() > 2 * sparse.graph.num_edges());
+    }
+
+    #[test]
+    fn structure_is_bipartite_and_sized() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        let cfg = FinanceConfig::sparser(0.05);
+        let (p, w_true) = generate(&cfg, &mut rng);
+        assert_eq!(p.num_weights, cfg.features);
+        assert_eq!(p.num_obs, cfg.docs);
+        assert_eq!(w_true.len(), cfg.features);
+        assert!(w_true.iter().filter(|w| w.abs() > 0.0).count() >= 2);
+    }
+
+    #[test]
+    fn hub_features_exist_in_denser_variant() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        let (p, _) = generate(&FinanceConfig::denser(0.05), &mut rng);
+        let g = p.graph;
+        let degs: Vec<usize> = (0..p.num_weights as u32).map(|v| g.degree(v)).collect();
+        let mean = degs.iter().sum::<usize>() as f64 / degs.len() as f64;
+        let max = *degs.iter().max().unwrap() as f64;
+        assert!(max > 3.0 * mean.max(0.1), "hub features drive Fig 7 contention: max={max} mean={mean}");
+        let _ = g.num_vertices();
+    }
+}

@@ -1,0 +1,85 @@
+//! Procedural grayscale test image — the Lenna stand-in for the compressed
+//! sensing experiment (paper §4.5, Fig 8b: 256×256). Smooth gradients plus
+//! sharp-edged shapes give an image that is genuinely sparse in the Haar
+//! wavelet basis (the property the experiment needs).
+
+use crate::util::Pcg32;
+
+/// Generate a `size × size` image in [0, 1] (row-major). `size` must be a
+/// power of two (Haar requirement).
+pub fn generate(size: usize, rng: &mut Pcg32) -> Vec<f32> {
+    assert!(size.is_power_of_two());
+    let s = size as f32;
+    let mut img = vec![0.0f32; size * size];
+    // smooth background gradient + soft vignette
+    for y in 0..size {
+        for x in 0..size {
+            let (fx, fy) = (x as f32 / s, y as f32 / s);
+            let g = 0.35 + 0.3 * fx + 0.15 * (fy * std::f32::consts::PI).sin();
+            img[y * size + x] = g;
+        }
+    }
+    // sharp-edged random rectangles and disks ("objects")
+    for obj in 0..6 {
+        let cx = rng.range_f64(0.15, 0.85) as f32 * s;
+        let cy = rng.range_f64(0.15, 0.85) as f32 * s;
+        let r = rng.range_f64(0.05, 0.18) as f32 * s;
+        let level = rng.next_f32() * 0.8 + 0.1;
+        let disk = obj % 2 == 0;
+        for y in 0..size {
+            for x in 0..size {
+                let (dx, dy) = (x as f32 - cx, y as f32 - cy);
+                let inside = if disk {
+                    dx * dx + dy * dy < r * r
+                } else {
+                    dx.abs() < r && dy.abs() < r * 0.7
+                };
+                if inside {
+                    img[y * size + x] = level;
+                }
+            }
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::wavelet::haar2d;
+
+    #[test]
+    fn image_in_range_and_varied() {
+        let mut rng = Pcg32::seed_from_u64(4);
+        let img = generate(64, &mut rng);
+        assert_eq!(img.len(), 64 * 64);
+        assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        let mean = img.iter().sum::<f32>() / img.len() as f32;
+        let var = img.iter().map(|p| (p - mean).powi(2)).sum::<f32>() / img.len() as f32;
+        assert!(var > 0.005, "image must have structure, var={var}");
+    }
+
+    #[test]
+    fn image_is_wavelet_sparse() {
+        let mut rng = Pcg32::seed_from_u64(5);
+        let size = 64;
+        let mut img = generate(size, &mut rng);
+        haar2d(&mut img, size);
+        let total_energy: f32 = img.iter().map(|c| c * c).sum();
+        let mut mags: Vec<f32> = img.iter().map(|c| c * c).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let top10: f32 = mags.iter().take(size * size / 10).sum();
+        assert!(
+            top10 / total_energy > 0.97,
+            "10% of Haar coefficients must carry >97% of energy: {}",
+            top10 / total_energy
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(32, &mut Pcg32::seed_from_u64(9));
+        let b = generate(32, &mut Pcg32::seed_from_u64(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic workload generators standing in for the paper's proprietary /
+//! unavailable datasets (see DESIGN.md §Testbed-substitutions). Each
+//! generator preserves the *structural* properties that drive the paper's
+//! results: graph topology, degree skew, size ratios, and noise character.
+
+pub mod finance;
+pub mod image;
+pub mod ner;
+pub mod protein;
+pub mod retina;

@@ -1,0 +1,166 @@
+//! Synthetic NER co-occurrence graphs for CoEM (paper §4.3) — power-law
+//! bipartite NP–CT graphs matching the structure of the paper's web-crawl
+//! datasets:
+//!
+//! | name  | classes | vertices | edges  |
+//! |-------|---------|----------|--------|
+//! | small | 1 (+neg)| 0.2M     | 20M    |
+//! | large | 135     | 2M       | 200M   |
+//!
+//! Scaled-down defaults keep the shape (edge:vertex ratio ~100:1 is reduced
+//! to ~10:1 to fit the testbed; the `scale` parameter lets benches sweep
+//! size — Fig 6d). Degree skew follows a Zipf profile as in web text.
+
+use crate::apps::coem::{CoemEdge, CoemVertex};
+use crate::graph::{DataGraph, GraphBuilder};
+use crate::util::Pcg32;
+
+/// Configuration for a synthetic CoEM dataset.
+#[derive(Debug, Clone)]
+pub struct NerConfig {
+    pub num_np: usize,
+    pub num_ct: usize,
+    pub num_edges: usize,
+    pub classes: usize,
+    /// Fraction of NPs seeded with a known label.
+    pub seed_fraction: f64,
+    /// Zipf skew for context popularity.
+    pub skew: f64,
+}
+
+impl NerConfig {
+    /// "small"-shaped dataset, scaled by `scale` (1.0 = 20K vertices, 200K
+    /// edges — 1/10 of the paper's small dataset).
+    pub fn small(scale: f64) -> NerConfig {
+        NerConfig {
+            num_np: (16_000.0 * scale) as usize,
+            num_ct: (4_000.0 * scale) as usize,
+            num_edges: (200_000.0 * scale) as usize,
+            classes: 2,
+            seed_fraction: 0.05,
+            skew: 1.1,
+        }
+    }
+
+    /// "large"-shaped dataset (more classes, more edges per vertex).
+    pub fn large(scale: f64) -> NerConfig {
+        NerConfig {
+            num_np: (60_000.0 * scale) as usize,
+            num_ct: (15_000.0 * scale) as usize,
+            num_edges: (1_200_000.0 * scale) as usize,
+            classes: 16,
+            seed_fraction: 0.03,
+            skew: 1.05,
+        }
+    }
+}
+
+/// Generate the bipartite graph: NPs are vertices `0..num_np`, CTs are
+/// `num_np..num_np+num_ct`.
+pub fn generate(cfg: &NerConfig, rng: &mut Pcg32) -> DataGraph<CoemVertex, CoemEdge> {
+    let n = cfg.num_np + cfg.num_ct;
+    let mut b: GraphBuilder<CoemVertex, CoemEdge> =
+        GraphBuilder::with_capacity(n, cfg.num_edges * 2);
+    // Ground-truth class per NP drives seed labels and edge affinity so the
+    // fixed point is informative (not uniform).
+    let np_class: Vec<usize> =
+        (0..cfg.num_np).map(|_| rng.gen_range(cfg.classes as u32) as usize).collect();
+    for (i, &cls) in np_class.iter().enumerate() {
+        let _ = i;
+        if rng.next_f64() < cfg.seed_fraction {
+            b.add_vertex(CoemVertex::seeded(cfg.classes, cls, true));
+        } else {
+            b.add_vertex(CoemVertex::unlabeled(cfg.classes, true));
+        }
+    }
+    // Each context has a preferred class (contexts select for classes).
+    let ct_class: Vec<usize> =
+        (0..cfg.num_ct).map(|_| rng.gen_range(cfg.classes as u32) as usize).collect();
+    for _ in 0..cfg.num_ct {
+        b.add_vertex(CoemVertex::unlabeled(cfg.classes, false));
+    }
+    // Edges: context chosen by Zipf popularity; NP strongly biased toward
+    // NPs of the context's class (real contexts select for classes —
+    // "citizen of _" co-occurs with countries). Cross-class co-occurrences
+    // exist but carry low counts.
+    let mut seen = std::collections::HashSet::new();
+    let mut added = 0usize;
+    let mut attempts = 0usize;
+    while added < cfg.num_edges && attempts < cfg.num_edges * 30 {
+        attempts += 1;
+        let ct = rng.next_zipf(cfg.num_ct, cfg.skew);
+        let same_class = rng.next_f64() < 0.9;
+        let np = if same_class {
+            // rejection-sample an NP of the context's class (bounded tries)
+            let mut np = rng.gen_range(cfg.num_np as u32) as usize;
+            for _ in 0..16 {
+                if np_class[np] == ct_class[ct] {
+                    break;
+                }
+                np = rng.gen_range(cfg.num_np as u32) as usize;
+            }
+            np
+        } else {
+            rng.gen_range(cfg.num_np as u32) as usize
+        };
+        if !seen.insert((np as u32, ct as u32)) {
+            continue;
+        }
+        let count = if np_class[np] == ct_class[ct] {
+            1 + rng.next_zipf(20, 1.5) as u32
+        } else {
+            1
+        };
+        let w = CoemEdge { weight: count as f32 };
+        b.add_undirected(np as u32, (cfg.num_np + ct) as u32, w, w);
+        added += 1;
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_config_shape() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        let cfg = NerConfig::small(0.05);
+        let g = generate(&cfg, &mut rng);
+        assert_eq!(g.num_vertices(), cfg.num_np + cfg.num_ct);
+        // undirected: 2 directed edges per co-occurrence
+        assert!(g.num_edges() >= cfg.num_edges, "{} < {}", g.num_edges(), cfg.num_edges);
+    }
+
+    #[test]
+    fn bipartite_structure() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        let cfg = NerConfig::small(0.02);
+        let mut g = generate(&cfg, &mut rng);
+        for e in 0..g.num_edges() as u32 {
+            let edge = g.edge(e);
+            let src_np = (edge.src as usize) < cfg.num_np;
+            let dst_np = (edge.dst as usize) < cfg.num_np;
+            assert_ne!(src_np, dst_np, "edge {e} not bipartite");
+        }
+        // vertex kinds recorded
+        assert!(g.vertex_data(0).is_np);
+        assert!(!g.vertex_data(cfg.num_np as u32).is_np);
+    }
+
+    #[test]
+    fn has_seeds_and_skewed_degrees() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        let cfg = NerConfig::small(0.05);
+        let mut g = generate(&cfg, &mut rng);
+        let seeds = (0..g.num_vertices() as u32).filter(|&v| g.vertex_data(v).seed).count();
+        assert!(seeds > 0, "need seed labels");
+        // context degree skew: max degree far above mean
+        let ct0 = cfg.num_np as u32;
+        let degs: Vec<usize> =
+            (ct0..g.num_vertices() as u32).map(|v| g.degree(v)).collect();
+        let mean = degs.iter().sum::<usize>() as f64 / degs.len() as f64;
+        let max = *degs.iter().max().unwrap() as f64;
+        assert!(max > 5.0 * mean, "max {max} vs mean {mean} — expected Zipf skew");
+    }
+}

@@ -1,0 +1,214 @@
+//! Synthetic 3-D "retinal scan" volumes (paper §4.1: 256×64×64 laser density
+//! estimates). The generator produces smooth axial strata — retina-like
+//! layered structure — modulated by low-frequency undulation, plus speckle
+//! noise, quantized to `k` intensity levels. The MRF topology (6-connected
+//! grid, axis-labelled Laplace potentials) is identical to the paper's.
+
+use crate::apps::mrf::{grid3d, GridDims, Mrf};
+use crate::util::Pcg32;
+
+/// A generated denoising task.
+pub struct RetinaVolume {
+    pub dims: GridDims,
+    /// Clean quantized levels (ground truth), length `dims.len()`.
+    pub clean: Vec<u32>,
+    /// Noisy observed levels.
+    pub noisy: Vec<u32>,
+    /// Number of intensity levels (MRF arity).
+    pub k: usize,
+}
+
+/// Generate the layered volume. `noise` is the per-voxel corruption
+/// probability (a corrupted voxel jumps to a random level — speckle).
+pub fn generate(dims: GridDims, k: usize, noise: f64, rng: &mut Pcg32) -> RetinaVolume {
+    assert!(k >= 2);
+    let mut clean = Vec::with_capacity(dims.len());
+    // Random layer boundaries along z with smooth (x, y) undulation.
+    let n_layers = (k).min(6);
+    let phase_x = rng.range_f64(0.0, std::f64::consts::TAU);
+    let phase_y = rng.range_f64(0.0, std::f64::consts::TAU);
+    let amp = dims.nz as f64 * 0.08;
+    let layer_level: Vec<u32> =
+        (0..n_layers).map(|i| ((i * (k - 1)) / (n_layers - 1).max(1)) as u32).collect();
+    for z in 0..dims.nz {
+        for y in 0..dims.ny {
+            for x in 0..dims.nx {
+                let _ = dims.index(x, y, z);
+                let undulation = amp
+                    * ((x as f64 / dims.nx as f64 * std::f64::consts::TAU + phase_x).sin()
+                        + (y as f64 / dims.ny as f64 * std::f64::consts::TAU + phase_y).cos())
+                    / 2.0;
+                let zz = (z as f64 + undulation).clamp(0.0, dims.nz as f64 - 1.0);
+                let layer = ((zz / dims.nz as f64) * n_layers as f64) as usize;
+                clean.push(layer_level[layer.min(n_layers - 1)]);
+            }
+        }
+    }
+    // reorder: the loop above pushed in x-fastest order already matching index()
+    let noisy: Vec<u32> = clean
+        .iter()
+        .map(|&c| {
+            if rng.next_f64() < noise {
+                rng.gen_range(k as u32)
+            } else {
+                c
+            }
+        })
+        .collect();
+    RetinaVolume { dims, clean, noisy, k }
+}
+
+/// Robust observation potentials around the noisy level: a Gaussian data
+/// term mixed with a uniform outlier floor (speckle noise replaces voxels
+/// with arbitrary levels, so the likelihood must not vanish off-peak):
+/// φ_v(x) = (1-π) exp(-(x − obs)² / (2σ²)) + π/K.
+pub fn observation_potential(obs: u32, k: usize, sigma: f32) -> Vec<f32> {
+    let outlier = 0.25f32;
+    (0..k)
+        .map(|x| {
+            let d = x as f32 - obs as f32;
+            (1.0 - outlier) * (-d * d / (2.0 * sigma * sigma)).exp() + outlier / k as f32
+        })
+        .collect()
+}
+
+/// Build the denoising MRF from a volume: node potentials from the noisy
+/// observations, 6-connected Laplace edges.
+pub fn build_mrf(vol: &RetinaVolume, sigma: f32) -> Mrf {
+    let mut mrf = grid3d(vol.dims, vol.k, |v| {
+        observation_potential(vol.noisy[v as usize], vol.k, sigma)
+    });
+    for v in 0..mrf.graph.num_vertices() as u32 {
+        mrf.graph.vertex_data(v).observed = vol.noisy[v as usize];
+    }
+    mrf
+}
+
+/// Axis-aligned window average of the noisy volume — the paper's "proxy for
+/// ground-truth smoothed images" used to fix the learning targets.
+pub fn smoothed_proxy(vol: &RetinaVolume, radius: usize) -> Vec<f32> {
+    let dims = vol.dims;
+    let mut out = vec![0.0f32; dims.len()];
+    for z in 0..dims.nz {
+        for y in 0..dims.ny {
+            for x in 0..dims.nx {
+                let mut sum = 0.0f32;
+                let mut cnt = 0.0f32;
+                let r = radius as isize;
+                for (dx, dy, dz) in
+                    (-r..=r).flat_map(|a| (-r..=r).flat_map(move |b| (-r..=r).map(move |c| (a, b, c))))
+                {
+                    let (xx, yy, zz) =
+                        (x as isize + dx, y as isize + dy, z as isize + dz);
+                    if xx >= 0
+                        && yy >= 0
+                        && zz >= 0
+                        && (xx as usize) < dims.nx
+                        && (yy as usize) < dims.ny
+                        && (zz as usize) < dims.nz
+                    {
+                        sum += vol.noisy[dims.index(xx as usize, yy as usize, zz as usize) as usize]
+                            as f32;
+                        cnt += 1.0;
+                    }
+                }
+                out[dims.index(x, y, z) as usize] = sum / cnt;
+            }
+        }
+    }
+    out
+}
+
+/// Fraction of voxels whose noisy level differs from the clean level.
+pub fn error_rate(reference: &[u32], test: &[u32]) -> f64 {
+    let wrong = reference.iter().zip(test).filter(|(a, b)| a != b).count();
+    wrong as f64 / reference.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_is_layered_and_noisy() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        let dims = GridDims::new(16, 16, 16);
+        let vol = generate(dims, 5, 0.2, &mut rng);
+        assert_eq!(vol.clean.len(), dims.len());
+        // layering: top and bottom slabs differ
+        let top = vol.clean[dims.index(8, 8, 0) as usize];
+        let bottom = vol.clean[dims.index(8, 8, 15) as usize];
+        assert_ne!(top, bottom, "layers must vary along z");
+        // noise actually corrupts around the requested rate
+        let rate = error_rate(&vol.clean, &vol.noisy);
+        assert!(rate > 0.1 && rate < 0.3, "rate={rate}");
+        // all levels in range
+        assert!(vol.noisy.iter().all(|&l| l < 5));
+    }
+
+    #[test]
+    fn clean_volume_is_smooth_in_xy() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        let dims = GridDims::new(12, 12, 12);
+        let vol = generate(dims, 5, 0.0, &mut rng);
+        // neighboring x voxels rarely differ (smooth undulation)
+        let mut diffs = 0;
+        let mut total = 0;
+        for z in 0..12 {
+            for y in 0..12 {
+                for x in 0..11 {
+                    total += 1;
+                    if vol.clean[dims.index(x, y, z) as usize]
+                        != vol.clean[dims.index(x + 1, y, z) as usize]
+                    {
+                        diffs += 1;
+                    }
+                }
+            }
+        }
+        assert!((diffs as f64) < 0.15 * total as f64, "{diffs}/{total} x-jumps");
+    }
+
+    #[test]
+    fn observation_potential_peaks_at_observation() {
+        let pot = observation_potential(2, 5, 1.0);
+        let argmax = pot
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 2);
+        assert!(pot.iter().all(|&p| p > 0.0));
+    }
+
+    #[test]
+    fn build_mrf_wires_observations() {
+        let mut rng = Pcg32::seed_from_u64(5);
+        let dims = GridDims::new(4, 4, 4);
+        let vol = generate(dims, 4, 0.1, &mut rng);
+        let mut mrf = build_mrf(&vol, 1.0);
+        assert_eq!(mrf.graph.num_vertices(), 64);
+        for v in 0..64u32 {
+            assert_eq!(mrf.graph.vertex_data(v).observed, vol.noisy[v as usize]);
+        }
+    }
+
+    #[test]
+    fn smoothing_reduces_noise_variance() {
+        let mut rng = Pcg32::seed_from_u64(7);
+        let dims = GridDims::new(10, 10, 10);
+        let vol = generate(dims, 5, 0.3, &mut rng);
+        let smooth = smoothed_proxy(&vol, 1);
+        // smoothed volume is closer to clean (in MSE) than the noisy one
+        let mse = |xs: &[f32]| -> f64 {
+            xs.iter()
+                .zip(&vol.clean)
+                .map(|(a, &c)| (*a as f64 - c as f64).powi(2))
+                .sum::<f64>()
+                / xs.len() as f64
+        };
+        let noisy_f: Vec<f32> = vol.noisy.iter().map(|&x| x as f32).collect();
+        assert!(mse(&smooth) < mse(&noisy_f));
+    }
+}

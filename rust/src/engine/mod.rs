@@ -1,0 +1,203 @@
+//! The GraphLab **engine**: pulls tasks from the scheduler, acquires each
+//! task's scope under the configured consistency model, applies the update
+//! function, and feeds spawned tasks back (paper §3.2, §3.5, Fig. 3).
+//!
+//! Two engines share the same semantics:
+//! * [`ThreadedEngine`] — worker threads over shared memory (the paper's
+//!   PThreads implementation).
+//! * [`SequentialEngine`] — single-threaded, deterministic, and able to
+//!   capture a [task trace](trace::TaskTrace) consumed by the multicore
+//!   simulator ([`crate::sim`]) that regenerates the paper's speedup figures.
+
+pub mod sequential;
+pub mod threaded;
+pub mod trace;
+
+pub use sequential::SequentialEngine;
+pub use threaded::ThreadedEngine;
+
+use crate::consistency::{ConsistencyModel, Scope};
+use crate::graph::VertexId;
+use crate::scheduler::{FuncId, Task};
+use crate::sdt::Sdt;
+
+/// A stateless user-defined update function `D_{S_v} <- f(D_{S_v}, T)`
+/// (paper §3.2.1). Implementations receive the locked scope and a context
+/// for scheduling further tasks and reading the SDT.
+pub trait UpdateFn<V, E>: Send + Sync {
+    fn update(&self, scope: &mut Scope<'_, V, E>, ctx: &mut UpdateContext<'_>);
+
+    fn name(&self) -> &'static str {
+        "update"
+    }
+}
+
+/// Blanket impl so plain closures can be used as update functions.
+impl<V, E, F> UpdateFn<V, E> for F
+where
+    F: Fn(&mut Scope<'_, V, E>, &mut UpdateContext<'_>) + Send + Sync,
+{
+    fn update(&self, scope: &mut Scope<'_, V, E>, ctx: &mut UpdateContext<'_>) {
+        self(scope, ctx)
+    }
+}
+
+/// Per-invocation context handed to update functions: read-only SDT access
+/// plus task creation (`AddTask` in the paper's pseudocode).
+pub struct UpdateContext<'a> {
+    /// The shared data table (read-only by convention; enforced socially —
+    /// update functions should only *read*; writes belong to sync Apply).
+    pub sdt: &'a Sdt,
+    /// Executing worker id (for per-worker RNG streams etc.).
+    pub worker: usize,
+    /// Priority the current task was scheduled with.
+    pub current_priority: f64,
+    spawned: Vec<Task>,
+}
+
+impl<'a> UpdateContext<'a> {
+    pub fn new(sdt: &'a Sdt, worker: usize) -> UpdateContext<'a> {
+        UpdateContext { sdt, worker, current_priority: 0.0, spawned: Vec::new() }
+    }
+
+    /// Schedule `vertex` for another update (same function, given priority).
+    #[inline]
+    pub fn add_task(&mut self, vertex: VertexId, priority: f64) {
+        self.spawned.push(Task::with_priority(vertex, priority));
+    }
+
+    /// Schedule `vertex` for update function `func`.
+    #[inline]
+    pub fn add_task_func(&mut self, vertex: VertexId, func: FuncId, priority: f64) {
+        self.spawned.push(Task::with_func(vertex, func, priority));
+    }
+
+    /// Tasks spawned so far (drained by the engine after scope release).
+    pub fn take_spawned(&mut self) -> Vec<Task> {
+        std::mem::take(&mut self.spawned)
+    }
+
+    /// Reuse this context for the next task (keeps the spawned buffer's
+    /// allocation — the engine hot path calls this once per update).
+    #[inline]
+    pub fn reset(&mut self, worker: usize, priority: f64) {
+        self.worker = worker;
+        self.current_priority = priority;
+        self.spawned.clear();
+    }
+
+    /// Drain spawned tasks without giving up the buffer.
+    #[inline]
+    pub fn drain_spawned(&mut self, mut f: impl FnMut(Task)) {
+        for t in self.spawned.drain(..) {
+            f(t);
+        }
+    }
+}
+
+/// Why an engine run stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// Scheduler drained: no tasks remained (paper's first termination mode).
+    SchedulerEmpty,
+    /// A registered termination function returned true (second mode).
+    TerminationFn,
+    /// The configured update budget was exhausted.
+    UpdateLimit,
+}
+
+/// Engine configuration.
+pub struct EngineConfig {
+    /// Worker thread count (ignored by the sequential engine).
+    pub workers: usize,
+    /// Consistency model for scope locking.
+    pub model: ConsistencyModel,
+    /// Hard cap on total updates (safety valve for non-converging runs).
+    pub max_updates: Option<u64>,
+    /// Check termination functions every N completed updates (per worker).
+    pub term_check_every: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: 2,
+            model: ConsistencyModel::Edge,
+            max_updates: None,
+            term_check_every: 256,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn sequential(model: ConsistencyModel) -> EngineConfig {
+        EngineConfig { workers: 1, model, ..Default::default() }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn with_model(mut self, model: ConsistencyModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    pub fn with_max_updates(mut self, max: u64) -> Self {
+        self.max_updates = Some(max);
+        self
+    }
+}
+
+/// Termination predicate over the SDT (paper §3.5, second mode).
+pub type TerminationFn = Box<dyn Fn(&Sdt) -> bool + Send + Sync>;
+
+/// Outcome of an engine run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub updates: u64,
+    pub wall_secs: f64,
+    pub stop: StopReason,
+    /// Updates per worker (threaded engine).
+    pub per_worker: Vec<u64>,
+    /// Number of background/on-demand sync executions performed.
+    pub syncs_run: u64,
+}
+
+impl RunReport {
+    pub fn updates_per_sec(&self) -> f64 {
+        self.updates as f64 / self.wall_secs.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_collects_tasks() {
+        let sdt = Sdt::new();
+        let mut ctx = UpdateContext::new(&sdt, 3);
+        ctx.add_task(5, 1.5);
+        ctx.add_task_func(7, 2, 0.5);
+        let tasks = ctx.take_spawned();
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(tasks[0].vertex, 5);
+        assert_eq!(tasks[0].priority, 1.5);
+        assert_eq!(tasks[1].func, 2);
+        assert!(ctx.take_spawned().is_empty(), "drained");
+        assert_eq!(ctx.worker, 3);
+    }
+
+    #[test]
+    fn config_builders() {
+        let c = EngineConfig::default()
+            .with_workers(8)
+            .with_model(ConsistencyModel::Full)
+            .with_max_updates(100);
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.model, ConsistencyModel::Full);
+        assert_eq!(c.max_updates, Some(100));
+    }
+}

@@ -1,0 +1,289 @@
+//! Single-threaded engine: deterministic execution of a schedule, used for
+//! (a) correctness baselines ("any sequential execution" in Def. 3.1),
+//! (b) single-processor timing runs, and (c) capturing the task traces the
+//! multicore simulator replays.
+
+use super::trace::{TaskTrace, TraceEvent};
+use super::{EngineConfig, RunReport, StopReason, TerminationFn, UpdateContext, UpdateFn};
+use crate::consistency::Scope;
+use crate::graph::DataGraph;
+use crate::scheduler::Scheduler;
+use crate::sdt::{Sdt, SyncOp};
+use crate::util::Timer;
+
+/// Sequential engine. See module docs.
+pub struct SequentialEngine;
+
+/// Options beyond [`EngineConfig`] for a sequential run.
+#[derive(Default)]
+pub struct SeqOptions {
+    /// Capture a [`TaskTrace`] (adds two clock reads per update).
+    pub capture_trace: bool,
+    /// Run registered on-demand syncs every N updates (0 = only at end).
+    pub sync_every: u64,
+    /// Cycle `next_task(worker)` over this many virtual worker ids (0/1 =
+    /// single worker). Needed for worker-affine schedulers (partitioned)
+    /// whose queues are only served by their owning worker id.
+    pub virtual_workers: usize,
+}
+
+impl SequentialEngine {
+    /// Run until the scheduler drains, a termination function fires, or the
+    /// update budget is exhausted. Returns the report and (optionally) the
+    /// captured trace.
+    pub fn run<V, E>(
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        fns: &[&dyn UpdateFn<V, E>],
+        sdt: &Sdt,
+        syncs: &[SyncOp<V>],
+        terminators: &[TerminationFn],
+        config: &EngineConfig,
+        opts: &SeqOptions,
+    ) -> (RunReport, TaskTrace) {
+        let timer = Timer::start();
+        let mut trace = TaskTrace::new();
+        let mut updates: u64 = 0;
+        let mut syncs_run: u64 = 0;
+        let mut stop = StopReason::SchedulerEmpty;
+
+        let vworkers = opts.virtual_workers.max(1);
+        let mut worker = 0usize;
+        let mut idle_polls = 0u64;
+        'outer: loop {
+            let next = scheduler.next_task(worker);
+            let Some(task) = next else {
+                if scheduler.is_done() {
+                    break;
+                }
+                // Worker-affine schedulers only serve their own partition;
+                // cycle the virtual worker id before concluding anything.
+                worker = (worker + 1) % vworkers;
+                idle_polls += 1;
+                assert!(
+                    idle_polls < 10_000_000,
+                    "sequential engine live-locked: scheduler not done but \
+                     produced no task in 10M polls (worker-affine scheduler \
+                     without enough virtual_workers?)"
+                );
+                continue;
+            };
+            idle_polls = 0;
+
+            let mut ctx = UpdateContext::new(sdt, worker);
+            ctx.current_priority = task.priority;
+            let t0 = if opts.capture_trace { Some(Timer::start()) } else { None };
+            {
+                // Externally synchronized: single thread owns the graph.
+                let mut scope = Scope::unlocked(graph, task.vertex, config.model);
+                fns[task.func as usize].update(&mut scope, &mut ctx);
+            }
+            let cost_ns = t0.map(|t| t.elapsed_ns()).unwrap_or(0);
+            let spawned = ctx.take_spawned();
+            if opts.capture_trace {
+                trace.events.push(TraceEvent {
+                    vertex: task.vertex,
+                    func: task.func,
+                    priority: task.priority,
+                    cost_ns,
+                    spawned: spawned.clone(),
+                });
+            }
+            for t in spawned {
+                scheduler.add_task(t);
+            }
+            scheduler.task_done(task, worker);
+            worker = (worker + 1) % vworkers;
+            updates += 1;
+
+            if let Some(max) = config.max_updates {
+                if updates >= max {
+                    stop = StopReason::UpdateLimit;
+                    break 'outer;
+                }
+            }
+            let do_sync = opts.sync_every > 0 && updates % opts.sync_every == 0;
+            if do_sync {
+                for op in syncs {
+                    Self::run_sync(graph, op, sdt);
+                    syncs_run += 1;
+                }
+            }
+            if updates % config.term_check_every == 0 {
+                for term in terminators {
+                    if term(sdt) {
+                        stop = StopReason::TerminationFn;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+
+        // Final syncs so the SDT reflects the converged state.
+        for op in syncs {
+            Self::run_sync(graph, op, sdt);
+            syncs_run += 1;
+        }
+
+        let report = RunReport {
+            updates,
+            wall_secs: timer.elapsed_secs(),
+            stop,
+            per_worker: vec![updates],
+            syncs_run,
+        };
+        (report, trace)
+    }
+
+    /// Sequential sync execution (Alg. 1): fold over all vertices, apply.
+    pub fn run_sync<V, E>(graph: &mut DataGraph<V, E>, op: &SyncOp<V>, sdt: &Sdt) {
+        let mut acc = op.init_acc();
+        for v in 0..graph.num_vertices() as u32 {
+            acc = op.fold_acc(acc, graph.vertex_data_ref(v));
+        }
+        op.apply_acc(acc, sdt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consistency::ConsistencyModel;
+    use crate::graph::GraphBuilder;
+    use crate::scheduler::{FifoScheduler, Task};
+    use crate::sdt::SyncOpBuilder;
+
+    /// Token-passing program: each vertex increments itself and schedules its
+    /// right neighbor until the counter reaches a bound.
+    fn chain_graph(n: usize) -> DataGraph<u64, ()> {
+        let mut b = GraphBuilder::new();
+        for _ in 0..n {
+            b.add_vertex(0u64);
+        }
+        for i in 0..n - 1 {
+            b.add_undirected(i as u32, (i + 1) as u32, (), ());
+        }
+        b.build()
+    }
+
+    struct Increment {
+        bound: u64,
+    }
+
+    impl UpdateFn<u64, ()> for Increment {
+        fn update(&self, scope: &mut Scope<'_, u64, ()>, ctx: &mut UpdateContext<'_>) {
+            *scope.vertex_mut() += 1;
+            if *scope.vertex() < self.bound {
+                for &u in scope.neighbors() {
+                    if u > scope.center() {
+                        ctx.add_task(u, 1.0);
+                    }
+                }
+                ctx.add_task(scope.center(), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn runs_until_drained_and_traces() {
+        let mut g = chain_graph(4);
+        let sched = FifoScheduler::new(4);
+        sched.add_task(Task::new(0));
+        let sdt = Sdt::new();
+        let f = Increment { bound: 3 };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let (report, trace) = SequentialEngine::run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::sequential(ConsistencyModel::Edge),
+            &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
+        );
+        assert_eq!(report.stop, StopReason::SchedulerEmpty);
+        assert!(report.updates > 0);
+        assert_eq!(trace.len() as u64, report.updates);
+        // every vertex reached the bound
+        for v in 0..4 {
+            assert_eq!(*g.vertex_data(v), 3);
+        }
+        // trace causality: first event is the seeded vertex
+        assert_eq!(trace.events[0].vertex, 0);
+    }
+
+    #[test]
+    fn update_limit_stops_early() {
+        let mut g = chain_graph(3);
+        let sched = FifoScheduler::new(3);
+        sched.add_task(Task::new(0));
+        let sdt = Sdt::new();
+        let f = Increment { bound: u64::MAX };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let (report, _) = SequentialEngine::run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::sequential(ConsistencyModel::Edge).with_max_updates(10),
+            &SeqOptions::default(),
+        );
+        assert_eq!(report.stop, StopReason::UpdateLimit);
+        assert_eq!(report.updates, 10);
+    }
+
+    #[test]
+    fn termination_fn_stops_run() {
+        let mut g = chain_graph(3);
+        let sched = FifoScheduler::new(3);
+        sched.add_task(Task::new(0));
+        let sdt = Sdt::new();
+        sdt.set("stop", false);
+        let f = Increment { bound: u64::MAX };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let term: TerminationFn = Box::new(|_sdt: &Sdt| true);
+        let mut cfg = EngineConfig::sequential(ConsistencyModel::Edge);
+        cfg.term_check_every = 4;
+        let (report, _) = SequentialEngine::run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[term],
+            &cfg,
+            &SeqOptions::default(),
+        );
+        assert_eq!(report.stop, StopReason::TerminationFn);
+        assert_eq!(report.updates, 4);
+    }
+
+    #[test]
+    fn syncs_run_and_final_sync_always_happens() {
+        let mut g = chain_graph(4);
+        let sched = FifoScheduler::new(4);
+        sched.add_task(Task::new(0));
+        let sdt = Sdt::new();
+        let f = Increment { bound: 2 };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let sum_op = SyncOpBuilder::<u64, u64>::new("total", 0).build(
+            |acc, v| acc + *v,
+            |acc, sdt| sdt.set("total", acc),
+        );
+        let (report, _) = SequentialEngine::run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[sum_op],
+            &[],
+            &EngineConfig::sequential(ConsistencyModel::Edge),
+            &SeqOptions { capture_trace: false, sync_every: 3, virtual_workers: 1 },
+        );
+        assert!(report.syncs_run >= 1);
+        assert_eq!(sdt.get::<u64>("total"), Some(8), "4 vertices x bound 2");
+    }
+}

@@ -1,0 +1,105 @@
+//! Task traces captured by the sequential engine and replayed by the
+//! multicore simulator (`crate::sim`). A trace records, for every executed
+//! update, its measured cost and the tasks it spawned — the causal structure
+//! the simulator needs to model a P-processor execution.
+
+use crate::graph::VertexId;
+use crate::scheduler::{FuncId, Task};
+
+/// One executed update.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub vertex: VertexId,
+    pub func: FuncId,
+    /// Priority the task carried when executed.
+    pub priority: f64,
+    /// Measured execution cost in nanoseconds (scope-locked region only).
+    pub cost_ns: u64,
+    /// Tasks spawned by this update (pre-deduplication).
+    pub spawned: Vec<Task>,
+}
+
+/// A full sequential execution trace.
+#[derive(Debug, Clone, Default)]
+pub struct TaskTrace {
+    /// Tasks seeded before the run started.
+    pub initial: Vec<Task>,
+    /// Executed updates in sequential order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TaskTrace {
+    pub fn new() -> TaskTrace {
+        TaskTrace::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total measured work in nanoseconds.
+    pub fn total_work_ns(&self) -> u64 {
+        self.events.iter().map(|e| e.cost_ns).sum()
+    }
+
+    /// Mean per-update cost in nanoseconds.
+    pub fn mean_cost_ns(&self) -> f64 {
+        if self.events.is_empty() {
+            0.0
+        } else {
+            self.total_work_ns() as f64 / self.events.len() as f64
+        }
+    }
+
+    /// Index events by vertex: `occurrences[v]` lists the event indices where
+    /// vertex `v` was updated, in execution order. The simulator uses this to
+    /// look up the cost/spawn set of "the k-th execution of v".
+    pub fn occurrences(&self, num_vertices: usize) -> Vec<Vec<u32>> {
+        let mut occ = vec![Vec::new(); num_vertices];
+        for (i, e) in self.events.iter().enumerate() {
+            occ[e.vertex as usize].push(i as u32);
+        }
+        occ
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(v: u32, cost: u64, spawned: &[u32]) -> TraceEvent {
+        TraceEvent {
+            vertex: v,
+            func: 0,
+            priority: 0.0,
+            cost_ns: cost,
+            spawned: spawned.iter().map(|&s| Task::new(s)).collect(),
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let trace = TaskTrace {
+            initial: vec![Task::new(0)],
+            events: vec![event(0, 100, &[1]), event(1, 300, &[])],
+        };
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace.total_work_ns(), 400);
+        assert_eq!(trace.mean_cost_ns(), 200.0);
+    }
+
+    #[test]
+    fn occurrence_index() {
+        let trace = TaskTrace {
+            initial: vec![],
+            events: vec![event(0, 1, &[]), event(1, 1, &[]), event(0, 1, &[])],
+        };
+        let occ = trace.occurrences(2);
+        assert_eq!(occ[0], vec![0, 2]);
+        assert_eq!(occ[1], vec![1]);
+    }
+}

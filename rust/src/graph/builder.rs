@@ -1,0 +1,243 @@
+//! Construction of [`DataGraph`]s. Structure is accumulated incrementally and
+//! frozen into CSR form by [`GraphBuilder::build`].
+
+use super::{Csr, DataCell, DataGraph, Edge, EdgeId, VertexId};
+
+/// Incremental graph builder.
+pub struct GraphBuilder<V, E> {
+    vertex_data: Vec<V>,
+    edges: Vec<Edge>,
+    edge_data: Vec<E>,
+}
+
+impl<V, E> Default for GraphBuilder<V, E> {
+    fn default() -> Self {
+        GraphBuilder { vertex_data: Vec::new(), edges: Vec::new(), edge_data: Vec::new() }
+    }
+}
+
+impl<V, E> GraphBuilder<V, E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(vertices: usize, edges: usize) -> Self {
+        GraphBuilder {
+            vertex_data: Vec::with_capacity(vertices),
+            edges: Vec::with_capacity(edges),
+            edge_data: Vec::with_capacity(edges),
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.vertex_data.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Add a vertex carrying `data`; returns its id.
+    pub fn add_vertex(&mut self, data: V) -> VertexId {
+        self.vertex_data.push(data);
+        (self.vertex_data.len() - 1) as VertexId
+    }
+
+    /// Add the directed edge `src -> dst` carrying `data`; returns its id.
+    /// Panics on self-loops (the GraphLab scope model excludes them) and on
+    /// out-of-range endpoints.
+    pub fn add_edge(&mut self, src: VertexId, dst: VertexId, data: E) -> EdgeId {
+        assert!(src != dst, "self-loops are not supported (scope semantics)");
+        assert!(
+            (src as usize) < self.vertex_data.len() && (dst as usize) < self.vertex_data.len(),
+            "edge endpoint out of range: {src}->{dst} with {} vertices",
+            self.vertex_data.len()
+        );
+        self.edges.push(Edge { src, dst });
+        self.edge_data.push(data);
+        (self.edges.len() - 1) as EdgeId
+    }
+
+    /// Add both directions between `u` and `v`; returns `(u->v, v->u)` ids.
+    pub fn add_undirected(&mut self, u: VertexId, v: VertexId, uv: E, vu: E) -> (EdgeId, EdgeId) {
+        (self.add_edge(u, v, uv), self.add_edge(v, u, vu))
+    }
+
+    /// Freeze into CSR form.
+    pub fn build(self) -> DataGraph<V, E> {
+        let n = self.vertex_data.len();
+        let m = self.edges.len();
+
+        // Counting sort edge ids into out- and in-rows.
+        let mut out_counts = vec![0u32; n + 1];
+        let mut in_counts = vec![0u32; n + 1];
+        for e in &self.edges {
+            out_counts[e.src as usize + 1] += 1;
+            in_counts[e.dst as usize + 1] += 1;
+        }
+        for i in 0..n {
+            out_counts[i + 1] += out_counts[i];
+            in_counts[i + 1] += in_counts[i];
+        }
+        let out_offsets = out_counts.clone();
+        let in_offsets = in_counts.clone();
+        let mut out_items = vec![0u32; m];
+        let mut in_items = vec![0u32; m];
+        let mut out_cursor = out_offsets.clone();
+        let mut in_cursor = in_offsets.clone();
+        for (id, e) in self.edges.iter().enumerate() {
+            let oc = &mut out_cursor[e.src as usize];
+            out_items[*oc as usize] = id as u32;
+            *oc += 1;
+            let ic = &mut in_cursor[e.dst as usize];
+            in_items[*ic as usize] = id as u32;
+            *ic += 1;
+        }
+
+        // Sort each out-row by destination (for find_edge binary search) and
+        // each in-row by source (deterministic iteration order).
+        for v in 0..n {
+            let (s, t) = (out_offsets[v] as usize, out_offsets[v + 1] as usize);
+            out_items[s..t].sort_unstable_by_key(|&e| self.edges[e as usize].dst);
+            let (s, t) = (in_offsets[v] as usize, in_offsets[v + 1] as usize);
+            in_items[s..t].sort_unstable_by_key(|&e| self.edges[e as usize].src);
+        }
+
+        let out_adj = Csr { offsets: out_offsets, items: out_items };
+        let in_adj = Csr { offsets: in_offsets, items: in_items };
+
+        // Scope adjacency: sorted unique neighbor ids.
+        let mut scope_offsets = vec![0u32; n + 1];
+        let mut scope_items = Vec::with_capacity(m);
+        let mut max_degree = 0usize;
+        for v in 0..n {
+            let mut nbrs: Vec<u32> = out_adj
+                .row(v)
+                .iter()
+                .map(|&e| self.edges[e as usize].dst)
+                .chain(in_adj.row(v).iter().map(|&e| self.edges[e as usize].src))
+                .collect();
+            nbrs.sort_unstable();
+            nbrs.dedup();
+            max_degree = max_degree.max(nbrs.len());
+            scope_items.extend_from_slice(&nbrs);
+            scope_offsets[v + 1] = scope_items.len() as u32;
+        }
+        let scope_adj = Csr { offsets: scope_offsets, items: scope_items };
+
+        // Reverse-edge table via lookup in the sorted out-rows.
+        let find = |u: u32, v: u32| -> Option<u32> {
+            let row =
+                &out_adj.items[out_adj.offsets[u as usize] as usize..out_adj.offsets[u as usize + 1] as usize];
+            row.binary_search_by_key(&v, |&e| self.edges[e as usize].dst).ok().map(|i| row[i])
+        };
+        let reverse: Vec<Option<EdgeId>> =
+            self.edges.iter().map(|e| find(e.dst, e.src)).collect();
+
+        DataGraph {
+            vertex_data: self.vertex_data.into_iter().map(DataCell::new).collect(),
+            edge_data: self.edge_data.into_iter().map(DataCell::new).collect(),
+            edges: self.edges,
+            out_adj,
+            in_adj,
+            scope_adj,
+            reverse,
+            max_degree,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::prop_assert;
+
+    #[test]
+    #[should_panic(expected = "self-loops")]
+    fn rejects_self_loop() {
+        let mut b: GraphBuilder<(), ()> = GraphBuilder::new();
+        let v = b.add_vertex(());
+        b.add_edge(v, v, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_dangling_edge() {
+        let mut b: GraphBuilder<(), ()> = GraphBuilder::new();
+        let v = b.add_vertex(());
+        b.add_edge(v, 5, ());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g: crate::graph::DataGraph<(), ()> = GraphBuilder::new().build();
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let mut b: GraphBuilder<u8, ()> = GraphBuilder::new();
+        for i in 0..5 {
+            b.add_vertex(i);
+        }
+        let g = b.build();
+        for v in 0..5 {
+            assert!(g.neighbors(v).is_empty());
+            assert!(g.out_edges(v).is_empty());
+        }
+        assert_eq!(g.max_degree(), 0);
+    }
+
+    #[test]
+    fn prop_csr_roundtrips_random_graphs() {
+        forall(60, |g| {
+            let n = g.usize_in(1..40);
+            let m = g.usize_in(0..120);
+            let mut b: GraphBuilder<usize, (u32, u32)> = GraphBuilder::new();
+            for i in 0..n {
+                b.add_vertex(i);
+            }
+            let mut inserted = Vec::new();
+            for _ in 0..m {
+                let u = g.usize_in(0..n) as u32;
+                let v = g.usize_in(0..n) as u32;
+                if u != v {
+                    b.add_edge(u, v, (u, v));
+                    inserted.push((u, v));
+                }
+            }
+            let graph = b.build();
+            prop_assert!(graph.num_edges() == inserted.len());
+
+            // Every inserted edge is findable and carries its endpoints as data.
+            for &(u, v) in &inserted {
+                let e = graph.find_edge(u, v);
+                prop_assert!(e.is_some(), "edge {u}->{v} lost");
+                let eid = e.unwrap();
+                prop_assert!(graph.edge(eid) == super::Edge { src: u, dst: v });
+            }
+
+            // Scope adjacency is sorted, unique, self-free, and symmetric.
+            for v in 0..n as u32 {
+                let nbrs = graph.neighbors(v);
+                prop_assert!(nbrs.windows(2).all(|w| w[0] < w[1]), "not sorted/unique");
+                prop_assert!(!nbrs.contains(&v), "self in scope");
+                for &u in nbrs {
+                    prop_assert!(
+                        graph.neighbors(u).contains(&v),
+                        "scope asymmetry {u} vs {v}"
+                    );
+                }
+            }
+
+            // in/out edge counts conserve the edge total.
+            let out_total: usize =
+                (0..n as u32).map(|v| graph.out_edges(v).len()).sum();
+            let in_total: usize = (0..n as u32).map(|v| graph.in_edges(v).len()).sum();
+            prop_assert!(out_total == inserted.len() && in_total == inserted.len());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,316 @@
+//! The GraphLab **data graph** (paper §3.1): a directed graph where arbitrary
+//! user data blocks are attached to every vertex and every directed edge.
+//!
+//! The representation is a frozen CSR (compressed sparse row) built once by
+//! [`GraphBuilder`]; GraphLab programs mutate the *data*, never the
+//! *structure*, which is what lets the engine hand out interior-mutable
+//! references guarded by the consistency-model lock table
+//! (see [`crate::consistency`]).
+
+mod builder;
+mod sample;
+
+pub use builder::GraphBuilder;
+pub use sample::induced_subgraph;
+
+use std::cell::UnsafeCell;
+
+/// Vertex identifier (index into the vertex arrays).
+pub type VertexId = u32;
+/// Edge identifier (index into the edge arrays).
+pub type EdgeId = u32;
+
+/// Endpoints of a directed edge `src -> dst`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub src: VertexId,
+    pub dst: VertexId,
+}
+
+/// Interior-mutable data cell. Safety discipline: mutable access only while
+/// the owning vertex's consistency locks are held (enforced by
+/// [`crate::consistency::Scope`]) or under `&mut` / single-thread execution.
+#[derive(Debug)]
+pub(crate) struct DataCell<T>(UnsafeCell<T>);
+
+// SAFETY: cross-thread access is mediated by the consistency lock table; the
+// cell itself is just storage.
+unsafe impl<T: Send> Sync for DataCell<T> {}
+
+impl<T> DataCell<T> {
+    fn new(v: T) -> Self {
+        DataCell(UnsafeCell::new(v))
+    }
+    #[inline]
+    unsafe fn get_ref(&self) -> &T {
+        &*self.0.get()
+    }
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    unsafe fn get_mut_unchecked(&self) -> &mut T {
+        &mut *self.0.get()
+    }
+}
+
+/// Compressed adjacency: `items[offsets[v]..offsets[v+1]]` are v's entries.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct Csr {
+    pub offsets: Vec<u32>,
+    pub items: Vec<u32>,
+}
+
+impl Csr {
+    #[inline]
+    pub fn row(&self, v: usize) -> &[u32] {
+        &self.items[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+}
+
+/// The data graph. `V` is the per-vertex data block, `E` per-directed-edge.
+pub struct DataGraph<V, E> {
+    vertex_data: Vec<DataCell<V>>,
+    edge_data: Vec<DataCell<E>>,
+    edges: Vec<Edge>,
+    /// Out-edge ids per vertex, sorted by destination vertex.
+    out_adj: Csr,
+    /// In-edge ids per vertex, sorted by source vertex.
+    in_adj: Csr,
+    /// Sorted unique neighbor vertex ids (union of in/out, excluding self) —
+    /// the lock-acquisition order for scope locking.
+    scope_adj: Csr,
+    /// Reverse edge id for each edge, if the opposite direction exists.
+    reverse: Vec<Option<EdgeId>>,
+    max_degree: usize,
+}
+
+impl<V, E> DataGraph<V, E> {
+    pub fn num_vertices(&self) -> usize {
+        self.vertex_data.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Endpoints of edge `e`.
+    #[inline]
+    pub fn edge(&self, e: EdgeId) -> Edge {
+        self.edges[e as usize]
+    }
+
+    /// Out-edge ids of `v` (sorted by destination).
+    #[inline]
+    pub fn out_edges(&self, v: VertexId) -> &[EdgeId] {
+        self.out_adj.row(v as usize)
+    }
+
+    /// In-edge ids of `v` (sorted by source).
+    #[inline]
+    pub fn in_edges(&self, v: VertexId) -> &[EdgeId] {
+        self.in_adj.row(v as usize)
+    }
+
+    /// Sorted unique neighbors of `v` (in- or out-, self excluded).
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        self.scope_adj.row(v as usize)
+    }
+
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.neighbors(v).len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.max_degree
+    }
+
+    /// The directed edge `u -> v`, if present (binary search on sorted row).
+    pub fn find_edge(&self, u: VertexId, v: VertexId) -> Option<EdgeId> {
+        let row = self.out_adj.row(u as usize);
+        row.binary_search_by_key(&v, |&e| self.edges[e as usize].dst)
+            .ok()
+            .map(|i| row[i])
+    }
+
+    /// Reverse edge of `e` (`v->u` for `u->v`), if present.
+    #[inline]
+    pub fn reverse_edge(&self, e: EdgeId) -> Option<EdgeId> {
+        self.reverse[e as usize]
+    }
+
+    // ---- data access -----------------------------------------------------
+    //
+    // The `unsafe` accessors require that the caller holds the appropriate
+    // consistency-model locks (or is otherwise externally synchronized, e.g.
+    // the sequential engine / single-threaded setup code).
+
+    /// # Safety
+    /// Caller must hold at least a read lock on `v` (or be externally
+    /// synchronized).
+    #[inline]
+    pub unsafe fn vertex_data_unchecked(&self, v: VertexId) -> &V {
+        self.vertex_data[v as usize].get_ref()
+    }
+
+    /// # Safety
+    /// Caller must hold the write lock on `v` (or be externally synchronized).
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn vertex_data_mut_unchecked(&self, v: VertexId) -> &mut V {
+        self.vertex_data[v as usize].get_mut_unchecked()
+    }
+
+    /// # Safety
+    /// Caller must hold a read lock covering edge `e` (its endpoint vertices).
+    #[inline]
+    pub unsafe fn edge_data_unchecked(&self, e: EdgeId) -> &E {
+        self.edge_data[e as usize].get_ref()
+    }
+
+    /// # Safety
+    /// Caller must hold write coverage of edge `e` per the consistency model.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn edge_data_mut_unchecked(&self, e: EdgeId) -> &mut E {
+        self.edge_data[e as usize].get_mut_unchecked()
+    }
+
+    // Safe accessors for exclusive/setup contexts.
+
+    pub fn vertex_data(&mut self, v: VertexId) -> &mut V {
+        self.vertex_data[v as usize].0.get_mut()
+    }
+
+    pub fn edge_data(&mut self, e: EdgeId) -> &mut E {
+        self.edge_data[e as usize].0.get_mut()
+    }
+
+    /// Read-only snapshot accessor. Safe because it takes `&mut self` — no
+    /// concurrent engine can be running.
+    pub fn vertex_data_ref(&mut self, v: VertexId) -> &V {
+        self.vertex_data[v as usize].0.get_mut()
+    }
+
+    /// Apply `f` to every vertex's data (exclusive access).
+    pub fn for_each_vertex_mut(&mut self, mut f: impl FnMut(VertexId, &mut V)) {
+        for (i, cell) in self.vertex_data.iter_mut().enumerate() {
+            f(i as VertexId, cell.0.get_mut());
+        }
+    }
+
+    /// Apply `f` to every edge's data (exclusive access).
+    pub fn for_each_edge_mut(&mut self, mut f: impl FnMut(EdgeId, Edge, &mut E)) {
+        for (i, cell) in self.edge_data.iter_mut().enumerate() {
+            f(i as EdgeId, self.edges[i], cell.0.get_mut());
+        }
+    }
+
+    /// Fold over vertex data (read-only, exclusive access).
+    pub fn fold_vertices<T>(&mut self, init: T, mut f: impl FnMut(T, VertexId, &V) -> T) -> T {
+        let mut acc = init;
+        for i in 0..self.vertex_data.len() {
+            acc = f(acc, i as VertexId, self.vertex_data[i].0.get_mut());
+        }
+        acc
+    }
+}
+
+impl<V: Clone, E: Clone> DataGraph<V, E> {
+    /// Snapshot all vertex data (exclusive access).
+    pub fn vertex_data_snapshot(&mut self) -> Vec<V> {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.vertex_data(v).clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> DataGraph<i32, f32> {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3 (directed), plus undirected 1 <-> 2
+        let mut b = GraphBuilder::new();
+        for i in 0..4 {
+            b.add_vertex(i);
+        }
+        b.add_edge(0, 1, 0.1);
+        b.add_edge(1, 3, 1.3);
+        b.add_edge(0, 2, 0.2);
+        b.add_edge(2, 3, 2.3);
+        b.add_undirected(1, 2, 1.2, 2.1);
+        b.build()
+    }
+
+    #[test]
+    fn sizes() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 6);
+    }
+
+    #[test]
+    fn adjacency_is_sorted_and_complete() {
+        let g = diamond();
+        let outs: Vec<VertexId> =
+            g.out_edges(0).iter().map(|&e| g.edge(e).dst).collect();
+        assert_eq!(outs, vec![1, 2]);
+        let ins: Vec<VertexId> = g.in_edges(3).iter().map(|&e| g.edge(e).src).collect();
+        assert_eq!(ins, vec![1, 2]);
+    }
+
+    #[test]
+    fn neighbors_union_in_out() {
+        let g = diamond();
+        assert_eq!(g.neighbors(1), &[0, 2, 3]);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.degree(3), 2);
+        assert_eq!(g.max_degree(), 3);
+    }
+
+    #[test]
+    fn find_edge_and_reverse() {
+        let g = diamond();
+        let e12 = g.find_edge(1, 2).unwrap();
+        let e21 = g.find_edge(2, 1).unwrap();
+        assert_eq!(g.reverse_edge(e12), Some(e21));
+        assert_eq!(g.reverse_edge(e21), Some(e12));
+        let e01 = g.find_edge(0, 1).unwrap();
+        assert_eq!(g.reverse_edge(e01), None);
+        assert_eq!(g.find_edge(3, 0), None);
+    }
+
+    #[test]
+    fn data_mutation() {
+        let mut g = diamond();
+        *g.vertex_data(2) = 99;
+        assert_eq!(*g.vertex_data_ref(2), 99);
+        let e = g.find_edge(0, 1).unwrap();
+        *g.edge_data(e) = 7.5;
+        let mut seen = 0.0;
+        g.for_each_edge_mut(|id, _, d| {
+            if id == e {
+                seen = *d;
+            }
+        });
+        assert_eq!(seen, 7.5);
+    }
+
+    #[test]
+    fn fold_vertices_sums() {
+        let mut g = diamond();
+        let total = g.fold_vertices(0, |acc, _, d| acc + *d);
+        assert_eq!(total, 0 + 1 + 2 + 3);
+    }
+
+    #[test]
+    fn unsafe_accessors_match_safe_ones() {
+        let mut g = diamond();
+        *g.vertex_data(1) = 41;
+        unsafe {
+            assert_eq!(*g.vertex_data_unchecked(1), 41);
+            *g.vertex_data_mut_unchecked(1) += 1;
+        }
+        assert_eq!(*g.vertex_data_ref(1), 42);
+    }
+}

@@ -1,0 +1,33 @@
+//! # GraphLab — A New Framework for Parallel Machine Learning
+//!
+//! A from-scratch reproduction of the GraphLab abstraction
+//! (Low, Bickson, Gonzalez, Guestrin, Kyrola, Hellerstein — UAI 2010) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the GraphLab coordination framework: the
+//!   [data graph](graph), the [shared data table & sync mechanism](sdt),
+//!   the three [consistency models](consistency), the
+//!   [scheduler collection](scheduler), the threaded and sequential
+//!   [engines](engine), the [multicore simulator](sim), and the paper's five
+//!   case-study [applications](apps) with synthetic [workloads](datagen) and
+//!   [baselines](baselines).
+//! * **Layer 2/1 (build time, `python/`)** — batched vertex-program kernels
+//!   (grid BP, GaBP, CoEM) written in JAX + Pallas, AOT-lowered to HLO text
+//!   and executed from the [runtime] via PJRT. Python never runs on the
+//!   request path.
+//!
+//! See `examples/quickstart.rs` for a complete program and `DESIGN.md` for
+//! the system inventory and the experiment index.
+
+pub mod apps;
+pub mod baselines;
+pub mod consistency;
+pub mod datagen;
+pub mod engine;
+pub mod graph;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod sdt;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,173 @@
+//! Reporting helpers: speedup tables, TSV emission for figures, and run
+//! summaries shared by the benchmark harness (`benches/`) and the CLI.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A labelled series of (x, y) points — one line in a paper figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: &str) -> Series {
+        Series { label: label.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn from_points(label: &str, pts: impl IntoIterator<Item = (f64, f64)>) -> Series {
+        Series { label: label.to_string(), points: pts.into_iter().collect() }
+    }
+}
+
+/// A figure: several series over a shared x-axis, renderable as an aligned
+/// text table and writable as TSV (one column per series).
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub id: String,
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(id: &str, title: &str, x_label: &str, y_label: &str) -> Figure {
+        Figure {
+            id: id.to_string(),
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, s: Series) -> &mut Self {
+        self.series.push(s);
+        self
+    }
+
+    /// Union of x values across series, sorted.
+    fn xs(&self) -> Vec<f64> {
+        let mut xs: Vec<f64> = self.series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        xs
+    }
+
+    fn lookup(s: &Series, x: f64) -> Option<f64> {
+        s.points.iter().find(|p| (p.0 - x).abs() < 1e-12).map(|p| p.1)
+    }
+
+    /// Render as an aligned text table (printed by the bench harness).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} — {} ==", self.id, self.title);
+        let _ = write!(out, "{:>12}", self.x_label);
+        for s in &self.series {
+            let _ = write!(out, " {:>18}", s.label);
+        }
+        let _ = writeln!(out, "    ({})", self.y_label);
+        for x in self.xs() {
+            let _ = write!(out, "{x:>12.3}");
+            for s in &self.series {
+                match Self::lookup(s, x) {
+                    Some(y) => {
+                        let _ = write!(out, " {y:>18.4}");
+                    }
+                    None => {
+                        let _ = write!(out, " {:>18}", "-");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// Write TSV: header `x<TAB>label1<TAB>label2...`, one row per x.
+    pub fn write_tsv(&self, dir: &Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.tsv", self.id));
+        let mut f = std::fs::File::create(&path)?;
+        write!(f, "{}", self.x_label)?;
+        for s in &self.series {
+            write!(f, "\t{}", s.label)?;
+        }
+        writeln!(f)?;
+        for x in self.xs() {
+            write!(f, "{x}")?;
+            for s in &self.series {
+                match Self::lookup(s, x) {
+                    Some(y) => write!(f, "\t{y}")?,
+                    None => write!(f, "\t")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(path)
+    }
+}
+
+/// Write a grayscale image (f32 in [0,1]) as a binary PGM — used for the
+/// Fig 4d/e and Fig 8b/c image outputs.
+pub fn write_pgm(path: &Path, pixels: &[f32], width: usize, height: usize) -> std::io::Result<()> {
+    assert_eq!(pixels.len(), width * height);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "P5\n{width} {height}\n255")?;
+    let bytes: Vec<u8> =
+        pixels.iter().map(|&p| (p.clamp(0.0, 1.0) * 255.0).round() as u8).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_renders_all_series() {
+        let mut fig = Figure::new("fig_test", "demo", "procs", "speedup");
+        fig.add(Series::from_points("a", [(1.0, 1.0), (2.0, 1.9)]));
+        fig.add(Series::from_points("b", [(1.0, 1.0), (4.0, 3.1)]));
+        let text = fig.render();
+        assert!(text.contains("fig_test"));
+        assert!(text.contains('a') && text.contains('b'));
+        assert!(text.contains("1.9000"));
+        // x=4 missing from series a -> dash
+        assert!(text.lines().last().unwrap().contains('-'));
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let dir = std::env::temp_dir().join("graphlab_metrics_test");
+        let mut fig = Figure::new("fig_tsv", "demo", "x", "y");
+        fig.add(Series::from_points("s", [(1.0, 2.0), (2.0, 4.0)]));
+        let path = fig.write_tsv(&dir).unwrap();
+        let content = std::fs::read_to_string(path).unwrap();
+        let lines: Vec<&str> = content.lines().collect();
+        assert_eq!(lines[0], "x\ts");
+        assert_eq!(lines[1], "1\t2");
+        assert_eq!(lines[2], "2\t4");
+    }
+
+    #[test]
+    fn pgm_header_and_size() {
+        let dir = std::env::temp_dir().join("graphlab_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("img.pgm");
+        write_pgm(&path, &[0.0, 0.5, 1.0, 0.25], 2, 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(bytes.len(), "P5\n2 2\n255\n".len() + 4);
+    }
+}

@@ -1,0 +1,178 @@
+//! Accelerated grid-BP driver: the Layer-3 coordinator drains whole Jacobi
+//! sweeps of the grid MRF through the AOT-compiled batched message kernel
+//! (`bp_batch_b{B}_k{K}`, Layer 1/2).
+//!
+//! This is the TPU-era restatement of the paper's hot loop (DESIGN.md
+//! §Hardware-Adaptation): the coordinator still owns scheduling/termination
+//! (sweep-to-convergence with residual tracking — the synchronous scheduler
+//! semantics of §3.4), while the per-edge message math runs as dense
+//! `[B, K] × [K, K]` batches. Edges are grouped by axis so each batch shares
+//! one Laplace ψ; partial batches are padded with uniform rows.
+
+use super::ArtifactRegistry;
+use crate::apps::mrf::{normalize, EdgePotential, Mrf};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Batched grid-BP executor (owns its PJRT client + compiled kernel).
+pub struct AccelGridBp {
+    registry: ArtifactRegistry,
+    artifact: String,
+    batch: usize,
+    k: usize,
+}
+
+impl AccelGridBp {
+    /// Open over `dir`, selecting the `bp_batch_b{batch}_k{k}` artifact.
+    pub fn open(dir: &Path, batch: usize, k: usize) -> Result<AccelGridBp> {
+        let mut registry = ArtifactRegistry::open(dir)?;
+        let artifact = format!("bp_batch_b{batch}_k{k}");
+        registry.load(&artifact)?; // compile eagerly; fails fast if missing
+        Ok(AccelGridBp { registry, artifact, batch, k })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// One synchronous (Jacobi) sweep over all directed edges of `mrf`.
+    /// Returns the max message residual of the sweep.
+    pub fn sweep(&mut self, mrf: &mut Mrf, lambda: [f64; 3]) -> Result<f32> {
+        let k = self.k;
+        anyhow::ensure!(mrf.arity == k, "arity {} != kernel K {}", mrf.arity, k);
+        let m = mrf.graph.num_edges();
+
+        // Gather: cavity rows + old messages, grouped by axis (shared ψ).
+        // Beliefs are computed from the *pre-sweep* messages (Jacobi).
+        let n = mrf.graph.num_vertices();
+        let mut beliefs = vec![0.0f32; n * k];
+        for v in 0..n as u32 {
+            let mut b = mrf.graph.vertex_data(v).potential.clone();
+            for &e in mrf.graph.in_edges(v).to_vec().iter() {
+                let msg = &mrf.graph.edge_data(e).message;
+                for (bi, mi) in b.iter_mut().zip(msg) {
+                    *bi *= *mi;
+                }
+            }
+            normalize(&mut b);
+            beliefs[v as usize * k..(v as usize + 1) * k].copy_from_slice(&b);
+        }
+
+        let mut by_axis: [Vec<u32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for e in 0..m as u32 {
+            match mrf.graph.edge_data(e).potential {
+                EdgePotential::Laplace { axis } => by_axis[axis as usize].push(e),
+                EdgePotential::Table(_) => {
+                    anyhow::bail!("accelerated path supports Laplace grids only")
+                }
+            }
+        }
+
+        let mut max_residual = 0.0f32;
+        for (axis, edges) in by_axis.iter().enumerate() {
+            if edges.is_empty() {
+                continue;
+            }
+            // ψ for this axis from λ (symmetric Laplace).
+            let mut psi = vec![0.0f32; k * k];
+            for i in 0..k {
+                for j in 0..k {
+                    psi[i * k + j] =
+                        (-(lambda[axis]) * (i as f64 - j as f64).abs()).exp() as f32;
+                }
+            }
+            for chunk in edges.chunks(self.batch) {
+                let rows = chunk.len();
+                let uniform = 1.0f32 / k as f32;
+                let mut cavity = vec![uniform; self.batch * k];
+                let mut old = vec![uniform; self.batch * k];
+                for (r, &e) in chunk.iter().enumerate() {
+                    let edge = mrf.graph.edge(e);
+                    let src = edge.src as usize;
+                    let mut cav: Vec<f32> =
+                        beliefs[src * k..(src + 1) * k].to_vec();
+                    if let Some(rev) = mrf.graph.reverse_edge(e) {
+                        let m_in = mrf.graph.edge_data(rev).message.clone();
+                        for (c, mi) in cav.iter_mut().zip(&m_in) {
+                            *c = if *mi > 1e-30 { *c / *mi } else { 0.0 };
+                        }
+                    }
+                    normalize(&mut cav);
+                    cavity[r * k..(r + 1) * k].copy_from_slice(&cav);
+                    old[r * k..(r + 1) * k]
+                        .copy_from_slice(&mrf.graph.edge_data(e).message);
+                }
+                let exe = self.registry.load(&self.artifact)?;
+                let outs = exe.run_f32(&[&cavity, &psi, &old])?;
+                let (msgs, residuals) = (&outs[0], &outs[1]);
+                for (r, &e) in chunk.iter().enumerate() {
+                    mrf.graph
+                        .edge_data(e)
+                        .message
+                        .copy_from_slice(&msgs[r * k..(r + 1) * k]);
+                }
+                for &res in residuals.iter().take(rows) {
+                    max_residual = max_residual.max(res);
+                }
+            }
+        }
+
+        // Refresh beliefs from the new messages.
+        for v in 0..n as u32 {
+            let mut b = mrf.graph.vertex_data(v).potential.clone();
+            for &e in mrf.graph.in_edges(v).to_vec().iter() {
+                let msg = &mrf.graph.edge_data(e).message;
+                for (bi, mi) in b.iter_mut().zip(msg) {
+                    *bi *= *mi;
+                }
+            }
+            normalize(&mut b);
+            mrf.graph.vertex_data(v).belief = b;
+        }
+        Ok(max_residual)
+    }
+
+    /// Sweep until the max residual drops below `tol` (or `max_sweeps`).
+    /// Returns (sweeps run, final residual).
+    pub fn run(
+        &mut self,
+        mrf: &mut Mrf,
+        lambda: [f64; 3],
+        max_sweeps: usize,
+        tol: f32,
+    ) -> Result<(usize, f32)> {
+        let mut last = f32::INFINITY;
+        for s in 1..=max_sweeps {
+            last = self.sweep(mrf, lambda)?;
+            if last < tol {
+                return Ok((s, last));
+            }
+        }
+        Ok((max_sweeps, last))
+    }
+}
+
+/// Convenience: does the artifact set include the (batch, k) BP kernel?
+pub fn bp_artifact_available(dir: &Path, batch: usize, k: usize) -> bool {
+    super::read_manifest(dir)
+        .map(|m| m.iter().any(|a| a.name == format!("bp_batch_b{batch}_k{k}")))
+        .unwrap_or(false)
+}
+
+impl AccelGridBp {
+    /// Expose the registry for callers that also run other artifacts.
+    pub fn registry_mut(&mut self) -> &mut ArtifactRegistry {
+        &mut self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.registry.platform()
+    }
+
+    pub fn artifact_error(dir: &Path, batch: usize, k: usize) -> anyhow::Error {
+        anyhow!(
+            "artifact bp_batch_b{batch}_k{k} not found under {} — run `make artifacts`",
+            dir.display()
+        )
+    }
+}

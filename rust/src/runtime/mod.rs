@@ -1,0 +1,238 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` (Layer 2/1) and executes them from the rust
+//! coordinator — python never runs on the request path.
+//!
+//! Pipeline per artifact (see /opt/xla-example and DESIGN.md):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos).
+
+mod accel_bp;
+
+pub use accel_bp::{bp_artifact_available, AccelGridBp};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape of one artifact argument: `f32:256x5` in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgShape {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl ArgShape {
+    fn parse(tok: &str) -> Result<ArgShape> {
+        let (dtype, dims) =
+            tok.split_once(':').ok_or_else(|| anyhow!("bad shape token {tok:?}"))?;
+        let dims = if dims.is_empty() {
+            Vec::new()
+        } else {
+            dims.split('x')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(ArgShape { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One entry of `artifacts/manifest.tsv`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<ArgShape>,
+    pub outputs: Vec<ArgShape>,
+}
+
+/// Parse the TSV manifest (name, file, in:..., out:...).
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 4 {
+            bail!("manifest line {}: expected 4 columns, got {}", lineno + 1, cols.len());
+        }
+        let parse_specs = |col: &str, prefix: &str| -> Result<Vec<ArgShape>> {
+            let body = col
+                .strip_prefix(prefix)
+                .ok_or_else(|| anyhow!("manifest line {}: missing {prefix}", lineno + 1))?;
+            body.split(';').filter(|t| !t.is_empty()).map(ArgShape::parse).collect()
+        };
+        out.push(ArtifactMeta {
+            name: cols[0].to_string(),
+            path: dir.join(cols[1]),
+            inputs: parse_specs(cols[2], "in:")?,
+            outputs: parse_specs(cols[3], "out:")?,
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on f32 buffers. `inputs[i]` must have `meta.inputs[i]`
+    /// elements; returns one `Vec<f32>` per declared output.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.meta.inputs) {
+            if buf.len() != spec.elements() {
+                bail!(
+                    "{}: input size {} != shape {:?}",
+                    self.meta.name,
+                    buf.len(),
+                    spec.dims
+                );
+            }
+            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Loads and caches compiled artifacts against one PJRT client.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    metas: HashMap<String, ArtifactMeta>,
+    compiled: HashMap<String, Executable>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry over `dir` (usually `artifacts/`).
+    pub fn open(dir: &Path) -> Result<ArtifactRegistry> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let metas = read_manifest(dir)?
+            .into_iter()
+            .map(|m| (m.name.clone(), m))
+            .collect();
+        Ok(ArtifactRegistry { client, metas, compiled: HashMap::new() })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.metas.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the executable for `name`.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.compiled.contains_key(name) {
+            let meta = self
+                .metas
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name:?}; have {:?}", self.names()))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", meta.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), Executable { meta, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+}
+
+/// Default artifacts directory: `$GRAPHLAB_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("GRAPHLAB_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_shape_parsing() {
+        let s = ArgShape::parse("f32:256x5").unwrap();
+        assert_eq!(s.dtype, "f32");
+        assert_eq!(s.dims, vec![256, 5]);
+        assert_eq!(s.elements(), 1280);
+        let scalar = ArgShape::parse("f32:").unwrap();
+        assert_eq!(scalar.elements(), 1);
+        assert!(ArgShape::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn manifest_parsing_roundtrip() {
+        let dir = std::env::temp_dir().join("graphlab_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "bp\tbp.hlo.txt\tin:f32:8x2;f32:2x2\tout:f32:8x2;f32:8\n",
+        )
+        .unwrap();
+        let metas = read_manifest(&dir).unwrap();
+        assert_eq!(metas.len(), 1);
+        assert_eq!(metas[0].name, "bp");
+        assert_eq!(metas[0].inputs.len(), 2);
+        assert_eq!(metas[0].outputs[1].dims, vec![8]);
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = read_manifest(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    // Tests that require built artifacts live in rust/tests/runtime_pjrt.rs
+    // (integration tests) so `cargo test --lib` stays green before
+    // `make artifacts`.
+}

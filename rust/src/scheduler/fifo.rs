@@ -1,0 +1,269 @@
+//! FIFO-class task schedulers (paper §3.4): the strict single-queue FIFO and
+//! its relaxed variants — multi-queue (work stealing) and partitioned
+//! (vertex-affine) — which trade ordering strictness for reduced contention.
+
+use super::{PendingFlags, Scheduler, Task};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Strict single-queue FIFO. Tasks are de-duplicated per (vertex, func):
+/// re-adding a pending task is a no-op.
+pub struct FifoScheduler {
+    queue: Mutex<VecDeque<Task>>,
+    pending: PendingFlags,
+    len: AtomicUsize,
+}
+
+impl FifoScheduler {
+    pub fn new(num_vertices: usize) -> FifoScheduler {
+        FifoScheduler {
+            queue: Mutex::new(VecDeque::new()),
+            pending: PendingFlags::new(num_vertices, 4),
+            len: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn add_task(&self, t: Task) {
+        if self.pending.try_mark(&t) {
+            self.queue.lock().unwrap().push_back(t);
+            self.len.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn next_task(&self, _worker: usize) -> Option<Task> {
+        let t = self.queue.lock().unwrap().pop_front();
+        if let Some(ref task) = t {
+            self.pending.unmark(task);
+            self.len.fetch_sub(1, Ordering::Relaxed);
+        }
+        t
+    }
+
+    fn is_done(&self) -> bool {
+        self.len.load(Ordering::Relaxed) == 0
+    }
+
+    fn approx_len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+}
+
+/// Relaxed-order FIFO over `2 × workers` sharded queues with work stealing.
+/// Insertions round-robin across shards; a worker pops from its own shards
+/// first, then steals. This is the scheduler CoEM scales with (Fig 6a/b).
+pub struct MultiQueueFifo {
+    shards: Vec<Mutex<VecDeque<Task>>>,
+    pending: PendingFlags,
+    len: AtomicUsize,
+    rr: AtomicUsize,
+}
+
+impl MultiQueueFifo {
+    pub fn new(num_vertices: usize, workers: usize) -> MultiQueueFifo {
+        let nshards = (workers.max(1)) * 2;
+        MultiQueueFifo {
+            shards: (0..nshards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: PendingFlags::new(num_vertices, 4),
+            len: AtomicUsize::new(0),
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Scheduler for MultiQueueFifo {
+    fn name(&self) -> &'static str {
+        "multiqueue"
+    }
+
+    fn add_task(&self, t: Task) {
+        if self.pending.try_mark(&t) {
+            let shard = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+            self.shards[shard].lock().unwrap().push_back(t);
+            self.len.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn next_task(&self, worker: usize) -> Option<Task> {
+        let n = self.shards.len();
+        // own shards first (2 per worker), then steal in ring order
+        let home = (worker * 2) % n;
+        for i in 0..n {
+            let shard = (home + i) % n;
+            if let Some(t) = self.shards[shard].lock().unwrap().pop_front() {
+                self.pending.unmark(&t);
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn is_done(&self) -> bool {
+        self.len.load(Ordering::Relaxed) == 0
+    }
+
+    fn approx_len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+}
+
+/// Partitioned FIFO: vertex `v` is owned by partition `v % workers`; worker
+/// `w` only executes its own partition (no stealing). Lowest contention and
+/// best locality, at the cost of load imbalance on skewed graphs.
+pub struct PartitionedScheduler {
+    parts: Vec<Mutex<VecDeque<Task>>>,
+    pending: PendingFlags,
+    len: AtomicUsize,
+}
+
+impl PartitionedScheduler {
+    pub fn new(num_vertices: usize, workers: usize) -> PartitionedScheduler {
+        PartitionedScheduler {
+            parts: (0..workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: PendingFlags::new(num_vertices, 4),
+            len: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    fn partition_of(&self, v: u32) -> usize {
+        v as usize % self.parts.len()
+    }
+}
+
+impl Scheduler for PartitionedScheduler {
+    fn name(&self) -> &'static str {
+        "partitioned"
+    }
+
+    fn add_task(&self, t: Task) {
+        if self.pending.try_mark(&t) {
+            let p = self.partition_of(t.vertex);
+            self.parts[p].lock().unwrap().push_back(t);
+            self.len.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn next_task(&self, worker: usize) -> Option<Task> {
+        let p = worker % self.parts.len();
+        let t = self.parts[p].lock().unwrap().pop_front();
+        if let Some(ref task) = t {
+            self.pending.unmark(task);
+            self.len.fetch_sub(1, Ordering::Relaxed);
+        }
+        t
+    }
+
+    fn is_done(&self) -> bool {
+        self.len.load(Ordering::Relaxed) == 0
+    }
+
+    fn approx_len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_preserves_order_and_dedups() {
+        let s = FifoScheduler::new(10);
+        s.add_task(Task::new(3));
+        s.add_task(Task::new(1));
+        s.add_task(Task::new(3)); // duplicate — dropped
+        assert_eq!(s.approx_len(), 2);
+        assert_eq!(s.next_task(0).unwrap().vertex, 3);
+        // after pop, re-adding is allowed
+        s.add_task(Task::new(3));
+        assert_eq!(s.next_task(0).unwrap().vertex, 1);
+        assert_eq!(s.next_task(0).unwrap().vertex, 3);
+        assert!(s.next_task(0).is_none());
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn multiqueue_delivers_everything() {
+        let s = MultiQueueFifo::new(100, 4);
+        for v in 0..100 {
+            s.add_task(Task::new(v));
+        }
+        let mut seen = HashSet::new();
+        for w in 0..4 {
+            while let Some(t) = s.next_task(w) {
+                assert!(seen.insert(t.vertex));
+                if seen.len() % 7 == 0 {
+                    break; // rotate workers
+                }
+            }
+        }
+        // drain remainder
+        while let Some(t) = s.next_task(0) {
+            assert!(seen.insert(t.vertex));
+        }
+        assert_eq!(seen.len(), 100);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn partitioned_respects_ownership() {
+        let s = PartitionedScheduler::new(64, 4);
+        for v in 0..64 {
+            s.add_task(Task::new(v));
+        }
+        for w in 0..4 {
+            while let Some(t) = s.next_task(w) {
+                assert_eq!(t.vertex as usize % 4, w, "vertex {} on worker {w}", t.vertex);
+            }
+        }
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_lose_nothing() {
+        let s = Arc::new(MultiQueueFifo::new(4000, 4));
+        let counted = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for w in 0..2 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for v in 0..2000u32 {
+                    s.add_task(Task::new(w as u32 * 2000 + v));
+                }
+            }));
+        }
+        for w in 0..2 {
+            let s = Arc::clone(&s);
+            let counted = Arc::clone(&counted);
+            handles.push(std::thread::spawn(move || {
+                let mut idle = 0;
+                while idle < 1000 {
+                    match s.next_task(w) {
+                        Some(_) => {
+                            counted.fetch_add(1, Ordering::Relaxed);
+                            idle = 0;
+                        }
+                        None => {
+                            idle += 1;
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counted.load(Ordering::Relaxed), 4000);
+    }
+}

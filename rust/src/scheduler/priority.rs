@@ -1,0 +1,320 @@
+//! Prioritized task schedulers (paper §3.4): the strict global priority
+//! queue and the relaxed bucketed approximation. Both support *priority
+//! promotion*: re-adding a pending task with a higher priority raises it —
+//! the mechanism behind Residual BP (Elidan et al. 2006).
+
+use super::{Scheduler, Task};
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy)]
+struct HeapEntry {
+    priority: f64,
+    seq: u64,
+    task: Task,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // max-heap on priority; FIFO (lower seq first) among equals
+        self.priority
+            .partial_cmp(&other.priority)
+            .unwrap_or(CmpOrdering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Default)]
+struct PriorityState {
+    heap: BinaryHeap<HeapEntry>,
+    /// Current live priority per (vertex, func-0) task; NAN = not pending.
+    /// Lazy deletion: heap entries whose priority no longer matches are stale.
+    live: Vec<f64>,
+    seq: u64,
+}
+
+/// Strict priority scheduler: one global heap under a mutex ("at the cost of
+/// increased overhead" — the paper's words; Fig 4a measures exactly that).
+pub struct PriorityScheduler {
+    state: Mutex<PriorityState>,
+    len: AtomicUsize,
+    num_vertices: usize,
+}
+
+impl PriorityScheduler {
+    pub fn new(num_vertices: usize) -> PriorityScheduler {
+        PriorityScheduler {
+            state: Mutex::new(PriorityState {
+                heap: BinaryHeap::new(),
+                live: vec![f64::NAN; num_vertices],
+                seq: 0,
+            }),
+            len: AtomicUsize::new(0),
+            num_vertices,
+        }
+    }
+}
+
+impl Scheduler for PriorityScheduler {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn add_task(&self, t: Task) {
+        debug_assert!((t.vertex as usize) < self.num_vertices);
+        let mut s = self.state.lock().unwrap();
+        let cur = s.live[t.vertex as usize];
+        if cur.is_nan() {
+            // newly pending
+            s.live[t.vertex as usize] = t.priority;
+            let seq = s.seq;
+            s.seq += 1;
+            s.heap.push(HeapEntry { priority: t.priority, seq, task: t });
+            self.len.fetch_add(1, Ordering::Relaxed);
+        } else if t.priority > cur {
+            // promote: push a higher entry; the lower one becomes stale
+            s.live[t.vertex as usize] = t.priority;
+            let seq = s.seq;
+            s.seq += 1;
+            s.heap.push(HeapEntry { priority: t.priority, seq, task: t });
+        }
+    }
+
+    fn next_task(&self, _worker: usize) -> Option<Task> {
+        let mut s = self.state.lock().unwrap();
+        while let Some(entry) = s.heap.pop() {
+            let live = s.live[entry.task.vertex as usize];
+            if !live.is_nan() && live == entry.priority {
+                s.live[entry.task.vertex as usize] = f64::NAN;
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                let mut t = entry.task;
+                t.priority = entry.priority;
+                return Some(t);
+            }
+            // stale promotion leftover — skip
+        }
+        None
+    }
+
+    fn is_done(&self) -> bool {
+        self.len.load(Ordering::Relaxed) == 0
+    }
+
+    fn approx_len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+}
+
+/// Relaxed ("approximate") priority scheduler: priorities are quantized into
+/// log-spaced buckets; each bucket is a sharded FIFO. Pops scan from the
+/// hottest bucket down. Ordering is approximate; contention is per-bucket
+/// per-shard instead of one global heap lock.
+pub struct ApproxPriorityScheduler {
+    /// buckets[b].shards[s]
+    buckets: Vec<Vec<Mutex<std::collections::VecDeque<Task>>>>,
+    /// live priority per vertex (NAN = not pending), bucket index per vertex
+    live: Mutex<Vec<f64>>,
+    len: AtomicUsize,
+    nshards: usize,
+    rr: AtomicUsize,
+}
+
+const NUM_BUCKETS: usize = 24;
+/// Bucket 0 holds the highest priorities. Priorities are assumed positive
+/// residual-like magnitudes; bucket = clamp(-log2(p / PMAX)).
+const PMAX: f64 = 16.0;
+
+fn bucket_of(p: f64) -> usize {
+    if !(p > 0.0) {
+        return NUM_BUCKETS - 1;
+    }
+    let b = -(p / PMAX).log2();
+    b.max(0.0).min((NUM_BUCKETS - 1) as f64) as usize
+}
+
+impl ApproxPriorityScheduler {
+    pub fn new(num_vertices: usize, workers: usize) -> ApproxPriorityScheduler {
+        let nshards = workers.max(1);
+        ApproxPriorityScheduler {
+            buckets: (0..NUM_BUCKETS)
+                .map(|_| (0..nshards).map(|_| Mutex::new(Default::default())).collect())
+                .collect(),
+            live: Mutex::new(vec![f64::NAN; num_vertices]),
+            len: AtomicUsize::new(0),
+            nshards,
+            rr: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Scheduler for ApproxPriorityScheduler {
+    fn name(&self) -> &'static str {
+        "approx-priority"
+    }
+
+    fn add_task(&self, t: Task) {
+        let mut live = self.live.lock().unwrap();
+        let cur = live[t.vertex as usize];
+        if cur.is_nan() {
+            live[t.vertex as usize] = t.priority;
+            drop(live);
+            let b = bucket_of(t.priority);
+            let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.nshards;
+            self.buckets[b][s].lock().unwrap().push_back(t);
+            self.len.fetch_add(1, Ordering::Relaxed);
+        } else if t.priority > cur {
+            // promotion: record the higher priority; if it crosses into a
+            // hotter bucket, insert a forwarding entry (stale one is skipped
+            // on pop via the live check).
+            live[t.vertex as usize] = t.priority;
+            let (b_old, b_new) = (bucket_of(cur), bucket_of(t.priority));
+            drop(live);
+            if b_new < b_old {
+                let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.nshards;
+                self.buckets[b_new][s].lock().unwrap().push_back(t);
+            }
+        }
+    }
+
+    fn next_task(&self, worker: usize) -> Option<Task> {
+        for b in 0..NUM_BUCKETS {
+            for i in 0..self.nshards {
+                let s = (worker + i) % self.nshards;
+                let popped = self.buckets[b][s].lock().unwrap().pop_front();
+                if let Some(t) = popped {
+                    let mut live = self.live.lock().unwrap();
+                    let cur = live[t.vertex as usize];
+                    if cur.is_nan() {
+                        continue; // stale duplicate of an already-popped task
+                    }
+                    if bucket_of(cur) < b {
+                        continue; // promoted entry lives in a hotter bucket
+                    }
+                    live[t.vertex as usize] = f64::NAN;
+                    drop(live);
+                    self.len.fetch_sub(1, Ordering::Relaxed);
+                    let mut out = t;
+                    out.priority = cur;
+                    return Some(out);
+                }
+            }
+        }
+        None
+    }
+
+    fn is_done(&self) -> bool {
+        self.len.load(Ordering::Relaxed) == 0
+    }
+
+    fn approx_len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strict_priority_order() {
+        let s = PriorityScheduler::new(10);
+        s.add_task(Task::with_priority(1, 1.0));
+        s.add_task(Task::with_priority(2, 5.0));
+        s.add_task(Task::with_priority(3, 3.0));
+        assert_eq!(s.next_task(0).unwrap().vertex, 2);
+        assert_eq!(s.next_task(0).unwrap().vertex, 3);
+        assert_eq!(s.next_task(0).unwrap().vertex, 1);
+        assert!(s.next_task(0).is_none());
+    }
+
+    #[test]
+    fn fifo_among_equal_priorities() {
+        let s = PriorityScheduler::new(10);
+        s.add_task(Task::with_priority(4, 1.0));
+        s.add_task(Task::with_priority(7, 1.0));
+        assert_eq!(s.next_task(0).unwrap().vertex, 4);
+        assert_eq!(s.next_task(0).unwrap().vertex, 7);
+    }
+
+    #[test]
+    fn promotion_raises_pending_task() {
+        let s = PriorityScheduler::new(10);
+        s.add_task(Task::with_priority(1, 1.0));
+        s.add_task(Task::with_priority(2, 2.0));
+        s.add_task(Task::with_priority(1, 9.0)); // promote vertex 1 above 2
+        assert_eq!(s.next_task(0).unwrap().vertex, 1);
+        assert_eq!(s.next_task(0).unwrap().vertex, 2);
+        assert!(s.next_task(0).is_none(), "stale entry must not resurface");
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn lower_priority_readd_is_ignored() {
+        let s = PriorityScheduler::new(10);
+        s.add_task(Task::with_priority(1, 5.0));
+        s.add_task(Task::with_priority(1, 0.5));
+        assert_eq!(s.approx_len(), 1);
+        let t = s.next_task(0).unwrap();
+        assert_eq!(t.priority, 5.0);
+    }
+
+    #[test]
+    fn bucket_mapping_monotone() {
+        assert!(bucket_of(16.0) <= bucket_of(1.0));
+        assert!(bucket_of(1.0) <= bucket_of(1e-3));
+        assert_eq!(bucket_of(0.0), NUM_BUCKETS - 1);
+        assert_eq!(bucket_of(f64::NAN.abs().min(0.0)), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn approx_priority_prefers_hot_tasks() {
+        let s = ApproxPriorityScheduler::new(100, 2);
+        for v in 0..50u32 {
+            s.add_task(Task::with_priority(v, 1e-4));
+        }
+        s.add_task(Task::with_priority(99, 8.0));
+        assert_eq!(s.next_task(0).unwrap().vertex, 99, "hot task first");
+    }
+
+    #[test]
+    fn approx_priority_promotion() {
+        let s = ApproxPriorityScheduler::new(10, 1);
+        s.add_task(Task::with_priority(1, 1e-4));
+        s.add_task(Task::with_priority(2, 1e-4));
+        s.add_task(Task::with_priority(2, 8.0)); // promote 2 to hot bucket
+        assert_eq!(s.next_task(0).unwrap().vertex, 2);
+        assert_eq!(s.next_task(0).unwrap().vertex, 1);
+        assert!(s.next_task(0).is_none());
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn approx_drains_exactly_once_each() {
+        let s = ApproxPriorityScheduler::new(200, 3);
+        for v in 0..200u32 {
+            s.add_task(Task::with_priority(v, (v as f64 + 1.0) / 10.0));
+            // duplicate re-add with lower priority: ignored
+            s.add_task(Task::with_priority(v, 1e-6));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for w in 0..3 {
+            while let Some(t) = s.next_task(w) {
+                assert!(seen.insert(t.vertex), "vertex {} delivered twice", t.vertex);
+            }
+        }
+        assert_eq!(seen.len(), 200);
+    }
+}

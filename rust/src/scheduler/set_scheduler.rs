@@ -1,0 +1,495 @@
+//! The **set scheduler** (paper §3.4.1, Fig. 2).
+//!
+//! The user specifies a sequence of (vertex set, update function) pairs
+//! `((S_1, f_1), ..., (S_k, f_k))` with the semantics
+//!
+//! ```text
+//! for i = 1..k: execute f_i on all v in S_i in parallel; barrier
+//! ```
+//!
+//! Executing literally (the **barrier** mode) leaves processors idle at each
+//! set boundary. The **planned** mode rewrites the sequence into an execution
+//! plan: a DAG whose edges are the *consistency-model data dependencies*
+//! between tasks in consecutive sets — a task only waits for the earlier
+//! tasks whose scopes overlap its own footprint (Fig. 2: `v4` runs right
+//! after `v5` without waiting for `v1, v2`). The DAG's partial order is then
+//! executed greedily (Graham 1966 list scheduling): any task whose
+//! dependencies are satisfied may start on any free processor.
+//!
+//! This is the machinery behind the chromatic parallel Gibbs sampler
+//! (§4.2, Fig. 5a/c): sets = color classes, plan = cross-color dependencies.
+
+use super::{FuncId, Scheduler, Task};
+use crate::consistency::ConsistencyModel;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A compiled execution plan (the DAG of Fig. 2).
+pub struct ExecutionPlan {
+    /// Plan tasks in sequence order: (vertex, func, set index).
+    pub tasks: Vec<(u32, FuncId, u32)>,
+    /// Dependency edges, CSR over plan-task indices: children of task i.
+    child_offsets: Vec<u32>,
+    child_items: Vec<u32>,
+    /// In-degree of each plan task.
+    pub indegree: Vec<u32>,
+    /// Total dependency edges.
+    pub num_edges: usize,
+}
+
+impl ExecutionPlan {
+    /// Compile the plan. `sets` is the (S_i, f_i) sequence; `neighbors(v)`
+    /// yields each vertex's (sorted) neighbor list; `model` determines each
+    /// task's read/write sets over the *entities* of the data graph
+    /// (vertex data blocks and undirected edge-data slots):
+    ///
+    /// * Vertex model — R = W = `{v}`.
+    /// * Edge model — W = `{v} ∪ adjacent edge slots`, R = W ∪ `N(v)`
+    ///   (Prop. 3.1 cond. 2: neighbors are read, not written).
+    /// * Full model — R = W = `{v} ∪ N(v) ∪ adjacent edge slots`.
+    ///
+    /// A dependency edge `A -> B` (A in an earlier set) is added iff
+    /// `W(A) ∩ R(B)`, `R(A) ∩ W(B)`, or `W(A) ∩ W(B)` is non-empty, pruned
+    /// by transitivity through per-entity writer chains. This reproduces
+    /// Fig. 2 exactly: a set-2 task waits only for the set-1 tasks whose
+    /// state it actually observes.
+    pub fn compile<'a>(
+        sets: &[(Vec<u32>, FuncId)],
+        num_vertices: usize,
+        neighbors: impl Fn(u32) -> &'a [u32],
+        model: ConsistencyModel,
+    ) -> ExecutionPlan {
+        let total: usize = sets.iter().map(|(s, _)| s.len()).sum();
+        let mut tasks = Vec::with_capacity(total);
+        let mut deps: Vec<Vec<u32>> = Vec::with_capacity(total);
+
+        // Entity table: vertices are 0..n; undirected edge slots are interned
+        // on demand as n, n+1, ...
+        let mut edge_entities: std::collections::HashMap<(u32, u32), u32> =
+            std::collections::HashMap::new();
+        let mut num_entities = num_vertices as u32;
+        let mut entity_of_edge = |u: u32, v: u32| -> u32 {
+            let key = (u.min(v), u.max(v));
+            *edge_entities.entry(key).or_insert_with(|| {
+                let id = num_entities;
+                num_entities += 1;
+                id
+            })
+        };
+
+        // R/W sets of a task at `v` under `model` (entity ids).
+        let rw_sets = |v: u32,
+                       entity_of_edge: &mut dyn FnMut(u32, u32) -> u32|
+         -> (Vec<u32>, Vec<u32>) {
+            match model {
+                ConsistencyModel::Vertex => (vec![v], vec![v]),
+                ConsistencyModel::Edge => {
+                    let mut w = vec![v];
+                    let mut r = vec![v];
+                    for &u in neighbors(v) {
+                        let e = entity_of_edge(v, u);
+                        w.push(e);
+                        r.push(e);
+                        r.push(u);
+                    }
+                    (r, w)
+                }
+                ConsistencyModel::Full => {
+                    let mut w = vec![v];
+                    for &u in neighbors(v) {
+                        w.push(entity_of_edge(v, u));
+                        w.push(u);
+                    }
+                    (w.clone(), w)
+                }
+            }
+        };
+
+        // Per entity: writers in the most recent set that wrote it, and
+        // readers accumulated since that write (possibly spanning sets —
+        // read chains are not transitive, so all of them gate a new write).
+        let mut writers_last: Vec<Vec<u32>> = Vec::new();
+        let mut readers_since: Vec<Vec<u32>> = Vec::new();
+        let ensure = |tables: &mut Vec<Vec<u32>>, id: u32| {
+            if tables.len() <= id as usize {
+                tables.resize(id as usize + 1, Vec::new());
+            }
+        };
+
+        for (set_idx, (set, func)) in sets.iter().enumerate() {
+            // accesses made by this set (committed at the set boundary)
+            let mut cur_writes: Vec<(u32, u32)> = Vec::new(); // (entity, task)
+            let mut cur_reads: Vec<(u32, u32)> = Vec::new();
+            for &v in set {
+                let ti = tasks.len() as u32;
+                tasks.push((v, *func, set_idx as u32));
+                let (r_set, w_set) = rw_sets(v, &mut entity_of_edge);
+                let mut my_deps: Vec<u32> = Vec::new();
+                for &e in &r_set {
+                    ensure(&mut writers_last, e);
+                    my_deps.extend_from_slice(&writers_last[e as usize]); // RAW
+                }
+                for &e in &w_set {
+                    ensure(&mut writers_last, e);
+                    ensure(&mut readers_since, e);
+                    my_deps.extend_from_slice(&writers_last[e as usize]); // WAW
+                    my_deps.extend_from_slice(&readers_since[e as usize]); // WAR
+                }
+                my_deps.sort_unstable();
+                my_deps.dedup();
+                deps.push(my_deps);
+                for &e in &w_set {
+                    cur_writes.push((e, ti));
+                }
+                for &e in &r_set {
+                    cur_reads.push((e, ti));
+                }
+            }
+            // Commit this set's accesses: a write resets the entity's reader
+            // list and replaces its writer set; reads accumulate.
+            let mut written_now = std::collections::HashSet::new();
+            for &(e, _) in &cur_writes {
+                if written_now.insert(e) {
+                    ensure(&mut writers_last, e);
+                    ensure(&mut readers_since, e);
+                    writers_last[e as usize].clear();
+                    readers_since[e as usize].clear();
+                }
+            }
+            for &(e, t) in &cur_writes {
+                writers_last[e as usize].push(t);
+            }
+            for &(e, t) in &cur_reads {
+                ensure(&mut readers_since, e);
+                // a task that also wrote e is already in writers_last
+                if !written_now.contains(&e) || !writers_last[e as usize].contains(&t) {
+                    readers_since[e as usize].push(t);
+                }
+            }
+        }
+
+        // Invert deps into child CSR + indegrees.
+        let mut indegree = vec![0u32; total];
+        let mut child_counts = vec![0u32; total + 1];
+        for (ti, ds) in deps.iter().enumerate() {
+            indegree[ti] = ds.len() as u32;
+            for &d in ds {
+                child_counts[d as usize + 1] += 1;
+            }
+        }
+        for i in 0..total {
+            child_counts[i + 1] += child_counts[i];
+        }
+        let child_offsets = child_counts.clone();
+        let mut cursor = child_offsets.clone();
+        let num_edges: usize = deps.iter().map(|d| d.len()).sum();
+        let mut child_items = vec![0u32; num_edges];
+        for (ti, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                let c = &mut cursor[d as usize];
+                child_items[*c as usize] = ti as u32;
+                *c += 1;
+            }
+        }
+
+        ExecutionPlan { tasks, child_offsets, child_items, indegree, num_edges }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn children(&self, task: u32) -> &[u32] {
+        &self.child_items
+            [self.child_offsets[task as usize] as usize..self.child_offsets[task as usize + 1] as usize]
+    }
+
+    /// Length (in tasks) of the longest dependency chain — a lower bound on
+    /// parallel makespan in units of one task (used by Fig 5 analysis).
+    pub fn critical_path_len(&self) -> usize {
+        let n = self.tasks.len();
+        let mut depth = vec![1u32; n];
+        // tasks are in topological order by construction (deps point backward)
+        let mut longest = 0u32;
+        for i in 0..n {
+            let d = depth[i];
+            longest = longest.max(d);
+            for &c in self.children(i as u32) {
+                depth[c as usize] = depth[c as usize].max(d + 1);
+            }
+        }
+        longest as usize
+    }
+}
+
+enum Mode {
+    /// Execute the compiled DAG greedily (Graham list scheduling).
+    Planned,
+    /// Literal semantics: full barrier between consecutive sets.
+    Barrier { set_sizes: Vec<usize> },
+}
+
+/// Runtime scheduler executing a compiled [`ExecutionPlan`].
+///
+/// Implementation note: the plan-task index is carried in `Task::priority`
+/// so `task_done` can resolve which DAG node completed even when the same
+/// vertex appears in several sets.
+pub struct SetScheduler {
+    plan: ExecutionPlan,
+    remaining: Vec<AtomicUsize>,
+    ready: Mutex<VecDeque<u32>>,
+    issued: AtomicUsize,
+    completed: AtomicUsize,
+    mode: Mode,
+    /// Barrier mode: completed count within the current set.
+    set_cursor: Mutex<(usize, usize, usize)>, // (set_idx, served_in_set, done_in_set)
+}
+
+impl SetScheduler {
+    /// Planned execution of the (S_i, f_i) sequence (the paper's optimized
+    /// set scheduler).
+    pub fn planned<'a>(
+        sets: &[(Vec<u32>, FuncId)],
+        num_vertices: usize,
+        neighbors: impl Fn(u32) -> &'a [u32],
+        model: ConsistencyModel,
+    ) -> SetScheduler {
+        let plan = ExecutionPlan::compile(sets, num_vertices, neighbors, model);
+        let ready: VecDeque<u32> = (0..plan.len() as u32).filter(|&t| plan.indegree[t as usize] == 0).collect();
+        let remaining =
+            plan.indegree.iter().map(|&d| AtomicUsize::new(d as usize)).collect();
+        SetScheduler {
+            plan,
+            remaining,
+            ready: Mutex::new(ready),
+            issued: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            mode: Mode::Planned,
+            set_cursor: Mutex::new((0, 0, 0)),
+        }
+    }
+
+    /// Literal barrier execution (the "plan set scheduler without
+    /// optimization" baseline in Fig 5a/c).
+    pub fn barrier(sets: &[(Vec<u32>, FuncId)], num_vertices: usize) -> SetScheduler {
+        let plan = ExecutionPlan::compile(
+            sets,
+            num_vertices,
+            |_| &[][..],
+            ConsistencyModel::Vertex,
+        );
+        let set_sizes: Vec<usize> = sets.iter().map(|(s, _)| s.len()).collect();
+        let remaining = plan.indegree.iter().map(|_| AtomicUsize::new(0)).collect();
+        SetScheduler {
+            plan,
+            remaining,
+            ready: Mutex::new(VecDeque::new()),
+            issued: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            mode: Mode::Barrier { set_sizes },
+            set_cursor: Mutex::new((0, 0, 0)),
+        }
+    }
+
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    fn total(&self) -> usize {
+        self.plan.len()
+    }
+}
+
+impl Scheduler for SetScheduler {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            Mode::Planned => "set-planned",
+            Mode::Barrier { .. } => "set-barrier",
+        }
+    }
+
+    /// The set scheduler's task list is fixed at compile time; dynamic task
+    /// additions are ignored (the paper's set scheduler has the same
+    /// semantics — schedules are composed of vertex *sets*).
+    fn add_task(&self, _t: Task) {}
+
+    fn next_task(&self, _worker: usize) -> Option<Task> {
+        match &self.mode {
+            Mode::Planned => {
+                let ti = self.ready.lock().unwrap().pop_front()?;
+                self.issued.fetch_add(1, Ordering::Relaxed);
+                let (v, f, _set) = self.plan.tasks[ti as usize];
+                Some(Task { vertex: v, func: f, priority: ti as f64 })
+            }
+            Mode::Barrier { set_sizes } => {
+                let mut cur = self.set_cursor.lock().unwrap();
+                let (set_idx, served, done) = *cur;
+                if set_idx >= set_sizes.len() {
+                    return None;
+                }
+                if served == set_sizes[set_idx] {
+                    // barrier: wait for all completions, then advance
+                    if done == set_sizes[set_idx] {
+                        *cur = (set_idx + 1, 0, 0);
+                        drop(cur);
+                        return self.next_task(_worker);
+                    }
+                    return None;
+                }
+                // plan.tasks is ordered set-by-set; compute global index
+                let base: usize = set_sizes[..set_idx].iter().sum();
+                let ti = (base + served) as u32;
+                cur.1 += 1;
+                drop(cur);
+                self.issued.fetch_add(1, Ordering::Relaxed);
+                let (v, f, _s) = self.plan.tasks[ti as usize];
+                Some(Task { vertex: v, func: f, priority: ti as f64 })
+            }
+        }
+    }
+
+    fn task_done(&self, t: Task, _worker: usize) {
+        self.completed.fetch_add(1, Ordering::AcqRel);
+        match &self.mode {
+            Mode::Planned => {
+                let ti = t.priority as u32;
+                let mut newly_ready = Vec::new();
+                for &c in self.plan.children(ti) {
+                    if self.remaining[c as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                        newly_ready.push(c);
+                    }
+                }
+                if !newly_ready.is_empty() {
+                    let mut q = self.ready.lock().unwrap();
+                    for c in newly_ready {
+                        q.push_back(c);
+                    }
+                }
+            }
+            Mode::Barrier { .. } => {
+                let mut cur = self.set_cursor.lock().unwrap();
+                cur.2 += 1;
+            }
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.completed.load(Ordering::Acquire) == self.total()
+    }
+
+    fn approx_len(&self) -> usize {
+        self.total() - self.issued.load(Ordering::Relaxed).min(self.total())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 2's example (0-indexed: paper's v_k = k-1): the schedule runs
+    /// S1 = {v1, v2, v5} in parallel, then S2 = {v3, v4}. The data graph has
+    /// v3 adjacent to v1, v2, v5 and v4 adjacent to v5 only, so — under edge
+    /// consistency — "the execution of v3 depends on the state of v1, v2 and
+    /// v5, but v4 only depends on the state of v5".
+    fn paper_example() -> (Vec<(Vec<u32>, FuncId)>, Vec<Vec<u32>>) {
+        // edges: 0-2, 1-2, 4-2, 4-3
+        let adj: Vec<Vec<u32>> = vec![vec![2], vec![2], vec![0, 1, 4], vec![4], vec![2, 3]];
+        let sets = vec![(vec![0, 1, 4], 0), (vec![2, 3], 0)];
+        (sets, adj)
+    }
+
+    #[test]
+    fn plan_matches_fig2_dependencies() {
+        let (sets, adj) = paper_example();
+        let plan = ExecutionPlan::compile(&sets, 5, |v| &adj[v as usize], ConsistencyModel::Edge);
+        assert_eq!(plan.len(), 5);
+        // task indices: 0->v1, 1->v2, 2->v5, 3->v3, 4->v4 (paper names)
+        assert_eq!(plan.indegree[3], 3, "v3 waits on v1, v2 and v5 (Fig. 2)");
+        assert_eq!(plan.indegree[4], 1, "v4 waits only on v5 (Fig. 2)");
+        // first set has no deps
+        assert_eq!(plan.indegree[0], 0);
+        assert_eq!(plan.indegree[1], 0);
+        assert_eq!(plan.indegree[2], 0);
+        // and v4's single dependency is precisely v5 (task 2)
+        assert_eq!(plan.children(2).contains(&4), true);
+    }
+
+    #[test]
+    fn planned_execution_respects_dependencies() {
+        let (sets, adj) = paper_example();
+        let s = SetScheduler::planned(&sets, 5, |v| &adj[v as usize], ConsistencyModel::Edge);
+        let mut completed_order = Vec::new();
+        let mut in_flight: Vec<Task> = Vec::new();
+        // Greedy: issue everything available, complete in FIFO order.
+        loop {
+            while let Some(t) = s.next_task(0) {
+                in_flight.push(t);
+            }
+            if in_flight.is_empty() {
+                break;
+            }
+            let t = in_flight.remove(0);
+            completed_order.push(t.vertex);
+            s.task_done(t, 0);
+        }
+        assert_eq!(completed_order.len(), 5);
+        assert!(s.is_done());
+        // v2 and v3 (set 2) must come after all their set-1 dependencies:
+        let pos = |v: u32| completed_order.iter().position(|&x| x == v).unwrap();
+        assert!(pos(2) > pos(1), "v2 after v1");
+        assert!(pos(3) > pos(4), "v3 after v4 (its only real dependency chain)");
+    }
+
+    #[test]
+    fn vertex_model_plan_has_fewer_edges() {
+        let (sets, adj) = paper_example();
+        let edge_plan =
+            ExecutionPlan::compile(&sets, 5, |v| &adj[v as usize], ConsistencyModel::Edge);
+        let vertex_plan =
+            ExecutionPlan::compile(&sets, 5, |v| &adj[v as usize], ConsistencyModel::Vertex);
+        assert!(vertex_plan.num_edges < edge_plan.num_edges);
+        // Under vertex consistency, sets are disjoint => no deps at all.
+        assert_eq!(vertex_plan.num_edges, 0);
+    }
+
+    #[test]
+    fn barrier_mode_enforces_set_order() {
+        let (sets, _) = paper_example();
+        let s = SetScheduler::barrier(&sets, 5);
+        // serve all of set 1
+        let t1 = s.next_task(0).unwrap();
+        let t2 = s.next_task(0).unwrap();
+        let t3 = s.next_task(0).unwrap();
+        // set 2 is blocked until every set-1 task completes
+        assert!(s.next_task(0).is_none());
+        s.task_done(t1, 0);
+        s.task_done(t2, 0);
+        assert!(s.next_task(0).is_none());
+        s.task_done(t3, 0);
+        let t4 = s.next_task(0).unwrap();
+        assert!(matches!(t4.vertex, 2 | 3));
+    }
+
+    #[test]
+    fn critical_path_reflects_chains() {
+        // 3 sets over a path graph, same vertex each time => chain of 3
+        let adj: Vec<Vec<u32>> = vec![vec![1], vec![0]];
+        let sets = vec![(vec![0], 0), (vec![0], 0), (vec![0], 0)];
+        let plan = ExecutionPlan::compile(&sets, 2, |v| &adj[v as usize], ConsistencyModel::Edge);
+        assert_eq!(plan.critical_path_len(), 3);
+    }
+
+    #[test]
+    fn independent_sets_have_unit_critical_path() {
+        let adj: Vec<Vec<u32>> = vec![vec![], vec![], vec![], vec![]];
+        let sets = vec![(vec![0, 1], 0), (vec![2, 3], 0)];
+        let plan = ExecutionPlan::compile(&sets, 4, |v| &adj[v as usize], ConsistencyModel::Edge);
+        assert_eq!(plan.num_edges, 0);
+        assert_eq!(plan.critical_path_len(), 1);
+    }
+}

@@ -1,0 +1,326 @@
+//! Sweep schedulers (paper §3.4):
+//!
+//! * [`RoundRobinScheduler`] — Gauss–Seidel: updates all vertices
+//!   *sequentially in a fixed order*, always using the most recently
+//!   available data (Gibbs sampling, coordinate descent).
+//! * [`SynchronousScheduler`] — Jacobi: all vertices are updated in sweeps
+//!   with a barrier between sweeps (classical synchronous BP).
+
+use super::{Scheduler, Task};
+use crate::util::BitSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Gauss–Seidel round-robin: vertex `order[k % n]` is the k-th task, for
+/// `max_sweeps` full sweeps (or until the engine's termination functions
+/// stop the run). `add_task` requests *additional* sweeps (bounded by
+/// `max_sweeps`), which is how convergence-driven round-robin programs keep
+/// the schedule alive while progress continues.
+pub struct RoundRobinScheduler {
+    order: Vec<u32>,
+    cursor: AtomicU64,
+    /// Total tasks permitted = n * sweeps_allowed (grows up to max via add_task).
+    allowed: AtomicU64,
+    max_tasks: u64,
+    stopped: AtomicBool,
+}
+
+impl RoundRobinScheduler {
+    pub fn new(num_vertices: usize, max_sweeps: usize) -> RoundRobinScheduler {
+        Self::with_order((0..num_vertices as u32).collect(), max_sweeps)
+    }
+
+    /// Custom visit order (e.g. a permutation for randomized Gauss–Seidel).
+    pub fn with_order(order: Vec<u32>, max_sweeps: usize) -> RoundRobinScheduler {
+        let n = order.len() as u64;
+        RoundRobinScheduler {
+            order,
+            cursor: AtomicU64::new(0),
+            allowed: AtomicU64::new(n), // first sweep always allowed
+            max_tasks: n * max_sweeps.max(1) as u64,
+            stopped: AtomicBool::new(false),
+        }
+    }
+
+    /// Stop handing out tasks (engine termination functions call this).
+    pub fn stop(&self) {
+        self.stopped.store(true, Ordering::Release);
+    }
+
+    pub fn sweeps_completed(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed) / self.order.len().max(1) as u64
+    }
+}
+
+impl Scheduler for RoundRobinScheduler {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn add_task(&self, _t: Task) {
+        // A task request extends the schedule by (up to) one sweep beyond
+        // the sweep of the most recently issued task.
+        let n = self.order.len() as u64;
+        let cur = self.cursor.load(Ordering::Relaxed);
+        let issued_sweep = cur.saturating_sub(1) / n;
+        let want = ((issued_sweep) + 2) * n;
+        let want = want.min(self.max_tasks);
+        self.allowed.fetch_max(want, Ordering::Relaxed);
+    }
+
+    fn next_task(&self, _worker: usize) -> Option<Task> {
+        if self.stopped.load(Ordering::Acquire) {
+            return None;
+        }
+        loop {
+            let k = self.cursor.load(Ordering::Relaxed);
+            if k >= self.allowed.load(Ordering::Relaxed).min(self.max_tasks) {
+                return None;
+            }
+            if self
+                .cursor
+                .compare_exchange_weak(k, k + 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                let v = self.order[(k % self.order.len() as u64) as usize];
+                return Some(Task::new(v));
+            }
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.stopped.load(Ordering::Acquire)
+            || self.cursor.load(Ordering::Relaxed)
+                >= self.allowed.load(Ordering::Relaxed).min(self.max_tasks)
+    }
+
+    fn approx_len(&self) -> usize {
+        let cur = self.cursor.load(Ordering::Relaxed);
+        let allowed = self.allowed.load(Ordering::Relaxed).min(self.max_tasks);
+        allowed.saturating_sub(cur) as usize
+    }
+}
+
+/// Jacobi synchronous sweeps: every vertex in sweep `i` completes before any
+/// vertex of sweep `i+1` begins (barrier). Tasks added during sweep `i` form
+/// the vertex set of sweep `i+1` (de-duplicated); the initial sweep is all
+/// tasks added before the first pop. Runs at most `max_sweeps` sweeps.
+pub struct SynchronousScheduler {
+    state: Mutex<SyncState>,
+    /// tasks completed in the current sweep
+    completed: AtomicUsize,
+    max_sweeps: usize,
+}
+
+struct SyncState {
+    current: Vec<u32>,
+    served: usize,
+    in_sweep: usize, // size of current sweep
+    next: BitSet,
+    next_count: usize,
+    sweep_index: usize,
+}
+
+impl SynchronousScheduler {
+    pub fn new(num_vertices: usize, max_sweeps: usize) -> SynchronousScheduler {
+        SynchronousScheduler {
+            state: Mutex::new(SyncState {
+                current: Vec::new(),
+                served: 0,
+                in_sweep: 0,
+                next: BitSet::new(num_vertices),
+                next_count: 0,
+                sweep_index: 0,
+            }),
+            completed: AtomicUsize::new(0),
+            max_sweeps: max_sweeps.max(1),
+        }
+    }
+
+    pub fn sweeps_completed(&self) -> usize {
+        self.state.lock().unwrap().sweep_index
+    }
+}
+
+impl Scheduler for SynchronousScheduler {
+    fn name(&self) -> &'static str {
+        "synchronous"
+    }
+
+    fn add_task(&self, t: Task) {
+        let mut s = self.state.lock().unwrap();
+        if s.sweep_index == 0 && s.in_sweep == 0 {
+            // seeding before the first pop: goes into the first sweep
+            if s.next.insert(t.vertex as usize) {
+                s.next_count += 1;
+            }
+        } else if s.next.insert(t.vertex as usize) {
+            s.next_count += 1;
+        }
+    }
+
+    fn next_task(&self, _worker: usize) -> Option<Task> {
+        let mut s = self.state.lock().unwrap();
+        // Promote the seeded/next set into the current sweep at a barrier:
+        // only when every served task of the current sweep has completed.
+        if s.served == s.in_sweep {
+            let all_done = self.completed.load(Ordering::Acquire) == s.in_sweep;
+            if all_done && s.next_count > 0 && s.sweep_index < self.max_sweeps {
+                let verts: Vec<u32> = s.next.iter().map(|v| v as u32).collect();
+                s.next.clear_all();
+                s.next_count = 0;
+                s.current = verts;
+                s.served = 0;
+                s.in_sweep = s.current.len();
+                s.sweep_index += 1;
+                self.completed.store(0, Ordering::Release);
+            } else {
+                return None; // barrier open or nothing left
+            }
+        }
+        let v = s.current[s.served];
+        s.served += 1;
+        Some(Task::new(v))
+    }
+
+    fn task_done(&self, _t: Task, _worker: usize) {
+        self.completed.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn is_done(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        let sweep_exhausted =
+            s.served == s.in_sweep && self.completed.load(Ordering::Acquire) == s.in_sweep;
+        sweep_exhausted && (s.next_count == 0 || s.sweep_index >= self.max_sweeps)
+    }
+
+    fn approx_len(&self) -> usize {
+        let s = self.state.lock().unwrap();
+        (s.in_sweep - s.served) + s.next_count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_fixed_order() {
+        let s = RoundRobinScheduler::new(4, 1);
+        let seq: Vec<u32> = std::iter::from_fn(|| s.next_task(0)).map(|t| t.vertex).collect();
+        assert_eq!(seq, vec![0, 1, 2, 3]);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn round_robin_add_task_extends_sweeps() {
+        let s = RoundRobinScheduler::new(3, 3);
+        // consume sweep 1, requesting more work as we go
+        for _ in 0..3 {
+            let t = s.next_task(0).unwrap();
+            s.add_task(t);
+        }
+        // second sweep available
+        let mut count = 0;
+        while s.next_task(0).is_some() {
+            count += 1;
+        }
+        assert_eq!(count, 3, "exactly one extra sweep granted");
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn round_robin_respects_max_sweeps() {
+        let s = RoundRobinScheduler::new(2, 2);
+        let mut total = 0;
+        loop {
+            match s.next_task(0) {
+                Some(t) => {
+                    total += 1;
+                    s.add_task(t); // always request more
+                }
+                None => break,
+            }
+        }
+        assert_eq!(total, 4, "2 vertices x max 2 sweeps");
+    }
+
+    #[test]
+    fn round_robin_stop() {
+        let s = RoundRobinScheduler::new(10, 100);
+        assert!(s.next_task(0).is_some());
+        s.stop();
+        assert!(s.next_task(0).is_none());
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn round_robin_custom_order() {
+        let s = RoundRobinScheduler::with_order(vec![5, 3, 1], 1);
+        let seq: Vec<u32> = std::iter::from_fn(|| s.next_task(0)).map(|t| t.vertex).collect();
+        assert_eq!(seq, vec![5, 3, 1]);
+    }
+
+    #[test]
+    fn synchronous_barrier_between_sweeps() {
+        let s = SynchronousScheduler::new(4, 10);
+        for v in 0..4 {
+            s.add_task(Task::new(v));
+        }
+        // sweep 1
+        let mut sweep1 = Vec::new();
+        while let Some(t) = s.next_task(0) {
+            sweep1.push(t);
+            s.add_task(Task::new(t.vertex)); // reschedule for next sweep
+        }
+        assert_eq!(sweep1.len(), 4);
+        // barrier: nothing until all 4 complete
+        assert!(s.next_task(0).is_none());
+        for &t in &sweep1[..3] {
+            s.task_done(t, 0);
+        }
+        assert!(s.next_task(0).is_none(), "barrier must hold until last completion");
+        s.task_done(sweep1[3], 0);
+        // sweep 2 opens
+        let t = s.next_task(0);
+        assert!(t.is_some());
+    }
+
+    #[test]
+    fn synchronous_dedups_within_sweep() {
+        let s = SynchronousScheduler::new(4, 10);
+        s.add_task(Task::new(1));
+        s.add_task(Task::new(1));
+        s.add_task(Task::new(2));
+        let mut got = Vec::new();
+        while let Some(t) = s.next_task(0) {
+            got.push(t.vertex);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    #[test]
+    fn synchronous_max_sweeps_terminates() {
+        let s = SynchronousScheduler::new(2, 3);
+        s.add_task(Task::new(0));
+        s.add_task(Task::new(1));
+        let mut sweeps = 0;
+        loop {
+            let mut batch = Vec::new();
+            while let Some(t) = s.next_task(0) {
+                batch.push(t);
+                s.add_task(Task::new(t.vertex));
+            }
+            if batch.is_empty() {
+                break;
+            }
+            sweeps += 1;
+            for t in batch {
+                s.task_done(t, 0);
+            }
+        }
+        assert_eq!(sweeps, 3);
+        assert!(s.is_done());
+    }
+}

@@ -1,0 +1,266 @@
+//! The **Shared Data Table** (SDT, paper §3.1) and the **sync mechanism**
+//! (paper §3.2.2, Alg. 1).
+//!
+//! The SDT is an associative map `T[Key] -> Value` holding globally shared
+//! state (hyper-parameters, convergence statistics). Update functions get
+//! *read-only* access; writes happen through the sync mechanism's `Apply`
+//! step or through exclusive setup code.
+//!
+//! A sync operation is `(key, r0, Fold, optional Merge, Apply)`:
+//!   r_{i+1} <- Fold(D_v, r_i)        sequentially over vertices (Alg. 1)
+//!   r       <- Merge(r_i, r_j)       parallel tree reduction, if provided
+//!   T[key]  <- Apply(r_{|V|})        finalization
+//!
+//! Execution (on demand or periodic/background) is driven by the engine,
+//! which owns the consistency locks; this module owns registration and the
+//! type-erased plumbing.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::RwLock;
+use std::time::Duration;
+
+/// Type-erased accumulator.
+pub type Acc = Box<dyn Any + Send>;
+
+/// The shared data table. Cheap to read concurrently; writes are rare
+/// (sync Apply, setup).
+#[derive(Default)]
+pub struct Sdt {
+    entries: RwLock<HashMap<String, Box<dyn Any + Send + Sync>>>,
+}
+
+impl Sdt {
+    pub fn new() -> Sdt {
+        Sdt::default()
+    }
+
+    /// Insert / overwrite a typed value.
+    pub fn set<T: Any + Send + Sync>(&self, key: &str, value: T) {
+        self.entries.write().unwrap().insert(key.to_string(), Box::new(value));
+    }
+
+    /// Clone out a typed value. Returns `None` on missing key or wrong type.
+    pub fn get<T: Any + Clone>(&self, key: &str) -> Option<T> {
+        self.entries.read().unwrap().get(key).and_then(|v| v.downcast_ref::<T>().cloned())
+    }
+
+    /// Typed read with a default.
+    pub fn get_or<T: Any + Clone>(&self, key: &str, default: T) -> T {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.read().unwrap().contains_key(key)
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        self.entries.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Read-modify-write under the table lock (used by Apply closures).
+    pub fn update<T: Any + Send + Sync + Clone>(&self, key: &str, f: impl FnOnce(Option<T>) -> T) {
+        let mut map = self.entries.write().unwrap();
+        let cur = map.get(key).and_then(|v| v.downcast_ref::<T>().cloned());
+        map.insert(key.to_string(), Box::new(f(cur)));
+    }
+}
+
+/// A registered sync operation over vertex data of type `V` (type-erased).
+pub struct SyncOp<V> {
+    pub key: String,
+    /// Background execution period; `None` = on-demand only.
+    pub interval: Option<Duration>,
+    init: Box<dyn Fn() -> Acc + Send + Sync>,
+    fold: Box<dyn Fn(Acc, &V) -> Acc + Send + Sync>,
+    merge: Option<Box<dyn Fn(Acc, Acc) -> Acc + Send + Sync>>,
+    apply: Box<dyn Fn(Acc, &Sdt) + Send + Sync>,
+}
+
+impl<V> SyncOp<V> {
+    pub fn init_acc(&self) -> Acc {
+        (self.init)()
+    }
+    pub fn fold_acc(&self, acc: Acc, v: &V) -> Acc {
+        (self.fold)(acc, v)
+    }
+    pub fn has_merge(&self) -> bool {
+        self.merge.is_some()
+    }
+    pub fn merge_acc(&self, a: Acc, b: Acc) -> Acc {
+        match &self.merge {
+            Some(m) => m(a, b),
+            None => panic!("sync op {:?} has no merge function", self.key),
+        }
+    }
+    pub fn apply_acc(&self, acc: Acc, sdt: &Sdt) {
+        (self.apply)(acc, sdt)
+    }
+}
+
+/// Builder for a typed sync op; erases types at `build`.
+pub struct SyncOpBuilder<V, T> {
+    key: String,
+    r0: T,
+    interval: Option<Duration>,
+    _marker: std::marker::PhantomData<fn(&V)>,
+}
+
+impl<V: 'static, T: Any + Send + Sync + Clone + 'static> SyncOpBuilder<V, T> {
+    pub fn new(key: &str, r0: T) -> Self {
+        SyncOpBuilder {
+            key: key.to_string(),
+            r0,
+            interval: None,
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Run periodically in the background while the engine executes.
+    pub fn every(mut self, interval: Duration) -> Self {
+        self.interval = Some(interval);
+        self
+    }
+
+    /// Provide Fold and Apply (no Merge: sequential fold only).
+    pub fn build(
+        self,
+        fold: impl Fn(T, &V) -> T + Send + Sync + 'static,
+        apply: impl Fn(T, &Sdt) + Send + Sync + 'static,
+    ) -> SyncOp<V> {
+        let r0 = self.r0.clone();
+        SyncOp {
+            key: self.key,
+            interval: self.interval,
+            init: Box::new(move || Box::new(r0.clone()) as Acc),
+            fold: Box::new(move |acc, v| {
+                let t = *acc.downcast::<T>().expect("sync fold: accumulator type");
+                Box::new(fold(t, v)) as Acc
+            }),
+            merge: None,
+            apply: Box::new(move |acc, sdt| {
+                let t = *acc.downcast::<T>().expect("sync apply: accumulator type");
+                apply(t, sdt)
+            }),
+        }
+    }
+
+    /// Provide Fold, Merge and Apply (parallel tree reduction enabled).
+    pub fn build_with_merge(
+        self,
+        fold: impl Fn(T, &V) -> T + Send + Sync + 'static,
+        merge: impl Fn(T, T) -> T + Send + Sync + 'static,
+        apply: impl Fn(T, &Sdt) + Send + Sync + 'static,
+    ) -> SyncOp<V> {
+        let mut op = self.build(fold, apply);
+        op.merge = Some(Box::new(move |a, b| {
+            let ta = *a.downcast::<T>().expect("sync merge: accumulator type (lhs)");
+            let tb = *b.downcast::<T>().expect("sync merge: accumulator type (rhs)");
+            Box::new(merge(ta, tb)) as Acc
+        }));
+        op
+    }
+}
+
+/// Run a sync op sequentially over a slice of vertex data (Alg. 1). The
+/// engine uses this for on-demand syncs; the threaded engine shards the fold
+/// and combines shards with `merge` when available.
+pub fn run_sync_sequential<V>(op: &SyncOp<V>, data: impl Iterator<Item = impl std::ops::Deref<Target = V>>, sdt: &Sdt) {
+    let mut acc = op.init_acc();
+    for v in data {
+        acc = op.fold_acc(acc, &v);
+    }
+    op.apply_acc(acc, sdt);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_typed() {
+        let sdt = Sdt::new();
+        sdt.set("lambda", 0.5f64);
+        sdt.set("name", "bp".to_string());
+        assert_eq!(sdt.get::<f64>("lambda"), Some(0.5));
+        assert_eq!(sdt.get::<String>("name").as_deref(), Some("bp"));
+        assert_eq!(sdt.get::<u32>("lambda"), None, "wrong type must be None");
+        assert_eq!(sdt.get::<f64>("missing"), None);
+        assert_eq!(sdt.get_or::<f64>("missing", 9.0), 9.0);
+    }
+
+    #[test]
+    fn update_read_modify_write() {
+        let sdt = Sdt::new();
+        sdt.update::<u64>("count", |c| c.unwrap_or(0) + 1);
+        sdt.update::<u64>("count", |c| c.unwrap_or(0) + 1);
+        assert_eq!(sdt.get::<u64>("count"), Some(2));
+    }
+
+    #[test]
+    fn sync_fold_apply() {
+        // Sum vertex values and divide by count in Apply (the paper's
+        // "average residual" pattern).
+        let op: SyncOp<f64> = SyncOpBuilder::new("avg", (0.0f64, 0u64)).build(
+            |(s, n), v| (s + *v, n + 1),
+            |(s, n), sdt| sdt.set("avg", s / n.max(1) as f64),
+        );
+        let sdt = Sdt::new();
+        let data = [1.0f64, 2.0, 3.0, 6.0];
+        run_sync_sequential(&op, data.iter(), &sdt);
+        assert_eq!(sdt.get::<f64>("avg"), Some(3.0));
+    }
+
+    #[test]
+    fn sync_merge_tree_reduction_matches_sequential() {
+        let op: SyncOp<f64> = SyncOpBuilder::new("sum", 0.0f64).build_with_merge(
+            |s, v| s + *v,
+            |a, b| a + b,
+            |s, sdt| sdt.set("sum", s),
+        );
+        let sdt = Sdt::new();
+        // Shard the fold, then merge — must equal the sequential result.
+        let data: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let mut left = op.init_acc();
+        for v in &data[..50] {
+            left = op.fold_acc(left, v);
+        }
+        let mut right = op.init_acc();
+        for v in &data[50..] {
+            right = op.fold_acc(right, v);
+        }
+        let merged = op.merge_acc(left, right);
+        op.apply_acc(merged, &sdt);
+        assert_eq!(sdt.get::<f64>("sum"), Some(5050.0));
+    }
+
+    #[test]
+    fn concurrent_readers_dont_block() {
+        use std::sync::Arc;
+        let sdt = Arc::new(Sdt::new());
+        sdt.set("x", 1.0f64);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = Arc::clone(&sdt);
+            handles.push(std::thread::spawn(move || {
+                let mut acc = 0.0;
+                for _ in 0..1000 {
+                    acc += s.get::<f64>("x").unwrap();
+                }
+                acc
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 1000.0);
+        }
+    }
+
+    #[test]
+    fn interval_marks_background_ops() {
+        let op: SyncOp<f64> = SyncOpBuilder::new("bg", 0.0f64)
+            .every(Duration::from_millis(10))
+            .build(|s, v| s + *v, |s, sdt| sdt.set("bg", s));
+        assert_eq!(op.interval, Some(Duration::from_millis(10)));
+        assert!(!op.has_merge());
+    }
+}

@@ -1,0 +1,656 @@
+//! **Multicore discrete-event simulator** — the testbed substitute for the
+//! paper's 16-core machine (see DESIGN.md §Testbed-substitutions; this host
+//! has one physical core, so parallel *wall-clock* speedups cannot be
+//! measured directly).
+//!
+//! Methodology (trace replay): the sequential engine executes the program
+//! with the *real* scheduler and captures a [`TaskTrace`] — measured per-task
+//! cost and the tasks each update spawned. The simulator replays that trace
+//! on `P` virtual processors:
+//!
+//! * **Causality** — an execution of vertex `v` becomes eligible only after
+//!   the update that spawned it completes (spawn counts are matched against
+//!   the trace's per-vertex execution counts, reproducing task
+//!   de-duplication).
+//! * **Consistency conflicts** — a task may start only if its scope locks
+//!   (per the configured [`ConsistencyModel`]) can be acquired against the
+//!   currently running tasks: write-`v` (all models), read-`N(v)` (edge),
+//!   write-`N(v)` (full). Blocked processors idle until a completion —
+//!   exactly the lock-wait the real engine would experience.
+//! * **Scheduler overhead** — each dispatch charges `sched_overhead_ns`;
+//!   strict (single-queue / global-heap) schedulers serialize dispatches
+//!   through a global dispenser, relaxed ones shard it `P` ways.
+//! * **Discipline** — among eligible, runnable tasks, processors take the
+//!   lowest sequential-trace index first, preserving the real scheduler's
+//!   ordering decisions while exposing the parallelism between them.
+//!
+//! A second entry point replays a [`ExecutionPlan`] DAG (planned or barrier
+//! mode) for the chromatic Gibbs experiments (Fig 5).
+
+use crate::consistency::ConsistencyModel;
+use crate::engine::trace::TaskTrace;
+use crate::scheduler::set_scheduler::ExecutionPlan;
+use crate::scheduler::Task;
+use std::collections::{BTreeSet, BinaryHeap};
+
+/// Adjacency provider for the simulator's conflict model.
+pub trait Neighbors: Sync {
+    fn neighbors(&self, v: u32) -> &[u32];
+}
+
+impl Neighbors for Vec<Vec<u32>> {
+    fn neighbors(&self, v: u32) -> &[u32] {
+        self.get(v as usize).map(|n| n.as_slice()).unwrap_or(&[])
+    }
+}
+
+impl<V: Send + Sync, E: Send + Sync> Neighbors for crate::graph::DataGraph<V, E> {
+    fn neighbors(&self, v: u32) -> &[u32] {
+        crate::graph::DataGraph::neighbors(self, v)
+    }
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub processors: usize,
+    pub model: ConsistencyModel,
+    /// Cost charged per task dispatch (scheduler pop + lock acquisition), ns.
+    pub sched_overhead_ns: f64,
+    /// Strict schedulers serialize all dispatches through one dispenser.
+    pub sched_serialized: bool,
+    /// Floor on per-task cost (measured costs below this are clamped), ns.
+    pub min_task_ns: f64,
+    /// Shared-queue contention factor for relaxed schedulers: effective
+    /// dispatch overhead = `sched_overhead_ns * (1 + factor * (P - 1))`
+    /// (cache-line bouncing on queue heads grows with the worker count).
+    pub contention_factor: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            processors: 1,
+            model: ConsistencyModel::Edge,
+            sched_overhead_ns: 120.0,
+            sched_serialized: false,
+            min_task_ns: 40.0,
+            contention_factor: 0.0,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn with_processors(mut self, p: usize) -> Self {
+        self.processors = p;
+        self
+    }
+    pub fn with_model(mut self, m: ConsistencyModel) -> Self {
+        self.model = m;
+        self
+    }
+    pub fn serialized(mut self, yes: bool) -> Self {
+        self.sched_serialized = yes;
+        self
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub processors: usize,
+    pub makespan_ns: f64,
+    /// Sum of task costs executed (excludes overhead and idle).
+    pub busy_ns: f64,
+    /// Total processor-idle time (blocked on conflicts or empty queues).
+    pub idle_ns: f64,
+    pub tasks: usize,
+}
+
+impl SimResult {
+    /// Fraction of processor-time doing useful work (Fig 5e's y-axis).
+    pub fn efficiency(&self) -> f64 {
+        if self.makespan_ns <= 0.0 {
+            return 1.0;
+        }
+        self.busy_ns / (self.makespan_ns * self.processors as f64)
+    }
+
+    /// Tasks per second per processor (Fig 5c's y-axis).
+    pub fn rate_per_proc(&self) -> f64 {
+        self.tasks as f64 / (self.makespan_ns * 1e-9) / self.processors as f64
+    }
+}
+
+/// Run [`simulate_trace`] over a processor list; returns one result per P.
+pub fn sweep_processors(
+    trace: &TaskTrace,
+    initial: &[Task],
+    num_vertices: usize,
+    neighbors: &dyn Neighbors,
+    base: &SimConfig,
+    procs: &[usize],
+) -> Vec<SimResult> {
+    procs
+        .iter()
+        .map(|&p| simulate_trace(trace, initial, num_vertices, neighbors, &base.clone().with_processors(p)))
+        .collect()
+}
+
+/// Speedup pairs `(P, makespan(1)/makespan(P))` from [`sweep_processors`]
+/// output (a P=1 run must be present or the first entry is used as base).
+pub fn speedups(results: &[SimResult]) -> Vec<(usize, f64)> {
+    speedup_curve(
+        &results.iter().map(|r| (r.processors, r.makespan_ns)).collect::<Vec<_>>(),
+    )
+}
+
+/// Speedup series helper: `makespan(1) / makespan(P)` over a processor list.
+pub fn speedup_curve(makespans: &[(usize, f64)]) -> Vec<(usize, f64)> {
+    let base = makespans
+        .iter()
+        .find(|(p, _)| *p == 1)
+        .map(|(_, m)| *m)
+        .unwrap_or_else(|| makespans.first().map(|(_, m)| *m).unwrap_or(1.0));
+    makespans.iter().map(|&(p, m)| (p, base / m.max(1e-9))).collect()
+}
+
+/// Virtual per-vertex lock table mirroring [`crate::consistency::LockTable`].
+struct LockSim<'a> {
+    model: ConsistencyModel,
+    neighbors: &'a dyn Neighbors,
+    write_locked: Vec<bool>,
+    read_count: Vec<u32>,
+}
+
+impl<'a> LockSim<'a> {
+    fn new(n: usize, model: ConsistencyModel, neighbors: &'a dyn Neighbors) -> Self {
+        LockSim { model, neighbors, write_locked: vec![false; n], read_count: vec![0; n] }
+    }
+
+    fn can_run(&self, v: u32) -> bool {
+        if self.write_locked[v as usize] || self.read_count[v as usize] > 0 {
+            return false;
+        }
+        match self.model {
+            ConsistencyModel::Vertex => true,
+            ConsistencyModel::Edge => {
+                self.neighbors.neighbors(v).iter().all(|&u| !self.write_locked[u as usize])
+            }
+            ConsistencyModel::Full => self.neighbors.neighbors(v)
+                .iter()
+                .all(|&u| !self.write_locked[u as usize] && self.read_count[u as usize] == 0),
+        }
+    }
+
+    fn acquire(&mut self, v: u32) {
+        self.write_locked[v as usize] = true;
+        match self.model {
+            ConsistencyModel::Vertex => {}
+            ConsistencyModel::Edge => {
+                for &u in self.neighbors.neighbors(v) {
+                    self.read_count[u as usize] += 1;
+                }
+            }
+            ConsistencyModel::Full => {
+                for &u in self.neighbors.neighbors(v) {
+                    self.write_locked[u as usize] = true;
+                }
+            }
+        }
+    }
+
+    fn release(&mut self, v: u32) {
+        self.write_locked[v as usize] = false;
+        match self.model {
+            ConsistencyModel::Vertex => {}
+            ConsistencyModel::Edge => {
+                for &u in self.neighbors.neighbors(v) {
+                    self.read_count[u as usize] -= 1;
+                }
+            }
+            ConsistencyModel::Full => {
+                for &u in self.neighbors.neighbors(v) {
+                    self.write_locked[u as usize] = false;
+                }
+            }
+        }
+    }
+}
+
+/// Completion event ordered for a min-heap on time.
+struct Completion {
+    time: f64,
+    item: u32,
+}
+impl PartialEq for Completion {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.item == other.item
+    }
+}
+impl Eq for Completion {}
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.item.cmp(&self.item))
+    }
+}
+
+/// Core event loop shared by the trace and DAG replays. `vertex(i)` maps an
+/// item to its scope center; `on_complete(i, out)` pushes newly eligible
+/// items into `out`.
+fn event_loop(
+    initial: Vec<u32>,
+    vertex: &dyn Fn(u32) -> u32,
+    cost: &dyn Fn(u32) -> f64,
+    on_complete: &mut dyn FnMut(u32, &mut Vec<u32>),
+    locks: &mut LockSim<'_>,
+    cfg: &SimConfig,
+) -> SimResult {
+    let p = cfg.processors.max(1);
+    let mut ready: BTreeSet<u32> = initial.into_iter().collect();
+    let mut heap: BinaryHeap<Completion> = BinaryHeap::new();
+
+    let mut now = 0.0f64;
+    let mut free = p;
+    let mut busy_ns = 0.0f64;
+    let mut executed = 0usize;
+    let mut dispenser_free_at = 0.0f64; // serialized scheduler dispenser
+    let mut idle_ns = 0.0f64;
+    let mut last_event_time = 0.0f64;
+    let overhead = cfg.sched_overhead_ns * (1.0 + cfg.contention_factor * (p as f64 - 1.0));
+
+    // How many ready candidates to test for runnability per free slot. A
+    // bounded window keeps the replay near-linear on heavily blocked runs.
+    const SCAN_WINDOW: usize = 768;
+
+    loop {
+        // Assign free processors to runnable ready tasks (lowest index first).
+        let mut assigned_any = true;
+        while free > 0 && assigned_any {
+            assigned_any = false;
+            let mut chosen: Option<u32> = None;
+            for &i in ready.iter().take(SCAN_WINDOW) {
+                if locks.can_run(vertex(i)) {
+                    chosen = Some(i);
+                    break;
+                }
+            }
+            if let Some(i) = chosen {
+                ready.remove(&i);
+                locks.acquire(vertex(i));
+                let mut start = now;
+                if cfg.sched_serialized {
+                    start = start.max(dispenser_free_at);
+                    dispenser_free_at = start + cfg.sched_overhead_ns;
+                }
+                let work = cost(i).max(cfg.min_task_ns);
+                heap.push(Completion { time: start + work + overhead, item: i });
+                busy_ns += work;
+                free -= 1;
+                assigned_any = true;
+            }
+        }
+
+        // Advance to the next completion.
+        let Some(done) = heap.pop() else {
+            break; // nothing running; ready must be empty (checked below)
+        };
+        let dt = done.time - last_event_time;
+        idle_ns += dt * free as f64;
+        last_event_time = done.time;
+        now = done.time;
+        locks.release(vertex(done.item));
+        free += 1;
+        executed += 1;
+        let mut deliveries = Vec::new();
+        on_complete(done.item, &mut deliveries);
+        for d in deliveries {
+            ready.insert(d);
+        }
+    }
+
+    debug_assert!(ready.is_empty(), "simulator ended with unrunnable tasks");
+    SimResult { processors: p, makespan_ns: now, busy_ns, idle_ns, tasks: executed }
+}
+
+/// Replay a captured sequential [`TaskTrace`] on `cfg.processors` virtual
+/// processors. `initial` are the tasks seeded before the original run;
+/// `neighbors(v)` must describe the graph the trace was captured on.
+pub fn simulate_trace(
+    trace: &TaskTrace,
+    initial: &[Task],
+    num_vertices: usize,
+    neighbors: &dyn Neighbors,
+    cfg: &SimConfig,
+) -> SimResult {
+    let occ = trace.occurrences(num_vertices);
+    let mut delivered = vec![0usize; num_vertices];
+    let mut locks = LockSim::new(num_vertices, cfg.model, neighbors);
+
+    // Deliver a spawn of vertex v: eligible iff the trace still has
+    // executions of v that were not yet delivered (mirrors de-duplication).
+    fn deliver(occ: &[Vec<u32>], delivered: &mut [usize], v: u32, out: &mut Vec<u32>) {
+        let k = delivered[v as usize];
+        if k < occ[v as usize].len() {
+            delivered[v as usize] = k + 1;
+            out.push(occ[v as usize][k]);
+        }
+    }
+
+    let mut first = Vec::new();
+    for t in initial {
+        deliver(&occ, &mut delivered, t.vertex, &mut first);
+    }
+
+    let events = &trace.events;
+    let mut on_complete = |i: u32, out: &mut Vec<u32>| {
+        for s in &events[i as usize].spawned {
+            deliver(&occ, &mut delivered, s.vertex, out);
+        }
+    };
+
+    event_loop(
+        first,
+        &|i| events[i as usize].vertex,
+        &|i| events[i as usize].cost_ns as f64,
+        &mut on_complete,
+        &mut locks,
+        cfg,
+    )
+}
+
+/// Replay a set-scheduler [`ExecutionPlan`] DAG (Fig 5). `barrier_mode`
+/// executes the literal set-by-set semantics ("plan set scheduler without
+/// optimization"); otherwise the DAG partial order is used. `cost(task_idx)`
+/// supplies per-task cost in ns.
+pub fn simulate_plan(
+    plan: &ExecutionPlan,
+    num_vertices: usize,
+    neighbors: &dyn Neighbors,
+    cost: &dyn Fn(u32) -> f64,
+    barrier_mode: bool,
+    cfg: &SimConfig,
+) -> SimResult {
+    let n = plan.len();
+    let mut locks = LockSim::new(num_vertices, cfg.model, neighbors);
+
+    if barrier_mode {
+        let set_of: Vec<u32> = plan.tasks.iter().map(|&(_, _, s)| s).collect();
+        let num_sets = set_of.iter().map(|&s| s as usize + 1).max().unwrap_or(0);
+        let mut set_members: Vec<Vec<u32>> = vec![Vec::new(); num_sets];
+        for (i, &s) in set_of.iter().enumerate() {
+            set_members[s as usize].push(i as u32);
+        }
+        let mut remaining_in_set: Vec<usize> =
+            set_members.iter().map(|m| m.len()).collect();
+        let first = set_members.first().cloned().unwrap_or_default();
+        let mut on_complete = |i: u32, out: &mut Vec<u32>| {
+            let s = set_of[i as usize] as usize;
+            remaining_in_set[s] -= 1;
+            if remaining_in_set[s] == 0 && s + 1 < num_sets {
+                out.extend_from_slice(&set_members[s + 1]);
+            }
+        };
+        event_loop(first, &|i| plan.tasks[i as usize].0, cost, &mut on_complete, &mut locks, cfg)
+    } else {
+        let mut remaining: Vec<u32> = plan.indegree.clone();
+        let first: Vec<u32> =
+            (0..n as u32).filter(|&i| remaining[i as usize] == 0).collect();
+        let mut on_complete = |i: u32, out: &mut Vec<u32>| {
+            for &c in plan.children(i) {
+                remaining[c as usize] -= 1;
+                if remaining[c as usize] == 0 {
+                    out.push(c);
+                }
+            }
+        };
+        event_loop(first, &|i| plan.tasks[i as usize].0, cost, &mut on_complete, &mut locks, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::trace::TraceEvent;
+    use crate::scheduler::set_scheduler::ExecutionPlan;
+
+    fn flat_trace(n: usize, cost: u64) -> TaskTrace {
+        TaskTrace {
+            initial: vec![],
+            events: (0..n)
+                .map(|v| TraceEvent {
+                    vertex: v as u32,
+                    func: 0,
+                    priority: 0.0,
+                    cost_ns: cost,
+                    spawned: vec![],
+                })
+                .collect(),
+        }
+    }
+
+    fn no_neighbors() -> Vec<Vec<u32>> {
+        Vec::new()
+    }
+
+    #[test]
+    fn independent_tasks_scale_linearly() {
+        let trace = flat_trace(1000, 10_000);
+        let initial: Vec<Task> = (0..1000).map(Task::new).collect();
+        let cfg1 = SimConfig { sched_overhead_ns: 0.0, min_task_ns: 0.0, ..Default::default() };
+        let r1 = simulate_trace(&trace, &initial, 1000, &no_neighbors(), &cfg1);
+        let r16 =
+            simulate_trace(&trace, &initial, 1000, &no_neighbors(), &cfg1.clone().with_processors(16));
+        assert_eq!(r1.tasks, 1000);
+        assert_eq!(r16.tasks, 1000);
+        let speedup = r1.makespan_ns / r16.makespan_ns;
+        assert!((speedup - 16.0).abs() < 0.5, "speedup={speedup}");
+        assert!(r16.efficiency() > 0.95);
+    }
+
+    #[test]
+    fn chain_of_spawns_cannot_scale() {
+        // each task spawns the next: pure sequential chain
+        let n = 200;
+        let mut events = Vec::new();
+        for v in 0..n {
+            events.push(TraceEvent {
+                vertex: v as u32,
+                func: 0,
+                priority: 0.0,
+                cost_ns: 1000,
+                spawned: if v + 1 < n { vec![Task::new((v + 1) as u32)] } else { vec![] },
+            });
+        }
+        let trace = TaskTrace { initial: vec![], events };
+        let cfg = SimConfig { sched_overhead_ns: 0.0, min_task_ns: 0.0, ..Default::default() };
+        let r1 = simulate_trace(&trace, &[Task::new(0)], n, &no_neighbors(), &cfg);
+        let r8 = simulate_trace(
+            &trace,
+            &[Task::new(0)],
+            n,
+            &no_neighbors(),
+            &cfg.clone().with_processors(8),
+        );
+        assert!(
+            (r1.makespan_ns / r8.makespan_ns - 1.0).abs() < 0.01,
+            "chains don't parallelize"
+        );
+    }
+
+    #[test]
+    fn dedup_matches_execution_counts() {
+        // vertex 1 is spawned by both 0 and 2 but executed once in the trace:
+        // the second spawn must be dropped.
+        let events = vec![
+            TraceEvent { vertex: 0, func: 0, priority: 0.0, cost_ns: 100, spawned: vec![Task::new(1)] },
+            TraceEvent { vertex: 2, func: 0, priority: 0.0, cost_ns: 100, spawned: vec![Task::new(1)] },
+            TraceEvent { vertex: 1, func: 0, priority: 0.0, cost_ns: 100, spawned: vec![] },
+        ];
+        let trace = TaskTrace { initial: vec![], events };
+        let cfg = SimConfig { sched_overhead_ns: 0.0, min_task_ns: 0.0, ..Default::default() }
+            .with_processors(4);
+        let r = simulate_trace(&trace, &[Task::new(0), Task::new(2)], 3, &no_neighbors(), &cfg);
+        assert_eq!(r.tasks, 3, "every trace event executes exactly once");
+    }
+
+    #[test]
+    fn edge_vs_full_consistency_on_a_star() {
+        // star: hub 0 with 8 leaves; tasks center on leaves. Edge model:
+        // leaves read-lock the hub -> all run concurrently. Full model:
+        // leaves write-lock the hub -> serial.
+        let leaves = 8usize;
+        let nb: Vec<Vec<u32>> = std::iter::once((1..=leaves as u32).collect::<Vec<_>>())
+            .chain((0..leaves).map(|_| vec![0u32]))
+            .collect();
+
+        let trace = TaskTrace {
+            initial: vec![],
+            events: (1..=leaves as u32)
+                .map(|v| TraceEvent {
+                    vertex: v,
+                    func: 0,
+                    priority: 0.0,
+                    cost_ns: 10_000,
+                    spawned: vec![],
+                })
+                .collect(),
+        };
+        let initial: Vec<Task> = (1..=leaves as u32).map(Task::new).collect();
+        let base = SimConfig { sched_overhead_ns: 0.0, min_task_ns: 0.0, ..Default::default() };
+
+        let edge = simulate_trace(
+            &trace,
+            &initial,
+            leaves + 1,
+            &nb,
+            &base.clone().with_processors(8).with_model(ConsistencyModel::Edge),
+        );
+        let full = simulate_trace(
+            &trace,
+            &initial,
+            leaves + 1,
+            &nb,
+            &base.clone().with_processors(8).with_model(ConsistencyModel::Full),
+        );
+        assert!(
+            edge.makespan_ns * 6.0 < full.makespan_ns,
+            "full consistency serializes the star: edge={} full={}",
+            edge.makespan_ns,
+            full.makespan_ns
+        );
+    }
+
+    #[test]
+    fn serialized_dispatch_caps_throughput() {
+        let trace = flat_trace(1000, 100); // tiny tasks
+        let initial: Vec<Task> = (0..1000).map(Task::new).collect();
+        let strict = SimConfig {
+            sched_overhead_ns: 500.0,
+            sched_serialized: true,
+            min_task_ns: 0.0,
+            processors: 16,
+            model: ConsistencyModel::Vertex,
+            contention_factor: 0.0,
+        };
+        let relaxed = SimConfig { sched_serialized: false, ..strict.clone() };
+        let rs = simulate_trace(&trace, &initial, 1000, &no_neighbors(), &strict);
+        let rr = simulate_trace(&trace, &initial, 1000, &no_neighbors(), &relaxed);
+        assert!(
+            rs.makespan_ns > rr.makespan_ns * 2.0,
+            "global dispenser must bottleneck tiny tasks: strict={} relaxed={}",
+            rs.makespan_ns,
+            rr.makespan_ns
+        );
+    }
+
+    #[test]
+    fn plan_dag_beats_barrier() {
+        // 10 sets of 10 independent vertices; each set contains one straggler
+        // task (10x cost). The barrier mode stalls the whole machine on every
+        // set's straggler; the plan (no cross-set data deps here) lets Graham
+        // list scheduling overlap sets freely — the Fig 5a/c effect.
+        let num_sets = 10u32;
+        let per_set = 10u32;
+        let n = (num_sets * per_set) as usize;
+        let nb: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let sets: Vec<(Vec<u32>, u32)> = (0..num_sets)
+            .map(|s| ((s * per_set..(s + 1) * per_set).collect(), 0))
+            .collect();
+        let plan =
+            ExecutionPlan::compile(&sets, n, |v| nb[v as usize].as_slice(), ConsistencyModel::Edge);
+        let cost = |i: u32| if i % per_set == 0 { 10_000.0 } else { 1_000.0 };
+        let cfg = SimConfig { sched_overhead_ns: 0.0, min_task_ns: 0.0, ..Default::default() }
+            .with_processors(4)
+            .with_model(ConsistencyModel::Vertex);
+        let planned = simulate_plan(&plan, n, &nb, &cost, false, &cfg);
+        let barrier = simulate_plan(&plan, n, &nb, &cost, true, &cfg);
+        assert_eq!(planned.tasks, n);
+        assert_eq!(barrier.tasks, n);
+        assert!(
+            planned.makespan_ns < barrier.makespan_ns * 0.7,
+            "plan optimization must hide stragglers: planned={} barrier={}",
+            planned.makespan_ns,
+            barrier.makespan_ns
+        );
+        assert!(planned.efficiency() > barrier.efficiency());
+    }
+
+    #[test]
+    fn speedup_curve_normalizes_to_p1() {
+        let curve = speedup_curve(&[(1, 100.0), (2, 50.0), (4, 30.0)]);
+        assert_eq!(curve[0], (1, 1.0));
+        assert_eq!(curve[1], (2, 2.0));
+        assert!((curve[2].1 - 100.0 / 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_processors_never_slower() {
+        // random-ish spawn structure
+        let mut events = Vec::new();
+        for v in 0..500u32 {
+            let spawned = if v < 400 {
+                vec![Task::new((v + 50) % 300), Task::new((v + 100) % 300)]
+            } else {
+                vec![]
+            };
+            events.push(TraceEvent {
+                vertex: v % 300,
+                func: 0,
+                priority: 0.0,
+                cost_ns: 500 + (v as u64 * 37) % 3000,
+                spawned,
+            });
+        }
+        let trace = TaskTrace { initial: vec![], events };
+        let initial: Vec<Task> = (0..300).map(Task::new).collect();
+        let cfg = SimConfig::default().with_model(ConsistencyModel::Vertex);
+        let mut prev = f64::INFINITY;
+        for p in [1, 2, 4, 8, 16] {
+            let r = simulate_trace(
+                &trace,
+                &initial,
+                300,
+                &no_neighbors(),
+                &cfg.clone().with_processors(p),
+            );
+            assert!(
+                r.makespan_ns <= prev * 1.001,
+                "P={p} slower: {} vs {}",
+                r.makespan_ns,
+                prev
+            );
+            prev = r.makespan_ns;
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Fixed-capacity bitset used by schedulers (vertex membership), the graph
+//! coloring app, and the set-scheduler planner.
+
+/// Dense bitset over `0..capacity`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    capacity: usize,
+}
+
+impl BitSet {
+    pub fn new(capacity: usize) -> BitSet {
+        BitSet { words: vec![0; capacity.div_ceil(64)], capacity }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.capacity);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.capacity);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.capacity);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Set bit `i`; returns true if it was previously unset.
+    #[inline]
+    pub fn insert(&mut self, i: usize) -> bool {
+        let was = self.get(i);
+        self.set(i);
+        !was
+    }
+
+    pub fn clear_all(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Iterate set bit indices in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let tz = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + tz)
+                }
+            })
+        })
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.capacity, other.capacity);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// True if the two sets share any element.
+    pub fn intersects(&self, other: &BitSet) -> bool {
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::prop_assert;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = BitSet::new(200);
+        assert!(!b.get(77));
+        b.set(77);
+        assert!(b.get(77));
+        b.clear(77);
+        assert!(!b.get(77));
+    }
+
+    #[test]
+    fn insert_reports_novelty() {
+        let mut b = BitSet::new(10);
+        assert!(b.insert(3));
+        assert!(!b.insert(3));
+    }
+
+    #[test]
+    fn count_and_iter_agree() {
+        let mut b = BitSet::new(130);
+        for i in [0, 1, 63, 64, 65, 127, 128, 129] {
+            b.set(i);
+        }
+        assert_eq!(b.count(), 8);
+        let collected: Vec<usize> = b.iter().collect();
+        assert_eq!(collected, vec![0, 1, 63, 64, 65, 127, 128, 129]);
+    }
+
+    #[test]
+    fn union_and_intersects() {
+        let mut a = BitSet::new(100);
+        let mut b = BitSet::new(100);
+        a.set(5);
+        b.set(70);
+        assert!(!a.intersects(&b));
+        a.union_with(&b);
+        assert!(a.get(70) && a.get(5));
+        assert!(a.intersects(&b));
+    }
+
+    #[test]
+    fn prop_matches_reference_set() {
+        forall(100, |g| {
+            let cap = g.usize_in(1..300);
+            let ops = g.vec_usize(0..80, 0..cap);
+            let mut bs = BitSet::new(cap);
+            let mut reference = std::collections::BTreeSet::new();
+            for (k, &i) in ops.iter().enumerate() {
+                if k % 3 == 2 {
+                    bs.clear(i);
+                    reference.remove(&i);
+                } else {
+                    bs.set(i);
+                    reference.insert(i);
+                }
+            }
+            prop_assert!(bs.count() == reference.len(), "count mismatch");
+            let got: Vec<usize> = bs.iter().collect();
+            let want: Vec<usize> = reference.into_iter().collect();
+            prop_assert!(got == want, "iter mismatch: {got:?} vs {want:?}");
+            Ok(())
+        });
+    }
+}

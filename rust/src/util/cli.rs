@@ -1,0 +1,267 @@
+//! Minimal command-line argument parser (the offline vendor set has no
+//! `clap`). Supports `--flag`, `--key value`, `--key=value`, positional
+//! arguments, typed accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI: register options, then `parse` an argv slice.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<OptSpec>,
+}
+
+/// Parse result: resolved option values plus positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    Unknown(String),
+    MissingValue(String),
+    BadValue { key: String, value: String, expect: &'static str },
+    Help(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+            CliError::MissingValue(k) => write!(f, "option --{k} requires a value"),
+            CliError::BadValue { key, value, expect } => {
+                write!(f, "option --{key}: cannot parse {value:?} as {expect}")
+            }
+            CliError::Help(text) => write!(f, "{text}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Cli {
+        Cli { program: program.to_string(), about: about.to_string(), specs: Vec::new() }
+    }
+
+    /// Register a valued option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}", self.program, self.about);
+        let _ = writeln!(out, "\nOPTIONS:");
+        for s in &self.specs {
+            if s.is_flag {
+                let _ = writeln!(out, "  --{:<24} {}", s.name, s.help);
+            } else {
+                let _ = writeln!(
+                    out,
+                    "  --{:<24} {} [default: {}]",
+                    format!("{} <v>", s.name),
+                    s.help,
+                    s.default.as_deref().unwrap_or("")
+                );
+            }
+        }
+        out
+    }
+
+    /// Parse argv (without the program name). `--help` yields `CliError::Help`.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                args.values.insert(spec.name.clone(), d.clone());
+            }
+            if spec.is_flag {
+                args.flags.insert(spec.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help(self.usage()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.is_flag {
+                    args.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or(CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.values.get(key).map(|s| s.as_str()).unwrap_or_else(|| {
+            panic!("option --{key} was not registered with a default")
+        })
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        *self.flags.get(key).unwrap_or(&false)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, CliError> {
+        self.get(key).parse().map_err(|_| CliError::BadValue {
+            key: key.to_string(),
+            value: self.get(key).to_string(),
+            expect: "usize",
+        })
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, CliError> {
+        self.get(key).parse().map_err(|_| CliError::BadValue {
+            key: key.to_string(),
+            value: self.get(key).to_string(),
+            expect: "u64",
+        })
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, CliError> {
+        self.get(key).parse().map_err(|_| CliError::BadValue {
+            key: key.to_string(),
+            value: self.get(key).to_string(),
+            expect: "f64",
+        })
+    }
+
+    /// Comma-separated list of usize, e.g. `--procs 1,2,4,8,16`.
+    pub fn get_usize_list(&self, key: &str) -> Result<Vec<usize>, CliError> {
+        self.get(key)
+            .split(',')
+            .map(|tok| {
+                tok.trim().parse().map_err(|_| CliError::BadValue {
+                    key: key.to_string(),
+                    value: self.get(key).to_string(),
+                    expect: "comma-separated usize list",
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn demo() -> Cli {
+        Cli::new("demo", "test program")
+            .opt("n", "10", "count")
+            .opt("rate", "0.5", "a rate")
+            .opt("procs", "1,2,4", "processor list")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = demo().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 10);
+        assert_eq!(a.get_f64("rate").unwrap(), 0.5);
+        assert!(!a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn explicit_values_and_flags() {
+        let a = demo().parse(&argv(&["--n", "42", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 42);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = demo().parse(&argv(&["--rate=0.25"])).unwrap();
+        assert_eq!(a.get_f64("rate").unwrap(), 0.25);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = demo().parse(&argv(&["--procs", "1,2,4,8,16"])).unwrap();
+        assert_eq!(a.get_usize_list("procs").unwrap(), vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(demo().parse(&argv(&["--bogus"])), Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(demo().parse(&argv(&["--n"])), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn help_surfaces_usage() {
+        match demo().parse(&argv(&["--help"])) {
+            Err(CliError::Help(text)) => assert!(text.contains("--n")),
+            other => panic!("expected help, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_value_reported() {
+        let a = demo().parse(&argv(&["--n", "xyz"])).unwrap();
+        assert!(matches!(a.get_usize("n"), Err(CliError::BadValue { .. })));
+    }
+}

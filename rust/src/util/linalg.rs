@@ -1,0 +1,159 @@
+//! Small dense linear-algebra helpers used by test oracles and the
+//! compressed-sensing outer loop (Gaussian elimination reference solver,
+//! mat-vec products). Deliberately simple — the *parallel* solvers in this
+//! repo are the GraphLab GaBP programs; this module is the ground truth.
+
+/// Dense row-major matrix view helpers.
+pub fn matvec(a: &[f64], n: usize, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), n * x.len());
+    let m = x.len();
+    (0..n).map(|i| (0..m).map(|j| a[i * m + j] * x[j]).sum()).collect()
+}
+
+/// Solve `A x = b` for dense square `A` (row-major) by Gaussian elimination
+/// with partial pivoting. Panics on singular systems.
+pub fn solve_dense(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        assert!(m[piv * n + col].abs() > 1e-12, "singular matrix at column {col}");
+        if piv != col {
+            for c in 0..n {
+                m.swap(col * n + c, piv * n + c);
+            }
+            rhs.swap(col, piv);
+        }
+        // eliminate
+        let d = m[col * n + col];
+        for r in col + 1..n {
+            let f = m[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                m[r * n + c] -= f * m[col * n + c];
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = rhs[i];
+        for j in i + 1..n {
+            s -= m[i * n + j] * x[j];
+        }
+        x[i] = s / m[i * n + i];
+    }
+    x
+}
+
+/// `xᵀ y`.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// `||x||₂`.
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `||x||₁`.
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// `||x||_∞`.
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0, |m, v| m.max(v.abs()))
+}
+
+/// Soft-thresholding operator `sign(c) · max(|c| - t, 0)`.
+#[inline]
+pub fn soft_threshold(c: f64, t: f64) -> f64 {
+    if c > t {
+        c - t
+    } else if c < -t {
+        c + t
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::prop_assert;
+
+    #[test]
+    fn solves_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let x = solve_dense(&a, &[3.0, -2.0]);
+        assert_eq!(x, vec![3.0, -2.0]);
+    }
+
+    #[test]
+    fn solves_known_system() {
+        // [2 1; 1 3] x = [3; 5] => x = [4/5, 7/5]
+        let a = vec![2.0, 1.0, 1.0, 3.0];
+        let x = solve_dense(&a, &[3.0, 5.0]);
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = vec![0.0, 1.0, 1.0, 0.0];
+        let x = solve_dense(&a, &[2.0, 3.0]);
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn prop_solve_then_matvec_roundtrips() {
+        forall(40, |g| {
+            let n = g.usize_in(1..8);
+            // diagonally dominant => nonsingular
+            let mut a = vec![0.0f64; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    a[i * n + j] = g.f64_in(-1.0, 1.0);
+                }
+                a[i * n + i] = n as f64 + 1.0 + g.f64_in(0.0, 1.0);
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| g.f64_in(-5.0, 5.0)).collect();
+            let b = matvec(&a, n, &x_true);
+            let x = solve_dense(&a, &b);
+            for (got, want) in x.iter().zip(&x_true) {
+                prop_assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(5.0, 2.0), 3.0);
+        assert_eq!(soft_threshold(-5.0, 2.0), -3.0);
+        assert_eq!(soft_threshold(1.0, 2.0), 0.0);
+        assert_eq!(soft_threshold(-1.5, 2.0), 0.0);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert_eq!(norm2(&x), 5.0);
+        assert_eq!(norm1(&x), 7.0);
+        assert_eq!(norm_inf(&x), 4.0);
+        assert_eq!(dot(&x, &[1.0, 1.0]), -1.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Foundation substrates built in-repo (the offline environment vendors only
+//! the `xla` crate's dependency closure, so PRNG / CLI / stats / bench /
+//! property-testing are implemented here rather than pulled from crates.io).
+
+pub mod bitset;
+pub mod cli;
+pub mod linalg;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use bitset::BitSet;
+pub use cli::{Args, Cli, CliError};
+pub use rng::Pcg32;
+pub use stats::{Online, Summary};
+pub use timer::Timer;

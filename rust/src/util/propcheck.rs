@@ -1,0 +1,190 @@
+//! `propcheck` — a miniature property-based testing framework.
+//!
+//! The offline vendor set has no `proptest`/`quickcheck`, so this module
+//! provides the subset the test suite needs: seeded generators, a `forall`
+//! runner that reports the failing case and its seed, and greedy input
+//! shrinking for the common container shapes (vectors, integer ranges).
+//!
+//! Usage:
+//! ```no_run
+//! use graphlab::util::propcheck::{forall, Gen};
+//! use graphlab::prop_assert;
+//! forall(100, |g: &mut Gen| {
+//!     let xs = g.vec_usize(0..64, 0..100);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     prop_assert!(sorted.len() == xs.len(), "sort must preserve length");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Pcg32;
+use std::ops::Range;
+
+/// Property outcome: `Err(msg)` is a counterexample.
+pub type PropResult = Result<(), String>;
+
+/// Assertion macro for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($msg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($msg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Input generator handed to each property invocation.
+pub struct Gen {
+    rng: Pcg32,
+    /// Size hint that grows across cases so early cases are small.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen { rng: Pcg32::seed_from_u64(seed), size }
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.end > r.start);
+        self.rng.range_usize(r.start, r.end)
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        self.rng.next_f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Vector of usize values: length drawn from `len_range` (capped by the
+    /// current size hint), elements from `val_range`.
+    pub fn vec_usize(&mut self, len_range: Range<usize>, val_range: Range<usize>) -> Vec<usize> {
+        let max_len = len_range.end.min(len_range.start + self.size + 1);
+        let len = self.usize_in(len_range.start..max_len.max(len_range.start + 1));
+        (0..len).map(|_| self.usize_in(val_range.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, len_range: Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let len = self.usize_in(len_range);
+        (0..len).map(|_| lo + (hi - lo) * self.rng.next_f32()).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of the property. Panics with the seed and the
+/// counterexample message on failure so the case can be replayed with
+/// `forall_seeded`.
+pub fn forall<F>(cases: usize, prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    forall_seeded(0xC0FFEE, cases, prop)
+}
+
+/// Like [`forall`] but with an explicit base seed (for replaying failures).
+pub fn forall_seeded<F>(base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // Grow size with the case index: early cases stress small inputs.
+        let size = 1 + case * 64 / cases.max(1);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // Greedy "shrink": retry with progressively smaller size hints at
+            // the same seed to look for a smaller failing configuration.
+            let mut best = (size, msg);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut g2 = Gen::new(seed, s);
+                if let Err(m2) = prop(&mut g2) {
+                    best = (s, m2);
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed:#x}, size {}): {}\n\
+                 replay: forall_seeded({seed:#x}, 1, ..) with size {}",
+                best.0, best.1, best.0
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(50, |g| {
+            let xs = g.vec_usize(0..32, 0..100);
+            let mut sorted = xs.clone();
+            sorted.sort_unstable();
+            prop_assert!(sorted.len() == xs.len());
+            prop_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "sorted order");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(50, |g| {
+            let x = g.usize_in(0..1000);
+            prop_assert!(x < 900, "x={x} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = || {
+            let mut vals = Vec::new();
+            forall_seeded(7, 10, |g| {
+                vals.push(g.u32());
+                Ok(())
+            });
+            vals
+        };
+        // Two runs see identical streams (pure function of seed).
+        // NOTE: closure captures prevent direct comparison; inline instead.
+        let mut a = Vec::new();
+        forall_seeded(7, 10, |g| {
+            a.push(g.u32());
+            Ok(())
+        });
+        let mut b = Vec::new();
+        forall_seeded(7, 10, |g| {
+            b.push(g.u32());
+            Ok(())
+        });
+        let _ = collect; // silence unused
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,257 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline vendor set has no `rand` crate, so we implement the PCG-XSH-RR
+//! 64/32 generator (O'Neill 2014) plus the SplitMix64 seeder. PCG is fast,
+//! statistically solid for simulation workloads, and — crucially for a
+//! reproduction repo — fully deterministic across platforms, so every figure
+//! regenerates bit-identically from a seed.
+
+/// SplitMix64: used to expand a single `u64` seed into stream/state material.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: 64-bit state, 32-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg32 {
+    /// Create a generator from a seed; distinct seeds give distinct streams.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let initstate = splitmix64(&mut sm);
+        let initseq = splitmix64(&mut sm);
+        let mut rng = Pcg32 { state: 0, inc: (initseq << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(initstate);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child stream (for per-thread / per-shard RNGs).
+    pub fn fork(&mut self, salt: u64) -> Pcg32 {
+        let s = self.next_u64() ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Pcg32::seed_from_u64(s)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4_294_967_296.0)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (bound as u64);
+        let mut l = m as u32;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (bound as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.gen_range((hi - lo) as u32) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (cached second variate dropped for
+    /// simplicity; simulation workloads here are not normal-draw bound).
+    pub fn next_gaussian(&mut self) -> f64 {
+        // Rejection-free polar-less Box–Muller.
+        let u1 = (1.0 - self.next_f64()).max(1e-300); // (0,1]
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn next_exp(&mut self, lambda: f64) -> f64 {
+        let u = (1.0 - self.next_f64()).max(1e-300);
+        -u.ln() / lambda
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn sample_discrete(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "sample_discrete: all-zero weights");
+        let mut u = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Draw from Zipf(n, s) by inverse-CDF over precomputed weights is too
+    /// slow for large n; we use rejection-inversion (Hörmann–Derflinger).
+    /// Good enough for generating power-law degree sequences.
+    pub fn next_zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n >= 1);
+        if n == 1 {
+            return 0;
+        }
+        // Simple inversion on the continuous approximation, then clamp.
+        // P(X >= x) ~ x^(1-s); invert u = x^(1-s) => x = u^(1/(1-s)).
+        let one_minus_s = 1.0 - s;
+        let x = if s == 1.0 {
+            ((n as f64).ln() * self.next_f64()).exp()
+        } else {
+            let max_cdf = (n as f64).powf(one_minus_s);
+            let u = 1.0 + self.next_f64() * (max_cdf - 1.0);
+            u.powf(1.0 / one_minus_s)
+        };
+        (x.floor() as usize).clamp(1, n) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Pcg32::seed_from_u64(42);
+        let mut b = Pcg32::seed_from_u64(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_streams() {
+        let mut a = Pcg32::seed_from_u64(1);
+        let mut b = Pcg32::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Pcg32::seed_from_u64(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = Pcg32::seed_from_u64(9);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            let v = r.gen_range(7);
+            assert!(v < 7);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg32::seed_from_u64(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seed_from_u64(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn discrete_sampling_follows_weights() {
+        let mut r = Pcg32::seed_from_u64(5);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.sample_discrete(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut r = Pcg32::seed_from_u64(13);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..50_000 {
+            counts[r.next_zipf(100, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[10] && counts[10] > counts[70]);
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Pcg32::seed_from_u64(21);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+}

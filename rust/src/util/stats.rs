@@ -1,0 +1,216 @@
+//! Online and batch statistics used by the engine metrics, the discrete-event
+//! simulator, and the benchmark harness.
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn merge(&mut self, other: &Online) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n;
+        self.m2 += other.m2 + delta * delta * (self.n as f64) * (other.n as f64) / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn sum(&self) -> f64 {
+        self.mean * self.n as f64
+    }
+}
+
+/// Batch summary over a sample: mean, stddev, and exact percentiles.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::from_samples on empty slice");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / if n > 1 { (n - 1) as f64 } else { 1.0 };
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// L1 distance between two equal-length vectors.
+pub fn l1_distance(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// L2 norm.
+pub fn l2_norm(a: &[f32]) -> f32 {
+    a.iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+/// Peak signal-to-noise ratio between images in [0, max_val].
+pub fn psnr(reference: &[f32], test: &[f32], max_val: f32) -> f64 {
+    debug_assert_eq!(reference.len(), test.len());
+    let mse: f64 = reference
+        .iter()
+        .zip(test)
+        .map(|(a, b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / reference.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * ((max_val as f64).powi(2) / mse).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.add(x);
+        }
+        let s = Summary::from_samples(&xs);
+        assert!((o.mean() - s.mean).abs() < 1e-12);
+        assert!((o.stddev() - s.stddev).abs() < 1e-12);
+        assert_eq!(o.min(), 1.0);
+        assert_eq!(o.max(), 10.0);
+        assert_eq!(o.count(), 5);
+    }
+
+    #[test]
+    fn online_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Online::new();
+        let mut left = Online::new();
+        let mut right = Online::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.add(x);
+            if i < 37 {
+                left.add(x)
+            } else {
+                right.add(x)
+            }
+        }
+        left.merge(&right);
+        assert!((left.mean() - all.mean()).abs() < 1e-10);
+        assert!((left.variance() - all.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn percentiles() {
+        let sorted: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 0.5), 50.0);
+        assert_eq!(percentile_sorted(&sorted, 1.0), 100.0);
+        assert!((percentile_sorted(&sorted, 0.95) - 95.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psnr_identical_is_infinite() {
+        let img = [0.1f32, 0.5, 0.9];
+        assert!(psnr(&img, &img, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn psnr_decreases_with_noise() {
+        let img: Vec<f32> = (0..64).map(|i| (i as f32) / 64.0).collect();
+        let small: Vec<f32> = img.iter().map(|x| x + 0.01).collect();
+        let big: Vec<f32> = img.iter().map(|x| x + 0.2).collect();
+        assert!(psnr(&img, &small, 1.0) > psnr(&img, &big, 1.0));
+    }
+}

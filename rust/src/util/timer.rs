@@ -1,0 +1,130 @@
+//! Wall-clock timing helpers and the in-repo micro-benchmark harness
+//! (the offline vendor set has no `criterion`; `benches/*.rs` use
+//! `harness = false` and this module).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ns(&self) -> u64 {
+        self.elapsed().as_nanos() as u64
+    }
+}
+
+/// Time a closure once, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// A single benchmark measurement: per-iteration seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Render one row in the bench report format the harness prints.
+    pub fn row(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12} {:>6}",
+            self.name,
+            fmt_secs(s.mean),
+            fmt_secs(s.stddev),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            self.iters
+        )
+    }
+}
+
+pub fn bench_header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>12} {:>12} {:>6}",
+        "benchmark", "mean", "stddev", "p50", "p95", "iters"
+    )
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Micro-benchmark runner: warms up, then measures `iters` iterations
+/// (each timed individually so percentiles are meaningful).
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        samples.push(t.elapsed_secs());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::from_samples(&samples), iters }
+}
+
+/// Adaptive variant: picks an iteration count so total time ≈ `budget_secs`.
+pub fn bench_for<T>(name: &str, budget_secs: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // Calibrate with one run.
+    let (_, once) = time_it(&mut f);
+    let iters = ((budget_secs / once.max(1e-9)) as usize).clamp(3, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn bench_runs_requested_iterations() {
+        let mut count = 0usize;
+        let r = bench("noop", 2, 10, || count += 1);
+        assert_eq!(r.iters, 10);
+        assert_eq!(count, 12); // warmup + measured
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("us"));
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+    }
+}

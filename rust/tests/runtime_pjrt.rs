@@ -1,0 +1,197 @@
+//! Integration tests over the PJRT runtime + built artifacts.
+//!
+//! These require `make artifacts` to have run (they are skipped with a
+//! message otherwise, so `cargo test` stays usable on a fresh checkout).
+
+use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
+use graphlab::apps::mrf::{grid3d, GridDims};
+use graphlab::consistency::ConsistencyModel;
+use graphlab::engine::sequential::SeqOptions;
+use graphlab::engine::{EngineConfig, SequentialEngine, UpdateFn};
+use graphlab::runtime::{bp_artifact_available, AccelGridBp, ArtifactRegistry};
+use graphlab::scheduler::{PriorityScheduler, Scheduler, Task};
+use graphlab::sdt::Sdt;
+use graphlab::util::Pcg32;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = graphlab::runtime::default_artifact_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts under {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn registry_lists_and_compiles_all_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    let names = reg.names();
+    assert!(names.iter().any(|n| n.starts_with("bp_batch")));
+    assert!(names.iter().any(|n| n.starts_with("gabp_batch")));
+    assert!(names.iter().any(|n| n.starts_with("coem_batch")));
+    for name in names {
+        reg.load(&name).unwrap_or_else(|e| panic!("compile {name}: {e:#}"));
+    }
+}
+
+#[test]
+fn bp_batch_kernel_matches_rust_math() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    let exe = reg.load("bp_batch_b256_k5").unwrap();
+    let (b, k) = (256usize, 5usize);
+    let mut rng = Pcg32::seed_from_u64(7);
+    let cavity: Vec<f32> = (0..b * k).map(|_| 0.05 + rng.next_f32()).collect();
+    let psi: Vec<f32> = {
+        // symmetric Laplace with lambda = 0.7
+        let mut p = vec![0.0f32; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                p[i * k + j] = (-(0.7f64) * (i as f64 - j as f64).abs()).exp() as f32;
+            }
+        }
+        p
+    };
+    let old: Vec<f32> = (0..b * k).map(|_| 0.05 + rng.next_f32()).collect();
+    let outs = exe.run_f32(&[&cavity, &psi, &old]).unwrap();
+    let (msg, res) = (&outs[0], &outs[1]);
+    // rust-side reference
+    for row in 0..b {
+        let c = &cavity[row * k..(row + 1) * k];
+        let mut want = vec![0.0f32; k];
+        for (j, w) in want.iter_mut().enumerate() {
+            for (i, ci) in c.iter().enumerate() {
+                *w += psi[i * k + j] * ci;
+            }
+        }
+        let total: f32 = want.iter().sum();
+        for w in want.iter_mut() {
+            *w /= total;
+        }
+        let mut l1 = 0.0f32;
+        for j in 0..k {
+            assert!(
+                (msg[row * k + j] - want[j]).abs() < 1e-5,
+                "row {row} col {j}: {} vs {}",
+                msg[row * k + j],
+                want[j]
+            );
+            l1 += (want[j] - old[row * k + j]).abs();
+        }
+        assert!((res[row] - l1).abs() < 1e-4, "row {row} residual");
+    }
+}
+
+#[test]
+fn gabp_batch_kernel_matches_rust_math() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    let exe = reg.load("gabp_batch_b1024").unwrap();
+    let b = 1024usize;
+    let mut rng = Pcg32::seed_from_u64(9);
+    let p_cav: Vec<f32> = (0..b).map(|_| 0.5 + 4.0 * rng.next_f32()).collect();
+    let h_cav: Vec<f32> = (0..b).map(|_| rng.next_f32() * 6.0 - 3.0).collect();
+    let a: Vec<f32> = (0..b).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let outs = exe.run_f32(&[&p_cav, &h_cav, &a]).unwrap();
+    for i in 0..b {
+        let want_p = -(a[i] * a[i]) / p_cav[i];
+        let want_h = -(a[i] * h_cav[i]) / p_cav[i];
+        assert!((outs[0][i] - want_p).abs() < 1e-5 * (1.0 + want_p.abs()));
+        assert!((outs[1][i] - want_h).abs() < 1e-5 * (1.0 + want_h.abs()));
+    }
+}
+
+#[test]
+fn coem_batch_kernel_matches_rust_math() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    let exe = reg.load("coem_batch_b256_d32_k4").unwrap();
+    let (b, d, k) = (256usize, 32usize, 4usize);
+    let mut rng = Pcg32::seed_from_u64(11);
+    let nb: Vec<f32> = (0..b * d * k).map(|_| rng.next_f32()).collect();
+    let mut w: Vec<f32> = (0..b * d).map(|_| rng.next_f32() * 2.0).collect();
+    // zero-out some weights to exercise padding
+    for i in (0..w.len()).step_by(5) {
+        w[i] = 0.0;
+    }
+    let outs = exe.run_f32(&[&nb, &w]).unwrap();
+    for row in 0..b {
+        for j in 0..k {
+            let mut acc = 0.0f32;
+            let mut total = 0.0f32;
+            for dd in 0..d {
+                acc += w[row * d + dd] * nb[(row * d + dd) * k + j];
+            }
+            for dd in 0..d {
+                total += w[row * d + dd];
+            }
+            let want = acc / total.max(1e-30);
+            assert!(
+                (outs[0][row * k + j] - want).abs() < 1e-4,
+                "row {row} col {j}"
+            );
+        }
+    }
+}
+
+/// The headline integration: the accelerated Jacobi driver must converge to
+/// the same beliefs as the pure-rust residual-scheduled engine.
+#[test]
+fn accel_grid_bp_matches_engine_beliefs() {
+    let Some(dir) = artifact_dir() else { return };
+    if !bp_artifact_available(&dir, 256, 5) {
+        eprintln!("SKIP: bp_batch_b256_k5 artifact missing");
+        return;
+    }
+    let dims = GridDims::new(6, 6, 4);
+    let k = 5;
+    let lambda = [0.8f64, 0.8, 1.2];
+    let mk = || {
+        let mut rng = Pcg32::seed_from_u64(31);
+        grid3d(dims, k, |_| (0..k).map(|_| 0.1 + rng.next_f32()).collect())
+    };
+
+    // pure-rust residual BP
+    let mut reference = mk();
+    {
+        let n = reference.graph.num_vertices();
+        let sdt = Sdt::new();
+        sdt.set(LAMBDA_KEY, lambda);
+        let sched = PriorityScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::with_priority(v, 1.0));
+        }
+        let upd = BpUpdate::new(k, 1e-7, Arc::new(Vec::new()));
+        let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
+        SequentialEngine::run(
+            &mut reference.graph,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::sequential(ConsistencyModel::Edge).with_max_updates(400_000),
+            &SeqOptions::default(),
+        );
+    }
+
+    // accelerated Jacobi sweeps through PJRT
+    let mut accel_mrf = mk();
+    let mut accel = AccelGridBp::open(&dir, 256, 5).unwrap();
+    let (sweeps, residual) = accel.run(&mut accel_mrf, lambda, 200, 1e-6).unwrap();
+    assert!(sweeps < 200, "accelerated BP did not converge (residual {residual})");
+
+    let mut max_diff = 0.0f32;
+    for v in 0..reference.graph.num_vertices() as u32 {
+        let a = reference.graph.vertex_data(v).belief.clone();
+        let b = &accel_mrf.graph.vertex_data(v).belief;
+        for (x, y) in a.iter().zip(b) {
+            max_diff = max_diff.max((x - y).abs());
+        }
+    }
+    assert!(max_diff < 5e-3, "beliefs diverge between engines: {max_diff}");
+}
