@@ -5,9 +5,9 @@
 //! Run: `cargo run --release --example coem_ner -- [--scale 0.25]`
 
 use graphlab::apps::coem::{CoemUpdate, CoemVertex};
-use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::ner;
-use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+use graphlab::engine::Program;
 use graphlab::scheduler::{MultiQueueFifo, Scheduler, Task};
 use graphlab::sdt::Sdt;
 use graphlab::util::{Cli, Pcg32, Timer};
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         ner::NerConfig::small(scale)
     };
     let mut rng = Pcg32::seed_from_u64(args.get_u64("seed")?);
-    let g = ner::generate(&cfg, &mut rng);
+    let mut g = ner::generate(&cfg, &mut rng);
     let n = g.num_vertices();
     println!(
         "dataset: {} NPs + {} CTs, {} directed edges, {} classes",
@@ -40,7 +40,6 @@ fn main() -> anyhow::Result<()> {
         cfg.classes
     );
 
-    let locks = LockTable::new(n);
     let workers = args.get_usize("workers")?;
     let sched = MultiQueueFifo::new(n, workers);
     for v in 0..n as u32 {
@@ -48,21 +47,13 @@ fn main() -> anyhow::Result<()> {
     }
     let sdt = Sdt::new();
     let upd = CoemUpdate::new(cfg.classes);
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
     let timer = Timer::start();
-    let report = ThreadedEngine::run(
-        &g,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[],
-        &[],
-        &EngineConfig::default()
-            .with_workers(workers)
-            .with_model(ConsistencyModel::Vertex)
-            .with_max_updates(50_000_000),
-    );
+    let report = Program::new()
+        .update_fn(&upd)
+        .workers(workers)
+        .model(ConsistencyModel::Vertex)
+        .max_updates(50_000_000)
+        .run(&mut g, &sched, &sdt);
     let secs = timer.elapsed_secs();
     println!(
         "converged: {} updates in {:.2}s ({:.0} updates/s, {:.1} updates/vertex)",
@@ -73,7 +64,6 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Report label confidence over the unlabeled NPs.
-    let mut g = g;
     let mut confident = 0usize;
     let mut total_unlabeled = 0usize;
     for v in 0..cfg.num_np as u32 {

@@ -17,10 +17,10 @@
 use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
 use graphlab::apps::learn::{learning_sync, target_stats, STEPS_KEY, TARGET_KEY};
 use graphlab::apps::mrf::GridDims;
-use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::retina;
-use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateFn};
-use graphlab::metrics::write_pgm;
+use graphlab::engine::Program;
+use graphlab::metrics::{run_summary, write_pgm};
 use graphlab::scheduler::{Scheduler, SplashScheduler, Task};
 use graphlab::sdt::Sdt;
 use graphlab::util::stats::psnr;
@@ -76,7 +76,6 @@ fn main() -> anyhow::Result<()> {
     sdt.set(LAMBDA_KEY, [1.0f64; 3]);
     sdt.set(TARGET_KEY, targets);
     let n = mrf.graph.num_vertices();
-    let locks = LockTable::new(n);
     let sched = SplashScheduler::new(n, |v| mrf.graph.neighbors(v), 32, args.get_usize("workers")?);
     for v in 0..n as u32 {
         sched.add_task(Task::with_priority(v, 1.0));
@@ -84,25 +83,18 @@ fn main() -> anyhow::Result<()> {
     let mut upd = BpUpdate::new(k, 1e-4, Arc::new(Vec::new()));
     upd.learn_stats = true;
     upd.damping = 0.1;
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
     let sync = learning_sync(
         0.8,
         Some(Duration::from_millis(args.get_u64("sync-ms")?)),
     );
     let timer = Timer::start();
-    let report = ThreadedEngine::run(
-        &mrf.graph,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[sync],
-        &[],
-        &EngineConfig::default()
-            .with_workers(args.get_usize("workers")?)
-            .with_model(ConsistencyModel::Edge)
-            .with_max_updates(4_000_000),
-    );
+    let report = Program::new()
+        .update_fn(&upd)
+        .sync(sync)
+        .workers(args.get_usize("workers")?)
+        .model(ConsistencyModel::Edge)
+        .max_updates(4_000_000)
+        .run(&mut mrf.graph, &sched, &sdt);
     let lambda = sdt.get::<[f64; 3]>(LAMBDA_KEY).unwrap();
     println!(
         "learning+inference: {} updates, {} gradient steps, {:.2}s, learned lambda [{:.3} {:.3} {:.3}]",
@@ -113,6 +105,7 @@ fn main() -> anyhow::Result<()> {
         lambda[1],
         lambda[2]
     );
+    print!("{}", run_summary(&report));
 
     // 4. Read out denoised levels (MAP per voxel) + metrics + images.
     let argmax = |b: &[f32]| -> u32 {

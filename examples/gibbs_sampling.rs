@@ -7,9 +7,10 @@
 
 use graphlab::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
 use graphlab::apps::gibbs::{chromatic_sets, GibbsUpdate};
-use graphlab::consistency::{ConsistencyModel, LockTable};
-use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::protein;
+use graphlab::engine::Program;
+use graphlab::metrics::run_summary;
 use graphlab::scheduler::{FifoScheduler, Scheduler, SetScheduler, Task};
 use graphlab::sdt::Sdt;
 use graphlab::util::{Cli, Pcg32, Timer};
@@ -35,12 +36,11 @@ fn main() -> anyhow::Result<()> {
         args.get_usize("arity")?,
         &mut rng,
     );
-    let g = net.graph;
+    let mut g = net.graph;
     let n = g.num_vertices();
     println!("MRF: {} vertices, {} directed edges", n, g.num_edges());
 
     // Phase 1: parallel greedy coloring (edge consistency).
-    let locks = LockTable::new(n);
     let timer = Timer::start();
     {
         let sched = FifoScheduler::new(n);
@@ -49,21 +49,12 @@ fn main() -> anyhow::Result<()> {
         }
         let sdt = Sdt::new();
         let upd = ColoringUpdate;
-        let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-        ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default()
-                .with_workers(args.get_usize("workers")?)
-                .with_model(ConsistencyModel::Edge),
-        );
+        Program::new()
+            .update_fn(&upd)
+            .workers(args.get_usize("workers")?)
+            .model(ConsistencyModel::Edge)
+            .run(&mut g, &sched, &sdt);
     }
-    let mut g = g;
     let ncolors = validate_coloring(&mut g).map_err(|e| anyhow::anyhow!(e))?;
     let classes = color_classes(&mut g);
     let mut sizes: Vec<usize> = classes.iter().map(|c| c.len()).collect();
@@ -89,21 +80,13 @@ fn main() -> anyhow::Result<()> {
         args.get_usize("workers")?,
         args.get_u64("seed")?,
     );
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
     let sdt = Sdt::new();
     let timer = Timer::start();
-    let report = ThreadedEngine::run(
-        &g,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[],
-        &[],
-        &EngineConfig::default()
-            .with_workers(args.get_usize("workers")?)
-            .with_model(ConsistencyModel::Vertex),
-    );
+    let report = Program::new()
+        .update_fn(&upd)
+        .workers(args.get_usize("workers")?)
+        .model(ConsistencyModel::Vertex)
+        .run(&mut g, &sched, &sdt);
     let secs = timer.elapsed_secs();
     println!(
         "sampling: {} samples in {:.2}s ({:.0} samples/s)",
@@ -111,6 +94,7 @@ fn main() -> anyhow::Result<()> {
         secs,
         report.updates as f64 / secs
     );
+    print!("{}", run_summary(&report));
     assert_eq!(report.updates as usize, n * sweeps);
 
     // Sanity: marginals are proper distributions and not all uniform.

@@ -6,37 +6,33 @@
 //! Run: `cargo run --release --example lasso_shooting -- [--dense]`
 
 use graphlab::apps::lasso::{LassoProblem, ShootingUpdate};
-use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::finance::{self, FinanceConfig};
-use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+use graphlab::engine::Program;
 use graphlab::scheduler::{FifoScheduler, Scheduler, Task};
 use graphlab::sdt::Sdt;
 use graphlab::util::{Cli, Pcg32, Timer};
 
-fn run(p: &LassoProblem, lambda: f32, model: ConsistencyModel, workers: usize) -> (u64, f64) {
+fn run(
+    p: &mut LassoProblem,
+    lambda: f32,
+    model: ConsistencyModel,
+    workers: usize,
+) -> (u64, f64) {
     let n = p.graph.num_vertices();
-    let locks = LockTable::new(n);
     let sched = FifoScheduler::new(n);
     for v in 0..p.num_weights as u32 {
         sched.add_task(Task::new(v));
     }
     let sdt = Sdt::new();
     let upd = ShootingUpdate::new(lambda);
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
     let timer = Timer::start();
-    let report = ThreadedEngine::run(
-        &p.graph,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[],
-        &[],
-        &EngineConfig::default()
-            .with_workers(workers)
-            .with_model(model)
-            .with_max_updates(20_000_000),
-    );
+    let report = Program::new()
+        .update_fn(&upd)
+        .workers(workers)
+        .model(model)
+        .max_updates(20_000_000)
+        .run(&mut p.graph, &sched, &sdt);
     (report.updates, timer.elapsed_secs())
 }
 
@@ -74,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut full = gen();
-    let (updates_full, secs_full) = run(&full, lambda, ConsistencyModel::Full, workers);
+    let (updates_full, secs_full) = run(&mut full, lambda, ConsistencyModel::Full, workers);
     let loss_full = full.loss(lambda);
     let nnz_full = full.weights().iter().filter(|w| w.abs() > 1e-6).count();
     println!(
@@ -82,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut vtx = gen();
-    let (updates_vtx, secs_vtx) = run(&vtx, lambda, ConsistencyModel::Vertex, workers);
+    let (updates_vtx, secs_vtx) = run(&mut vtx, lambda, ConsistencyModel::Vertex, workers);
     let loss_vtx = vtx.loss(lambda);
     let nnz_vtx = vtx.weights().iter().filter(|w| w.abs() > 1e-6).count();
     println!(

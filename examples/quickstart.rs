@@ -8,8 +8,8 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use graphlab::consistency::{ConsistencyModel, LockTable, Scope};
-use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateContext, UpdateFn};
+use graphlab::consistency::{ConsistencyModel, Scope};
+use graphlab::engine::{Program, UpdateContext, UpdateFn};
 use graphlab::graph::GraphBuilder;
 use graphlab::scheduler::{MultiQueueFifo, Scheduler, Task};
 use graphlab::sdt::{Sdt, SyncOpBuilder};
@@ -56,7 +56,7 @@ fn main() {
             }
         }
     }
-    let graph = b.build();
+    let mut graph = b.build();
     let n = graph.num_vertices();
 
     // 2. Scheduler: relaxed FIFO, seeded with every vertex.
@@ -73,20 +73,16 @@ fn main() {
         |(s, c), sdt| sdt.set("mean", s / c.max(1) as f64),
     );
 
-    // 4+5. Consistency model + engine.
-    let locks = LockTable::new(n);
+    // 4+5. Consistency model + engine: the Program bundles the update
+    // function, the sync, and the run configuration; the threaded back-end
+    // manages its own lock table.
     let diffuse = Diffuse { tolerance: 1e-6 };
-    let fns: Vec<&dyn UpdateFn<f64, ()>> = vec![&diffuse];
-    let report = ThreadedEngine::run(
-        &graph,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[mean_op],
-        &[],
-        &EngineConfig::default().with_workers(4).with_model(ConsistencyModel::Edge),
-    );
+    let report = Program::new()
+        .update_fn(&diffuse)
+        .sync(mean_op)
+        .workers(4)
+        .model(ConsistencyModel::Edge)
+        .run(&mut graph, &sched, &sdt);
 
     println!(
         "converged: {} updates on {} workers in {:.3}s ({:.0} updates/s)",
@@ -96,7 +92,6 @@ fn main() {
         report.updates_per_sec()
     );
     println!("global mean temperature (sync): {:.4}", sdt.get::<f64>("mean").unwrap());
-    let mut graph = graph;
     let corner = *graph.vertex_data(0);
     let center = *graph.vertex_data(side * side / 2 + side / 2);
     println!("corner={corner:.3} center={center:.3}");

@@ -12,10 +12,9 @@
 use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
 use graphlab::apps::learn::{learning_sync, target_stats, TARGET_KEY};
 use graphlab::apps::mrf::GridDims;
-use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::retina;
-use graphlab::engine::sequential::SeqOptions;
-use graphlab::engine::{EngineConfig, SequentialEngine, ThreadedEngine, UpdateFn};
+use graphlab::engine::Program;
 use graphlab::metrics::{Figure, Series};
 use graphlab::scheduler::{
     ApproxPriorityScheduler, PriorityScheduler, Scheduler, SplashScheduler, Task,
@@ -53,21 +52,18 @@ fn capture(
     let mut upd = BpUpdate::new(5, 5e-4, Arc::new(Vec::new()));
     upd.learn_stats = true;
     upd.damping = 0.1;
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
     let sync = learning_sync(0.25, None);
     for t in initial {
         scheduler.add_task(*t);
     }
-    let (_, trace) = SequentialEngine::run(
-        &mut mrf.graph,
-        scheduler,
-        &fns,
-        &sdt,
-        &[sync],
-        &[],
-        &EngineConfig::sequential(ConsistencyModel::Edge).with_max_updates(MAX_UPDATES),
-        &SeqOptions { capture_trace: true, sync_every: 2_000, virtual_workers: 1 },
-    );
+    let (_, trace) = Program::new()
+        .update_fn(&upd)
+        .sync(sync)
+        .workers(1)
+        .model(ConsistencyModel::Edge)
+        .max_updates(MAX_UPDATES)
+        .sync_every(2_000)
+        .run_traced(&mut mrf.graph, scheduler, &sdt);
     (trace, n)
 }
 
@@ -151,12 +147,11 @@ fn fig4bc(vol: &retina::RetinaVolume, targets: [f64; 3]) -> (Figure, Figure) {
 }
 
 fn run_learning(vol: &retina::RetinaVolume, targets: [f64; 3], interval_ms: u64) -> [f64; 3] {
-    let mrf = retina::build_mrf(vol, 0.8);
+    let mut mrf = retina::build_mrf(vol, 0.8);
     let n = mrf.graph.num_vertices();
     let sdt = Sdt::new();
     sdt.set(LAMBDA_KEY, [1.0f64; 3]);
     sdt.set(TARGET_KEY, targets);
-    let locks = LockTable::new(n);
     let sched = SplashScheduler::new(n, |v| mrf.graph.neighbors(v), 48, 2);
     for v in 0..n as u32 {
         sched.add_task(Task::with_priority(v, 1.0));
@@ -164,21 +159,14 @@ fn run_learning(vol: &retina::RetinaVolume, targets: [f64; 3], interval_ms: u64)
     let mut upd = BpUpdate::new(5, 5e-4, Arc::new(Vec::new()));
     upd.learn_stats = true;
     upd.damping = 0.1;
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
     let sync = learning_sync(0.25, Some(std::time::Duration::from_millis(interval_ms)));
-    ThreadedEngine::run(
-        &mrf.graph,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[sync],
-        &[],
-        &EngineConfig::default()
-            .with_workers(2)
-            .with_model(ConsistencyModel::Edge)
-            .with_max_updates(MAX_UPDATES),
-    );
+    Program::new()
+        .update_fn(&upd)
+        .sync(sync)
+        .workers(2)
+        .model(ConsistencyModel::Edge)
+        .max_updates(MAX_UPDATES)
+        .run(&mut mrf.graph, &sched, &sdt);
     sdt.get::<[f64; 3]>(LAMBDA_KEY).unwrap()
 }
 

@@ -12,11 +12,10 @@
 
 use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
 use graphlab::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
-use graphlab::apps::gibbs::{chromatic_sets, GibbsUpdate, GibbsVertex};
-use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::apps::gibbs::{chromatic_sets, GibbsUpdate};
+use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::protein;
-use graphlab::engine::sequential::SeqOptions;
-use graphlab::engine::{EngineConfig, SequentialEngine, ThreadedEngine, UpdateFn};
+use graphlab::engine::Program;
 use graphlab::metrics::{Figure, Series};
 use graphlab::scheduler::set_scheduler::ExecutionPlan;
 use graphlab::scheduler::{
@@ -42,7 +41,7 @@ fn main() {
     println!("MRF: {} vertices, {} directed edges", n, g.num_edges());
 
     // ---- coloring phase (GraphLab program, threaded) --------------------
-    let locks = LockTable::new(n);
+    let mut g = g;
     {
         let sched = FifoScheduler::new(n);
         for v in 0..n as u32 {
@@ -50,10 +49,8 @@ fn main() {
         }
         let sdt = Sdt::new();
         let upd = ColoringUpdate;
-        let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-        ThreadedEngine::run(&g, &locks, &sched, &fns, &sdt, &[], &[], &EngineConfig::default());
+        Program::new().update_fn(&upd).run(&mut g, &sched, &sdt);
     }
-    let mut g = g;
     let ncolors = validate_coloring(&mut g).expect("coloring");
     let classes = color_classes(&mut g);
 
@@ -73,18 +70,11 @@ fn main() {
     let upd = GibbsUpdate::new(3, Arc::new(net.tables.clone()), 1, 77);
     let cost_of: Vec<f64> = {
         let sched = RoundRobinScheduler::new(n, 1);
-        let fns: Vec<&dyn UpdateFn<GibbsVertex, _>> = vec![&upd];
         let sdt = Sdt::new();
-        let (_, trace) = SequentialEngine::run(
-            &mut g,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::sequential(ConsistencyModel::Edge),
-            &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
-        );
+        let (_, trace) = Program::new()
+            .update_fn(&upd)
+            .model(ConsistencyModel::Edge)
+            .run_traced(&mut g, &sched, &sdt);
         let mut cost = vec![300.0f64; n];
         for e in &trace.events {
             cost[e.vertex as usize] = e.cost_ns.max(60) as f64;
@@ -122,18 +112,11 @@ fn main() {
     // round-robin trace: relies on edge consistency (paper Fig 5a)
     let rr_trace = {
         let sched = RoundRobinScheduler::new(n, SWEEPS);
-        let fns: Vec<&dyn UpdateFn<GibbsVertex, _>> = vec![&upd];
         let sdt = Sdt::new();
-        let (_, trace) = SequentialEngine::run(
-            &mut g,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::sequential(ConsistencyModel::Edge),
-            &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
-        );
+        let (_, trace) = Program::new()
+            .update_fn(&upd)
+            .model(ConsistencyModel::Edge)
+            .run_traced(&mut g, &sched, &sdt);
         trace
     };
     let initial: Vec<Task> = (0..n as u32).map(Task::new).collect();
@@ -181,7 +164,10 @@ fn main() {
         let sdt = Sdt::new();
         sdt.set(LAMBDA_KEY, [1.0f64; 3]);
         let bp = BpUpdate::new(3, 1e-3, bp_tables_run);
-        let fns: Vec<&dyn UpdateFn<_, _>> = vec![&bp];
+        let program = Program::new()
+            .update_fn(&bp)
+            .model(ConsistencyModel::Edge)
+            .max_updates(400_000);
         let trace = {
             let initial: Vec<Task> =
                 (0..nb as u32).map(|v| Task::with_priority(v, 1.0)).collect();
@@ -189,18 +175,7 @@ fn main() {
                 for t in &initial {
                     sched.add_task(*t);
                 }
-                SequentialEngine::run(
-                    bp_graph,
-                    sched,
-                    &fns,
-                    &sdt,
-                    &[],
-                    &[],
-                    &EngineConfig::sequential(ConsistencyModel::Edge)
-                        .with_max_updates(400_000),
-                    &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
-                )
-                .1
+                program.run_traced(bp_graph, sched, &sdt).1
             };
             match label {
                 "splash" => {

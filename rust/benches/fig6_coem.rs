@@ -16,8 +16,7 @@ use graphlab::baselines::mapreduce::{compare, MapReduceCosts};
 use graphlab::baselines::sequential::coem_jacobi;
 use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::ner::{self, NerConfig};
-use graphlab::engine::sequential::SeqOptions;
-use graphlab::engine::{EngineConfig, SequentialEngine, UpdateFn};
+use graphlab::engine::Program;
 use graphlab::graph::{induced_subgraph, DataGraph};
 use graphlab::metrics::{Figure, Series};
 use graphlab::scheduler::{MultiQueueFifo, PartitionedScheduler, RoundRobinScheduler, Scheduler, Task};
@@ -40,17 +39,12 @@ fn capture_trace(
     let sdt = Sdt::new();
     let mut upd = CoemUpdate::new(classes);
     upd.threshold = 1e-4; // bench-scale convergence
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-    let (_, trace) = SequentialEngine::run(
-        graph,
-        scheduler,
-        &fns,
-        &sdt,
-        &[],
-        &[],
-        &EngineConfig::sequential(ConsistencyModel::Vertex).with_max_updates(350_000),
-        &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 16 },
-    );
+    let (_, trace) = Program::new()
+        .update_fn(&upd)
+        .model(ConsistencyModel::Vertex)
+        .max_updates(350_000)
+        .virtual_workers(16)
+        .run_traced(graph, scheduler, &sdt);
     trace
 }
 
@@ -157,32 +151,23 @@ fn main() {
             let sdt = Sdt::new();
             let mut upd = CoemUpdate::new(small.classes);
             upd.threshold = 1e-3; // only meaningful moves reschedule
-            let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-            SequentialEngine::run(
-                &mut g,
-                &sched,
-                &fns,
-                &sdt,
-                &[],
-                &[],
-                &EngineConfig::sequential(ConsistencyModel::Vertex).with_max_updates(budget),
-                &SeqOptions { virtual_workers: 16, ..Default::default() },
-            );
+            Program::new()
+                .update_fn(&upd)
+                .model(ConsistencyModel::Vertex)
+                .max_updates(budget)
+                .workers(1) // deterministic sequential back-end
+                .virtual_workers(16)
+                .run(&mut g, &sched, &sdt);
             dyn_series.push(budget_per_vertex as f64, belief_distance(&mut g, &reference));
             // round-robin
             let mut g = mk();
             let sched = RoundRobinScheduler::new(n, budget_per_vertex);
-            let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-            SequentialEngine::run(
-                &mut g,
-                &sched,
-                &fns,
-                &sdt,
-                &[],
-                &[],
-                &EngineConfig::sequential(ConsistencyModel::Vertex).with_max_updates(budget),
-                &SeqOptions::default(),
-            );
+            Program::new()
+                .update_fn(&upd)
+                .model(ConsistencyModel::Vertex)
+                .max_updates(budget)
+                .workers(1) // deterministic sequential back-end
+                .run(&mut g, &sched, &sdt);
             rr_series.push(budget_per_vertex as f64, belief_distance(&mut g, &reference));
         }
         fig_c.add(dyn_series);

@@ -9,10 +9,9 @@
 //! Output: tables on stdout + results/fig7.tsv.
 
 use graphlab::apps::lasso::{LassoProblem, ShootingUpdate};
-use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::finance::{self, FinanceConfig};
-use graphlab::engine::sequential::SeqOptions;
-use graphlab::engine::{EngineConfig, SequentialEngine, ThreadedEngine, UpdateFn};
+use graphlab::engine::Program;
 use graphlab::metrics::{Figure, Series};
 use graphlab::scheduler::{FifoScheduler, Scheduler, Task};
 use graphlab::sdt::Sdt;
@@ -33,17 +32,11 @@ fn capture(p: &mut LassoProblem) -> (graphlab::engine::trace::TaskTrace, Vec<Tas
     }
     let sdt = Sdt::new();
     let upd = ShootingUpdate::new(LAMBDA);
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-    let (_, trace) = SequentialEngine::run(
-        &mut p.graph,
-        &sched,
-        &fns,
-        &sdt,
-        &[],
-        &[],
-        &EngineConfig::sequential(ConsistencyModel::Full).with_max_updates(1_200_000),
-        &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
-    );
+    let (_, trace) = Program::new()
+        .update_fn(&upd)
+        .model(ConsistencyModel::Full)
+        .max_updates(1_200_000)
+        .run_traced(&mut p.graph, &sched, &sdt);
     (trace, initial)
 }
 
@@ -84,27 +77,18 @@ fn threaded_loss(cfg: &FinanceConfig, model: ConsistencyModel) -> f64 {
     let mut rng = Pcg32::seed_from_u64(SEED);
     let (mut p, _) = finance::generate(cfg, &mut rng);
     let n = p.graph.num_vertices();
-    let locks = LockTable::new(n);
     let sched = FifoScheduler::new(n);
     for v in 0..p.num_weights as u32 {
         sched.add_task(Task::new(v));
     }
     let sdt = Sdt::new();
     let upd = ShootingUpdate::new(LAMBDA);
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-    ThreadedEngine::run(
-        &p.graph,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[],
-        &[],
-        &EngineConfig::default()
-            .with_workers(4)
-            .with_model(model)
-            .with_max_updates(5_000_000),
-    );
+    Program::new()
+        .update_fn(&upd)
+        .workers(4)
+        .model(model)
+        .max_updates(5_000_000)
+        .run(&mut p.graph, &sched, &sdt);
     p.loss(LAMBDA)
 }
 

@@ -12,12 +12,11 @@
 //! Output: table on stdout + results/fig8a.tsv.
 
 use graphlab::apps::cs::{sparse_measurements, CsProblem, CsSolver};
-use graphlab::apps::gabp::{GabpUpdate, GabpVertex};
+use graphlab::apps::gabp::GabpUpdate;
 use graphlab::apps::wavelet::{haar2d, sparsify};
 use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::image;
-use graphlab::engine::sequential::SeqOptions;
-use graphlab::engine::{EngineConfig, SequentialEngine, UpdateFn};
+use graphlab::engine::Program;
 use graphlab::metrics::{Figure, Series};
 use graphlab::scheduler::{RoundRobinScheduler, Task};
 use graphlab::sdt::Sdt;
@@ -55,18 +54,11 @@ fn main() {
         solver.prepare_newton();
         serial_ns += t_outer.elapsed_ns() as f64;
         let sched = RoundRobinScheduler::new(n, 40);
-        let fns: Vec<&dyn UpdateFn<GabpVertex, _>> = vec![&upd];
         let sdt = Sdt::new();
-        let (_, trace) = SequentialEngine::run(
-            &mut solver.graph,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::sequential(ConsistencyModel::Edge),
-            &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
-        );
+        let (_, trace) = Program::new()
+            .update_fn(&upd)
+            .model(ConsistencyModel::Edge)
+            .run_traced(&mut solver.graph, &sched, &sdt);
         let initial: Vec<Task> = (0..n as u32).map(Task::new).collect();
         let cfg = SimConfig {
             model: ConsistencyModel::Edge,

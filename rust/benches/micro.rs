@@ -3,17 +3,19 @@
 //!
 //! * scheduler add/pop throughput per scheduler type;
 //! * scope lock acquisition per consistency model and degree;
+//! * the atomic lock table itself: uncontended vs conflicted try-acquire
+//!   (the conflict path measures the cost of a failed all-or-nothing
+//!   acquisition including rollback — the price of a deferral) and the
+//!   per-vertex memory footprint vs the old `RwLock<()>` table;
 //! * end-to-end engine overhead per trivial update (1..4 workers);
 //! * PJRT batched-kernel dispatch latency (if artifacts are built).
 //!
-//! Output: bench table on stdout + results/micro.tsv.
+//! Output: bench table on stdout + results/micro.tsv + results/BENCH_locks.json.
 
 use graphlab::consistency::{ConsistencyModel, LockTable, Scope};
-use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateContext, UpdateFn};
+use graphlab::engine::{Program, UpdateContext, UpdateFn};
 use graphlab::graph::{DataGraph, GraphBuilder};
-use graphlab::scheduler::{
-    by_name, FifoScheduler, MultiQueueFifo, PriorityScheduler, Scheduler, Task,
-};
+use graphlab::scheduler::{by_name, FifoScheduler, MultiQueueFifo, PriorityScheduler, Scheduler, Task};
 use graphlab::sdt::Sdt;
 use graphlab::util::timer::{bench, bench_header, fmt_secs, BenchResult};
 use graphlab::util::Timer;
@@ -89,6 +91,59 @@ fn main() {
         }
     }
 
+    // ---- lock table: try-acquire fast path and conflict/rollback path ------
+    let mut lock_json: Vec<(String, f64)> = Vec::new();
+    {
+        let g = ring(4096, 4);
+        let locks = LockTable::new(4096);
+        let r = bench("locktable/try-acquire/uncontended x4096", 3, 30, || {
+            for v in 0..4096u32 {
+                let Ok(guard) =
+                    locks.try_lock_scope(v, g.lock_neighbors(v), ConsistencyModel::Full)
+                else {
+                    unreachable!("uncontended acquire cannot conflict")
+                };
+                std::hint::black_box(&guard);
+            }
+        });
+        lock_json.push(("uncontended_full_scope_ns".into(), r.summary.mean * 1e9 / 4096.0));
+        push(r);
+
+        // Guaranteed conflict: pre-hold a write lock on one vertex, then
+        // try-acquire every scope that includes it. Measures detection +
+        // rollback, i.e. the fixed cost the engine pays before deferring.
+        let Ok(held) = locks.try_lock_scope(0, &[], ConsistencyModel::Vertex) else {
+            unreachable!("free table")
+        };
+        let contenders: Vec<u32> = g.neighbors(0).to_vec();
+        let r = bench("locktable/try-acquire/conflict+rollback", 3, 30, || {
+            for _ in 0..1024 {
+                for &v in &contenders {
+                    let res =
+                        locks.try_lock_scope(v, g.lock_neighbors(v), ConsistencyModel::Full);
+                    assert!(res.is_err(), "scope overlapping a held lock must conflict");
+                }
+            }
+        });
+        lock_json
+            .push(("conflict_rollback_ns".into(), r.summary.mean * 1e9 / (1024.0 * contenders.len() as f64)));
+        push(r);
+        drop(held);
+
+        // Memory: the tentpole claim — one 32-bit word per vertex.
+        let atomic_bytes = LockTable::bytes_per_vertex();
+        let rwlock_bytes = std::mem::size_of::<std::sync::RwLock<()>>();
+        println!(
+            "{:<44} {:>12} (vs {} B/vertex for std RwLock<()> — {:.1}x smaller)",
+            "locktable/bytes-per-vertex",
+            format!("{atomic_bytes} B"),
+            rwlock_bytes,
+            rwlock_bytes as f64 / atomic_bytes as f64
+        );
+        lock_json.push(("bytes_per_vertex_atomic".into(), atomic_bytes as f64));
+        lock_json.push(("bytes_per_vertex_rwlock".into(), rwlock_bytes as f64));
+    }
+
     // ---- engine per-update overhead ----------------------------------------
     struct Noop;
     impl UpdateFn<u64, ()> for Noop {
@@ -96,58 +151,45 @@ fn main() {
             *scope.vertex_mut() += 1;
         }
     }
+    let noop = Noop;
     for workers in [1usize, 2, 4] {
-        let g = ring(65_536, 4);
-        let locks = LockTable::new(65_536);
+        let mut g = ring(65_536, 4);
         let sdt = Sdt::new();
-        let noop = Noop;
-        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&noop];
         let sched = MultiQueueFifo::new(65_536, workers);
         let timer = Timer::start();
         for v in 0..65_536u32 {
             sched.add_task(Task::new(v));
         }
-        let report = ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(workers).with_model(ConsistencyModel::Edge),
-        );
+        let report = Program::new()
+            .update_fn(&noop)
+            .workers(workers)
+            .model(ConsistencyModel::Edge)
+            // explicit back-end: measure the threaded loop even at 1 worker
+            .run_on(&graphlab::engine::ThreadedEngine, &mut g, &sched, &sdt);
         let per_task = timer.elapsed_secs() / report.updates as f64;
         println!(
-            "{:<44} {:>12} (engine trivial-update cost, {} workers)",
+            "{:<44} {:>12} (engine trivial-update cost, {} workers, {} conflicts)",
             format!("engine/noop/{workers}w"),
             fmt_secs(per_task),
-            workers
+            workers,
+            report.contention.conflicts
         );
     }
 
     // throughput with a single queue for contrast
     {
-        let g = ring(65_536, 4);
-        let locks = LockTable::new(65_536);
+        let mut g = ring(65_536, 4);
         let sdt = Sdt::new();
-        let noop = Noop;
-        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&noop];
+        let program = Program::new()
+            .update_fn(&noop)
+            .workers(2)
+            .model(ConsistencyModel::Edge);
         let sched = FifoScheduler::new(65_536);
         for v in 0..65_536u32 {
             sched.add_task(Task::new(v));
         }
         let timer = Timer::start();
-        let report = ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(2).with_model(ConsistencyModel::Edge),
-        );
+        let report = program.run(&mut g, &sched, &sdt);
         println!(
             "{:<44} {:>12} (strict single-queue, 2 workers)",
             "engine/noop/fifo-2w",
@@ -159,16 +201,7 @@ fn main() {
             sched.add_task(Task::with_priority(v, (v % 13) as f64));
         }
         let timer = Timer::start();
-        let report = ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(2).with_model(ConsistencyModel::Edge),
-        );
+        let report = program.run(&mut g, &sched, &sdt);
         println!(
             "{:<44} {:>12} (strict priority heap, 2 workers)",
             "engine/noop/priority-2w",
@@ -207,4 +240,14 @@ fn main() {
         .unwrap();
     }
     println!("wrote results/micro.tsv");
+
+    // Lock-table JSON (the measurable tentpole win, machine-readable).
+    let mut f = std::fs::File::create("results/BENCH_locks.json").unwrap();
+    writeln!(f, "{{").unwrap();
+    for (i, (key, value)) in lock_json.iter().enumerate() {
+        let comma = if i + 1 == lock_json.len() { "" } else { "," };
+        writeln!(f, "  \"{key}\": {value:.3}{comma}").unwrap();
+    }
+    writeln!(f, "}}").unwrap();
+    println!("wrote results/BENCH_locks.json");
 }

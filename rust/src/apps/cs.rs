@@ -199,17 +199,23 @@ impl CsSolver {
         0.0
     }
 
-    /// Full Alg. 5 loop with the threaded engine as the inner solver.
+    /// Full Alg. 5 loop with the engine as the inner solver.
     pub fn solve(&mut self, workers: usize, max_outer: usize, gap_tol: f64) -> CsStats {
         use crate::consistency::{ConsistencyModel, LockTable};
-        use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+        use crate::engine::Program;
         use crate::scheduler::RoundRobinScheduler;
         use crate::sdt::Sdt;
 
         let n = self.problem.n;
+        // One lock table reused across all outer iterations: the graph is
+        // fixed, and rebuilding n lock words per Newton step is pure waste.
         let locks = LockTable::new(n);
         let sdt = Sdt::new();
         let upd = super::gabp::GabpUpdate::new(1e-9);
+        let program = Program::new()
+            .update_fn(&upd)
+            .workers(workers)
+            .model(ConsistencyModel::Edge);
         let mut stats = CsStats {
             outer_iterations: 0,
             inner_updates: 0,
@@ -222,19 +228,7 @@ impl CsSolver {
             // round-robin sweeps (the paper's §4.5 scheduling choice), warm
             // messages persisted from the previous outer iteration.
             let sched = RoundRobinScheduler::new(n, 60);
-            let fns: Vec<&dyn UpdateFn<GabpVertex, GabpEdge>> = vec![&upd];
-            let report = ThreadedEngine::run(
-                &self.graph,
-                &locks,
-                &sched,
-                &fns,
-                &sdt,
-                &[],
-                &[],
-                &EngineConfig::default()
-                    .with_workers(workers)
-                    .with_model(ConsistencyModel::Edge),
-            );
+            let report = program.run_with_locks(&self.graph, &locks, &sched, &sdt);
             stats.inner_updates += report.updates;
             self.apply_direction();
             stats.outer_iterations += 1;

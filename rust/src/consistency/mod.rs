@@ -14,17 +14,24 @@
 //!   reads/writes are the application's responsibility (the paper's stated
 //!   caveat — used by CoEM and the relaxed Lasso experiment).
 //!
-//! Locks are per-vertex reader–writer locks; a scope acquires the locks of
-//! `{v} ∪ N(v)` in **ascending vertex-id order**, which makes the protocol
-//! deadlock-free (all lock orders are consistent with one global total
-//! order). Edge data `u -> v` is guarded by its endpoint vertex locks.
+//! Locks are compact word-per-vertex atomic reader–writer locks
+//! ([`lock::ScopeLock`]). A scope is acquired **all-or-nothing**: the center
+//! is write-locked first, then the neighbors in the caller-supplied order;
+//! the first conflict rolls everything back and returns a [`Conflict`]
+//! instead of blocking. Because no acquisition ever *holds-and-waits*,
+//! deadlock is impossible regardless of lock order — which frees the caller
+//! to pick a conflict-locality order (most-contended locks first, see
+//! [`crate::graph::DataGraph::lock_neighbors`]) instead of the global
+//! ascending-id order the old blocking protocol needed. Edge data `u -> v`
+//! is guarded by its endpoint vertex locks.
 
+pub mod lock;
 mod scope;
 
+pub use lock::{Backoff, ScopeLock};
 pub use scope::Scope;
 
 use crate::graph::VertexId;
-use std::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// Which consistency model the engine enforces (paper §3.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,24 +69,30 @@ impl ConsistencyModel {
     }
 }
 
-/// A held per-vertex lock (read or write).
-pub enum Guard<'a> {
-    Read(RwLockReadGuard<'a, ()>),
-    Write(RwLockWriteGuard<'a, ()>),
+/// A failed scope try-acquire: `vertex` is the lock that could not be taken.
+/// Everything acquired before it has already been rolled back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conflict {
+    pub vertex: VertexId,
 }
 
-/// The set of locks held by one scope. The vertex model holds exactly one
-/// write guard — stored inline to keep the engine hot path allocation-free.
-pub enum ScopeGuards<'a> {
-    Single(Guard<'a>),
-    Many(Vec<Guard<'a>>),
+/// The locks held by one successfully acquired scope. Dropping the guard
+/// releases every lock. No allocation: the guard only records the center,
+/// the neighbor slice it locked, and the model (which determines the lock
+/// kind per vertex).
+pub struct ScopeGuard<'a> {
+    table: &'a LockTable,
+    center: VertexId,
+    neighbors: &'a [VertexId],
+    model: ConsistencyModel,
 }
 
-impl<'a> ScopeGuards<'a> {
+impl<'a> ScopeGuard<'a> {
+    /// Number of locks held.
     pub fn len(&self) -> usize {
-        match self {
-            ScopeGuards::Single(_) => 1,
-            ScopeGuards::Many(v) => v.len(),
+        match self.model {
+            ConsistencyModel::Vertex => 1,
+            _ => self.neighbors.len() + 1,
         }
     }
 
@@ -87,24 +100,64 @@ impl<'a> ScopeGuards<'a> {
         self.len() == 0
     }
 
-    /// Count of write guards (test helper).
+    /// Count of write locks held (test helper).
     pub fn writes(&self) -> usize {
-        let count = |g: &Guard<'_>| matches!(g, Guard::Write(_)) as usize;
-        match self {
-            ScopeGuards::Single(g) => count(g),
-            ScopeGuards::Many(v) => v.iter().map(count).sum(),
+        match self.model {
+            ConsistencyModel::Vertex | ConsistencyModel::Edge => 1,
+            ConsistencyModel::Full => self.neighbors.len() + 1,
         }
     }
 }
 
-/// Per-vertex reader–writer lock table.
+impl Drop for ScopeGuard<'_> {
+    fn drop(&mut self) {
+        match self.model {
+            ConsistencyModel::Vertex => {}
+            ConsistencyModel::Edge => {
+                for &u in self.neighbors {
+                    self.table.locks[u as usize].unlock_read();
+                }
+            }
+            ConsistencyModel::Full => {
+                for &u in self.neighbors {
+                    self.table.locks[u as usize].unlock_write();
+                }
+            }
+        }
+        self.table.locks[self.center as usize].unlock_write();
+    }
+}
+
+/// A held single-vertex read lock (RAII), used by the sync fold.
+pub struct ReadGuard<'a> {
+    lock: &'a ScopeLock,
+}
+
+impl Drop for ReadGuard<'_> {
+    fn drop(&mut self) {
+        self.lock.unlock_read();
+    }
+}
+
+/// A held single-vertex write lock (RAII).
+pub struct WriteGuard<'a> {
+    lock: &'a ScopeLock,
+}
+
+impl Drop for WriteGuard<'_> {
+    fn drop(&mut self) {
+        self.lock.unlock_write();
+    }
+}
+
+/// Per-vertex atomic reader–writer lock table: 4 bytes per vertex.
 pub struct LockTable {
-    locks: Vec<RwLock<()>>,
+    locks: Vec<ScopeLock>,
 }
 
 impl LockTable {
     pub fn new(num_vertices: usize) -> LockTable {
-        LockTable { locks: (0..num_vertices).map(|_| RwLock::new(())).collect() }
+        LockTable { locks: (0..num_vertices).map(|_| ScopeLock::new()).collect() }
     }
 
     pub fn len(&self) -> usize {
@@ -115,49 +168,83 @@ impl LockTable {
         self.locks.is_empty()
     }
 
-    #[inline]
-    pub fn read(&self, v: VertexId) -> RwLockReadGuard<'_, ()> {
-        self.locks[v as usize].read().unwrap()
+    /// Bytes of lock state per vertex (for footprint reporting).
+    pub const fn bytes_per_vertex() -> usize {
+        std::mem::size_of::<ScopeLock>()
     }
 
+    /// Blocking shared lock on a single vertex (spin + backoff). The sync
+    /// thread's per-vertex fold uses this; scope acquisition never does.
     #[inline]
-    pub fn write(&self, v: VertexId) -> RwLockWriteGuard<'_, ()> {
-        self.locks[v as usize].write().unwrap()
+    pub fn read(&self, v: VertexId) -> ReadGuard<'_> {
+        let lock = &self.locks[v as usize];
+        lock.read_spin();
+        ReadGuard { lock }
     }
 
-    /// Acquire the scope locks for center `v` with (sorted, unique, self-free)
-    /// neighbor list `neighbors`, per `model`. Guards are returned in
-    /// acquisition order; dropping the vector releases every lock.
+    /// Blocking exclusive lock on a single vertex (spin + backoff).
+    #[inline]
+    pub fn write(&self, v: VertexId) -> WriteGuard<'_> {
+        let lock = &self.locks[v as usize];
+        lock.write_spin();
+        WriteGuard { lock }
+    }
+
+    /// All-or-nothing scope try-acquire for center `v` with (unique,
+    /// self-free) neighbor list `neighbors`, per `model`. On the first lock
+    /// that cannot be taken, everything acquired so far is released and the
+    /// conflicting vertex is returned — the caller never blocks and never
+    /// holds a partial scope.
     ///
-    /// Deadlock freedom: `{v} ∪ neighbors` is traversed in ascending id
-    /// order, so all concurrent acquisitions agree on a global lock order.
+    /// `neighbors` may be in any order (rollback makes every order
+    /// deadlock-free); passing [`crate::graph::DataGraph::lock_neighbors`]
+    /// (descending degree) makes contended acquisitions fail fast.
+    pub fn try_lock_scope<'a>(
+        &'a self,
+        v: VertexId,
+        neighbors: &'a [VertexId],
+        model: ConsistencyModel,
+    ) -> Result<ScopeGuard<'a>, Conflict> {
+        debug_assert!(!neighbors.contains(&v), "neighbors must exclude center");
+        if !self.locks[v as usize].try_write() {
+            return Err(Conflict { vertex: v });
+        }
+        if model.excludes_neighbors() {
+            for (i, &u) in neighbors.iter().enumerate() {
+                let ok = match model {
+                    ConsistencyModel::Full => self.locks[u as usize].try_write(),
+                    _ => self.locks[u as usize].try_read(),
+                };
+                if !ok {
+                    // Roll back: release the neighbors taken so far + center.
+                    for &w in &neighbors[..i] {
+                        match model {
+                            ConsistencyModel::Full => self.locks[w as usize].unlock_write(),
+                            _ => self.locks[w as usize].unlock_read(),
+                        }
+                    }
+                    self.locks[v as usize].unlock_write();
+                    return Err(Conflict { vertex: u });
+                }
+            }
+        }
+        Ok(ScopeGuard { table: self, center: v, neighbors, model })
+    }
+
+    /// Blocking scope acquisition: retry [`Self::try_lock_scope`] under a
+    /// bounded backoff. Compatibility path for externally-driven callers
+    /// (tests, micro-benchmarks); the threaded engine defers instead.
     pub fn lock_scope<'a>(
         &'a self,
         v: VertexId,
-        neighbors: &[VertexId],
+        neighbors: &'a [VertexId],
         model: ConsistencyModel,
-    ) -> ScopeGuards<'a> {
-        debug_assert!(neighbors.windows(2).all(|w| w[0] < w[1]), "neighbors must be sorted");
-        debug_assert!(!neighbors.contains(&v), "neighbors must exclude center");
-        match model {
-            ConsistencyModel::Vertex => ScopeGuards::Single(Guard::Write(self.write(v))),
-            ConsistencyModel::Edge | ConsistencyModel::Full => {
-                let mut guards = Vec::with_capacity(neighbors.len() + 1);
-                let mut center_taken = false;
-                for &u in neighbors {
-                    if !center_taken && v < u {
-                        guards.push(Guard::Write(self.write(v)));
-                        center_taken = true;
-                    }
-                    guards.push(match model {
-                        ConsistencyModel::Full => Guard::Write(self.write(u)),
-                        _ => Guard::Read(self.read(u)),
-                    });
-                }
-                if !center_taken {
-                    guards.push(Guard::Write(self.write(v)));
-                }
-                ScopeGuards::Many(guards)
+    ) -> ScopeGuard<'a> {
+        let mut backoff = Backoff::new();
+        loop {
+            match self.try_lock_scope(v, neighbors, model) {
+                Ok(guard) => return guard,
+                Err(_) => backoff.snooze(),
             }
         }
     }
@@ -166,8 +253,8 @@ impl LockTable {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::propcheck::forall;
     use crate::prop_assert;
+    use crate::util::propcheck::forall;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
 
@@ -211,8 +298,38 @@ mod tests {
         assert_eq!(guards.len(), 4);
     }
 
-    /// Hammer random overlapping scopes from several threads; with ordered
-    /// acquisition this must terminate (deadlock would hang the test) and
+    #[test]
+    fn try_lock_conflicts_and_rolls_back() {
+        let table = LockTable::new(4);
+        let held = table.try_lock_scope(2, &[1, 3], ConsistencyModel::Edge).unwrap();
+        // Adjacent center under the edge model: 1 is read-locked by `held`,
+        // so the write lock on center 1 must conflict.
+        let c = table.try_lock_scope(1, &[0, 2], ConsistencyModel::Edge).err().expect("must conflict");
+        assert_eq!(c.vertex, 1);
+        // Full-model scope overlapping a read-locked neighbor: center 0 is
+        // free, neighbor 1 conflicts — the rollback must leave 0 free again.
+        let c = table.try_lock_scope(0, &[1], ConsistencyModel::Full).err().expect("must conflict");
+        assert_eq!(c.vertex, 1);
+        drop(held);
+        // After rollback + release, the whole table is free.
+        let all = table.try_lock_scope(1, &[0, 2, 3], ConsistencyModel::Full).unwrap();
+        assert_eq!(all.writes(), 4);
+    }
+
+    #[test]
+    fn try_lock_vertex_model_ignores_neighbors() {
+        let table = LockTable::new(3);
+        let _r = table.read(1); // reader on a neighbor
+        let g = table.try_lock_scope(0, &[1, 2], ConsistencyModel::Vertex).unwrap();
+        assert_eq!(g.len(), 1);
+        // but an edge scope centered at 0 conflicts on the read-locked 1
+        drop(g);
+        let c = table.try_lock_scope(0, &[1, 2], ConsistencyModel::Full).err().expect("must conflict");
+        assert_eq!(c.vertex, 1);
+    }
+
+    /// Hammer random overlapping scopes from several threads; all-or-nothing
+    /// acquisition with rollback must terminate (no deadlock possible) and
     /// under Edge/Full no two adjacent centers may be active simultaneously.
     #[test]
     fn concurrent_scope_stress_no_deadlock_no_adjacent_centers() {
@@ -263,13 +380,12 @@ mod tests {
     }
 
     #[test]
-    fn prop_guard_count_and_order() {
+    fn prop_guard_count_and_release() {
         forall(60, |g| {
             let n = g.usize_in(2..40);
             let table = LockTable::new(n);
             let v = g.usize_in(0..n) as u32;
-            let mut nbrs: Vec<u32> = (0..n as u32).filter(|&u| u != v && g.bool()).collect();
-            nbrs.sort_unstable();
+            let nbrs: Vec<u32> = (0..n as u32).filter(|&u| u != v && g.bool()).collect();
             for model in
                 [ConsistencyModel::Vertex, ConsistencyModel::Edge, ConsistencyModel::Full]
             {
@@ -284,6 +400,9 @@ mod tests {
                     guards.len()
                 );
                 drop(guards);
+                // every lock must be free again after release
+                let refree = table.try_lock_scope(v, &nbrs, ConsistencyModel::Full);
+                prop_assert!(refree.is_ok(), "locks leaked after {model:?} release");
             }
             Ok(())
         });

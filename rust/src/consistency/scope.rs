@@ -2,7 +2,7 @@
 //! `v`, its adjacent edges, and its neighboring vertices — handed to an
 //! update function, with the consistency-model locks held for its lifetime.
 
-use super::{ConsistencyModel, LockTable, ScopeGuards};
+use super::{Conflict, ConsistencyModel, LockTable, ScopeGuard};
 use crate::graph::{DataGraph, Edge, EdgeId, VertexId};
 
 /// Locked neighborhood view passed to update functions:
@@ -16,18 +16,34 @@ pub struct Scope<'a, V, E> {
     graph: &'a DataGraph<V, E>,
     center: VertexId,
     model: ConsistencyModel,
-    _guards: Option<ScopeGuards<'a>>,
+    _guards: Option<ScopeGuard<'a>>,
 }
 
 impl<'a, V, E> Scope<'a, V, E> {
-    /// Acquire the scope of `v` under `model`.
+    /// Try to acquire the scope of `v` under `model` without blocking: the
+    /// whole exclusion set is taken all-or-nothing (most-contended locks
+    /// first, per [`DataGraph::lock_neighbors`]) and the first conflict
+    /// rolls back and reports the vertex that was busy. The threaded engine
+    /// turns an `Err` into a deferral instead of parking the worker.
+    pub fn try_lock(
+        graph: &'a DataGraph<V, E>,
+        locks: &'a LockTable,
+        v: VertexId,
+        model: ConsistencyModel,
+    ) -> Result<Scope<'a, V, E>, Conflict> {
+        let guards = locks.try_lock_scope(v, graph.lock_neighbors(v), model)?;
+        Ok(Scope { graph, center: v, model, _guards: Some(guards) })
+    }
+
+    /// Acquire the scope of `v` under `model`, blocking (bounded-backoff
+    /// retry of [`Scope::try_lock`]) until the exclusion set is free.
     pub fn lock(
         graph: &'a DataGraph<V, E>,
         locks: &'a LockTable,
         v: VertexId,
         model: ConsistencyModel,
     ) -> Scope<'a, V, E> {
-        let guards = locks.lock_scope(v, graph.neighbors(v), model);
+        let guards = locks.lock_scope(v, graph.lock_neighbors(v), model);
         Scope { graph, center: v, model, _guards: Some(guards) }
     }
 
@@ -241,6 +257,18 @@ mod tests {
         }
         let s = Scope::lock(&g, &locks, 0, ConsistencyModel::Vertex);
         assert_eq!(*s.vertex(), 5);
+    }
+
+    #[test]
+    fn try_lock_defers_instead_of_blocking() {
+        let (g, locks) = path3();
+        let held = Scope::try_lock(&g, &locks, 1, ConsistencyModel::Full).unwrap();
+        // Any scope overlapping {0,1,2} must conflict rather than block.
+        let c = Scope::try_lock(&g, &locks, 0, ConsistencyModel::Edge).err().expect("must conflict");
+        assert_eq!(c.vertex, 0);
+        drop(held);
+        let s = Scope::try_lock(&g, &locks, 0, ConsistencyModel::Edge).unwrap();
+        assert_eq!(*s.vertex(), 0);
     }
 
     #[test]

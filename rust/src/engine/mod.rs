@@ -9,10 +9,12 @@
 //!   capture a [task trace](trace::TaskTrace) consumed by the multicore
 //!   simulator ([`crate::sim`]) that regenerates the paper's speedup figures.
 
+pub mod program;
 pub mod sequential;
 pub mod threaded;
 pub mod trace;
 
+pub use program::{Engine, Program};
 pub use sequential::SequentialEngine;
 pub use threaded::ThreadedEngine;
 
@@ -153,6 +155,35 @@ impl EngineConfig {
 /// Termination predicate over the SDT (paper §3.5, second mode).
 pub type TerminationFn = Box<dyn Fn(&Sdt) -> bool + Send + Sync>;
 
+/// Scope-lock contention counters from a threaded run. The engine never
+/// parks a worker on a scope lock; every failed all-or-nothing try-acquire
+/// is a `conflict`, and a task whose bounded re-attempts all conflict is a
+/// `deferral` (pushed to the worker's retry deque and re-dispatched later).
+/// All counters are zero for sequential runs and for uncontended workloads.
+#[derive(Debug, Clone, Default)]
+pub struct ContentionStats {
+    /// Failed scope try-acquires (each costs a rollback, not a park).
+    pub conflicts: u64,
+    /// Tasks pushed to a per-worker retry deque after exhausting their
+    /// bounded spin re-attempts.
+    pub deferrals: u64,
+    /// Tasks re-dispatched from a retry deque (own or stolen).
+    pub retries: u64,
+    /// Retries taken from *another* worker's retry deque.
+    pub steals: u64,
+    /// Per-worker conflict counts (index = worker id).
+    pub per_worker_conflicts: Vec<u64>,
+    /// Per-worker deferral counts (index = worker id).
+    pub per_worker_deferrals: Vec<u64>,
+}
+
+impl ContentionStats {
+    /// Conflicts per completed update — the headline contention metric.
+    pub fn conflict_rate(&self, updates: u64) -> f64 {
+        self.conflicts as f64 / updates.max(1) as f64
+    }
+}
+
 /// Outcome of an engine run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -163,6 +194,8 @@ pub struct RunReport {
     pub per_worker: Vec<u64>,
     /// Number of background/on-demand sync executions performed.
     pub syncs_run: u64,
+    /// Scope-lock contention counters (all zero for sequential runs).
+    pub contention: ContentionStats,
 }
 
 impl RunReport {

@@ -1,0 +1,408 @@
+//! The unified engine front-end: a [`Program`] bundles everything a GraphLab
+//! run needs — update functions, syncs, terminators, and the engine
+//! configuration — and the [`Engine`] trait abstracts over the sequential
+//! and threaded back-ends, so call sites stop hand-assembling the historical
+//! 8-argument `run(...)` invocation (and stop managing lock tables: the
+//! threaded back-end builds its own).
+//!
+//! ```ignore
+//! let report = Program::new()
+//!     .update_fn(&diffuse)
+//!     .sync(mean_op)
+//!     .workers(4)
+//!     .model(ConsistencyModel::Edge)
+//!     .run(&mut graph, &sched, &sdt);
+//! ```
+
+use super::sequential::{SeqOptions, SequentialEngine};
+use super::threaded::ThreadedEngine;
+use super::trace::TaskTrace;
+use super::{EngineConfig, RunReport, TerminationFn, UpdateFn};
+use crate::consistency::{ConsistencyModel, LockTable};
+use crate::graph::DataGraph;
+use crate::scheduler::Scheduler;
+use crate::sdt::{Sdt, SyncOp};
+
+/// An engine back-end that can execute a [`Program`]. Both back-ends take
+/// `&mut DataGraph` for a uniform signature; the threaded engine reborrows
+/// it shared (its interior mutability is guarded by the lock table it
+/// builds for the run).
+pub trait Engine<V, E> {
+    fn name(&self) -> &'static str;
+
+    fn execute(
+        &self,
+        program: &Program<'_, V, E>,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport;
+}
+
+impl<V: Send + Sync, E: Send + Sync> Engine<V, E> for ThreadedEngine {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn execute(
+        &self,
+        program: &Program<'_, V, E>,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport {
+        let locks = LockTable::new(graph.num_vertices());
+        ThreadedEngine::run(
+            graph,
+            &locks,
+            scheduler,
+            &program.fns,
+            sdt,
+            &program.syncs,
+            &program.terminators,
+            &program.config,
+        )
+    }
+}
+
+impl<V, E> Engine<V, E> for SequentialEngine {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn execute(
+        &self,
+        program: &Program<'_, V, E>,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport {
+        SequentialEngine::run(
+            graph,
+            scheduler,
+            &program.fns,
+            sdt,
+            &program.syncs,
+            &program.terminators,
+            &program.config,
+            &program.seq,
+        )
+        .0
+    }
+}
+
+/// A complete GraphLab program: graph-independent logic (update functions,
+/// syncs, terminators) plus run configuration. Built with chained setters,
+/// executed against a graph + scheduler + SDT via [`Program::run`] (which
+/// picks a back-end from `workers`), [`Program::run_on`] (explicit
+/// back-end), or [`Program::run_traced`] (sequential + task trace for the
+/// multicore simulator).
+pub struct Program<'a, V, E> {
+    pub(crate) fns: Vec<&'a dyn UpdateFn<V, E>>,
+    pub(crate) syncs: Vec<SyncOp<V>>,
+    pub(crate) terminators: Vec<TerminationFn>,
+    /// Engine configuration (workers, model, budget, term-check cadence).
+    pub config: EngineConfig,
+    /// Sequential-backend options (trace capture, sync cadence, virtual
+    /// workers for worker-affine schedulers).
+    pub seq: SeqOptions,
+}
+
+impl<'a, V, E> Default for Program<'a, V, E> {
+    fn default() -> Self {
+        Program {
+            fns: Vec::new(),
+            syncs: Vec::new(),
+            terminators: Vec::new(),
+            config: EngineConfig::default(),
+            seq: SeqOptions::default(),
+        }
+    }
+}
+
+impl<'a, V, E> Program<'a, V, E> {
+    pub fn new() -> Program<'a, V, E> {
+        Program::default()
+    }
+
+    /// Register an update function. `FuncId` in a [`crate::scheduler::Task`]
+    /// indexes the functions in registration order.
+    pub fn update_fn(mut self, f: &'a dyn UpdateFn<V, E>) -> Self {
+        self.fns.push(f);
+        self
+    }
+
+    /// Register a sync operation (periodic if its interval is set; every
+    /// sync also runs once at the end of the run).
+    pub fn sync(mut self, op: SyncOp<V>) -> Self {
+        self.syncs.push(op);
+        self
+    }
+
+    /// Register a termination predicate over the SDT (paper §3.5).
+    pub fn terminate_when(
+        mut self,
+        f: impl Fn(&Sdt) -> bool + Send + Sync + 'static,
+    ) -> Self {
+        self.terminators.push(Box::new(f));
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.config.workers = workers;
+        self
+    }
+
+    pub fn model(mut self, model: ConsistencyModel) -> Self {
+        self.config.model = model;
+        self
+    }
+
+    pub fn max_updates(mut self, max: u64) -> Self {
+        self.config.max_updates = Some(max);
+        self
+    }
+
+    pub fn term_check_every(mut self, every: u64) -> Self {
+        self.config.term_check_every = every;
+        self
+    }
+
+    /// Sequential back-end: run on-demand syncs every N updates (0 = only
+    /// at the end).
+    pub fn sync_every(mut self, every: u64) -> Self {
+        self.seq.sync_every = every;
+        self
+    }
+
+    /// Sequential back-end: cycle `next_task(worker)` over this many
+    /// virtual worker ids (needed for worker-affine schedulers).
+    pub fn virtual_workers(mut self, n: usize) -> Self {
+        self.seq.virtual_workers = n;
+        self
+    }
+
+    /// Number of registered update functions.
+    pub fn num_fns(&self) -> usize {
+        self.fns.len()
+    }
+
+    /// Execute on an explicit back-end.
+    pub fn run_on<Eng: Engine<V, E> + ?Sized>(
+        &self,
+        engine: &Eng,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport {
+        assert!(!self.fns.is_empty(), "program has no update functions");
+        engine.execute(self, graph, scheduler, sdt)
+    }
+
+    /// Execute, picking the back-end from the configured worker count:
+    /// `workers > 1` runs threaded, otherwise sequential. Programs with
+    /// *periodic* syncs always run threaded — only the threaded back-end
+    /// has the background sync thread that honors `SyncOp::interval`, so
+    /// downgrading them to sequential would silently drop the cadence.
+    pub fn run(
+        &self,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport
+    where
+        V: Send + Sync,
+        E: Send + Sync,
+    {
+        let needs_background_sync = self.syncs.iter().any(|op| op.interval.is_some());
+        if self.config.workers > 1 || needs_background_sync {
+            self.run_on(&ThreadedEngine, graph, scheduler, sdt)
+        } else {
+            self.run_on(&SequentialEngine, graph, scheduler, sdt)
+        }
+    }
+
+    /// Threaded back-end with a caller-managed lock table. For hot loops
+    /// that execute many runs over the same graph (e.g. an interior-point
+    /// outer loop driving inner solves), where rebuilding the per-vertex
+    /// table on every [`Program::run`] would be wasted allocation.
+    pub fn run_with_locks(
+        &self,
+        graph: &DataGraph<V, E>,
+        locks: &LockTable,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport
+    where
+        V: Send + Sync,
+        E: Send + Sync,
+    {
+        assert!(!self.fns.is_empty(), "program has no update functions");
+        ThreadedEngine::run(
+            graph,
+            locks,
+            scheduler,
+            &self.fns,
+            sdt,
+            &self.syncs,
+            &self.terminators,
+            &self.config,
+        )
+    }
+
+    /// Execute sequentially and capture the task trace the multicore
+    /// simulator replays (`capture_trace` is forced on).
+    pub fn run_traced(
+        &self,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> (RunReport, TaskTrace) {
+        assert!(!self.fns.is_empty(), "program has no update functions");
+        let mut opts = self.seq.clone();
+        opts.capture_trace = true;
+        SequentialEngine::run(
+            graph,
+            scheduler,
+            &self.fns,
+            sdt,
+            &self.syncs,
+            &self.terminators,
+            &self.config,
+            &opts,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consistency::Scope;
+    use crate::engine::{StopReason, UpdateContext};
+    use crate::graph::GraphBuilder;
+    use crate::scheduler::{FifoScheduler, Task};
+    use crate::sdt::SyncOpBuilder;
+
+    fn ring(n: usize) -> DataGraph<u64, ()> {
+        let mut b = GraphBuilder::new();
+        for _ in 0..n {
+            b.add_vertex(0u64);
+        }
+        for i in 0..n {
+            b.add_undirected(i as u32, ((i + 1) % n) as u32, (), ());
+        }
+        b.build()
+    }
+
+    struct Bump {
+        rounds: u64,
+    }
+    impl UpdateFn<u64, ()> for Bump {
+        fn update(&self, scope: &mut Scope<'_, u64, ()>, ctx: &mut UpdateContext<'_>) {
+            *scope.vertex_mut() += 1;
+            if *scope.vertex() < self.rounds {
+                ctx.add_task(scope.center(), 1.0);
+            }
+        }
+    }
+
+    fn seeded_fifo(n: usize) -> FifoScheduler {
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        sched
+    }
+
+    #[test]
+    fn program_runs_on_both_backends_with_same_result() {
+        let n = 32;
+        let f = Bump { rounds: 7 };
+        let total_op = SyncOpBuilder::<u64, u64>::new("total", 0)
+            .build(|acc, v| acc + *v, |acc, sdt| sdt.set("total", acc));
+        let program = Program::new().update_fn(&f).sync(total_op).workers(1);
+        let mut g = ring(n);
+        let sdt = Sdt::new();
+        let report = program.run(&mut g, &seeded_fifo(n), &sdt);
+        assert_eq!(report.stop, StopReason::SchedulerEmpty);
+        assert_eq!(report.updates, n as u64 * 7);
+        assert_eq!(sdt.get::<u64>("total"), Some(n as u64 * 7));
+
+        let f4 = Bump { rounds: 7 };
+        let total_op = SyncOpBuilder::<u64, u64>::new("total", 0)
+            .build(|acc, v| acc + *v, |acc, sdt| sdt.set("total", acc));
+        let threaded = Program::new().update_fn(&f4).sync(total_op).workers(4);
+        let mut g2 = ring(n);
+        let sdt2 = Sdt::new();
+        let report2 = threaded.run(&mut g2, &seeded_fifo(n), &sdt2);
+        assert_eq!(report2.updates, report.updates);
+        assert_eq!(sdt2.get::<u64>("total"), Some(n as u64 * 7));
+    }
+
+    /// A program with a *periodic* sync must not be downgraded to the
+    /// sequential back-end at 1 worker — only the threaded engine owns the
+    /// background thread that honors `SyncOp::interval`.
+    #[test]
+    fn periodic_sync_runs_even_at_one_worker() {
+        let n = 32;
+        let f = Bump { rounds: 200 };
+        let op = SyncOpBuilder::<u64, u64>::new("total", 0)
+            .every(std::time::Duration::from_millis(1))
+            .build(|acc, v| acc + *v, |acc, sdt| sdt.set("total", acc));
+        let program = Program::new().update_fn(&f).sync(op).workers(1);
+        let mut g = ring(n);
+        let sdt = Sdt::new();
+        let report = program.run(&mut g, &seeded_fifo(n), &sdt);
+        assert_eq!(report.updates, n as u64 * 200);
+        // final sync always runs, so the SDT holds the exact final total
+        assert_eq!(sdt.get::<u64>("total"), Some(n as u64 * 200));
+        assert!(report.syncs_run >= 1);
+    }
+
+    #[test]
+    fn run_on_explicit_backend_and_trace() {
+        let n = 8;
+        let f = Bump { rounds: 3 };
+        let program = Program::new().update_fn(&f);
+        let mut g = ring(n);
+        let sdt = Sdt::new();
+        let report =
+            program.run_on(&SequentialEngine, &mut g, &seeded_fifo(n), &sdt);
+        assert_eq!(report.updates, n as u64 * 3);
+
+        let mut g = ring(n);
+        let (report, trace) = program.run_traced(&mut g, &seeded_fifo(n), &sdt);
+        assert_eq!(trace.len() as u64, report.updates);
+    }
+
+    #[test]
+    fn terminator_and_budget_flow_through() {
+        let n = 8;
+        let f = Bump { rounds: u64::MAX };
+        let program = Program::new()
+            .update_fn(&f)
+            .terminate_when(|sdt: &Sdt| sdt.get_or::<bool>("stop", false))
+            .term_check_every(4)
+            .max_updates(40)
+            .workers(1);
+        let mut g = ring(n);
+        let sdt = Sdt::new();
+        let report = program.run(&mut g, &seeded_fifo(n), &sdt);
+        assert_eq!(report.stop, StopReason::UpdateLimit);
+        assert_eq!(report.updates, 40);
+
+        sdt.set("stop", true);
+        let mut g = ring(n);
+        let report = program.run(&mut g, &seeded_fifo(n), &sdt);
+        assert_eq!(report.stop, StopReason::TerminationFn);
+    }
+
+    #[test]
+    #[should_panic(expected = "no update functions")]
+    fn empty_program_panics() {
+        let program: Program<'_, u64, ()> = Program::new();
+        let mut g = ring(4);
+        let sdt = Sdt::new();
+        program.run_on(&SequentialEngine, &mut g, &seeded_fifo(4), &sdt);
+    }
+}

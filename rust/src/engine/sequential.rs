@@ -4,7 +4,10 @@
 //! multicore simulator replays.
 
 use super::trace::{TaskTrace, TraceEvent};
-use super::{EngineConfig, RunReport, StopReason, TerminationFn, UpdateContext, UpdateFn};
+use super::{
+    ContentionStats, EngineConfig, RunReport, StopReason, TerminationFn, UpdateContext,
+    UpdateFn,
+};
 use crate::consistency::Scope;
 use crate::graph::DataGraph;
 use crate::scheduler::Scheduler;
@@ -15,7 +18,7 @@ use crate::util::Timer;
 pub struct SequentialEngine;
 
 /// Options beyond [`EngineConfig`] for a sequential run.
-#[derive(Default)]
+#[derive(Debug, Clone, Default)]
 pub struct SeqOptions {
     /// Capture a [`TaskTrace`] (adds two clock reads per update).
     pub capture_trace: bool,
@@ -131,6 +134,8 @@ impl SequentialEngine {
             stop,
             per_worker: vec![updates],
             syncs_run,
+            // single thread: scope conflicts cannot occur
+            contention: ContentionStats::default(),
         };
         (report, trace)
     }

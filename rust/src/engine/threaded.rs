@@ -1,18 +1,27 @@
 //! Multithreaded shared-memory engine — the reproduction of the paper's
-//! optimized PThreads implementation (§3.6). Worker threads pull tasks from
-//! the scheduler, lock each task's scope per the consistency model, apply
-//! the update function, flush spawned tasks, and cooperate on termination
-//! (scheduler-drained, termination function, or update budget). A background
-//! thread executes periodic sync operations concurrently with the workers
-//! (§3.2.2), taking per-vertex read locks during its fold.
+//! optimized PThreads implementation (§3.6), rebuilt around a
+//! **non-blocking scope protocol**: worker threads pull tasks from the
+//! scheduler and *try*-acquire each task's scope all-or-nothing
+//! ([`Scope::try_lock`]). A conflict never parks the worker — after a short
+//! bounded spin the task is **deferred** to the worker's retry deque and the
+//! worker moves on to other work; idle workers steal retries from their
+//! peers. Per-worker conflict/deferral/steal counters are surfaced through
+//! [`RunReport::contention`]. A background thread executes periodic sync
+//! operations concurrently with the workers (§3.2.2), taking per-vertex
+//! read locks during its fold.
 
-use super::{EngineConfig, RunReport, StopReason, TerminationFn, UpdateContext, UpdateFn};
+use super::{
+    ContentionStats, EngineConfig, RunReport, StopReason, TerminationFn, UpdateContext,
+    UpdateFn,
+};
 use crate::consistency::{LockTable, Scope};
 use crate::graph::DataGraph;
-use crate::scheduler::Scheduler;
+use crate::scheduler::{Scheduler, Task};
 use crate::sdt::{Sdt, SyncOp};
 use crate::util::Timer;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Threaded engine. See module docs.
@@ -21,6 +30,12 @@ pub struct ThreadedEngine;
 const STOP_NONE: u8 = 0;
 const STOP_TERM_FN: u8 = 1;
 const STOP_LIMIT: u8 = 2;
+
+/// Bounded in-place re-attempts of a conflicted scope before deferring.
+/// Each failed attempt spins a short, growing window — long enough to ride
+/// out a neighbor's brief lock hold, short enough that a real conflict
+/// costs a requeue instead of a stall.
+const CONFLICT_ATTEMPTS: u32 = 3;
 
 impl ThreadedEngine {
     /// Run the program to completion on `config.workers` threads.
@@ -39,22 +54,36 @@ impl ThreadedEngine {
         let timer = Timer::start();
         let stop = AtomicU8::new(STOP_NONE);
         let engine_done = AtomicBool::new(false);
+        // Tasks popped from the scheduler but not yet completed. Deferred
+        // tasks stay counted here, so the drain check below cannot conclude
+        // early while a conflicted task sits in a retry deque.
         let inflight = AtomicUsize::new(0);
         let total_updates = AtomicU64::new(0);
         let workers = config.workers.max(1);
         let per_worker: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
+        let per_conflicts: Vec<AtomicU64> =
+            (0..workers).map(|_| AtomicU64::new(0)).collect();
+        let per_deferrals: Vec<AtomicU64> =
+            (0..workers).map(|_| AtomicU64::new(0)).collect();
+        let total_retries = AtomicU64::new(0);
+        let total_steals = AtomicU64::new(0);
         let syncs_run = AtomicU64::new(0);
+        // Per-worker retry deques for deferred (conflicted) tasks; peers
+        // steal from the back when their own sources run dry.
+        let retry: Vec<Mutex<VecDeque<Task>>> =
+            (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+        let retry_len = AtomicUsize::new(0);
         // The last worker to exit flips `engine_done`, releasing the
-        // background sync thread (the crossbeam scope joins everything).
+        // background sync thread (the thread scope joins everything).
         let workers_remaining = AtomicUsize::new(workers);
 
-        crossbeam_utils::thread::scope(|s| {
+        std::thread::scope(|s| {
             // Background sync thread (periodic ops only).
             let has_periodic = syncs.iter().any(|op| op.interval.is_some());
             if has_periodic {
                 let engine_done = &engine_done;
                 let syncs_run = &syncs_run;
-                s.spawn(move |_| {
+                s.spawn(move || {
                     let mut last_run: Vec<Timer> = syncs.iter().map(|_| Timer::start()).collect();
                     while !engine_done.load(Ordering::Acquire) {
                         for (i, op) in syncs.iter().enumerate() {
@@ -75,18 +104,91 @@ impl ThreadedEngine {
                 let inflight = &inflight;
                 let total_updates = &total_updates;
                 let per_worker = &per_worker;
+                let per_conflicts = &per_conflicts;
+                let per_deferrals = &per_deferrals;
+                let total_retries = &total_retries;
+                let total_steals = &total_steals;
+                let retry = &retry;
+                let retry_len = &retry_len;
                 let workers_remaining = &workers_remaining;
                 let engine_done = &engine_done;
-                s.spawn(move |_| {
+                s.spawn(move || {
                     let mut local: u64 = 0;
+                    let mut conflicts: u64 = 0;
+                    let mut deferrals: u64 = 0;
+                    let mut retries: u64 = 0;
+                    let mut steals: u64 = 0;
                     let mut idle_spins: u32 = 0;
+                    // After a retry-sourced task conflicts again, look at the
+                    // scheduler first next round instead of hammering the
+                    // same contended scope.
+                    let mut skip_retry_once = false;
                     // reused across tasks: keeps the spawned-task buffer warm
                     let mut ctx = UpdateContext::new(sdt, w);
+                    let pop_own = || -> Option<Task> {
+                        if retry_len.load(Ordering::Acquire) == 0 {
+                            return None;
+                        }
+                        let t = retry[w].lock().unwrap().pop_front();
+                        if t.is_some() {
+                            retry_len.fetch_sub(1, Ordering::AcqRel);
+                        }
+                        t
+                    };
                     loop {
                         if stop.load(Ordering::Acquire) != STOP_NONE {
                             break;
                         }
-                        let Some(task) = scheduler.next_task(w) else {
+                        // Task sources: own retries, the scheduler, then
+                        // retries stolen from peers.
+                        let mut task: Option<Task> = None;
+                        let mut from_retry = false;
+                        if !skip_retry_once {
+                            if let Some(t) = pop_own() {
+                                task = Some(t);
+                                from_retry = true;
+                            }
+                        }
+                        if task.is_none() {
+                            // Count optimistically *before* popping: a task
+                            // must never exist outside both the scheduler and
+                            // `inflight`, or a peer could pass the drain check
+                            // below in the pop-to-increment window and exit
+                            // early, collapsing the rest of the run onto one
+                            // worker. (The drain check reads `inflight` before
+                            // `is_done()`, so either it sees our increment or
+                            // the task is still queued and `is_done()` is
+                            // false.)
+                            inflight.fetch_add(1, Ordering::AcqRel);
+                            match scheduler.next_task(w) {
+                                Some(t) => task = Some(t),
+                                None => {
+                                    inflight.fetch_sub(1, Ordering::AcqRel);
+                                }
+                            }
+                        }
+                        if task.is_none() && skip_retry_once {
+                            if let Some(t) = pop_own() {
+                                task = Some(t);
+                                from_retry = true;
+                            }
+                        }
+                        if task.is_none() && workers > 1 && retry_len.load(Ordering::Acquire) > 0
+                        {
+                            for i in 1..workers {
+                                let peer = (w + i) % workers;
+                                let stolen = retry[peer].lock().unwrap().pop_back();
+                                if let Some(t) = stolen {
+                                    retry_len.fetch_sub(1, Ordering::AcqRel);
+                                    steals += 1;
+                                    task = Some(t);
+                                    from_retry = true;
+                                    break;
+                                }
+                            }
+                        }
+                        skip_retry_once = false;
+                        let Some(task) = task else {
                             if inflight.load(Ordering::Acquire) == 0 && scheduler.is_done() {
                                 break;
                             }
@@ -101,13 +203,44 @@ impl ThreadedEngine {
                             continue;
                         };
                         idle_spins = 0;
-                        inflight.fetch_add(1, Ordering::AcqRel);
+                        if from_retry {
+                            retries += 1;
+                        }
+
+                        // Non-blocking scope acquisition: a few in-place
+                        // re-attempts with a growing spin window, then defer.
+                        let mut scope = None;
+                        for attempt in 0..CONFLICT_ATTEMPTS {
+                            match Scope::try_lock(graph, locks, task.vertex, config.model) {
+                                Ok(s) => {
+                                    scope = Some(s);
+                                    break;
+                                }
+                                Err(_) => {
+                                    conflicts += 1;
+                                    for _ in 0..(16u32 << attempt) {
+                                        std::hint::spin_loop();
+                                    }
+                                }
+                            }
+                        }
+                        let Some(mut scope) = scope else {
+                            // Defer: requeue on the retry deque and move on.
+                            // The task still counts as in flight, so the
+                            // drain check above cannot fire while it waits.
+                            deferrals += 1;
+                            retry[w].lock().unwrap().push_back(task);
+                            retry_len.fetch_add(1, Ordering::AcqRel);
+                            if from_retry {
+                                skip_retry_once = true;
+                                std::thread::yield_now();
+                            }
+                            continue;
+                        };
 
                         ctx.reset(w, task.priority);
-                        {
-                            let mut scope = Scope::lock(graph, locks, task.vertex, config.model);
-                            fns[task.func as usize].update(&mut scope, &mut ctx);
-                        } // scope locks released before flushing tasks
+                        fns[task.func as usize].update(&mut scope, &mut ctx);
+                        drop(scope); // scope locks released before flushing tasks
                         ctx.drain_spawned(|t| scheduler.add_task(t));
                         scheduler.task_done(task, w);
                         inflight.fetch_sub(1, Ordering::AcqRel);
@@ -130,13 +263,16 @@ impl ThreadedEngine {
                         }
                     }
                     per_worker[w].store(local, Ordering::Release);
+                    per_conflicts[w].store(conflicts, Ordering::Release);
+                    per_deferrals[w].store(deferrals, Ordering::Release);
+                    total_retries.fetch_add(retries, Ordering::AcqRel);
+                    total_steals.fetch_add(steals, Ordering::AcqRel);
                     if workers_remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                         engine_done.store(true, Ordering::Release);
                     }
                 });
             }
-        })
-        .expect("engine worker panicked");
+        });
         engine_done.store(true, Ordering::Release);
 
         // Final execution of every sync op so the SDT reflects the end state.
@@ -150,12 +286,24 @@ impl ThreadedEngine {
             STOP_LIMIT => StopReason::UpdateLimit,
             _ => StopReason::SchedulerEmpty,
         };
+        let per_worker_conflicts: Vec<u64> =
+            per_conflicts.iter().map(|c| c.load(Ordering::Acquire)).collect();
+        let per_worker_deferrals: Vec<u64> =
+            per_deferrals.iter().map(|c| c.load(Ordering::Acquire)).collect();
         RunReport {
             updates: total_updates.load(Ordering::Relaxed),
             wall_secs: timer.elapsed_secs(),
             stop: stop_reason,
             per_worker: per_worker.iter().map(|c| c.load(Ordering::Acquire)).collect(),
             syncs_run: syncs_run.load(Ordering::Relaxed),
+            contention: ContentionStats {
+                conflicts: per_worker_conflicts.iter().sum(),
+                deferrals: per_worker_deferrals.iter().sum(),
+                retries: total_retries.load(Ordering::Acquire),
+                steals: total_steals.load(Ordering::Acquire),
+                per_worker_conflicts,
+                per_worker_deferrals,
+            },
         }
     }
 
@@ -299,6 +447,8 @@ mod tests {
             assert_eq!(*g.vertex_data(v), 100, "vertex {v}");
         }
         assert_eq!(report.updates, n as u64 * 50);
+        // accounting: the run drained, so every deferred task was re-dispatched
+        assert!(report.contention.retries >= report.contention.deferrals);
     }
 
     #[test]
@@ -374,4 +524,38 @@ mod tests {
         assert_eq!(report.stop, StopReason::TerminationFn);
         assert!(report.updates < 1000);
     }
+
+    /// Single worker, no background sync: nothing can conflict, so the
+    /// contention counters must be exactly zero.
+    #[test]
+    fn single_worker_never_defers() {
+        let n = 32;
+        let (g, locks) = ring(n);
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let f = SelfBump { rounds: 20 };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let report = ThreadedEngine::run(
+            &g,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default().with_workers(1).with_model(ConsistencyModel::Full),
+        );
+        assert_eq!(report.updates, n as u64 * 20);
+        assert_eq!(report.contention.conflicts, 0);
+        assert_eq!(report.contention.deferrals, 0);
+        assert_eq!(report.contention.retries, 0);
+        assert_eq!(report.contention.steals, 0);
+    }
+
+    // The contended-hub scenario (nonzero deferrals under Full consistency,
+    // conservation vs the sequential engine, per-worker counter accounting)
+    // lives in rust/tests/engine_stress.rs to avoid maintaining two copies.
 }

@@ -125,6 +125,20 @@ impl<V, E> GraphBuilder<V, E> {
         }
         let scope_adj = Csr { offsets: scope_offsets, items: scope_items };
 
+        // Lock adjacency: the same neighbor sets, reordered by descending
+        // degree (ties by id) so try-lock acquisitions test the most
+        // contended word first and fail fast on conflict.
+        let degree = |u: u32| {
+            scope_adj.offsets[u as usize + 1] - scope_adj.offsets[u as usize]
+        };
+        let mut lock_items = scope_adj.items.clone();
+        for v in 0..n {
+            let (s, t) =
+                (scope_adj.offsets[v] as usize, scope_adj.offsets[v + 1] as usize);
+            lock_items[s..t].sort_unstable_by_key(|&u| (std::cmp::Reverse(degree(u)), u));
+        }
+        let lock_adj = Csr { offsets: scope_adj.offsets.clone(), items: lock_items };
+
         // Reverse-edge table via lookup in the sorted out-rows.
         let find = |u: u32, v: u32| -> Option<u32> {
             let row =
@@ -141,6 +155,7 @@ impl<V, E> GraphBuilder<V, E> {
             out_adj,
             in_adj,
             scope_adj,
+            lock_adj,
             reverse,
             max_degree,
         }
@@ -230,6 +245,22 @@ mod tests {
                         "scope asymmetry {u} vs {v}"
                     );
                 }
+            }
+
+            // Lock adjacency is the same set, ordered degree-descending.
+            for v in 0..n as u32 {
+                let nbrs = graph.neighbors(v);
+                let locks = graph.lock_neighbors(v);
+                let mut sorted = locks.to_vec();
+                sorted.sort_unstable();
+                prop_assert!(sorted == nbrs, "lock set != scope set at {v}");
+                prop_assert!(
+                    locks.windows(2).all(|w| {
+                        let (da, db) = (graph.degree(w[0]), graph.degree(w[1]));
+                        da > db || (da == db && w[0] < w[1])
+                    }),
+                    "lock order not degree-descending at {v}"
+                );
             }
 
             // in/out edge counts conserve the edge total.

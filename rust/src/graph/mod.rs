@@ -75,9 +75,13 @@ pub struct DataGraph<V, E> {
     out_adj: Csr,
     /// In-edge ids per vertex, sorted by source vertex.
     in_adj: Csr,
-    /// Sorted unique neighbor vertex ids (union of in/out, excluding self) —
-    /// the lock-acquisition order for scope locking.
+    /// Sorted unique neighbor vertex ids (union of in/out, excluding self).
     scope_adj: Csr,
+    /// Same neighbor sets reordered for scope-lock acquisition: descending
+    /// degree (ties by ascending id). Trying the most-contended lock first
+    /// makes a conflicted all-or-nothing acquisition fail before it has
+    /// taken (and must roll back) the cheap low-degree locks.
+    lock_adj: Csr,
     /// Reverse edge id for each edge, if the opposite direction exists.
     reverse: Vec<Option<EdgeId>>,
     max_degree: usize,
@@ -114,6 +118,15 @@ impl<V, E> DataGraph<V, E> {
     #[inline]
     pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
         self.scope_adj.row(v as usize)
+    }
+
+    /// Neighbors of `v` in scope-lock acquisition order: descending degree,
+    /// ties by ascending id. Same *set* as [`Self::neighbors`]; the order
+    /// exists purely for conflict locality in the try-lock protocol (see
+    /// [`crate::consistency::LockTable::try_lock_scope`]).
+    #[inline]
+    pub fn lock_neighbors(&self, v: VertexId) -> &[VertexId] {
+        self.lock_adj.row(v as usize)
     }
 
     pub fn degree(&self, v: VertexId) -> usize {

@@ -6,9 +6,11 @@
 //!
 //! * **Layer 3 (this crate)** — the GraphLab coordination framework: the
 //!   [data graph](graph), the [shared data table & sync mechanism](sdt),
-//!   the three [consistency models](consistency), the
-//!   [scheduler collection](scheduler), the threaded and sequential
-//!   [engines](engine), the [multicore simulator](sim), and the paper's five
+//!   the three [consistency models](consistency) (word-per-vertex atomic
+//!   try-locks), the [scheduler collection](scheduler), the threaded
+//!   (non-blocking, deferral-based) and sequential [engines](engine) behind
+//!   the [`engine::Program`] front-end, the [multicore simulator](sim), and
+//!   the paper's five
 //!   case-study [applications](apps) with synthetic [workloads](datagen) and
 //!   [baselines](baselines).
 //! * **Layer 2/1 (build time, `python/`)** — batched vertex-program kernels

@@ -9,9 +9,9 @@
 //! The full experiment drivers live in `examples/` (runnable scenarios) and
 //! `rust/benches/` (per-figure reproduction harnesses, `cargo bench`).
 
+use graphlab::consistency::ConsistencyModel;
 use graphlab::consistency::Scope;
-use graphlab::consistency::{ConsistencyModel, LockTable};
-use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateContext, UpdateFn};
+use graphlab::engine::{Program, UpdateContext, UpdateFn};
 use graphlab::graph::GraphBuilder;
 use graphlab::scheduler::{MultiQueueFifo, Scheduler, Task};
 use graphlab::sdt::Sdt;
@@ -90,26 +90,19 @@ fn smoke() {
     for i in 0..n - 1 {
         b.add_undirected(i as u32, i as u32 + 1, (), ());
     }
-    let g = b.build();
-    let locks = LockTable::new(n);
+    let mut g = b.build();
     let sched = MultiQueueFifo::new(n, 4);
     for v in 0..n as u32 {
         sched.add_task(Task::new(v));
     }
     let sdt = Sdt::new();
     let f = Bump;
-    let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
     let t = Timer::start();
-    let report = ThreadedEngine::run(
-        &g,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[],
-        &[],
-        &EngineConfig::default().with_workers(4).with_model(ConsistencyModel::Edge),
-    );
+    let report = Program::new()
+        .update_fn(&f)
+        .workers(4)
+        .model(ConsistencyModel::Edge)
+        .run(&mut g, &sched, &sdt);
     assert_eq!(report.updates, n as u64 * 8, "engine executed the full program");
     println!(
         "engine: {} updates / {:.3}s = {:.2}M updates/s — OK",
@@ -117,6 +110,7 @@ fn smoke() {
         t.elapsed_secs(),
         report.updates_per_sec() / 1e6
     );
+    print!("{}", graphlab::metrics::run_summary(&report));
 
     let dir = graphlab::runtime::default_artifact_dir();
     if dir.join("manifest.tsv").exists() {

@@ -115,6 +115,40 @@ impl Figure {
     }
 }
 
+/// Render a [`crate::engine::RunReport`] as an aligned text block:
+/// headline throughput plus the per-worker update/conflict/deferral table
+/// the non-blocking engine records (all zeros on uncontended or sequential
+/// runs).
+pub fn run_summary(report: &crate::engine::RunReport) -> String {
+    let mut out = String::new();
+    let c = &report.contention;
+    let _ = writeln!(
+        out,
+        "{} updates in {:.3}s ({:.2}M/s), stop: {:?}, syncs: {}",
+        report.updates,
+        report.wall_secs,
+        report.updates_per_sec() / 1e6,
+        report.stop,
+        report.syncs_run
+    );
+    let _ = writeln!(
+        out,
+        "contention: {} conflicts ({:.4}/update), {} deferrals, {} retries ({} stolen)",
+        c.conflicts,
+        c.conflict_rate(report.updates),
+        c.deferrals,
+        c.retries,
+        c.steals
+    );
+    let _ = writeln!(out, "{:>8} {:>12} {:>12} {:>12}", "worker", "updates", "conflicts", "deferrals");
+    for (w, &u) in report.per_worker.iter().enumerate() {
+        let conflicts = c.per_worker_conflicts.get(w).copied().unwrap_or(0);
+        let deferrals = c.per_worker_deferrals.get(w).copied().unwrap_or(0);
+        let _ = writeln!(out, "{w:>8} {u:>12} {conflicts:>12} {deferrals:>12}");
+    }
+    out
+}
+
 /// Write a grayscale image (f32 in [0,1]) as a binary PGM — used for the
 /// Fig 4d/e and Fig 8b/c image outputs.
 pub fn write_pgm(path: &Path, pixels: &[f32], width: usize, height: usize) -> std::io::Result<()> {
@@ -158,6 +192,30 @@ mod tests {
         assert_eq!(lines[0], "x\ts");
         assert_eq!(lines[1], "1\t2");
         assert_eq!(lines[2], "2\t4");
+    }
+
+    #[test]
+    fn run_summary_includes_contention_table() {
+        let report = crate::engine::RunReport {
+            updates: 1000,
+            wall_secs: 0.5,
+            stop: crate::engine::StopReason::SchedulerEmpty,
+            per_worker: vec![600, 400],
+            syncs_run: 2,
+            contention: crate::engine::ContentionStats {
+                conflicts: 30,
+                deferrals: 10,
+                retries: 10,
+                steals: 3,
+                per_worker_conflicts: vec![20, 10],
+                per_worker_deferrals: vec![7, 3],
+            },
+        };
+        let text = run_summary(&report);
+        assert!(text.contains("1000 updates"));
+        assert!(text.contains("30 conflicts"));
+        assert!(text.contains("10 deferrals"));
+        assert!(text.lines().count() >= 5, "per-worker rows present");
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! its relaxed variants — multi-queue (work stealing) and partitioned
 //! (vertex-affine) — which trade ordering strictness for reduced contention.
 
-use super::{PendingFlags, Scheduler, Task};
+use super::{PendingFlags, Scheduler, Task, DEFAULT_FUNC_SLOTS};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -16,10 +16,17 @@ pub struct FifoScheduler {
 }
 
 impl FifoScheduler {
+    /// `new` reserves [`DEFAULT_FUNC_SLOTS`] function slots per vertex;
+    /// programs with more update functions must use [`Self::with_funcs`]
+    /// (an out-of-range `FuncId` panics instead of aliasing).
     pub fn new(num_vertices: usize) -> FifoScheduler {
+        Self::with_funcs(num_vertices, DEFAULT_FUNC_SLOTS)
+    }
+
+    pub fn with_funcs(num_vertices: usize, num_funcs: usize) -> FifoScheduler {
         FifoScheduler {
             queue: Mutex::new(VecDeque::new()),
-            pending: PendingFlags::new(num_vertices, 4),
+            pending: PendingFlags::new(num_vertices, num_funcs),
             len: AtomicUsize::new(0),
         }
     }
@@ -66,11 +73,20 @@ pub struct MultiQueueFifo {
 }
 
 impl MultiQueueFifo {
+    /// See [`FifoScheduler::new`] for the function-slot convention.
     pub fn new(num_vertices: usize, workers: usize) -> MultiQueueFifo {
+        Self::with_funcs(num_vertices, workers, DEFAULT_FUNC_SLOTS)
+    }
+
+    pub fn with_funcs(
+        num_vertices: usize,
+        workers: usize,
+        num_funcs: usize,
+    ) -> MultiQueueFifo {
         let nshards = (workers.max(1)) * 2;
         MultiQueueFifo {
             shards: (0..nshards).map(|_| Mutex::new(VecDeque::new())).collect(),
-            pending: PendingFlags::new(num_vertices, 4),
+            pending: PendingFlags::new(num_vertices, num_funcs),
             len: AtomicUsize::new(0),
             rr: AtomicUsize::new(0),
         }
@@ -124,10 +140,19 @@ pub struct PartitionedScheduler {
 }
 
 impl PartitionedScheduler {
+    /// See [`FifoScheduler::new`] for the function-slot convention.
     pub fn new(num_vertices: usize, workers: usize) -> PartitionedScheduler {
+        Self::with_funcs(num_vertices, workers, DEFAULT_FUNC_SLOTS)
+    }
+
+    pub fn with_funcs(
+        num_vertices: usize,
+        workers: usize,
+        num_funcs: usize,
+    ) -> PartitionedScheduler {
         PartitionedScheduler {
             parts: (0..workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
-            pending: PendingFlags::new(num_vertices, 4),
+            pending: PendingFlags::new(num_vertices, num_funcs),
             len: AtomicUsize::new(0),
         }
     }
@@ -190,6 +215,21 @@ mod tests {
         assert_eq!(s.next_task(0).unwrap().vertex, 3);
         assert!(s.next_task(0).is_none());
         assert!(s.is_done());
+    }
+
+    #[test]
+    fn with_funcs_keeps_funcs_independent() {
+        let s = FifoScheduler::with_funcs(10, 2);
+        s.add_task(Task::with_func(3, 0, 0.0));
+        s.add_task(Task::with_func(3, 1, 0.0)); // distinct func: no dedup
+        s.add_task(Task::with_func(3, 1, 0.5)); // duplicate — dropped
+        assert_eq!(s.approx_len(), 2);
+        let s = MultiQueueFifo::with_funcs(10, 2, 2);
+        s.add_task(Task::with_func(3, 1, 0.0));
+        assert_eq!(s.approx_len(), 1);
+        let s = PartitionedScheduler::with_funcs(10, 2, 2);
+        s.add_task(Task::with_func(3, 1, 0.0));
+        assert_eq!(s.approx_len(), 1);
     }
 
     #[test]

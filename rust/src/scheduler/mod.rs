@@ -59,6 +59,17 @@ impl Task {
 /// `next_task(worker)` returns `None` when nothing is *currently* available.
 /// The engine terminates when every worker sees `None`, no task is in
 /// flight, and `is_done()` holds.
+///
+/// **Retry-aware pop contract (non-blocking engines):** a popped task is
+/// not necessarily executed immediately — on scope conflict the threaded
+/// engine *defers* it to a retry deque and re-dispatches it later (possibly
+/// from a different worker). The task stays "in flight" for the whole
+/// interval, and `task_done` is called exactly once, when the update
+/// finally runs. Barrier/DAG schedulers therefore must gate only on
+/// `task_done`, never on pop order; and because a pending mark is cleared
+/// at pop time, a deferred task's (vertex, func) may be legitimately
+/// re-added to the queue while the deferred copy waits — schedulers must
+/// tolerate that duplicate exactly as they tolerate an execute-then-re-add.
 pub trait Scheduler: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -82,6 +93,12 @@ pub trait Scheduler: Send + Sync {
     fn approx_len(&self) -> usize;
 }
 
+/// Default per-vertex update-function slots for schedulers constructed
+/// without an explicit `num_funcs` (the FIFO family's `new`). Out-of-range
+/// `FuncId`s are rejected by [`PendingFlags`] instead of silently aliasing
+/// another vertex's flag.
+pub(crate) const DEFAULT_FUNC_SLOTS: usize = 4;
+
 /// Per-(vertex, func) pending flags providing task de-duplication.
 /// `try_mark(v, f)` returns true exactly once until `unmark(v, f)`.
 pub struct PendingFlags {
@@ -100,6 +117,15 @@ impl PendingFlags {
 
     #[inline]
     fn idx(&self, t: &Task) -> usize {
+        // A func id beyond the configured slot count would alias another
+        // vertex's flag (silent lost/duplicated tasks) — fail loudly instead.
+        assert!(
+            (t.func as usize) < self.num_funcs,
+            "FuncId {} out of range: scheduler was built for {} update function(s) \
+             (use the with_funcs constructor)",
+            t.func,
+            self.num_funcs
+        );
         t.vertex as usize * self.num_funcs + t.func as usize
     }
 
@@ -121,8 +147,14 @@ impl PendingFlags {
     }
 }
 
+/// Default splash spanning-tree size for [`by_name_for_graph`]
+/// ("paper-typical: tens of vertices").
+pub const DEFAULT_SPLASH_SIZE: usize = 32;
+
 /// Parse a scheduler name from the CLI; `n` = number of vertices,
-/// `workers` = worker count (for sharded schedulers).
+/// `workers` = worker count (for sharded schedulers). Covers every
+/// scheduler constructible from sizes alone — the splash scheduler also
+/// needs graph adjacency, so it lives in [`by_name_for_graph`].
 pub fn by_name(name: &str, n: usize, workers: usize) -> Option<Box<dyn Scheduler>> {
     Some(match name {
         "fifo" => Box::new(FifoScheduler::new(n)),
@@ -134,6 +166,29 @@ pub fn by_name(name: &str, n: usize, workers: usize) -> Option<Box<dyn Scheduler
         "synchronous" => Box::new(SynchronousScheduler::new(n, 1)),
         _ => return None,
     })
+}
+
+/// Graph-aware scheduler registry: everything [`by_name`] constructs, plus
+/// the schedulers that need the graph's adjacency structure — currently
+/// `"splash"` (with [`DEFAULT_SPLASH_SIZE`]). The splash scheduler copies
+/// the adjacency at construction, so the returned box does not borrow the
+/// graph. (The set scheduler is excluded: it needs an execution plan, not
+/// just a graph — see [`set_scheduler`].)
+pub fn by_name_for_graph<V, E>(
+    name: &str,
+    graph: &crate::graph::DataGraph<V, E>,
+    workers: usize,
+) -> Option<Box<dyn Scheduler>> {
+    let n = graph.num_vertices();
+    match name {
+        "splash" => Some(Box::new(SplashScheduler::new(
+            n,
+            |v| graph.neighbors(v),
+            DEFAULT_SPLASH_SIZE,
+            workers,
+        ))),
+        _ => by_name(name, n, workers),
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +209,13 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "out of range")]
+    fn pending_flags_reject_out_of_range_func() {
+        let p = PendingFlags::new(4, 2);
+        p.try_mark(&Task::with_func(0, 2, 0.0));
+    }
+
+    #[test]
     fn by_name_covers_cli_schedulers() {
         for name in [
             "fifo",
@@ -168,5 +230,36 @@ mod tests {
             assert_eq!(s.name(), name);
         }
         assert!(by_name("bogus", 10, 2).is_none());
+
+        // The graph-aware registry covers everything above plus splash
+        // (which the module table advertises but by_name cannot build).
+        let mut b: crate::graph::GraphBuilder<(), ()> = crate::graph::GraphBuilder::new();
+        for _ in 0..10 {
+            b.add_vertex(());
+        }
+        for i in 0..9u32 {
+            b.add_undirected(i, i + 1, (), ());
+        }
+        let g = b.build();
+        for name in [
+            "fifo",
+            "multiqueue",
+            "partitioned",
+            "priority",
+            "approx-priority",
+            "round-robin",
+            "synchronous",
+            "splash",
+        ] {
+            let s = by_name_for_graph(name, &g, 2)
+                .unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(s.name(), name);
+        }
+        assert!(by_name_for_graph("bogus", &g, 2).is_none());
+
+        // splash from the registry must actually schedule
+        let s = by_name_for_graph("splash", &g, 2).unwrap();
+        s.add_task(Task::with_priority(4, 1.0));
+        assert!(s.next_task(0).is_some());
     }
 }

@@ -2,6 +2,13 @@
 //! queue and the relaxed bucketed approximation. Both support *priority
 //! promotion*: re-adding a pending task with a higher priority raises it —
 //! the mechanism behind Residual BP (Elidan et al. 2006).
+//!
+//! De-duplication granularity: unlike the FIFO family's per-(vertex, func)
+//! pending flags, both priority schedulers deduplicate **per vertex** — a
+//! vertex has one live priority, and scheduling a second `FuncId` for a
+//! pending vertex merges into (at most promotes) the pending entry. Programs
+//! multiplexing several update functions through one priority scheduler
+//! should use distinct vertices or a FIFO-family scheduler.
 
 use super::{Scheduler, Task};
 use std::cmp::Ordering as CmpOrdering;
