@@ -2,6 +2,9 @@
 //! (EXPERIMENTS.md). Measures, per layer-3 component:
 //!
 //! * scheduler add/pop throughput per scheduler type;
+//! * **multi-threaded scheduler throughput** (tasks/sec at 1/2/4/8
+//!   workers): the lock-free sharded schedulers vs their `Mutex<VecDeque>`
+//!   / `Mutex<BinaryHeap>` strict baselines — results/BENCH_sched.json;
 //! * scope lock acquisition per consistency model and degree;
 //! * the atomic lock table itself: uncontended vs conflicted try-acquire
 //!   (the conflict path measures the cost of a failed all-or-nothing
@@ -10,16 +13,56 @@
 //! * end-to-end engine overhead per trivial update (1..4 workers);
 //! * PJRT batched-kernel dispatch latency (if artifacts are built).
 //!
-//! Output: bench table on stdout + results/micro.tsv + results/BENCH_locks.json.
+//! Output: bench table on stdout + results/micro.tsv +
+//! results/BENCH_locks.json + results/BENCH_sched.json.
 
 use graphlab::consistency::{ConsistencyModel, LockTable, Scope};
 use graphlab::engine::{Program, UpdateContext, UpdateFn};
 use graphlab::graph::{DataGraph, GraphBuilder};
-use graphlab::scheduler::{by_name, FifoScheduler, MultiQueueFifo, PriorityScheduler, Scheduler, Task};
+use graphlab::scheduler::{
+    by_name, ApproxPriorityScheduler, FifoScheduler, MultiQueueFifo, PriorityScheduler,
+    Scheduler, Task,
+};
 use graphlab::sdt::Sdt;
 use graphlab::util::timer::{bench, bench_header, fmt_secs, BenchResult};
 use graphlab::util::Timer;
 use std::io::Write as _;
+
+/// Multi-threaded scheduler throughput: `workers` threads each seed a
+/// private vertex range, then run pop → re-add cycles against the shared
+/// scheduler until they complete a fixed iteration budget. Returns
+/// delivered tasks/sec (pops across all workers / wall time).
+fn sched_throughput(sched: &dyn Scheduler, workers: usize, iters_per_worker: u32) -> f64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    const VERTS_PER_WORKER: u32 = 2048;
+    let total = AtomicU64::new(0);
+    let timer = Timer::start();
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let total = &total;
+            s.spawn(move || {
+                let base = w as u32 * VERTS_PER_WORKER;
+                for v in 0..VERTS_PER_WORKER {
+                    sched.add_task(Task::with_priority(base + v, ((v % 97) + 1) as f64));
+                }
+                let mut count = 0u64;
+                while count < iters_per_worker as u64 {
+                    if let Some(t) = sched.next_task(w) {
+                        count += 1;
+                        sched.add_task(Task::with_priority(
+                            t.vertex,
+                            ((t.vertex % 97) + 1) as f64,
+                        ));
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                total.fetch_add(count, Ordering::Relaxed);
+            });
+        }
+    });
+    total.load(Ordering::Relaxed) as f64 / timer.elapsed_secs().max(1e-12)
+}
 
 fn ring(n: usize, degree: usize) -> DataGraph<u64, ()> {
     let mut b = GraphBuilder::new();
@@ -44,7 +87,7 @@ fn main() {
 
     // ---- scheduler ops ----------------------------------------------------
     let n = 100_000;
-    for name in ["fifo", "multiqueue", "partitioned", "priority", "approx-priority"] {
+    for name in ["fifo", "multiqueue", "partitioned", "priority-strict", "approx-priority"] {
         let sched = by_name(name, n, 4).unwrap();
         let r = bench(&format!("sched/{name}/add+pop x10k"), 3, 30, || {
             for v in 0..10_000u32 {
@@ -67,6 +110,43 @@ fn main() {
             assert_eq!(popped, 10_000);
         });
         push(r);
+    }
+
+    // ---- scheduler throughput: lock-free vs mutex baselines -----------------
+    //
+    // The headline of the task-distribution rework: sharded lock-free
+    // schedulers (injector rings + owner-affine routing) against the strict
+    // mutex-serialized baselines, across worker counts. The lock-free FIFO
+    // path should pull ahead of the `Mutex<VecDeque>` baseline at >= 4
+    // workers; machine-readable copy in results/BENCH_sched.json.
+    let mut sched_json: Vec<(String, f64)> = Vec::new();
+    {
+        let iters: u32 = 50_000;
+        println!(
+            "{:<44} {:>12} (pop+re-add cycles, tasks/sec)",
+            "sched-throughput", "tasks/s"
+        );
+        for workers in [1usize, 2, 4, 8] {
+            let n = workers * 2048;
+            let configs: Vec<(&str, Box<dyn Scheduler>)> = vec![
+                ("fifo_mutex", Box::new(FifoScheduler::new(n))),
+                ("fifo_lockfree", Box::new(MultiQueueFifo::new(n, workers))),
+                ("priority_mutex", Box::new(PriorityScheduler::new(n))),
+                (
+                    "priority_lockfree",
+                    Box::new(ApproxPriorityScheduler::new(n, workers)),
+                ),
+            ];
+            for (label, sched) in &configs {
+                let tps = sched_throughput(sched.as_ref(), workers, iters);
+                println!(
+                    "{:<44} {:>12.0}",
+                    format!("sched-throughput/{label}/{workers}w"),
+                    tps
+                );
+                sched_json.push((format!("{label}_w{workers}_tasks_per_sec"), tps));
+            }
+        }
     }
 
     // ---- scope locking ------------------------------------------------------
@@ -250,4 +330,14 @@ fn main() {
     }
     writeln!(f, "}}").unwrap();
     println!("wrote results/BENCH_locks.json");
+
+    // Scheduler-throughput JSON (lock-free vs mutex, per worker count).
+    let mut f = std::fs::File::create("results/BENCH_sched.json").unwrap();
+    writeln!(f, "{{").unwrap();
+    for (i, (key, value)) in sched_json.iter().enumerate() {
+        let comma = if i + 1 == sched_json.len() { "" } else { "," };
+        writeln!(f, "  \"{key}\": {value:.0}{comma}").unwrap();
+    }
+    writeln!(f, "}}").unwrap();
+    println!("wrote results/BENCH_sched.json");
 }

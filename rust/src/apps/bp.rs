@@ -141,9 +141,8 @@ impl UpdateFn<BpVertex, BpEdge> for BpUpdate {
 mod tests {
     use super::*;
     use crate::apps::mrf::{grid3d, random_mrf, GridDims, Mrf};
-    use crate::consistency::{ConsistencyModel, LockTable};
-    use crate::engine::{EngineConfig, SequentialEngine, ThreadedEngine};
-    use crate::engine::sequential::SeqOptions;
+    use crate::consistency::ConsistencyModel;
+    use crate::engine::{Program, SequentialEngine, ThreadedEngine};
     use crate::scheduler::{FifoScheduler, PriorityScheduler, Scheduler, Task};
     use crate::sdt::Sdt;
     use crate::util::Pcg32;
@@ -201,17 +200,11 @@ mod tests {
             sched.add_task(Task::with_priority(v, 1.0));
         }
         let upd = BpUpdate::new(mrf.arity, bound, Arc::new(mrf.tables.clone()));
-        let fns: Vec<&dyn crate::engine::UpdateFn<_, _>> = vec![&upd];
-        let (report, _) = SequentialEngine::run(
-            &mut mrf.graph,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::sequential(ConsistencyModel::Edge).with_max_updates(200_000),
-            &SeqOptions::default(),
-        );
+        let report = Program::new()
+            .update_fn(&upd)
+            .model(ConsistencyModel::Edge)
+            .max_updates(200_000)
+            .run_on(&SequentialEngine, &mut mrf.graph, &sched, &sdt);
         report.updates
     }
 
@@ -311,18 +304,12 @@ mod tests {
             sched.add_task(Task::new(v));
         }
         let upd = BpUpdate::new(par.arity, 1e-6, Arc::new(par.tables.clone()));
-        let fns: Vec<&dyn crate::engine::UpdateFn<_, _>> = vec![&upd];
-        let locks = LockTable::new(n);
-        let report = ThreadedEngine::run(
-            &par.graph,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(4).with_model(ConsistencyModel::Edge).with_max_updates(500_000),
-        );
+        let report = Program::new()
+            .update_fn(&upd)
+            .workers(4)
+            .model(ConsistencyModel::Edge)
+            .max_updates(500_000)
+            .run_on(&ThreadedEngine, &mut par.graph, &sched, &sdt);
         assert!(report.updates > 0);
         // Both executions converge to the same fixed point.
         for v in 0..n as u32 {
@@ -351,17 +338,11 @@ mod tests {
         }
         let mut upd = BpUpdate::new(3, 1e-3, Arc::new(Vec::new()));
         upd.learn_stats = true;
-        let fns: Vec<&dyn crate::engine::UpdateFn<_, _>> = vec![&upd];
-        let (_, _) = SequentialEngine::run(
-            &mut mrf.graph,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::sequential(ConsistencyModel::Edge).with_max_updates(10_000),
-            &SeqOptions::default(),
-        );
+        Program::new()
+            .update_fn(&upd)
+            .model(ConsistencyModel::Edge)
+            .max_updates(10_000)
+            .run_on(&SequentialEngine, &mut mrf.graph, &sched, &sdt);
         // interior vertices must have x- and y-axis stats populated
         let center = dims.index(1, 1, 0);
         let stats = mrf.graph.vertex_data(center).axis_stats;

@@ -114,8 +114,8 @@ pub fn belief_distance(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::consistency::{ConsistencyModel, LockTable};
-    use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+    use crate::consistency::ConsistencyModel;
+    use crate::engine::{Program, ThreadedEngine};
     use crate::graph::{DataGraph, GraphBuilder};
     use crate::scheduler::{MultiQueueFifo, Scheduler, Task};
     use crate::sdt::Sdt;
@@ -135,38 +135,28 @@ mod tests {
         b.build()
     }
 
-    fn run(g: &DataGraph<CoemVertex, CoemEdge>, workers: usize) -> u64 {
+    fn run(g: &mut DataGraph<CoemVertex, CoemEdge>, workers: usize) -> u64 {
         let n = g.num_vertices();
-        let locks = LockTable::new(n);
         let sched = MultiQueueFifo::new(n, workers);
         for v in 0..n as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let upd = CoemUpdate::new(2);
-        let fns: Vec<&dyn UpdateFn<CoemVertex, CoemEdge>> = vec![&upd];
-        let report = ThreadedEngine::run(
-            g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default()
-                .with_workers(workers)
-                .with_model(ConsistencyModel::Vertex)
-                .with_max_updates(1_000_000),
-        );
+        let report = Program::new()
+            .update_fn(&upd)
+            .workers(workers)
+            .model(ConsistencyModel::Vertex)
+            .max_updates(1_000_000)
+            .run_on(&ThreadedEngine, g, &sched, &sdt);
         report.updates
     }
 
     #[test]
     fn seed_propagates_labels() {
-        let g = tiny();
-        let updates = run(&g, 2);
+        let mut g = tiny();
+        let updates = run(&mut g, 2);
         assert!(updates >= 4);
-        let mut g = g;
         // everything should converge to class 0 (the only seed)
         for v in 1..4u32 {
             let b = &g.vertex_data(v).belief;
@@ -178,8 +168,8 @@ mod tests {
 
     #[test]
     fn converges_and_terminates() {
-        let g = tiny();
-        let updates = run(&g, 1);
+        let mut g = tiny();
+        let updates = run(&mut g, 1);
         assert!(updates < 1_000_000, "must converge, used {updates}");
     }
 
@@ -192,9 +182,8 @@ mod tests {
         let w = |x: f32| CoemEdge { weight: x };
         b.add_undirected(0, 2, w(1.0), w(1.0));
         b.add_undirected(1, 2, w(3.0), w(3.0));
-        let g = b.build();
-        run(&g, 2);
-        let mut g = g;
+        let mut g = b.build();
+        run(&mut g, 2);
         let belief = g.vertex_data(2).belief.clone();
         // class 1 has 3x the evidence
         assert!((belief[1] - 0.75).abs() < 1e-4, "{belief:?}");
@@ -202,9 +191,8 @@ mod tests {
 
     #[test]
     fn belief_distance_zero_at_fixed_point() {
-        let g = tiny();
-        run(&g, 1);
-        let mut g = g;
+        let mut g = tiny();
+        run(&mut g, 1);
         let reference: Vec<Vec<f32>> =
             (0..4u32).map(|v| g.vertex_data(v).belief.clone()).collect();
         assert_eq!(belief_distance(&mut g, &reference), 0.0);

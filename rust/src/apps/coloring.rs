@@ -97,8 +97,8 @@ pub fn color_classes<V: HasColor, E>(graph: &mut crate::graph::DataGraph<V, E>) 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::consistency::{ConsistencyModel, LockTable};
-    use crate::engine::{EngineConfig, ThreadedEngine};
+    use crate::consistency::ConsistencyModel;
+    use crate::engine::{Program, ThreadedEngine};
     use crate::graph::{DataGraph, GraphBuilder};
     use crate::scheduler::{FifoScheduler, Scheduler, Task};
     use crate::sdt::Sdt;
@@ -138,55 +138,39 @@ mod tests {
 
     #[test]
     fn colors_a_random_graph_in_parallel() {
-        let g = random_graph(300, 900, 9);
+        let mut g = random_graph(300, 900, 9);
         let n = g.num_vertices();
-        let locks = LockTable::new(n);
         let sched = FifoScheduler::new(n);
         for v in 0..n as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let upd = ColoringUpdate;
-        let fns: Vec<&dyn crate::engine::UpdateFn<CV, ()>> = vec![&upd];
-        let report = ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(4).with_model(ConsistencyModel::Edge),
-        );
+        let report = Program::new()
+            .update_fn(&upd)
+            .workers(4)
+            .model(ConsistencyModel::Edge)
+            .run_on(&ThreadedEngine, &mut g, &sched, &sdt);
         assert!(report.updates >= 300);
-        let mut g = g;
         let ncolors = validate_coloring(&mut g).expect("valid coloring");
         assert!(ncolors >= 2 && ncolors <= g.max_degree() + 1, "greedy bound: {ncolors}");
     }
 
     #[test]
     fn color_classes_partition_vertices() {
-        let g = random_graph(100, 250, 5);
+        let mut g = random_graph(100, 250, 5);
         let n = g.num_vertices();
-        let locks = LockTable::new(n);
         let sched = FifoScheduler::new(n);
         for v in 0..n as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let upd = ColoringUpdate;
-        let fns: Vec<&dyn crate::engine::UpdateFn<CV, ()>> = vec![&upd];
-        ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(2).with_model(ConsistencyModel::Edge),
-        );
-        let mut g = g;
+        Program::new()
+            .update_fn(&upd)
+            .workers(2)
+            .model(ConsistencyModel::Edge)
+            .run_on(&ThreadedEngine, &mut g, &sched, &sdt);
         let classes = color_classes(&mut g);
         let total: usize = classes.iter().map(|c| c.len()).sum();
         assert_eq!(total, 100);

@@ -169,37 +169,28 @@ pub fn update_system(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::consistency::{ConsistencyModel, LockTable};
-    use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+    use crate::consistency::ConsistencyModel;
+    use crate::engine::{Program, ThreadedEngine};
     use crate::scheduler::{FifoScheduler, Scheduler, Task};
     use crate::sdt::Sdt;
     use crate::util::linalg::solve_dense;
     use crate::util::Pcg32;
 
-    fn run_gabp(g: &DataGraph<GabpVertex, GabpEdge>, workers: usize) -> u64 {
+    fn run_gabp(g: &mut DataGraph<GabpVertex, GabpEdge>, workers: usize) -> u64 {
         let n = g.num_vertices();
-        let locks = LockTable::new(n);
         let sched = FifoScheduler::new(n);
         for v in 0..n as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let upd = GabpUpdate::new(1e-10);
-        let fns: Vec<&dyn UpdateFn<GabpVertex, GabpEdge>> = vec![&upd];
-        ThreadedEngine::run(
-            g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default()
-                .with_workers(workers)
-                .with_model(ConsistencyModel::Edge)
-                .with_max_updates(500_000),
-        )
-        .updates
+        Program::new()
+            .update_fn(&upd)
+            .workers(workers)
+            .model(ConsistencyModel::Edge)
+            .max_updates(500_000)
+            .run_on(&ThreadedEngine, g, &sched, &sdt)
+            .updates
     }
 
     /// Random diagonally-dominant sparse symmetric system.
@@ -256,7 +247,7 @@ mod tests {
         let diag = vec![2.0, 4.0, 8.0];
         let b = vec![2.0, 8.0, 4.0];
         let mut g = build_system(&diag, &b, &[]);
-        run_gabp(&g, 1);
+        run_gabp(&mut g, 1);
         let x = solution(&mut g);
         assert_eq!(x, vec![1.0, 2.0, 0.5]);
     }
@@ -268,7 +259,7 @@ mod tests {
         let off: Vec<(u32, u32, f64)> =
             (0..7).map(|i| (i as u32, i as u32 + 1, 0.5 + 0.1 * i as f64)).collect();
         let mut g = build_system(&diag, &b, &off);
-        run_gabp(&g, 2);
+        run_gabp(&mut g, 2);
         let x = solution(&mut g);
         let x_ref = solve_dense(&dense_from(&diag, &off), &b);
         for (got, want) in x.iter().zip(&x_ref) {
@@ -280,7 +271,7 @@ mod tests {
     fn converges_on_loopy_dd_system() {
         let (diag, b, off) = random_system(40, 60, 9);
         let mut g = build_system(&diag, &b, &off);
-        let updates = run_gabp(&g, 4);
+        let updates = run_gabp(&mut g, 4);
         assert!(updates < 500_000, "converged before cap");
         let x = solution(&mut g);
         let x_ref = solve_dense(&dense_from(&diag, &off), &b);
@@ -293,11 +284,11 @@ mod tests {
     fn warm_restart_is_cheaper_than_cold() {
         let (diag, b, off) = random_system(60, 80, 17);
         let mut g = build_system(&diag, &b, &off);
-        let cold = run_gabp(&g, 2);
+        let cold = run_gabp(&mut g, 2);
         // perturb rhs slightly, keep message state (data persistence, Alg 5)
         let b2: Vec<f64> = b.iter().map(|x| x + 0.01).collect();
         update_system(&mut g, None, &b2);
-        let warm = run_gabp(&g, 2);
+        let warm = run_gabp(&mut g, 2);
         assert!(
             warm < cold,
             "warm restart ({warm} updates) should beat cold start ({cold})"

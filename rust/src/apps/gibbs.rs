@@ -154,8 +154,8 @@ pub fn chromatic_sets(classes: &[Vec<u32>], sweeps: usize, func: FuncId) -> Vec<
 mod tests {
     use super::*;
     use crate::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
-    use crate::consistency::{ConsistencyModel, LockTable};
-    use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+    use crate::consistency::ConsistencyModel;
+    use crate::engine::{Program, ThreadedEngine};
     use crate::graph::{DataGraph, GraphBuilder};
     use crate::scheduler::{FifoScheduler, Scheduler, SetScheduler, Task};
     use crate::sdt::Sdt;
@@ -172,51 +172,36 @@ mod tests {
         (b.build(), tables)
     }
 
-    fn color_graph(g: &DataGraph<GibbsVertex, GibbsEdge>) {
+    fn color_graph(g: &mut DataGraph<GibbsVertex, GibbsEdge>) {
         let n = g.num_vertices();
-        let locks = LockTable::new(n);
         let sched = FifoScheduler::new(n);
         for v in 0..n as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let upd = ColoringUpdate;
-        let fns: Vec<&dyn UpdateFn<GibbsVertex, GibbsEdge>> = vec![&upd];
-        ThreadedEngine::run(
-            g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(2).with_model(ConsistencyModel::Edge),
-        );
+        Program::new()
+            .update_fn(&upd)
+            .workers(2)
+            .model(ConsistencyModel::Edge)
+            .run_on(&ThreadedEngine, g, &sched, &sdt);
     }
 
     #[test]
     fn chromatic_gibbs_estimates_pair_correlation() {
-        let (g, tables) = two_spin(0.8);
-        color_graph(&g);
-        let mut g = g;
+        let (mut g, tables) = two_spin(0.8);
+        color_graph(&mut g);
         assert!(validate_coloring(&mut g).is_ok());
         let classes = color_classes(&mut g);
         let sets = chromatic_sets(&classes, 4000, 0);
         let sched = SetScheduler::planned(&sets, 2, |v| g.neighbors(v), ConsistencyModel::Edge);
         let upd = GibbsUpdate::new(2, Arc::new(tables), 2, 123);
-        let fns: Vec<&dyn UpdateFn<GibbsVertex, GibbsEdge>> = vec![&upd];
-        let locks = LockTable::new(2);
         let sdt = Sdt::new();
-        let report = ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(2).with_model(ConsistencyModel::Vertex),
-        );
+        let report = Program::new()
+            .update_fn(&upd)
+            .workers(2)
+            .model(ConsistencyModel::Vertex)
+            .run_on(&ThreadedEngine, &mut g, &sched, &sdt);
         assert_eq!(report.updates, 2 * 4000);
         // symmetric model: marginals are uniform
         let m0 = g.vertex_data(0).marginal();
@@ -232,26 +217,18 @@ mod tests {
         let tables = vec![vec![2.0, 0.5, 0.5, 2.0]]; // attractive
         let e = GibbsEdge { potential: EdgePotential::Table(0) };
         b.add_undirected(0, 1, e, e);
-        let g = b.build();
-        color_graph(&g);
-        let mut g = g;
+        let mut g = b.build();
+        color_graph(&mut g);
         let classes = color_classes(&mut g);
         let sets = chromatic_sets(&classes, 3000, 0);
         let sched = SetScheduler::planned(&sets, 2, |v| g.neighbors(v), ConsistencyModel::Edge);
         let upd = GibbsUpdate::new(2, Arc::new(tables), 1, 7);
-        let fns: Vec<&dyn UpdateFn<GibbsVertex, GibbsEdge>> = vec![&upd];
-        let locks = LockTable::new(2);
         let sdt = Sdt::new();
-        ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(1).with_model(ConsistencyModel::Vertex),
-        );
+        Program::new()
+            .update_fn(&upd)
+            .workers(1)
+            .model(ConsistencyModel::Vertex)
+            .run_on(&ThreadedEngine, &mut g, &sched, &sdt);
         let m0 = g.vertex_data(0).marginal();
         assert!(m0[0] > 0.75, "vertex 0 must prefer state 0: {m0:?}");
         // attraction pulls vertex 1 toward state 0 as well

@@ -185,36 +185,32 @@ impl UpdateFn<LassoVertex, LassoEdge> for ShootingUpdate {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::consistency::{ConsistencyModel, LockTable};
-    use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+    use crate::consistency::ConsistencyModel;
+    use crate::engine::{Program, ThreadedEngine};
     use crate::scheduler::{FifoScheduler, Scheduler, Task};
     use crate::sdt::Sdt;
     use crate::util::linalg::{matvec, solve_dense};
     use crate::util::Pcg32;
 
-    fn run_shooting(p: &LassoProblem, lambda: f32, model: ConsistencyModel, workers: usize) -> u64 {
+    fn run_shooting(
+        p: &mut LassoProblem,
+        lambda: f32,
+        model: ConsistencyModel,
+        workers: usize,
+    ) -> u64 {
         let n = p.graph.num_vertices();
-        let locks = LockTable::new(n);
         let sched = FifoScheduler::new(n);
         for v in 0..p.num_weights as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let upd = ShootingUpdate::new(lambda);
-        let fns: Vec<&dyn UpdateFn<LassoVertex, LassoEdge>> = vec![&upd];
-        let report = ThreadedEngine::run(
-            &p.graph,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default()
-                .with_workers(workers)
-                .with_model(model)
-                .with_max_updates(2_000_000),
-        );
+        let report = Program::new()
+            .update_fn(&upd)
+            .workers(workers)
+            .model(model)
+            .max_updates(2_000_000)
+            .run_on(&ThreadedEngine, &mut p.graph, &sched, &sdt);
         report.updates
     }
 
@@ -242,7 +238,7 @@ mod tests {
     fn lambda_zero_recovers_least_squares() {
         let (prob, rows, y) = random_problem(24, 6, 3);
         let mut prob = prob;
-        run_shooting(&prob, 0.0, ConsistencyModel::Full, 2);
+        run_shooting(&mut prob, 0.0, ConsistencyModel::Full, 2);
         // normal equations: (XᵀX) w = Xᵀ y
         let d = 6;
         let mut xtx = vec![0.0f64; d * d];
@@ -266,7 +262,7 @@ mod tests {
     fn huge_lambda_zeroes_everything() {
         let (prob, _, _) = random_problem(20, 5, 7);
         let mut prob = prob;
-        run_shooting(&prob, 1e6, ConsistencyModel::Full, 1);
+        run_shooting(&mut prob, 1e6, ConsistencyModel::Full, 1);
         for w in prob.weights() {
             assert_eq!(w, 0.0);
         }
@@ -283,10 +279,10 @@ mod tests {
     #[test]
     fn sparsity_increases_with_lambda() {
         let (mut p1, _, _) = random_problem(40, 12, 11);
-        run_shooting(&p1, 0.5, ConsistencyModel::Full, 2);
+        run_shooting(&mut p1, 0.5, ConsistencyModel::Full, 2);
         let nz_small = p1.weights().iter().filter(|w| w.abs() > 1e-6).count();
         let (mut p2, _, _) = random_problem(40, 12, 11);
-        run_shooting(&p2, 50.0, ConsistencyModel::Full, 2);
+        run_shooting(&mut p2, 50.0, ConsistencyModel::Full, 2);
         let nz_large = p2.weights().iter().filter(|w| w.abs() > 1e-6).count();
         assert!(nz_large <= nz_small, "{nz_large} > {nz_small}");
     }
@@ -296,10 +292,10 @@ mod tests {
         // the paper's §4.4 relaxation experiment: vertex consistency still
         // converges, with loss within a fraction of a percent.
         let (mut full, _, _) = random_problem(60, 16, 21);
-        run_shooting(&full, 2.0, ConsistencyModel::Full, 4);
+        run_shooting(&mut full, 2.0, ConsistencyModel::Full, 4);
         let loss_full = full.loss(2.0);
         let (mut vtx, _, _) = random_problem(60, 16, 21);
-        run_shooting(&vtx, 2.0, ConsistencyModel::Vertex, 4);
+        run_shooting(&mut vtx, 2.0, ConsistencyModel::Vertex, 4);
         let loss_vtx = vtx.loss(2.0);
         let rel = (loss_vtx - loss_full).abs() / loss_full.max(1e-12);
         assert!(rel < 0.02, "relaxed loss {loss_vtx} vs full {loss_full} (rel {rel})");
@@ -308,7 +304,7 @@ mod tests {
     #[test]
     fn residual_invariant_holds_after_convergence() {
         let (mut prob, rows, _) = random_problem(30, 8, 5);
-        run_shooting(&prob, 1.0, ConsistencyModel::Full, 2);
+        run_shooting(&mut prob, 1.0, ConsistencyModel::Full, 2);
         let w: Vec<f64> = prob.weights().iter().map(|&x| x as f64).collect();
         for (j, row) in rows.iter().enumerate() {
             let pred: f64 = row.iter().zip(&w).map(|(x, wi)| x * wi).sum();

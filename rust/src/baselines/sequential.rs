@@ -108,9 +108,9 @@ pub fn shooting_reference(
 mod tests {
     use super::*;
     use crate::apps::coem::CoemUpdate;
-    use crate::consistency::{ConsistencyModel, LockTable};
+    use crate::consistency::ConsistencyModel;
     use crate::datagen::{finance, ner};
-    use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+    use crate::engine::{Program, ThreadedEngine};
     use crate::scheduler::{MultiQueueFifo, Scheduler, Task};
     use crate::sdt::Sdt;
     use crate::util::Pcg32;
@@ -125,33 +125,23 @@ mod tests {
         let mut rng = Pcg32::seed_from_u64(11);
         let mut ref_graph = ner::generate(&cfg, &mut rng);
         let mut rng = Pcg32::seed_from_u64(11);
-        let engine_graph = ner::generate(&cfg, &mut rng);
+        let mut engine_graph = ner::generate(&cfg, &mut rng);
 
         let reference = coem_jacobi(&mut ref_graph, cfg.classes, 2000, 0.5);
 
         let n = engine_graph.num_vertices();
-        let locks = LockTable::new(n);
         let sched = MultiQueueFifo::new(n, 2);
         for v in 0..n as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let upd = CoemUpdate::new(cfg.classes);
-        let fns: Vec<&dyn UpdateFn<CoemVertex, CoemEdge>> = vec![&upd];
-        ThreadedEngine::run(
-            &engine_graph,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default()
-                .with_workers(2)
-                .with_model(ConsistencyModel::Vertex)
-                .with_max_updates(5_000_000),
-        );
-        let mut engine_graph = engine_graph;
+        Program::new()
+            .update_fn(&upd)
+            .workers(2)
+            .model(ConsistencyModel::Vertex)
+            .max_updates(5_000_000)
+            .run_on(&ThreadedEngine, &mut engine_graph, &sched, &sdt);
         // both reach the same fixed point (within tolerance)
         let mut max_diff = 0.0f32;
         for v in 0..n as u32 {

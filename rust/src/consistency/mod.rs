@@ -232,8 +232,17 @@ impl LockTable {
     }
 
     /// Blocking scope acquisition: retry [`Self::try_lock_scope`] under a
-    /// bounded backoff. Compatibility path for externally-driven callers
-    /// (tests, micro-benchmarks); the threaded engine defers instead.
+    /// bounded backoff. Because every round is still all-or-nothing with
+    /// rollback (no hold-and-wait), concurrent blocking acquisitions cannot
+    /// deadlock in any interleaving.
+    ///
+    /// This is the threaded engine's **deferral-fairness escalation path**:
+    /// once a task's vertex has accumulated `EngineConfig::escalate_after`
+    /// deferrals, its next dispatch comes through this call so it
+    /// eventually wins against a saturated neighborhood, instead of
+    /// bouncing through the retry deques forever.
+    /// It is also the compatibility path for externally-driven callers
+    /// (tests, micro-benchmarks).
     pub fn lock_scope<'a>(
         &'a self,
         v: VertexId,

@@ -91,8 +91,8 @@ pub fn generate(n: usize, m: usize, arity: usize, rng: &mut Pcg32) -> ProteinNet
 mod tests {
     use super::*;
     use crate::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
-    use crate::consistency::{ConsistencyModel, LockTable};
-    use crate::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+    use crate::consistency::ConsistencyModel;
+    use crate::engine::{Program, ThreadedEngine};
     use crate::scheduler::{FifoScheduler, Scheduler, Task};
     use crate::sdt::Sdt;
 
@@ -109,27 +109,19 @@ mod tests {
         // the Fig 5b structural property: many colors, skewed class sizes
         let mut rng = Pcg32::seed_from_u64(2);
         let net = generate(1400, 10000, 4, &mut rng);
-        let g = net.graph;
+        let mut g = net.graph;
         let n = g.num_vertices();
-        let locks = LockTable::new(n);
         let sched = FifoScheduler::new(n);
         for v in 0..n as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let upd = ColoringUpdate;
-        let fns: Vec<&dyn UpdateFn<GibbsVertex, GibbsEdge>> = vec![&upd];
-        ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(2).with_model(ConsistencyModel::Edge),
-        );
-        let mut g = g;
+        Program::new()
+            .update_fn(&upd)
+            .workers(2)
+            .model(ConsistencyModel::Edge)
+            .run_on(&ThreadedEngine, &mut g, &sched, &sdt);
         let ncolors = validate_coloring(&mut g).unwrap();
         assert!(ncolors >= 10, "expected many colors, got {ncolors}");
         let classes = color_classes(&mut g);

@@ -118,6 +118,12 @@ pub struct EngineConfig {
     pub max_updates: Option<u64>,
     /// Check termination functions every N completed updates (per worker).
     pub term_check_every: u64,
+    /// Deferral-fairness bound: once a vertex's task has been deferred this
+    /// many times without executing, its next dispatch *escalates* to a
+    /// blocking scope acquisition so it eventually wins against a saturated
+    /// neighborhood (0 = escalate immediately, i.e. a fully blocking
+    /// engine).
+    pub escalate_after: u32,
 }
 
 impl Default for EngineConfig {
@@ -127,6 +133,7 @@ impl Default for EngineConfig {
             model: ConsistencyModel::Edge,
             max_updates: None,
             term_check_every: 256,
+            escalate_after: 8,
         }
     }
 }
@@ -150,6 +157,11 @@ impl EngineConfig {
         self.max_updates = Some(max);
         self
     }
+
+    pub fn with_escalate_after(mut self, deferrals: u32) -> Self {
+        self.escalate_after = deferrals;
+        self
+    }
 }
 
 /// Termination predicate over the SDT (paper §3.5, second mode).
@@ -157,20 +169,31 @@ pub type TerminationFn = Box<dyn Fn(&Sdt) -> bool + Send + Sync>;
 
 /// Scope-lock contention counters from a threaded run. The engine never
 /// parks a worker on a scope lock; every failed all-or-nothing try-acquire
-/// is a `conflict`, and a task whose bounded re-attempts all conflict is a
-/// `deferral` (pushed to the worker's retry deque and re-dispatched later).
-/// All counters are zero for sequential runs and for uncontended workloads.
+/// is a `conflict`, and a task whose adaptive in-place re-attempts all
+/// conflict is a `deferral` (pushed to the worker's lock-free retry deque
+/// and re-dispatched later). All counters are zero for sequential runs and
+/// for uncontended workloads; `steals` is zero for single-worker runs.
 #[derive(Debug, Clone, Default)]
 pub struct ContentionStats {
     /// Failed scope try-acquires (each costs a rollback, not a park).
     pub conflicts: u64,
     /// Tasks pushed to a per-worker retry deque after exhausting their
-    /// bounded spin re-attempts.
+    /// adaptive spin re-attempts.
     pub deferrals: u64,
-    /// Tasks re-dispatched from a retry deque (own or stolen).
+    /// Tasks re-dispatched from a retry deque (own, stolen, or via the
+    /// overflow injector).
     pub retries: u64,
-    /// Retries taken from *another* worker's retry deque.
+    /// Retries stolen from *another* worker's retry deque.
     pub steals: u64,
+    /// Tasks whose deferral age crossed [`EngineConfig::escalate_after`]
+    /// and were dispatched through a blocking scope acquisition instead of
+    /// another try/defer round (the deferral-fairness path).
+    pub escalations: u64,
+    /// Executed updates whose task was popped from the scheduler by the
+    /// worker *owning* its vertex, per the scheduler's own affinity routing
+    /// ([`crate::scheduler::Scheduler::owner_of`]). Always zero for
+    /// schedulers without owner-affine routing (strict FIFO, splash, set).
+    pub affinity_hits: u64,
     /// Per-worker conflict counts (index = worker id).
     pub per_worker_conflicts: Vec<u64>,
     /// Per-worker deferral counts (index = worker id).

@@ -168,6 +168,15 @@ impl<'a, V, E> Program<'a, V, E> {
         self
     }
 
+    /// Deferral-fairness bound for the threaded back-end: once a task's
+    /// vertex has accumulated this many deferrals, its next dispatch
+    /// escalates to a blocking scope acquisition (see
+    /// [`EngineConfig::escalate_after`]).
+    pub fn escalate_after(mut self, deferrals: u32) -> Self {
+        self.config.escalate_after = deferrals;
+        self
+    }
+
     /// Sequential back-end: run on-demand syncs every N updates (0 = only
     /// at the end).
     pub fn sync_every(mut self, every: u64) -> Self {

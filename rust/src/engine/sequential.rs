@@ -34,7 +34,11 @@ impl SequentialEngine {
     /// Run until the scheduler drains, a termination function fires, or the
     /// update budget is exhausted. Returns the report and (optionally) the
     /// captured trace.
-    pub fn run<V, E>(
+    ///
+    /// Crate-internal: external callers go through the [`super::Engine`]
+    /// trait / [`super::Program`] builder (`run_on`, `run_traced`) — the
+    /// historical public multi-argument signature is folded away.
+    pub(crate) fn run<V, E>(
         graph: &mut DataGraph<V, E>,
         scheduler: &dyn Scheduler,
         fns: &[&dyn UpdateFn<V, E>],

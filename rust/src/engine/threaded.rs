@@ -1,14 +1,34 @@
 //! Multithreaded shared-memory engine — the reproduction of the paper's
 //! optimized PThreads implementation (§3.6), rebuilt around a
-//! **non-blocking scope protocol**: worker threads pull tasks from the
-//! scheduler and *try*-acquire each task's scope all-or-nothing
-//! ([`Scope::try_lock`]). A conflict never parks the worker — after a short
-//! bounded spin the task is **deferred** to the worker's retry deque and the
-//! worker moves on to other work; idle workers steal retries from their
-//! peers. Per-worker conflict/deferral/steal counters are surfaced through
-//! [`RunReport::contention`]. A background thread executes periodic sync
-//! operations concurrently with the workers (§3.2.2), taking per-vertex
-//! read locks during its fold.
+//! **non-blocking scope protocol** and a **lock-free task-distribution
+//! layer**:
+//!
+//! * Worker threads pull tasks from the scheduler and *try*-acquire each
+//!   task's scope all-or-nothing ([`Scope::try_lock`]). A conflict never
+//!   parks the worker — after a short adaptive spin ladder the task is
+//!   **deferred** to the worker's local Chase–Lev deque
+//!   ([`WorkStealingDeque`]) and the worker moves on; idle workers steal
+//!   deferred tasks from their peers, with a shared [`Injector`] absorbing
+//!   deque overflow.
+//! * The in-place re-attempt window is **contention-adaptive**: each worker
+//!   tunes its ladder from the deferral rate it actually observes (heavy
+//!   contention → fail fast to a deferral; light contention → ride out
+//!   transient holds in place).
+//! * **Deferral fairness**: per-vertex deferral ages are tracked; once a
+//!   vertex has accumulated [`EngineConfig::escalate_after`] deferrals its
+//!   next dispatch goes through a *blocking* scope acquisition
+//!   ([`Scope::lock`]) so a repeatedly conflicted task on a saturated
+//!   neighborhood eventually wins.
+//! * **Owner affinity**: the affinity-routing schedulers partition vertex
+//!   ids into contiguous blocks ([`crate::graph::PartitionMap`]) and
+//!   deliver a vertex's tasks to the owning worker's shard; the engine asks
+//!   the scheduler for its routing ([`Scheduler::owner_of`]) and counts the
+//!   executed hits ([`ContentionStats::affinity_hits`]).
+//!
+//! Per-worker conflict/deferral/steal/escalation counters are surfaced
+//! through [`RunReport::contention`]. A background thread executes periodic
+//! sync operations concurrently with the workers (§3.2.2), taking
+//! per-vertex read locks during its fold.
 
 use super::{
     ContentionStats, EngineConfig, RunReport, StopReason, TerminationFn, UpdateContext,
@@ -16,12 +36,10 @@ use super::{
 };
 use crate::consistency::{LockTable, Scope};
 use crate::graph::DataGraph;
-use crate::scheduler::{Scheduler, Task};
+use crate::scheduler::{Injector, Scheduler, Task, WorkStealingDeque};
 use crate::sdt::{Sdt, SyncOp};
 use crate::util::Timer;
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::time::Duration;
 
 /// Threaded engine. See module docs.
@@ -31,16 +49,50 @@ const STOP_NONE: u8 = 0;
 const STOP_TERM_FN: u8 = 1;
 const STOP_LIMIT: u8 = 2;
 
-/// Bounded in-place re-attempts of a conflicted scope before deferring.
-/// Each failed attempt spins a short, growing window — long enough to ride
-/// out a neighbor's brief lock hold, short enough that a real conflict
-/// costs a requeue instead of a stall.
-const CONFLICT_ATTEMPTS: u32 = 3;
+/// Bounds of the adaptive in-place re-attempt ladder. Each failed attempt
+/// spins a short, growing window (`16 << attempt` spin hints) — long enough
+/// to ride out a neighbor's brief lock hold, short enough that a real
+/// conflict costs a requeue instead of a stall.
+const MIN_ATTEMPTS: u32 = 1;
+const MAX_ATTEMPTS: u32 = 4;
+/// Every worker starts at the old fixed ladder depth and adapts from there.
+const START_ATTEMPTS: u32 = 3;
+
+/// Re-tune the ladder every this many task dispositions.
+const TUNE_WINDOW: u32 = 64;
+/// Above this deferral rate the ladder shrinks (spinning is wasted — fail
+/// fast to the deque); below [`LO_DEFER_RATE`] it grows back.
+const HI_DEFER_RATE: f64 = 0.25;
+const LO_DEFER_RATE: f64 = 0.02;
+
+/// Per-worker local deque capacity; overflow spills to the shared injector.
+const LOCAL_DEQUE_CAP: usize = 256;
+
+/// Shrink or grow the re-attempt ladder from the deferral rate observed
+/// over the last window. Plain worker-local state — no cross-thread traffic.
+fn tune_attempts(attempts: &mut u32, window_tasks: &mut u32, window_deferrals: &mut u32) {
+    if *window_tasks < TUNE_WINDOW {
+        return;
+    }
+    let rate = *window_deferrals as f64 / *window_tasks as f64;
+    if rate > HI_DEFER_RATE {
+        *attempts = attempts.saturating_sub(1).max(MIN_ATTEMPTS);
+    } else if rate < LO_DEFER_RATE {
+        *attempts = (*attempts + 1).min(MAX_ATTEMPTS);
+    }
+    *window_tasks = 0;
+    *window_deferrals = 0;
+}
 
 impl ThreadedEngine {
     /// Run the program to completion on `config.workers` threads.
+    ///
+    /// Crate-internal: external callers go through the [`super::Engine`]
+    /// trait / [`super::Program`] builder (or
+    /// [`super::Program::run_with_locks`] to reuse a lock table across
+    /// runs) — the historical public 8-argument signature is folded away.
     #[allow(clippy::too_many_arguments)]
-    pub fn run<V: Send + Sync, E: Send + Sync>(
+    pub(crate) fn run<V: Send + Sync, E: Send + Sync>(
         graph: &DataGraph<V, E>,
         locks: &LockTable,
         scheduler: &dyn Scheduler,
@@ -67,12 +119,22 @@ impl ThreadedEngine {
             (0..workers).map(|_| AtomicU64::new(0)).collect();
         let total_retries = AtomicU64::new(0);
         let total_steals = AtomicU64::new(0);
+        let total_escalations = AtomicU64::new(0);
+        let total_affinity = AtomicU64::new(0);
         let syncs_run = AtomicU64::new(0);
-        // Per-worker retry deques for deferred (conflicted) tasks; peers
-        // steal from the back when their own sources run dry.
-        let retry: Vec<Mutex<VecDeque<Task>>> =
-            (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
-        let retry_len = AtomicUsize::new(0);
+        // Per-worker lock-free retry deques for deferred (conflicted)
+        // tasks: the owner pushes/pops LIFO (the conflicted scope is still
+        // cache-warm); peers steal FIFO from the cold end; the injector
+        // absorbs overflow from a saturated deque.
+        let retry: Vec<WorkStealingDeque<Task>> =
+            (0..workers).map(|_| WorkStealingDeque::new(LOCAL_DEQUE_CAP)).collect();
+        let overflow: Injector<Task> = Injector::new(LOCAL_DEQUE_CAP * workers);
+        // Deferred tasks currently waiting in a deque or the injector
+        // (conservative upper bound; gates the steal scan).
+        let pending_retries = AtomicUsize::new(0);
+        // Per-vertex deferral age for the fairness escalation.
+        let defer_age: Vec<AtomicU32> =
+            (0..graph.num_vertices()).map(|_| AtomicU32::new(0)).collect();
         // The last worker to exit flips `engine_done`, releasing the
         // background sync thread (the thread scope joins everything).
         let workers_remaining = AtomicUsize::new(workers);
@@ -108,8 +170,12 @@ impl ThreadedEngine {
                 let per_deferrals = &per_deferrals;
                 let total_retries = &total_retries;
                 let total_steals = &total_steals;
+                let total_escalations = &total_escalations;
+                let total_affinity = &total_affinity;
                 let retry = &retry;
-                let retry_len = &retry_len;
+                let overflow = &overflow;
+                let pending_retries = &pending_retries;
+                let defer_age = &defer_age;
                 let workers_remaining = &workers_remaining;
                 let engine_done = &engine_done;
                 s.spawn(move || {
@@ -118,33 +184,30 @@ impl ThreadedEngine {
                     let mut deferrals: u64 = 0;
                     let mut retries: u64 = 0;
                     let mut steals: u64 = 0;
+                    let mut escalations: u64 = 0;
+                    let mut affinity: u64 = 0;
                     let mut idle_spins: u32 = 0;
+                    // Adaptive conflict control (worker-local).
+                    let mut attempts: u32 = START_ATTEMPTS;
+                    let mut window_tasks: u32 = 0;
+                    let mut window_deferrals: u32 = 0;
                     // After a retry-sourced task conflicts again, look at the
                     // scheduler first next round instead of hammering the
                     // same contended scope.
-                    let mut skip_retry_once = false;
+                    let mut skip_local_once = false;
                     // reused across tasks: keeps the spawned-task buffer warm
                     let mut ctx = UpdateContext::new(sdt, w);
-                    let pop_own = || -> Option<Task> {
-                        if retry_len.load(Ordering::Acquire) == 0 {
-                            return None;
-                        }
-                        let t = retry[w].lock().unwrap().pop_front();
-                        if t.is_some() {
-                            retry_len.fetch_sub(1, Ordering::AcqRel);
-                        }
-                        t
-                    };
                     loop {
                         if stop.load(Ordering::Acquire) != STOP_NONE {
                             break;
                         }
-                        // Task sources: own retries, the scheduler, then
-                        // retries stolen from peers.
+                        // Task sources: own local deque (LIFO — cache-warm
+                        // retries), the scheduler, the overflow injector,
+                        // then steals from peers' deques.
                         let mut task: Option<Task> = None;
                         let mut from_retry = false;
-                        if !skip_retry_once {
-                            if let Some(t) = pop_own() {
+                        if !skip_local_once {
+                            if let Some(t) = retry[w].pop() {
                                 task = Some(t);
                                 from_retry = true;
                             }
@@ -167,27 +230,29 @@ impl ThreadedEngine {
                                 }
                             }
                         }
-                        if task.is_none() && skip_retry_once {
-                            if let Some(t) = pop_own() {
+                        if task.is_none() && skip_local_once {
+                            if let Some(t) = retry[w].pop() {
                                 task = Some(t);
                                 from_retry = true;
                             }
                         }
-                        if task.is_none() && workers > 1 && retry_len.load(Ordering::Acquire) > 0
-                        {
-                            for i in 1..workers {
-                                let peer = (w + i) % workers;
-                                let stolen = retry[peer].lock().unwrap().pop_back();
-                                if let Some(t) = stolen {
-                                    retry_len.fetch_sub(1, Ordering::AcqRel);
-                                    steals += 1;
-                                    task = Some(t);
-                                    from_retry = true;
-                                    break;
+                        if task.is_none() && pending_retries.load(Ordering::Acquire) > 0 {
+                            if let Some(t) = overflow.pop() {
+                                task = Some(t);
+                                from_retry = true;
+                            } else {
+                                for i in 1..workers {
+                                    let peer = (w + i) % workers;
+                                    if let Some(t) = retry[peer].steal() {
+                                        steals += 1;
+                                        task = Some(t);
+                                        from_retry = true;
+                                        break;
+                                    }
                                 }
                             }
                         }
-                        skip_retry_once = false;
+                        skip_local_once = false;
                         let Some(task) = task else {
                             if inflight.load(Ordering::Acquire) == 0 && scheduler.is_done() {
                                 break;
@@ -205,38 +270,76 @@ impl ThreadedEngine {
                         idle_spins = 0;
                         if from_retry {
                             retries += 1;
+                            pending_retries.fetch_sub(1, Ordering::AcqRel);
                         }
 
-                        // Non-blocking scope acquisition: a few in-place
-                        // re-attempts with a growing spin window, then defer.
+                        // Scope acquisition. A task whose vertex has aged past
+                        // the deferral bound escalates to a blocking acquire
+                        // (fairness: it must eventually win); everything else
+                        // gets the adaptive non-blocking ladder.
+                        let vidx = task.vertex as usize;
+                        let age = defer_age[vidx].load(Ordering::Relaxed);
                         let mut scope = None;
-                        for attempt in 0..CONFLICT_ATTEMPTS {
-                            match Scope::try_lock(graph, locks, task.vertex, config.model) {
-                                Ok(s) => {
-                                    scope = Some(s);
-                                    break;
-                                }
-                                Err(_) => {
-                                    conflicts += 1;
-                                    for _ in 0..(16u32 << attempt) {
-                                        std::hint::spin_loop();
+                        if age >= config.escalate_after {
+                            escalations += 1;
+                            scope = Some(Scope::lock(graph, locks, task.vertex, config.model));
+                        } else {
+                            for attempt in 0..attempts {
+                                match Scope::try_lock(graph, locks, task.vertex, config.model)
+                                {
+                                    Ok(s) => {
+                                        scope = Some(s);
+                                        break;
+                                    }
+                                    Err(_) => {
+                                        conflicts += 1;
+                                        for _ in 0..(16u32 << attempt) {
+                                            std::hint::spin_loop();
+                                        }
                                     }
                                 }
                             }
                         }
+                        window_tasks += 1;
                         let Some(mut scope) = scope else {
-                            // Defer: requeue on the retry deque and move on.
-                            // The task still counts as in flight, so the
-                            // drain check above cannot fire while it waits.
+                            // Defer and move on. The task still counts as in
+                            // flight, so the drain check above cannot fire
+                            // while it waits.
                             deferrals += 1;
-                            retry[w].lock().unwrap().push_back(task);
-                            retry_len.fetch_add(1, Ordering::AcqRel);
+                            window_deferrals += 1;
+                            defer_age[vidx].fetch_add(1, Ordering::Relaxed);
+                            pending_retries.fetch_add(1, Ordering::AcqRel);
                             if from_retry {
-                                skip_retry_once = true;
+                                // A *re*-deferred task rotates out to the
+                                // shared injector: pushing it back on the
+                                // local LIFO deque would make it the very
+                                // next local pop, hammering the same
+                                // contended scope while other deferred work
+                                // sits beneath it.
+                                overflow.push(task);
+                                skip_local_once = true;
                                 std::thread::yield_now();
+                            } else if let Err(t) = retry[w].push(task) {
+                                overflow.push(t);
                             }
+                            tune_attempts(
+                                &mut attempts,
+                                &mut window_tasks,
+                                &mut window_deferrals,
+                            );
                             continue;
                         };
+                        if age != 0 {
+                            defer_age[vidx].store(0, Ordering::Relaxed);
+                        }
+                        tune_attempts(&mut attempts, &mut window_tasks, &mut window_deferrals);
+                        // Affinity accounting at execution time (a deferred
+                        // task is not an affinity hit even if its pop was),
+                        // against the *scheduler's* routing map — only
+                        // owner-affine schedulers report one.
+                        if !from_retry && scheduler.owner_of(task.vertex) == Some(w) {
+                            affinity += 1;
+                        }
 
                         ctx.reset(w, task.priority);
                         fns[task.func as usize].update(&mut scope, &mut ctx);
@@ -267,6 +370,8 @@ impl ThreadedEngine {
                     per_deferrals[w].store(deferrals, Ordering::Release);
                     total_retries.fetch_add(retries, Ordering::AcqRel);
                     total_steals.fetch_add(steals, Ordering::AcqRel);
+                    total_escalations.fetch_add(escalations, Ordering::AcqRel);
+                    total_affinity.fetch_add(affinity, Ordering::AcqRel);
                     if workers_remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                         engine_done.store(true, Ordering::Release);
                     }
@@ -301,6 +406,8 @@ impl ThreadedEngine {
                 deferrals: per_worker_deferrals.iter().sum(),
                 retries: total_retries.load(Ordering::Acquire),
                 steals: total_steals.load(Ordering::Acquire),
+                escalations: total_escalations.load(Ordering::Acquire),
+                affinity_hits: total_affinity.load(Ordering::Acquire),
                 per_worker_conflicts,
                 per_worker_deferrals,
             },
@@ -526,7 +633,10 @@ mod tests {
     }
 
     /// Single worker, no background sync: nothing can conflict, so the
-    /// contention counters must be exactly zero.
+    /// contention counters must be exactly zero — and the strict FIFO has
+    /// no owner-affine routing, so the affinity counter stays zero too
+    /// (the 1-worker all-hits invariant lives in engine_stress with the
+    /// affinity-routing multiqueue scheduler).
     #[test]
     fn single_worker_never_defers() {
         let n = 32;
@@ -553,9 +663,53 @@ mod tests {
         assert_eq!(report.contention.deferrals, 0);
         assert_eq!(report.contention.retries, 0);
         assert_eq!(report.contention.steals, 0);
+        assert_eq!(report.contention.escalations, 0);
+        assert_eq!(
+            report.contention.affinity_hits, 0,
+            "strict FIFO reports no owner routing"
+        );
+    }
+
+    /// `escalate_after = 0` turns every dispatch into a blocking scope
+    /// acquisition (the fairness path, exercised deterministically): the
+    /// run must still be exactly correct, with zero conflicts/deferrals and
+    /// one escalation per update.
+    #[test]
+    fn immediate_escalation_is_blocking_and_correct() {
+        let n = 32;
+        let (g, locks) = ring(n);
+        let sched = MultiQueueFifo::new(n, 2);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let f = SelfBump { rounds: 10 };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let report = ThreadedEngine::run(
+            &g,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default()
+                .with_workers(2)
+                .with_model(ConsistencyModel::Full)
+                .with_escalate_after(0),
+        );
+        assert_eq!(report.updates, n as u64 * 10);
+        let mut g = g;
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), 10);
+        }
+        assert_eq!(report.contention.escalations, report.updates);
+        assert_eq!(report.contention.deferrals, 0, "blocking path never defers");
+        assert_eq!(report.contention.conflicts, 0, "blocking path skips the try ladder");
     }
 
     // The contended-hub scenario (nonzero deferrals under Full consistency,
-    // conservation vs the sequential engine, per-worker counter accounting)
-    // lives in rust/tests/engine_stress.rs to avoid maintaining two copies.
+    // conservation vs the sequential engine, per-worker counter accounting,
+    // escalation under a saturated hub) lives in rust/tests/sched_stress.rs
+    // and rust/tests/engine_stress.rs to avoid maintaining multiple copies.
 }

@@ -8,9 +8,11 @@
 //! (see [`crate::consistency`]).
 
 mod builder;
+mod partition;
 mod sample;
 
 pub use builder::GraphBuilder;
+pub use partition::PartitionMap;
 pub use sample::induced_subgraph;
 
 use std::cell::UnsafeCell;

@@ -1,0 +1,119 @@
+//! Contiguous block partitioning of vertex ids — the ownership map behind
+//! **owner-worker affinity** (paper §3.4's partitioned/vertex-affine
+//! schedulers; Distributed GraphLab, Low et al. 2012, §graph partitioning).
+//!
+//! Vertex ids are split into `num_parts` contiguous blocks: part `p` owns
+//! `[p * block, (p + 1) * block)`. Contiguity is the point — CSR adjacency
+//! and vertex-data arrays are id-ordered, so routing a vertex's tasks to
+//! its owning worker keeps that block of vertex data (and most of its
+//! neighborhood, for locality-preserving id orders) resident in one core's
+//! cache instead of bouncing between all of them, unlike the `v % workers`
+//! striping this replaces.
+
+use super::VertexId;
+
+/// A contiguous block partition of `0..len` into `num_parts` parts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionMap {
+    num_parts: usize,
+    block: usize,
+    len: usize,
+}
+
+impl PartitionMap {
+    /// Partition `num_items` ids into `num_parts` contiguous blocks of
+    /// `ceil(num_items / num_parts)` ids each (the last block may be
+    /// short). `num_parts` is clamped to at least 1.
+    pub fn new(num_items: usize, num_parts: usize) -> PartitionMap {
+        let parts = num_parts.max(1);
+        let block = num_items.div_ceil(parts).max(1);
+        PartitionMap { num_parts: parts, block, len: num_items }
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.num_parts
+    }
+
+    /// Items per block (the last block may hold fewer).
+    pub fn block_size(&self) -> usize {
+        self.block
+    }
+
+    /// Total number of items partitioned.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The part owning item `v`. Ids at or beyond `len` clamp into the
+    /// last part, so the map is total over `u32`.
+    #[inline]
+    pub fn owner_of(&self, v: VertexId) -> usize {
+        (v as usize / self.block).min(self.num_parts - 1)
+    }
+
+    /// The id range owned by part `p` (empty for parts past the last
+    /// populated block).
+    pub fn range(&self, p: usize) -> std::ops::Range<VertexId> {
+        let start = (p * self.block).min(self.len);
+        let end = ((p + 1) * self.block).min(self.len);
+        start as VertexId..end as VertexId
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_are_contiguous_and_cover() {
+        let pm = PartitionMap::new(64, 4);
+        assert_eq!(pm.num_parts(), 4);
+        assert_eq!(pm.block_size(), 16);
+        for p in 0..4 {
+            let r = pm.range(p);
+            assert_eq!(r.len(), 16);
+            for v in r {
+                assert_eq!(pm.owner_of(v), p);
+            }
+        }
+        // ranges tile the id space exactly
+        let total: usize = (0..4).map(|p| pm.range(p).len()).sum();
+        assert_eq!(total, pm.len());
+    }
+
+    #[test]
+    fn uneven_split_puts_remainder_last() {
+        let pm = PartitionMap::new(10, 4);
+        assert_eq!(pm.block_size(), 3);
+        assert_eq!(pm.range(0), 0..3);
+        assert_eq!(pm.range(3), 9..10, "last block holds the remainder");
+        assert_eq!(pm.owner_of(9), 3);
+    }
+
+    #[test]
+    fn more_parts_than_items() {
+        let pm = PartitionMap::new(2, 8);
+        assert_eq!(pm.owner_of(0), 0);
+        assert_eq!(pm.owner_of(1), 1);
+        for p in 2..8 {
+            assert!(pm.range(p).is_empty());
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let pm = PartitionMap::new(0, 3);
+        assert!(pm.is_empty());
+        assert!(pm.range(0).is_empty());
+        let pm = PartitionMap::new(5, 0);
+        assert_eq!(pm.num_parts(), 1, "parts clamp to 1");
+        assert_eq!(pm.owner_of(4), 0);
+        // out-of-range ids clamp into the last part
+        let pm = PartitionMap::new(8, 2);
+        assert_eq!(pm.owner_of(1000), 1);
+    }
+}

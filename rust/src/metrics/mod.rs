@@ -133,12 +133,20 @@ pub fn run_summary(report: &crate::engine::RunReport) -> String {
     );
     let _ = writeln!(
         out,
-        "contention: {} conflicts ({:.4}/update), {} deferrals, {} retries ({} stolen)",
+        "contention: {} conflicts ({:.4}/update), {} deferrals, {} retries \
+         ({} stolen, {} escalated)",
         c.conflicts,
         c.conflict_rate(report.updates),
         c.deferrals,
         c.retries,
-        c.steals
+        c.steals,
+        c.escalations
+    );
+    let _ = writeln!(
+        out,
+        "affinity: {} owner-worker hits ({:.1}% of updates)",
+        c.affinity_hits,
+        100.0 * c.affinity_hits as f64 / report.updates.max(1) as f64
     );
     let _ = writeln!(out, "{:>8} {:>12} {:>12} {:>12}", "worker", "updates", "conflicts", "deferrals");
     for (w, &u) in report.per_worker.iter().enumerate() {
@@ -207,6 +215,8 @@ mod tests {
                 deferrals: 10,
                 retries: 10,
                 steals: 3,
+                escalations: 2,
+                affinity_hits: 800,
                 per_worker_conflicts: vec![20, 10],
                 per_worker_deferrals: vec![7, 3],
             },
@@ -215,7 +225,10 @@ mod tests {
         assert!(text.contains("1000 updates"));
         assert!(text.contains("30 conflicts"));
         assert!(text.contains("10 deferrals"));
-        assert!(text.lines().count() >= 5, "per-worker rows present");
+        assert!(text.contains("2 escalated"));
+        assert!(text.contains("800 owner-worker hits"));
+        assert!(text.contains("80.0% of updates"));
+        assert!(text.lines().count() >= 6, "per-worker rows present");
     }
 
     #[test]

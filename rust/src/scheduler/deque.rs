@@ -1,0 +1,545 @@
+//! Lock-free task-distribution primitives shared by the scheduler
+//! collection and the threaded engine's retry layer.
+//!
+//! Two building blocks, both `std`-only (PR 1 dropped crossbeam and this
+//! module keeps that decision):
+//!
+//! * [`WorkStealingDeque`] — a fixed-capacity **Chase–Lev work-stealing
+//!   deque** (Chase & Lev 2005, memory orderings per Lê et al. 2013). The
+//!   owning worker pushes and pops at the *bottom* (LIFO — the hot end,
+//!   cache-warm), thieves steal from the *top* (FIFO — the cold end).
+//!   `push` never blocks: a full deque returns the task so the caller can
+//!   spill it to an [`Injector`].
+//! * [`Injector`] — a **multi-producer multi-consumer segment queue**: a
+//!   bounded MPMC ring (Vyukov's algorithm, per-slot sequence numbers) with
+//!   a mutex-protected overflow list that is only touched when the ring
+//!   fills — the hot path is entirely lock-free. Overflowed items are
+//!   preferred by `pop` so a burst can never strand tasks behind a busy
+//!   ring.
+//!
+//! Elements are stored as two 64-bit words in atomic slots (the
+//! [`PackWords`] trait), which is what makes the racy-read windows of both
+//! algorithms well-defined: a reader that loses the claim CAS may observe a
+//! torn pair, but the value is discarded — the protocol guarantees a torn
+//! pair is never *returned*. [`crate::scheduler::Task`] (vertex + func +
+//! priority) packs exactly into two words.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::sync::atomic::{fence, AtomicIsize, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// An element representable as two 64-bit words, so it can live in atomic
+/// queue slots. `unpack(pack(x)) == x` must hold.
+pub trait PackWords: Copy {
+    fn pack(self) -> [u64; 2];
+    fn unpack(words: [u64; 2]) -> Self;
+}
+
+impl PackWords for super::Task {
+    #[inline]
+    fn pack(self) -> [u64; 2] {
+        [(self.vertex as u64) | ((self.func as u64) << 32), self.priority.to_bits()]
+    }
+
+    #[inline]
+    fn unpack(words: [u64; 2]) -> Self {
+        super::Task {
+            vertex: (words[0] & 0xFFFF_FFFF) as u32,
+            func: (words[0] >> 32) as u32,
+            priority: f64::from_bits(words[1]),
+        }
+    }
+}
+
+impl PackWords for u32 {
+    #[inline]
+    fn pack(self) -> [u64; 2] {
+        [self as u64, 0]
+    }
+
+    #[inline]
+    fn unpack(words: [u64; 2]) -> Self {
+        words[0] as u32
+    }
+}
+
+/// Two atomic words of element storage.
+#[derive(Default)]
+struct Slot {
+    w0: AtomicU64,
+    w1: AtomicU64,
+}
+
+/// Fixed-capacity Chase–Lev work-stealing deque. See module docs.
+///
+/// Contract: [`Self::push`] and [`Self::pop`] may only be called by the
+/// deque's *owning* thread; [`Self::steal`] may be called from any thread.
+/// (The methods take `&self` so the deque can be shared across a scoped
+/// thread pool; single-owner access to the bottom end is the caller's
+/// responsibility, as with every Chase–Lev implementation.)
+pub struct WorkStealingDeque<T> {
+    /// Steal end (monotonically increasing).
+    top: AtomicIsize,
+    /// Owner end.
+    bottom: AtomicIsize,
+    slots: Box<[Slot]>,
+    mask: isize,
+    _marker: PhantomData<T>,
+}
+
+impl<T: PackWords> WorkStealingDeque<T> {
+    /// `capacity` is rounded up to a power of two in `[8, 2^20]`.
+    pub fn new(capacity: usize) -> WorkStealingDeque<T> {
+        let cap = capacity.next_power_of_two().clamp(8, 1 << 20);
+        WorkStealingDeque {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            slots: (0..cap).map(|_| Slot::default()).collect::<Vec<_>>().into_boxed_slice(),
+            mask: cap as isize - 1,
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Approximate occupancy (racy by nature; exact when quiescent).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    fn write_slot(&self, idx: isize, value: T) {
+        let slot = &self.slots[(idx & self.mask) as usize];
+        let words = value.pack();
+        slot.w0.store(words[0], Ordering::Relaxed);
+        slot.w1.store(words[1], Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn read_slot(&self, idx: isize) -> T {
+        let slot = &self.slots[(idx & self.mask) as usize];
+        T::unpack([slot.w0.load(Ordering::Relaxed), slot.w1.load(Ordering::Relaxed)])
+    }
+
+    /// Owner-only: push at the bottom. Returns the value back when the
+    /// deque is full (caller spills it to an [`Injector`]).
+    pub fn push(&self, value: T) -> Result<(), T> {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        if b - t > self.mask {
+            return Err(value); // full
+        }
+        self.write_slot(b, value);
+        // Publish the element before the new bottom becomes visible to
+        // thieves (their `bottom` Acquire load pairs with this Release).
+        self.bottom.store(b + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Owner-only: pop at the bottom (LIFO). The last element races with
+    /// concurrent thieves and is settled by a CAS on `top`.
+    pub fn pop(&self) -> Option<T> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let mut value = Some(self.read_slot(b));
+            if t == b {
+                // Single element left: win it against thieves or lose it.
+                if self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_err()
+                {
+                    value = None;
+                }
+                self.bottom.store(b + 1, Ordering::Relaxed);
+            }
+            value
+        } else {
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Any thread: steal from the top (FIFO). Retries internally while it
+    /// loses claim races; returns `None` only when the deque looks empty.
+    pub fn steal(&self) -> Option<T> {
+        loop {
+            let t = self.top.load(Ordering::Acquire);
+            fence(Ordering::SeqCst);
+            let b = self.bottom.load(Ordering::Acquire);
+            if t >= b {
+                return None;
+            }
+            let value = self.read_slot(t);
+            // Claim settles the race against the owner's pop of the last
+            // element and against other thieves; a lost claim means the
+            // (possibly torn) read above is discarded.
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(value);
+            }
+        }
+    }
+}
+
+/// One ring slot: Vyukov sequence number + two words of element storage.
+struct InjectorSlot {
+    seq: AtomicUsize,
+    w0: AtomicU64,
+    w1: AtomicU64,
+}
+
+/// Multi-producer multi-consumer FIFO segment queue. See module docs.
+///
+/// Ordering is FIFO on the lock-free ring; items that overflow into the
+/// (rarely touched) mutex list are drained *first* by `pop`, so spilled
+/// tasks can never starve behind a continuously busy ring.
+pub struct Injector<T> {
+    slots: Box<[InjectorSlot]>,
+    mask: usize,
+    enqueue_pos: AtomicUsize,
+    dequeue_pos: AtomicUsize,
+    overflow: Mutex<VecDeque<T>>,
+    overflow_len: AtomicUsize,
+    _marker: PhantomData<T>,
+}
+
+impl<T: PackWords> Injector<T> {
+    /// `capacity_hint` is rounded up to a power of two in `[64, 2^16]`;
+    /// pushes beyond ring capacity spill to the overflow list, so the hint
+    /// only sizes the lock-free fast path.
+    pub fn new(capacity_hint: usize) -> Injector<T> {
+        let cap = capacity_hint.next_power_of_two().clamp(64, 1 << 16);
+        Injector {
+            slots: (0..cap)
+                .map(|i| InjectorSlot {
+                    seq: AtomicUsize::new(i),
+                    w0: AtomicU64::new(0),
+                    w1: AtomicU64::new(0),
+                })
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            mask: cap - 1,
+            enqueue_pos: AtomicUsize::new(0),
+            dequeue_pos: AtomicUsize::new(0),
+            overflow: Mutex::new(VecDeque::new()),
+            overflow_len: AtomicUsize::new(0),
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn spill(&self, value: T) {
+        self.overflow_len.fetch_add(1, Ordering::AcqRel);
+        self.overflow.lock().unwrap().push_back(value);
+    }
+
+    /// Push (any thread). Never fails: a full ring spills to the overflow
+    /// list. While the overflow is non-empty, new pushes also spill, which
+    /// keeps the queue near-FIFO across a burst.
+    pub fn push(&self, value: T) {
+        if self.overflow_len.load(Ordering::Acquire) > 0 {
+            self.spill(value);
+            return;
+        }
+        let mut pos = self.enqueue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos as isize;
+            if dif == 0 {
+                match self.enqueue_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let words = value.pack();
+                        slot.w0.store(words[0], Ordering::Relaxed);
+                        slot.w1.store(words[1], Ordering::Relaxed);
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return;
+                    }
+                    Err(seen) => pos = seen,
+                }
+            } else if dif < 0 {
+                // Ring full (the slot is still occupied by the element one
+                // lap behind): spill.
+                self.spill(value);
+                return;
+            } else {
+                // Another producer claimed this position; reload.
+                pos = self.enqueue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Pop (any thread). `None` means nothing was available *right now*.
+    pub fn pop(&self) -> Option<T> {
+        if self.overflow_len.load(Ordering::Acquire) > 0 {
+            let mut queue = self.overflow.lock().unwrap();
+            if let Some(value) = queue.pop_front() {
+                self.overflow_len.fetch_sub(1, Ordering::AcqRel);
+                return Some(value);
+            }
+        }
+        let mut pos = self.dequeue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - (pos + 1) as isize;
+            if dif == 0 {
+                match self.dequeue_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let value = T::unpack([
+                            slot.w0.load(Ordering::Relaxed),
+                            slot.w1.load(Ordering::Relaxed),
+                        ]);
+                        // Release the slot for the next lap of producers.
+                        slot.seq.store(pos + self.mask + 1, Ordering::Release);
+                        return Some(value);
+                    }
+                    Err(seen) => pos = seen,
+                }
+            } else if dif < 0 {
+                return None; // empty (or an in-flight push not yet published)
+            } else {
+                pos = self.dequeue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Approximate occupancy (racy by nature; exact when quiescent).
+    pub fn len(&self) -> usize {
+        let e = self.enqueue_pos.load(Ordering::Relaxed);
+        let d = self.dequeue_pos.load(Ordering::Relaxed);
+        e.saturating_sub(d) + self.overflow_len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Task;
+    use super::*;
+    use std::sync::atomic::AtomicU8;
+    use std::sync::Arc;
+
+    #[test]
+    fn task_pack_roundtrip() {
+        for t in [
+            Task::new(0),
+            Task::with_func(u32::MAX, 7, -3.5),
+            Task::with_priority(42, f64::MAX),
+            Task::with_func(1, u32::MAX, 0.0),
+        ] {
+            let back = Task::unpack(t.pack());
+            assert_eq!(back.vertex, t.vertex);
+            assert_eq!(back.func, t.func);
+            assert_eq!(back.priority.to_bits(), t.priority.to_bits());
+        }
+        assert_eq!(u32::unpack(123u32.pack()), 123);
+    }
+
+    #[test]
+    fn deque_owner_lifo_thief_fifo() {
+        let d: WorkStealingDeque<Task> = WorkStealingDeque::new(8);
+        for v in 0..4u32 {
+            d.push(Task::new(v)).unwrap();
+        }
+        assert_eq!(d.len(), 4);
+        // owner pops the hottest (most recently pushed) end
+        assert_eq!(d.pop().unwrap().vertex, 3);
+        // a thief steals the coldest end
+        assert_eq!(d.steal().unwrap().vertex, 0);
+        assert_eq!(d.steal().unwrap().vertex, 1);
+        assert_eq!(d.pop().unwrap().vertex, 2);
+        assert!(d.pop().is_none());
+        assert!(d.steal().is_none());
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn deque_full_returns_value() {
+        let d: WorkStealingDeque<Task> = WorkStealingDeque::new(8);
+        assert_eq!(d.capacity(), 8);
+        for v in 0..8u32 {
+            d.push(Task::new(v)).unwrap();
+        }
+        let spilled = d.push(Task::new(99)).unwrap_err();
+        assert_eq!(spilled.vertex, 99);
+        // after a pop there is room again
+        assert_eq!(d.pop().unwrap().vertex, 7);
+        d.push(spilled).unwrap();
+        assert_eq!(d.pop().unwrap().vertex, 99);
+    }
+
+    #[test]
+    fn deque_concurrent_exactly_once() {
+        let n: u32 = 40_000;
+        let deque: Arc<WorkStealingDeque<Task>> = Arc::new(WorkStealingDeque::new(256));
+        let seen: Arc<Vec<AtomicU8>> =
+            Arc::new((0..n).map(|_| AtomicU8::new(0)).collect());
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+        let mut thieves = Vec::new();
+        for _ in 0..3 {
+            let deque = Arc::clone(&deque);
+            let seen = Arc::clone(&seen);
+            let done = Arc::clone(&done);
+            thieves.push(std::thread::spawn(move || loop {
+                match deque.steal() {
+                    Some(t) => {
+                        seen[t.vertex as usize].fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {
+                        if done.load(Ordering::Acquire) && deque.is_empty() {
+                            break;
+                        }
+                        std::hint::spin_loop();
+                    }
+                }
+            }));
+        }
+
+        // owner: push everything, popping locally whenever the deque fills
+        for v in 0..n {
+            let mut t = Task::new(v);
+            loop {
+                match deque.push(t) {
+                    Ok(()) => break,
+                    Err(back) => {
+                        t = back;
+                        if let Some(p) = deque.pop() {
+                            seen[p.vertex as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }
+        while let Some(p) = deque.pop() {
+            seen[p.vertex as usize].fetch_add(1, Ordering::Relaxed);
+        }
+        done.store(true, Ordering::Release);
+        for h in thieves {
+            h.join().unwrap();
+        }
+        for (v, c) in seen.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {v} lost or duplicated");
+        }
+    }
+
+    #[test]
+    fn injector_fifo_and_overflow() {
+        let q: Injector<Task> = Injector::new(64);
+        assert_eq!(q.capacity(), 64);
+        // 200 pushes: 64 fill the ring, 136 spill to the overflow list
+        for v in 0..200u32 {
+            q.push(Task::new(v));
+        }
+        assert_eq!(q.len(), 200);
+        let mut got = Vec::new();
+        while let Some(t) = q.pop() {
+            got.push(t.vertex);
+        }
+        assert_eq!(got.len(), 200);
+        // exactly-once delivery (order may interleave ring and overflow)
+        got.sort_unstable();
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn injector_ring_is_fifo_under_capacity() {
+        let q: Injector<u32> = Injector::new(64);
+        for v in 0..50u32 {
+            q.push(v);
+        }
+        for v in 0..50u32 {
+            assert_eq!(q.pop(), Some(v));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn injector_concurrent_exactly_once() {
+        let producers: u32 = 4;
+        let per: u32 = 20_000;
+        let n = producers * per;
+        let q: Arc<Injector<Task>> = Arc::new(Injector::new(1024));
+        let seen: Arc<Vec<AtomicU8>> =
+            Arc::new((0..n).map(|_| AtomicU8::new(0)).collect());
+        let produced = Arc::new(AtomicUsize::new(0));
+        let consumed = Arc::new(AtomicUsize::new(0));
+
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = Arc::clone(&q);
+            let produced = Arc::clone(&produced);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    q.push(Task::new(p * per + i));
+                    produced.fetch_add(1, Ordering::Release);
+                }
+            }));
+        }
+        for _ in 0..4 {
+            let q = Arc::clone(&q);
+            let seen = Arc::clone(&seen);
+            let produced = Arc::clone(&produced);
+            let consumed = Arc::clone(&consumed);
+            handles.push(std::thread::spawn(move || loop {
+                match q.pop() {
+                    Some(t) => {
+                        seen[t.vertex as usize].fetch_add(1, Ordering::Relaxed);
+                        consumed.fetch_add(1, Ordering::AcqRel);
+                    }
+                    None => {
+                        if produced.load(Ordering::Acquire) == n as usize
+                            && consumed.load(Ordering::Acquire) >= n as usize
+                        {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(consumed.load(Ordering::Relaxed), n as usize);
+        for (v, c) in seen.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {v} lost or duplicated");
+        }
+    }
+}

@@ -1,14 +1,32 @@
 //! FIFO-class task schedulers (paper §3.4): the strict single-queue FIFO and
-//! its relaxed variants — multi-queue (work stealing) and partitioned
-//! (vertex-affine) — which trade ordering strictness for reduced contention.
+//! its relaxed variants — the sharded multi-queue (owner-affine insertion +
+//! work stealing) and the partitioned scheduler (strict vertex affinity) —
+//! which trade ordering strictness for reduced contention.
+//!
+//! The relaxed variants are built on the lock-free [`Injector`] segment
+//! queue (one per worker) with tasks routed to the shard that *owns* the
+//! vertex ([`PartitionMap`], contiguous id blocks), so repeated updates of
+//! a vertex keep landing on the worker whose cache already holds its scope
+//! data. Only the strict FIFO still serializes through a mutex — strict
+//! global ordering is exactly what a single queue buys.
 
-use super::{PendingFlags, Scheduler, Task, DEFAULT_FUNC_SLOTS};
+use super::{Injector, PendingFlags, Scheduler, Task, DEFAULT_FUNC_SLOTS};
+use crate::graph::PartitionMap;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Ring capacity hint per shard: enough for a full seed of the shard's
+/// vertices without touching the overflow list, bounded so huge graphs
+/// don't balloon the ring allocation.
+fn shard_capacity(num_vertices: usize, shards: usize) -> usize {
+    (num_vertices / shards.max(1)).clamp(256, 1 << 15)
+}
+
 /// Strict single-queue FIFO. Tasks are de-duplicated per (vertex, func):
-/// re-adding a pending task is a no-op.
+/// re-adding a pending task is a no-op. This is also the `Mutex<VecDeque>`
+/// baseline the lock-free schedulers are benchmarked against
+/// (`results/BENCH_sched.json`).
 pub struct FifoScheduler {
     queue: Mutex<VecDeque<Task>>,
     pending: PendingFlags,
@@ -62,14 +80,16 @@ impl Scheduler for FifoScheduler {
     }
 }
 
-/// Relaxed-order FIFO over `2 × workers` sharded queues with work stealing.
-/// Insertions round-robin across shards; a worker pops from its own shards
-/// first, then steals. This is the scheduler CoEM scales with (Fig 6a/b).
+/// Relaxed-order FIFO over one lock-free [`Injector`] shard per worker.
+/// Insertions are **owner-affine**: a task lands on the shard of the worker
+/// that owns its vertex (contiguous [`PartitionMap`] blocks); a worker pops
+/// its own shard first and steals from its peers' shards in ring order when
+/// it runs dry. This is the scheduler CoEM scales with (Fig 6a/b).
 pub struct MultiQueueFifo {
-    shards: Vec<Mutex<VecDeque<Task>>>,
+    shards: Vec<Injector<Task>>,
+    part: PartitionMap,
     pending: PendingFlags,
     len: AtomicUsize,
-    rr: AtomicUsize,
 }
 
 impl MultiQueueFifo {
@@ -83,12 +103,13 @@ impl MultiQueueFifo {
         workers: usize,
         num_funcs: usize,
     ) -> MultiQueueFifo {
-        let nshards = (workers.max(1)) * 2;
+        let nshards = workers.max(1);
+        let cap = shard_capacity(num_vertices, nshards);
         MultiQueueFifo {
-            shards: (0..nshards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            shards: (0..nshards).map(|_| Injector::new(cap)).collect(),
+            part: PartitionMap::new(num_vertices, nshards),
             pending: PendingFlags::new(num_vertices, num_funcs),
             len: AtomicUsize::new(0),
-            rr: AtomicUsize::new(0),
         }
     }
 }
@@ -98,21 +119,24 @@ impl Scheduler for MultiQueueFifo {
         "multiqueue"
     }
 
+    fn owner_of(&self, v: u32) -> Option<usize> {
+        Some(self.part.owner_of(v))
+    }
+
     fn add_task(&self, t: Task) {
         if self.pending.try_mark(&t) {
-            let shard = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
-            self.shards[shard].lock().unwrap().push_back(t);
+            self.shards[self.part.owner_of(t.vertex)].push(t);
             self.len.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     fn next_task(&self, worker: usize) -> Option<Task> {
         let n = self.shards.len();
-        // own shards first (2 per worker), then steal in ring order
-        let home = (worker * 2) % n;
+        // own shard first, then steal in ring order
+        let home = worker % n;
         for i in 0..n {
             let shard = (home + i) % n;
-            if let Some(t) = self.shards[shard].lock().unwrap().pop_front() {
+            if let Some(t) = self.shards[shard].pop() {
                 self.pending.unmark(&t);
                 self.len.fetch_sub(1, Ordering::Relaxed);
                 return Some(t);
@@ -130,11 +154,13 @@ impl Scheduler for MultiQueueFifo {
     }
 }
 
-/// Partitioned FIFO: vertex `v` is owned by partition `v % workers`; worker
-/// `w` only executes its own partition (no stealing). Lowest contention and
-/// best locality, at the cost of load imbalance on skewed graphs.
+/// Partitioned FIFO: vertex `v` is owned by the worker whose contiguous
+/// block contains it ([`PartitionMap`]); worker `w` only executes its own
+/// partition (no stealing). Lowest contention and best locality, at the
+/// cost of load imbalance on skewed graphs.
 pub struct PartitionedScheduler {
-    parts: Vec<Mutex<VecDeque<Task>>>,
+    parts: Vec<Injector<Task>>,
+    part: PartitionMap,
     pending: PendingFlags,
     len: AtomicUsize,
 }
@@ -150,16 +176,14 @@ impl PartitionedScheduler {
         workers: usize,
         num_funcs: usize,
     ) -> PartitionedScheduler {
+        let nparts = workers.max(1);
+        let cap = shard_capacity(num_vertices, nparts);
         PartitionedScheduler {
-            parts: (0..workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            parts: (0..nparts).map(|_| Injector::new(cap)).collect(),
+            part: PartitionMap::new(num_vertices, nparts),
             pending: PendingFlags::new(num_vertices, num_funcs),
             len: AtomicUsize::new(0),
         }
-    }
-
-    #[inline]
-    fn partition_of(&self, v: u32) -> usize {
-        v as usize % self.parts.len()
     }
 }
 
@@ -168,17 +192,20 @@ impl Scheduler for PartitionedScheduler {
         "partitioned"
     }
 
+    fn owner_of(&self, v: u32) -> Option<usize> {
+        Some(self.part.owner_of(v))
+    }
+
     fn add_task(&self, t: Task) {
         if self.pending.try_mark(&t) {
-            let p = self.partition_of(t.vertex);
-            self.parts[p].lock().unwrap().push_back(t);
+            self.parts[self.part.owner_of(t.vertex)].push(t);
             self.len.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     fn next_task(&self, worker: usize) -> Option<Task> {
         let p = worker % self.parts.len();
-        let t = self.parts[p].lock().unwrap().pop_front();
+        let t = self.parts[p].pop();
         if let Some(ref task) = t {
             self.pending.unmark(task);
             self.len.fetch_sub(1, Ordering::Relaxed);
@@ -256,6 +283,18 @@ mod tests {
     }
 
     #[test]
+    fn multiqueue_routes_to_owner_shard() {
+        let s = MultiQueueFifo::new(64, 4);
+        for v in 0..64 {
+            s.add_task(Task::new(v));
+        }
+        // a worker popping only its own turn sees only vertices it owns
+        // (until shards drain and stealing kicks in)
+        let t = s.next_task(2).unwrap();
+        assert_eq!(s.owner_of(t.vertex), Some(2), "first pop comes from the home shard");
+    }
+
+    #[test]
     fn partitioned_respects_ownership() {
         let s = PartitionedScheduler::new(64, 4);
         for v in 0..64 {
@@ -263,10 +302,25 @@ mod tests {
         }
         for w in 0..4 {
             while let Some(t) = s.next_task(w) {
-                assert_eq!(t.vertex as usize % 4, w, "vertex {} on worker {w}", t.vertex);
+                assert_eq!(
+                    s.owner_of(t.vertex),
+                    Some(w),
+                    "vertex {} served to non-owner worker {w}",
+                    t.vertex
+                );
             }
         }
         assert!(s.is_done());
+    }
+
+    #[test]
+    fn partitioned_blocks_are_contiguous() {
+        let s = PartitionedScheduler::new(64, 4);
+        // contiguous blocks of 16, not `v % workers` stripes
+        assert_eq!(s.owner_of(0), Some(0));
+        assert_eq!(s.owner_of(15), Some(0));
+        assert_eq!(s.owner_of(16), Some(1));
+        assert_eq!(s.owner_of(63), Some(3));
     }
 
     #[test]

@@ -13,13 +13,23 @@
 //! [`RoundRobinScheduler`] (Gauss–Seidel) — the [`SplashScheduler`]
 //! (Gonzalez et al. 2009a), and the **set scheduler** (§3.4.1) with its
 //! execution-plan DAG compilation ([`set_scheduler`]).
+//!
+//! The relaxed schedulers share one **lock-free task-distribution layer**
+//! ([`deque`]): per-worker [`Injector`] segment queues with owner-affine
+//! routing ([`crate::graph::PartitionMap`] contiguous blocks), and the
+//! Chase–Lev [`WorkStealingDeque`] the threaded engine uses for its retry
+//! path. Only the *strict* variants ([`FifoScheduler`],
+//! [`PriorityScheduler`], the splash root heap) still serialize through a
+//! mutex — exact global order is what the mutex buys.
 
+pub mod deque;
 mod fifo;
 mod priority;
 pub mod set_scheduler;
 mod splash;
 mod sweep;
 
+pub use deque::{Injector, PackWords, WorkStealingDeque};
 pub use fifo::{FifoScheduler, MultiQueueFifo, PartitionedScheduler};
 pub use priority::{ApproxPriorityScheduler, PriorityScheduler};
 pub use set_scheduler::{ExecutionPlan, SetScheduler};
@@ -91,6 +101,15 @@ pub trait Scheduler: Send + Sync {
 
     /// Approximate number of pending tasks (monitoring only).
     fn approx_len(&self) -> usize;
+
+    /// The worker whose queue owns `v` under this scheduler's routing, for
+    /// **owner-affine** schedulers (tasks are delivered to the owning
+    /// worker's shard). `None` means the scheduler has no affinity concept;
+    /// engines use this to count owner-affinity hits without guessing at
+    /// the scheduler's internal partition.
+    fn owner_of(&self, _v: VertexId) -> Option<usize> {
+        None
+    }
 }
 
 /// Default per-vertex update-function slots for schedulers constructed
@@ -155,13 +174,19 @@ pub const DEFAULT_SPLASH_SIZE: usize = 32;
 /// `workers` = worker count (for sharded schedulers). Covers every
 /// scheduler constructible from sizes alone — the splash scheduler also
 /// needs graph adjacency, so it lives in [`by_name_for_graph`].
+///
+/// `"priority"` resolves to the sharded-bucket [`ApproxPriorityScheduler`]
+/// (the scalable default); the serial global heap stays reachable as
+/// `"priority-strict"`.
 pub fn by_name(name: &str, n: usize, workers: usize) -> Option<Box<dyn Scheduler>> {
     Some(match name {
         "fifo" => Box::new(FifoScheduler::new(n)),
         "multiqueue" => Box::new(MultiQueueFifo::new(n, workers)),
         "partitioned" => Box::new(PartitionedScheduler::new(n, workers)),
-        "priority" => Box::new(PriorityScheduler::new(n)),
-        "approx-priority" => Box::new(ApproxPriorityScheduler::new(n, workers)),
+        "priority" | "approx-priority" => {
+            Box::new(ApproxPriorityScheduler::new(n, workers))
+        }
+        "priority-strict" => Box::new(PriorityScheduler::new(n)),
         "round-robin" => Box::new(RoundRobinScheduler::new(n, 1)),
         "synchronous" => Box::new(SynchronousScheduler::new(n, 1)),
         _ => return None,
@@ -221,15 +246,24 @@ mod tests {
             "fifo",
             "multiqueue",
             "partitioned",
-            "priority",
             "approx-priority",
+            "priority-strict",
             "round-robin",
             "synchronous",
         ] {
             let s = by_name(name, 10, 2).unwrap_or_else(|| panic!("missing {name}"));
-            assert_eq!(s.name(), name);
+            // registry aliases resolve to their canonical scheduler name
+            let want = if name == "priority-strict" { "priority" } else { name };
+            assert_eq!(s.name(), want);
         }
         assert!(by_name("bogus", 10, 2).is_none());
+
+        // `priority` defaults to the scalable sharded-bucket variant, not
+        // the serial global heap.
+        let s = by_name("priority", 10, 2).unwrap();
+        assert_eq!(s.name(), "approx-priority");
+        let s = by_name("priority-strict", 10, 2).unwrap();
+        assert_eq!(s.name(), "priority");
 
         // The graph-aware registry covers everything above plus splash
         // (which the module table advertises but by_name cannot build).
@@ -246,15 +280,18 @@ mod tests {
             "multiqueue",
             "partitioned",
             "priority",
+            "priority-strict",
             "approx-priority",
             "round-robin",
             "synchronous",
             "splash",
         ] {
-            let s = by_name_for_graph(name, &g, 2)
-                .unwrap_or_else(|| panic!("missing {name}"));
-            assert_eq!(s.name(), name);
+            assert!(
+                by_name_for_graph(name, &g, 2).is_some(),
+                "missing {name} in graph-aware registry"
+            );
         }
+        assert_eq!(by_name_for_graph("priority", &g, 2).unwrap().name(), "approx-priority");
         assert!(by_name_for_graph("bogus", &g, 2).is_none());
 
         // splash from the registry must actually schedule

@@ -3,6 +3,15 @@
 //! promotion*: re-adding a pending task with a higher priority raises it —
 //! the mechanism behind Residual BP (Elidan et al. 2006).
 //!
+//! [`PriorityScheduler`] is the paper's strict variant: one heap, one
+//! mutex, exact order ("at the cost of increased overhead" — Fig 4a
+//! measures exactly that). [`ApproxPriorityScheduler`] quantizes priorities
+//! into log-spaced buckets of lock-free [`Injector`] shards and keeps the
+//! per-vertex live-priority table in plain atomics, so adds and pops never
+//! take a lock; [`super::by_name_for_graph`] hands it out for
+//! `--scheduler priority` by default (the serial heap stays available as
+//! `priority-strict`).
+//!
 //! De-duplication granularity: unlike the FIFO family's per-(vertex, func)
 //! pending flags, both priority schedulers deduplicate **per vertex** — a
 //! vertex has one live priority, and scheduling a second `FuncId` for a
@@ -10,10 +19,11 @@
 //! multiplexing several update functions through one priority scheduler
 //! should use distinct vertices or a FIFO-family scheduler.
 
-use super::{Scheduler, Task};
+use super::{Injector, Scheduler, Task};
+use crate::graph::PartitionMap;
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::BinaryHeap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 #[derive(Debug, Clone, Copy)]
@@ -126,23 +136,32 @@ impl Scheduler for PriorityScheduler {
 }
 
 /// Relaxed ("approximate") priority scheduler: priorities are quantized into
-/// log-spaced buckets; each bucket is a sharded FIFO. Pops scan from the
-/// hottest bucket down. Ordering is approximate; contention is per-bucket
-/// per-shard instead of one global heap lock.
+/// log-spaced buckets; each bucket is sharded into one lock-free
+/// [`Injector`] per worker, with owner-affine insertion (the shard of the
+/// worker owning the vertex). Pops scan from the hottest bucket down, own
+/// shard first. The per-vertex live-priority table is a plain `AtomicU64`
+/// of f64 bits ([`EMPTY_PRI`] = not pending), so the whole add/pop path is
+/// lock-free — the global `Mutex<Vec<f64>>` this replaces serialized every
+/// operation of every worker.
 pub struct ApproxPriorityScheduler {
-    /// buckets[b].shards[s]
-    buckets: Vec<Vec<Mutex<std::collections::VecDeque<Task>>>>,
-    /// live priority per vertex (NAN = not pending), bucket index per vertex
-    live: Mutex<Vec<f64>>,
+    /// buckets[b][s] — bucket-major, one shard per worker.
+    buckets: Vec<Vec<Injector<Task>>>,
+    /// Live priority bits per vertex; [`EMPTY_PRI`] = not pending.
+    live: Vec<AtomicU64>,
+    part: PartitionMap,
     len: AtomicUsize,
     nshards: usize,
-    rr: AtomicUsize,
 }
 
 const NUM_BUCKETS: usize = 24;
 /// Bucket 0 holds the highest priorities. Priorities are assumed positive
 /// residual-like magnitudes; bucket = clamp(-log2(p / PMAX)).
 const PMAX: f64 = 16.0;
+
+/// "Not pending" sentinel for the live table. `u64::MAX` is one specific
+/// NaN bit pattern; stored priorities are sanitized to finite values so the
+/// sentinel can never collide with a real entry.
+const EMPTY_PRI: u64 = u64::MAX;
 
 fn bucket_of(p: f64) -> usize {
     if !(p > 0.0) {
@@ -152,17 +171,33 @@ fn bucket_of(p: f64) -> usize {
     b.max(0.0).min((NUM_BUCKETS - 1) as f64) as usize
 }
 
+/// Clamp non-finite priorities so their bit patterns are storable (see
+/// [`EMPTY_PRI`]); NaN/±inf priorities are meaningless to bucketing anyway.
+fn sanitize(p: f64) -> f64 {
+    if p.is_finite() {
+        p
+    } else if p == f64::INFINITY {
+        f64::MAX
+    } else {
+        0.0
+    }
+}
+
 impl ApproxPriorityScheduler {
     pub fn new(num_vertices: usize, workers: usize) -> ApproxPriorityScheduler {
         let nshards = workers.max(1);
+        // Per-ring capacity: the load spreads over NUM_BUCKETS x nshards
+        // rings, so size each ring for its slice of the vertices (the
+        // overflow lists absorb skewed bucket distributions).
+        let cap = (num_vertices / (nshards * NUM_BUCKETS)).clamp(64, 1 << 13);
         ApproxPriorityScheduler {
             buckets: (0..NUM_BUCKETS)
-                .map(|_| (0..nshards).map(|_| Mutex::new(Default::default())).collect())
+                .map(|_| (0..nshards).map(|_| Injector::new(cap)).collect())
                 .collect(),
-            live: Mutex::new(vec![f64::NAN; num_vertices]),
+            live: (0..num_vertices).map(|_| AtomicU64::new(EMPTY_PRI)).collect(),
+            part: PartitionMap::new(num_vertices, nshards),
             len: AtomicUsize::new(0),
             nshards,
-            rr: AtomicUsize::new(0),
         }
     }
 }
@@ -172,26 +207,60 @@ impl Scheduler for ApproxPriorityScheduler {
         "approx-priority"
     }
 
+    fn owner_of(&self, v: u32) -> Option<usize> {
+        Some(self.part.owner_of(v))
+    }
+
     fn add_task(&self, t: Task) {
-        let mut live = self.live.lock().unwrap();
-        let cur = live[t.vertex as usize];
-        if cur.is_nan() {
-            live[t.vertex as usize] = t.priority;
-            drop(live);
-            let b = bucket_of(t.priority);
-            let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.nshards;
-            self.buckets[b][s].lock().unwrap().push_back(t);
-            self.len.fetch_add(1, Ordering::Relaxed);
-        } else if t.priority > cur {
-            // promotion: record the higher priority; if it crosses into a
-            // hotter bucket, insert a forwarding entry (stale one is skipped
-            // on pop via the live check).
-            live[t.vertex as usize] = t.priority;
-            let (b_old, b_new) = (bucket_of(cur), bucket_of(t.priority));
-            drop(live);
-            if b_new < b_old {
-                let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.nshards;
-                self.buckets[b_new][s].lock().unwrap().push_back(t);
+        let p = sanitize(t.priority);
+        let cell = &self.live[t.vertex as usize];
+        let mut cur = cell.load(Ordering::Acquire);
+        loop {
+            if cur == EMPTY_PRI {
+                match cell.compare_exchange_weak(
+                    cur,
+                    p.to_bits(),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => {
+                        // Newly pending. Count *before* the ring push: a
+                        // concurrent pop may claim the vertex through a
+                        // stale older entry the moment the CAS lands, and
+                        // its decrement must never precede our increment
+                        // at quiescence.
+                        self.len.fetch_add(1, Ordering::Relaxed);
+                        let b = bucket_of(p);
+                        let s = self.part.owner_of(t.vertex);
+                        self.buckets[b][s].push(Task { priority: p, ..t });
+                        return;
+                    }
+                    Err(seen) => cur = seen,
+                }
+            } else {
+                let curf = f64::from_bits(cur);
+                if p <= curf {
+                    return; // lower-priority re-add of a pending task: no-op
+                }
+                match cell.compare_exchange_weak(
+                    cur,
+                    p.to_bits(),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => {
+                        // promotion: if it crosses into a hotter bucket,
+                        // insert a forwarding entry (the stale one is
+                        // skipped on pop via the live check).
+                        let (b_old, b_new) = (bucket_of(curf), bucket_of(p));
+                        if b_new < b_old {
+                            let s = self.part.owner_of(t.vertex);
+                            self.buckets[b_new][s].push(Task { priority: p, ..t });
+                        }
+                        return;
+                    }
+                    Err(seen) => cur = seen,
+                }
             }
         }
     }
@@ -200,22 +269,32 @@ impl Scheduler for ApproxPriorityScheduler {
         for b in 0..NUM_BUCKETS {
             for i in 0..self.nshards {
                 let s = (worker + i) % self.nshards;
-                let popped = self.buckets[b][s].lock().unwrap().pop_front();
-                if let Some(t) = popped {
-                    let mut live = self.live.lock().unwrap();
-                    let cur = live[t.vertex as usize];
-                    if cur.is_nan() {
-                        continue; // stale duplicate of an already-popped task
+                while let Some(t) = self.buckets[b][s].pop() {
+                    // Claim the vertex against concurrent pops/promotions.
+                    let cell = &self.live[t.vertex as usize];
+                    let mut cur = cell.load(Ordering::Acquire);
+                    loop {
+                        if cur == EMPTY_PRI {
+                            break; // stale duplicate of an already-popped task
+                        }
+                        let curf = f64::from_bits(cur);
+                        if bucket_of(curf) < b {
+                            break; // promoted entry lives in a hotter bucket
+                        }
+                        match cell.compare_exchange_weak(
+                            cur,
+                            EMPTY_PRI,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        ) {
+                            Ok(_) => {
+                                self.len.fetch_sub(1, Ordering::Relaxed);
+                                return Some(Task { priority: curf, ..t });
+                            }
+                            Err(seen) => cur = seen,
+                        }
                     }
-                    if bucket_of(cur) < b {
-                        continue; // promoted entry lives in a hotter bucket
-                    }
-                    live[t.vertex as usize] = f64::NAN;
-                    drop(live);
-                    self.len.fetch_sub(1, Ordering::Relaxed);
-                    let mut out = t;
-                    out.priority = cur;
-                    return Some(out);
+                    // stale entry — keep draining this shard
                 }
             }
         }
@@ -287,6 +366,14 @@ mod tests {
     }
 
     #[test]
+    fn sanitize_keeps_sentinel_unreachable() {
+        assert!(sanitize(f64::NAN).to_bits() != EMPTY_PRI);
+        assert!(sanitize(f64::INFINITY).is_finite());
+        assert!(sanitize(f64::NEG_INFINITY) == 0.0);
+        assert_eq!(sanitize(2.5), 2.5);
+    }
+
+    #[test]
     fn approx_priority_prefers_hot_tasks() {
         let s = ApproxPriorityScheduler::new(100, 2);
         for v in 0..50u32 {
@@ -323,5 +410,34 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 200);
+    }
+
+    #[test]
+    fn approx_concurrent_adds_dedup_exactly_once() {
+        use std::sync::Arc;
+        let n: u32 = 400;
+        let s = Arc::new(ApproxPriorityScheduler::new(n as usize, 4));
+        // 4 threads race to add every vertex (with different priorities);
+        // dedup + promotion must leave exactly one live entry per vertex.
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for v in 0..n {
+                    s.add_task(Task::with_priority(v, 0.1 + t as f64));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for w in 0..4 {
+            while let Some(t) = s.next_task(w) {
+                assert!(seen.insert(t.vertex), "vertex {} delivered twice", t.vertex);
+            }
+        }
+        assert_eq!(seen.len(), n as usize);
+        assert!(s.is_done());
     }
 }

@@ -19,9 +19,8 @@
 //! This is the machinery behind the chromatic parallel Gibbs sampler
 //! (§4.2, Fig. 5a/c): sets = color classes, plan = cross-color dependencies.
 
-use super::{FuncId, Scheduler, Task};
+use super::{FuncId, Injector, Scheduler, Task};
 use crate::consistency::ConsistencyModel;
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -238,11 +237,13 @@ enum Mode {
 ///
 /// Implementation note: the plan-task index is carried in `Task::priority`
 /// so `task_done` can resolve which DAG node completed even when the same
-/// vertex appears in several sets.
+/// vertex appears in several sets. The ready list — the hot path of the
+/// planned mode, touched once per issue and once per dependency release —
+/// is a lock-free [`Injector`] of plan-task indices.
 pub struct SetScheduler {
     plan: ExecutionPlan,
     remaining: Vec<AtomicUsize>,
-    ready: Mutex<VecDeque<u32>>,
+    ready: Injector<u32>,
     issued: AtomicUsize,
     completed: AtomicUsize,
     mode: Mode,
@@ -260,13 +261,18 @@ impl SetScheduler {
         model: ConsistencyModel,
     ) -> SetScheduler {
         let plan = ExecutionPlan::compile(sets, num_vertices, neighbors, model);
-        let ready: VecDeque<u32> = (0..plan.len() as u32).filter(|&t| plan.indegree[t as usize] == 0).collect();
+        let ready = Injector::new(plan.len());
+        for t in 0..plan.len() as u32 {
+            if plan.indegree[t as usize] == 0 {
+                ready.push(t);
+            }
+        }
         let remaining =
             plan.indegree.iter().map(|&d| AtomicUsize::new(d as usize)).collect();
         SetScheduler {
             plan,
             remaining,
-            ready: Mutex::new(ready),
+            ready,
             issued: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
             mode: Mode::Planned,
@@ -288,7 +294,7 @@ impl SetScheduler {
         SetScheduler {
             plan,
             remaining,
-            ready: Mutex::new(VecDeque::new()),
+            ready: Injector::new(64),
             issued: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
             mode: Mode::Barrier { set_sizes },
@@ -321,7 +327,7 @@ impl Scheduler for SetScheduler {
     fn next_task(&self, _worker: usize) -> Option<Task> {
         match &self.mode {
             Mode::Planned => {
-                let ti = self.ready.lock().unwrap().pop_front()?;
+                let ti = self.ready.pop()?;
                 self.issued.fetch_add(1, Ordering::Relaxed);
                 let (v, f, _set) = self.plan.tasks[ti as usize];
                 Some(Task { vertex: v, func: f, priority: ti as f64 })
@@ -358,16 +364,9 @@ impl Scheduler for SetScheduler {
         match &self.mode {
             Mode::Planned => {
                 let ti = t.priority as u32;
-                let mut newly_ready = Vec::new();
                 for &c in self.plan.children(ti) {
                     if self.remaining[c as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
-                        newly_ready.push(c);
-                    }
-                }
-                if !newly_ready.is_empty() {
-                    let mut q = self.ready.lock().unwrap();
-                    for c in newly_ready {
-                        q.push_back(c);
+                        self.ready.push(c);
                     }
                 }
             }

@@ -6,7 +6,7 @@
 //! graph in O(tree-depth) updates instead of O(1)-hop diffusion. This is the
 //! schedule that makes Loopy BP scale in Fig 4a / Fig 5d.
 
-use super::{Scheduler, Task};
+use super::{Injector, Scheduler, Task};
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -46,10 +46,13 @@ struct RootHeap {
 }
 
 /// Splash scheduler over a static adjacency structure (cloned from the data
-/// graph at construction so the scheduler is self-contained).
+/// graph at construction so the scheduler is self-contained). The root heap
+/// stays a strict mutex-guarded priority queue (hottest residual first, per
+/// the paper); the per-worker splash *buffers* — the hot pop path, hit once
+/// per update — are lock-free [`Injector`] queues.
 pub struct SplashScheduler {
     roots: Mutex<RootHeap>,
-    buffers: Vec<Mutex<VecDeque<Task>>>,
+    buffers: Vec<Injector<Task>>,
     /// CSR adjacency copy: neighbors of v = items[offsets[v]..offsets[v+1]].
     offsets: Vec<u32>,
     items: Vec<u32>,
@@ -79,7 +82,9 @@ impl SplashScheduler {
                 live: vec![f64::NAN; num_vertices],
                 seq: 0,
             }),
-            buffers: (0..workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            buffers: (0..workers.max(1))
+                .map(|_| Injector::new(splash_size.max(1) * 4))
+                .collect(),
             offsets,
             items,
             splash_size: splash_size.max(1),
@@ -157,7 +162,7 @@ impl Scheduler for SplashScheduler {
 
     fn next_task(&self, worker: usize) -> Option<Task> {
         let w = worker % self.buffers.len();
-        if let Some(t) = self.buffers[w].lock().unwrap().pop_front() {
+        if let Some(t) = self.buffers[w].pop() {
             return Some(t);
         }
         // Build a new splash from the hottest pending root.
@@ -173,21 +178,23 @@ impl Scheduler for SplashScheduler {
         };
         let order = self.build_splash(root, &mut heap);
         drop(heap);
-        let mut buf = self.buffers[w].lock().unwrap();
+        let buf = &self.buffers[w];
+        let mut order = order.into_iter();
+        let first = order.next();
         for t in order {
-            buf.push_back(t);
+            buf.push(t);
         }
-        buf.pop_front()
+        first
     }
 
     fn is_done(&self) -> bool {
         self.len.load(Ordering::Relaxed) == 0
-            && self.buffers.iter().all(|b| b.lock().unwrap().is_empty())
+            && self.buffers.iter().all(|b| b.is_empty())
     }
 
     fn approx_len(&self) -> usize {
         self.len.load(Ordering::Relaxed)
-            + self.buffers.iter().map(|b| b.lock().unwrap().len()).sum::<usize>()
+            + self.buffers.iter().map(|b| b.len()).sum::<usize>()
     }
 }
 

@@ -119,9 +119,13 @@ fn single_worker_contention_counters_are_zero() {
         assert_eq!(report.updates, n as u64 * 10);
         let c = &report.contention;
         assert_eq!(
-            (c.conflicts, c.deferrals, c.retries, c.steals),
-            (0, 0, 0, 0),
+            (c.conflicts, c.deferrals, c.retries, c.steals, c.escalations),
+            (0, 0, 0, 0, 0),
             "1-worker run must be conflict-free under {model:?}: {c:?}"
+        );
+        assert_eq!(
+            c.affinity_hits, report.updates,
+            "at 1 worker every scheduler pop is an owner-affinity hit"
         );
     }
 }

@@ -7,9 +7,9 @@ use graphlab::apps::coloring::{color_classes, validate_coloring, ColoringUpdate}
 use graphlab::apps::gibbs::{chromatic_sets, GibbsUpdate};
 use graphlab::apps::learn::{learning_sync, target_stats, TARGET_KEY};
 use graphlab::apps::mrf::GridDims;
-use graphlab::consistency::{ConsistencyModel, LockTable};
+use graphlab::consistency::ConsistencyModel;
 use graphlab::datagen::{ner, protein, retina};
-use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateFn};
+use graphlab::engine::{Program, ThreadedEngine, UpdateFn};
 use graphlab::scheduler::{
     FifoScheduler, MultiQueueFifo, Scheduler, SetScheduler, SplashScheduler,
     SynchronousScheduler, Task,
@@ -26,7 +26,7 @@ fn denoising_pipeline_end_to_end() {
     let dims = GridDims::new(24, 24, 12);
     let mut rng = Pcg32::seed_from_u64(42);
     let vol = retina::generate(dims, 5, 0.25, &mut rng);
-    let mrf = retina::build_mrf(&vol, 0.8);
+    let mut mrf = retina::build_mrf(&vol, 0.8);
     let n = mrf.graph.num_vertices();
 
     let proxy = retina::smoothed_proxy(&vol, 1);
@@ -35,7 +35,6 @@ fn denoising_pipeline_end_to_end() {
     let sdt = Sdt::new();
     sdt.set(LAMBDA_KEY, [1.0f64; 3]);
     sdt.set(TARGET_KEY, targets);
-    let locks = LockTable::new(n);
     let sched = SplashScheduler::new(n, |v| mrf.graph.neighbors(v), 32, 2);
     for v in 0..n as u32 {
         sched.add_task(Task::with_priority(v, 1.0));
@@ -43,27 +42,19 @@ fn denoising_pipeline_end_to_end() {
     let mut upd = BpUpdate::new(5, 5e-4, Arc::new(Vec::new()));
     upd.learn_stats = true;
     upd.damping = 0.1;
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
     let sync = learning_sync(0.8, Some(Duration::from_millis(2)));
-    let report = ThreadedEngine::run(
-        &mrf.graph,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[sync],
-        &[],
-        &EngineConfig::default()
-            .with_workers(2)
-            .with_model(ConsistencyModel::Edge)
-            .with_max_updates(2_500_000),
-    );
+    let report = Program::new()
+        .update_fn(&upd)
+        .sync(sync)
+        .workers(2)
+        .model(ConsistencyModel::Edge)
+        .max_updates(2_500_000)
+        .run_on(&ThreadedEngine, &mut mrf.graph, &sched, &sdt);
     assert!(report.updates > n as u64, "must iterate");
     assert!(report.syncs_run >= 1, "background sync must run");
     let lambda = sdt.get::<[f64; 3]>(LAMBDA_KEY).unwrap();
     assert!(lambda.iter().all(|&l| l > 0.01 && l < 20.0));
 
-    let mut mrf = mrf;
     let argmax = |b: &[f32]| -> u32 {
         b.iter().enumerate().max_by(|a, c| a.1.partial_cmp(c.1).unwrap()).unwrap().0 as u32
     };
@@ -84,9 +75,8 @@ fn denoising_pipeline_end_to_end() {
 fn chromatic_gibbs_pipeline() {
     let mut rng = Pcg32::seed_from_u64(4);
     let net = protein::generate(500, 2500, 3, &mut rng);
-    let g = net.graph;
+    let mut g = net.graph;
     let n = g.num_vertices();
-    let locks = LockTable::new(n);
     {
         let sched = FifoScheduler::new(n);
         for v in 0..n as u32 {
@@ -94,19 +84,12 @@ fn chromatic_gibbs_pipeline() {
         }
         let sdt = Sdt::new();
         let upd = ColoringUpdate;
-        let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-        ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(4).with_model(ConsistencyModel::Edge),
-        );
+        Program::new()
+            .update_fn(&upd)
+            .workers(4)
+            .model(ConsistencyModel::Edge)
+            .run_on(&ThreadedEngine, &mut g, &sched, &sdt);
     }
-    let mut g = g;
     let ncolors = validate_coloring(&mut g).expect("valid coloring");
     assert!(ncolors >= 3);
     let classes = color_classes(&mut g);
@@ -114,18 +97,12 @@ fn chromatic_gibbs_pipeline() {
     let sets = chromatic_sets(&classes, sweeps, 0);
     let sched = SetScheduler::planned(&sets, n, |v| g.neighbors(v), ConsistencyModel::Edge);
     let upd = GibbsUpdate::new(3, Arc::new(net.tables.clone()), 4, 9);
-    let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
     let sdt = Sdt::new();
-    let report = ThreadedEngine::run(
-        &g,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[],
-        &[],
-        &EngineConfig::default().with_workers(4).with_model(ConsistencyModel::Vertex),
-    );
+    let report = Program::new()
+        .update_fn(&upd)
+        .workers(4)
+        .model(ConsistencyModel::Vertex)
+        .run_on(&ThreadedEngine, &mut g, &sched, &sdt);
     assert_eq!(report.updates as usize, n * sweeps);
     for v in 0..n as u32 {
         let counts: u32 = g.vertex_data(v).counts.iter().sum();
@@ -157,27 +134,19 @@ fn synchronous_scheduler_runs_jacobi_sweeps() {
     for i in 0..n - 1 {
         b.add_undirected(i as u32, i as u32 + 1, (), ());
     }
-    let g = b.build();
-    let locks = LockTable::new(n);
+    let mut g = b.build();
     let sched = SynchronousScheduler::new(n, 50);
     for v in 0..n as u32 {
         sched.add_task(Task::new(v));
     }
     let sdt = Sdt::new();
     let f = CountSweep;
-    let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
-    let report = ThreadedEngine::run(
-        &g,
-        &locks,
-        &sched,
-        &fns,
-        &sdt,
-        &[],
-        &[],
-        &EngineConfig::default().with_workers(3).with_model(ConsistencyModel::Vertex),
-    );
+    let report = Program::new()
+        .update_fn(&f)
+        .workers(3)
+        .model(ConsistencyModel::Vertex)
+        .run_on(&ThreadedEngine, &mut g, &sched, &sdt);
     assert_eq!(report.updates, n as u64 * 5, "5 Jacobi sweeps of n vertices");
-    let mut g = g;
     for v in 0..n as u32 {
         assert_eq!(*g.vertex_data(v), 5);
     }
@@ -192,30 +161,20 @@ fn coem_fixed_point_stable_across_worker_counts() {
     cfg.seed_fraction = 0.3;
     let beliefs_for = |workers: usize| -> Vec<Vec<f32>> {
         let mut rng = Pcg32::seed_from_u64(8);
-        let g = ner::generate(&cfg, &mut rng);
+        let mut g = ner::generate(&cfg, &mut rng);
         let n = g.num_vertices();
-        let locks = LockTable::new(n);
         let sched = MultiQueueFifo::new(n, workers);
         for v in 0..n as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let upd = graphlab::apps::coem::CoemUpdate::new(cfg.classes);
-        let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-        ThreadedEngine::run(
-            &g,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default()
-                .with_workers(workers)
-                .with_model(ConsistencyModel::Vertex)
-                .with_max_updates(3_000_000),
-        );
-        let mut g = g;
+        Program::new()
+            .update_fn(&upd)
+            .workers(workers)
+            .model(ConsistencyModel::Vertex)
+            .max_updates(3_000_000)
+            .run_on(&ThreadedEngine, &mut g, &sched, &sdt);
         (0..n as u32).map(|v| g.vertex_data(v).belief.clone()).collect()
     };
     let b1 = beliefs_for(1);

@@ -249,7 +249,7 @@ fn prop_simulator_conservation_and_monotonicity() {
 #[test]
 fn prop_threaded_engine_counts_updates_exactly() {
     use graphlab::consistency::Scope;
-    use graphlab::engine::{EngineConfig, ThreadedEngine, UpdateContext, UpdateFn};
+    use graphlab::engine::{Program, ThreadedEngine, UpdateContext, UpdateFn};
     use graphlab::graph::GraphBuilder;
     use graphlab::sdt::Sdt;
 
@@ -280,32 +280,24 @@ fn prop_threaded_engine_counts_updates_exactly() {
                 b.add_undirected(u, v, (), ());
             }
         }
-        let graph = b.build();
-        let locks = LockTable::new(n);
+        let mut graph = b.build();
         let sched = MultiQueueFifo::new(n, 3);
         for v in 0..n as u32 {
             sched.add_task(Task::new(v));
         }
         let sdt = Sdt::new();
         let f = BumpTo { target };
-        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
-        let report = ThreadedEngine::run(
-            &graph,
-            &locks,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::default().with_workers(3).with_model(ConsistencyModel::Edge),
-        );
+        let report = Program::new()
+            .update_fn(&f)
+            .workers(3)
+            .model(ConsistencyModel::Edge)
+            .run_on(&ThreadedEngine, &mut graph, &sched, &sdt);
         prop_assert!(
             report.updates == n as u64 * target,
             "expected {} updates, got {}",
             n as u64 * target,
             report.updates
         );
-        let mut graph = graph;
         for v in 0..n as u32 {
             prop_assert!(*graph.vertex_data(v) == target);
         }

@@ -6,8 +6,7 @@
 use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
 use graphlab::apps::mrf::{grid3d, GridDims};
 use graphlab::consistency::ConsistencyModel;
-use graphlab::engine::sequential::SeqOptions;
-use graphlab::engine::{EngineConfig, SequentialEngine, UpdateFn};
+use graphlab::engine::{Program, SequentialEngine};
 use graphlab::runtime::{bp_artifact_available, AccelGridBp, ArtifactRegistry};
 use graphlab::scheduler::{PriorityScheduler, Scheduler, Task};
 use graphlab::sdt::Sdt;
@@ -166,17 +165,11 @@ fn accel_grid_bp_matches_engine_beliefs() {
             sched.add_task(Task::with_priority(v, 1.0));
         }
         let upd = BpUpdate::new(k, 1e-7, Arc::new(Vec::new()));
-        let fns: Vec<&dyn UpdateFn<_, _>> = vec![&upd];
-        SequentialEngine::run(
-            &mut reference.graph,
-            &sched,
-            &fns,
-            &sdt,
-            &[],
-            &[],
-            &EngineConfig::sequential(ConsistencyModel::Edge).with_max_updates(400_000),
-            &SeqOptions::default(),
-        );
+        Program::new()
+            .update_fn(&upd)
+            .model(ConsistencyModel::Edge)
+            .max_updates(400_000)
+            .run_on(&SequentialEngine, &mut reference.graph, &sched, &sdt);
     }
 
     // accelerated Jacobi sweeps through PJRT

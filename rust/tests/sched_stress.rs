@@ -1,0 +1,325 @@
+//! Stress tests for the lock-free task-distribution layer: the Chase–Lev
+//! work-stealing deque and MPMC injector under concurrent push/pop/steal
+//! (no lost or duplicated tasks), owner-affinity routing in the rebased
+//! schedulers, and the engine's deferral-fairness escalation on a
+//! saturated Full-consistency hub.
+
+use graphlab::consistency::{ConsistencyModel, Scope};
+use graphlab::engine::{Program, SequentialEngine, ThreadedEngine, UpdateContext, UpdateFn};
+use graphlab::graph::{DataGraph, GraphBuilder, PartitionMap};
+use graphlab::scheduler::{
+    Injector, MultiQueueFifo, Scheduler, Task, WorkStealingDeque,
+};
+use graphlab::sdt::Sdt;
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Owner pushes/pops a bounded Chase–Lev deque while three thieves steal
+/// continuously: every task must be delivered exactly once, through
+/// whichever end.
+#[test]
+fn deque_loses_and_duplicates_nothing_under_steal_pressure() {
+    let n: u32 = 100_000;
+    let deque: Arc<WorkStealingDeque<Task>> = Arc::new(WorkStealingDeque::new(128));
+    let seen: Arc<Vec<AtomicU8>> = Arc::new((0..n).map(|_| AtomicU8::new(0)).collect());
+    let done = Arc::new(AtomicBool::new(false));
+
+    let mut thieves = Vec::new();
+    for _ in 0..3 {
+        let deque = Arc::clone(&deque);
+        let seen = Arc::clone(&seen);
+        let done = Arc::clone(&done);
+        thieves.push(std::thread::spawn(move || {
+            let mut stolen = 0u64;
+            loop {
+                match deque.steal() {
+                    Some(t) => {
+                        seen[t.vertex as usize].fetch_add(1, Ordering::Relaxed);
+                        stolen += 1;
+                    }
+                    None => {
+                        if done.load(Ordering::Acquire) && deque.is_empty() {
+                            break;
+                        }
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+            stolen
+        }));
+    }
+
+    for v in 0..n {
+        let mut t = Task::new(v);
+        loop {
+            match deque.push(t) {
+                Ok(()) => break,
+                Err(back) => {
+                    // full: drain one locally and retry (the engine spills
+                    // to the injector here; the invariant is the same)
+                    t = back;
+                    if let Some(p) = deque.pop() {
+                        seen[p.vertex as usize].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+    while let Some(p) = deque.pop() {
+        seen[p.vertex as usize].fetch_add(1, Ordering::Relaxed);
+    }
+    done.store(true, Ordering::Release);
+    let stolen: u64 = thieves.into_iter().map(|h| h.join().unwrap()).sum();
+
+    for (v, c) in seen.iter().enumerate() {
+        assert_eq!(c.load(Ordering::Relaxed), 1, "task {v} lost or duplicated");
+    }
+    // With a 128-slot deque and 100k pushes the thieves must actually have
+    // participated — otherwise this test isn't exercising the race paths.
+    assert!(stolen > 0, "steal path never taken");
+}
+
+/// Four producers × four consumers through the injector (ring + overflow):
+/// exactly-once delivery of every task.
+#[test]
+fn injector_mpmc_exactly_once_through_overflow() {
+    let producers: u32 = 4;
+    let per: u32 = 50_000;
+    let n = producers * per;
+    // Tiny ring forces constant spills into the overflow list.
+    let q: Arc<Injector<Task>> = Arc::new(Injector::new(64));
+    let seen: Arc<Vec<AtomicU8>> = Arc::new((0..n).map(|_| AtomicU8::new(0)).collect());
+    let produced = Arc::new(AtomicUsize::new(0));
+    let consumed = Arc::new(AtomicUsize::new(0));
+
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let q = Arc::clone(&q);
+        let produced = Arc::clone(&produced);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per {
+                q.push(Task::new(p * per + i));
+                produced.fetch_add(1, Ordering::Release);
+            }
+        }));
+    }
+    for _ in 0..4 {
+        let q = Arc::clone(&q);
+        let seen = Arc::clone(&seen);
+        let produced = Arc::clone(&produced);
+        let consumed = Arc::clone(&consumed);
+        handles.push(std::thread::spawn(move || loop {
+            match q.pop() {
+                Some(t) => {
+                    seen[t.vertex as usize].fetch_add(1, Ordering::Relaxed);
+                    consumed.fetch_add(1, Ordering::AcqRel);
+                }
+                None => {
+                    if produced.load(Ordering::Acquire) == n as usize
+                        && consumed.load(Ordering::Acquire) >= n as usize
+                    {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(consumed.load(Ordering::Relaxed), n as usize);
+    for (v, c) in seen.iter().enumerate() {
+        assert_eq!(c.load(Ordering::Relaxed), 1, "task {v} lost or duplicated");
+    }
+}
+
+fn star(leaves: u32) -> DataGraph<(u64, u64), ()> {
+    let mut b = GraphBuilder::new();
+    let hub = b.add_vertex((0u64, 0u64));
+    for _ in 0..leaves {
+        let leaf = b.add_vertex((0u64, 0u64));
+        b.add_undirected(hub, leaf, (), ());
+    }
+    b.build()
+}
+
+/// Leaf update under Full consistency: burn a little compute (so lock holds
+/// are long enough to observably contend), then push a bump into the hub
+/// through the write-locked scope.
+struct BumpHub {
+    rounds: u64,
+}
+impl UpdateFn<(u64, u64), ()> for BumpHub {
+    fn update(&self, scope: &mut Scope<'_, (u64, u64), ()>, ctx: &mut UpdateContext<'_>) {
+        let mut spin = scope.center() as u64;
+        for i in 0..256u64 {
+            spin = spin.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(spin);
+        for &u in scope.neighbors() {
+            scope.neighbor_mut(u).0 += 1;
+        }
+        let data = scope.vertex_mut();
+        data.1 += 1;
+        if data.1 < self.rounds {
+            ctx.add_task(scope.center(), 1.0);
+        }
+    }
+}
+
+/// Deferral fairness: on a saturated Full-consistency hub, with the
+/// escalation bound forced low, repeatedly conflicted tasks must take the
+/// blocking path (nonzero escalations) and the run must still match the
+/// sequential engine exactly — the aged tasks complete, they don't starve.
+#[test]
+fn aged_tasks_escalate_and_complete_on_saturated_hub() {
+    let leaves = 16u32;
+    let rounds = 300u64;
+
+    let seed_leaves = |sched: &dyn Scheduler, leaves: u32| {
+        for v in 1..=leaves {
+            sched.add_task(Task::new(v));
+        }
+    };
+
+    let f = BumpHub { rounds };
+    let program = Program::new()
+        .update_fn(&f)
+        .model(ConsistencyModel::Full)
+        // Escalate on the very first retry of a deferred task: every
+        // deferral immediately exercises the fairness path.
+        .escalate_after(1);
+
+    let mut seq_g = star(leaves);
+    let seq_sched = MultiQueueFifo::new(seq_g.num_vertices(), 1);
+    seed_leaves(&seq_sched, leaves);
+    let seq_report = program.run_on(&SequentialEngine, &mut seq_g, &seq_sched, &Sdt::new());
+    assert_eq!(seq_report.updates, leaves as u64 * rounds);
+    let seq_hub = seq_g.vertex_data(0).0;
+
+    let mut thr_g = star(leaves);
+    let thr_sched = MultiQueueFifo::new(thr_g.num_vertices(), 4);
+    seed_leaves(&thr_sched, leaves);
+    let report =
+        program.workers(4).run_on(&ThreadedEngine, &mut thr_g, &thr_sched, &Sdt::new());
+
+    assert_eq!(report.updates, seq_report.updates, "no lost or duplicated updates");
+    assert_eq!(thr_g.vertex_data(0).0, seq_hub, "no lost hub increments");
+    for v in 1..=leaves {
+        assert_eq!(thr_g.vertex_data(v).1, rounds, "leaf {v} round count");
+    }
+    assert!(
+        report.contention.deferrals > 0,
+        "a saturated Full-consistency hub must defer: {:?}",
+        report.contention
+    );
+    assert!(
+        report.contention.escalations > 0,
+        "with escalate_after=1 every retried deferral escalates: {:?}",
+        report.contention
+    );
+}
+
+/// Owner-affinity accounting: on an embarrassingly parallel workload with
+/// the affinity-routing multiqueue scheduler, most pops should land on the
+/// owning worker, and a 1-worker run must report zero steals.
+#[test]
+fn affinity_hits_dominate_on_partitionable_load() {
+    struct SelfBump {
+        rounds: u64,
+    }
+    impl UpdateFn<u64, ()> for SelfBump {
+        fn update(&self, scope: &mut Scope<'_, u64, ()>, ctx: &mut UpdateContext<'_>) {
+            *scope.vertex_mut() += 1;
+            if *scope.vertex() < self.rounds {
+                ctx.add_task(scope.center(), 1.0);
+            }
+        }
+    }
+    let n = 1024usize;
+    let mut b: GraphBuilder<u64, ()> = GraphBuilder::new();
+    for _ in 0..n {
+        b.add_vertex(0u64);
+    }
+    for i in 0..n as u32 - 1 {
+        b.add_undirected(i, i + 1, (), ());
+    }
+    let mut g = b.build();
+    let workers = 4;
+    let sched = MultiQueueFifo::new(n, workers);
+    for v in 0..n as u32 {
+        sched.add_task(Task::new(v));
+    }
+    let f = SelfBump { rounds: 50 };
+    let report = Program::new()
+        .update_fn(&f)
+        .workers(workers)
+        .model(ConsistencyModel::Vertex)
+        .run_on(&ThreadedEngine, &mut g, &sched, &Sdt::new());
+    assert_eq!(report.updates, n as u64 * 50);
+    // The scheduler routes every task to its owner's shard; with vertex
+    // consistency on a self-rescheduling load, workers drain their own
+    // shards and the counter records real hits. The hit *fraction* is
+    // scheduling-skew dependent (a descheduled worker's shard is drained
+    // by peers as misses), so only bound the counter's invariants here —
+    // the exact-hit case is pinned at 1 worker in engine_stress.
+    assert!(
+        report.contention.affinity_hits > 0,
+        "affinity-routing scheduler produced no hits: {:?}",
+        report.contention
+    );
+    assert!(
+        report.contention.affinity_hits <= report.updates,
+        "affinity hits cannot exceed executed updates: {:?}",
+        report.contention
+    );
+    // And the scheduler's advertised owner map is the contiguous-block
+    // partition the engine's affinity counter is scored against.
+    let pm = PartitionMap::new(n, workers);
+    for v in [0u32, (n / 2) as u32, n as u32 - 1] {
+        assert_eq!(sched.owner_of(v), Some(pm.owner_of(v)));
+    }
+}
+
+/// 2-worker end-to-end smoke over the whole lock-free path (CI runs this
+/// under --release): conservation plus sane counter accounting.
+#[test]
+fn two_worker_smoke_conserves_updates() {
+    struct SelfBump;
+    impl UpdateFn<u64, ()> for SelfBump {
+        fn update(&self, scope: &mut Scope<'_, u64, ()>, ctx: &mut UpdateContext<'_>) {
+            *scope.vertex_mut() += 1;
+            if *scope.vertex() < 20 {
+                ctx.add_task(scope.center(), 1.0);
+            }
+        }
+    }
+    let n = 256usize;
+    let mut b: GraphBuilder<u64, ()> = GraphBuilder::new();
+    for _ in 0..n {
+        b.add_vertex(0u64);
+    }
+    for i in 0..n as u32 - 1 {
+        b.add_undirected(i, i + 1, (), ());
+    }
+    let mut g = b.build();
+    let sched = MultiQueueFifo::new(n, 2);
+    for v in 0..n as u32 {
+        sched.add_task(Task::new(v));
+    }
+    let f = SelfBump;
+    let report = Program::new()
+        .update_fn(&f)
+        .workers(2)
+        .model(ConsistencyModel::Edge)
+        .run_on(&ThreadedEngine, &mut g, &sched, &Sdt::new());
+    assert_eq!(report.updates, n as u64 * 20);
+    for v in 0..n as u32 {
+        assert_eq!(*g.vertex_data(v), 20);
+    }
+    let c = &report.contention;
+    assert!(c.retries >= c.deferrals, "every deferred task is re-dispatched");
+    assert_eq!(c.per_worker_deferrals.iter().sum::<u64>(), c.deferrals);
+    assert_eq!(c.per_worker_conflicts.iter().sum::<u64>(), c.conflicts);
+}
