@@ -18,7 +18,7 @@
 
 use graphlab::consistency::{ConsistencyModel, LockTable, Scope};
 use graphlab::engine::{Program, UpdateContext, UpdateFn};
-use graphlab::graph::{DataGraph, GraphBuilder};
+use graphlab::graph::{DataGraph, GraphBuilder, ShardedGraph};
 use graphlab::scheduler::{
     by_name, ApproxPriorityScheduler, FifoScheduler, MultiQueueFifo, PriorityScheduler,
     Scheduler, Task,
@@ -62,6 +62,26 @@ fn sched_throughput(sched: &dyn Scheduler, workers: usize, iters_per_worker: u32
         }
     });
     total.load(Ordering::Relaxed) as f64 / timer.elapsed_secs().max(1e-12)
+}
+
+/// Row-major 2D grid (the sharding rows cut it into contiguous row bands).
+fn grid2d(side: u32) -> DataGraph<u64, ()> {
+    let mut b = GraphBuilder::new();
+    for _ in 0..side * side {
+        b.add_vertex(0u64);
+    }
+    for y in 0..side {
+        for x in 0..side {
+            let v = y * side + x;
+            if x + 1 < side {
+                b.add_undirected(v, v + 1, (), ());
+            }
+            if y + 1 < side {
+                b.add_undirected(v, v + side, (), ());
+            }
+        }
+    }
+    b.build()
 }
 
 fn ring(n: usize, degree: usize) -> DataGraph<u64, ()> {
@@ -289,6 +309,47 @@ fn main() {
         );
     }
 
+    // ---- sharding: edge-cut ratio + ghost-sync throughput -------------------
+    //
+    // The sharded-graph layer's two cost drivers: how many edges a k-way
+    // contiguous-block cut severs (replication factor) and how fast the
+    // versioned ghost tables absorb a full sync pass (the emulated network
+    // flush). Machine-readable copy in results/BENCH_shard.json.
+    let mut shard_json: Vec<(String, f64)> = Vec::new();
+    {
+        let side = 64u32;
+        println!(
+            "{:<44} {:>12} {:>14} {:>16}",
+            "shard", "cut-ratio", "ghosts", "ghost-syncs/s"
+        );
+        for k in [1usize, 2, 4, 8] {
+            let mut g = grid2d(side);
+            let n = g.num_vertices();
+            let sharded = ShardedGraph::new(&mut g, k);
+            let locks = LockTable::new(n);
+            // warm + measure full sync passes
+            sharded.sync_all(&g, &locks);
+            let iters = 50u32;
+            let timer = Timer::start();
+            let mut wrote = 0u64;
+            for _ in 0..iters {
+                wrote += sharded.sync_all(&g, &locks);
+            }
+            let secs = timer.elapsed_secs().max(1e-12);
+            let rate = wrote as f64 / secs;
+            println!(
+                "{:<44} {:>12.4} {:>14} {:>16.0}",
+                format!("shard/grid{side}x{side}/k{k}"),
+                sharded.cut_ratio(),
+                sharded.num_ghosts(),
+                rate
+            );
+            shard_json.push((format!("edge_cut_ratio_k{k}"), sharded.cut_ratio()));
+            shard_json.push((format!("ghosts_k{k}"), sharded.num_ghosts() as f64));
+            shard_json.push((format!("ghost_syncs_per_sec_k{k}"), rate));
+        }
+    }
+
     // ---- PJRT dispatch ------------------------------------------------------
     let dir = graphlab::runtime::default_artifact_dir();
     if dir.join("manifest.tsv").exists() {
@@ -340,4 +401,14 @@ fn main() {
     }
     writeln!(f, "}}").unwrap();
     println!("wrote results/BENCH_sched.json");
+
+    // Sharding JSON (edge-cut ratios + ghost-sync throughput per k).
+    let mut f = std::fs::File::create("results/BENCH_shard.json").unwrap();
+    writeln!(f, "{{").unwrap();
+    for (i, (key, value)) in shard_json.iter().enumerate() {
+        let comma = if i + 1 == shard_json.len() { "" } else { "," };
+        writeln!(f, "  \"{key}\": {value:.4}{comma}").unwrap();
+    }
+    writeln!(f, "}}").unwrap();
+    println!("wrote results/BENCH_shard.json");
 }

@@ -142,7 +142,7 @@ mod tests {
     use super::*;
     use crate::apps::mrf::{grid3d, random_mrf, GridDims, Mrf};
     use crate::consistency::ConsistencyModel;
-    use crate::engine::{Program, SequentialEngine, ThreadedEngine};
+    use crate::engine::{Program, SequentialEngine, ShardedEngine, ThreadedEngine};
     use crate::scheduler::{FifoScheduler, PriorityScheduler, Scheduler, Task};
     use crate::sdt::Sdt;
     use crate::util::Pcg32;
@@ -317,6 +317,61 @@ mod tests {
             let b = &par.graph.vertex_data(v).belief;
             for (x, y) in a.iter().zip(b.iter()) {
                 assert!((x - y).abs() < 5e-3, "vertex {v}: seq={a:?} par={b:?}");
+            }
+        }
+    }
+
+    /// Conservation on the sharded engine: BP under Full consistency must
+    /// converge to the sequential fixed point for every shard count, and a
+    /// cut graph (k >= 2) must report ghost traffic.
+    #[test]
+    fn sharded_bp_matches_sequential_beliefs() {
+        let mk = || {
+            let mut rng = Pcg32::seed_from_u64(42);
+            random_mrf(80, 160, 3, &mut rng)
+        };
+        let mut seq = mk();
+        run_bp_sequential(&mut seq, [1.0; 3], 1e-6);
+        let reference: Vec<Vec<f32>> = (0..80u32)
+            .map(|v| seq.graph.vertex_data(v).belief.clone())
+            .collect();
+
+        for k in [1usize, 2, 4] {
+            let mut par = mk();
+            let n = par.graph.num_vertices();
+            let sdt = Sdt::new();
+            sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+            let sched = FifoScheduler::new(n);
+            for v in 0..n as u32 {
+                sched.add_task(Task::new(v));
+            }
+            let upd = BpUpdate::new(par.arity, 1e-6, Arc::new(par.tables.clone()));
+            let report = Program::new()
+                .update_fn(&upd)
+                .workers(4)
+                .model(ConsistencyModel::Full)
+                .max_updates(500_000)
+                .run_on(&ShardedEngine::new(k), &mut par.graph, &sched, &sdt);
+            assert!(report.updates > 0, "k={k}");
+            assert_eq!(report.contention.shards, k);
+            if k >= 2 {
+                assert!(
+                    report.contention.boundary_updates > 0,
+                    "k={k}: a random MRF cut into shards has boundary work"
+                );
+                assert!(report.contention.ghost_syncs > 0, "k={k}");
+            } else {
+                assert_eq!(report.contention.ghost_syncs, 0);
+            }
+            for v in 0..n as u32 {
+                let b = &par.graph.vertex_data(v).belief;
+                for (x, y) in reference[v as usize].iter().zip(b.iter()) {
+                    assert!(
+                        (x - y).abs() < 5e-3,
+                        "k={k} vertex {v}: seq={:?} sharded={b:?}",
+                        reference[v as usize]
+                    );
+                }
             }
         }
     }

@@ -155,7 +155,7 @@ mod tests {
     use super::*;
     use crate::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
     use crate::consistency::ConsistencyModel;
-    use crate::engine::{Program, ThreadedEngine};
+    use crate::engine::{Program, SequentialEngine, ShardedEngine, ThreadedEngine};
     use crate::graph::{DataGraph, GraphBuilder};
     use crate::scheduler::{FifoScheduler, Scheduler, SetScheduler, Task};
     use crate::sdt::Sdt;
@@ -234,6 +234,86 @@ mod tests {
         // attraction pulls vertex 1 toward state 0 as well
         let m1 = g.vertex_data(1).marginal();
         assert!(m1[0] > 0.55, "vertex 1 pulled by attraction: {m1:?}");
+    }
+
+    /// Conservation on the sharded engine: under Full consistency every
+    /// vertex must be sampled exactly once per sweep — the same totals the
+    /// sequential engine produces — for every shard count, with ghost
+    /// traffic reported on a cut chain (k >= 2).
+    #[test]
+    fn sharded_gibbs_conserves_sweeps() {
+        let sweeps = 400usize;
+        // 8-vertex chain, attractive pairwise table
+        let build = || {
+            let mut b = GraphBuilder::new();
+            for _ in 0..8 {
+                b.add_vertex(GibbsVertex::new(vec![1.0, 1.0]));
+            }
+            let e = GibbsEdge { potential: EdgePotential::Table(0) };
+            for i in 0..7u32 {
+                b.add_undirected(i, i + 1, e, e);
+            }
+            b.build()
+        };
+        let tables = vec![vec![1.5, 0.5, 0.5, 1.5]];
+
+        // sequential baseline
+        let mut seq = build();
+        color_graph(&mut seq);
+        let classes = color_classes(&mut seq);
+        let sets = chromatic_sets(&classes, sweeps, 0);
+        let sched =
+            SetScheduler::planned(&sets, 1, |v| seq.neighbors(v), ConsistencyModel::Edge);
+        let upd = GibbsUpdate::new(2, Arc::new(tables.clone()), 1, 9);
+        let seq_report = Program::new()
+            .update_fn(&upd)
+            .model(ConsistencyModel::Full)
+            .run_on(&SequentialEngine, &mut seq, &sched, &Sdt::new());
+        assert_eq!(seq_report.updates, 8 * sweeps as u64);
+        for v in 0..8u32 {
+            let total: u32 = seq.vertex_data(v).counts.iter().sum();
+            assert_eq!(total as usize, sweeps, "sequential vertex {v}");
+        }
+
+        for k in [1usize, 2, 4] {
+            let mut g = build();
+            color_graph(&mut g);
+            let classes = color_classes(&mut g);
+            let sets = chromatic_sets(&classes, sweeps, 0);
+            let sched = SetScheduler::planned(
+                &sets,
+                4,
+                |v| g.neighbors(v),
+                ConsistencyModel::Edge,
+            );
+            let upd = GibbsUpdate::new(2, Arc::new(tables.clone()), 4, 9);
+            let report = Program::new()
+                .update_fn(&upd)
+                .workers(4)
+                .model(ConsistencyModel::Full)
+                .run_on(&ShardedEngine::new(k), &mut g, &sched, &Sdt::new());
+            assert_eq!(
+                report.updates, seq_report.updates,
+                "k={k}: sharded run must conserve the sequential update total"
+            );
+            assert_eq!(report.contention.shards, k);
+            for v in 0..8u32 {
+                let total: u32 = g.vertex_data(v).counts.iter().sum();
+                assert_eq!(
+                    total as usize, sweeps,
+                    "k={k} vertex {v}: exactly one sample per sweep"
+                );
+            }
+            if k >= 2 {
+                assert!(report.contention.boundary_updates > 0, "k={k}");
+                assert!(report.contention.ghost_syncs > 0, "k={k}");
+            } else {
+                assert_eq!(report.contention.ghost_syncs, 0);
+            }
+            // symmetric model: marginals stay near-uniform
+            let m0 = g.vertex_data(0).marginal();
+            assert!((m0[0] - 0.5).abs() < 0.2, "k={k} marginal {m0:?}");
+        }
     }
 
     #[test]

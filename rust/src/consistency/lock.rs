@@ -9,6 +9,8 @@
 //! conflict into a deferral instead of a parked worker thread
 //! (Distributed GraphLab, Low et al. 2012, non-blocking lock pipelining).
 
+use super::{Conflict, ConsistencyModel, LockTable, ScopeGuard};
+use crate::graph::VertexId;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::time::Duration;
 
@@ -151,6 +153,155 @@ impl Backoff {
     }
 }
 
+/// The held **remote half** of a pipelined (split) scope acquisition — the
+/// Distributed GraphLab Locking-Engine pattern (Low et al. 2012, §Locking
+/// Engine) emulated over threads: a scope that crosses a shard boundary
+/// first "requests" the locks owned by *remote* shards non-blocking and
+/// all-or-nothing; if they are granted the worker keeps the remote half
+/// held while it continues doing other local work, retrying the cheap
+/// *local* half ([`SplitScope::try_complete`]) until the full scope is
+/// assembled.
+///
+/// Deadlock discipline: the holder never *waits* while holding — it keeps
+/// executing other non-blocking work between completion attempts, and the
+/// engine bounds the number of attempts before abandoning (dropping this
+/// guard releases the remote half). A holder must never enter a *blocking*
+/// acquisition (`lock_scope`) while a `SplitScope` is live — that would
+/// reintroduce hold-and-wait.
+pub struct SplitScope<'a> {
+    table: &'a LockTable,
+    center: VertexId,
+    model: ConsistencyModel,
+    /// Remote-shard neighbors — locked (write under Full, read under Edge).
+    remote: Vec<VertexId>,
+    /// Local-shard neighbors — still unlocked.
+    local: Vec<VertexId>,
+    completed: bool,
+}
+
+impl LockTable {
+    /// Pipelined/split scope acquisition, phase 1: partition `neighbors`
+    /// by `is_remote` and lock only the **remote** subset, non-blocking and
+    /// all-or-nothing (the first busy word rolls the subset back and
+    /// reports the conflict — nothing stays held). On success the returned
+    /// [`SplitScope`] holds the remote half; complete it with
+    /// [`SplitScope::try_complete`].
+    ///
+    /// Under [`ConsistencyModel::Vertex`] the scope is the center alone, so
+    /// both halves are empty and completion only needs the center lock.
+    pub fn try_lock_split<'a>(
+        &'a self,
+        center: VertexId,
+        neighbors: &[VertexId],
+        model: ConsistencyModel,
+        mut is_remote: impl FnMut(VertexId) -> bool,
+    ) -> Result<SplitScope<'a>, Conflict> {
+        let mut remote = Vec::new();
+        let mut local = Vec::new();
+        if model.excludes_neighbors() {
+            for &u in neighbors {
+                if is_remote(u) {
+                    remote.push(u);
+                } else {
+                    local.push(u);
+                }
+            }
+        }
+        for (i, &u) in remote.iter().enumerate() {
+            let ok = match model {
+                ConsistencyModel::Full => self.locks[u as usize].try_write(),
+                _ => self.locks[u as usize].try_read(),
+            };
+            if !ok {
+                for &w in &remote[..i] {
+                    match model {
+                        ConsistencyModel::Full => self.locks[w as usize].unlock_write(),
+                        _ => self.locks[w as usize].unlock_read(),
+                    }
+                }
+                return Err(Conflict { vertex: u });
+            }
+        }
+        Ok(SplitScope { table: self, center, model, remote, local, completed: false })
+    }
+}
+
+impl<'a> SplitScope<'a> {
+    pub fn center(&self) -> VertexId {
+        self.center
+    }
+
+    /// Number of remote locks currently held.
+    pub fn remote_held(&self) -> usize {
+        self.remote.len()
+    }
+
+    /// Phase 2: try the **local** half (center write lock, then the
+    /// locally-owned neighbors), non-blocking and all-or-nothing over that
+    /// half. On success every lock of the full scope is held and a
+    /// [`ScopeGuard`] over `full_neighbors` — the graph's lock-order slice,
+    /// i.e. the union of both halves — is returned (dropping it releases
+    /// the whole scope, remote locks included). On conflict the local half
+    /// is rolled back, the remote half **stays held**, and `self` is handed
+    /// back for another attempt.
+    pub fn try_complete(
+        mut self,
+        full_neighbors: &'a [VertexId],
+    ) -> Result<ScopeGuard<'a>, (SplitScope<'a>, Conflict)> {
+        debug_assert!(
+            !self.model.excludes_neighbors()
+                || full_neighbors.len() == self.remote.len() + self.local.len(),
+            "full_neighbors must be the union of the split halves"
+        );
+        let table = self.table;
+        if !table.locks[self.center as usize].try_write() {
+            let c = Conflict { vertex: self.center };
+            return Err((self, c));
+        }
+        // Indexed loop: the conflict path moves `self` back to the caller,
+        // which an iterator borrow of `self.local` would forbid.
+        for i in 0..self.local.len() {
+            let u = self.local[i];
+            let ok = match self.model {
+                ConsistencyModel::Full => table.locks[u as usize].try_write(),
+                _ => table.locks[u as usize].try_read(),
+            };
+            if !ok {
+                for &w in &self.local[..i] {
+                    match self.model {
+                        ConsistencyModel::Full => table.locks[w as usize].unlock_write(),
+                        _ => table.locks[w as usize].unlock_read(),
+                    }
+                }
+                table.locks[self.center as usize].unlock_write();
+                let c = Conflict { vertex: u };
+                return Err((self, c));
+            }
+        }
+        self.completed = true;
+        Ok(ScopeGuard {
+            table,
+            center: self.center,
+            neighbors: full_neighbors,
+            model: self.model,
+        })
+    }
+}
+
+impl Drop for SplitScope<'_> {
+    fn drop(&mut self) {
+        if self.completed {
+            return; // locks transferred into the ScopeGuard
+        }
+        for &u in &self.remote {
+            match self.model {
+                ConsistencyModel::Full => self.table.locks[u as usize].unlock_write(),
+                _ => self.table.locks[u as usize].unlock_read(),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +346,64 @@ mod tests {
         l.unlock_write();
         h.join().unwrap();
         assert!(l.is_free());
+    }
+
+    #[test]
+    fn split_acquisition_completes_and_releases() {
+        let table = LockTable::new(6);
+        let neighbors = [1u32, 2, 3, 4];
+        // 3 and 4 are "remote"
+        let split = table
+            .try_lock_split(0, &neighbors, ConsistencyModel::Full, |u| u >= 3)
+            .unwrap();
+        assert_eq!(split.remote_held(), 2);
+        assert_eq!(split.center(), 0);
+        // remote half is actually held
+        assert!(table.try_lock_scope(3, &[], ConsistencyModel::Vertex).is_err());
+        let guard = split.try_complete(&neighbors).expect("free local half");
+        assert_eq!(guard.len(), 5);
+        assert_eq!(guard.writes(), 5);
+        drop(guard);
+        // everything released, full scope reacquirable
+        let all = table.try_lock_scope(0, &neighbors, ConsistencyModel::Full).unwrap();
+        assert_eq!(all.len(), 5);
+    }
+
+    #[test]
+    fn split_remote_conflict_holds_nothing() {
+        let table = LockTable::new(4);
+        let held = table.try_lock_scope(3, &[], ConsistencyModel::Vertex).unwrap();
+        let neighbors = [1u32, 2, 3];
+        let c = table
+            .try_lock_split(0, &neighbors, ConsistencyModel::Full, |u| u >= 2)
+            .err()
+            .expect("remote half must conflict on 3");
+        assert_eq!(c.vertex, 3);
+        drop(held);
+        // nothing leaked: the whole scope is free
+        assert!(table.try_lock_scope(0, &neighbors, ConsistencyModel::Full).is_ok());
+    }
+
+    #[test]
+    fn split_local_conflict_keeps_remote_until_drop() {
+        let table = LockTable::new(4);
+        let neighbors = [1u32, 2, 3];
+        let held = table.try_lock_scope(1, &[], ConsistencyModel::Vertex).unwrap();
+        let split = table
+            .try_lock_split(0, &neighbors, ConsistencyModel::Edge, |u| u == 3)
+            .unwrap();
+        assert_eq!(split.remote_held(), 1);
+        let (split, c) = split.try_complete(&neighbors).err().expect("local 1 busy");
+        assert_eq!(c.vertex, 1);
+        // remote read lock on 3 still held after the failed completion
+        assert_eq!(table.locks[3].readers(), 1);
+        // local rollback left center + local neighbors free
+        assert!(table.locks[0].is_free());
+        assert!(table.locks[2].is_free());
+        drop(split);
+        assert!(table.locks[3].is_free(), "drop releases the remote half");
+        drop(held);
+        assert!(table.try_lock_scope(0, &neighbors, ConsistencyModel::Full).is_ok());
     }
 
     /// Two writers incrementing a counter through the lock never race.

@@ -28,7 +28,7 @@
 pub mod lock;
 mod scope;
 
-pub use lock::{Backoff, ScopeLock};
+pub use lock::{Backoff, ScopeLock, SplitScope};
 pub use scope::Scope;
 
 use crate::graph::VertexId;

@@ -47,6 +47,19 @@ impl<'a, V, E> Scope<'a, V, E> {
         Scope { graph, center: v, model, _guards: Some(guards) }
     }
 
+    /// Assemble a scope from an already-held guard — the completion of a
+    /// pipelined split acquisition (see
+    /// [`LockTable::try_lock_split`] and [`super::SplitScope`]).
+    pub(crate) fn from_guard(
+        graph: &'a DataGraph<V, E>,
+        v: VertexId,
+        model: ConsistencyModel,
+        guards: ScopeGuard<'a>,
+    ) -> Scope<'a, V, E> {
+        debug_assert_eq!(guards.center, v, "guard does not cover this center");
+        Scope { graph, center: v, model, _guards: Some(guards) }
+    }
+
     /// Construct without taking locks — for the sequential engine and
     /// single-threaded contexts that are externally synchronized.
     pub(crate) fn unlocked(

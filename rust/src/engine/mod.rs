@@ -2,20 +2,26 @@
 //! task's scope under the configured consistency model, applies the update
 //! function, and feeds spawned tasks back (paper §3.2, §3.5, Fig. 3).
 //!
-//! Two engines share the same semantics:
+//! Three engines share the same semantics:
 //! * [`ThreadedEngine`] — worker threads over shared memory (the paper's
 //!   PThreads implementation).
+//! * [`ShardedEngine`] — the data graph cut into ghost-replicated shards
+//!   ([`crate::graph::ShardedGraph`]), each run by its own worker set, with
+//!   pipelined/split lock acquisition for cross-shard scopes — the
+//!   Distributed GraphLab Locking-Engine pattern rehearsed over threads.
 //! * [`SequentialEngine`] — single-threaded, deterministic, and able to
 //!   capture a [task trace](trace::TaskTrace) consumed by the multicore
 //!   simulator ([`crate::sim`]) that regenerates the paper's speedup figures.
 
 pub mod program;
 pub mod sequential;
+pub mod sharded;
 pub mod threaded;
 pub mod trace;
 
 pub use program::{Engine, Program};
 pub use sequential::SequentialEngine;
+pub use sharded::ShardedEngine;
 pub use threaded::ThreadedEngine;
 
 use crate::consistency::{ConsistencyModel, Scope};
@@ -124,6 +130,17 @@ pub struct EngineConfig {
     /// neighborhood (0 = escalate immediately, i.e. a fully blocking
     /// engine).
     pub escalate_after: u32,
+    /// Number of data-graph shards for the sharded engine (ghost-replicated
+    /// partitions + pipelined cross-shard locking). 0 or 1 = unsharded;
+    /// [`Program::run`](program::Program::run) routes to
+    /// [`ShardedEngine`] when this exceeds 1.
+    pub shards: usize,
+    /// Retry-deque steal policy: `false` = steal one task per attempt (the
+    /// default), `true` = steal roughly half the victim's deque per attempt
+    /// ([`crate::scheduler::WorkStealingDeque::steal_half`]). Enable when a
+    /// run's steal counters dominate its retries (skewed loads where
+    /// one-at-a-time stealing keeps thieves coming back).
+    pub steal_half: bool,
 }
 
 impl Default for EngineConfig {
@@ -134,6 +151,8 @@ impl Default for EngineConfig {
             max_updates: None,
             term_check_every: 256,
             escalate_after: 8,
+            shards: 0,
+            steal_half: false,
         }
     }
 }
@@ -160,6 +179,16 @@ impl EngineConfig {
 
     pub fn with_escalate_after(mut self, deferrals: u32) -> Self {
         self.escalate_after = deferrals;
+        self
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn with_steal_half(mut self, on: bool) -> Self {
+        self.steal_half = on;
         self
     }
 }
@@ -194,6 +223,27 @@ pub struct ContentionStats {
     /// ([`crate::scheduler::Scheduler::owner_of`]). Always zero for
     /// schedulers without owner-affine routing (strict FIFO, splash, set).
     pub affinity_hits: u64,
+    /// Did the scheduler advertise an owner-affinity routing map
+    /// ([`crate::scheduler::Scheduler::owner_of`])? When false the affinity
+    /// counter is structurally zero and reporting it would be meaningless —
+    /// [`crate::metrics::run_summary`] hides the affinity line.
+    pub has_owner_map: bool,
+    /// Data-graph shard count of the engine that produced this report
+    /// (0 = a non-sharded engine ran; the ghost/boundary counters below are
+    /// then structurally zero and not rendered).
+    pub shards: usize,
+    /// Owned-vertex writes propagated to remote shards' ghost replicas
+    /// (sharded engine; the emulated network flush traffic).
+    pub ghost_syncs: u64,
+    /// Executed updates whose vertex lies on a shard cut boundary.
+    pub boundary_updates: u64,
+    /// Tasks popped by a worker of the wrong shard and handed off to the
+    /// owner shard's injector ring (sharded engine).
+    pub handoffs: u64,
+    /// Pipelined split acquisitions that went **pending**: the remote half
+    /// was granted but the local half conflicted, so the worker parked the
+    /// held remote locks and went on to other work (sharded engine).
+    pub pipelined_stalls: u64,
     /// Per-worker conflict counts (index = worker id).
     pub per_worker_conflicts: Vec<u64>,
     /// Per-worker deferral counts (index = worker id).

@@ -15,6 +15,7 @@
 //! ```
 
 use super::sequential::{SeqOptions, SequentialEngine};
+use super::sharded::ShardedEngine;
 use super::threaded::ThreadedEngine;
 use super::trace::TaskTrace;
 use super::{EngineConfig, RunReport, TerminationFn, UpdateFn};
@@ -177,6 +178,23 @@ impl<'a, V, E> Program<'a, V, E> {
         self
     }
 
+    /// Cut the data graph into `k` ghost-replicated shards and execute on
+    /// the [`ShardedEngine`] (each shard gets its own worker set; scopes
+    /// crossing a shard boundary use pipelined/split lock acquisition).
+    /// `k <= 1` keeps the unsharded back-ends. See
+    /// [`EngineConfig::shards`].
+    pub fn shards(mut self, k: usize) -> Self {
+        self.config.shards = k;
+        self
+    }
+
+    /// Switch the retry-deque steal policy from steal-one to steal-half
+    /// (see [`EngineConfig::steal_half`]).
+    pub fn steal_half(mut self, on: bool) -> Self {
+        self.config.steal_half = on;
+        self
+    }
+
     /// Sequential back-end: run on-demand syncs every N updates (0 = only
     /// at the end).
     pub fn sync_every(mut self, every: u64) -> Self {
@@ -208,11 +226,13 @@ impl<'a, V, E> Program<'a, V, E> {
         engine.execute(self, graph, scheduler, sdt)
     }
 
-    /// Execute, picking the back-end from the configured worker count:
+    /// Execute, picking the back-end from the configuration:
+    /// [`Program::shards`] `> 1` runs the sharded engine, otherwise
     /// `workers > 1` runs threaded, otherwise sequential. Programs with
-    /// *periodic* syncs always run threaded — only the threaded back-end
-    /// has the background sync thread that honors `SyncOp::interval`, so
-    /// downgrading them to sequential would silently drop the cadence.
+    /// *periodic* syncs never downgrade to sequential — only the
+    /// multi-threaded back-ends have the background sync thread that
+    /// honors `SyncOp::interval`, so downgrading would silently drop the
+    /// cadence.
     pub fn run(
         &self,
         graph: &mut DataGraph<V, E>,
@@ -220,11 +240,13 @@ impl<'a, V, E> Program<'a, V, E> {
         sdt: &Sdt,
     ) -> RunReport
     where
-        V: Send + Sync,
+        V: Clone + Send + Sync,
         E: Send + Sync,
     {
         let needs_background_sync = self.syncs.iter().any(|op| op.interval.is_some());
-        if self.config.workers > 1 || needs_background_sync {
+        if self.config.shards > 1 {
+            self.run_on(&ShardedEngine::new(self.config.shards), graph, scheduler, sdt)
+        } else if self.config.workers > 1 || needs_background_sync {
             self.run_on(&ThreadedEngine, graph, scheduler, sdt)
         } else {
             self.run_on(&SequentialEngine, graph, scheduler, sdt)
@@ -404,6 +426,28 @@ mod tests {
         let mut g = ring(n);
         let report = program.run(&mut g, &seeded_fifo(n), &sdt);
         assert_eq!(report.stop, StopReason::TerminationFn);
+    }
+
+    /// `.shards(k)` with k > 1 must route `run` to the sharded back-end
+    /// (visible through the report's shard-aware counters).
+    #[test]
+    fn shards_knob_routes_to_sharded_backend() {
+        let n = 32;
+        let f = Bump { rounds: 5 };
+        let program = Program::new().update_fn(&f).workers(4).shards(2);
+        let mut g = ring(n);
+        let sdt = Sdt::new();
+        let report = program.run(&mut g, &seeded_fifo(n), &sdt);
+        assert_eq!(report.updates, n as u64 * 5);
+        assert_eq!(report.contention.shards, 2, "sharded engine ran");
+        assert!(report.contention.boundary_updates > 0, "ring cut 2 ways has a boundary");
+        assert!(report.contention.ghost_syncs > 0);
+        // unsharded runs report no shard counters
+        let f2 = Bump { rounds: 5 };
+        let threaded = Program::new().update_fn(&f2).workers(2);
+        let mut g2 = ring(n);
+        let report2 = threaded.run(&mut g2, &seeded_fifo(n), &Sdt::new());
+        assert_eq!(report2.contention.shards, 0);
     }
 
     #[test]

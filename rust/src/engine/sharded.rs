@@ -1,0 +1,727 @@
+//! The **sharded engine**: a distributed-style execution back-end rehearsed
+//! over threads, after Distributed GraphLab's Locking Engine (Low et al.
+//! 2012) — the architectural step between the shared-memory
+//! [`ThreadedEngine`] and a real multi-process deployment.
+//!
+//! The data graph is cut into `k` ghost-replicated shards
+//! ([`crate::graph::ShardedGraph`]); each shard runs its **own worker set**
+//! against the shared scheduler plus a per-shard injector ring for
+//! **cross-shard task handoff** (a worker that pops a task owned by another
+//! shard forwards it to the owner's ring instead of executing it —
+//! emulating the network hop a cluster would pay, counted in
+//! [`ContentionStats::handoffs`]).
+//!
+//! Scope acquisition is shard-aware:
+//!
+//! * **Interior** vertices (no remote neighbor) use the threaded engine's
+//!   adaptive non-blocking ladder unchanged.
+//! * **Boundary** vertices go through **pipelined/split acquisition**
+//!   ([`crate::consistency::LockTable::try_lock_split`]): the locks owned
+//!   by remote shards are "requested" first, non-blocking; if they are
+//!   granted but the local half is busy the worker *parks the held remote
+//!   half* ([`ContentionStats::pipelined_stalls`]) and keeps executing
+//!   other work, retrying completion each loop until a bounded attempt
+//!   budget expires (then the remote half is released and the task
+//!   deferred). The worker never blocks while holding — the deadlock-free
+//!   discipline of the non-blocking core is preserved.
+//!
+//! After every boundary update, the still-write-locked vertex data is
+//! propagated to the remote shards' ghost replicas
+//! ([`crate::graph::ShardedGraph::sync_vertex_from`], counted in
+//! [`ContentionStats::ghost_syncs`]) — the emulated network flush a
+//! distributed deployment would issue at scope release.
+
+use super::threaded::{
+    tune_attempts, ThreadedEngine, LOCAL_DEQUE_CAP, START_ATTEMPTS, STEAL_HALF_MAX,
+};
+use super::{
+    ContentionStats, Engine, EngineConfig, Program, RunReport, StopReason, TerminationFn,
+    UpdateContext, UpdateFn,
+};
+use crate::consistency::{LockTable, Scope, SplitScope};
+use crate::graph::{DataGraph, ShardedGraph};
+use crate::scheduler::{Injector, Scheduler, Task, WorkStealingDeque};
+use crate::sdt::{Sdt, SyncOp};
+use crate::util::Timer;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::time::Duration;
+
+const STOP_NONE: u8 = 0;
+const STOP_TERM_FN: u8 = 1;
+const STOP_LIMIT: u8 = 2;
+
+/// How many completion attempts a parked split acquisition gets before the
+/// worker releases the remote half and defers the task. Bounded so two
+/// shards whose pending acquisitions mutually block each other's local
+/// halves always make progress (both eventually release and retry).
+const PENDING_ATTEMPTS: u32 = 16;
+
+/// A split acquisition whose remote half is held while the local half was
+/// busy: the worker carries it across loop iterations, doing other work in
+/// between (the Locking-Engine pipeline).
+struct PendingAcquire<'a> {
+    task: Task,
+    split: SplitScope<'a>,
+    attempts: u32,
+}
+
+/// Sharded engine back-end. `shards = 0` defers to
+/// [`EngineConfig::shards`] at run time.
+#[derive(Debug, Clone, Default)]
+pub struct ShardedEngine {
+    pub shards: usize,
+}
+
+impl ShardedEngine {
+    pub fn new(shards: usize) -> ShardedEngine {
+        ShardedEngine { shards }
+    }
+
+    /// Run the program to completion over `k` shards. Worker threads:
+    /// `max(1, config.workers / k)` per shard, so every shard always has
+    /// its own worker set.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run<V: Clone + Send + Sync, E: Send + Sync>(
+        &self,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        fns: &[&dyn UpdateFn<V, E>],
+        sdt: &Sdt,
+        syncs: &[SyncOp<V>],
+        terminators: &[TerminationFn],
+        config: &EngineConfig,
+    ) -> RunReport {
+        let requested = if self.shards > 0 { self.shards } else { config.shards };
+        let sharded = ShardedGraph::new(graph, requested.max(1));
+        let k = sharded.num_shards();
+        let locks = LockTable::new(graph.num_vertices());
+        let graph: &DataGraph<V, E> = graph;
+        let sharded = &sharded;
+
+        let timer = Timer::start();
+        let stop = AtomicU8::new(STOP_NONE);
+        let engine_done = AtomicBool::new(false);
+        let inflight = AtomicUsize::new(0);
+        let total_updates = AtomicU64::new(0);
+        let per_shard = (config.workers / k).max(1);
+        let workers = per_shard * k;
+        let per_worker: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
+        let per_conflicts: Vec<AtomicU64> =
+            (0..workers).map(|_| AtomicU64::new(0)).collect();
+        let per_deferrals: Vec<AtomicU64> =
+            (0..workers).map(|_| AtomicU64::new(0)).collect();
+        let total_retries = AtomicU64::new(0);
+        let total_steals = AtomicU64::new(0);
+        let total_escalations = AtomicU64::new(0);
+        let total_affinity = AtomicU64::new(0);
+        let total_ghost_syncs = AtomicU64::new(0);
+        let total_boundary = AtomicU64::new(0);
+        let total_handoffs = AtomicU64::new(0);
+        let total_stalls = AtomicU64::new(0);
+        let syncs_run = AtomicU64::new(0);
+        // Per-worker retry deques (deferred tasks, always shard-local) and
+        // per-shard overflow injectors.
+        let retry: Vec<WorkStealingDeque<Task>> =
+            (0..workers).map(|_| WorkStealingDeque::new(LOCAL_DEQUE_CAP)).collect();
+        let overflows: Vec<Injector<Task>> =
+            (0..k).map(|_| Injector::new(LOCAL_DEQUE_CAP * per_shard)).collect();
+        // Cross-shard handoff rings: tasks popped by the wrong shard's
+        // worker ride these to the owner shard (the emulated network hop).
+        let rings: Vec<Injector<Task>> =
+            (0..k).map(|_| Injector::new(LOCAL_DEQUE_CAP * per_shard)).collect();
+        let pending_retries = AtomicUsize::new(0);
+        let defer_age: Vec<AtomicU32> =
+            (0..graph.num_vertices()).map(|_| AtomicU32::new(0)).collect();
+        let workers_remaining = AtomicUsize::new(workers);
+
+        std::thread::scope(|s| {
+            let has_periodic = syncs.iter().any(|op| op.interval.is_some());
+            if has_periodic {
+                let engine_done = &engine_done;
+                let syncs_run = &syncs_run;
+                let locks = &locks;
+                s.spawn(move || {
+                    let mut last_run: Vec<Timer> =
+                        syncs.iter().map(|_| Timer::start()).collect();
+                    while !engine_done.load(Ordering::Acquire) {
+                        for (i, op) in syncs.iter().enumerate() {
+                            let Some(interval) = op.interval else { continue };
+                            if last_run[i].elapsed() >= interval {
+                                ThreadedEngine::locked_sync(graph, locks, op, sdt);
+                                syncs_run.fetch_add(1, Ordering::Relaxed);
+                                last_run[i] = Timer::start();
+                            }
+                        }
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                });
+            }
+
+            for w in 0..workers {
+                let my_shard = w / per_shard;
+                let stop = &stop;
+                let inflight = &inflight;
+                let total_updates = &total_updates;
+                let per_worker = &per_worker;
+                let per_conflicts = &per_conflicts;
+                let per_deferrals = &per_deferrals;
+                let total_retries = &total_retries;
+                let total_steals = &total_steals;
+                let total_escalations = &total_escalations;
+                let total_affinity = &total_affinity;
+                let total_ghost_syncs = &total_ghost_syncs;
+                let total_boundary = &total_boundary;
+                let total_handoffs = &total_handoffs;
+                let total_stalls = &total_stalls;
+                let retry = &retry;
+                let overflows = &overflows;
+                let rings = &rings;
+                let pending_retries = &pending_retries;
+                let defer_age = &defer_age;
+                let workers_remaining = &workers_remaining;
+                let engine_done = &engine_done;
+                let locks = &locks;
+                s.spawn(move || {
+                    let mut local_updates: u64 = 0;
+                    let mut conflicts: u64 = 0;
+                    let mut deferrals: u64 = 0;
+                    let mut retries: u64 = 0;
+                    let mut steals: u64 = 0;
+                    let mut escalations: u64 = 0;
+                    let mut affinity: u64 = 0;
+                    let mut ghost_syncs: u64 = 0;
+                    let mut boundary_updates: u64 = 0;
+                    let mut handoffs: u64 = 0;
+                    let mut stalls: u64 = 0;
+                    let mut idle_spins: u32 = 0;
+                    // Interior-path adaptive ladder (worker-local).
+                    let mut attempts: u32 = START_ATTEMPTS;
+                    let mut window_tasks: u32 = 0;
+                    let mut window_deferrals: u32 = 0;
+                    let mut skip_local_once = false;
+                    // The one parked split acquisition this worker may hold.
+                    let mut pending: Option<PendingAcquire<'_>> = None;
+                    let mut ctx = UpdateContext::new(sdt, w);
+                    loop {
+                        if stop.load(Ordering::Acquire) != STOP_NONE {
+                            break;
+                        }
+                        let mut run_now: Option<(Task, Scope<'_, V, E>)> = None;
+                        let mut run_from_retry = false;
+
+                        // Pipelined completion: retry the parked split's
+                        // local half before anything else (its remote locks
+                        // are blocking other shards' progress).
+                        if let Some(PendingAcquire { task, split, attempts: tries }) =
+                            pending.take()
+                        {
+                            match split.try_complete(graph.lock_neighbors(task.vertex)) {
+                                Ok(guard) => {
+                                    run_now = Some((
+                                        task,
+                                        Scope::from_guard(
+                                            graph,
+                                            task.vertex,
+                                            config.model,
+                                            guard,
+                                        ),
+                                    ));
+                                    // a stalled dispatch is not a clean
+                                    // affinity hit
+                                    run_from_retry = true;
+                                }
+                                Err((split, _)) => {
+                                    conflicts += 1;
+                                    if tries + 1 >= PENDING_ATTEMPTS {
+                                        // Give up the pipeline slot: release
+                                        // the remote half, defer the task.
+                                        drop(split);
+                                        deferrals += 1;
+                                        defer_age[task.vertex as usize]
+                                            .fetch_add(1, Ordering::Relaxed);
+                                        pending_retries.fetch_add(1, Ordering::AcqRel);
+                                        overflows[my_shard].push(task);
+                                    } else {
+                                        pending = Some(PendingAcquire {
+                                            task,
+                                            split,
+                                            attempts: tries + 1,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+
+                        if run_now.is_none() {
+                            // Task sources: own retry deque (LIFO), the
+                            // shard's handoff ring (already in flight),
+                            // the scheduler, then shard-local stealing.
+                            let mut task: Option<Task> = None;
+                            let mut from_retry = false;
+                            if !skip_local_once {
+                                if let Some(t) = retry[w].pop() {
+                                    task = Some(t);
+                                    from_retry = true;
+                                }
+                            }
+                            if task.is_none() {
+                                task = rings[my_shard].pop();
+                            }
+                            if task.is_none() {
+                                // Optimistic in-flight count before the pop
+                                // (same drain-race discipline as the
+                                // threaded engine).
+                                inflight.fetch_add(1, Ordering::AcqRel);
+                                match scheduler.next_task(w) {
+                                    Some(t) => task = Some(t),
+                                    None => {
+                                        inflight.fetch_sub(1, Ordering::AcqRel);
+                                    }
+                                }
+                            }
+                            if task.is_none() && skip_local_once {
+                                if let Some(t) = retry[w].pop() {
+                                    task = Some(t);
+                                    from_retry = true;
+                                }
+                            }
+                            if task.is_none() && pending_retries.load(Ordering::Acquire) > 0
+                            {
+                                if let Some(t) = overflows[my_shard].pop() {
+                                    task = Some(t);
+                                    from_retry = true;
+                                } else {
+                                    let base = my_shard * per_shard;
+                                    for i in 1..per_shard {
+                                        let peer = base + (w - base + i) % per_shard;
+                                        let got = if config.steal_half {
+                                            let (first, moved) = retry[peer].steal_half(
+                                                STEAL_HALF_MAX,
+                                                |t| {
+                                                    if let Err(t) = retry[w].push(t) {
+                                                        overflows[my_shard].push(t);
+                                                    }
+                                                },
+                                            );
+                                            steals += moved as u64;
+                                            first
+                                        } else {
+                                            retry[peer].steal()
+                                        };
+                                        if let Some(t) = got {
+                                            steals += 1;
+                                            task = Some(t);
+                                            from_retry = true;
+                                            break;
+                                        }
+                                    }
+                                }
+                            }
+                            skip_local_once = false;
+                            let Some(task) = task else {
+                                if inflight.load(Ordering::Acquire) == 0
+                                    && scheduler.is_done()
+                                {
+                                    break;
+                                }
+                                idle_spins += 1;
+                                if idle_spins < 64 {
+                                    std::hint::spin_loop();
+                                } else if idle_spins < 256 {
+                                    std::thread::yield_now();
+                                } else {
+                                    std::thread::sleep(Duration::from_micros(50));
+                                }
+                                continue;
+                            };
+                            idle_spins = 0;
+                            if from_retry {
+                                retries += 1;
+                                pending_retries.fetch_sub(1, Ordering::AcqRel);
+                            }
+
+                            // Cross-shard handoff: not ours — forward to the
+                            // owner shard's ring (the task stays in flight).
+                            let owner_shard = sharded.owner_of(task.vertex);
+                            if owner_shard != my_shard {
+                                handoffs += 1;
+                                rings[owner_shard].push(task);
+                                continue;
+                            }
+
+                            let vidx = task.vertex as usize;
+                            let age = defer_age[vidx].load(Ordering::Relaxed);
+                            if age >= config.escalate_after {
+                                // Fairness escalation is a *blocking*
+                                // acquisition — never enter it while holding
+                                // a pending split's remote locks (that would
+                                // reintroduce hold-and-wait): abandon the
+                                // pending first.
+                                if let Some(PendingAcquire { task: ptask, split, .. }) =
+                                    pending.take()
+                                {
+                                    drop(split);
+                                    deferrals += 1;
+                                    defer_age[ptask.vertex as usize]
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    pending_retries.fetch_add(1, Ordering::AcqRel);
+                                    overflows[my_shard].push(ptask);
+                                }
+                                escalations += 1;
+                                run_now = Some((
+                                    task,
+                                    Scope::lock(graph, locks, task.vertex, config.model),
+                                ));
+                                run_from_retry = from_retry;
+                            } else if pending.is_none()
+                                && config.model.excludes_neighbors()
+                                && sharded.is_boundary(task.vertex)
+                            {
+                                // Pipelined split acquisition: request the
+                                // remote half first.
+                                match locks.try_lock_split(
+                                    task.vertex,
+                                    graph.lock_neighbors(task.vertex),
+                                    config.model,
+                                    |u| sharded.owner_of(u) != my_shard,
+                                ) {
+                                    Ok(split) => {
+                                        match split.try_complete(
+                                            graph.lock_neighbors(task.vertex),
+                                        ) {
+                                            Ok(guard) => {
+                                                run_now = Some((
+                                                    task,
+                                                    Scope::from_guard(
+                                                        graph,
+                                                        task.vertex,
+                                                        config.model,
+                                                        guard,
+                                                    ),
+                                                ));
+                                                run_from_retry = from_retry;
+                                            }
+                                            Err((split, _)) => {
+                                                // Remote half granted, local
+                                                // busy: park it and keep
+                                                // working.
+                                                conflicts += 1;
+                                                stalls += 1;
+                                                pending = Some(PendingAcquire {
+                                                    task,
+                                                    split,
+                                                    attempts: 0,
+                                                });
+                                                continue;
+                                            }
+                                        }
+                                    }
+                                    Err(_) => {
+                                        // Remote conflict: nothing held —
+                                        // fail fast to a deferral.
+                                        conflicts += 1;
+                                        deferrals += 1;
+                                        defer_age[vidx].fetch_add(1, Ordering::Relaxed);
+                                        pending_retries.fetch_add(1, Ordering::AcqRel);
+                                        if from_retry {
+                                            overflows[my_shard].push(task);
+                                            skip_local_once = true;
+                                            std::thread::yield_now();
+                                        } else if let Err(t) = retry[w].push(task) {
+                                            overflows[my_shard].push(t);
+                                        }
+                                        continue;
+                                    }
+                                }
+                            } else {
+                                // Interior path: the threaded engine's
+                                // adaptive non-blocking ladder.
+                                let mut scope = None;
+                                for attempt in 0..attempts {
+                                    match Scope::try_lock(
+                                        graph,
+                                        locks,
+                                        task.vertex,
+                                        config.model,
+                                    ) {
+                                        Ok(sc) => {
+                                            scope = Some(sc);
+                                            break;
+                                        }
+                                        Err(_) => {
+                                            conflicts += 1;
+                                            for _ in 0..(16u32 << attempt) {
+                                                std::hint::spin_loop();
+                                            }
+                                        }
+                                    }
+                                }
+                                window_tasks += 1;
+                                let Some(scope) = scope else {
+                                    deferrals += 1;
+                                    window_deferrals += 1;
+                                    defer_age[vidx].fetch_add(1, Ordering::Relaxed);
+                                    pending_retries.fetch_add(1, Ordering::AcqRel);
+                                    if from_retry {
+                                        overflows[my_shard].push(task);
+                                        skip_local_once = true;
+                                        std::thread::yield_now();
+                                    } else if let Err(t) = retry[w].push(task) {
+                                        overflows[my_shard].push(t);
+                                    }
+                                    tune_attempts(
+                                        &mut attempts,
+                                        &mut window_tasks,
+                                        &mut window_deferrals,
+                                    );
+                                    continue;
+                                };
+                                tune_attempts(
+                                    &mut attempts,
+                                    &mut window_tasks,
+                                    &mut window_deferrals,
+                                );
+                                run_now = Some((task, scope));
+                                run_from_retry = from_retry;
+                            }
+                        }
+
+                        let Some((task, mut scope)) = run_now else { continue };
+                        let vidx = task.vertex as usize;
+                        if defer_age[vidx].load(Ordering::Relaxed) != 0 {
+                            defer_age[vidx].store(0, Ordering::Relaxed);
+                        }
+                        if !run_from_retry && scheduler.owner_of(task.vertex) == Some(w) {
+                            affinity += 1;
+                        }
+                        ctx.reset(w, task.priority);
+                        fns[task.func as usize].update(&mut scope, &mut ctx);
+                        // Ghost propagation while the center write lock is
+                        // still held: remote replicas see the new value
+                        // before the scope releases (the emulated flush).
+                        if sharded.is_boundary(task.vertex) {
+                            boundary_updates += 1;
+                            ghost_syncs +=
+                                sharded.sync_vertex_from(task.vertex, scope.vertex());
+                        }
+                        drop(scope);
+                        ctx.drain_spawned(|t| scheduler.add_task(t));
+                        scheduler.task_done(task, w);
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+
+                        local_updates += 1;
+                        let global = total_updates.fetch_add(1, Ordering::Relaxed) + 1;
+                        if let Some(max) = config.max_updates {
+                            if global >= max {
+                                stop.store(STOP_LIMIT, Ordering::Release);
+                                break;
+                            }
+                        }
+                        if local_updates % config.term_check_every == 0 {
+                            for term in terminators {
+                                if term(sdt) {
+                                    stop.store(STOP_TERM_FN, Ordering::Release);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    per_worker[w].store(local_updates, Ordering::Release);
+                    per_conflicts[w].store(conflicts, Ordering::Release);
+                    per_deferrals[w].store(deferrals, Ordering::Release);
+                    total_retries.fetch_add(retries, Ordering::AcqRel);
+                    total_steals.fetch_add(steals, Ordering::AcqRel);
+                    total_escalations.fetch_add(escalations, Ordering::AcqRel);
+                    total_affinity.fetch_add(affinity, Ordering::AcqRel);
+                    total_ghost_syncs.fetch_add(ghost_syncs, Ordering::AcqRel);
+                    total_boundary.fetch_add(boundary_updates, Ordering::AcqRel);
+                    total_handoffs.fetch_add(handoffs, Ordering::AcqRel);
+                    total_stalls.fetch_add(stalls, Ordering::AcqRel);
+                    if workers_remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        engine_done.store(true, Ordering::Release);
+                    }
+                });
+            }
+        });
+        engine_done.store(true, Ordering::Release);
+
+        for op in syncs {
+            ThreadedEngine::locked_sync(graph, &locks, op, sdt);
+            syncs_run.fetch_add(1, Ordering::Relaxed);
+        }
+
+        let stop_reason = match stop.load(Ordering::Acquire) {
+            STOP_TERM_FN => StopReason::TerminationFn,
+            STOP_LIMIT => StopReason::UpdateLimit,
+            _ => StopReason::SchedulerEmpty,
+        };
+        let per_worker_conflicts: Vec<u64> =
+            per_conflicts.iter().map(|c| c.load(Ordering::Acquire)).collect();
+        let per_worker_deferrals: Vec<u64> =
+            per_deferrals.iter().map(|c| c.load(Ordering::Acquire)).collect();
+        RunReport {
+            updates: total_updates.load(Ordering::Relaxed),
+            wall_secs: timer.elapsed_secs(),
+            stop: stop_reason,
+            per_worker: per_worker.iter().map(|c| c.load(Ordering::Acquire)).collect(),
+            syncs_run: syncs_run.load(Ordering::Relaxed),
+            contention: ContentionStats {
+                conflicts: per_worker_conflicts.iter().sum(),
+                deferrals: per_worker_deferrals.iter().sum(),
+                retries: total_retries.load(Ordering::Acquire),
+                steals: total_steals.load(Ordering::Acquire),
+                escalations: total_escalations.load(Ordering::Acquire),
+                affinity_hits: total_affinity.load(Ordering::Acquire),
+                has_owner_map: scheduler.owner_of(0).is_some(),
+                shards: k,
+                ghost_syncs: total_ghost_syncs.load(Ordering::Acquire),
+                boundary_updates: total_boundary.load(Ordering::Acquire),
+                handoffs: total_handoffs.load(Ordering::Acquire),
+                pipelined_stalls: total_stalls.load(Ordering::Acquire),
+                per_worker_conflicts,
+                per_worker_deferrals,
+            },
+        }
+    }
+}
+
+impl<V: Clone + Send + Sync, E: Send + Sync> Engine<V, E> for ShardedEngine {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn execute(
+        &self,
+        program: &Program<'_, V, E>,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport {
+        self.run(
+            graph,
+            scheduler,
+            &program.fns,
+            sdt,
+            &program.syncs,
+            &program.terminators,
+            &program.config,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consistency::ConsistencyModel;
+    use crate::graph::GraphBuilder;
+    use crate::scheduler::{FifoScheduler, MultiQueueFifo};
+
+    fn ring(n: usize) -> DataGraph<u64, ()> {
+        let mut b = GraphBuilder::new();
+        for _ in 0..n {
+            b.add_vertex(0u64);
+        }
+        for i in 0..n {
+            b.add_undirected(i as u32, ((i + 1) % n) as u32, (), ());
+        }
+        b.build()
+    }
+
+    struct SelfBump {
+        rounds: u64,
+    }
+    impl UpdateFn<u64, ()> for SelfBump {
+        fn update(&self, scope: &mut Scope<'_, u64, ()>, ctx: &mut UpdateContext<'_>) {
+            *scope.vertex_mut() += 1;
+            if *scope.vertex() < self.rounds {
+                ctx.add_task(scope.center(), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_ring_runs_to_convergence_with_ghost_traffic() {
+        let n = 64;
+        let mut g = ring(n);
+        let sched = MultiQueueFifo::new(n, 4);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let f = SelfBump { rounds: 10 };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let report = ShardedEngine::new(4).run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default().with_workers(4).with_model(ConsistencyModel::Full),
+        );
+        assert_eq!(report.stop, StopReason::SchedulerEmpty);
+        assert_eq!(report.updates, n as u64 * 10);
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), 10, "vertex {v}");
+        }
+        let c = &report.contention;
+        assert_eq!(c.shards, 4);
+        // a ring cut 4 ways has 8 boundary vertices, each updated 10 times
+        assert_eq!(c.boundary_updates, 80);
+        assert_eq!(c.ghost_syncs, 80, "each ring-boundary vertex has 1 replica");
+        assert_eq!(report.per_worker.iter().sum::<u64>(), report.updates);
+    }
+
+    #[test]
+    fn one_shard_has_no_ghost_traffic() {
+        let n = 32;
+        let mut g = ring(n);
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let f = SelfBump { rounds: 5 };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let report = ShardedEngine::new(1).run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default().with_workers(2),
+        );
+        assert_eq!(report.updates, n as u64 * 5);
+        let c = &report.contention;
+        assert_eq!(c.shards, 1);
+        assert_eq!(c.ghost_syncs, 0);
+        assert_eq!(c.boundary_updates, 0);
+        assert_eq!(c.handoffs, 0);
+        assert_eq!(c.pipelined_stalls, 0);
+    }
+
+    #[test]
+    fn update_limit_and_terminators_respected() {
+        let n = 16;
+        let mut g = ring(n);
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let f = SelfBump { rounds: u64::MAX };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let report = ShardedEngine::new(2).run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default().with_workers(2).with_max_updates(100),
+        );
+        assert_eq!(report.stop, StopReason::UpdateLimit);
+        assert!(report.updates >= 100 && report.updates < 140);
+    }
+}

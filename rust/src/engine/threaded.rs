@@ -52,25 +52,34 @@ const STOP_LIMIT: u8 = 2;
 /// Bounds of the adaptive in-place re-attempt ladder. Each failed attempt
 /// spins a short, growing window (`16 << attempt` spin hints) — long enough
 /// to ride out a neighbor's brief lock hold, short enough that a real
-/// conflict costs a requeue instead of a stall.
-const MIN_ATTEMPTS: u32 = 1;
-const MAX_ATTEMPTS: u32 = 4;
+/// conflict costs a requeue instead of a stall. Shared with the sharded
+/// engine, whose interior (non-boundary) path runs the same ladder.
+pub(crate) const MIN_ATTEMPTS: u32 = 1;
+pub(crate) const MAX_ATTEMPTS: u32 = 4;
 /// Every worker starts at the old fixed ladder depth and adapts from there.
-const START_ATTEMPTS: u32 = 3;
+pub(crate) const START_ATTEMPTS: u32 = 3;
 
 /// Re-tune the ladder every this many task dispositions.
-const TUNE_WINDOW: u32 = 64;
+pub(crate) const TUNE_WINDOW: u32 = 64;
 /// Above this deferral rate the ladder shrinks (spinning is wasted — fail
 /// fast to the deque); below [`LO_DEFER_RATE`] it grows back.
-const HI_DEFER_RATE: f64 = 0.25;
-const LO_DEFER_RATE: f64 = 0.02;
+pub(crate) const HI_DEFER_RATE: f64 = 0.25;
+pub(crate) const LO_DEFER_RATE: f64 = 0.02;
 
 /// Per-worker local deque capacity; overflow spills to the shared injector.
-const LOCAL_DEQUE_CAP: usize = 256;
+pub(crate) const LOCAL_DEQUE_CAP: usize = 256;
+
+/// Steal-half batch bound: one scan never moves more than this many tasks
+/// (keeps a thief from emptying a deep victim wholesale).
+pub(crate) const STEAL_HALF_MAX: usize = 32;
 
 /// Shrink or grow the re-attempt ladder from the deferral rate observed
 /// over the last window. Plain worker-local state — no cross-thread traffic.
-fn tune_attempts(attempts: &mut u32, window_tasks: &mut u32, window_deferrals: &mut u32) {
+pub(crate) fn tune_attempts(
+    attempts: &mut u32,
+    window_tasks: &mut u32,
+    window_deferrals: &mut u32,
+) {
     if *window_tasks < TUNE_WINDOW {
         return;
     }
@@ -243,7 +252,23 @@ impl ThreadedEngine {
                             } else {
                                 for i in 1..workers {
                                     let peer = (w + i) % workers;
-                                    if let Some(t) = retry[peer].steal() {
+                                    // Steal-one by default; the steal-half
+                                    // policy drains a batch into our own
+                                    // deque so one scan serves several
+                                    // future pops (skewed-load option).
+                                    let got = if config.steal_half {
+                                        let (first, moved) =
+                                            retry[peer].steal_half(STEAL_HALF_MAX, |t| {
+                                                if let Err(t) = retry[w].push(t) {
+                                                    overflow.push(t);
+                                                }
+                                            });
+                                        steals += moved as u64;
+                                        first
+                                    } else {
+                                        retry[peer].steal()
+                                    };
+                                    if let Some(t) = got {
                                         steals += 1;
                                         task = Some(t);
                                         from_retry = true;
@@ -408,8 +433,10 @@ impl ThreadedEngine {
                 steals: total_steals.load(Ordering::Acquire),
                 escalations: total_escalations.load(Ordering::Acquire),
                 affinity_hits: total_affinity.load(Ordering::Acquire),
+                has_owner_map: scheduler.owner_of(0).is_some(),
                 per_worker_conflicts,
                 per_worker_deferrals,
+                ..ContentionStats::default()
             },
         }
     }
@@ -417,7 +444,8 @@ impl ThreadedEngine {
     /// Sync fold under per-vertex read locks (Alg. 1 running concurrently
     /// with update functions; the aggregate may be temporally inconsistent —
     /// "many ML applications are robust to approximate global statistics").
-    fn locked_sync<V: Send + Sync, E: Send + Sync>(
+    /// Shared with the sharded engine's sync thread.
+    pub(crate) fn locked_sync<V: Send + Sync, E: Send + Sync>(
         graph: &DataGraph<V, E>,
         locks: &LockTable,
         op: &SyncOp<V>,

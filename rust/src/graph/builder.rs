@@ -8,11 +8,17 @@ pub struct GraphBuilder<V, E> {
     vertex_data: Vec<V>,
     edges: Vec<Edge>,
     edge_data: Vec<E>,
+    bfs_order: bool,
 }
 
 impl<V, E> Default for GraphBuilder<V, E> {
     fn default() -> Self {
-        GraphBuilder { vertex_data: Vec::new(), edges: Vec::new(), edge_data: Vec::new() }
+        GraphBuilder {
+            vertex_data: Vec::new(),
+            edges: Vec::new(),
+            edge_data: Vec::new(),
+            bfs_order: false,
+        }
     }
 }
 
@@ -26,7 +32,24 @@ impl<V, E> GraphBuilder<V, E> {
             vertex_data: Vec::with_capacity(vertices),
             edges: Vec::with_capacity(edges),
             edge_data: Vec::with_capacity(edges),
+            bfs_order: false,
         }
+    }
+
+    /// Opt into a **locality-preserving BFS relabel** at [`Self::build`]
+    /// time: vertex ids are reassigned in breadth-first visit order
+    /// (components in ascending seed order, neighbors in ascending id
+    /// order — deterministic), so neighborhoods land on nearby ids. Because
+    /// [`super::PartitionMap`] blocks (and therefore shard ownership, see
+    /// [`super::ShardedGraph`]) are contiguous id ranges, a BFS order keeps
+    /// most of a vertex's neighborhood in its own block and shrinks the
+    /// edge cut / ghost count relative to an arbitrary insertion order.
+    ///
+    /// Ids handed out by [`Self::add_vertex`] refer to the *pre-relabel*
+    /// order; use [`Self::build_with_mapping`] to recover `old -> new`.
+    pub fn bfs_order(&mut self) -> &mut Self {
+        self.bfs_order = true;
+        self
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -63,8 +86,73 @@ impl<V, E> GraphBuilder<V, E> {
         (self.add_edge(u, v, uv), self.add_edge(v, u, vu))
     }
 
-    /// Freeze into CSR form.
+    /// Freeze into CSR form (applying the BFS relabel if
+    /// [`Self::bfs_order`] was requested).
     pub fn build(self) -> DataGraph<V, E> {
+        self.build_with_mapping().0
+    }
+
+    /// Freeze into CSR form, also returning the `old id -> new id` map the
+    /// (optional) BFS relabel applied — the identity permutation when
+    /// [`Self::bfs_order`] is off.
+    pub fn build_with_mapping(mut self) -> (DataGraph<V, E>, Vec<VertexId>) {
+        let mapping = if self.bfs_order {
+            self.apply_bfs_relabel()
+        } else {
+            (0..self.vertex_data.len() as VertexId).collect()
+        };
+        (self.freeze(), mapping)
+    }
+
+    /// Relabel vertex ids in deterministic BFS visit order (components in
+    /// ascending seed order, neighbors ascending): permutes vertex data and
+    /// rewrites edge endpoints in place. Edge ids and edge data are
+    /// untouched. Returns `old -> new`.
+    fn apply_bfs_relabel(&mut self) -> Vec<VertexId> {
+        let n = self.vertex_data.len();
+        let mut adj: Vec<Vec<VertexId>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            adj[e.src as usize].push(e.dst);
+            adj[e.dst as usize].push(e.src);
+        }
+        for row in adj.iter_mut() {
+            row.sort_unstable();
+            row.dedup();
+        }
+        let mut old_to_new = vec![VertexId::MAX; n];
+        let mut order: Vec<VertexId> = Vec::with_capacity(n);
+        let mut queue = std::collections::VecDeque::new();
+        for seed in 0..n as VertexId {
+            if old_to_new[seed as usize] != VertexId::MAX {
+                continue;
+            }
+            old_to_new[seed as usize] = order.len() as VertexId;
+            order.push(seed);
+            queue.push_back(seed);
+            while let Some(v) = queue.pop_front() {
+                for &u in &adj[v as usize] {
+                    if old_to_new[u as usize] == VertexId::MAX {
+                        old_to_new[u as usize] = order.len() as VertexId;
+                        order.push(u);
+                        queue.push_back(u);
+                    }
+                }
+            }
+        }
+        let mut data: Vec<Option<V>> = self.vertex_data.drain(..).map(Some).collect();
+        self.vertex_data = order
+            .iter()
+            .map(|&old| data[old as usize].take().expect("each old id mapped once"))
+            .collect();
+        for e in self.edges.iter_mut() {
+            e.src = old_to_new[e.src as usize];
+            e.dst = old_to_new[e.dst as usize];
+        }
+        old_to_new
+    }
+
+    /// The CSR freeze itself (structure already in its final id order).
+    fn freeze(self) -> DataGraph<V, E> {
         let n = self.vertex_data.len();
         let m = self.edges.len();
 
@@ -203,6 +291,69 @@ mod tests {
             assert!(g.out_edges(v).is_empty());
         }
         assert_eq!(g.max_degree(), 0);
+    }
+
+    #[test]
+    fn bfs_relabel_permutes_data_and_preserves_structure() {
+        // Path 0-2-4-1-3 inserted with scrambled ids; BFS from 0 visits the
+        // path in order, so the relabel recovers a banded structure.
+        let mut b: GraphBuilder<u32, ()> = GraphBuilder::new();
+        for i in 0..5 {
+            b.add_vertex(i * 10);
+        }
+        for (u, v) in [(0u32, 2u32), (2, 4), (4, 1), (1, 3)] {
+            b.add_undirected(u, v, (), ());
+        }
+        b.bfs_order();
+        let (mut g, map) = b.build_with_mapping();
+        // old path order 0,2,4,1,3 becomes new ids 0,1,2,3,4
+        assert_eq!(map, vec![0, 3, 1, 4, 2]);
+        // data followed its vertex
+        for old in 0..5u32 {
+            assert_eq!(*g.vertex_data_ref(map[old as usize]), old * 10);
+        }
+        // structure is now a banded path: every edge spans adjacent ids
+        for e in 0..g.num_edges() as u32 {
+            let edge = g.edge(e);
+            assert_eq!(
+                edge.src.abs_diff(edge.dst),
+                1,
+                "BFS relabel must band the path: {edge:?}"
+            );
+        }
+        assert_eq!(g.num_edges(), 8);
+    }
+
+    #[test]
+    fn build_without_bfs_returns_identity_mapping() {
+        let mut b: GraphBuilder<(), ()> = GraphBuilder::new();
+        for _ in 0..4 {
+            b.add_vertex(());
+        }
+        b.add_undirected(3, 0, (), ());
+        let (g, map) = b.build_with_mapping();
+        assert_eq!(map, vec![0, 1, 2, 3]);
+        assert!(g.find_edge(3, 0).is_some());
+    }
+
+    #[test]
+    fn bfs_relabel_covers_disconnected_components() {
+        let mut b: GraphBuilder<u8, ()> = GraphBuilder::new();
+        for i in 0..6 {
+            b.add_vertex(i);
+        }
+        b.add_undirected(4, 5, (), ());
+        b.add_undirected(1, 2, (), ());
+        b.bfs_order();
+        let (mut g, map) = b.build_with_mapping();
+        // every old id mapped to a unique new id
+        let mut seen = map.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        for old in 0..6u8 {
+            assert_eq!(*g.vertex_data_ref(map[old as usize]), old);
+        }
+        assert_eq!(g.num_edges(), 4);
     }
 
     #[test]

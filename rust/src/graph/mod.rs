@@ -10,10 +10,12 @@
 mod builder;
 mod partition;
 mod sample;
+mod shard;
 
 pub use builder::GraphBuilder;
 pub use partition::PartitionMap;
 pub use sample::induced_subgraph;
+pub use shard::{GhostEntry, LocalRef, Shard, ShardedGraph};
 
 use std::cell::UnsafeCell;
 

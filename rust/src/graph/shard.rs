@@ -1,0 +1,530 @@
+//! The **sharded data graph**: a built [`DataGraph`] cut into `k` shards
+//! with **ghost replication** of cut-boundary neighbors — the partition
+//! layer Distributed GraphLab (Low et al. 2012) and GraphLab-in-the-Cloud
+//! build everything on, emulated in one address space as the rehearsal for
+//! real multi-process distribution.
+//!
+//! Each [`Shard`] owns one contiguous [`PartitionMap`] block of vertex ids
+//! and carries:
+//!
+//! * a **local CSR** over its owned vertices whose adjacency entries
+//!   resolve ([`Shard::resolve`]) to either another owned vertex or a
+//!   **ghost** — a replicated read-only copy of a boundary neighbor owned
+//!   by a remote shard;
+//! * a **versioned ghost table** ([`GhostEntry`]): each replica pairs its
+//!   data copy with a monotonically increasing `AtomicU64` sync stamp and a
+//!   word-sized reader–writer lock guarding the copy.
+//!
+//! The explicit **sync API** ([`ShardedGraph::sync_vertex_from`],
+//! [`ShardedGraph::sync_all`]) propagates an owned vertex's writes to every
+//! remote replica, bumping each stamp — in a real distributed deployment
+//! this is the network flush; here it is a locked copy whose counters
+//! ([`crate::engine::ContentionStats::ghost_syncs`]) measure exactly the
+//! traffic a cluster would pay, and whose **edge-cut ratio**
+//! ([`ShardedGraph::cut_ratio`]) measures how much of it the partition
+//! (and a locality-preserving vertex order, see
+//! [`super::GraphBuilder::bfs_order`]) avoids.
+
+use super::{Csr, DataCell, DataGraph, PartitionMap, VertexId};
+use crate::consistency::{LockTable, ScopeLock};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A replicated copy of a remote shard's boundary vertex: the data snapshot
+/// plus a monotonically increasing version stamp bumped on every sync.
+pub struct GhostEntry<V> {
+    global: VertexId,
+    owner: usize,
+    /// Sync stamp: 0 = construction-time snapshot; bumped (Release) after
+    /// every replica write, so `version()` is monotone per entry.
+    version: AtomicU64,
+    /// Guards `data`: readers share, a sync holds it exclusively.
+    lock: ScopeLock,
+    data: DataCell<V>,
+}
+
+impl<V> GhostEntry<V> {
+    /// Global id of the replicated vertex.
+    pub fn global(&self) -> VertexId {
+        self.global
+    }
+
+    /// Shard that owns the master copy.
+    pub fn owner(&self) -> usize {
+        self.owner
+    }
+
+    /// Current sync stamp (monotone; 0 = never synced since construction).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+}
+
+impl<V: Clone> GhostEntry<V> {
+    /// Clone the replica under a shared lock.
+    pub fn read(&self) -> V {
+        self.lock.read_spin();
+        // SAFETY: read lock held for the duration of the clone.
+        let value = unsafe { self.data.get_ref() }.clone();
+        self.lock.unlock_read();
+        value
+    }
+
+    /// Overwrite the replica from the owner's data and bump the version.
+    fn store(&self, value: &V) {
+        self.lock.write_spin();
+        // SAFETY: exclusive lock held for the duration of the write.
+        unsafe {
+            *self.data.get_mut_unchecked() = value.clone();
+        }
+        self.lock.unlock_write();
+        self.version.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// Resolution of a shard-local adjacency code (see
+/// [`Shard::local_neighbors`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalRef {
+    /// Neighbor owned by this shard (global vertex id).
+    Owned(VertexId),
+    /// Index into this shard's ghost table.
+    Ghost(u32),
+}
+
+/// One shard: a contiguous block of owned vertices, their local CSR, and
+/// the ghost replicas of their remote neighbors.
+pub struct Shard<V> {
+    id: usize,
+    owned: Range<VertexId>,
+    /// Local CSR over owned vertices (row `i` = owned vertex
+    /// `owned.start + i`). Items `< num_owned` are owned-local indices;
+    /// items `>= num_owned` encode `num_owned + ghost_index`.
+    local_adj: Csr,
+    /// Ghost replicas, sorted by global id.
+    ghosts: Vec<GhostEntry<V>>,
+    /// Per owned vertex: does its scope cross the shard boundary?
+    boundary: Vec<bool>,
+}
+
+impl<V> Shard<V> {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn owned_range(&self) -> Range<VertexId> {
+        self.owned.clone()
+    }
+
+    pub fn num_owned(&self) -> usize {
+        (self.owned.end - self.owned.start) as usize
+    }
+
+    pub fn num_ghosts(&self) -> usize {
+        self.ghosts.len()
+    }
+
+    pub fn owns(&self, v: VertexId) -> bool {
+        self.owned.contains(&v)
+    }
+
+    /// Does owned vertex `v` have a neighbor on another shard?
+    pub fn is_boundary(&self, v: VertexId) -> bool {
+        debug_assert!(self.owns(v), "vertex {v} not owned by shard {}", self.id);
+        self.boundary[(v - self.owned.start) as usize]
+    }
+
+    pub fn ghosts(&self) -> &[GhostEntry<V>] {
+        &self.ghosts
+    }
+
+    pub fn ghost(&self, idx: usize) -> &GhostEntry<V> {
+        &self.ghosts[idx]
+    }
+
+    /// The replica of global vertex `g`, if this shard holds one.
+    pub fn ghost_of(&self, global: VertexId) -> Option<&GhostEntry<V>> {
+        self.ghosts
+            .binary_search_by_key(&global, |g| g.global)
+            .ok()
+            .map(|i| &self.ghosts[i])
+    }
+
+    /// Encoded local adjacency row of owned vertex `v`; decode entries with
+    /// [`Self::resolve`].
+    pub fn local_neighbors(&self, v: VertexId) -> &[u32] {
+        debug_assert!(self.owns(v), "vertex {v} not owned by shard {}", self.id);
+        self.local_adj.row((v - self.owned.start) as usize)
+    }
+
+    /// Decode a [`Self::local_neighbors`] entry.
+    pub fn resolve(&self, code: u32) -> LocalRef {
+        let n = self.num_owned() as u32;
+        if code < n {
+            LocalRef::Owned(self.owned.start + code)
+        } else {
+            LocalRef::Ghost(code - n)
+        }
+    }
+}
+
+/// The sharded view of a data graph. Owns the partition metadata and all
+/// ghost replicas; the master vertex/edge data stays in the [`DataGraph`].
+pub struct ShardedGraph<V> {
+    part: PartitionMap,
+    shards: Vec<Shard<V>>,
+    /// CSR over vertices: `replica_sites[replica_offsets[v]..replica_offsets[v+1]]`
+    /// are v's ghost replicas, packed as (shard, ghost index).
+    replica_offsets: Vec<u32>,
+    replica_sites: Vec<(u32, u32)>,
+    edge_cut: usize,
+    num_edges: usize,
+}
+
+impl<V: Clone> ShardedGraph<V> {
+    /// Cut `graph` into `num_shards` contiguous-block shards (clamped to at
+    /// least 1), snapshotting ghost data from the current vertex values.
+    /// Takes `&mut` only for exclusive, setup-time data access — the
+    /// returned value owns everything it needs and does not borrow the
+    /// graph.
+    pub fn new<E>(graph: &mut DataGraph<V, E>, num_shards: usize) -> ShardedGraph<V> {
+        let n = graph.num_vertices();
+        let part = PartitionMap::new(n, num_shards);
+        let k = part.num_parts();
+        let mut shards = Vec::with_capacity(k);
+        let mut replica_lists: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n];
+        for s in 0..k {
+            let owned = part.range(s);
+            let start = owned.start;
+            let num_owned = (owned.end - owned.start) as usize;
+
+            // Ghost set: every neighbor owned by another shard.
+            let mut ghost_ids: Vec<VertexId> = Vec::new();
+            for v in owned.clone() {
+                for &u in graph.neighbors(v) {
+                    if part.owner_of(u) != s {
+                        ghost_ids.push(u);
+                    }
+                }
+            }
+            ghost_ids.sort_unstable();
+            ghost_ids.dedup();
+
+            // Local CSR: owned-local indices for intra-shard neighbors,
+            // `num_owned + ghost_index` for cut-boundary neighbors.
+            let mut offsets = vec![0u32; num_owned + 1];
+            let mut items = Vec::new();
+            let mut boundary = vec![false; num_owned];
+            for v in owned.clone() {
+                let li = (v - start) as usize;
+                for &u in graph.neighbors(v) {
+                    if part.owner_of(u) == s {
+                        items.push(u - start);
+                    } else {
+                        boundary[li] = true;
+                        let g =
+                            ghost_ids.binary_search(&u).expect("ghost indexed") as u32;
+                        items.push(num_owned as u32 + g);
+                    }
+                }
+                offsets[li + 1] = items.len() as u32;
+            }
+
+            // Ghost entries snapshot the owner's current data; register
+            // each as a replica site of its global vertex.
+            let mut ghosts = Vec::with_capacity(ghost_ids.len());
+            for (i, &u) in ghost_ids.iter().enumerate() {
+                replica_lists[u as usize].push((s as u32, i as u32));
+                ghosts.push(GhostEntry {
+                    global: u,
+                    owner: part.owner_of(u),
+                    version: AtomicU64::new(0),
+                    lock: ScopeLock::new(),
+                    data: DataCell::new(graph.vertex_data_ref(u).clone()),
+                });
+            }
+            shards.push(Shard {
+                id: s,
+                owned,
+                local_adj: Csr { offsets, items },
+                ghosts,
+                boundary,
+            });
+        }
+
+        let mut replica_offsets = vec![0u32; n + 1];
+        let mut replica_sites = Vec::new();
+        for (v, list) in replica_lists.iter().enumerate() {
+            replica_sites.extend_from_slice(list);
+            replica_offsets[v + 1] = replica_sites.len() as u32;
+        }
+
+        let mut edge_cut = 0usize;
+        for e in 0..graph.num_edges() as u32 {
+            let edge = graph.edge(e);
+            if part.owner_of(edge.src) != part.owner_of(edge.dst) {
+                edge_cut += 1;
+            }
+        }
+
+        ShardedGraph {
+            part,
+            shards,
+            replica_offsets,
+            replica_sites,
+            edge_cut,
+            num_edges: graph.num_edges(),
+        }
+    }
+
+    /// Propagate `data` — the owner's current value of `v`, read under the
+    /// caller's lock (e.g. the still-held update scope) — to every remote
+    /// ghost replica. Returns the number of replicas written.
+    pub fn sync_vertex_from(&self, v: VertexId, data: &V) -> u64 {
+        let sites = self.replicas_of(v);
+        for &(s, g) in sites {
+            self.shards[s as usize].ghosts[g as usize].store(data);
+        }
+        sites.len() as u64
+    }
+
+    /// Propagate vertex `v` under a freshly taken per-vertex read lock.
+    pub fn sync_vertex<E>(
+        &self,
+        graph: &DataGraph<V, E>,
+        locks: &LockTable,
+        v: VertexId,
+    ) -> u64 {
+        if self.replicas_of(v).is_empty() {
+            return 0;
+        }
+        let _g = locks.read(v);
+        // SAFETY: read lock on v held for the duration of the propagation.
+        let data = unsafe { graph.vertex_data_unchecked(v) };
+        self.sync_vertex_from(v, data)
+    }
+
+    /// Full sync pass: propagate every replicated vertex. Returns total
+    /// replicas written.
+    pub fn sync_all<E>(&self, graph: &DataGraph<V, E>, locks: &LockTable) -> u64 {
+        let mut total = 0;
+        for v in 0..self.part.len() as u32 {
+            total += self.sync_vertex(graph, locks, v);
+        }
+        total
+    }
+
+    /// Every ghost replica equals its owner's current data (exclusive
+    /// access; test/diagnostic helper).
+    pub fn ghosts_consistent<E>(&self, graph: &mut DataGraph<V, E>) -> bool
+    where
+        V: PartialEq,
+    {
+        for sh in &self.shards {
+            for g in &sh.ghosts {
+                if g.read() != *graph.vertex_data_ref(g.global) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl<V> ShardedGraph<V> {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.part.len()
+    }
+
+    pub fn partition(&self) -> &PartitionMap {
+        &self.part
+    }
+
+    /// The shard owning vertex `v`.
+    pub fn owner_of(&self, v: VertexId) -> usize {
+        self.part.owner_of(v)
+    }
+
+    pub fn shard(&self, s: usize) -> &Shard<V> {
+        &self.shards[s]
+    }
+
+    pub fn shards(&self) -> &[Shard<V>] {
+        &self.shards
+    }
+
+    /// Does `v`'s scope cross a shard boundary?
+    pub fn is_boundary(&self, v: VertexId) -> bool {
+        self.shards[self.part.owner_of(v)].is_boundary(v)
+    }
+
+    /// Total ghost replicas across all shards.
+    pub fn num_ghosts(&self) -> usize {
+        self.shards.iter().map(|s| s.ghosts.len()).sum()
+    }
+
+    /// Ghost replica sites of vertex `v`, packed as (shard, ghost index).
+    pub fn replicas_of(&self, v: VertexId) -> &[(u32, u32)] {
+        let (a, b) = (
+            self.replica_offsets[v as usize] as usize,
+            self.replica_offsets[v as usize + 1] as usize,
+        );
+        &self.replica_sites[a..b]
+    }
+
+    /// Directed edges whose endpoints live on different shards.
+    pub fn edge_cut(&self) -> usize {
+        self.edge_cut
+    }
+
+    /// Cut edges as a fraction of all edges — the replication/sync traffic
+    /// a distributed deployment would pay for this partition.
+    pub fn cut_ratio(&self) -> f64 {
+        self.edge_cut as f64 / self.num_edges.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::GraphBuilder;
+    use super::*;
+
+    /// 4x4 grid, ids row-major: contiguous 2-way split cuts the middle row
+    /// boundary only.
+    fn grid4() -> DataGraph<u64, ()> {
+        let side = 4u32;
+        let mut b = GraphBuilder::new();
+        for i in 0..side * side {
+            b.add_vertex(i as u64);
+        }
+        for y in 0..side {
+            for x in 0..side {
+                let v = y * side + x;
+                if x + 1 < side {
+                    b.add_undirected(v, v + 1, (), ());
+                }
+                if y + 1 < side {
+                    b.add_undirected(v, v + side, (), ());
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn shard_structure_covers_and_cuts() {
+        let mut g = grid4();
+        let sg = ShardedGraph::new(&mut g, 2);
+        assert_eq!(sg.num_shards(), 2);
+        assert_eq!(sg.num_vertices(), 16);
+        // owned blocks tile the id space
+        assert_eq!(sg.shard(0).owned_range(), 0..8);
+        assert_eq!(sg.shard(1).owned_range(), 8..16);
+        // the only cut edges are the 4 vertical pairs between rows 1 and 2
+        assert_eq!(sg.edge_cut(), 8, "4 undirected pairs = 8 directed edges");
+        assert!((sg.cut_ratio() - 8.0 / 48.0).abs() < 1e-12);
+        // each shard ghosts the 4 vertices of the facing row
+        assert_eq!(sg.shard(0).num_ghosts(), 4);
+        assert_eq!(sg.shard(1).num_ghosts(), 4);
+        assert_eq!(sg.num_ghosts(), 8);
+        // boundary flags: rows 1 (ids 4..8) and 2 (ids 8..12)
+        for v in 0..16u32 {
+            let expect = (4..12).contains(&v);
+            assert_eq!(sg.is_boundary(v), expect, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn local_adjacency_resolves_to_owned_and_ghosts() {
+        let mut g = grid4();
+        let sg = ShardedGraph::new(&mut g, 2);
+        let s0 = sg.shard(0);
+        // vertex 5 (row 1): neighbors 1, 4, 6 owned; 9 ghosted
+        let mut owned = Vec::new();
+        let mut ghosts = Vec::new();
+        for &code in s0.local_neighbors(5) {
+            match s0.resolve(code) {
+                LocalRef::Owned(u) => owned.push(u),
+                LocalRef::Ghost(gi) => ghosts.push(s0.ghost(gi as usize).global()),
+            }
+        }
+        owned.sort_unstable();
+        assert_eq!(owned, vec![1, 4, 6]);
+        assert_eq!(ghosts, vec![9]);
+        assert_eq!(s0.ghost_of(9).unwrap().owner(), 1);
+        assert!(s0.ghost_of(3).is_none(), "owned vertices are not ghosted");
+        // interior vertex 0: all neighbors owned
+        for &code in s0.local_neighbors(0) {
+            assert!(matches!(s0.resolve(code), LocalRef::Owned(_)));
+        }
+    }
+
+    #[test]
+    fn sync_propagates_and_versions_are_monotone() {
+        let mut g = grid4();
+        let sg = ShardedGraph::new(&mut g, 4);
+        let locks = LockTable::new(g.num_vertices());
+        assert!(sg.ghosts_consistent(&mut g), "construction snapshots match");
+
+        // mutate a replicated vertex; replicas are stale until synced
+        *g.vertex_data(5) = 999;
+        assert!(!sg.ghosts_consistent(&mut g));
+        let wrote = sg.sync_vertex(&g, &locks, 5);
+        assert_eq!(wrote as usize, sg.replicas_of(5).len());
+        assert!(wrote >= 1, "row-contiguous 4-way split replicates vertex 5");
+        assert!(sg.ghosts_consistent(&mut g));
+
+        // versions bump monotonically per sync
+        let before: Vec<u64> = sg
+            .replicas_of(5)
+            .iter()
+            .map(|&(s, gi)| sg.shard(s as usize).ghost(gi as usize).version())
+            .collect();
+        assert!(before.iter().all(|&v| v == 1));
+        let total = sg.sync_all(&g, &locks);
+        assert_eq!(total as usize, sg.num_ghosts());
+        for (i, &(s, gi)) in sg.replicas_of(5).iter().enumerate() {
+            let after = sg.shard(s as usize).ghost(gi as usize).version();
+            assert!(after > before[i], "version must increase on sync");
+        }
+    }
+
+    #[test]
+    fn single_shard_has_no_ghosts() {
+        let mut g = grid4();
+        let sg = ShardedGraph::new(&mut g, 1);
+        assert_eq!(sg.num_shards(), 1);
+        assert_eq!(sg.num_ghosts(), 0);
+        assert_eq!(sg.edge_cut(), 0);
+        assert_eq!(sg.cut_ratio(), 0.0);
+        for v in 0..16u32 {
+            assert!(!sg.is_boundary(v));
+            assert!(sg.replicas_of(v).is_empty());
+        }
+    }
+
+    #[test]
+    fn more_shards_than_vertices() {
+        let mut b: GraphBuilder<u8, ()> = GraphBuilder::new();
+        for i in 0..3 {
+            b.add_vertex(i);
+        }
+        b.add_undirected(0, 1, (), ());
+        b.add_undirected(1, 2, (), ());
+        let mut g = b.build();
+        let sg = ShardedGraph::new(&mut g, 8);
+        // every vertex its own shard; all edges cut
+        assert_eq!(sg.edge_cut(), 4);
+        assert!(sg.is_boundary(1));
+        assert_eq!(sg.shard(0).num_ghosts(), 1);
+        assert_eq!(sg.shard(1).num_ghosts(), 2);
+        for s in 3..sg.num_shards() {
+            assert_eq!(sg.shard(s).num_owned(), 0);
+            assert_eq!(sg.shard(s).num_ghosts(), 0);
+        }
+    }
+}

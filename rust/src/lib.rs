@@ -7,8 +7,10 @@
 //! * **Layer 3 (this crate)** — the GraphLab coordination framework: the
 //!   [data graph](graph), the [shared data table & sync mechanism](sdt),
 //!   the three [consistency models](consistency) (word-per-vertex atomic
-//!   try-locks), the [scheduler collection](scheduler), the threaded
-//!   (non-blocking, deferral-based) and sequential [engines](engine) behind
+//!   try-locks + pipelined split acquisition), the
+//!   [scheduler collection](scheduler), the threaded (non-blocking,
+//!   deferral-based), sharded (ghost-replicated partitions,
+//!   distributed-style locking) and sequential [engines](engine) behind
 //!   the [`engine::Program`] front-end, the [multicore simulator](sim), and
 //!   the paper's five
 //!   case-study [applications](apps) with synthetic [workloads](datagen) and

@@ -118,7 +118,11 @@ impl Figure {
 /// Render a [`crate::engine::RunReport`] as an aligned text block:
 /// headline throughput plus the per-worker update/conflict/deferral table
 /// the non-blocking engine records (all zeros on uncontended or sequential
-/// runs).
+/// runs). Lines whose counters the run could not have produced are
+/// omitted: the affinity rate only renders when the scheduler actually
+/// advertised an `owner_of` routing map (otherwise the 0% is structural,
+/// not informative), and the ghost/boundary counters only render for
+/// sharded-engine runs.
 pub fn run_summary(report: &crate::engine::RunReport) -> String {
     let mut out = String::new();
     let c = &report.contention;
@@ -142,12 +146,27 @@ pub fn run_summary(report: &crate::engine::RunReport) -> String {
         c.steals,
         c.escalations
     );
-    let _ = writeln!(
-        out,
-        "affinity: {} owner-worker hits ({:.1}% of updates)",
-        c.affinity_hits,
-        100.0 * c.affinity_hits as f64 / report.updates.max(1) as f64
-    );
+    if c.has_owner_map {
+        let _ = writeln!(
+            out,
+            "affinity: {} owner-worker hits ({:.1}% of updates)",
+            c.affinity_hits,
+            100.0 * c.affinity_hits as f64 / report.updates.max(1) as f64
+        );
+    }
+    if c.shards > 0 {
+        let _ = writeln!(
+            out,
+            "sharding: {} shards, {} ghost syncs, {} boundary updates \
+             ({:.1}% of updates), {} handoffs, {} pipelined stalls",
+            c.shards,
+            c.ghost_syncs,
+            c.boundary_updates,
+            100.0 * c.boundary_updates as f64 / report.updates.max(1) as f64,
+            c.handoffs,
+            c.pipelined_stalls
+        );
+    }
     let _ = writeln!(out, "{:>8} {:>12} {:>12} {:>12}", "worker", "updates", "conflicts", "deferrals");
     for (w, &u) in report.per_worker.iter().enumerate() {
         let conflicts = c.per_worker_conflicts.get(w).copied().unwrap_or(0);
@@ -217,8 +236,10 @@ mod tests {
                 steals: 3,
                 escalations: 2,
                 affinity_hits: 800,
+                has_owner_map: true,
                 per_worker_conflicts: vec![20, 10],
                 per_worker_deferrals: vec![7, 3],
+                ..Default::default()
             },
         };
         let text = run_summary(&report);
@@ -228,7 +249,56 @@ mod tests {
         assert!(text.contains("2 escalated"));
         assert!(text.contains("800 owner-worker hits"));
         assert!(text.contains("80.0% of updates"));
+        assert!(!text.contains("sharding:"), "unsharded run hides shard counters");
         assert!(text.lines().count() >= 6, "per-worker rows present");
+    }
+
+    /// Schedulers without an `owner_of` routing map must not render a
+    /// (structurally zero, meaningless) affinity rate.
+    #[test]
+    fn run_summary_gates_affinity_on_owner_map() {
+        let report = crate::engine::RunReport {
+            updates: 100,
+            wall_secs: 0.1,
+            stop: crate::engine::StopReason::SchedulerEmpty,
+            per_worker: vec![100],
+            syncs_run: 0,
+            contention: crate::engine::ContentionStats {
+                has_owner_map: false,
+                ..Default::default()
+            },
+        };
+        let text = run_summary(&report);
+        assert!(
+            !text.contains("affinity"),
+            "no owner map -> no affinity line:\n{text}"
+        );
+    }
+
+    #[test]
+    fn run_summary_renders_shard_counters_for_sharded_runs() {
+        let report = crate::engine::RunReport {
+            updates: 500,
+            wall_secs: 0.2,
+            stop: crate::engine::StopReason::SchedulerEmpty,
+            per_worker: vec![250, 250],
+            syncs_run: 0,
+            contention: crate::engine::ContentionStats {
+                shards: 4,
+                ghost_syncs: 120,
+                boundary_updates: 100,
+                handoffs: 7,
+                pipelined_stalls: 3,
+                ..Default::default()
+            },
+        };
+        let text = run_summary(&report);
+        assert!(text.contains("4 shards"));
+        assert!(text.contains("120 ghost syncs"));
+        assert!(text.contains("100 boundary updates"));
+        assert!(text.contains("20.0% of updates"));
+        assert!(text.contains("7 handoffs"));
+        assert!(text.contains("3 pipelined stalls"));
     }
 
     #[test]

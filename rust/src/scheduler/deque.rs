@@ -172,6 +172,39 @@ impl<T: PackWords> WorkStealingDeque<T> {
         }
     }
 
+    /// Any thread: **steal-half** policy. Claims one element for the caller
+    /// (returned) and up to `min(len/2, max_extra)` additional elements,
+    /// each fed to `sink` (typically a push onto the thief's own deque, so
+    /// one scan amortizes over several tasks instead of thieves returning
+    /// for one task at a time — enable via
+    /// [`crate::engine::EngineConfig::steal_half`] when steal counters
+    /// dominate). Every claim is an individual CAS from the top, so
+    /// exactly-once delivery is inherited from [`Self::steal`]; the batch
+    /// is not atomic, which is fine — a partially drained victim is
+    /// indistinguishable from a victim that had fewer tasks. Returns the
+    /// first stolen element and the count handed to `sink`.
+    pub fn steal_half(
+        &self,
+        max_extra: usize,
+        mut sink: impl FnMut(T),
+    ) -> (Option<T>, usize) {
+        let Some(first) = self.steal() else {
+            return (None, 0);
+        };
+        let extra = (self.len() / 2).min(max_extra);
+        let mut moved = 0;
+        for _ in 0..extra {
+            match self.steal() {
+                Some(t) => {
+                    sink(t);
+                    moved += 1;
+                }
+                None => break,
+            }
+        }
+        (Some(first), moved)
+    }
+
     /// Any thread: steal from the top (FIFO). Retries internally while it
     /// loses claim races; returns `None` only when the deque looks empty.
     pub fn steal(&self) -> Option<T> {
@@ -384,6 +417,30 @@ mod tests {
         assert!(d.pop().is_none());
         assert!(d.steal().is_none());
         assert!(d.is_empty());
+    }
+
+    #[test]
+    fn steal_half_takes_first_plus_half() {
+        let d: WorkStealingDeque<Task> = WorkStealingDeque::new(16);
+        for v in 0..9u32 {
+            d.push(Task::new(v)).unwrap();
+        }
+        let mut batch = Vec::new();
+        let (first, moved) = d.steal_half(32, |t| batch.push(t.vertex));
+        // first element from the cold end, then half of the remaining 8
+        assert_eq!(first.unwrap().vertex, 0);
+        assert_eq!(moved, 4);
+        assert_eq!(batch, vec![1, 2, 3, 4]);
+        assert_eq!(d.len(), 4);
+        // cap bounds the batch
+        let (first, moved) = d.steal_half(1, |_| {});
+        assert_eq!(first.unwrap().vertex, 5);
+        assert_eq!(moved, 1);
+        // empty deque yields nothing
+        while d.steal().is_some() {}
+        let (first, moved) = d.steal_half(8, |_| panic!("no sink on empty"));
+        assert!(first.is_none());
+        assert_eq!(moved, 0);
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Stress tests for the sharding subsystem: the sharded engine must
+//! conserve results against the sequential engine for every consistency
+//! model and shard count, ghost versions must advance monotonically,
+//! boundary updates must execute exactly once, k = 1 must degenerate to
+//! the threaded engine's behavior, and the BFS relabel must shrink the
+//! edge cut of a scrambled graph.
+
+use graphlab::consistency::{ConsistencyModel, LockTable, Scope};
+use graphlab::engine::{
+    Program, SequentialEngine, ShardedEngine, ThreadedEngine, UpdateContext, UpdateFn,
+};
+use graphlab::graph::{DataGraph, GraphBuilder, ShardedGraph};
+use graphlab::scheduler::{MultiQueueFifo, Scheduler, Task};
+use graphlab::sdt::Sdt;
+
+/// The engine-stress workload: fold the neighborhood into the center,
+/// reschedule self for a fixed number of rounds. Valid under every model;
+/// the center round counter makes lost updates exactly checkable.
+struct NeighborhoodFold {
+    rounds: u64,
+}
+
+impl UpdateFn<(u64, u64), ()> for NeighborhoodFold {
+    fn update(&self, scope: &mut Scope<'_, (u64, u64), ()>, ctx: &mut UpdateContext<'_>) {
+        let mut acc = 0u64;
+        for &u in scope.neighbors() {
+            acc = acc.wrapping_add(scope.neighbor(u).0).rotate_left(1);
+        }
+        let data = scope.vertex_mut();
+        data.0 += 1;
+        data.1 = data.1.wrapping_add(acc);
+        if data.0 < self.rounds {
+            ctx.add_task(scope.center(), 1.0);
+        }
+    }
+}
+
+fn grid(side: u32) -> DataGraph<(u64, u64), ()> {
+    let mut b = GraphBuilder::new();
+    for _ in 0..side * side {
+        b.add_vertex((0u64, 0u64));
+    }
+    for y in 0..side {
+        for x in 0..side {
+            let v = y * side + x;
+            if x + 1 < side {
+                b.add_undirected(v, v + 1, (), ());
+            }
+            if y + 1 < side {
+                b.add_undirected(v, v + side, (), ());
+            }
+        }
+    }
+    b.build()
+}
+
+fn seeded(n: usize, workers: usize) -> MultiQueueFifo {
+    let sched = MultiQueueFifo::new(n, workers);
+    for v in 0..n as u32 {
+        sched.add_task(Task::new(v));
+    }
+    sched
+}
+
+/// Result conservation per consistency model and shard count: the sharded
+/// run must complete every scheduled round on every vertex and report the
+/// same update total as the sequential engine.
+#[test]
+fn all_models_and_shard_counts_match_sequential() {
+    let side = 12u32;
+    let rounds = 15u64;
+    for model in [ConsistencyModel::Vertex, ConsistencyModel::Edge, ConsistencyModel::Full] {
+        let f = NeighborhoodFold { rounds };
+        let program = Program::new().update_fn(&f).model(model);
+
+        let mut seq_g = grid(side);
+        let n = seq_g.num_vertices();
+        let seq_report =
+            program.run_on(&SequentialEngine, &mut seq_g, &seeded(n, 1), &Sdt::new());
+        assert_eq!(seq_report.updates, n as u64 * rounds);
+
+        let program = program.workers(4);
+        for k in [1usize, 2, 4] {
+            let mut g = grid(side);
+            let report = program.run_on(
+                &ShardedEngine::new(k),
+                &mut g,
+                &seeded(n, 4),
+                &Sdt::new(),
+            );
+            assert_eq!(
+                report.updates, seq_report.updates,
+                "update conservation ({model:?}, k={k})"
+            );
+            assert_eq!(
+                report.per_worker.iter().sum::<u64>(),
+                report.updates,
+                "per-worker accounting ({model:?}, k={k})"
+            );
+            assert_eq!(report.contention.shards, k);
+            for v in 0..n as u32 {
+                assert_eq!(
+                    g.vertex_data(v).0,
+                    rounds,
+                    "vertex {v} lost updates ({model:?}, k={k})"
+                );
+            }
+        }
+    }
+}
+
+/// Ghost versions advance monotonically under engine traffic, and after a
+/// final full sync every replica equals its owner's data.
+#[test]
+fn ghost_versions_monotone_and_consistent_after_sync() {
+    let side = 8u32;
+    let mut g = grid(side);
+    let n = g.num_vertices();
+    let k = 4;
+    let sharded = ShardedGraph::new(&mut g, k);
+    assert!(sharded.num_ghosts() > 0, "4-way grid split must ghost");
+
+    let f = NeighborhoodFold { rounds: 20 };
+    let report = Program::new().update_fn(&f).model(ConsistencyModel::Full).workers(4).run_on(
+        &ShardedEngine::new(k),
+        &mut g,
+        &seeded(n, 4),
+        &Sdt::new(),
+    );
+    assert!(report.contention.ghost_syncs > 0);
+
+    // The engine built its own shard view; ours observed no syncs yet.
+    // Drive the sync API directly and check per-entry monotonicity.
+    let locks = LockTable::new(n);
+    let first = sharded.sync_all(&g, &locks);
+    assert_eq!(first as usize, sharded.num_ghosts());
+    let snapshot: Vec<u64> = sharded
+        .shards()
+        .iter()
+        .flat_map(|s| s.ghosts().iter().map(|e| e.version()))
+        .collect();
+    assert!(snapshot.iter().all(|&v| v >= 1));
+    let second = sharded.sync_all(&g, &locks);
+    assert_eq!(second, first);
+    let after: Vec<u64> = sharded
+        .shards()
+        .iter()
+        .flat_map(|s| s.ghosts().iter().map(|e| e.version()))
+        .collect();
+    for (b, a) in snapshot.iter().zip(&after) {
+        assert!(a > b, "version must strictly increase per sync pass");
+    }
+    assert!(sharded.ghosts_consistent(&mut g), "replicas match owners after sync");
+}
+
+/// Exactly-once boundary accounting: the engine's boundary/ghost counters
+/// must equal what the partition structure predicts (`rounds` updates per
+/// boundary vertex, one ghost write per replica per update).
+#[test]
+fn exactly_once_boundary_updates() {
+    let side = 8u32;
+    let rounds = 25u64;
+    let k = 2;
+    let mut g = grid(side);
+    let n = g.num_vertices();
+    // Structural prediction from an identically-cut shard view.
+    let probe = ShardedGraph::new(&mut g, k);
+    let boundary_vertices: u64 =
+        (0..n as u32).filter(|&v| probe.is_boundary(v)).count() as u64;
+    let total_replicas: u64 =
+        (0..n as u32).map(|v| probe.replicas_of(v).len() as u64).sum();
+    assert!(boundary_vertices > 0);
+
+    let f = NeighborhoodFold { rounds };
+    let report = Program::new().update_fn(&f).model(ConsistencyModel::Edge).workers(4).run_on(
+        &ShardedEngine::new(k),
+        &mut g,
+        &seeded(n, 4),
+        &Sdt::new(),
+    );
+    assert_eq!(report.updates, n as u64 * rounds);
+    assert_eq!(
+        report.contention.boundary_updates,
+        boundary_vertices * rounds,
+        "each boundary vertex updates exactly once per round"
+    );
+    assert_eq!(
+        report.contention.ghost_syncs,
+        total_replicas * rounds,
+        "each update of a replicated vertex writes each replica exactly once"
+    );
+}
+
+/// k = 1 degenerates to the threaded engine: identical results and update
+/// totals, and every shard-specific counter is structurally zero.
+#[test]
+fn one_shard_equals_threaded_engine() {
+    let side = 10u32;
+    let rounds = 12u64;
+    let f = NeighborhoodFold { rounds };
+    let program =
+        Program::new().update_fn(&f).model(ConsistencyModel::Full).workers(4);
+
+    let mut thr_g = grid(side);
+    let n = thr_g.num_vertices();
+    let thr_report =
+        program.run_on(&ThreadedEngine, &mut thr_g, &seeded(n, 4), &Sdt::new());
+
+    let mut sh_g = grid(side);
+    let sh_report =
+        program.run_on(&ShardedEngine::new(1), &mut sh_g, &seeded(n, 4), &Sdt::new());
+
+    assert_eq!(sh_report.updates, thr_report.updates);
+    for v in 0..n as u32 {
+        assert_eq!(sh_g.vertex_data(v).0, thr_g.vertex_data(v).0, "vertex {v}");
+    }
+    let c = &sh_report.contention;
+    assert_eq!(c.shards, 1);
+    assert_eq!(c.ghost_syncs, 0, "one shard has no ghosts");
+    assert_eq!(c.boundary_updates, 0);
+    assert_eq!(c.handoffs, 0);
+    assert_eq!(c.pipelined_stalls, 0);
+}
+
+/// Acceptance: a cut graph at k >= 2 reports nonzero ghost syncs and
+/// boundary updates through `RunReport::contention`.
+#[test]
+fn cut_graph_reports_ghost_activity() {
+    let side = 8u32;
+    let f = NeighborhoodFold { rounds: 10 };
+    let mut g = grid(side);
+    let n = g.num_vertices();
+    let report = Program::new()
+        .update_fn(&f)
+        .model(ConsistencyModel::Full)
+        .workers(4)
+        .run_on(&ShardedEngine::new(4), &mut g, &seeded(n, 4), &Sdt::new());
+    assert_eq!(report.contention.shards, 4);
+    assert!(report.contention.ghost_syncs > 0);
+    assert!(report.contention.boundary_updates > 0);
+}
+
+/// The BFS relabel aligns `PartitionMap` blocks with grid neighborhoods:
+/// a scrambled-id grid has a near-random (large) edge cut, the same grid
+/// relabeled breadth-first a much smaller one.
+#[test]
+fn bfs_order_shrinks_edge_cut() {
+    let side = 16u32;
+    let n = (side * side) as usize;
+    // Deterministic scramble: stride permutation of the row-major ids.
+    let stride = 37u32; // coprime with 256
+    let perm: Vec<u32> = (0..n as u32).map(|i| (i * stride) % n as u32).collect();
+
+    let build = |bfs: bool| -> DataGraph<u32, ()> {
+        let mut b = GraphBuilder::new();
+        for i in 0..n as u32 {
+            b.add_vertex(i);
+        }
+        for y in 0..side {
+            for x in 0..side {
+                let v = y * side + x;
+                if x + 1 < side {
+                    b.add_undirected(perm[v as usize], perm[(v + 1) as usize], (), ());
+                }
+                if y + 1 < side {
+                    b.add_undirected(perm[v as usize], perm[(v + side) as usize], (), ());
+                }
+            }
+        }
+        if bfs {
+            b.bfs_order();
+        }
+        b.build()
+    };
+
+    let mut scrambled = build(false);
+    let mut relabeled = build(true);
+    let k = 8;
+    let cut_scrambled = ShardedGraph::new(&mut scrambled, k).edge_cut();
+    let cut_relabeled = ShardedGraph::new(&mut relabeled, k).edge_cut();
+    assert!(
+        cut_relabeled * 2 < cut_scrambled,
+        "BFS relabel must at least halve the scrambled cut: {cut_relabeled} vs {cut_scrambled}"
+    );
+}
+
+/// Steal-half smoke: a contended run with the steal-half policy enabled
+/// still conserves every update.
+#[test]
+fn steal_half_policy_conserves_updates() {
+    let side = 10u32;
+    let rounds = 20u64;
+    let f = NeighborhoodFold { rounds };
+    let mut g = grid(side);
+    let n = g.num_vertices();
+    let report = Program::new()
+        .update_fn(&f)
+        .model(ConsistencyModel::Full)
+        .workers(4)
+        .steal_half(true)
+        .run_on(&ThreadedEngine, &mut g, &seeded(n, 4), &Sdt::new());
+    assert_eq!(report.updates, n as u64 * rounds);
+    for v in 0..n as u32 {
+        assert_eq!(g.vertex_data(v).0, rounds, "vertex {v}");
+    }
+}
