@@ -11,10 +11,14 @@
 //!   acquisition including rollback — the price of a deferral) and the
 //!   per-vertex memory footprint vs the old `RwLock<()>` table;
 //! * end-to-end engine overhead per trivial update (1..4 workers);
+//! * ghost-sync transport throughput: deltas/sec and bytes per delta for
+//!   the direct vs serialized-channel backends at batch windows {1,16,64}
+//!   — results/BENCH_transport.json;
 //! * PJRT batched-kernel dispatch latency (if artifacts are built).
 //!
 //! Output: bench table on stdout + results/micro.tsv +
-//! results/BENCH_locks.json + results/BENCH_sched.json.
+//! results/BENCH_locks.json + results/BENCH_sched.json +
+//! results/BENCH_transport.json.
 
 use graphlab::consistency::{ConsistencyModel, LockTable, Scope};
 use graphlab::engine::{Program, UpdateContext, UpdateFn};
@@ -333,7 +337,8 @@ fn main() {
             let timer = Timer::start();
             let mut wrote = 0u64;
             for _ in 0..iters {
-                wrote += sharded.sync_all(&g, &locks);
+                let (_vertices, replicas) = sharded.sync_all(&g, &locks);
+                wrote += replicas;
             }
             let secs = timer.elapsed_secs().max(1e-12);
             let rate = wrote as f64 / secs;
@@ -347,6 +352,81 @@ fn main() {
             shard_json.push((format!("edge_cut_ratio_k{k}"), sharded.cut_ratio()));
             shard_json.push((format!("ghosts_k{k}"), sharded.num_ghosts() as f64));
             shard_json.push((format!("ghost_syncs_per_sec_k{k}"), rate));
+        }
+    }
+
+    // ---- transport: Direct vs Channel across batch windows ------------------
+    //
+    // The ghost-sync transport layer's cost drivers: deltas/sec through the
+    // batcher + backend, and bytes shipped per delta (zero for the direct
+    // in-memory backend; the serialized frame size for the channel backend).
+    // Machine-readable copy in results/BENCH_transport.json.
+    let mut transport_json: Vec<(String, f64)> = Vec::new();
+    {
+        use graphlab::transport::{
+            ChannelTransport, DeltaBatcher, DirectTransport, GhostTransport,
+        };
+        let side = 64u32;
+        let mut g = grid2d(side);
+        let k = 4usize;
+        let sharded = ShardedGraph::new(&mut g, k);
+        // boundary vertices grouped by owning shard (a worker's batcher only
+        // ever records vertices of its own shard)
+        let mut by_shard: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for v in 0..sharded.num_vertices() as u32 {
+            if !sharded.replicas_of(v).is_empty() {
+                by_shard[sharded.owner_of(v)].push(v);
+            }
+        }
+        println!(
+            "{:<44} {:>12} {:>14}",
+            "transport", "deltas/s", "bytes/delta"
+        );
+        for backend in ["direct", "channel"] {
+            for batch in [1usize, 16, 64] {
+                let transport: Box<dyn GhostTransport<u64> + '_> = if backend == "direct" {
+                    Box::new(DirectTransport::new(&sharded))
+                } else {
+                    Box::new(ChannelTransport::new(&sharded))
+                };
+                let rounds = 200u64;
+                let timer = Timer::start();
+                let mut deltas = 0u64;
+                let mut bytes = 0u64;
+                for round in 0..rounds {
+                    for (shard, owned) in by_shard.iter().enumerate() {
+                        let mut batcher: DeltaBatcher<u64> = DeltaBatcher::new(batch);
+                        for &v in owned {
+                            let ver = sharded.bump_master(v);
+                            batcher.record(v, ver, round);
+                            if batcher.should_flush() {
+                                let r = batcher.flush(shard, transport.as_ref());
+                                deltas += r.deltas;
+                                bytes += r.bytes;
+                            }
+                        }
+                        if !batcher.is_empty() {
+                            let r = batcher.flush(shard, transport.as_ref());
+                            deltas += r.deltas;
+                            bytes += r.bytes;
+                        }
+                    }
+                    for shard in 0..k {
+                        transport.drain(shard);
+                    }
+                }
+                let secs = timer.elapsed_secs().max(1e-12);
+                let dps = deltas as f64 / secs;
+                let bpd = bytes as f64 / deltas.max(1) as f64;
+                println!(
+                    "{:<44} {:>12.0} {:>14.1}",
+                    format!("transport/{backend}/b{batch}"),
+                    dps,
+                    bpd
+                );
+                transport_json.push((format!("{backend}_b{batch}_deltas_per_sec"), dps));
+                transport_json.push((format!("{backend}_b{batch}_bytes_per_delta"), bpd));
+            }
         }
     }
 
@@ -411,4 +491,15 @@ fn main() {
     }
     writeln!(f, "}}").unwrap();
     println!("wrote results/BENCH_shard.json");
+
+    // Transport JSON (Direct vs Channel deltas/sec + bytes per delta, per
+    // batch window).
+    let mut f = std::fs::File::create("results/BENCH_transport.json").unwrap();
+    writeln!(f, "{{").unwrap();
+    for (i, (key, value)) in transport_json.iter().enumerate() {
+        let comma = if i + 1 == transport_json.len() { "" } else { "," };
+        writeln!(f, "  \"{key}\": {value:.1}{comma}").unwrap();
+    }
+    writeln!(f, "}}").unwrap();
+    println!("wrote results/BENCH_transport.json");
 }

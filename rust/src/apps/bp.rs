@@ -12,7 +12,34 @@
 use super::mrf::{normalize, BpEdge, BpVertex, EdgePotential};
 use crate::engine::{UpdateContext, UpdateFn};
 use crate::consistency::Scope;
+use crate::transport::{put_f32, put_f32s, put_u32, ByteReader, VertexCodec};
 use std::sync::Arc;
+
+/// Ghost-sync wire encoding of a BP vertex: both distributions
+/// length-prefixed, then the observation and the per-axis learning stats.
+/// Lets BP run on the sharded engine's serializing transport backends.
+impl VertexCodec for BpVertex {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_f32s(buf, &self.potential);
+        put_f32s(buf, &self.belief);
+        put_u32(buf, self.observed);
+        for &s in &self.axis_stats {
+            put_f32(buf, s);
+        }
+    }
+
+    fn decode(bytes: &[u8]) -> Option<BpVertex> {
+        let mut r = ByteReader::new(bytes);
+        let potential = r.f32s()?;
+        let belief = r.f32s()?;
+        let observed = r.u32()?;
+        let mut axis_stats = [0.0f32; 3];
+        for s in axis_stats.iter_mut() {
+            *s = r.f32()?;
+        }
+        r.is_empty().then_some(BpVertex { potential, belief, observed, axis_stats })
+    }
+}
 
 /// SDT key for the learnable Laplace smoothing parameters ([f64; 3]).
 pub const LAMBDA_KEY: &str = "lambda";

@@ -22,6 +22,7 @@ use super::mrf::EdgePotential;
 use crate::consistency::Scope;
 use crate::engine::{UpdateContext, UpdateFn};
 use crate::scheduler::FuncId;
+use crate::transport::{put_u32, put_u32s, put_u8, ByteReader, VertexCodec};
 use crate::util::Pcg32;
 use std::sync::Mutex;
 
@@ -60,6 +61,27 @@ impl HasColor for GibbsVertex {
     }
     fn set_color(&mut self, c: u32) {
         self.color = c;
+    }
+}
+
+/// Ghost-sync wire encoding of a Gibbs vertex: the unary potential, the
+/// current sample, the visit counts, and the color. Lets the chromatic
+/// sampler run on the sharded engine's serializing transport backends.
+impl VertexCodec for GibbsVertex {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        crate::transport::put_f32s(buf, &self.potential);
+        put_u8(buf, self.value);
+        put_u32s(buf, &self.counts);
+        put_u32(buf, self.color);
+    }
+
+    fn decode(bytes: &[u8]) -> Option<GibbsVertex> {
+        let mut r = ByteReader::new(bytes);
+        let potential = r.f32s()?;
+        let value = r.u8()?;
+        let counts = r.u32s()?;
+        let color = r.u32()?;
+        r.is_empty().then_some(GibbsVertex { potential, value, counts, color })
     }
 }
 
@@ -262,8 +284,12 @@ mod tests {
         color_graph(&mut seq);
         let classes = color_classes(&mut seq);
         let sets = chromatic_sets(&classes, sweeps, 0);
-        let sched =
-            SetScheduler::planned(&sets, 1, |v| seq.neighbors(v), ConsistencyModel::Edge);
+        let sched = SetScheduler::planned(
+            &sets,
+            seq.num_vertices(),
+            |v| seq.neighbors(v),
+            ConsistencyModel::Edge,
+        );
         let upd = GibbsUpdate::new(2, Arc::new(tables.clone()), 1, 9);
         let seq_report = Program::new()
             .update_fn(&upd)
@@ -282,7 +308,7 @@ mod tests {
             let sets = chromatic_sets(&classes, sweeps, 0);
             let sched = SetScheduler::planned(
                 &sets,
-                4,
+                g.num_vertices(),
                 |v| g.neighbors(v),
                 ConsistencyModel::Edge,
             );

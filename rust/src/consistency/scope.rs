@@ -3,7 +3,7 @@
 //! update function, with the consistency-model locks held for its lifetime.
 
 use super::{Conflict, ConsistencyModel, LockTable, ScopeGuard};
-use crate::graph::{DataGraph, Edge, EdgeId, VertexId};
+use crate::graph::{DataGraph, Edge, EdgeId, LocalRef, ShardedGraph, VertexId};
 
 /// Locked neighborhood view passed to update functions:
 /// `D_{S_v} <- f(D_{S_v}, T)`.
@@ -210,6 +210,63 @@ impl<'a, V, E> Scope<'a, V, E> {
         self.assert_in_scope_edge(e);
         // SAFETY: as above.
         unsafe { self.graph.edge_data_mut_unchecked(e) }
+    }
+}
+
+impl<'a, V: Clone, E> Scope<'a, V, E> {
+    /// Bounded-staleness admission check (sharded engine): for every ghost
+    /// replica this scope would read on `shard`, force a pull-on-demand
+    /// from the owner's master data if the replica lags the master by more
+    /// than `bound` versions — so an update function never observes a
+    /// replica older than `bound` versions, regardless of how lazily the
+    /// transport flushes. `bound = 0` forces replicas exactly current at
+    /// every admission (the synchronous semantics of the per-update
+    /// flush).
+    ///
+    /// Must run with the scope's neighbor locks held (Edge/Full models):
+    /// the held read locks both make the master read safe and freeze the
+    /// master version, so the post-check staleness really is what the
+    /// update function reads. Returns `(pulls performed, max staleness
+    /// actually observed by this reader)`.
+    pub(crate) fn refresh_stale_ghosts(
+        &self,
+        sharded: &ShardedGraph<V>,
+        shard: usize,
+        bound: u64,
+    ) -> (u64, u64) {
+        debug_assert!(
+            self.model.excludes_neighbors(),
+            "staleness admission requires neighbor locks (Edge/Full)"
+        );
+        let sh = sharded.shard(shard);
+        let mut pulls = 0u64;
+        let mut max_lag = 0u64;
+        for &code in sh.local_neighbors(self.center) {
+            let LocalRef::Ghost(gi) = sh.resolve(code) else { continue };
+            let entry = sh.ghost(gi as usize);
+            let u = entry.global();
+            let lag = sharded.master_version(u).saturating_sub(entry.version());
+            let observed = if lag > bound {
+                // SAFETY: Edge/Full scopes hold (at least) a read lock on
+                // every neighbor, including `u`.
+                let data = unsafe { self.graph.vertex_data_unchecked(u) };
+                entry.store_versioned(data, sharded.master_version(u));
+                pulls += 1;
+                // Re-measure after the pull: this is the staleness the
+                // update function actually reads. The held read lock
+                // freezes the master version, so anything above `bound`
+                // here means the pull machinery itself is broken — the
+                // reported maximum is a real measurement, not an echo of
+                // the branch condition.
+                sharded.master_version(u).saturating_sub(entry.version())
+            } else {
+                lag
+            };
+            if observed > max_lag {
+                max_lag = observed;
+            }
+        }
+        (pulls, max_lag)
     }
 }
 

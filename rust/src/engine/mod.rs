@@ -21,7 +21,7 @@ pub mod trace;
 
 pub use program::{Engine, Program};
 pub use sequential::SequentialEngine;
-pub use sharded::ShardedEngine;
+pub use sharded::{ChannelShardedEngine, ShardedEngine};
 pub use threaded::ThreadedEngine;
 
 use crate::consistency::{ConsistencyModel, Scope};
@@ -141,6 +141,25 @@ pub struct EngineConfig {
     /// run's steal counters dominate its retries (skewed loads where
     /// one-at-a-time stealing keeps thieves coming back).
     pub steal_half: bool,
+    /// Auto-select threshold for steal-half: once a worker has dispatched
+    /// enough tasks, it flips its own steal scans to steal-half mid-run if
+    /// its observed steals exceed this fraction of its pops (skew it can
+    /// measure itself). `f64::INFINITY` disables the auto-flip; the
+    /// explicit [`EngineConfig::steal_half`] override forces half-stealing
+    /// from the start. Flips are counted in
+    /// [`ContentionStats::auto_steal_half_flips`].
+    pub steal_half_auto: f64,
+    /// Ghost staleness bound `s` for the sharded engine's bounded-staleness
+    /// mode: a scope about to read a ghost replica more than `s` master
+    /// versions behind forces a pull-on-demand first. `0` (default)
+    /// reproduces the synchronous read semantics of the per-update flush.
+    pub ghost_staleness: u64,
+    /// Ghost delta-batcher sync window (boundary-update records per flush)
+    /// for the sharded engine. `1` (default) flushes synchronously per
+    /// boundary update — PR 3 semantics; larger windows coalesce repeated
+    /// writes to the same vertex and ship fewer, fatter deltas, with
+    /// read freshness guarded by [`EngineConfig::ghost_staleness`].
+    pub ghost_batch: usize,
 }
 
 impl Default for EngineConfig {
@@ -153,6 +172,9 @@ impl Default for EngineConfig {
             escalate_after: 8,
             shards: 0,
             steal_half: false,
+            steal_half_auto: 0.25,
+            ghost_staleness: 0,
+            ghost_batch: 1,
         }
     }
 }
@@ -189,6 +211,21 @@ impl EngineConfig {
 
     pub fn with_steal_half(mut self, on: bool) -> Self {
         self.steal_half = on;
+        self
+    }
+
+    pub fn with_steal_half_auto(mut self, frac: f64) -> Self {
+        self.steal_half_auto = frac;
+        self
+    }
+
+    pub fn with_ghost_staleness(mut self, bound: u64) -> Self {
+        self.ghost_staleness = bound;
+        self
+    }
+
+    pub fn with_ghost_batch(mut self, window: usize) -> Self {
+        self.ghost_batch = window;
         self
     }
 }
@@ -244,6 +281,28 @@ pub struct ContentionStats {
     /// was granted but the local half conflicted, so the worker parked the
     /// held remote locks and went on to other work (sharded engine).
     pub pipelined_stalls: u64,
+    /// Ghost deltas handed to the transport (post-coalescing; sharded
+    /// engine). With the default sync window of 1 this equals
+    /// [`ContentionStats::boundary_updates`].
+    pub deltas_sent: u64,
+    /// Boundary-vertex writes absorbed into an existing batcher slot
+    /// instead of becoming their own delta (the coalescing win).
+    pub deltas_coalesced: u64,
+    /// Serialized bytes enqueued by the transport (zero for the
+    /// direct-memory backend, which applies in place).
+    pub bytes_shipped: u64,
+    /// Pull-on-demand refreshes forced by the bounded-staleness admission
+    /// check ([`EngineConfig::ghost_staleness`]): a reader found a ghost
+    /// replica lagging past the bound and copied the master in before its
+    /// update ran.
+    pub staleness_pulls: u64,
+    /// Largest replica staleness (in master versions) any update function
+    /// actually observed after the admission check — never exceeds
+    /// [`EngineConfig::ghost_staleness`] on Edge/Full-model runs.
+    pub max_ghost_staleness: u64,
+    /// Workers that auto-flipped their steal scans to steal-half mid-run
+    /// (observed steals crossed [`EngineConfig::steal_half_auto`]).
+    pub auto_steal_half_flips: u64,
     /// Per-worker conflict counts (index = worker id).
     pub per_worker_conflicts: Vec<u64>,
     /// Per-worker deferral counts (index = worker id).
@@ -301,9 +360,18 @@ mod tests {
         let c = EngineConfig::default()
             .with_workers(8)
             .with_model(ConsistencyModel::Full)
-            .with_max_updates(100);
+            .with_max_updates(100)
+            .with_ghost_staleness(4)
+            .with_ghost_batch(16)
+            .with_steal_half_auto(0.5);
         assert_eq!(c.workers, 8);
         assert_eq!(c.model, ConsistencyModel::Full);
         assert_eq!(c.max_updates, Some(100));
+        assert_eq!(c.ghost_staleness, 4);
+        assert_eq!(c.ghost_batch, 16);
+        assert_eq!(c.steal_half_auto, 0.5);
+        let d = EngineConfig::default();
+        assert_eq!(d.ghost_staleness, 0, "synchronous semantics by default");
+        assert_eq!(d.ghost_batch, 1, "per-update flush by default");
     }
 }

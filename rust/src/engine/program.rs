@@ -195,6 +195,32 @@ impl<'a, V, E> Program<'a, V, E> {
         self
     }
 
+    /// Auto-select steal-half: flip a worker's steal scans to steal-half
+    /// mid-run once its observed steals exceed this fraction of its pops
+    /// (see [`EngineConfig::steal_half_auto`]; `f64::INFINITY` disables).
+    pub fn steal_half_auto(mut self, frac: f64) -> Self {
+        self.config.steal_half_auto = frac;
+        self
+    }
+
+    /// Ghost staleness bound for the sharded back-end: readers of a ghost
+    /// replica more than `s` master versions behind force a pull before
+    /// their scope runs; `s = 0` (default) reproduces the synchronous
+    /// per-update flush semantics (see [`EngineConfig::ghost_staleness`]).
+    pub fn ghost_staleness(mut self, s: u64) -> Self {
+        self.config.ghost_staleness = s;
+        self
+    }
+
+    /// Ghost delta-batcher sync window for the sharded back-end: flush
+    /// after this many boundary-update records, coalescing repeated writes
+    /// to the same vertex within the window (see
+    /// [`EngineConfig::ghost_batch`]; `1` = synchronous per-update flush).
+    pub fn ghost_batch(mut self, window: usize) -> Self {
+        self.config.ghost_batch = window;
+        self
+    }
+
     /// Sequential back-end: run on-demand syncs every N updates (0 = only
     /// at the end).
     pub fn sync_every(mut self, every: u64) -> Self {

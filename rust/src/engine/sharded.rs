@@ -25,14 +25,23 @@
 //!   deferred). The worker never blocks while holding — the deadlock-free
 //!   discipline of the non-blocking core is preserved.
 //!
-//! After every boundary update, the still-write-locked vertex data is
-//! propagated to the remote shards' ghost replicas
-//! ([`crate::graph::ShardedGraph::sync_vertex_from`], counted in
-//! [`ContentionStats::ghost_syncs`]) — the emulated network flush a
-//! distributed deployment would issue at scope release.
+//! Ghost propagation flows through the pluggable **transport layer**
+//! ([`crate::transport`]): after a boundary update the owner bumps the
+//! vertex's master version and records a versioned delta in its worker's
+//! [`DeltaBatcher`]; the batcher coalesces repeated writes within a sync
+//! window and flushes through a [`GhostTransport`] backend — the in-place
+//! [`DirectTransport`] for [`ShardedEngine`], the serializing
+//! [`ChannelTransport`] for [`ChannelShardedEngine`] — on window close,
+//! batch-size threshold, cross-shard handoff, idle, and worker exit.
+//! Read freshness is guarded by the **bounded-staleness** admission check:
+//! a scope about to read a ghost replica more than
+//! [`EngineConfig::ghost_staleness`] master versions behind forces a
+//! pull-on-demand first (`s = 0` reproduces the synchronous per-update
+//! flush semantics).
 
 use super::threaded::{
-    tune_attempts, ThreadedEngine, LOCAL_DEQUE_CAP, START_ATTEMPTS, STEAL_HALF_MAX,
+    should_auto_steal_half, tune_attempts, ThreadedEngine, LOCAL_DEQUE_CAP, START_ATTEMPTS,
+    STEAL_HALF_MAX,
 };
 use super::{
     ContentionStats, Engine, EngineConfig, Program, RunReport, StopReason, TerminationFn,
@@ -42,6 +51,9 @@ use crate::consistency::{LockTable, Scope, SplitScope};
 use crate::graph::{DataGraph, ShardedGraph};
 use crate::scheduler::{Injector, Scheduler, Task, WorkStealingDeque};
 use crate::sdt::{Sdt, SyncOp};
+use crate::transport::{
+    ChannelTransport, DeltaBatcher, DirectTransport, GhostTransport, VertexCodec,
+};
 use crate::util::Timer;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::time::Duration;
@@ -56,6 +68,11 @@ const STOP_LIMIT: u8 = 2;
 /// halves always make progress (both eventually release and retry).
 const PENDING_ATTEMPTS: u32 = 16;
 
+/// Drain incoming transport queues every this many completed updates per
+/// worker (on top of the idle/handoff/final drains): bounds a queueing
+/// backend's buffers when workers never go idle.
+const DRAIN_EVERY: u64 = 64;
+
 /// A split acquisition whose remote half is held while the local half was
 /// busy: the worker carries it across loop iterations, doing other work in
 /// between (the Locking-Engine pipeline).
@@ -65,8 +82,8 @@ struct PendingAcquire<'a> {
     attempts: u32,
 }
 
-/// Sharded engine back-end. `shards = 0` defers to
-/// [`EngineConfig::shards`] at run time.
+/// Sharded engine back-end over the in-place [`DirectTransport`].
+/// `shards = 0` defers to [`EngineConfig::shards`] at run time.
 #[derive(Debug, Clone, Default)]
 pub struct ShardedEngine {
     pub shards: usize,
@@ -77,9 +94,10 @@ impl ShardedEngine {
         ShardedEngine { shards }
     }
 
-    /// Run the program to completion over `k` shards. Worker threads:
-    /// `max(1, config.workers / k)` per shard, so every shard always has
-    /// its own worker set.
+    /// Run the program to completion over `k` shards with the
+    /// direct-memory ghost transport. Worker threads: `max(1,
+    /// config.workers / k)` per shard, so every shard always has its own
+    /// worker set.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn run<V: Clone + Send + Sync, E: Send + Sync>(
         &self,
@@ -93,373 +111,488 @@ impl ShardedEngine {
     ) -> RunReport {
         let requested = if self.shards > 0 { self.shards } else { config.shards };
         let sharded = ShardedGraph::new(graph, requested.max(1));
-        let k = sharded.num_shards();
-        let locks = LockTable::new(graph.num_vertices());
         let graph: &DataGraph<V, E> = graph;
-        let sharded = &sharded;
+        let transport = DirectTransport::new(&sharded);
+        run_core(graph, &sharded, &transport, scheduler, fns, sdt, syncs, terminators, config)
+    }
+}
 
-        let timer = Timer::start();
-        let stop = AtomicU8::new(STOP_NONE);
-        let engine_done = AtomicBool::new(false);
-        let inflight = AtomicUsize::new(0);
-        let total_updates = AtomicU64::new(0);
-        let per_shard = (config.workers / k).max(1);
-        let workers = per_shard * k;
-        let per_worker: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
-        let per_conflicts: Vec<AtomicU64> =
-            (0..workers).map(|_| AtomicU64::new(0)).collect();
-        let per_deferrals: Vec<AtomicU64> =
-            (0..workers).map(|_| AtomicU64::new(0)).collect();
-        let total_retries = AtomicU64::new(0);
-        let total_steals = AtomicU64::new(0);
-        let total_escalations = AtomicU64::new(0);
-        let total_affinity = AtomicU64::new(0);
-        let total_ghost_syncs = AtomicU64::new(0);
-        let total_boundary = AtomicU64::new(0);
-        let total_handoffs = AtomicU64::new(0);
-        let total_stalls = AtomicU64::new(0);
-        let syncs_run = AtomicU64::new(0);
-        // Per-worker retry deques (deferred tasks, always shard-local) and
-        // per-shard overflow injectors.
-        let retry: Vec<WorkStealingDeque<Task>> =
-            (0..workers).map(|_| WorkStealingDeque::new(LOCAL_DEQUE_CAP)).collect();
-        let overflows: Vec<Injector<Task>> =
-            (0..k).map(|_| Injector::new(LOCAL_DEQUE_CAP * per_shard)).collect();
-        // Cross-shard handoff rings: tasks popped by the wrong shard's
-        // worker ride these to the owner shard (the emulated network hop).
-        let rings: Vec<Injector<Task>> =
-            (0..k).map(|_| Injector::new(LOCAL_DEQUE_CAP * per_shard)).collect();
-        let pending_retries = AtomicUsize::new(0);
-        let defer_age: Vec<AtomicU32> =
-            (0..graph.num_vertices()).map(|_| AtomicU32::new(0)).collect();
-        let workers_remaining = AtomicUsize::new(workers);
+/// Sharded engine back-end whose ghost traffic rides the serializing
+/// [`ChannelTransport`] — every delta is byte-encoded through the vertex's
+/// [`VertexCodec`], queued on a per-shard-pair channel, and decoded at the
+/// destination, simulating a multi-process boundary. Requires the vertex
+/// type to implement [`VertexCodec`]; everything else (scheduling,
+/// locking, batching, staleness) is identical to [`ShardedEngine`].
+#[derive(Debug, Clone, Default)]
+pub struct ChannelShardedEngine {
+    pub shards: usize,
+}
 
-        std::thread::scope(|s| {
-            let has_periodic = syncs.iter().any(|op| op.interval.is_some());
-            if has_periodic {
-                let engine_done = &engine_done;
-                let syncs_run = &syncs_run;
-                let locks = &locks;
-                s.spawn(move || {
-                    let mut last_run: Vec<Timer> =
-                        syncs.iter().map(|_| Timer::start()).collect();
-                    while !engine_done.load(Ordering::Acquire) {
-                        for (i, op) in syncs.iter().enumerate() {
-                            let Some(interval) = op.interval else { continue };
-                            if last_run[i].elapsed() >= interval {
-                                ThreadedEngine::locked_sync(graph, locks, op, sdt);
-                                syncs_run.fetch_add(1, Ordering::Relaxed);
-                                last_run[i] = Timer::start();
-                            }
+impl ChannelShardedEngine {
+    pub fn new(shards: usize) -> ChannelShardedEngine {
+        ChannelShardedEngine { shards }
+    }
+}
+
+impl<V, E> Engine<V, E> for ChannelShardedEngine
+where
+    V: VertexCodec + Clone + Send + Sync,
+    E: Send + Sync,
+{
+    fn name(&self) -> &'static str {
+        "sharded-channel"
+    }
+
+    fn execute(
+        &self,
+        program: &Program<'_, V, E>,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport {
+        let config = &program.config;
+        let requested = if self.shards > 0 { self.shards } else { config.shards };
+        let sharded = ShardedGraph::new(graph, requested.max(1));
+        let graph: &DataGraph<V, E> = graph;
+        let transport = ChannelTransport::new(&sharded);
+        run_core(
+            graph,
+            &sharded,
+            &transport,
+            scheduler,
+            &program.fns,
+            sdt,
+            &program.syncs,
+            &program.terminators,
+            config,
+        )
+    }
+}
+
+/// Close a worker's sync window: ship every batched delta and fold the
+/// receipt into the worker's transport counters. The single accounting
+/// point for all four flush triggers (window close, handoff, idle, exit).
+fn flush_window<V>(
+    batcher: &mut DeltaBatcher<V>,
+    shard: usize,
+    transport: &dyn GhostTransport<V>,
+    deltas_sent: &mut u64,
+    ghost_syncs: &mut u64,
+    bytes_shipped: &mut u64,
+) {
+    if batcher.is_empty() {
+        return;
+    }
+    let r = batcher.flush(shard, transport);
+    *deltas_sent += r.deltas;
+    *ghost_syncs += r.replicas;
+    *bytes_shipped += r.bytes;
+}
+
+/// The shared worker-loop core: every ghost write leaves through
+/// `transport`, every ghost read is staleness-checked at scope admission.
+#[allow(clippy::too_many_arguments)]
+fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
+    graph: &DataGraph<V, E>,
+    sharded: &ShardedGraph<V>,
+    transport: &dyn GhostTransport<V>,
+    scheduler: &dyn Scheduler,
+    fns: &[&dyn UpdateFn<V, E>],
+    sdt: &Sdt,
+    syncs: &[SyncOp<V>],
+    terminators: &[TerminationFn],
+    config: &EngineConfig,
+) -> RunReport {
+    let k = sharded.num_shards();
+    let locks = LockTable::new(graph.num_vertices());
+    // Synchronous mode over an apply-at-send backend flushes every replica
+    // under the owner's still-held write lock, so admission can provably
+    // never observe lag — skip the per-ghost staleness scan (keeps the
+    // default configuration at PR 3's per-boundary-update cost).
+    let staleness_scan = !(transport.applies_at_send()
+        && config.ghost_batch <= 1
+        && config.ghost_staleness == 0);
+
+    let timer = Timer::start();
+    let stop = AtomicU8::new(STOP_NONE);
+    let engine_done = AtomicBool::new(false);
+    let inflight = AtomicUsize::new(0);
+    let total_updates = AtomicU64::new(0);
+    let per_shard = (config.workers / k).max(1);
+    let workers = per_shard * k;
+    let per_worker: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
+    let per_conflicts: Vec<AtomicU64> =
+        (0..workers).map(|_| AtomicU64::new(0)).collect();
+    let per_deferrals: Vec<AtomicU64> =
+        (0..workers).map(|_| AtomicU64::new(0)).collect();
+    let total_retries = AtomicU64::new(0);
+    let total_steals = AtomicU64::new(0);
+    let total_escalations = AtomicU64::new(0);
+    let total_affinity = AtomicU64::new(0);
+    let total_ghost_syncs = AtomicU64::new(0);
+    let total_boundary = AtomicU64::new(0);
+    let total_handoffs = AtomicU64::new(0);
+    let total_stalls = AtomicU64::new(0);
+    let total_deltas = AtomicU64::new(0);
+    let total_coalesced = AtomicU64::new(0);
+    let total_bytes = AtomicU64::new(0);
+    let total_pulls = AtomicU64::new(0);
+    let total_max_lag = AtomicU64::new(0);
+    let total_auto_flips = AtomicU64::new(0);
+    let syncs_run = AtomicU64::new(0);
+    // Per-worker retry deques (deferred tasks, always shard-local) and
+    // per-shard overflow injectors.
+    let retry: Vec<WorkStealingDeque<Task>> =
+        (0..workers).map(|_| WorkStealingDeque::new(LOCAL_DEQUE_CAP)).collect();
+    let overflows: Vec<Injector<Task>> =
+        (0..k).map(|_| Injector::new(LOCAL_DEQUE_CAP * per_shard)).collect();
+    // Cross-shard handoff rings: tasks popped by the wrong shard's
+    // worker ride these to the owner shard (the emulated network hop).
+    let rings: Vec<Injector<Task>> =
+        (0..k).map(|_| Injector::new(LOCAL_DEQUE_CAP * per_shard)).collect();
+    let pending_retries = AtomicUsize::new(0);
+    let defer_age: Vec<AtomicU32> =
+        (0..graph.num_vertices()).map(|_| AtomicU32::new(0)).collect();
+    let workers_remaining = AtomicUsize::new(workers);
+
+    std::thread::scope(|s| {
+        let has_periodic = syncs.iter().any(|op| op.interval.is_some());
+        if has_periodic {
+            let engine_done = &engine_done;
+            let syncs_run = &syncs_run;
+            let locks = &locks;
+            s.spawn(move || {
+                let mut last_run: Vec<Timer> =
+                    syncs.iter().map(|_| Timer::start()).collect();
+                while !engine_done.load(Ordering::Acquire) {
+                    for (i, op) in syncs.iter().enumerate() {
+                        let Some(interval) = op.interval else { continue };
+                        if last_run[i].elapsed() >= interval {
+                            ThreadedEngine::locked_sync(graph, locks, op, sdt);
+                            syncs_run.fetch_add(1, Ordering::Relaxed);
+                            last_run[i] = Timer::start();
                         }
-                        std::thread::sleep(Duration::from_micros(200));
                     }
-                });
-            }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            });
+        }
 
-            for w in 0..workers {
-                let my_shard = w / per_shard;
-                let stop = &stop;
-                let inflight = &inflight;
-                let total_updates = &total_updates;
-                let per_worker = &per_worker;
-                let per_conflicts = &per_conflicts;
-                let per_deferrals = &per_deferrals;
-                let total_retries = &total_retries;
-                let total_steals = &total_steals;
-                let total_escalations = &total_escalations;
-                let total_affinity = &total_affinity;
-                let total_ghost_syncs = &total_ghost_syncs;
-                let total_boundary = &total_boundary;
-                let total_handoffs = &total_handoffs;
-                let total_stalls = &total_stalls;
-                let retry = &retry;
-                let overflows = &overflows;
-                let rings = &rings;
-                let pending_retries = &pending_retries;
-                let defer_age = &defer_age;
-                let workers_remaining = &workers_remaining;
-                let engine_done = &engine_done;
-                let locks = &locks;
-                s.spawn(move || {
-                    let mut local_updates: u64 = 0;
-                    let mut conflicts: u64 = 0;
-                    let mut deferrals: u64 = 0;
-                    let mut retries: u64 = 0;
-                    let mut steals: u64 = 0;
-                    let mut escalations: u64 = 0;
-                    let mut affinity: u64 = 0;
-                    let mut ghost_syncs: u64 = 0;
-                    let mut boundary_updates: u64 = 0;
-                    let mut handoffs: u64 = 0;
-                    let mut stalls: u64 = 0;
-                    let mut idle_spins: u32 = 0;
-                    // Interior-path adaptive ladder (worker-local).
-                    let mut attempts: u32 = START_ATTEMPTS;
-                    let mut window_tasks: u32 = 0;
-                    let mut window_deferrals: u32 = 0;
-                    let mut skip_local_once = false;
-                    // The one parked split acquisition this worker may hold.
-                    let mut pending: Option<PendingAcquire<'_>> = None;
-                    let mut ctx = UpdateContext::new(sdt, w);
-                    loop {
-                        if stop.load(Ordering::Acquire) != STOP_NONE {
-                            break;
-                        }
-                        let mut run_now: Option<(Task, Scope<'_, V, E>)> = None;
-                        let mut run_from_retry = false;
+        for w in 0..workers {
+            let my_shard = w / per_shard;
+            let stop = &stop;
+            let inflight = &inflight;
+            let total_updates = &total_updates;
+            let per_worker = &per_worker;
+            let per_conflicts = &per_conflicts;
+            let per_deferrals = &per_deferrals;
+            let total_retries = &total_retries;
+            let total_steals = &total_steals;
+            let total_escalations = &total_escalations;
+            let total_affinity = &total_affinity;
+            let total_ghost_syncs = &total_ghost_syncs;
+            let total_boundary = &total_boundary;
+            let total_handoffs = &total_handoffs;
+            let total_stalls = &total_stalls;
+            let total_deltas = &total_deltas;
+            let total_coalesced = &total_coalesced;
+            let total_bytes = &total_bytes;
+            let total_pulls = &total_pulls;
+            let total_max_lag = &total_max_lag;
+            let total_auto_flips = &total_auto_flips;
+            let retry = &retry;
+            let overflows = &overflows;
+            let rings = &rings;
+            let pending_retries = &pending_retries;
+            let defer_age = &defer_age;
+            let workers_remaining = &workers_remaining;
+            let engine_done = &engine_done;
+            let locks = &locks;
+            let transport = transport;
+            let sharded = sharded;
+            s.spawn(move || {
+                let mut local_updates: u64 = 0;
+                let mut conflicts: u64 = 0;
+                let mut deferrals: u64 = 0;
+                let mut retries: u64 = 0;
+                let mut steals: u64 = 0;
+                let mut escalations: u64 = 0;
+                let mut affinity: u64 = 0;
+                let mut ghost_syncs: u64 = 0;
+                let mut boundary_updates: u64 = 0;
+                let mut handoffs: u64 = 0;
+                let mut stalls: u64 = 0;
+                let mut deltas_sent: u64 = 0;
+                let mut deltas_coalesced: u64 = 0;
+                let mut bytes_shipped: u64 = 0;
+                let mut staleness_pulls: u64 = 0;
+                let mut max_lag: u64 = 0;
+                let mut idle_spins: u32 = 0;
+                // Interior-path adaptive ladder (worker-local).
+                let mut attempts: u32 = START_ATTEMPTS;
+                let mut window_tasks: u32 = 0;
+                let mut window_deferrals: u32 = 0;
+                let mut skip_local_once = false;
+                // Steal-policy auto-select (worker-local).
+                let mut pops: u64 = 0;
+                let mut use_steal_half = config.steal_half;
+                let mut auto_flips: u64 = 0;
+                // The one parked split acquisition this worker may hold.
+                let mut pending: Option<PendingAcquire<'_>> = None;
+                // Per-worker delta batcher: the ghost-sync window.
+                let mut batcher: DeltaBatcher<V> = DeltaBatcher::new(config.ghost_batch);
+                let mut ctx = UpdateContext::new(sdt, w);
+                loop {
+                    if stop.load(Ordering::Acquire) != STOP_NONE {
+                        break;
+                    }
+                    let mut run_now: Option<(Task, Scope<'_, V, E>)> = None;
+                    let mut run_from_retry = false;
 
-                        // Pipelined completion: retry the parked split's
-                        // local half before anything else (its remote locks
-                        // are blocking other shards' progress).
-                        if let Some(PendingAcquire { task, split, attempts: tries }) =
-                            pending.take()
-                        {
-                            match split.try_complete(graph.lock_neighbors(task.vertex)) {
-                                Ok(guard) => {
-                                    run_now = Some((
-                                        task,
-                                        Scope::from_guard(
-                                            graph,
-                                            task.vertex,
-                                            config.model,
-                                            guard,
-                                        ),
-                                    ));
-                                    // a stalled dispatch is not a clean
-                                    // affinity hit
-                                    run_from_retry = true;
-                                }
-                                Err((split, _)) => {
-                                    conflicts += 1;
-                                    if tries + 1 >= PENDING_ATTEMPTS {
-                                        // Give up the pipeline slot: release
-                                        // the remote half, defer the task.
-                                        drop(split);
-                                        deferrals += 1;
-                                        defer_age[task.vertex as usize]
-                                            .fetch_add(1, Ordering::Relaxed);
-                                        pending_retries.fetch_add(1, Ordering::AcqRel);
-                                        overflows[my_shard].push(task);
-                                    } else {
-                                        pending = Some(PendingAcquire {
-                                            task,
-                                            split,
-                                            attempts: tries + 1,
-                                        });
-                                    }
-                                }
-                            }
-                        }
-
-                        if run_now.is_none() {
-                            // Task sources: own retry deque (LIFO), the
-                            // shard's handoff ring (already in flight),
-                            // the scheduler, then shard-local stealing.
-                            let mut task: Option<Task> = None;
-                            let mut from_retry = false;
-                            if !skip_local_once {
-                                if let Some(t) = retry[w].pop() {
-                                    task = Some(t);
-                                    from_retry = true;
-                                }
-                            }
-                            if task.is_none() {
-                                task = rings[my_shard].pop();
-                            }
-                            if task.is_none() {
-                                // Optimistic in-flight count before the pop
-                                // (same drain-race discipline as the
-                                // threaded engine).
-                                inflight.fetch_add(1, Ordering::AcqRel);
-                                match scheduler.next_task(w) {
-                                    Some(t) => task = Some(t),
-                                    None => {
-                                        inflight.fetch_sub(1, Ordering::AcqRel);
-                                    }
-                                }
-                            }
-                            if task.is_none() && skip_local_once {
-                                if let Some(t) = retry[w].pop() {
-                                    task = Some(t);
-                                    from_retry = true;
-                                }
-                            }
-                            if task.is_none() && pending_retries.load(Ordering::Acquire) > 0
-                            {
-                                if let Some(t) = overflows[my_shard].pop() {
-                                    task = Some(t);
-                                    from_retry = true;
-                                } else {
-                                    let base = my_shard * per_shard;
-                                    for i in 1..per_shard {
-                                        let peer = base + (w - base + i) % per_shard;
-                                        let got = if config.steal_half {
-                                            let (first, moved) = retry[peer].steal_half(
-                                                STEAL_HALF_MAX,
-                                                |t| {
-                                                    if let Err(t) = retry[w].push(t) {
-                                                        overflows[my_shard].push(t);
-                                                    }
-                                                },
-                                            );
-                                            steals += moved as u64;
-                                            first
-                                        } else {
-                                            retry[peer].steal()
-                                        };
-                                        if let Some(t) = got {
-                                            steals += 1;
-                                            task = Some(t);
-                                            from_retry = true;
-                                            break;
-                                        }
-                                    }
-                                }
-                            }
-                            skip_local_once = false;
-                            let Some(task) = task else {
-                                if inflight.load(Ordering::Acquire) == 0
-                                    && scheduler.is_done()
-                                {
-                                    break;
-                                }
-                                idle_spins += 1;
-                                if idle_spins < 64 {
-                                    std::hint::spin_loop();
-                                } else if idle_spins < 256 {
-                                    std::thread::yield_now();
-                                } else {
-                                    std::thread::sleep(Duration::from_micros(50));
-                                }
-                                continue;
-                            };
-                            idle_spins = 0;
-                            if from_retry {
-                                retries += 1;
-                                pending_retries.fetch_sub(1, Ordering::AcqRel);
-                            }
-
-                            // Cross-shard handoff: not ours — forward to the
-                            // owner shard's ring (the task stays in flight).
-                            let owner_shard = sharded.owner_of(task.vertex);
-                            if owner_shard != my_shard {
-                                handoffs += 1;
-                                rings[owner_shard].push(task);
-                                continue;
-                            }
-
-                            let vidx = task.vertex as usize;
-                            let age = defer_age[vidx].load(Ordering::Relaxed);
-                            if age >= config.escalate_after {
-                                // Fairness escalation is a *blocking*
-                                // acquisition — never enter it while holding
-                                // a pending split's remote locks (that would
-                                // reintroduce hold-and-wait): abandon the
-                                // pending first.
-                                if let Some(PendingAcquire { task: ptask, split, .. }) =
-                                    pending.take()
-                                {
-                                    drop(split);
-                                    deferrals += 1;
-                                    defer_age[ptask.vertex as usize]
-                                        .fetch_add(1, Ordering::Relaxed);
-                                    pending_retries.fetch_add(1, Ordering::AcqRel);
-                                    overflows[my_shard].push(ptask);
-                                }
-                                escalations += 1;
+                    // Pipelined completion: retry the parked split's
+                    // local half before anything else (its remote locks
+                    // are blocking other shards' progress).
+                    if let Some(PendingAcquire { task, split, attempts: tries }) =
+                        pending.take()
+                    {
+                        match split.try_complete(graph.lock_neighbors(task.vertex)) {
+                            Ok(guard) => {
                                 run_now = Some((
                                     task,
-                                    Scope::lock(graph, locks, task.vertex, config.model),
-                                ));
-                                run_from_retry = from_retry;
-                            } else if pending.is_none()
-                                && config.model.excludes_neighbors()
-                                && sharded.is_boundary(task.vertex)
-                            {
-                                // Pipelined split acquisition: request the
-                                // remote half first.
-                                match locks.try_lock_split(
-                                    task.vertex,
-                                    graph.lock_neighbors(task.vertex),
-                                    config.model,
-                                    |u| sharded.owner_of(u) != my_shard,
-                                ) {
-                                    Ok(split) => {
-                                        match split.try_complete(
-                                            graph.lock_neighbors(task.vertex),
-                                        ) {
-                                            Ok(guard) => {
-                                                run_now = Some((
-                                                    task,
-                                                    Scope::from_guard(
-                                                        graph,
-                                                        task.vertex,
-                                                        config.model,
-                                                        guard,
-                                                    ),
-                                                ));
-                                                run_from_retry = from_retry;
-                                            }
-                                            Err((split, _)) => {
-                                                // Remote half granted, local
-                                                // busy: park it and keep
-                                                // working.
-                                                conflicts += 1;
-                                                stalls += 1;
-                                                pending = Some(PendingAcquire {
-                                                    task,
-                                                    split,
-                                                    attempts: 0,
-                                                });
-                                                continue;
-                                            }
-                                        }
-                                    }
-                                    Err(_) => {
-                                        // Remote conflict: nothing held —
-                                        // fail fast to a deferral.
-                                        conflicts += 1;
-                                        deferrals += 1;
-                                        defer_age[vidx].fetch_add(1, Ordering::Relaxed);
-                                        pending_retries.fetch_add(1, Ordering::AcqRel);
-                                        if from_retry {
-                                            overflows[my_shard].push(task);
-                                            skip_local_once = true;
-                                            std::thread::yield_now();
-                                        } else if let Err(t) = retry[w].push(task) {
-                                            overflows[my_shard].push(t);
-                                        }
-                                        continue;
-                                    }
-                                }
-                            } else {
-                                // Interior path: the threaded engine's
-                                // adaptive non-blocking ladder.
-                                let mut scope = None;
-                                for attempt in 0..attempts {
-                                    match Scope::try_lock(
+                                    Scope::from_guard(
                                         graph,
-                                        locks,
                                         task.vertex,
                                         config.model,
+                                        guard,
+                                    ),
+                                ));
+                                // a stalled dispatch is not a clean
+                                // affinity hit
+                                run_from_retry = true;
+                            }
+                            Err((split, _)) => {
+                                conflicts += 1;
+                                if tries + 1 >= PENDING_ATTEMPTS {
+                                    // Give up the pipeline slot: release
+                                    // the remote half, defer the task.
+                                    drop(split);
+                                    deferrals += 1;
+                                    defer_age[task.vertex as usize]
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    pending_retries.fetch_add(1, Ordering::AcqRel);
+                                    overflows[my_shard].push(task);
+                                } else {
+                                    pending = Some(PendingAcquire {
+                                        task,
+                                        split,
+                                        attempts: tries + 1,
+                                    });
+                                }
+                            }
+                        }
+                    }
+
+                    if run_now.is_none() {
+                        // Task sources: own retry deque (LIFO), the
+                        // shard's handoff ring (already in flight),
+                        // the scheduler, then shard-local stealing.
+                        let mut task: Option<Task> = None;
+                        let mut from_retry = false;
+                        if !skip_local_once {
+                            if let Some(t) = retry[w].pop() {
+                                task = Some(t);
+                                from_retry = true;
+                            }
+                        }
+                        if task.is_none() {
+                            task = rings[my_shard].pop();
+                        }
+                        if task.is_none() {
+                            // Optimistic in-flight count before the pop
+                            // (same drain-race discipline as the
+                            // threaded engine).
+                            inflight.fetch_add(1, Ordering::AcqRel);
+                            match scheduler.next_task(w) {
+                                Some(t) => task = Some(t),
+                                None => {
+                                    inflight.fetch_sub(1, Ordering::AcqRel);
+                                }
+                            }
+                        }
+                        if task.is_none() && skip_local_once {
+                            if let Some(t) = retry[w].pop() {
+                                task = Some(t);
+                                from_retry = true;
+                            }
+                        }
+                        if task.is_none() && pending_retries.load(Ordering::Acquire) > 0
+                        {
+                            if let Some(t) = overflows[my_shard].pop() {
+                                task = Some(t);
+                                from_retry = true;
+                            } else {
+                                let base = my_shard * per_shard;
+                                for i in 1..per_shard {
+                                    let peer = base + (w - base + i) % per_shard;
+                                    let got = if use_steal_half {
+                                        let (first, moved) = retry[peer].steal_half(
+                                            STEAL_HALF_MAX,
+                                            |t| {
+                                                if let Err(t) = retry[w].push(t) {
+                                                    overflows[my_shard].push(t);
+                                                }
+                                            },
+                                        );
+                                        steals += moved as u64;
+                                        first
+                                    } else {
+                                        retry[peer].steal()
+                                    };
+                                    if let Some(t) = got {
+                                        steals += 1;
+                                        task = Some(t);
+                                        from_retry = true;
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        skip_local_once = false;
+                        let Some(task) = task else {
+                            // Going idle closes the sync window: flush the
+                            // batcher and apply whatever peers have queued
+                            // toward this shard (once per idle streak).
+                            if idle_spins == 0 {
+                                flush_window(
+                                    &mut batcher,
+                                    my_shard,
+                                    transport,
+                                    &mut deltas_sent,
+                                    &mut ghost_syncs,
+                                    &mut bytes_shipped,
+                                );
+                                ghost_syncs += transport.drain(my_shard).applied;
+                            }
+                            if inflight.load(Ordering::Acquire) == 0
+                                && scheduler.is_done()
+                            {
+                                break;
+                            }
+                            idle_spins += 1;
+                            if idle_spins < 64 {
+                                std::hint::spin_loop();
+                            } else if idle_spins < 256 {
+                                std::thread::yield_now();
+                            } else {
+                                std::thread::sleep(Duration::from_micros(50));
+                            }
+                            continue;
+                        };
+                        idle_spins = 0;
+                        pops += 1;
+                        if !use_steal_half
+                            && should_auto_steal_half(pops, steals, config.steal_half_auto)
+                        {
+                            use_steal_half = true;
+                            auto_flips += 1;
+                        }
+                        if from_retry {
+                            retries += 1;
+                            pending_retries.fetch_sub(1, Ordering::AcqRel);
+                        }
+
+                        // Cross-shard handoff: not ours — forward to the
+                        // owner shard's ring (the task stays in flight).
+                        // A handoff is a shard boundary crossing, so it
+                        // also closes the sync window: the peer may be
+                        // about to read what we batched.
+                        let owner_shard = sharded.owner_of(task.vertex);
+                        if owner_shard != my_shard {
+                            handoffs += 1;
+                            flush_window(
+                                &mut batcher,
+                                my_shard,
+                                transport,
+                                &mut deltas_sent,
+                                &mut ghost_syncs,
+                                &mut bytes_shipped,
+                            );
+                            rings[owner_shard].push(task);
+                            continue;
+                        }
+
+                        let vidx = task.vertex as usize;
+                        let age = defer_age[vidx].load(Ordering::Relaxed);
+                        if age >= config.escalate_after {
+                            // Fairness escalation is a *blocking*
+                            // acquisition — never enter it while holding
+                            // a pending split's remote locks (that would
+                            // reintroduce hold-and-wait): abandon the
+                            // pending first.
+                            if let Some(PendingAcquire { task: ptask, split, .. }) =
+                                pending.take()
+                            {
+                                drop(split);
+                                deferrals += 1;
+                                defer_age[ptask.vertex as usize]
+                                    .fetch_add(1, Ordering::Relaxed);
+                                pending_retries.fetch_add(1, Ordering::AcqRel);
+                                overflows[my_shard].push(ptask);
+                            }
+                            escalations += 1;
+                            run_now = Some((
+                                task,
+                                Scope::lock(graph, locks, task.vertex, config.model),
+                            ));
+                            run_from_retry = from_retry;
+                        } else if pending.is_none()
+                            && config.model.excludes_neighbors()
+                            && sharded.is_boundary(task.vertex)
+                        {
+                            // Pipelined split acquisition: request the
+                            // remote half first.
+                            match locks.try_lock_split(
+                                task.vertex,
+                                graph.lock_neighbors(task.vertex),
+                                config.model,
+                                |u| sharded.owner_of(u) != my_shard,
+                            ) {
+                                Ok(split) => {
+                                    match split.try_complete(
+                                        graph.lock_neighbors(task.vertex),
                                     ) {
-                                        Ok(sc) => {
-                                            scope = Some(sc);
-                                            break;
+                                        Ok(guard) => {
+                                            run_now = Some((
+                                                task,
+                                                Scope::from_guard(
+                                                    graph,
+                                                    task.vertex,
+                                                    config.model,
+                                                    guard,
+                                                ),
+                                            ));
+                                            run_from_retry = from_retry;
                                         }
-                                        Err(_) => {
+                                        Err((split, _)) => {
+                                            // Remote half granted, local
+                                            // busy: park it and keep
+                                            // working.
                                             conflicts += 1;
-                                            for _ in 0..(16u32 << attempt) {
-                                                std::hint::spin_loop();
-                                            }
+                                            stalls += 1;
+                                            pending = Some(PendingAcquire {
+                                                task,
+                                                split,
+                                                attempts: 0,
+                                            });
+                                            continue;
                                         }
                                     }
                                 }
-                                window_tasks += 1;
-                                let Some(scope) = scope else {
+                                Err(_) => {
+                                    // Remote conflict: nothing held —
+                                    // fail fast to a deferral.
+                                    conflicts += 1;
                                     deferrals += 1;
-                                    window_deferrals += 1;
                                     defer_age[vidx].fetch_add(1, Ordering::Relaxed);
                                     pending_retries.fetch_add(1, Ordering::AcqRel);
                                     if from_retry {
@@ -469,119 +602,224 @@ impl ShardedEngine {
                                     } else if let Err(t) = retry[w].push(task) {
                                         overflows[my_shard].push(t);
                                     }
-                                    tune_attempts(
-                                        &mut attempts,
-                                        &mut window_tasks,
-                                        &mut window_deferrals,
-                                    );
                                     continue;
-                                };
+                                }
+                            }
+                        } else {
+                            // Interior path: the threaded engine's
+                            // adaptive non-blocking ladder.
+                            let mut scope = None;
+                            for attempt in 0..attempts {
+                                match Scope::try_lock(
+                                    graph,
+                                    locks,
+                                    task.vertex,
+                                    config.model,
+                                ) {
+                                    Ok(sc) => {
+                                        scope = Some(sc);
+                                        break;
+                                    }
+                                    Err(_) => {
+                                        conflicts += 1;
+                                        for _ in 0..(16u32 << attempt) {
+                                            std::hint::spin_loop();
+                                        }
+                                    }
+                                }
+                            }
+                            window_tasks += 1;
+                            let Some(scope) = scope else {
+                                deferrals += 1;
+                                window_deferrals += 1;
+                                defer_age[vidx].fetch_add(1, Ordering::Relaxed);
+                                pending_retries.fetch_add(1, Ordering::AcqRel);
+                                if from_retry {
+                                    overflows[my_shard].push(task);
+                                    skip_local_once = true;
+                                    std::thread::yield_now();
+                                } else if let Err(t) = retry[w].push(task) {
+                                    overflows[my_shard].push(t);
+                                }
                                 tune_attempts(
                                     &mut attempts,
                                     &mut window_tasks,
                                     &mut window_deferrals,
                                 );
-                                run_now = Some((task, scope));
-                                run_from_retry = from_retry;
-                            }
+                                continue;
+                            };
+                            tune_attempts(
+                                &mut attempts,
+                                &mut window_tasks,
+                                &mut window_deferrals,
+                            );
+                            run_now = Some((task, scope));
+                            run_from_retry = from_retry;
                         }
+                    }
 
-                        let Some((task, mut scope)) = run_now else { continue };
-                        let vidx = task.vertex as usize;
-                        if defer_age[vidx].load(Ordering::Relaxed) != 0 {
-                            defer_age[vidx].store(0, Ordering::Relaxed);
+                    let Some((task, mut scope)) = run_now else { continue };
+                    let vidx = task.vertex as usize;
+                    if defer_age[vidx].load(Ordering::Relaxed) != 0 {
+                        defer_age[vidx].store(0, Ordering::Relaxed);
+                    }
+                    if !run_from_retry && scheduler.owner_of(task.vertex) == Some(w) {
+                        affinity += 1;
+                    }
+                    // Bounded-staleness admission: with the scope's
+                    // neighbor locks held, pull any ghost replica this
+                    // update would read that lags past the bound.
+                    if k > 1
+                        && staleness_scan
+                        && config.model.excludes_neighbors()
+                        && sharded.is_boundary(task.vertex)
+                    {
+                        let (pulls, lag) = scope.refresh_stale_ghosts(
+                            sharded,
+                            my_shard,
+                            config.ghost_staleness,
+                        );
+                        staleness_pulls += pulls;
+                        if lag > max_lag {
+                            max_lag = lag;
                         }
-                        if !run_from_retry && scheduler.owner_of(task.vertex) == Some(w) {
-                            affinity += 1;
+                    }
+                    ctx.reset(w, task.priority);
+                    fns[task.func as usize].update(&mut scope, &mut ctx);
+                    // Ghost propagation while the center write lock is
+                    // still held: bump the master version, record the
+                    // versioned delta (clone under the lock), and let the
+                    // batcher decide when it leaves through the transport.
+                    if k > 1 && sharded.is_boundary(task.vertex) {
+                        boundary_updates += 1;
+                        let version = sharded.bump_master(task.vertex);
+                        if batcher.record(task.vertex, version, scope.vertex().clone()) {
+                            deltas_coalesced += 1;
                         }
-                        ctx.reset(w, task.priority);
-                        fns[task.func as usize].update(&mut scope, &mut ctx);
-                        // Ghost propagation while the center write lock is
-                        // still held: remote replicas see the new value
-                        // before the scope releases (the emulated flush).
-                        if sharded.is_boundary(task.vertex) {
-                            boundary_updates += 1;
-                            ghost_syncs +=
-                                sharded.sync_vertex_from(task.vertex, scope.vertex());
+                        if batcher.should_flush() {
+                            flush_window(
+                                &mut batcher,
+                                my_shard,
+                                transport,
+                                &mut deltas_sent,
+                                &mut ghost_syncs,
+                                &mut bytes_shipped,
+                            );
                         }
-                        drop(scope);
-                        ctx.drain_spawned(|t| scheduler.add_task(t));
-                        scheduler.task_done(task, w);
-                        inflight.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    drop(scope);
+                    ctx.drain_spawned(|t| scheduler.add_task(t));
+                    scheduler.task_done(task, w);
+                    inflight.fetch_sub(1, Ordering::AcqRel);
 
-                        local_updates += 1;
-                        let global = total_updates.fetch_add(1, Ordering::Relaxed) + 1;
-                        if let Some(max) = config.max_updates {
-                            if global >= max {
-                                stop.store(STOP_LIMIT, Ordering::Release);
+                    local_updates += 1;
+                    // Periodic drain tick: consume deltas queued toward this
+                    // shard even when the worker never idles, so a queueing
+                    // backend's buffers stay bounded under sustained load
+                    // (no-op for apply-at-send backends).
+                    if k > 1 && local_updates % DRAIN_EVERY == 0 {
+                        ghost_syncs += transport.drain(my_shard).applied;
+                    }
+                    let global = total_updates.fetch_add(1, Ordering::Relaxed) + 1;
+                    if let Some(max) = config.max_updates {
+                        if global >= max {
+                            stop.store(STOP_LIMIT, Ordering::Release);
+                            break;
+                        }
+                    }
+                    if local_updates % config.term_check_every == 0 {
+                        for term in terminators {
+                            if term(sdt) {
+                                stop.store(STOP_TERM_FN, Ordering::Release);
                                 break;
                             }
                         }
-                        if local_updates % config.term_check_every == 0 {
-                            for term in terminators {
-                                if term(sdt) {
-                                    stop.store(STOP_TERM_FN, Ordering::Release);
-                                    break;
-                                }
-                            }
-                        }
                     }
-                    per_worker[w].store(local_updates, Ordering::Release);
-                    per_conflicts[w].store(conflicts, Ordering::Release);
-                    per_deferrals[w].store(deferrals, Ordering::Release);
-                    total_retries.fetch_add(retries, Ordering::AcqRel);
-                    total_steals.fetch_add(steals, Ordering::AcqRel);
-                    total_escalations.fetch_add(escalations, Ordering::AcqRel);
-                    total_affinity.fetch_add(affinity, Ordering::AcqRel);
-                    total_ghost_syncs.fetch_add(ghost_syncs, Ordering::AcqRel);
-                    total_boundary.fetch_add(boundary_updates, Ordering::AcqRel);
-                    total_handoffs.fetch_add(handoffs, Ordering::AcqRel);
-                    total_stalls.fetch_add(stalls, Ordering::AcqRel);
-                    if workers_remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-                        engine_done.store(true, Ordering::Release);
-                    }
-                });
-            }
-        });
-        engine_done.store(true, Ordering::Release);
-
-        for op in syncs {
-            ThreadedEngine::locked_sync(graph, &locks, op, sdt);
-            syncs_run.fetch_add(1, Ordering::Relaxed);
+                }
+                // Worker exit closes its sync window for good.
+                flush_window(
+                    &mut batcher,
+                    my_shard,
+                    transport,
+                    &mut deltas_sent,
+                    &mut ghost_syncs,
+                    &mut bytes_shipped,
+                );
+                per_worker[w].store(local_updates, Ordering::Release);
+                per_conflicts[w].store(conflicts, Ordering::Release);
+                per_deferrals[w].store(deferrals, Ordering::Release);
+                total_retries.fetch_add(retries, Ordering::AcqRel);
+                total_steals.fetch_add(steals, Ordering::AcqRel);
+                total_escalations.fetch_add(escalations, Ordering::AcqRel);
+                total_affinity.fetch_add(affinity, Ordering::AcqRel);
+                total_ghost_syncs.fetch_add(ghost_syncs, Ordering::AcqRel);
+                total_boundary.fetch_add(boundary_updates, Ordering::AcqRel);
+                total_handoffs.fetch_add(handoffs, Ordering::AcqRel);
+                total_stalls.fetch_add(stalls, Ordering::AcqRel);
+                total_deltas.fetch_add(deltas_sent, Ordering::AcqRel);
+                total_coalesced.fetch_add(deltas_coalesced, Ordering::AcqRel);
+                total_bytes.fetch_add(bytes_shipped, Ordering::AcqRel);
+                total_pulls.fetch_add(staleness_pulls, Ordering::AcqRel);
+                total_max_lag.fetch_max(max_lag, Ordering::AcqRel);
+                total_auto_flips.fetch_add(auto_flips, Ordering::AcqRel);
+                if workers_remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    engine_done.store(true, Ordering::Release);
+                }
+            });
         }
+    });
+    engine_done.store(true, Ordering::Release);
 
-        let stop_reason = match stop.load(Ordering::Acquire) {
-            STOP_TERM_FN => StopReason::TerminationFn,
-            STOP_LIMIT => StopReason::UpdateLimit,
-            _ => StopReason::SchedulerEmpty,
-        };
-        let per_worker_conflicts: Vec<u64> =
-            per_conflicts.iter().map(|c| c.load(Ordering::Acquire)).collect();
-        let per_worker_deferrals: Vec<u64> =
-            per_deferrals.iter().map(|c| c.load(Ordering::Acquire)).collect();
-        RunReport {
-            updates: total_updates.load(Ordering::Relaxed),
-            wall_secs: timer.elapsed_secs(),
-            stop: stop_reason,
-            per_worker: per_worker.iter().map(|c| c.load(Ordering::Acquire)).collect(),
-            syncs_run: syncs_run.load(Ordering::Relaxed),
-            contention: ContentionStats {
-                conflicts: per_worker_conflicts.iter().sum(),
-                deferrals: per_worker_deferrals.iter().sum(),
-                retries: total_retries.load(Ordering::Acquire),
-                steals: total_steals.load(Ordering::Acquire),
-                escalations: total_escalations.load(Ordering::Acquire),
-                affinity_hits: total_affinity.load(Ordering::Acquire),
-                has_owner_map: scheduler.owner_of(0).is_some(),
-                shards: k,
-                ghost_syncs: total_ghost_syncs.load(Ordering::Acquire),
-                boundary_updates: total_boundary.load(Ordering::Acquire),
-                handoffs: total_handoffs.load(Ordering::Acquire),
-                pipelined_stalls: total_stalls.load(Ordering::Acquire),
-                per_worker_conflicts,
-                per_worker_deferrals,
-            },
-        }
+    // Final transport drain: every queued delta lands before the caller
+    // regains exclusive access to the graph (no-op for direct backends).
+    let mut drained = 0u64;
+    for shard in 0..k {
+        drained += transport.drain(shard).applied;
+    }
+    total_ghost_syncs.fetch_add(drained, Ordering::AcqRel);
+
+    for op in syncs {
+        ThreadedEngine::locked_sync(graph, &locks, op, sdt);
+        syncs_run.fetch_add(1, Ordering::Relaxed);
+    }
+
+    let stop_reason = match stop.load(Ordering::Acquire) {
+        STOP_TERM_FN => StopReason::TerminationFn,
+        STOP_LIMIT => StopReason::UpdateLimit,
+        _ => StopReason::SchedulerEmpty,
+    };
+    let per_worker_conflicts: Vec<u64> =
+        per_conflicts.iter().map(|c| c.load(Ordering::Acquire)).collect();
+    let per_worker_deferrals: Vec<u64> =
+        per_deferrals.iter().map(|c| c.load(Ordering::Acquire)).collect();
+    RunReport {
+        updates: total_updates.load(Ordering::Relaxed),
+        wall_secs: timer.elapsed_secs(),
+        stop: stop_reason,
+        per_worker: per_worker.iter().map(|c| c.load(Ordering::Acquire)).collect(),
+        syncs_run: syncs_run.load(Ordering::Relaxed),
+        contention: ContentionStats {
+            conflicts: per_worker_conflicts.iter().sum(),
+            deferrals: per_worker_deferrals.iter().sum(),
+            retries: total_retries.load(Ordering::Acquire),
+            steals: total_steals.load(Ordering::Acquire),
+            escalations: total_escalations.load(Ordering::Acquire),
+            affinity_hits: total_affinity.load(Ordering::Acquire),
+            has_owner_map: scheduler.owner_of(0).is_some(),
+            shards: k,
+            ghost_syncs: total_ghost_syncs.load(Ordering::Acquire),
+            boundary_updates: total_boundary.load(Ordering::Acquire),
+            handoffs: total_handoffs.load(Ordering::Acquire),
+            pipelined_stalls: total_stalls.load(Ordering::Acquire),
+            deltas_sent: total_deltas.load(Ordering::Acquire),
+            deltas_coalesced: total_coalesced.load(Ordering::Acquire),
+            bytes_shipped: total_bytes.load(Ordering::Acquire),
+            staleness_pulls: total_pulls.load(Ordering::Acquire),
+            max_ghost_staleness: total_max_lag.load(Ordering::Acquire),
+            auto_steal_half_flips: total_auto_flips.load(Ordering::Acquire),
+            per_worker_conflicts,
+            per_worker_deferrals,
+        },
     }
 }
 
@@ -669,7 +907,44 @@ mod tests {
         // a ring cut 4 ways has 8 boundary vertices, each updated 10 times
         assert_eq!(c.boundary_updates, 80);
         assert_eq!(c.ghost_syncs, 80, "each ring-boundary vertex has 1 replica");
+        // default sync window of 1: every boundary update is its own delta
+        assert_eq!(c.deltas_sent, 80);
+        assert_eq!(c.deltas_coalesced, 0);
+        assert_eq!(c.bytes_shipped, 0, "direct backend ships no wire bytes");
+        assert_eq!(c.staleness_pulls, 0, "synchronous flush leaves nothing stale");
+        assert_eq!(c.max_ghost_staleness, 0);
         assert_eq!(report.per_worker.iter().sum::<u64>(), report.updates);
+    }
+
+    /// The channel backend serializes every delta through the codec yet
+    /// must converge to the same result with the same delta count.
+    #[test]
+    fn channel_backend_matches_direct_on_ring() {
+        let n = 64;
+        let f = SelfBump { rounds: 10 };
+        let program = Program::new()
+            .update_fn(&f)
+            .workers(4)
+            .model(ConsistencyModel::Full);
+        let mut g = ring(n);
+        let sched = MultiQueueFifo::new(n, 4);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let report =
+            program.run_on(&ChannelShardedEngine::new(4), &mut g, &sched, &Sdt::new());
+        assert_eq!(report.updates, n as u64 * 10);
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), 10, "vertex {v}");
+        }
+        let c = &report.contention;
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.boundary_updates, 80);
+        assert_eq!(c.deltas_sent, 80);
+        assert!(c.bytes_shipped > 0, "channel backend really ships bytes");
+        // every delta is either applied at a drain or superseded by a
+        // staleness pull that already carried a newer version
+        assert!(c.ghost_syncs <= 80);
     }
 
     #[test]
@@ -699,6 +974,9 @@ mod tests {
         assert_eq!(c.boundary_updates, 0);
         assert_eq!(c.handoffs, 0);
         assert_eq!(c.pipelined_stalls, 0);
+        assert_eq!(c.deltas_sent, 0);
+        assert_eq!(c.bytes_shipped, 0);
+        assert_eq!(c.staleness_pulls, 0);
     }
 
     #[test]

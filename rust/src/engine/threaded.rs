@@ -73,6 +73,19 @@ pub(crate) const LOCAL_DEQUE_CAP: usize = 256;
 /// (keeps a thief from emptying a deep victim wholesale).
 pub(crate) const STEAL_HALF_MAX: usize = 32;
 
+/// Minimum task dispatches a worker observes before the steal-half
+/// auto-flip ([`EngineConfig::steal_half_auto`]) may trigger — too small a
+/// sample would flip on startup noise.
+pub(crate) const AUTO_STEAL_MIN_POPS: u64 = 64;
+
+/// Steal-half auto-select: should this worker flip its steal scans to
+/// steal-half, given what it has observed so far? Shared by both
+/// multi-threaded engines.
+#[inline]
+pub(crate) fn should_auto_steal_half(pops: u64, steals: u64, frac: f64) -> bool {
+    pops >= AUTO_STEAL_MIN_POPS && steals as f64 > frac * pops as f64
+}
+
 /// Shrink or grow the re-attempt ladder from the deferral rate observed
 /// over the last window. Plain worker-local state — no cross-thread traffic.
 pub(crate) fn tune_attempts(
@@ -130,6 +143,7 @@ impl ThreadedEngine {
         let total_steals = AtomicU64::new(0);
         let total_escalations = AtomicU64::new(0);
         let total_affinity = AtomicU64::new(0);
+        let total_auto_flips = AtomicU64::new(0);
         let syncs_run = AtomicU64::new(0);
         // Per-worker lock-free retry deques for deferred (conflicted)
         // tasks: the owner pushes/pops LIFO (the conflicted scope is still
@@ -181,6 +195,7 @@ impl ThreadedEngine {
                 let total_steals = &total_steals;
                 let total_escalations = &total_escalations;
                 let total_affinity = &total_affinity;
+                let total_auto_flips = &total_auto_flips;
                 let retry = &retry;
                 let overflow = &overflow;
                 let pending_retries = &pending_retries;
@@ -196,6 +211,11 @@ impl ThreadedEngine {
                     let mut escalations: u64 = 0;
                     let mut affinity: u64 = 0;
                     let mut idle_spins: u32 = 0;
+                    // Steal-policy auto-select (worker-local): flip to
+                    // steal-half once observed steals dominate pops.
+                    let mut pops: u64 = 0;
+                    let mut use_steal_half = config.steal_half;
+                    let mut auto_flips: u64 = 0;
                     // Adaptive conflict control (worker-local).
                     let mut attempts: u32 = START_ATTEMPTS;
                     let mut window_tasks: u32 = 0;
@@ -256,7 +276,7 @@ impl ThreadedEngine {
                                     // policy drains a batch into our own
                                     // deque so one scan serves several
                                     // future pops (skewed-load option).
-                                    let got = if config.steal_half {
+                                    let got = if use_steal_half {
                                         let (first, moved) =
                                             retry[peer].steal_half(STEAL_HALF_MAX, |t| {
                                                 if let Err(t) = retry[w].push(t) {
@@ -293,6 +313,13 @@ impl ThreadedEngine {
                             continue;
                         };
                         idle_spins = 0;
+                        pops += 1;
+                        if !use_steal_half
+                            && should_auto_steal_half(pops, steals, config.steal_half_auto)
+                        {
+                            use_steal_half = true;
+                            auto_flips += 1;
+                        }
                         if from_retry {
                             retries += 1;
                             pending_retries.fetch_sub(1, Ordering::AcqRel);
@@ -397,6 +424,7 @@ impl ThreadedEngine {
                     total_steals.fetch_add(steals, Ordering::AcqRel);
                     total_escalations.fetch_add(escalations, Ordering::AcqRel);
                     total_affinity.fetch_add(affinity, Ordering::AcqRel);
+                    total_auto_flips.fetch_add(auto_flips, Ordering::AcqRel);
                     if workers_remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                         engine_done.store(true, Ordering::Release);
                     }
@@ -434,6 +462,7 @@ impl ThreadedEngine {
                 escalations: total_escalations.load(Ordering::Acquire),
                 affinity_hits: total_affinity.load(Ordering::Acquire),
                 has_owner_map: scheduler.owner_of(0).is_some(),
+                auto_steal_half_flips: total_auto_flips.load(Ordering::Acquire),
                 per_worker_conflicts,
                 per_worker_deferrals,
                 ..ContentionStats::default()

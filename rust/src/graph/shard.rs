@@ -35,9 +35,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct GhostEntry<V> {
     global: VertexId,
     owner: usize,
-    /// Sync stamp: 0 = construction-time snapshot; bumped (Release) after
-    /// every replica write, so `version()` is monotone per entry.
+    /// Sync stamp: 0 = construction-time snapshot; monotone per entry.
+    /// Bumped by one on every legacy [`GhostEntry::store`] and set to the
+    /// shipped master version by [`GhostEntry::store_versioned`] (the
+    /// transport path).
     version: AtomicU64,
+    /// Pending-delta slot: the newest master version *shipped toward* this
+    /// replica (possibly still queued in a transport). Always `>=
+    /// version()`; the gap is the in-flight delta window.
+    pending: AtomicU64,
     /// Guards `data`: readers share, a sync holds it exclusively.
     lock: ScopeLock,
     data: DataCell<V>,
@@ -57,6 +63,17 @@ impl<V> GhostEntry<V> {
     /// Current sync stamp (monotone; 0 = never synced since construction).
     pub fn version(&self) -> u64 {
         self.version.load(Ordering::Acquire)
+    }
+
+    /// Newest version shipped toward this replica (see the pending-delta
+    /// slot). Equals [`GhostEntry::version`] when nothing is in flight.
+    pub fn pending_version(&self) -> u64 {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    /// Advance the pending-delta slot (called by transports at send time).
+    pub(crate) fn note_pending(&self, version: u64) {
+        self.pending.fetch_max(version, Ordering::AcqRel);
     }
 }
 
@@ -78,7 +95,30 @@ impl<V: Clone> GhostEntry<V> {
             *self.data.get_mut_unchecked() = value.clone();
         }
         self.lock.unlock_write();
-        self.version.fetch_add(1, Ordering::Release);
+        let bumped = self.version.fetch_add(1, Ordering::Release) + 1;
+        self.pending.fetch_max(bumped, Ordering::AcqRel);
+    }
+
+    /// Overwrite the replica *only if* `version` is newer than what it
+    /// holds (the transport path: reordered or duplicate deliveries lose).
+    /// The version check happens under the entry's write lock so a stale
+    /// payload can never land after a fresher one. Returns whether the
+    /// write was applied.
+    pub(crate) fn store_versioned(&self, value: &V, version: u64) -> bool {
+        self.lock.write_spin();
+        let newer = version > self.version.load(Ordering::Acquire);
+        if newer {
+            // SAFETY: exclusive lock held for the duration of the write.
+            unsafe {
+                *self.data.get_mut_unchecked() = value.clone();
+            }
+            self.version.store(version, Ordering::Release);
+        }
+        self.lock.unlock_write();
+        if newer {
+            self.pending.fetch_max(version, Ordering::AcqRel);
+        }
+        newer
     }
 }
 
@@ -177,6 +217,11 @@ pub struct ShardedGraph<V> {
     /// are v's ghost replicas, packed as (shard, ghost index).
     replica_offsets: Vec<u32>,
     replica_sites: Vec<(u32, u32)>,
+    /// Per-vertex master version: bumped by the owner on every replicated
+    /// write ([`ShardedGraph::bump_master`]); a replica's staleness is
+    /// `master_version(v) - entry.version()`. Stays 0 for interior
+    /// vertices.
+    master_versions: Vec<AtomicU64>,
     edge_cut: usize,
     num_edges: usize,
 }
@@ -239,6 +284,7 @@ impl<V: Clone> ShardedGraph<V> {
                     global: u,
                     owner: part.owner_of(u),
                     version: AtomicU64::new(0),
+                    pending: AtomicU64::new(0),
                     lock: ScopeLock::new(),
                     data: DataCell::new(graph.vertex_data_ref(u).clone()),
                 });
@@ -272,6 +318,7 @@ impl<V: Clone> ShardedGraph<V> {
             shards,
             replica_offsets,
             replica_sites,
+            master_versions: (0..n).map(|_| AtomicU64::new(0)).collect(),
             edge_cut,
             num_edges: graph.num_edges(),
         }
@@ -286,6 +333,49 @@ impl<V: Clone> ShardedGraph<V> {
             self.shards[s as usize].ghosts[g as usize].store(data);
         }
         sites.len() as u64
+    }
+
+    /// Versioned propagation (the transport path): write `data` stamped
+    /// with master `version` to every replica, skipping any that already
+    /// hold something newer. Returns the number of replicas actually
+    /// written.
+    pub fn sync_vertex_versioned(&self, v: VertexId, data: &V, version: u64) -> u64 {
+        let mut applied = 0;
+        for &(s, g) in self.replicas_of(v) {
+            let entry = &self.shards[s as usize].ghosts[g as usize];
+            entry.note_pending(version);
+            if entry.store_versioned(data, version) {
+                applied += 1;
+            }
+        }
+        applied
+    }
+
+    /// Pull-on-demand: refresh one replica from its owner's current master
+    /// data under a freshly taken per-vertex read lock, stamping it with
+    /// the master version. Returns whether the replica was behind and got
+    /// updated. (The engine's scope-admission staleness check uses the
+    /// in-scope variant `Scope::refresh_stale_ghosts`, which reuses the
+    /// locks the scope already holds.)
+    pub fn pull_replica<E>(
+        &self,
+        graph: &DataGraph<V, E>,
+        locks: &LockTable,
+        shard: usize,
+        ghost: usize,
+    ) -> bool {
+        let entry = &self.shards[shard].ghosts[ghost];
+        let v = entry.global;
+        if entry.version() >= self.master_version(v) {
+            return false;
+        }
+        let _g = locks.read(v);
+        // Re-read under the lock: a writer may have bumped again before we
+        // acquired it, and the data we read now carries that version.
+        let master = self.master_version(v);
+        // SAFETY: read lock on v held for the duration of the copy.
+        let data = unsafe { graph.vertex_data_unchecked(v) };
+        entry.store_versioned(data, master)
     }
 
     /// Propagate vertex `v` under a freshly taken per-vertex read lock.
@@ -304,14 +394,21 @@ impl<V: Clone> ShardedGraph<V> {
         self.sync_vertex_from(v, data)
     }
 
-    /// Full sync pass: propagate every replicated vertex. Returns total
-    /// replicas written.
-    pub fn sync_all<E>(&self, graph: &DataGraph<V, E>, locks: &LockTable) -> u64 {
-        let mut total = 0;
+    /// Full sync pass: propagate every *replicated* vertex — interior
+    /// vertices are skipped before any lock is taken, so a pass costs
+    /// O(replicated) lock acquisitions instead of k·|V|. Returns
+    /// `(vertices synced, replicas written)`.
+    pub fn sync_all<E>(&self, graph: &DataGraph<V, E>, locks: &LockTable) -> (u64, u64) {
+        let mut vertices = 0;
+        let mut replicas = 0;
         for v in 0..self.part.len() as u32 {
-            total += self.sync_vertex(graph, locks, v);
+            if self.replicas_of(v).is_empty() {
+                continue;
+            }
+            vertices += 1;
+            replicas += self.sync_vertex(graph, locks, v);
         }
-        total
+        (vertices, replicas)
     }
 
     /// Every ghost replica equals its owner's current data (exclusive
@@ -365,6 +462,18 @@ impl<V> ShardedGraph<V> {
     /// Total ghost replicas across all shards.
     pub fn num_ghosts(&self) -> usize {
         self.shards.iter().map(|s| s.ghosts.len()).sum()
+    }
+
+    /// Current master version of vertex `v` (0 = never bumped).
+    pub fn master_version(&self, v: VertexId) -> u64 {
+        self.master_versions[v as usize].load(Ordering::Acquire)
+    }
+
+    /// Bump and return vertex `v`'s master version. Called by the owner
+    /// while holding `v`'s write lock (one bump per replicated write), so
+    /// versions are unique and monotone per vertex.
+    pub fn bump_master(&self, v: VertexId) -> u64 {
+        self.master_versions[v as usize].fetch_add(1, Ordering::AcqRel) + 1
     }
 
     /// Ghost replica sites of vertex `v`, packed as (shard, ghost index).
@@ -485,12 +594,50 @@ mod tests {
             .map(|&(s, gi)| sg.shard(s as usize).ghost(gi as usize).version())
             .collect();
         assert!(before.iter().all(|&v| v == 1));
-        let total = sg.sync_all(&g, &locks);
-        assert_eq!(total as usize, sg.num_ghosts());
+        let (vertices, replicas) = sg.sync_all(&g, &locks);
+        assert_eq!(replicas as usize, sg.num_ghosts());
+        let replicated = (0..16u32).filter(|&v| !sg.replicas_of(v).is_empty()).count();
+        assert_eq!(vertices as usize, replicated, "interior vertices skipped");
         for (i, &(s, gi)) in sg.replicas_of(5).iter().enumerate() {
             let after = sg.shard(s as usize).ghost(gi as usize).version();
             assert!(after > before[i], "version must increase on sync");
         }
+    }
+
+    /// Versioned stores apply newest-wins, advance the pending slot, and a
+    /// stale pull-on-demand refreshes a lagging replica from master data.
+    #[test]
+    fn versioned_sync_and_pull_on_demand() {
+        let mut g = grid4();
+        let sg = ShardedGraph::new(&mut g, 2);
+        let locks = LockTable::new(g.num_vertices());
+        let v = 5u32; // row 1, replicated on shard 1
+        assert!(!sg.replicas_of(v).is_empty());
+        assert_eq!(sg.master_version(v), 0);
+
+        // owner writes + versioned flush
+        *g.vertex_data(v) = 111;
+        let ver = sg.bump_master(v);
+        assert_eq!(ver, 1);
+        let applied = sg.sync_vertex_versioned(v, &111, ver);
+        assert_eq!(applied as usize, sg.replicas_of(v).len());
+        let (s, gi) = sg.replicas_of(v)[0];
+        let entry = sg.shard(s as usize).ghost(gi as usize);
+        assert_eq!(entry.version(), 1);
+        assert_eq!(entry.pending_version(), 1);
+        // a duplicate/stale delivery is rejected
+        assert_eq!(sg.sync_vertex_versioned(v, &0, 1), 0);
+
+        // owner writes twice more without flushing: replica lags by 2
+        *g.vertex_data(v) = 333;
+        sg.bump_master(v);
+        sg.bump_master(v);
+        assert_eq!(sg.master_version(v) - entry.version(), 2);
+        // pull-on-demand catches the replica up to the master version
+        assert!(sg.pull_replica(&g, &locks, s as usize, gi as usize));
+        assert_eq!(entry.version(), 3);
+        assert_eq!(entry.read(), 333);
+        assert!(!sg.pull_replica(&g, &locks, s as usize, gi as usize), "already fresh");
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //!   try-locks + pipelined split acquisition), the
 //!   [scheduler collection](scheduler), the threaded (non-blocking,
 //!   deferral-based), sharded (ghost-replicated partitions,
-//!   distributed-style locking) and sequential [engines](engine) behind
+//!   distributed-style locking, pluggable ghost-sync
+//!   [transport](transport) with delta batching and bounded staleness)
+//!   and sequential [engines](engine) behind
 //!   the [`engine::Program`] front-end, the [multicore simulator](sim), and
 //!   the paper's five
 //!   case-study [applications](apps) with synthetic [workloads](datagen) and
@@ -34,4 +36,5 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sdt;
 pub mod sim;
+pub mod transport;
 pub mod util;

@@ -166,6 +166,23 @@ pub fn run_summary(report: &crate::engine::RunReport) -> String {
             c.handoffs,
             c.pipelined_stalls
         );
+        let _ = writeln!(
+            out,
+            "transport: {} deltas sent ({} coalesced), {} bytes shipped, \
+             {} staleness pulls (max replica lag {})",
+            c.deltas_sent,
+            c.deltas_coalesced,
+            c.bytes_shipped,
+            c.staleness_pulls,
+            c.max_ghost_staleness
+        );
+    }
+    if c.auto_steal_half_flips > 0 {
+        let _ = writeln!(
+            out,
+            "steal policy: {} workers auto-flipped to steal-half",
+            c.auto_steal_half_flips
+        );
     }
     let _ = writeln!(out, "{:>8} {:>12} {:>12} {:>12}", "worker", "updates", "conflicts", "deferrals");
     for (w, &u) in report.per_worker.iter().enumerate() {
@@ -289,6 +306,11 @@ mod tests {
                 boundary_updates: 100,
                 handoffs: 7,
                 pipelined_stalls: 3,
+                deltas_sent: 60,
+                deltas_coalesced: 40,
+                bytes_shipped: 4800,
+                staleness_pulls: 5,
+                max_ghost_staleness: 2,
                 ..Default::default()
             },
         };
@@ -299,6 +321,29 @@ mod tests {
         assert!(text.contains("20.0% of updates"));
         assert!(text.contains("7 handoffs"));
         assert!(text.contains("3 pipelined stalls"));
+        assert!(text.contains("60 deltas sent (40 coalesced)"));
+        assert!(text.contains("4800 bytes shipped"));
+        assert!(text.contains("5 staleness pulls (max replica lag 2)"));
+    }
+
+    /// The transport line is shard-gated, and the steal-policy line only
+    /// renders when a worker actually auto-flipped.
+    #[test]
+    fn run_summary_gates_transport_and_steal_lines() {
+        let mut report = crate::engine::RunReport {
+            updates: 100,
+            wall_secs: 0.1,
+            stop: crate::engine::StopReason::SchedulerEmpty,
+            per_worker: vec![100],
+            syncs_run: 0,
+            contention: crate::engine::ContentionStats::default(),
+        };
+        let text = run_summary(&report);
+        assert!(!text.contains("transport:"), "unsharded run hides transport line");
+        assert!(!text.contains("steal policy"), "no flips, no line");
+        report.contention.auto_steal_half_flips = 2;
+        let text = run_summary(&report);
+        assert!(text.contains("2 workers auto-flipped to steal-half"));
     }
 
     #[test]

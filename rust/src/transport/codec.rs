@@ -1,0 +1,252 @@
+//! Vertex (de)serialization for the ghost-sync transport layer.
+//!
+//! A [`VertexCodec`] turns a vertex data block into a flat little-endian
+//! byte payload and back — the unit a real wire transport (socket, shared
+//! memory ring) would ship. The in-crate [`super::ChannelTransport`]
+//! exercises exactly this round-trip so that a future multi-process
+//! backend only has to move the bytes, not re-invent the encoding.
+//!
+//! Encodings are deliberately boring: fixed-width little-endian scalars,
+//! `u32` length prefixes for vectors, no framing inside the payload (the
+//! [`super::GhostDelta`] wire frame carries the length). `decode` must
+//! consume the payload exactly; trailing bytes are a corruption signal and
+//! yield `None`.
+
+/// Byte-encode / decode a vertex data block. Implemented for the app
+/// vertex types that run on the sharded engine plus the primitive types
+/// the test workloads use.
+pub trait VertexCodec: Sized {
+    /// Append the encoding of `self` to `buf`.
+    fn encode(&self, buf: &mut Vec<u8>);
+
+    /// Decode from exactly `bytes` (the full payload). `None` on any
+    /// truncation, trailing garbage, or malformed content.
+    fn decode(bytes: &[u8]) -> Option<Self>;
+
+    /// Encoded size in bytes (allocates; prefer [`VertexCodec::encode`]
+    /// into a reused buffer on hot paths).
+    fn encoded_len(&self) -> usize {
+        let mut buf = Vec::new();
+        self.encode(&mut buf);
+        buf.len()
+    }
+}
+
+// ---- little-endian put helpers ------------------------------------------
+
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed `f32` slice.
+pub fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(buf, vs.len() as u32);
+    for &v in vs {
+        put_f32(buf, v);
+    }
+}
+
+/// Length-prefixed `u32` slice.
+pub fn put_u32s(buf: &mut Vec<u8>, vs: &[u32]) {
+    put_u32(buf, vs.len() as u32);
+    for &v in vs {
+        put_u32(buf, v);
+    }
+}
+
+/// Cursor over a byte slice with checked little-endian reads. Every reader
+/// returns `None` past the end instead of panicking — decode paths treat
+/// truncation as data corruption, not a programming error.
+pub struct ByteReader<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { bytes }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Take the next `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.bytes.len() < n {
+            return None;
+        }
+        let (head, tail) = self.bytes.split_at(n);
+        self.bytes = tail;
+        Some(head)
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    pub fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Option<f32> {
+        self.take(4).map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Option<f64> {
+        self.take(8).map(|b| f64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Length-prefixed `f32` vector (see [`put_f32s`]).
+    pub fn f32s(&mut self) -> Option<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 4));
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Some(out)
+    }
+
+    /// Length-prefixed `u32` vector (see [`put_u32s`]).
+    pub fn u32s(&mut self) -> Option<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(self.remaining() / 4));
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Some(out)
+    }
+}
+
+// ---- primitive impls (test workloads + simple apps) ----------------------
+
+impl VertexCodec for u32 {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_u32(buf, *self);
+    }
+    fn decode(bytes: &[u8]) -> Option<u32> {
+        let mut r = ByteReader::new(bytes);
+        let v = r.u32()?;
+        r.is_empty().then_some(v)
+    }
+}
+
+impl VertexCodec for u64 {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_u64(buf, *self);
+    }
+    fn decode(bytes: &[u8]) -> Option<u64> {
+        let mut r = ByteReader::new(bytes);
+        let v = r.u64()?;
+        r.is_empty().then_some(v)
+    }
+}
+
+impl VertexCodec for f32 {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_f32(buf, *self);
+    }
+    fn decode(bytes: &[u8]) -> Option<f32> {
+        let mut r = ByteReader::new(bytes);
+        let v = r.f32()?;
+        r.is_empty().then_some(v)
+    }
+}
+
+impl VertexCodec for f64 {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_f64(buf, *self);
+    }
+    fn decode(bytes: &[u8]) -> Option<f64> {
+        let mut r = ByteReader::new(bytes);
+        let v = r.f64()?;
+        r.is_empty().then_some(v)
+    }
+}
+
+/// The `(round counter, fold accumulator)` pair the engine stress
+/// workloads use as vertex data.
+impl VertexCodec for (u64, u64) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        put_u64(buf, self.0);
+        put_u64(buf, self.1);
+    }
+    fn decode(bytes: &[u8]) -> Option<(u64, u64)> {
+        let mut r = ByteReader::new(bytes);
+        let a = r.u64()?;
+        let b = r.u64()?;
+        r.is_empty().then_some((a, b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_round_trips() {
+        fn rt<T: VertexCodec + PartialEq + std::fmt::Debug>(v: T) {
+            let mut buf = Vec::new();
+            v.encode(&mut buf);
+            assert_eq!(buf.len(), v.encoded_len());
+            assert_eq!(T::decode(&buf), Some(v));
+        }
+        rt(0u32);
+        rt(u32::MAX);
+        rt(u64::MAX - 7);
+        rt(-1.25f32);
+        rt(1e300f64);
+        rt((3u64, u64::MAX));
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_rejected() {
+        let mut buf = Vec::new();
+        7u64.encode(&mut buf);
+        assert!(u64::decode(&buf[..7]).is_none(), "truncated");
+        buf.push(0);
+        assert!(u64::decode(&buf).is_none(), "trailing byte");
+    }
+
+    #[test]
+    fn vector_helpers_round_trip() {
+        let mut buf = Vec::new();
+        put_f32s(&mut buf, &[1.0, 2.5, -3.0]);
+        put_u32s(&mut buf, &[9, 8]);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.f32s(), Some(vec![1.0, 2.5, -3.0]));
+        assert_eq!(r.u32s(), Some(vec![9, 8]));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn corrupt_length_prefix_fails_cleanly() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 1_000_000); // claims 1M floats, provides none
+        let mut r = ByteReader::new(&buf);
+        assert!(r.f32s().is_none());
+    }
+}

@@ -323,3 +323,63 @@ fn two_worker_smoke_conserves_updates() {
     assert_eq!(c.per_worker_deferrals.iter().sum::<u64>(), c.deferrals);
     assert_eq!(c.per_worker_conflicts.iter().sum::<u64>(), c.conflicts);
 }
+
+/// Steal-half auto-select: with the flip threshold floored at zero, any
+/// worker that steals at all flips to steal-half mid-run — the run must
+/// still conserve every update and count at most one flip per worker.
+/// Conversely, an infinite threshold and the explicit `steal_half`
+/// override must both record zero flips.
+#[test]
+fn auto_steal_half_flips_conserve_and_respect_overrides() {
+    let leaves = 16u32;
+    let rounds = 300u64;
+    let f = BumpHub { rounds };
+    let run = |auto_frac: f64, explicit: bool| {
+        let mut g = star(leaves);
+        let sched = MultiQueueFifo::new(g.num_vertices(), 4);
+        for v in 1..=leaves {
+            sched.add_task(Task::new(v));
+        }
+        let report = Program::new()
+            .update_fn(&f)
+            .model(ConsistencyModel::Full)
+            .workers(4)
+            .steal_half(explicit)
+            .steal_half_auto(auto_frac)
+            .run_on(&ThreadedEngine, &mut g, &sched, &Sdt::new());
+        assert_eq!(report.updates, leaves as u64 * rounds, "conservation");
+        for v in 1..=leaves {
+            assert_eq!(g.vertex_data(v).1, rounds, "leaf {v} round count");
+        }
+        report
+    };
+
+    // Floor threshold: every worker that steals flips (once).
+    let eager = run(0.0, false);
+    assert!(
+        eager.contention.auto_steal_half_flips <= 4,
+        "at most one flip per worker: {:?}",
+        eager.contention
+    );
+    // With real steal pressure some busy worker must have crossed the
+    // floored threshold (a handful of steals could in principle all come
+    // from a worker that barely ran, so gate on a meaningful count).
+    if eager.contention.steals >= 32 {
+        assert!(
+            eager.contention.auto_steal_half_flips > 0,
+            "steal pressure observed but no worker flipped: {:?}",
+            eager.contention
+        );
+    }
+
+    // Infinite threshold: auto-select disabled.
+    let never = run(f64::INFINITY, false);
+    assert_eq!(never.contention.auto_steal_half_flips, 0);
+
+    // Explicit steal-half: workers start in half mode, nothing to flip.
+    let forced = run(0.0, true);
+    assert_eq!(
+        forced.contention.auto_steal_half_flips, 0,
+        "the explicit override pre-empts the auto-flip"
+    );
+}

@@ -132,16 +132,20 @@ fn ghost_versions_monotone_and_consistent_after_sync() {
     // The engine built its own shard view; ours observed no syncs yet.
     // Drive the sync API directly and check per-entry monotonicity.
     let locks = LockTable::new(n);
-    let first = sharded.sync_all(&g, &locks);
+    let (first_vertices, first) = sharded.sync_all(&g, &locks);
     assert_eq!(first as usize, sharded.num_ghosts());
+    let replicated =
+        (0..n as u32).filter(|&v| !sharded.replicas_of(v).is_empty()).count() as u64;
+    assert_eq!(first_vertices, replicated, "interior vertices skipped before locking");
     let snapshot: Vec<u64> = sharded
         .shards()
         .iter()
         .flat_map(|s| s.ghosts().iter().map(|e| e.version()))
         .collect();
     assert!(snapshot.iter().all(|&v| v >= 1));
-    let second = sharded.sync_all(&g, &locks);
+    let (second_vertices, second) = sharded.sync_all(&g, &locks);
     assert_eq!(second, first);
+    assert_eq!(second_vertices, first_vertices);
     let after: Vec<u64> = sharded
         .shards()
         .iter()

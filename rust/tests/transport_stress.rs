@@ -1,0 +1,468 @@
+//! Stress tests for the ghost-sync transport layer: codec round-trips for
+//! every app vertex type, ChannelTransport vs DirectTransport conservation
+//! equivalence for BP and Gibbs across shard counts and staleness bounds,
+//! delta coalescing on repeat-writer workloads, and the bounded-staleness
+//! admission semantics (`s = 0` reproduces PR 3's synchronous flush
+//! accounting exactly; `s > 0` never lets a reader observe a replica more
+//! than `s` versions behind).
+
+use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
+use graphlab::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
+use graphlab::apps::gibbs::{chromatic_sets, GibbsEdge, GibbsUpdate, GibbsVertex};
+use graphlab::apps::mrf::{random_mrf, BpVertex, EdgePotential, Mrf};
+use graphlab::consistency::{ConsistencyModel, Scope};
+use graphlab::engine::{
+    ChannelShardedEngine, Program, SequentialEngine, ShardedEngine, ThreadedEngine,
+    UpdateContext, UpdateFn,
+};
+use graphlab::graph::{DataGraph, GraphBuilder, ShardedGraph};
+use graphlab::scheduler::{
+    FifoScheduler, MultiQueueFifo, PriorityScheduler, Scheduler, SetScheduler, Task,
+};
+use graphlab::sdt::Sdt;
+use graphlab::transport::{ChannelTransport, GhostTransport, VertexCodec};
+use graphlab::util::Pcg32;
+use std::sync::Arc;
+
+// ---- codec round-trips ---------------------------------------------------
+
+/// Every vertex type that can ride the serializing transport must survive
+/// an encode/decode round-trip bit-exactly.
+#[test]
+fn codec_round_trip_every_app_vertex_type() {
+    // BP vertex: distributions + observation + learning stats.
+    let bp = BpVertex {
+        potential: vec![0.25, 0.5, 0.25],
+        belief: vec![0.1, 0.7, 0.2],
+        observed: 2,
+        axis_stats: [0.5, -1.25, 3.0],
+    };
+    let mut buf = Vec::new();
+    bp.encode(&mut buf);
+    let back = BpVertex::decode(&buf).expect("bp decodes");
+    assert_eq!(back.potential, bp.potential);
+    assert_eq!(back.belief, bp.belief);
+    assert_eq!(back.observed, bp.observed);
+    assert_eq!(back.axis_stats, bp.axis_stats);
+    assert!(BpVertex::decode(&buf[..buf.len() - 1]).is_none(), "truncation rejected");
+
+    // Gibbs vertex: potential + sample + visit counts + color.
+    let gv = GibbsVertex {
+        potential: vec![1.0, 2.0],
+        value: 1,
+        counts: vec![17, 41],
+        color: 3,
+    };
+    let mut buf = Vec::new();
+    gv.encode(&mut buf);
+    let back = GibbsVertex::decode(&buf).expect("gibbs decodes");
+    assert_eq!(back.potential, gv.potential);
+    assert_eq!(back.value, gv.value);
+    assert_eq!(back.counts, gv.counts);
+    assert_eq!(back.color, gv.color);
+
+    // Primitive vertex types used by the stress workloads.
+    let mut buf = Vec::new();
+    (7u64, 99u64).encode(&mut buf);
+    assert_eq!(<(u64, u64)>::decode(&buf), Some((7, 99)));
+    let mut buf = Vec::new();
+    123456u64.encode(&mut buf);
+    assert_eq!(u64::decode(&buf), Some(123456));
+    let mut buf = Vec::new();
+    (-2.5f64).encode(&mut buf);
+    assert_eq!(f64::decode(&buf), Some(-2.5));
+}
+
+/// Unit-level channel round-trip against real ghost tables: send versioned
+/// deltas for every replicated vertex, drain every shard, and the replicas
+/// must equal the masters with version == pending (nothing in flight).
+#[test]
+fn channel_transport_round_trips_into_ghost_tables() {
+    let side = 6u32;
+    let mut b = GraphBuilder::new();
+    for i in 0..side * side {
+        b.add_vertex(i as u64);
+    }
+    for y in 0..side {
+        for x in 0..side {
+            let v = y * side + x;
+            if x + 1 < side {
+                b.add_undirected(v, v + 1, (), ());
+            }
+            if y + 1 < side {
+                b.add_undirected(v, v + side, (), ());
+            }
+        }
+    }
+    let mut g = b.build();
+    let n = g.num_vertices();
+    let sg = ShardedGraph::new(&mut g, 3);
+    assert!(sg.num_ghosts() > 0);
+    let transport = ChannelTransport::new(&sg);
+
+    let mut sent_bytes = 0u64;
+    let mut sent = 0u64;
+    for v in 0..n as u32 {
+        if sg.replicas_of(v).is_empty() {
+            continue;
+        }
+        *g.vertex_data(v) = 1000 + v as u64;
+        let ver = sg.bump_master(v);
+        let r = transport.send(sg.owner_of(v), v, ver, &(1000 + v as u64));
+        assert_eq!(r.replicas_now, 0, "channel applies at drain");
+        assert!(r.bytes > 0);
+        sent_bytes += r.bytes;
+        sent += 1;
+    }
+    assert!(sent > 0);
+
+    let mut applied = 0u64;
+    let mut drained_bytes = 0u64;
+    for s in 0..sg.num_shards() {
+        let d = transport.drain(s);
+        applied += d.applied;
+        drained_bytes += d.bytes;
+    }
+    assert_eq!(applied as usize, sg.num_ghosts(), "every replica written once");
+    assert_eq!(drained_bytes, sent_bytes, "every queued byte consumed");
+    assert!(sg.ghosts_consistent(&mut g), "codec round-trip preserved the data");
+    for sh in sg.shards() {
+        for e in sh.ghosts() {
+            assert_eq!(e.version(), e.pending_version(), "nothing left in flight");
+            assert_eq!(e.version(), sg.master_version(e.global()));
+        }
+    }
+}
+
+// ---- BP: channel vs sequential conservation ------------------------------
+
+fn run_bp_sequential(mrf: &mut Mrf, bound: f32) {
+    let n = mrf.graph.num_vertices();
+    let sdt = Sdt::new();
+    sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+    let sched = PriorityScheduler::new(n);
+    for v in 0..n as u32 {
+        sched.add_task(Task::with_priority(v, 1.0));
+    }
+    let upd = BpUpdate::new(mrf.arity, bound, Arc::new(mrf.tables.clone()));
+    Program::new()
+        .update_fn(&upd)
+        .model(ConsistencyModel::Edge)
+        .max_updates(200_000)
+        .run_on(&SequentialEngine, &mut mrf.graph, &sched, &sdt);
+}
+
+/// Acceptance: ChannelTransport-backed BP matches the sequential fixed
+/// point at k in {2, 4} with staleness in {0, 4} — the serialized path
+/// changes how replicas move, never what the computation produces.
+#[test]
+fn channel_bp_matches_sequential_beliefs_under_staleness() {
+    let mk = || {
+        let mut rng = Pcg32::seed_from_u64(42);
+        random_mrf(80, 160, 3, &mut rng)
+    };
+    let mut seq = mk();
+    run_bp_sequential(&mut seq, 1e-6);
+    let reference: Vec<Vec<f32>> =
+        (0..80u32).map(|v| seq.graph.vertex_data(v).belief.clone()).collect();
+
+    for k in [2usize, 4] {
+        for staleness in [0u64, 4] {
+            let mut par = mk();
+            let n = par.graph.num_vertices();
+            let sdt = Sdt::new();
+            sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+            let sched = FifoScheduler::new(n);
+            for v in 0..n as u32 {
+                sched.add_task(Task::new(v));
+            }
+            let upd = BpUpdate::new(par.arity, 1e-6, Arc::new(par.tables.clone()));
+            let report = Program::new()
+                .update_fn(&upd)
+                .workers(4)
+                .model(ConsistencyModel::Full)
+                .ghost_staleness(staleness)
+                .ghost_batch(if staleness == 0 { 1 } else { 8 })
+                .max_updates(500_000)
+                .run_on(&ChannelShardedEngine::new(k), &mut par.graph, &sched, &sdt);
+            assert!(report.updates > 0, "k={k} s={staleness}");
+            let c = &report.contention;
+            assert_eq!(c.shards, k);
+            assert!(c.deltas_sent > 0, "k={k} s={staleness}");
+            assert!(c.bytes_shipped > 0, "channel really serialized: k={k} s={staleness}");
+            assert!(
+                c.max_ghost_staleness <= staleness,
+                "k={k}: observed lag {} exceeds bound {staleness}",
+                c.max_ghost_staleness
+            );
+            for v in 0..n as u32 {
+                let b = &par.graph.vertex_data(v).belief;
+                for (x, y) in reference[v as usize].iter().zip(b.iter()) {
+                    assert!(
+                        (x - y).abs() < 5e-3,
+                        "k={k} s={staleness} vertex {v}: seq={:?} channel={b:?}",
+                        reference[v as usize]
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- Gibbs: channel conservation -----------------------------------------
+
+fn color_graph(g: &mut DataGraph<GibbsVertex, GibbsEdge>) {
+    let n = g.num_vertices();
+    let sched = FifoScheduler::new(n);
+    for v in 0..n as u32 {
+        sched.add_task(Task::new(v));
+    }
+    let upd = ColoringUpdate;
+    Program::new()
+        .update_fn(&upd)
+        .workers(2)
+        .model(ConsistencyModel::Edge)
+        .run_on(&ThreadedEngine, g, &sched, &Sdt::new());
+}
+
+/// Acceptance: ChannelTransport-backed chromatic Gibbs conserves exactly
+/// one sample per vertex per sweep at k in {2, 4} with staleness in
+/// {0, 4}.
+#[test]
+fn channel_gibbs_conserves_sweeps_under_staleness() {
+    let sweeps = 300usize;
+    let build = || {
+        let mut b = GraphBuilder::new();
+        for _ in 0..8 {
+            b.add_vertex(GibbsVertex::new(vec![1.0, 1.0]));
+        }
+        let e = GibbsEdge { potential: EdgePotential::Table(0) };
+        for i in 0..7u32 {
+            b.add_undirected(i, i + 1, e, e);
+        }
+        b.build()
+    };
+    let tables = vec![vec![1.5, 0.5, 0.5, 1.5]];
+
+    for k in [2usize, 4] {
+        for staleness in [0u64, 4] {
+            let mut g = build();
+            color_graph(&mut g);
+            assert!(validate_coloring(&mut g).is_ok());
+            let classes = color_classes(&mut g);
+            let sets = chromatic_sets(&classes, sweeps, 0);
+            let sched = SetScheduler::planned(
+                &sets,
+                g.num_vertices(),
+                |v| g.neighbors(v),
+                ConsistencyModel::Edge,
+            );
+            let upd = GibbsUpdate::new(2, Arc::new(tables.clone()), 4, 9);
+            let report = Program::new()
+                .update_fn(&upd)
+                .workers(4)
+                .model(ConsistencyModel::Full)
+                .ghost_staleness(staleness)
+                .ghost_batch(if staleness == 0 { 1 } else { 4 })
+                .run_on(&ChannelShardedEngine::new(k), &mut g, &sched, &Sdt::new());
+            assert_eq!(
+                report.updates,
+                8 * sweeps as u64,
+                "k={k} s={staleness}: sweep conservation"
+            );
+            let c = &report.contention;
+            assert_eq!(c.shards, k);
+            assert!(c.boundary_updates > 0, "a cut chain has boundary work");
+            assert!(c.bytes_shipped > 0, "k={k} s={staleness}");
+            assert!(c.max_ghost_staleness <= staleness, "k={k} s={staleness}");
+            for v in 0..8u32 {
+                let total: u32 = g.vertex_data(v).counts.iter().sum();
+                assert_eq!(
+                    total as usize, sweeps,
+                    "k={k} s={staleness} vertex {v}: one sample per sweep"
+                );
+            }
+        }
+    }
+}
+
+// ---- delta batching / coalescing -----------------------------------------
+
+struct SelfBump {
+    rounds: u64,
+}
+impl UpdateFn<u64, ()> for SelfBump {
+    fn update(&self, scope: &mut Scope<'_, u64, ()>, ctx: &mut UpdateContext<'_>) {
+        *scope.vertex_mut() += 1;
+        if *scope.vertex() < self.rounds {
+            ctx.add_task(scope.center(), 1.0);
+        }
+    }
+}
+
+/// A path graph cut in two has one boundary vertex per shard that every
+/// sync window sees repeatedly: with a window of 16 the batcher must
+/// coalesce most of its writes into far fewer deltas than the synchronous
+/// (window 1) run ships. Every record is accounted: sent + coalesced =
+/// boundary updates.
+#[test]
+fn coalescing_reduces_deltas_sent_on_repeat_writers() {
+    let n = 16usize;
+    let rounds = 100u64;
+    let build = || {
+        let mut b: GraphBuilder<u64, ()> = GraphBuilder::new();
+        for _ in 0..n {
+            b.add_vertex(0u64);
+        }
+        for i in 0..n as u32 - 1 {
+            b.add_undirected(i, i + 1, (), ());
+        }
+        b.build()
+    };
+    let f = SelfBump { rounds };
+    let run = |window: usize| {
+        let mut g = build();
+        let sched = MultiQueueFifo::new(n, 2);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let report = Program::new()
+            .update_fn(&f)
+            .workers(2)
+            .model(ConsistencyModel::Full)
+            .ghost_staleness(8)
+            .ghost_batch(window)
+            .run_on(&ShardedEngine::new(2), &mut g, &sched, &Sdt::new());
+        assert_eq!(report.updates, n as u64 * rounds, "window {window}: conservation");
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), rounds, "window {window} vertex {v}");
+        }
+        report
+    };
+
+    let sync = run(1);
+    let sc = &sync.contention;
+    assert_eq!(sc.deltas_sent, sc.boundary_updates, "window 1 ships every record");
+    assert_eq!(sc.deltas_coalesced, 0);
+
+    let batched = run(16);
+    let bc = &batched.contention;
+    assert_eq!(
+        bc.deltas_sent + bc.deltas_coalesced,
+        bc.boundary_updates,
+        "every boundary record either ships or coalesces"
+    );
+    assert!(bc.deltas_coalesced > 0, "window 16 must coalesce repeat writes: {bc:?}");
+    assert!(
+        bc.deltas_sent * 2 < sc.deltas_sent,
+        "batching must at least halve the delta count: {} vs {}",
+        bc.deltas_sent,
+        sc.deltas_sent
+    );
+}
+
+// ---- bounded staleness ----------------------------------------------------
+
+fn grid(side: u32) -> DataGraph<u64, ()> {
+    let mut b = GraphBuilder::new();
+    for _ in 0..side * side {
+        b.add_vertex(0u64);
+    }
+    for y in 0..side {
+        for x in 0..side {
+            let v = y * side + x;
+            if x + 1 < side {
+                b.add_undirected(v, v + 1, (), ());
+            }
+            if y + 1 < side {
+                b.add_undirected(v, v + side, (), ());
+            }
+        }
+    }
+    b.build()
+}
+
+/// `s = 0` with the default window reproduces PR 3's synchronous flush
+/// accounting exactly: one delta per boundary update, one replica write
+/// per replica per update, no pulls, no observable lag.
+#[test]
+fn staleness_zero_matches_synchronous_flush_semantics() {
+    let side = 8u32;
+    let rounds = 25u64;
+    let k = 2;
+    let mut g = grid(side);
+    let n = g.num_vertices();
+    let probe = ShardedGraph::new(&mut g, k);
+    let boundary_vertices: u64 =
+        (0..n as u32).filter(|&v| probe.is_boundary(v)).count() as u64;
+    let total_replicas: u64 =
+        (0..n as u32).map(|v| probe.replicas_of(v).len() as u64).sum();
+    assert!(boundary_vertices > 0);
+
+    let f = SelfBump { rounds };
+    let report = Program::new()
+        .update_fn(&f)
+        .model(ConsistencyModel::Full)
+        .workers(4)
+        .ghost_staleness(0)
+        .ghost_batch(1)
+        .run_on(&ShardedEngine::new(k), &mut g, &seeded(n, 4), &Sdt::new());
+    assert_eq!(report.updates, n as u64 * rounds);
+    let c = &report.contention;
+    assert_eq!(c.boundary_updates, boundary_vertices * rounds);
+    assert_eq!(c.ghost_syncs, total_replicas * rounds, "PR 3 exact flush accounting");
+    assert_eq!(c.deltas_sent, boundary_vertices * rounds);
+    assert_eq!(c.deltas_coalesced, 0);
+    assert_eq!(c.staleness_pulls, 0, "synchronous flush leaves nothing to pull");
+    assert_eq!(c.max_ghost_staleness, 0, "no reader ever saw a stale replica");
+}
+
+fn seeded(n: usize, workers: usize) -> MultiQueueFifo {
+    let sched = MultiQueueFifo::new(n, workers);
+    for v in 0..n as u32 {
+        sched.add_task(Task::new(v));
+    }
+    sched
+}
+
+/// `s > 0` with a lazy flush window: readers may observe lag, but never
+/// more than `s` versions — the admission check pulls anything worse — and
+/// with a window far larger than the run, pulls are the only thing keeping
+/// readers fresh, so they must actually fire.
+#[test]
+fn staleness_bound_is_enforced_and_pulls_fire() {
+    let side = 16u32;
+    let rounds = 1000u64;
+    let f = SelfBump { rounds };
+    for staleness in [1u64, 4] {
+        let mut g = grid(side);
+        let n = g.num_vertices();
+        let report = Program::new()
+            .update_fn(&f)
+            .model(ConsistencyModel::Full)
+            .workers(4)
+            .ghost_staleness(staleness)
+            // Window far beyond the run: flushes only happen on idle/exit,
+            // so replica freshness rides on pull-on-demand.
+            .ghost_batch(1_000_000)
+            .run_on(&ShardedEngine::new(2), &mut g, &seeded(n, 4), &Sdt::new());
+        assert_eq!(report.updates, n as u64 * rounds, "s={staleness}: conservation");
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), rounds, "s={staleness} vertex {v}");
+        }
+        let c = &report.contention;
+        assert!(
+            c.max_ghost_staleness <= staleness,
+            "s={staleness}: reader observed lag {}",
+            c.max_ghost_staleness
+        );
+        assert!(
+            c.staleness_pulls > 0,
+            "s={staleness}: lazy flushes must force admission pulls: {c:?}"
+        );
+        assert!(
+            c.deltas_coalesced > 0,
+            "s={staleness}: a huge window coalesces repeat writes: {c:?}"
+        );
+    }
+}
