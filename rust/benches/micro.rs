@@ -12,8 +12,8 @@
 //!   per-vertex memory footprint vs the old `RwLock<()>` table;
 //! * end-to-end engine overhead per trivial update (1..4 workers);
 //! * ghost-sync transport throughput: deltas/sec and bytes per delta for
-//!   the direct vs serialized-channel backends at batch windows {1,16,64}
-//!   — results/BENCH_transport.json;
+//!   the direct vs serialized-channel vs unix-socket backends at batch
+//!   windows {1,16,64} — results/BENCH_transport.json;
 //! * PJRT batched-kernel dispatch latency (if artifacts are built).
 //!
 //! Output: bench table on stdout + results/micro.tsv +
@@ -355,16 +355,18 @@ fn main() {
         }
     }
 
-    // ---- transport: Direct vs Channel across batch windows ------------------
+    // ---- transport: Direct vs Channel vs Socket across batch windows --------
     //
     // The ghost-sync transport layer's cost drivers: deltas/sec through the
     // batcher + backend, and bytes shipped per delta (zero for the direct
-    // in-memory backend; the serialized frame size for the channel backend).
+    // in-memory backend; the serialized frame size for the channel and
+    // unix-socket backends — the socket rows additionally pay the kernel
+    // syscall path and the reader-thread hop before a drain can apply).
     // Machine-readable copy in results/BENCH_transport.json.
     let mut transport_json: Vec<(String, f64)> = Vec::new();
     {
         use graphlab::transport::{
-            ChannelTransport, DeltaBatcher, DirectTransport, GhostTransport,
+            ChannelTransport, DeltaBatcher, DirectTransport, GhostTransport, SocketTransport,
         };
         let side = 64u32;
         let mut g = grid2d(side);
@@ -382,12 +384,15 @@ fn main() {
             "{:<44} {:>12} {:>14}",
             "transport", "deltas/s", "bytes/delta"
         );
-        for backend in ["direct", "channel"] {
+        for backend in ["direct", "channel", "socket"] {
             for batch in [1usize, 16, 64] {
-                let transport: Box<dyn GhostTransport<u64> + '_> = if backend == "direct" {
-                    Box::new(DirectTransport::new(&sharded))
-                } else {
-                    Box::new(ChannelTransport::new(&sharded))
+                let transport: Box<dyn GhostTransport<u64> + '_> = match backend {
+                    "direct" => Box::new(DirectTransport::new(&sharded)),
+                    "channel" => Box::new(ChannelTransport::new(&sharded)),
+                    _ => Box::new(
+                        SocketTransport::new(&sharded)
+                            .expect("unix-socket transport setup"),
+                    ),
                 };
                 let rounds = 200u64;
                 let timer = Timer::start();
@@ -414,6 +419,12 @@ fn main() {
                     for shard in 0..k {
                         transport.drain(shard);
                     }
+                }
+                // Asynchronous backends: charge full delivery (reader
+                // threads + kernel buffers) to the measured window.
+                transport.finalize();
+                for shard in 0..k {
+                    transport.drain(shard);
                 }
                 let secs = timer.elapsed_secs().max(1e-12);
                 let dps = deltas as f64 / secs;

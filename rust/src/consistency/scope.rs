@@ -4,6 +4,7 @@
 
 use super::{Conflict, ConsistencyModel, LockTable, ScopeGuard};
 use crate::graph::{DataGraph, Edge, EdgeId, LocalRef, ShardedGraph, VertexId};
+use crate::transport::{GhostTransport, PullRequest};
 
 /// Locked neighborhood view passed to update functions:
 /// `D_{S_v} <- f(D_{S_v}, T)`.
@@ -213,45 +214,76 @@ impl<'a, V, E> Scope<'a, V, E> {
     }
 }
 
+/// Outcome of one [`Scope::refresh_stale_ghosts`] admission pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct GhostRefresh {
+    /// Pull-on-demand refreshes forced past the staleness bound.
+    pub pulls: u64,
+    /// Pulls whose request and reply crossed the transport's byte path
+    /// (always equals `pulls` on a serializing backend, 0 on direct).
+    pub served: u64,
+    /// Request + reply wire bytes the pulls moved.
+    pub bytes: u64,
+    /// Max staleness actually observed by this reader, post-pull.
+    pub max_lag: u64,
+}
+
 impl<'a, V: Clone, E> Scope<'a, V, E> {
     /// Bounded-staleness admission check (sharded engine): for every ghost
-    /// replica this scope would read on `shard`, force a pull-on-demand
-    /// from the owner's master data if the replica lags the master by more
-    /// than `bound` versions — so an update function never observes a
-    /// replica older than `bound` versions, regardless of how lazily the
-    /// transport flushes. `bound = 0` forces replicas exactly current at
-    /// every admission (the synchronous semantics of the per-update
-    /// flush).
+    /// replica this scope would read on `shard`, force a pull-on-demand if
+    /// the replica lags the master by more than `bound` versions — so an
+    /// update function never observes a replica older than `bound`
+    /// versions, regardless of how lazily the transport flushes. `bound =
+    /// 0` forces replicas exactly current at every admission (the
+    /// synchronous semantics of the per-update flush).
+    ///
+    /// The pull is issued through `transport`'s **request/reply path**
+    /// ([`GhostTransport::pull`]): a [`PullRequest`] frame crosses to the
+    /// owner and the encoded-vertex reply crosses back, so on a
+    /// serializing backend scope admission never touches peer master data
+    /// directly — the owner-side service closure this method supplies is
+    /// the single place the master is read, and it runs under the locks
+    /// described below.
     ///
     /// Must run with the scope's neighbor locks held (Edge/Full models):
     /// the held read locks both make the master read safe and freeze the
     /// master version, so the post-check staleness really is what the
-    /// update function reads. Returns `(pulls performed, max staleness
-    /// actually observed by this reader)`.
+    /// update function reads.
     pub(crate) fn refresh_stale_ghosts(
         &self,
         sharded: &ShardedGraph<V>,
         shard: usize,
         bound: u64,
-    ) -> (u64, u64) {
+        transport: &dyn GhostTransport<V>,
+    ) -> GhostRefresh {
         debug_assert!(
             self.model.excludes_neighbors(),
             "staleness admission requires neighbor locks (Edge/Full)"
         );
         let sh = sharded.shard(shard);
-        let mut pulls = 0u64;
-        let mut max_lag = 0u64;
+        let graph = self.graph;
+        let mut out = GhostRefresh::default();
         for &code in sh.local_neighbors(self.center) {
             let LocalRef::Ghost(gi) = sh.resolve(code) else { continue };
             let entry = sh.ghost(gi as usize);
             let u = entry.global();
-            let lag = sharded.master_version(u).saturating_sub(entry.version());
+            let master_version = sharded.master_version(u);
+            let lag = master_version.saturating_sub(entry.version());
             let observed = if lag > bound {
-                // SAFETY: Edge/Full scopes hold (at least) a read lock on
-                // every neighbor, including `u`.
-                let data = unsafe { self.graph.vertex_data_unchecked(u) };
-                entry.store_versioned(data, sharded.master_version(u));
-                pulls += 1;
+                let receipt = transport.pull(
+                    shard,
+                    PullRequest { vertex: u, min_version: master_version },
+                    &|v| {
+                        debug_assert_eq!(v, u, "pull service asked for the wrong vertex");
+                        // SAFETY: Edge/Full scopes hold (at least) a read
+                        // lock on every neighbor, including `u`.
+                        let data = unsafe { graph.vertex_data_unchecked(u) };
+                        (data, sharded.master_version(u))
+                    },
+                );
+                out.pulls += 1;
+                out.served += receipt.served as u64;
+                out.bytes += receipt.bytes;
                 // Re-measure after the pull: this is the staleness the
                 // update function actually reads. The held read lock
                 // freezes the master version, so anything above `bound`
@@ -262,11 +294,11 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
             } else {
                 lag
             };
-            if observed > max_lag {
-                max_lag = observed;
+            if observed > out.max_lag {
+                out.max_lag = observed;
             }
         }
-        (pulls, max_lag)
+        out
     }
 }
 

@@ -21,7 +21,7 @@ pub mod trace;
 
 pub use program::{Engine, Program};
 pub use sequential::SequentialEngine;
-pub use sharded::{ChannelShardedEngine, ShardedEngine};
+pub use sharded::{ChannelShardedEngine, ShardedEngine, SocketShardedEngine};
 pub use threaded::ThreadedEngine;
 
 use crate::consistency::{ConsistencyModel, Scope};
@@ -293,9 +293,18 @@ pub struct ContentionStats {
     pub bytes_shipped: u64,
     /// Pull-on-demand refreshes forced by the bounded-staleness admission
     /// check ([`EngineConfig::ghost_staleness`]): a reader found a ghost
-    /// replica lagging past the bound and copied the master in before its
-    /// update ran.
+    /// replica lagging past the bound and refreshed it before its update
+    /// ran.
     pub staleness_pulls: u64,
+    /// Staleness pulls whose request and reply crossed the transport's
+    /// byte path (`GhostTransport::pull` request/reply frames). On a
+    /// serializing backend this equals [`ContentionStats::staleness_pulls`]
+    /// — scope admission never reads peer master data directly; on the
+    /// direct backend it is structurally zero (pulls are in-place reads).
+    pub pulls_served: u64,
+    /// Sends that stalled on a full bounded transport send window (the
+    /// socket backend's backpressure; zero for unbounded backends).
+    pub backpressure_stalls: u64,
     /// Largest replica staleness (in master versions) any update function
     /// actually observed after the admission check — never exceeds
     /// [`EngineConfig::ghost_staleness`] on Edge/Full-model runs.

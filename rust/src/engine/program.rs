@@ -15,7 +15,7 @@
 //! ```
 
 use super::sequential::{SeqOptions, SequentialEngine};
-use super::sharded::ShardedEngine;
+use super::sharded::{ChannelShardedEngine, ShardedEngine, SocketShardedEngine};
 use super::threaded::ThreadedEngine;
 use super::trace::TaskTrace;
 use super::{EngineConfig, RunReport, TerminationFn, UpdateFn};
@@ -23,6 +23,7 @@ use crate::consistency::{ConsistencyModel, LockTable};
 use crate::graph::DataGraph;
 use crate::scheduler::Scheduler;
 use crate::sdt::{Sdt, SyncOp};
+use crate::transport::VertexCodec;
 
 /// An engine back-end that can execute a [`Program`]. Both back-ends take
 /// `&mut DataGraph` for a uniform signature; the threaded engine reborrows
@@ -92,6 +93,31 @@ impl<V, E> Engine<V, E> for SequentialEngine {
     }
 }
 
+/// Sharded run-path selector installed by [`Program::transport`]: a plain
+/// function pointer, so the serializing back-ends' `V: VertexCodec` bound
+/// lives on the *setter* and [`Program::run`] keeps its loose bounds for
+/// vertex types that never leave one address space.
+type WireRunner<V, E> =
+    for<'p> fn(&Program<'p, V, E>, &mut DataGraph<V, E>, &dyn Scheduler, &Sdt) -> RunReport;
+
+fn run_channel<V: VertexCodec + Clone + Send + Sync, E: Send + Sync>(
+    p: &Program<'_, V, E>,
+    graph: &mut DataGraph<V, E>,
+    scheduler: &dyn Scheduler,
+    sdt: &Sdt,
+) -> RunReport {
+    p.run_on(&ChannelShardedEngine::new(p.config.shards), graph, scheduler, sdt)
+}
+
+fn run_socket<V: VertexCodec + Clone + Send + Sync, E: Send + Sync>(
+    p: &Program<'_, V, E>,
+    graph: &mut DataGraph<V, E>,
+    scheduler: &dyn Scheduler,
+    sdt: &Sdt,
+) -> RunReport {
+    p.run_on(&SocketShardedEngine::new(p.config.shards), graph, scheduler, sdt)
+}
+
 /// A complete GraphLab program: graph-independent logic (update functions,
 /// syncs, terminators) plus run configuration. Built with chained setters,
 /// executed against a graph + scheduler + SDT via [`Program::run`] (which
@@ -107,6 +133,10 @@ pub struct Program<'a, V, E> {
     /// Sequential-backend options (trace capture, sync cadence, virtual
     /// workers for worker-affine schedulers).
     pub seq: SeqOptions,
+    /// Ghost-transport backend name selected by [`Program::transport`].
+    transport_name: &'static str,
+    /// Sharded run path for the selected serializing transport, if any.
+    wire: Option<WireRunner<V, E>>,
 }
 
 impl<'a, V, E> Default for Program<'a, V, E> {
@@ -117,6 +147,8 @@ impl<'a, V, E> Default for Program<'a, V, E> {
             terminators: Vec::new(),
             config: EngineConfig::default(),
             seq: SeqOptions::default(),
+            transport_name: "direct",
+            wire: None,
         }
     }
 }
@@ -212,6 +244,50 @@ impl<'a, V, E> Program<'a, V, E> {
         self
     }
 
+    /// Select the ghost-sync transport backend for sharded runs
+    /// ([`Program::shards`] `> 1`): `"direct"` (default — in-place replica
+    /// writes, zero wire bytes), `"channel"` (serializing per-shard-pair
+    /// byte queues), or `"socket"` (real Unix-domain-socket bytes with
+    /// bounded send windows and backpressure). The serializing backends
+    /// require the vertex type to implement
+    /// [`VertexCodec`](crate::transport::VertexCodec) — the bound lives on
+    /// this setter, so programs that never call it keep the loose
+    /// [`Program::run`] bounds.
+    ///
+    /// # Panics
+    /// On an unknown backend name.
+    pub fn transport(mut self, name: &str) -> Self
+    where
+        V: VertexCodec + Clone + Send + Sync,
+        E: Send + Sync,
+    {
+        match name {
+            "direct" => {
+                self.transport_name = "direct";
+                self.wire = None;
+            }
+            "channel" => {
+                self.transport_name = "channel";
+                self.wire = Some(run_channel::<V, E> as WireRunner<V, E>);
+            }
+            "socket" => {
+                self.transport_name = "socket";
+                self.wire = Some(run_socket::<V, E> as WireRunner<V, E>);
+            }
+            other => panic!(
+                "unknown ghost transport {other:?} (expected \"direct\", \"channel\", \
+                 or \"socket\")"
+            ),
+        }
+        self
+    }
+
+    /// The ghost-transport backend [`Program::run`] will use for sharded
+    /// runs (`"direct"` unless [`Program::transport`] overrode it).
+    pub fn transport_name(&self) -> &'static str {
+        self.transport_name
+    }
+
     /// Ghost delta-batcher sync window for the sharded back-end: flush
     /// after this many boundary-update records, coalescing repeated writes
     /// to the same vertex within the window (see
@@ -253,12 +329,13 @@ impl<'a, V, E> Program<'a, V, E> {
     }
 
     /// Execute, picking the back-end from the configuration:
-    /// [`Program::shards`] `> 1` runs the sharded engine, otherwise
-    /// `workers > 1` runs threaded, otherwise sequential. Programs with
-    /// *periodic* syncs never downgrade to sequential — only the
-    /// multi-threaded back-ends have the background sync thread that
-    /// honors `SyncOp::interval`, so downgrading would silently drop the
-    /// cadence.
+    /// [`Program::shards`] `> 1` runs the sharded engine (over the
+    /// backend [`Program::transport`] selected — direct unless
+    /// overridden), otherwise `workers > 1` runs threaded, otherwise
+    /// sequential. Programs with *periodic* syncs never downgrade to
+    /// sequential — only the multi-threaded back-ends have the background
+    /// sync thread that honors `SyncOp::interval`, so downgrading would
+    /// silently drop the cadence.
     pub fn run(
         &self,
         graph: &mut DataGraph<V, E>,
@@ -271,6 +348,9 @@ impl<'a, V, E> Program<'a, V, E> {
     {
         let needs_background_sync = self.syncs.iter().any(|op| op.interval.is_some());
         if self.config.shards > 1 {
+            if let Some(wire) = self.wire {
+                return wire(self, graph, scheduler, sdt);
+            }
             self.run_on(&ShardedEngine::new(self.config.shards), graph, scheduler, sdt)
         } else if self.config.workers > 1 || needs_background_sync {
             self.run_on(&ThreadedEngine, graph, scheduler, sdt)
@@ -474,6 +554,37 @@ mod tests {
         let mut g2 = ring(n);
         let report2 = threaded.run(&mut g2, &seeded_fifo(n), &Sdt::new());
         assert_eq!(report2.contention.shards, 0);
+    }
+
+    /// `.transport("channel"|"socket")` must route `run` through the
+    /// matching serializing sharded back-end (visible as shipped wire
+    /// bytes), while the default stays direct (zero wire bytes).
+    #[test]
+    fn transport_knob_routes_to_serializing_backends() {
+        let n = 32;
+        for (name, expect_bytes) in
+            [("direct", false), ("channel", true), ("socket", true)]
+        {
+            let f = Bump { rounds: 5 };
+            let program =
+                Program::new().update_fn(&f).workers(4).shards(2).transport(name);
+            assert_eq!(program.transport_name(), name);
+            let mut g = ring(n);
+            let report = program.run(&mut g, &seeded_fifo(n), &Sdt::new());
+            assert_eq!(report.updates, n as u64 * 5, "{name}");
+            assert_eq!(report.contention.shards, 2, "{name}: sharded engine ran");
+            assert_eq!(
+                report.contention.bytes_shipped > 0,
+                expect_bytes,
+                "{name}: wire bytes"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown ghost transport")]
+    fn unknown_transport_panics() {
+        let _ = Program::<u64, ()>::new().transport("carrier-pigeon");
     }
 
     #[test]

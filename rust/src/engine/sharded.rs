@@ -31,13 +31,17 @@
 //! [`DeltaBatcher`]; the batcher coalesces repeated writes within a sync
 //! window and flushes through a [`GhostTransport`] backend — the in-place
 //! [`DirectTransport`] for [`ShardedEngine`], the serializing
-//! [`ChannelTransport`] for [`ChannelShardedEngine`] — on window close,
+//! [`ChannelTransport`] for [`ChannelShardedEngine`], the Unix-socket
+//! [`SocketTransport`] for [`SocketShardedEngine`] — on window close,
 //! batch-size threshold, cross-shard handoff, idle, and worker exit.
 //! Read freshness is guarded by the **bounded-staleness** admission check:
 //! a scope about to read a ghost replica more than
 //! [`EngineConfig::ghost_staleness`] master versions behind forces a
 //! pull-on-demand first (`s = 0` reproduces the synchronous per-update
-//! flush semantics).
+//! flush semantics). The pull rides the transport's request/reply path,
+//! so on a serializing backend admission never reads peer master data
+//! directly (`ContentionStats::pulls_served` counts the wire-served
+//! pulls).
 
 use super::threaded::{
     should_auto_steal_half, tune_attempts, ThreadedEngine, LOCAL_DEQUE_CAP, START_ATTEMPTS,
@@ -52,7 +56,7 @@ use crate::graph::{DataGraph, ShardedGraph};
 use crate::scheduler::{Injector, Scheduler, Task, WorkStealingDeque};
 use crate::sdt::{Sdt, SyncOp};
 use crate::transport::{
-    ChannelTransport, DeltaBatcher, DirectTransport, GhostTransport, VertexCodec,
+    ChannelTransport, DeltaBatcher, DirectTransport, GhostTransport, SocketTransport, VertexCodec,
 };
 use crate::util::Timer;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -68,10 +72,25 @@ const STOP_LIMIT: u8 = 2;
 /// halves always make progress (both eventually release and retry).
 const PENDING_ATTEMPTS: u32 = 16;
 
-/// Drain incoming transport queues every this many completed updates per
-/// worker (on top of the idle/handoff/final drains): bounds a queueing
-/// backend's buffers when workers never go idle.
-const DRAIN_EVERY: u64 = 64;
+/// Starting drain tick: a worker consults its shard's incoming transport
+/// queues every this many completed updates (on top of the
+/// idle/handoff/final drains), then adapts the tick per worker on the
+/// queued byte depth — see the drain logic in [`run_core`].
+const DRAIN_TICK_START: u64 = 64;
+
+/// Tightest adaptive drain tick, selected while the queued bytes toward
+/// the worker's shard exceed [`DRAIN_HIGH_BYTES`]: bounds a queueing
+/// backend's buffers under sustained load.
+const DRAIN_TICK_MIN: u64 = 8;
+
+/// Loosest adaptive drain tick, reached by repeated empty checks: for
+/// apply-at-send backends (queued bytes structurally 0) the periodic
+/// drain decays to one cheap atomic read per 512 updates.
+const DRAIN_TICK_MAX: u64 = 512;
+
+/// Queued-byte watermark above which a worker drops its drain tick to
+/// [`DRAIN_TICK_MIN`].
+const DRAIN_HIGH_BYTES: u64 = 64 << 10;
 
 /// A split acquisition whose remote half is held while the local half was
 /// busy: the worker carries it across loop iterations, doing other work in
@@ -169,6 +188,77 @@ where
     }
 }
 
+/// Sharded engine back-end whose ghost traffic rides the
+/// [`SocketTransport`]: every delta and every staleness pull crosses a
+/// real Unix-domain socket as length-prefixed bytes — the wire-ready
+/// rehearsal of a multi-process deployment, selected via
+/// `Program::transport("socket")` or `run_on`. Socket files live in a
+/// per-run temp directory and are removed when the run ends. Everything
+/// above the transport (scheduling, locking, batching, staleness) is
+/// identical to [`ShardedEngine`].
+#[derive(Debug, Clone, Default)]
+pub struct SocketShardedEngine {
+    /// Shard count (`0` defers to `EngineConfig::shards` at run time).
+    pub shards: usize,
+    /// Per-connection bounded send window in bytes (`0` = the transport
+    /// default, [`crate::transport::DEFAULT_SEND_BUFFER`]). Senders that
+    /// would overflow it stall — counted in
+    /// `ContentionStats::backpressure_stalls`.
+    pub send_buffer: usize,
+}
+
+impl SocketShardedEngine {
+    /// Engine over `shards` shards with the default send window.
+    pub fn new(shards: usize) -> SocketShardedEngine {
+        SocketShardedEngine { shards, send_buffer: 0 }
+    }
+
+    /// Override the per-connection bounded send window (bytes).
+    pub fn with_send_buffer(mut self, bytes: usize) -> SocketShardedEngine {
+        self.send_buffer = bytes;
+        self
+    }
+}
+
+impl<V, E> Engine<V, E> for SocketShardedEngine
+where
+    V: VertexCodec + Clone + Send + Sync,
+    E: Send + Sync,
+{
+    fn name(&self) -> &'static str {
+        "sharded-socket"
+    }
+
+    fn execute(
+        &self,
+        program: &Program<'_, V, E>,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport {
+        let config = &program.config;
+        let requested = if self.shards > 0 { self.shards } else { config.shards };
+        let sharded = ShardedGraph::new(graph, requested.max(1));
+        let graph: &DataGraph<V, E> = graph;
+        let transport = match self.send_buffer {
+            0 => SocketTransport::new(&sharded),
+            cap => SocketTransport::with_send_buffer(&sharded, cap),
+        }
+        .expect("failed to set up the unix-socket ghost transport");
+        run_core(
+            graph,
+            &sharded,
+            &transport,
+            scheduler,
+            &program.fns,
+            sdt,
+            &program.syncs,
+            &program.terminators,
+            config,
+        )
+    }
+}
+
 /// Close a worker's sync window: ship every batched delta and fold the
 /// receipt into the worker's transport counters. The single accounting
 /// point for all four flush triggers (window close, handoff, idle, exit).
@@ -237,6 +327,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     let total_coalesced = AtomicU64::new(0);
     let total_bytes = AtomicU64::new(0);
     let total_pulls = AtomicU64::new(0);
+    let total_pulls_served = AtomicU64::new(0);
     let total_max_lag = AtomicU64::new(0);
     let total_auto_flips = AtomicU64::new(0);
     let syncs_run = AtomicU64::new(0);
@@ -298,6 +389,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
             let total_coalesced = &total_coalesced;
             let total_bytes = &total_bytes;
             let total_pulls = &total_pulls;
+            let total_pulls_served = &total_pulls_served;
             let total_max_lag = &total_max_lag;
             let total_auto_flips = &total_auto_flips;
             let retry = &retry;
@@ -326,7 +418,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                 let mut deltas_coalesced: u64 = 0;
                 let mut bytes_shipped: u64 = 0;
                 let mut staleness_pulls: u64 = 0;
+                let mut pulls_served: u64 = 0;
                 let mut max_lag: u64 = 0;
+                // Adaptive drain tick (worker-local, tuned on queued bytes).
+                let mut drain_tick: u64 = DRAIN_TICK_START;
+                let mut since_drain: u64 = 0;
                 let mut idle_spins: u32 = 0;
                 // Interior-path adaptive ladder (worker-local).
                 let mut attempts: u32 = START_ATTEMPTS;
@@ -674,14 +770,17 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                         && config.model.excludes_neighbors()
                         && sharded.is_boundary(task.vertex)
                     {
-                        let (pulls, lag) = scope.refresh_stale_ghosts(
+                        let refreshed = scope.refresh_stale_ghosts(
                             sharded,
                             my_shard,
                             config.ghost_staleness,
+                            transport,
                         );
-                        staleness_pulls += pulls;
-                        if lag > max_lag {
-                            max_lag = lag;
+                        staleness_pulls += refreshed.pulls;
+                        pulls_served += refreshed.served;
+                        bytes_shipped += refreshed.bytes;
+                        if refreshed.max_lag > max_lag {
+                            max_lag = refreshed.max_lag;
                         }
                     }
                     ctx.reset(w, task.priority);
@@ -713,12 +812,30 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                     inflight.fetch_sub(1, Ordering::AcqRel);
 
                     local_updates += 1;
-                    // Periodic drain tick: consume deltas queued toward this
-                    // shard even when the worker never idles, so a queueing
-                    // backend's buffers stay bounded under sustained load
-                    // (no-op for apply-at-send backends).
-                    if k > 1 && local_updates % DRAIN_EVERY == 0 {
-                        ghost_syncs += transport.drain(my_shard).applied;
+                    // Adaptive periodic drain: consume deltas queued toward
+                    // this shard even when the worker never idles, so a
+                    // queueing backend's buffers stay bounded under
+                    // sustained load. The tick adapts to the queued byte
+                    // depth — empty checks back it off toward
+                    // DRAIN_TICK_MAX (apply-at-send backends decay to a
+                    // cheap no-op), a backlog past DRAIN_HIGH_BYTES
+                    // tightens it to DRAIN_TICK_MIN.
+                    if k > 1 {
+                        since_drain += 1;
+                        if since_drain >= drain_tick {
+                            since_drain = 0;
+                            let queued = transport.queued_bytes(my_shard);
+                            if queued == 0 {
+                                drain_tick = (drain_tick * 2).min(DRAIN_TICK_MAX);
+                            } else {
+                                ghost_syncs += transport.drain(my_shard).applied;
+                                drain_tick = if queued >= DRAIN_HIGH_BYTES {
+                                    DRAIN_TICK_MIN
+                                } else {
+                                    drain_tick.min(DRAIN_TICK_START)
+                                };
+                            }
+                        }
                     }
                     let global = total_updates.fetch_add(1, Ordering::Relaxed) + 1;
                     if let Some(max) = config.max_updates {
@@ -760,6 +877,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                 total_coalesced.fetch_add(deltas_coalesced, Ordering::AcqRel);
                 total_bytes.fetch_add(bytes_shipped, Ordering::AcqRel);
                 total_pulls.fetch_add(staleness_pulls, Ordering::AcqRel);
+                total_pulls_served.fetch_add(pulls_served, Ordering::AcqRel);
                 total_max_lag.fetch_max(max_lag, Ordering::AcqRel);
                 total_auto_flips.fetch_add(auto_flips, Ordering::AcqRel);
                 if workers_remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
@@ -772,6 +890,9 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
 
     // Final transport drain: every queued delta lands before the caller
     // regains exclusive access to the graph (no-op for direct backends).
+    // `finalize` first blocks until asynchronous backends (reader threads,
+    // kernel buffers) have made every sent byte drainable.
+    transport.finalize();
     let mut drained = 0u64;
     for shard in 0..k {
         drained += transport.drain(shard).applied;
@@ -815,6 +936,8 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
             deltas_coalesced: total_coalesced.load(Ordering::Acquire),
             bytes_shipped: total_bytes.load(Ordering::Acquire),
             staleness_pulls: total_pulls.load(Ordering::Acquire),
+            pulls_served: total_pulls_served.load(Ordering::Acquire),
+            backpressure_stalls: transport.backpressure_stalls(),
             max_ghost_staleness: total_max_lag.load(Ordering::Acquire),
             auto_steal_half_flips: total_auto_flips.load(Ordering::Acquire),
             per_worker_conflicts,
@@ -945,6 +1068,38 @@ mod tests {
         // every delta is either applied at a drain or superseded by a
         // staleness pull that already carried a newer version
         assert!(c.ghost_syncs <= 80);
+        // a serializing backend serves every pull through request/reply
+        assert_eq!(c.pulls_served, c.staleness_pulls);
+    }
+
+    /// The socket backend moves every delta through real Unix-domain
+    /// sockets yet must converge to the same result.
+    #[test]
+    fn socket_backend_matches_direct_on_ring() {
+        let n = 64;
+        let f = SelfBump { rounds: 10 };
+        let program = Program::new()
+            .update_fn(&f)
+            .workers(4)
+            .model(ConsistencyModel::Full);
+        let mut g = ring(n);
+        let sched = MultiQueueFifo::new(n, 4);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let report =
+            program.run_on(&SocketShardedEngine::new(4), &mut g, &sched, &Sdt::new());
+        assert_eq!(report.updates, n as u64 * 10);
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), 10, "vertex {v}");
+        }
+        let c = &report.contention;
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.boundary_updates, 80);
+        assert_eq!(c.deltas_sent, 80);
+        assert!(c.bytes_shipped > 0, "socket backend really ships bytes");
+        assert!(c.ghost_syncs <= 80);
+        assert_eq!(c.pulls_served, c.staleness_pulls, "pulls ride the socket");
     }
 
     #[test]

@@ -27,6 +27,7 @@
 
 use super::{Csr, DataCell, DataGraph, PartitionMap, VertexId};
 use crate::consistency::{LockTable, ScopeLock};
+use crate::transport::{GhostTransport, PullRequest};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -353,14 +354,20 @@ impl<V: Clone> ShardedGraph<V> {
 
     /// Pull-on-demand: refresh one replica from its owner's current master
     /// data under a freshly taken per-vertex read lock, stamping it with
-    /// the master version. Returns whether the replica was behind and got
-    /// updated. (The engine's scope-admission staleness check uses the
-    /// in-scope variant `Scope::refresh_stale_ghosts`, which reuses the
-    /// locks the scope already holds.)
+    /// the master version. The refresh is issued through `transport`'s
+    /// request/reply path (`GhostTransport::pull`), so on a serializing
+    /// backend the data crosses the wire as a framed request + encoded
+    /// reply instead of a direct peer read; the owner-side service closure
+    /// supplied here is the single place the master is read, and it runs
+    /// under the held read lock. Returns whether the replica was behind
+    /// and got updated. (The engine's scope-admission staleness check uses
+    /// the in-scope variant `Scope::refresh_stale_ghosts`, which reuses
+    /// the locks the scope already holds.)
     pub fn pull_replica<E>(
         &self,
         graph: &DataGraph<V, E>,
         locks: &LockTable,
+        transport: &dyn GhostTransport<V>,
         shard: usize,
         ghost: usize,
     ) -> bool {
@@ -373,9 +380,16 @@ impl<V: Clone> ShardedGraph<V> {
         // Re-read under the lock: a writer may have bumped again before we
         // acquired it, and the data we read now carries that version.
         let master = self.master_version(v);
-        // SAFETY: read lock on v held for the duration of the copy.
-        let data = unsafe { graph.vertex_data_unchecked(v) };
-        entry.store_versioned(data, master)
+        let receipt = transport.pull(
+            shard,
+            PullRequest { vertex: v, min_version: master },
+            &|u| {
+                // SAFETY: read lock on v held for the duration of the copy.
+                let data = unsafe { graph.vertex_data_unchecked(u) };
+                (data, self.master_version(u))
+            },
+        );
+        receipt.applied
     }
 
     /// Propagate vertex `v` under a freshly taken per-vertex read lock.
@@ -608,6 +622,7 @@ mod tests {
     /// stale pull-on-demand refreshes a lagging replica from master data.
     #[test]
     fn versioned_sync_and_pull_on_demand() {
+        use crate::transport::DirectTransport;
         let mut g = grid4();
         let sg = ShardedGraph::new(&mut g, 2);
         let locks = LockTable::new(g.num_vertices());
@@ -634,10 +649,14 @@ mod tests {
         sg.bump_master(v);
         assert_eq!(sg.master_version(v) - entry.version(), 2);
         // pull-on-demand catches the replica up to the master version
-        assert!(sg.pull_replica(&g, &locks, s as usize, gi as usize));
+        let t = DirectTransport::new(&sg);
+        assert!(sg.pull_replica(&g, &locks, &t, s as usize, gi as usize));
         assert_eq!(entry.version(), 3);
         assert_eq!(entry.read(), 333);
-        assert!(!sg.pull_replica(&g, &locks, s as usize, gi as usize), "already fresh");
+        assert!(
+            !sg.pull_replica(&g, &locks, &t, s as usize, gi as usize),
+            "already fresh"
+        );
     }
 
     #[test]

@@ -169,13 +169,21 @@ pub fn run_summary(report: &crate::engine::RunReport) -> String {
         let _ = writeln!(
             out,
             "transport: {} deltas sent ({} coalesced), {} bytes shipped, \
-             {} staleness pulls (max replica lag {})",
+             {} staleness pulls ({} wire-served, max replica lag {})",
             c.deltas_sent,
             c.deltas_coalesced,
             c.bytes_shipped,
             c.staleness_pulls,
+            c.pulls_served,
             c.max_ghost_staleness
         );
+        if c.backpressure_stalls > 0 {
+            let _ = writeln!(
+                out,
+                "backpressure: {} sends stalled on a full transport window",
+                c.backpressure_stalls
+            );
+        }
     }
     if c.auto_steal_half_flips > 0 {
         let _ = writeln!(
@@ -310,6 +318,7 @@ mod tests {
                 deltas_coalesced: 40,
                 bytes_shipped: 4800,
                 staleness_pulls: 5,
+                pulls_served: 3,
                 max_ghost_staleness: 2,
                 ..Default::default()
             },
@@ -323,7 +332,8 @@ mod tests {
         assert!(text.contains("3 pipelined stalls"));
         assert!(text.contains("60 deltas sent (40 coalesced)"));
         assert!(text.contains("4800 bytes shipped"));
-        assert!(text.contains("5 staleness pulls (max replica lag 2)"));
+        assert!(text.contains("5 staleness pulls (3 wire-served, max replica lag 2)"));
+        assert!(!text.contains("backpressure"), "no stalls, no line");
     }
 
     /// The transport line is shard-gated, and the steal-policy line only
@@ -344,6 +354,11 @@ mod tests {
         report.contention.auto_steal_half_flips = 2;
         let text = run_summary(&report);
         assert!(text.contains("2 workers auto-flipped to steal-half"));
+        // the backpressure line renders only for sharded runs that stalled
+        report.contention.shards = 2;
+        report.contention.backpressure_stalls = 9;
+        let text = run_summary(&report);
+        assert!(text.contains("9 sends stalled on a full transport window"));
     }
 
     #[test]

@@ -1,14 +1,25 @@
 //! The **serialized channel backend**: per-shard-pair byte queues that
 //! really encode and decode every delta — the in-process stand-in for a
 //! socket or shared-memory ring. `send` frames the [`GhostDelta`] onto the
-//! `src → dst` queue of every destination shard holding a replica;
+//! `src → dst` queue of every destination shard holding a replica
+//! (wire format: `u32 vertex, u64 version, u32 len, payload`);
 //! `drain(dst)` consumes the queues addressed to `dst`, decodes each
 //! payload through the [`VertexCodec`], and applies it to the shard's
-//! ghost table (newest version wins, so reordered flushes from different
-//! workers are harmless). Every hop validates the codec round-trip a real
-//! multi-process deployment would depend on.
+//! ghost table (**newest version wins**, so reordered flushes from
+//! different workers are harmless). Every hop validates the codec
+//! round-trip a real multi-process deployment would depend on.
+//!
+//! Staleness pulls ride dedicated **request/reply lanes** per ordered
+//! shard pair: the requester frames a fixed-size [`PullRequest`] onto the
+//! lane's request queue, the owner side decodes it, serves the master
+//! data as an ordinary delta frame on the reply queue, and the requester
+//! decodes and applies it — the same byte discipline a wire backend needs,
+//! run synchronously on the requester's thread.
 
-use super::{ByteReader, DrainReceipt, GhostDelta, GhostTransport, SendReceipt, VertexCodec};
+use super::{
+    ByteReader, DrainReceipt, GhostDelta, GhostTransport, PullReceipt, PullRequest, SendReceipt,
+    VertexCodec,
+};
 use crate::graph::{ShardedGraph, VertexId};
 use std::sync::Mutex;
 
@@ -19,15 +30,19 @@ pub struct ChannelTransport<'g, V> {
     graph: &'g ShardedGraph<V>,
     k: usize,
     queues: Vec<Mutex<Vec<u8>>>,
+    /// Pull request/reply lanes, indexed `requester * k + owner`.
+    pull_lanes: Vec<Mutex<(Vec<u8>, Vec<u8>)>>,
 }
 
 impl<'g, V> ChannelTransport<'g, V> {
+    /// Set up the `k x k` delta queues and pull lanes for `graph`.
     pub fn new(graph: &'g ShardedGraph<V>) -> ChannelTransport<'g, V> {
         let k = graph.num_shards();
         ChannelTransport {
             graph,
             k,
             queues: (0..k * k).map(|_| Mutex::new(Vec::new())).collect(),
+            pull_lanes: (0..k * k).map(|_| Mutex::new((Vec::new(), Vec::new()))).collect(),
         }
     }
 
@@ -93,6 +108,44 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for ChannelTranspor
             }
         }
         out
+    }
+
+    fn pull<'m>(
+        &self,
+        dst_shard: usize,
+        req: PullRequest,
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> PullReceipt {
+        let owner = self.graph.owner_of(req.vertex);
+        if owner == dst_shard {
+            return PullReceipt::default();
+        }
+        let mut bytes = 0u64;
+        let mut lane = self.pull_lanes[dst_shard * self.k + owner].lock().unwrap();
+        let (req_q, rep_q) = &mut *lane;
+        // Requester -> owner: the request frame crosses the lane.
+        req.encode_into(req_q);
+        bytes += PullRequest::WIRE_LEN as u64;
+        // Owner side: decode the request off the queue and serve it from
+        // master data as an ordinary delta frame on the reply queue.
+        let raw = std::mem::take(req_q);
+        let Some(reply) = super::serve_pull(&raw, master) else {
+            debug_assert!(false, "corrupt pull request on {dst_shard}->{owner}");
+            return PullReceipt { applied: false, served: true, bytes };
+        };
+        rep_q.extend_from_slice(&reply);
+        bytes += reply.len() as u64;
+        // Requester side: decode the reply and apply it (newest wins).
+        let raw = std::mem::take(rep_q);
+        let Some(applied) = super::apply_pull_reply(self.graph, dst_shard, &raw) else {
+            debug_assert!(false, "corrupt pull reply on {owner}->{dst_shard}");
+            return PullReceipt { applied: false, served: true, bytes };
+        };
+        PullReceipt { applied, served: true, bytes }
+    }
+
+    fn queued_bytes(&self, dst_shard: usize) -> u64 {
+        ChannelTransport::queued_bytes(self, dst_shard) as u64
     }
 }
 

@@ -34,22 +34,27 @@ pub trait VertexCodec: Sized {
 
 // ---- little-endian put helpers ------------------------------------------
 
+/// Append one raw byte.
 pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
     buf.push(v);
 }
 
+/// Append a `u32`, little-endian.
 pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Append a `u64`, little-endian.
 pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Append an `f32`, little-endian IEEE-754 bits.
 pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Append an `f64`, little-endian IEEE-754 bits.
 pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -78,14 +83,17 @@ pub struct ByteReader<'a> {
 }
 
 impl<'a> ByteReader<'a> {
+    /// Start a cursor at the beginning of `bytes`.
     pub fn new(bytes: &'a [u8]) -> ByteReader<'a> {
         ByteReader { bytes }
     }
 
+    /// Has every byte been consumed?
     pub fn is_empty(&self) -> bool {
         self.bytes.is_empty()
     }
 
+    /// Bytes not yet consumed.
     pub fn remaining(&self) -> usize {
         self.bytes.len()
     }
@@ -100,22 +108,27 @@ impl<'a> ByteReader<'a> {
         Some(head)
     }
 
+    /// Read one byte.
     pub fn u8(&mut self) -> Option<u8> {
         self.take(1).map(|b| b[0])
     }
 
+    /// Read a little-endian `u32`.
     pub fn u32(&mut self) -> Option<u32> {
         self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
     }
 
+    /// Read a little-endian `u64`.
     pub fn u64(&mut self) -> Option<u64> {
         self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
     }
 
+    /// Read a little-endian `f32`.
     pub fn f32(&mut self) -> Option<f32> {
         self.take(4).map(|b| f32::from_le_bytes(b.try_into().unwrap()))
     }
 
+    /// Read a little-endian `f64`.
     pub fn f64(&mut self) -> Option<f64> {
         self.take(8).map(|b| f64::from_le_bytes(b.try_into().unwrap()))
     }

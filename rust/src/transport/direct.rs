@@ -1,11 +1,18 @@
 //! The **direct-memory backend**: PR 3's in-place ghost write, now routed
 //! through the [`GhostTransport`] trait. `send` applies the delta to every
 //! remote replica immediately (a versioned, locked copy) and ships zero
-//! wire bytes; `drain` is a no-op. This is the fastest backend in one
-//! address space and the semantic baseline the serializing backends are
-//! tested against.
+//! wire bytes; `drain` is a no-op; `pull` reads the owner's master data
+//! directly (the caller holds the read lock) and stores it versioned —
+//! no frames, no bytes, `served = false`. This is the fastest backend in
+//! one address space and the semantic baseline the serializing backends
+//! are tested against.
+//!
+//! Wire format: none. Version rules are those of the ghost table itself —
+//! every write goes through `GhostEntry::store_versioned`, so
+//! **newest-wins** holds here exactly as it does on the byte-moving
+//! backends.
 
-use super::{DrainReceipt, GhostTransport, SendReceipt};
+use super::{DrainReceipt, GhostTransport, PullReceipt, PullRequest, SendReceipt};
 use crate::graph::{ShardedGraph, VertexId};
 
 /// Ghost transport that writes replicas in place. Borrows the shard view
@@ -15,6 +22,7 @@ pub struct DirectTransport<'g, V> {
 }
 
 impl<'g, V> DirectTransport<'g, V> {
+    /// Wrap the shard view; replicas are written in place on `send`.
     pub fn new(graph: &'g ShardedGraph<V>) -> DirectTransport<'g, V> {
         DirectTransport { graph }
     }
@@ -34,6 +42,19 @@ impl<V: Clone + Send + Sync> GhostTransport<V> for DirectTransport<'_, V> {
 
     fn drain(&self, _dst_shard: usize) -> DrainReceipt {
         DrainReceipt::default()
+    }
+
+    fn pull<'m>(
+        &self,
+        dst_shard: usize,
+        req: PullRequest,
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> PullReceipt {
+        let Some(entry) = self.graph.shard(dst_shard).ghost_of(req.vertex) else {
+            return PullReceipt::default();
+        };
+        let (data, version) = master(req.vertex);
+        PullReceipt { applied: entry.store_versioned(data, version), served: false, bytes: 0 }
     }
 
     fn applies_at_send(&self) -> bool {

@@ -32,19 +32,45 @@
 //! reads a ghost more than `s` master versions behind forces a
 //! pull-on-demand from the owner's data first (see
 //! `Scope::refresh_stale_ghosts`); `s = 0` reproduces the synchronous
-//! read semantics of the per-update flush. A real socket or shared-memory
-//! backend slots in with one new [`GhostTransport`] impl — everything
-//! above the trait (batching, staleness, counters) is backend-agnostic.
+//! read semantics of the per-update flush. The pull flows through the
+//! trait's **request/reply path** ([`GhostTransport::pull`]): a
+//! [`PullRequest`] frame crosses to the owner, the owner answers with an
+//! encoded-vertex reply (a [`GhostDelta`] frame), and the requester
+//! applies it — so on a serializing backend a stale reader never touches
+//! peer master data directly. A new backend slots in with one
+//! [`GhostTransport`] impl — everything above the trait (batching,
+//! staleness, counters) is backend-agnostic; [`SocketTransport`] is
+//! exactly that: the same frames moved as real Unix-domain-socket bytes.
+//!
+//! # Wire format
+//!
+//! Two frame kinds, both little-endian, both framed by the transport (the
+//! [`VertexCodec`] payload itself carries no framing):
+//!
+//! * **delta frame** — `u32 vertex, u64 version, u32 payload_len,
+//!   payload` ([`GhostDelta::encode_into`]); `version` is the owner's
+//!   master stamp and replicas apply **newest-wins**
+//!   (`GhostEntry::store_versioned`), so duplicated or reordered
+//!   deliveries are harmless;
+//! * **pull frame** — `u32 vertex, u64 min_version`
+//!   ([`PullRequest::encode_into`], fixed [`PullRequest::WIRE_LEN`]
+//!   bytes); the reply is an ordinary delta frame carrying the owner's
+//!   current data, whose version is `>= min_version` whenever the
+//!   requester froze the master under a read lock.
+
+#![warn(missing_docs)]
 
 mod channel;
 mod codec;
 mod direct;
+mod socket;
 
 pub use channel::ChannelTransport;
 pub use codec::{
     put_f32, put_f32s, put_f64, put_u32, put_u32s, put_u64, put_u8, ByteReader, VertexCodec,
 };
 pub use direct::DirectTransport;
+pub use socket::{SocketTransport, DEFAULT_SEND_BUFFER};
 
 use crate::graph::VertexId;
 
@@ -54,7 +80,9 @@ use crate::graph::VertexId;
 /// reordered or duplicated deliveries are harmless.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GhostDelta {
+    /// Global id of the updated vertex.
     pub vertex: VertexId,
+    /// The owner's master version stamp at write time.
     pub version: u64,
     /// [`VertexCodec`]-encoded vertex payload.
     pub payload: Vec<u8>,
@@ -116,12 +144,58 @@ pub struct DrainReceipt {
     pub bytes: u64,
 }
 
+/// A staleness **pull request**: the requester half of the transport's
+/// request/reply path. A shard holding a ghost replica that lags past the
+/// engine's staleness bound frames one of these toward the owner shard;
+/// the reply is a [`GhostDelta`] carrying the owner's current data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PullRequest {
+    /// Global id of the vertex whose replica needs refreshing.
+    pub vertex: VertexId,
+    /// Minimum master version the requester needs. When the requester
+    /// holds a read lock on the master (the scope-admission path), this is
+    /// the frozen master version and the serve is guaranteed to meet it.
+    pub min_version: u64,
+}
+
+impl PullRequest {
+    /// Fixed wire size of a pull-request frame: `u32 vertex, u64
+    /// min_version`.
+    pub const WIRE_LEN: usize = 12;
+
+    /// Append the wire frame: `u32 vertex, u64 min_version`.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        put_u32(buf, self.vertex);
+        put_u64(buf, self.min_version);
+    }
+
+    /// Parse one wire frame from the reader. `None` on truncation.
+    pub fn decode_from(r: &mut ByteReader<'_>) -> Option<PullRequest> {
+        Some(PullRequest { vertex: r.u32()?, min_version: r.u64()? })
+    }
+}
+
+/// Outcome of a [`GhostTransport::pull`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PullReceipt {
+    /// Was the destination replica actually updated (the reply carried a
+    /// version newer than what it held)?
+    pub applied: bool,
+    /// Did the request and reply cross the transport's byte path? True
+    /// for serializing backends; false for [`DirectTransport`]'s in-place
+    /// master read.
+    pub served: bool,
+    /// Request plus reply bytes moved (zero for the direct backend).
+    pub bytes: u64,
+}
+
 /// A ghost-sync backend. The engine routes **all** replica traffic through
 /// this trait; implementations decide whether a delta is applied in place
 /// ([`DirectTransport`]), serialized over per-shard-pair queues
-/// ([`ChannelTransport`]), or — in a future backend — written to a socket
-/// or shared-memory ring.
+/// ([`ChannelTransport`]), or moved as real kernel-socket bytes
+/// ([`SocketTransport`]).
 pub trait GhostTransport<V>: Send + Sync {
+    /// Stable backend name (diagnostics).
     fn name(&self) -> &'static str;
 
     /// Ship one versioned delta from `src_shard` toward every remote
@@ -134,6 +208,23 @@ pub trait GhostTransport<V>: Send + Sync {
     /// No-op for backends that apply at send time.
     fn drain(&self, dst_shard: usize) -> DrainReceipt;
 
+    /// Request/reply pull: refresh `dst_shard`'s ghost replica of
+    /// `req.vertex` from the owner's master data. `master` is the
+    /// owner-side service function — it returns a borrow of the owner's
+    /// current data plus the master version, and the caller guarantees
+    /// the borrow is safe for the duration of the call (the engine holds
+    /// a read lock on the master). In-process backends invoke it on the
+    /// requester's thread *after* the request frame crosses the byte
+    /// boundary and frame the reply back through the same path, so the
+    /// data a stale reader sees always round-tripped the wire; a true
+    /// remote backend would invoke its own owner-side copy instead.
+    fn pull<'m>(
+        &self,
+        dst_shard: usize,
+        req: PullRequest,
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> PullReceipt;
+
     /// Does `send` apply replicas synchronously in place? When true and
     /// the engine runs in synchronous mode (sync window 1, staleness
     /// bound 0), replicas are provably never stale at scope admission and
@@ -142,6 +233,70 @@ pub trait GhostTransport<V>: Send + Sync {
     fn applies_at_send(&self) -> bool {
         false
     }
+
+    /// Bytes currently queued toward `dst_shard` (sent but not yet applied
+    /// to its ghost table). The sharded engine adapts its periodic drain
+    /// tick on this depth; apply-at-send backends report 0.
+    fn queued_bytes(&self, dst_shard: usize) -> u64 {
+        let _ = dst_shard;
+        0
+    }
+
+    /// Barrier called once after every worker has exited and before the
+    /// engine's final drain pass: backends with asynchronous delivery
+    /// (reader threads, kernel buffers) block here until every sent byte
+    /// is drainable, so the final drain observes the complete stream.
+    fn finalize(&self) {}
+
+    /// Sends that stalled on a full bounded send buffer (backpressure).
+    /// Zero for backends without a bounded send window.
+    fn backpressure_stalls(&self) -> u64 {
+        0
+    }
+}
+
+/// Owner-side half of a pull exchange, shared by the serializing
+/// backends: decode the request frame off `raw`, serve it from the
+/// `master` service, and return the encoded reply delta frame. `None` on
+/// a corrupt request frame.
+pub(crate) fn serve_pull<'m, V: VertexCodec>(
+    raw: &[u8],
+    master: &dyn Fn(VertexId) -> (&'m V, u64),
+) -> Option<Vec<u8>> {
+    let mut r = ByteReader::new(raw);
+    let request = PullRequest::decode_from(&mut r)?;
+    let (data, version) = master(request.vertex);
+    debug_assert!(
+        version >= request.min_version,
+        "pull for vertex {} served version {version} below requested {}",
+        request.vertex,
+        request.min_version
+    );
+    let delta = GhostDelta::from_vertex(request.vertex, version, data);
+    let mut reply = Vec::with_capacity(delta.wire_len());
+    delta.encode_into(&mut reply);
+    Some(reply)
+}
+
+/// Requester-side half of a pull exchange, shared by the serializing
+/// backends: decode the reply delta frame and apply it to `dst_shard`'s
+/// ghost table (newest version wins). Returns whether the replica was
+/// updated; `None` on a corrupt reply frame.
+pub(crate) fn apply_pull_reply<V: VertexCodec + Clone>(
+    graph: &crate::graph::ShardedGraph<V>,
+    dst_shard: usize,
+    raw: &[u8],
+) -> Option<bool> {
+    let mut r = ByteReader::new(raw);
+    let delta = GhostDelta::decode_from(&mut r)?;
+    let value = delta.decode_vertex::<V>()?;
+    Some(
+        graph
+            .shard(dst_shard)
+            .ghost_of(delta.vertex)
+            .map(|e| e.store_versioned(&value, delta.version))
+            .unwrap_or(false),
+    )
 }
 
 /// Outcome of a [`DeltaBatcher::flush`].
@@ -183,6 +338,7 @@ impl<V> DeltaBatcher<V> {
         }
     }
 
+    /// Nothing batched this window?
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }
@@ -263,6 +419,20 @@ mod tests {
         assert!(GhostDelta::decode_from(&mut r).is_none());
     }
 
+    #[test]
+    fn pull_request_wire_round_trip() {
+        let req = PullRequest { vertex: 17, min_version: 99 };
+        let mut buf = Vec::new();
+        req.encode_into(&mut buf);
+        assert_eq!(buf.len(), PullRequest::WIRE_LEN);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(PullRequest::decode_from(&mut r), Some(req));
+        assert!(r.is_empty());
+        // truncation rejected
+        let mut r = ByteReader::new(&buf[..PullRequest::WIRE_LEN - 1]);
+        assert!(PullRequest::decode_from(&mut r).is_none());
+    }
+
     /// A counting transport: every send records one delta per call.
     struct Counting {
         sends: AtomicU64,
@@ -279,6 +449,14 @@ mod tests {
         }
         fn drain(&self, _dst: usize) -> DrainReceipt {
             DrainReceipt::default()
+        }
+        fn pull<'m>(
+            &self,
+            _dst: usize,
+            _req: PullRequest,
+            _master: &dyn Fn(u32) -> (&'m u64, u64),
+        ) -> PullReceipt {
+            PullReceipt::default()
         }
     }
 

@@ -1,0 +1,623 @@
+//! The **Unix-domain-socket backend**: ghost deltas and staleness pulls
+//! moved as real kernel-socket bytes between per-shard endpoints — the
+//! in-process rehearsal of a true multi-process deployment, std-only, no
+//! filesystem footprint beyond a per-run temp directory of socket files
+//! (removed on drop, so parallel test binaries never collide).
+//!
+//! # Wire format
+//!
+//! Exactly the parent `transport` module's two frame kinds, byte-for-byte:
+//!
+//! * **delta frames** (`u32 vertex, u64 version, u32 len, payload`) flow
+//!   over one `UnixStream` per ordered shard pair into the destination
+//!   endpoint; replicas apply **newest-wins** at [`GhostTransport::drain`]
+//!   (`GhostEntry::store_versioned`), so frames reordered across
+//!   connections — or re-sent after a reconnect — are harmless;
+//! * **pull frames** (`u32 vertex, u64 min_version`, fixed
+//!   [`PullRequest::WIRE_LEN`] bytes) cross a dedicated request/reply
+//!   socketpair lane per ordered shard pair; the reply is an ordinary
+//!   delta frame carrying the owner's current master data.
+//!
+//! # Topology & delivery
+//!
+//! Each shard binds one endpoint (`shard-<i>.sock`) in a unique temp
+//! directory; every other shard connects to it and identifies itself with
+//! a 4-byte handshake. **One reader thread serves each endpoint**: it
+//! accepts connections (including re-connections), moves received bytes
+//! into per-stream staging buffers, and forwards only *complete* frames
+//! to the endpoint inbox — a torn write from a dropped connection can
+//! never corrupt the frame stream, and the sender's retry after a
+//! reconnect lands cleanly. Workers apply inboxed frames on their normal
+//! [`GhostTransport::drain`] cadence.
+//!
+//! # Backpressure & reconnect
+//!
+//! Every connection has a **bounded send window** (default
+//! [`DEFAULT_SEND_BUFFER`] bytes of in-flight data, configurable down to
+//! bytes for tests): a send that would overflow it blocks — stalling the
+//! engine's batcher flush, which is the intended flow control — until the
+//! reader lands enough bytes, and each stalled send increments the
+//! [`GhostTransport::backpressure_stalls`] counter. A frame larger than
+//! the whole window is sent alone once the window is empty, so progress
+//! is always possible. Writes that fail with a broken pipe reconnect to
+//! the endpoint (fresh handshake, bounded retries) and resend the entire
+//! frame.
+
+use super::{
+    ByteReader, DrainReceipt, GhostDelta, GhostTransport, PullReceipt, PullRequest, SendReceipt,
+    VertexCodec,
+};
+use crate::graph::{ShardedGraph, VertexId};
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Default per-connection bounded send window, in bytes of in-flight
+/// (sent but not yet received) data.
+pub const DEFAULT_SEND_BUFFER: usize = 1 << 20;
+
+/// Delta frame header size: `u32 vertex + u64 version + u32 payload_len`.
+const FRAME_HEADER: usize = 16;
+
+/// Chunk size for the lock-step pull exchange: the requester thread plays
+/// both ends of the lane, so no more than this many reply bytes are ever
+/// in a kernel buffer — the exchange can never deadlock on buffer space.
+const PULL_CHUNK: usize = 16 << 10;
+
+/// How many reconnect attempts a broken-pipe send gets before giving up.
+const RECONNECT_ATTEMPTS: u32 = 4;
+
+/// Upper bound on one send's backpressure stall (64 yields, then 50µs
+/// sleeps — roughly one second). Keeps the soft window bound from ever
+/// livelocking a sender if reconnect-torn accounting leaks the window
+/// shut.
+const STALL_ITERS_MAX: u32 = 20_000;
+
+/// A unique socket directory per transport instance: process id plus an
+/// in-process sequence number, so parallel test binaries (and parallel
+/// tests within one binary) never collide on socket paths.
+fn next_socket_dir() -> PathBuf {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("graphlab-sock-{}-{seq}", std::process::id()))
+}
+
+/// Write half of one `src -> dst` delta connection.
+struct Connection {
+    stream: UnixStream,
+    endpoint: PathBuf,
+    src: u32,
+}
+
+impl Connection {
+    fn open(endpoint: &Path, src: u32) -> std::io::Result<Connection> {
+        let mut stream = UnixStream::connect(endpoint)?;
+        stream.write_all(&src.to_le_bytes())?;
+        Ok(Connection { stream, endpoint: endpoint.to_path_buf(), src })
+    }
+
+    /// `write_all` with reconnect-on-broken-pipe: the reader forwards only
+    /// complete frames, so a torn partial write dies with the old stream
+    /// and the whole frame is resent on the fresh connection. Each retry
+    /// re-adds the frame to `window` — the reader decrements every raw
+    /// byte it receives (including torn tails), so without the re-add a
+    /// resend could drive the window negative and make `finalize` return
+    /// while bytes are still in flight. `write_all` cannot report partial
+    /// progress, so the accounting errs toward a bounded *over*-count per
+    /// reconnect; the send path's stall loop is time-bounded for exactly
+    /// this reason.
+    fn send(&mut self, frame: &[u8], window: &AtomicUsize, reconnects: &AtomicU64) {
+        let mut attempt = 0u32;
+        loop {
+            match self.stream.write_all(frame) {
+                Ok(()) => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::BrokenPipe
+                            | ErrorKind::ConnectionReset
+                            | ErrorKind::ConnectionAborted
+                            | ErrorKind::NotConnected
+                            | ErrorKind::WriteZero
+                    ) =>
+                {
+                    attempt += 1;
+                    assert!(
+                        attempt <= RECONNECT_ATTEMPTS,
+                        "ghost delta send to {:?} failed after {RECONNECT_ATTEMPTS} \
+                         reconnect attempts: {e}",
+                        self.endpoint
+                    );
+                    reconnects.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(Duration::from_millis(1 << attempt));
+                    if let Ok(fresh) = Connection::open(&self.endpoint, self.src) {
+                        self.stream = fresh.stream;
+                    }
+                    window.fetch_add(frame.len(), Ordering::AcqRel);
+                }
+                Err(e) => panic!("ghost delta send to {:?} failed: {e}", self.endpoint),
+            }
+        }
+    }
+}
+
+/// The request/reply socketpair lane one ordered shard pair uses for
+/// staleness pulls. `near` is the requester's end, `far` the owner's.
+struct PullLane {
+    near: UnixStream,
+    far: UnixStream,
+}
+
+/// One accepted inbound stream at an endpoint, with its frame-staging
+/// buffer (bytes received but not yet forming a complete frame).
+struct Rx {
+    stream: UnixStream,
+    src: usize,
+    staging: Vec<u8>,
+}
+
+/// Read the 4-byte source-shard handshake a fresh connection leads with.
+/// Bounded by a read timeout — the reader thread is shared by the whole
+/// endpoint, so a connector that writes nothing must not freeze delta
+/// delivery for the shard — and rejects ids outside `0..k` (a stray
+/// connector must not index the window table).
+fn handshake(mut stream: UnixStream, k: usize) -> Option<Rx> {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut id = [0u8; 4];
+    stream.read_exact(&mut id).ok()?;
+    let src = u32::from_le_bytes(id) as usize;
+    if src >= k {
+        return None;
+    }
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(2)));
+    Some(Rx { stream, src, staging: Vec::new() })
+}
+
+/// Move every complete delta frame at the front of `staging` into the
+/// endpoint inbox, leaving a partial frame (if any) in place.
+fn forward_frames(staging: &mut Vec<u8>, inbox: &Mutex<Vec<u8>>) {
+    let mut end = 0usize;
+    while staging.len() - end >= FRAME_HEADER {
+        let len =
+            u32::from_le_bytes(staging[end + 12..end + 16].try_into().unwrap()) as usize;
+        if staging.len() - end < FRAME_HEADER + len {
+            break;
+        }
+        end += FRAME_HEADER + len;
+    }
+    if end > 0 {
+        inbox.lock().unwrap().extend_from_slice(&staging[..end]);
+        staging.drain(..end);
+    }
+}
+
+/// The reader loop serving one shard endpoint (see the module docs): pure
+/// byte mover — it never touches graph data, so it can outlive the
+/// engine's scoped workers and be joined on transport drop.
+fn reader_loop(
+    listener: UnixListener,
+    dst: usize,
+    k: usize,
+    inboxes: Arc<Vec<Mutex<Vec<u8>>>>,
+    window: Arc<Vec<AtomicUsize>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let _ = listener.set_nonblocking(true);
+    let mut streams: Vec<Rx> = Vec::new();
+    let mut buf = vec![0u8; 16 << 10];
+    loop {
+        // Fresh connections (initial set and reconnecting senders alike).
+        while let Ok((stream, _)) = listener.accept() {
+            if let Some(rx) = handshake(stream, k) {
+                streams.push(rx);
+            }
+        }
+        let mut moved = false;
+        streams.retain_mut(|rx| match rx.stream.read(&mut buf) {
+            // EOF: the sender shut the connection down; any torn frame
+            // tail in staging dies with it (the sender resends whole
+            // frames on its replacement connection).
+            Ok(0) => false,
+            Ok(n) => {
+                // Land the bytes before shrinking the send window so the
+                // window never under-counts what is still invisible to
+                // `drain`.
+                rx.staging.extend_from_slice(&buf[..n]);
+                forward_frames(&mut rx.staging, &inboxes[dst]);
+                let _ = window[rx.src * k + dst].fetch_update(
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                    |w| Some(w.saturating_sub(n)),
+                );
+                moved = true;
+                true
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                true
+            }
+            Err(_) => false,
+        });
+        if streams.is_empty() && shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        if !moved {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}
+
+/// Ghost transport over Unix-domain sockets: one bound endpoint per shard
+/// in a per-run temp directory, one delta connection plus one pull lane
+/// per ordered shard pair, one reader thread per endpoint. Borrows the
+/// shard view for the duration of the run; dropping it joins the reader
+/// threads and removes the socket directory.
+pub struct SocketTransport<'g, V> {
+    graph: &'g ShardedGraph<V>,
+    k: usize,
+    dir: PathBuf,
+    /// Delta write halves, indexed `src * k + dst` (`None` on the
+    /// diagonal and for single-shard graphs).
+    conns: Vec<Option<Mutex<Connection>>>,
+    /// In-flight bytes per connection (written, not yet landed in the
+    /// destination inbox): the bounded send window.
+    window: Arc<Vec<AtomicUsize>>,
+    /// Per-destination inbox of complete delta frames.
+    inboxes: Arc<Vec<Mutex<Vec<u8>>>>,
+    /// Pull lanes, indexed `requester * k + owner`.
+    pulls: Vec<Option<Mutex<PullLane>>>,
+    send_cap: usize,
+    shutdown: Arc<AtomicBool>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    backpressure: AtomicU64,
+    reconnects: AtomicU64,
+}
+
+impl<'g, V> SocketTransport<'g, V> {
+    /// Bind the endpoints, connect every shard pair, and spawn the reader
+    /// threads, with the default send window.
+    pub fn new(graph: &'g ShardedGraph<V>) -> std::io::Result<SocketTransport<'g, V>> {
+        SocketTransport::with_send_buffer(graph, DEFAULT_SEND_BUFFER)
+    }
+
+    /// Like [`SocketTransport::new`] with an explicit per-connection send
+    /// window (clamped to at least 1 byte). Tiny windows are useful to
+    /// exercise backpressure in tests.
+    pub fn with_send_buffer(
+        graph: &'g ShardedGraph<V>,
+        send_cap: usize,
+    ) -> std::io::Result<SocketTransport<'g, V>> {
+        let k = graph.num_shards();
+        let dir = next_socket_dir();
+        // A stale dir from a crashed run (pid reuse) would fail the binds.
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let window: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..k * k).map(|_| AtomicUsize::new(0)).collect());
+        let inboxes: Arc<Vec<Mutex<Vec<u8>>>> =
+            Arc::new((0..k).map(|_| Mutex::new(Vec::new())).collect());
+        let mut readers = Vec::new();
+        if k > 1 {
+            for dst in 0..k {
+                let listener = UnixListener::bind(Self::endpoint(&dir, dst))?;
+                let inboxes = Arc::clone(&inboxes);
+                let window = Arc::clone(&window);
+                let shutdown = Arc::clone(&shutdown);
+                readers.push(
+                    std::thread::Builder::new()
+                        .name(format!("ghost-rx-{dst}"))
+                        .spawn(move || {
+                            reader_loop(listener, dst, k, inboxes, window, shutdown)
+                        })?,
+                );
+            }
+        }
+        let mut conns = Vec::with_capacity(k * k);
+        let mut pulls = Vec::with_capacity(k * k);
+        for a in 0..k {
+            for b in 0..k {
+                if a == b || k < 2 {
+                    conns.push(None);
+                    pulls.push(None);
+                } else {
+                    conns.push(Some(Mutex::new(Connection::open(
+                        &Self::endpoint(&dir, b),
+                        a as u32,
+                    )?)));
+                    let (near, far) = UnixStream::pair()?;
+                    pulls.push(Some(Mutex::new(PullLane { near, far })));
+                }
+            }
+        }
+        Ok(SocketTransport {
+            graph,
+            k,
+            dir,
+            conns,
+            window,
+            inboxes,
+            pulls,
+            send_cap: send_cap.max(1),
+            shutdown,
+            readers,
+            backpressure: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+        })
+    }
+
+    fn endpoint(dir: &Path, shard: usize) -> PathBuf {
+        dir.join(format!("shard-{shard}.sock"))
+    }
+
+    /// The temp directory holding this transport's socket files (removed
+    /// when the transport drops).
+    pub fn socket_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Reconnections performed after broken-pipe sends (diagnostics).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+}
+
+impl<V> Drop for SocketTransport<'_, V> {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        for conn in self.conns.iter().flatten() {
+            let conn = conn.lock().unwrap_or_else(|p| p.into_inner());
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        }
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport<'_, V> {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn send(&self, src_shard: usize, vertex: VertexId, version: u64, data: &V) -> SendReceipt {
+        let sites = self.graph.replicas_of(vertex);
+        if sites.is_empty() {
+            return SendReceipt::default();
+        }
+        let delta = GhostDelta::from_vertex(vertex, version, data);
+        let mut frame = Vec::with_capacity(delta.wire_len());
+        delta.encode_into(&mut frame);
+        let mut bytes = 0u64;
+        for &(s, gi) in sites {
+            let dst = s as usize;
+            // Advance the pending slot before the bytes leave so a
+            // staleness probe never sees an in-flight version it cannot
+            // account for.
+            self.graph.shard(dst).ghost(gi as usize).note_pending(version);
+            let idx = src_shard * self.k + dst;
+            let Some(conn) = &self.conns[idx] else { continue };
+            // Bounded send window: block the flush (backpressure) until
+            // the reader lands enough in-flight bytes. An empty window
+            // always admits the frame, so frames larger than the whole
+            // window still make progress. The window is a *soft* bound:
+            // the check-then-add is racy across workers of one shard
+            // (overshoot of one frame per concurrent sender), and the
+            // stall is time-bounded so a reconnect-skewed count can delay
+            // a sender but never livelock it.
+            let window = &self.window[idx];
+            let mut stalled = false;
+            let mut spins = 0u32;
+            loop {
+                let inflight = window.load(Ordering::Acquire);
+                if inflight == 0 || inflight + frame.len() <= self.send_cap {
+                    break;
+                }
+                if !stalled {
+                    stalled = true;
+                    self.backpressure.fetch_add(1, Ordering::Relaxed);
+                }
+                spins += 1;
+                if spins > STALL_ITERS_MAX {
+                    break;
+                }
+                if spins < 64 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+            window.fetch_add(frame.len(), Ordering::AcqRel);
+            conn.lock().unwrap().send(&frame, window, &self.reconnects);
+            bytes += frame.len() as u64;
+        }
+        SendReceipt { replicas_now: 0, bytes }
+    }
+
+    fn drain(&self, dst_shard: usize) -> DrainReceipt {
+        let mut out = DrainReceipt::default();
+        if self.k < 2 {
+            return out;
+        }
+        let buf = {
+            let mut q = self.inboxes[dst_shard].lock().unwrap();
+            std::mem::take(&mut *q)
+        };
+        if buf.is_empty() {
+            return out;
+        }
+        out.bytes = buf.len() as u64;
+        let shard = self.graph.shard(dst_shard);
+        let mut r = ByteReader::new(&buf);
+        while !r.is_empty() {
+            let Some(delta) = GhostDelta::decode_from(&mut r) else {
+                debug_assert!(false, "torn frame reached the inbox of shard {dst_shard}");
+                break;
+            };
+            let Some(value) = delta.decode_vertex::<V>() else {
+                debug_assert!(false, "codec round-trip failed for vertex {}", delta.vertex);
+                continue;
+            };
+            if let Some(entry) = shard.ghost_of(delta.vertex) {
+                if entry.store_versioned(&value, delta.version) {
+                    out.applied += 1;
+                }
+            }
+        }
+        out
+    }
+
+    fn pull<'m>(
+        &self,
+        dst_shard: usize,
+        req: PullRequest,
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> PullReceipt {
+        let owner = self.graph.owner_of(req.vertex);
+        let Some(lane) = &self.pulls[dst_shard * self.k + owner] else {
+            return PullReceipt::default();
+        };
+        let mut lane = lane.lock().unwrap();
+        let mut bytes = 0u64;
+        // Requester -> owner: the request frame crosses the socket.
+        let mut frame = Vec::with_capacity(PullRequest::WIRE_LEN);
+        req.encode_into(&mut frame);
+        lane.near.write_all(&frame).expect("pull request write");
+        bytes += frame.len() as u64;
+        let mut raw = [0u8; PullRequest::WIRE_LEN];
+        lane.far.read_exact(&mut raw).expect("pull request read");
+        // Owner side: serve the master data as a delta frame. Lock-step
+        // chunked exchange — the same thread plays both ends, so at most
+        // PULL_CHUNK reply bytes are ever in the kernel buffer.
+        let Some(reply) = super::serve_pull(&raw, master) else {
+            debug_assert!(false, "corrupt pull request on {dst_shard}->{owner}");
+            return PullReceipt { applied: false, served: true, bytes };
+        };
+        let mut got = vec![0u8; reply.len()];
+        let mut off = 0usize;
+        while off < reply.len() {
+            let end = (off + PULL_CHUNK).min(reply.len());
+            lane.far.write_all(&reply[off..end]).expect("pull reply write");
+            lane.near.read_exact(&mut got[off..end]).expect("pull reply read");
+            off = end;
+        }
+        bytes += reply.len() as u64;
+        // Requester side: decode the reply and apply it (newest wins).
+        let Some(applied) = super::apply_pull_reply(self.graph, dst_shard, &got) else {
+            debug_assert!(false, "corrupt pull reply on {owner}->{dst_shard}");
+            return PullReceipt { applied: false, served: true, bytes };
+        };
+        PullReceipt { applied, served: true, bytes }
+    }
+
+    fn queued_bytes(&self, dst_shard: usize) -> u64 {
+        let mut total = self.inboxes[dst_shard].lock().unwrap().len() as u64;
+        for src in 0..self.k {
+            total += self.window[src * self.k + dst_shard].load(Ordering::Acquire) as u64;
+        }
+        total
+    }
+
+    fn finalize(&self) {
+        // Wait (bounded, ~10s) until every written byte has landed in an
+        // inbox: senders only write whole frames, so a zero window means
+        // the inboxes hold the complete, frame-aligned stream. On timeout
+        // — overloaded machine, or a reconnect-skewed window count — warn
+        // loudly rather than fail silently: the caller's final drain may
+        // miss in-flight deltas.
+        for _ in 0..100_000 {
+            let inflight: usize =
+                self.window.iter().map(|w| w.load(Ordering::Acquire)).sum();
+            if inflight == 0 {
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let inflight: usize = self.window.iter().map(|w| w.load(Ordering::Acquire)).sum();
+        eprintln!(
+            "graphlab socket transport: finalize timed out with {inflight} bytes \
+             in flight; the final drain may miss ghost deltas"
+        );
+        debug_assert!(false, "socket transport finalize timed out with bytes in flight");
+    }
+
+    fn backpressure_stalls(&self) -> u64 {
+        self.backpressure.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DataGraph, GraphBuilder};
+
+    fn chain(n: usize) -> DataGraph<u64, ()> {
+        let mut b = GraphBuilder::new();
+        for i in 0..n {
+            b.add_vertex(i as u64);
+        }
+        for i in 0..n - 1 {
+            b.add_undirected(i as u32, i as u32 + 1, (), ());
+        }
+        b.build()
+    }
+
+    #[test]
+    fn deltas_cross_the_socket_and_apply_on_drain() {
+        let mut g = chain(8);
+        let sg = ShardedGraph::new(&mut g, 2);
+        let t = SocketTransport::new(&sg).expect("socket setup");
+        assert!(t.socket_dir().exists(), "socket files live in the temp dir");
+        let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+        let owner = sg.owner_of(v);
+        let (dst, gi) = sg.replicas_of(v)[0];
+        let entry = sg.shard(dst as usize).ghost(gi as usize);
+
+        let r = GhostTransport::send(&t, owner, v, 4, &777u64);
+        assert!(r.bytes > 0, "socket backend really ships bytes");
+        assert_eq!(r.replicas_now, 0, "socket applies at drain, not send");
+        assert_eq!(entry.pending_version(), 4, "in-flight version visible");
+        GhostTransport::finalize(&t);
+        let d = GhostTransport::drain(&t, dst as usize);
+        assert_eq!(d.applied, 1);
+        assert_eq!(d.bytes, r.bytes, "every shipped byte consumed");
+        assert_eq!(entry.read(), 777, "payload round-tripped the socket");
+        assert_eq!(entry.version(), 4);
+        assert_eq!(GhostTransport::queued_bytes(&t, dst as usize), 0);
+
+        let dir = t.socket_dir().to_path_buf();
+        drop(t);
+        assert!(!dir.exists(), "socket files cleaned up on drop");
+    }
+
+    #[test]
+    fn partial_frames_never_reach_the_inbox() {
+        let inbox = Mutex::new(Vec::new());
+        let d = GhostDelta::from_vertex(3, 9, &1234u64);
+        let mut frame = Vec::new();
+        d.encode_into(&mut frame);
+        // Deliver the frame in three fragments: nothing forwards until the
+        // final fragment completes it.
+        let mut staging = Vec::new();
+        staging.extend_from_slice(&frame[..10]);
+        forward_frames(&mut staging, &inbox);
+        assert!(inbox.lock().unwrap().is_empty());
+        staging.extend_from_slice(&frame[10..frame.len() - 1]);
+        forward_frames(&mut staging, &inbox);
+        assert!(inbox.lock().unwrap().is_empty());
+        staging.extend_from_slice(&frame[frame.len() - 1..]);
+        forward_frames(&mut staging, &inbox);
+        assert_eq!(*inbox.lock().unwrap(), frame);
+        assert!(staging.is_empty());
+    }
+}

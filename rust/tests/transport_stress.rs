@@ -1,26 +1,31 @@
 //! Stress tests for the ghost-sync transport layer: codec round-trips for
-//! every app vertex type, ChannelTransport vs DirectTransport conservation
+//! every app vertex type, Channel/Socket vs Direct conservation
 //! equivalence for BP and Gibbs across shard counts and staleness bounds,
-//! delta coalescing on repeat-writer workloads, and the bounded-staleness
+//! delta coalescing on repeat-writer workloads, the bounded-staleness
 //! admission semantics (`s = 0` reproduces PR 3's synchronous flush
 //! accounting exactly; `s > 0` never lets a reader observe a replica more
-//! than `s` versions behind).
+//! than `s` versions behind), the pull request/reply path (serializing
+//! backends serve every admission pull through the wire, never a direct
+//! master read), and socket-backend backpressure on a tiny send window.
 
 use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
 use graphlab::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
 use graphlab::apps::gibbs::{chromatic_sets, GibbsEdge, GibbsUpdate, GibbsVertex};
-use graphlab::apps::mrf::{random_mrf, BpVertex, EdgePotential, Mrf};
+use graphlab::apps::mrf::{random_mrf, BpEdge, BpVertex, EdgePotential, Mrf};
 use graphlab::consistency::{ConsistencyModel, Scope};
 use graphlab::engine::{
-    ChannelShardedEngine, Program, SequentialEngine, ShardedEngine, ThreadedEngine,
-    UpdateContext, UpdateFn,
+    ChannelShardedEngine, Engine, Program, SequentialEngine, ShardedEngine,
+    SocketShardedEngine, ThreadedEngine, UpdateContext, UpdateFn,
 };
 use graphlab::graph::{DataGraph, GraphBuilder, ShardedGraph};
 use graphlab::scheduler::{
     FifoScheduler, MultiQueueFifo, PriorityScheduler, Scheduler, SetScheduler, Task,
 };
 use graphlab::sdt::Sdt;
-use graphlab::transport::{ChannelTransport, GhostTransport, VertexCodec};
+use graphlab::transport::{
+    ChannelTransport, DirectTransport, GhostTransport, PullRequest, SocketTransport,
+    VertexCodec,
+};
 use graphlab::util::Pcg32;
 use std::sync::Arc;
 
@@ -152,11 +157,15 @@ fn run_bp_sequential(mrf: &mut Mrf, bound: f32) {
         .run_on(&SequentialEngine, &mut mrf.graph, &sched, &sdt);
 }
 
-/// Acceptance: ChannelTransport-backed BP matches the sequential fixed
-/// point at k in {2, 4} with staleness in {0, 4} — the serialized path
-/// changes how replicas move, never what the computation produces.
-#[test]
-fn channel_bp_matches_sequential_beliefs_under_staleness() {
+/// Shared acceptance harness: a serializing-transport BP run must match
+/// the sequential fixed point at k in {2, 4} with staleness in {0, 4} —
+/// the byte path changes how replicas move, never what the computation
+/// produces — and every admission pull must be served through the
+/// transport's request/reply path (no direct master reads).
+fn bp_matches_sequential_on<Eng: Engine<BpVertex, BpEdge>>(
+    make: impl Fn(usize) -> Eng,
+    backend: &str,
+) {
     let mk = || {
         let mut rng = Pcg32::seed_from_u64(42);
         random_mrf(80, 160, 3, &mut rng)
@@ -184,29 +193,51 @@ fn channel_bp_matches_sequential_beliefs_under_staleness() {
                 .ghost_staleness(staleness)
                 .ghost_batch(if staleness == 0 { 1 } else { 8 })
                 .max_updates(500_000)
-                .run_on(&ChannelShardedEngine::new(k), &mut par.graph, &sched, &sdt);
-            assert!(report.updates > 0, "k={k} s={staleness}");
+                .run_on(&make(k), &mut par.graph, &sched, &sdt);
+            assert!(report.updates > 0, "{backend} k={k} s={staleness}");
             let c = &report.contention;
             assert_eq!(c.shards, k);
-            assert!(c.deltas_sent > 0, "k={k} s={staleness}");
-            assert!(c.bytes_shipped > 0, "channel really serialized: k={k} s={staleness}");
+            assert!(c.deltas_sent > 0, "{backend} k={k} s={staleness}");
+            assert!(
+                c.bytes_shipped > 0,
+                "{backend} really serialized: k={k} s={staleness}"
+            );
             assert!(
                 c.max_ghost_staleness <= staleness,
-                "k={k}: observed lag {} exceeds bound {staleness}",
+                "{backend} k={k}: observed lag {} exceeds bound {staleness}",
                 c.max_ghost_staleness
+            );
+            assert_eq!(
+                c.pulls_served, c.staleness_pulls,
+                "{backend} k={k} s={staleness}: every pull rides request/reply"
             );
             for v in 0..n as u32 {
                 let b = &par.graph.vertex_data(v).belief;
                 for (x, y) in reference[v as usize].iter().zip(b.iter()) {
                     assert!(
                         (x - y).abs() < 5e-3,
-                        "k={k} s={staleness} vertex {v}: seq={:?} channel={b:?}",
+                        "{backend} k={k} s={staleness} vertex {v}: seq={:?} got={b:?}",
                         reference[v as usize]
                     );
                 }
             }
         }
     }
+}
+
+/// Acceptance: ChannelTransport-backed BP matches the sequential fixed
+/// point at k in {2, 4} with staleness in {0, 4}.
+#[test]
+fn channel_bp_matches_sequential_beliefs_under_staleness() {
+    bp_matches_sequential_on(ChannelShardedEngine::new, "channel");
+}
+
+/// Acceptance: SocketTransport-backed BP (every delta and pull crossing a
+/// real Unix socket) matches the sequential fixed point at k in {2, 4}
+/// with staleness in {0, 4}.
+#[test]
+fn socket_bp_matches_sequential_beliefs_under_staleness() {
+    bp_matches_sequential_on(SocketShardedEngine::new, "socket");
 }
 
 // ---- Gibbs: channel conservation -----------------------------------------
@@ -225,11 +256,13 @@ fn color_graph(g: &mut DataGraph<GibbsVertex, GibbsEdge>) {
         .run_on(&ThreadedEngine, g, &sched, &Sdt::new());
 }
 
-/// Acceptance: ChannelTransport-backed chromatic Gibbs conserves exactly
-/// one sample per vertex per sweep at k in {2, 4} with staleness in
-/// {0, 4}.
-#[test]
-fn channel_gibbs_conserves_sweeps_under_staleness() {
+/// Shared acceptance harness: serializing-transport chromatic Gibbs must
+/// conserve exactly one sample per vertex per sweep at k in {2, 4} with
+/// staleness in {0, 4}.
+fn gibbs_conserves_sweeps_on<Eng: Engine<GibbsVertex, GibbsEdge>>(
+    make: impl Fn(usize) -> Eng,
+    backend: &str,
+) {
     let sweeps = 300usize;
     let build = || {
         let mut b = GraphBuilder::new();
@@ -264,26 +297,49 @@ fn channel_gibbs_conserves_sweeps_under_staleness() {
                 .model(ConsistencyModel::Full)
                 .ghost_staleness(staleness)
                 .ghost_batch(if staleness == 0 { 1 } else { 4 })
-                .run_on(&ChannelShardedEngine::new(k), &mut g, &sched, &Sdt::new());
+                .run_on(&make(k), &mut g, &sched, &Sdt::new());
             assert_eq!(
                 report.updates,
                 8 * sweeps as u64,
-                "k={k} s={staleness}: sweep conservation"
+                "{backend} k={k} s={staleness}: sweep conservation"
             );
             let c = &report.contention;
             assert_eq!(c.shards, k);
             assert!(c.boundary_updates > 0, "a cut chain has boundary work");
-            assert!(c.bytes_shipped > 0, "k={k} s={staleness}");
-            assert!(c.max_ghost_staleness <= staleness, "k={k} s={staleness}");
+            assert!(c.bytes_shipped > 0, "{backend} k={k} s={staleness}");
+            assert!(
+                c.max_ghost_staleness <= staleness,
+                "{backend} k={k} s={staleness}"
+            );
+            assert_eq!(
+                c.pulls_served, c.staleness_pulls,
+                "{backend} k={k} s={staleness}: every pull rides request/reply"
+            );
             for v in 0..8u32 {
                 let total: u32 = g.vertex_data(v).counts.iter().sum();
                 assert_eq!(
                     total as usize, sweeps,
-                    "k={k} s={staleness} vertex {v}: one sample per sweep"
+                    "{backend} k={k} s={staleness} vertex {v}: one sample per sweep"
                 );
             }
         }
     }
+}
+
+/// Acceptance: ChannelTransport-backed chromatic Gibbs conserves exactly
+/// one sample per vertex per sweep at k in {2, 4} with staleness in
+/// {0, 4}.
+#[test]
+fn channel_gibbs_conserves_sweeps_under_staleness() {
+    gibbs_conserves_sweeps_on(ChannelShardedEngine::new, "channel");
+}
+
+/// Acceptance: SocketTransport-backed chromatic Gibbs conserves exactly
+/// one sample per vertex per sweep at k in {2, 4} with staleness in
+/// {0, 4}.
+#[test]
+fn socket_gibbs_conserves_sweeps_under_staleness() {
+    gibbs_conserves_sweeps_on(SocketShardedEngine::new, "socket");
 }
 
 // ---- delta batching / coalescing -----------------------------------------
@@ -465,4 +521,213 @@ fn staleness_bound_is_enforced_and_pulls_fire() {
             "s={staleness}: a huge window coalesces repeat writes: {c:?}"
         );
     }
+}
+
+// ---- socket backend: wire round-trip, pulls, backpressure, cleanup -------
+
+/// Unit-level socket round-trip against real ghost tables: versioned
+/// deltas for every replicated vertex cross real Unix-domain sockets, and
+/// after a finalize barrier + drain the replicas equal the masters with
+/// version == pending. Socket files live in a temp dir and vanish with
+/// the transport.
+#[test]
+fn socket_transport_round_trips_into_ghost_tables() {
+    let side = 6u32;
+    let mut b = GraphBuilder::new();
+    for i in 0..side * side {
+        b.add_vertex(i as u64);
+    }
+    for y in 0..side {
+        for x in 0..side {
+            let v = y * side + x;
+            if x + 1 < side {
+                b.add_undirected(v, v + 1, (), ());
+            }
+            if y + 1 < side {
+                b.add_undirected(v, v + side, (), ());
+            }
+        }
+    }
+    let mut g = b.build();
+    let n = g.num_vertices();
+    let sg = ShardedGraph::new(&mut g, 3);
+    assert!(sg.num_ghosts() > 0);
+    let transport = SocketTransport::new(&sg).expect("socket setup");
+    let dir = transport.socket_dir().to_path_buf();
+    assert!(dir.exists(), "socket files live in a per-run temp dir");
+
+    let mut sent_bytes = 0u64;
+    for v in 0..n as u32 {
+        if sg.replicas_of(v).is_empty() {
+            continue;
+        }
+        *g.vertex_data(v) = 1000 + v as u64;
+        let ver = sg.bump_master(v);
+        let r = transport.send(sg.owner_of(v), v, ver, &(1000 + v as u64));
+        assert_eq!(r.replicas_now, 0, "socket applies at drain");
+        assert!(r.bytes > 0);
+        sent_bytes += r.bytes;
+    }
+    assert!(sent_bytes > 0);
+
+    transport.finalize();
+    let mut applied = 0u64;
+    let mut drained_bytes = 0u64;
+    for s in 0..sg.num_shards() {
+        let d = transport.drain(s);
+        applied += d.applied;
+        drained_bytes += d.bytes;
+    }
+    assert_eq!(applied as usize, sg.num_ghosts(), "every replica written once");
+    assert_eq!(drained_bytes, sent_bytes, "every shipped byte consumed");
+    assert!(sg.ghosts_consistent(&mut g), "payloads round-tripped the kernel");
+    for sh in sg.shards() {
+        for e in sh.ghosts() {
+            assert_eq!(e.version(), e.pending_version(), "nothing left in flight");
+        }
+    }
+    drop(transport);
+    assert!(!dir.exists(), "socket files cleaned up on drop");
+}
+
+/// Unit-level pull round-trip on every backend: the request/reply path
+/// must refresh a lagging replica to the served version, and only the
+/// serializing backends report the pull as wire-served.
+#[test]
+fn pull_round_trip_serves_through_request_reply_on_serializing_backends() {
+    let run = |backend: &str| {
+        let mut b: GraphBuilder<u64, ()> = GraphBuilder::new();
+        for i in 0..8 {
+            b.add_vertex(i as u64);
+        }
+        for i in 0..7u32 {
+            b.add_undirected(i, i + 1, (), ());
+        }
+        let mut g = b.build();
+        let sg = ShardedGraph::new(&mut g, 2);
+        let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+        let (dst, gi) = sg.replicas_of(v)[0];
+        let entry = sg.shard(dst as usize).ghost(gi as usize);
+        sg.bump_master(v);
+        sg.bump_master(v);
+        sg.bump_master(v);
+        assert_eq!(entry.version(), 0, "replica starts 3 versions behind");
+
+        let socket_t;
+        let channel_t;
+        let direct_t;
+        let transport: &dyn GhostTransport<u64> = match backend {
+            "socket" => {
+                socket_t = SocketTransport::new(&sg).expect("socket setup");
+                &socket_t
+            }
+            "channel" => {
+                channel_t = ChannelTransport::new(&sg);
+                &channel_t
+            }
+            _ => {
+                direct_t = DirectTransport::new(&sg);
+                &direct_t
+            }
+        };
+        let served_value = 4242u64;
+        let req = PullRequest { vertex: v, min_version: sg.master_version(v) };
+        let receipt = transport.pull(dst as usize, req, &|u| {
+            assert_eq!(u, v, "service asked for the requested vertex");
+            (&served_value, sg.master_version(u))
+        });
+        assert!(receipt.applied, "{backend}: lagging replica must refresh");
+        assert_eq!(entry.read(), 4242, "{backend}: served data landed");
+        assert_eq!(entry.version(), 3, "{backend}: served version landed");
+        let serializing = backend != "direct";
+        assert_eq!(receipt.served, serializing, "{backend}: wire-served flag");
+        assert_eq!(
+            receipt.bytes > PullRequest::WIRE_LEN as u64,
+            serializing,
+            "{backend}: request + reply bytes counted"
+        );
+    };
+    run("direct");
+    run("channel");
+    run("socket");
+}
+
+/// Engine-level pull-path acceptance: with a never-closing sync window,
+/// staleness pulls are the only freshness mechanism. On serializing
+/// backends every one of them must be served through the transport
+/// request/reply path (`pulls_served == staleness_pulls > 0` — direct
+/// master reads are exactly their difference, asserted zero); the direct
+/// backend reports the same pulls with zero wire-served.
+#[test]
+fn socket_and_channel_pulls_never_read_master_directly() {
+    let side = 12u32;
+    let rounds = 200u64;
+    let f = SelfBump { rounds };
+    let run = |backend: &'static str| {
+        let mut g = grid(side);
+        let n = g.num_vertices();
+        let program = Program::new()
+            .update_fn(&f)
+            .model(ConsistencyModel::Full)
+            .workers(4)
+            .shards(2)
+            .ghost_staleness(2)
+            // Window far beyond the run: freshness rides on pulls alone.
+            .ghost_batch(1_000_000)
+            .transport(backend);
+        let report = program.run(&mut g, &seeded(n, 4), &Sdt::new());
+        assert_eq!(report.updates, n as u64 * rounds, "{backend}: conservation");
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), rounds, "{backend} vertex {v}");
+        }
+        report
+    };
+
+    for backend in ["channel", "socket"] {
+        let c = run(backend).contention;
+        assert!(c.staleness_pulls > 0, "{backend}: lazy flushes force pulls");
+        assert_eq!(
+            c.pulls_served, c.staleness_pulls,
+            "{backend}: zero direct master reads at admission"
+        );
+        assert!(c.max_ghost_staleness <= 2, "{backend}: bound still enforced");
+    }
+    let c = run("direct").contention;
+    assert!(c.staleness_pulls > 0);
+    assert_eq!(c.pulls_served, 0, "direct backend pulls are in-place reads");
+}
+
+/// A one-byte send window forces every send after the first to stall
+/// until the reader thread lands the in-flight frame: backpressure is
+/// counted, yet every delta still arrives (newest version wins).
+#[test]
+fn socket_backpressure_blocks_flush_and_counts_stalls() {
+    let mut b: GraphBuilder<u64, ()> = GraphBuilder::new();
+    for i in 0..8 {
+        b.add_vertex(i as u64);
+    }
+    for i in 0..7u32 {
+        b.add_undirected(i, i + 1, (), ());
+    }
+    let mut g = b.build();
+    let sg = ShardedGraph::new(&mut g, 2);
+    let t = SocketTransport::with_send_buffer(&sg, 1).expect("socket setup");
+    let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+    let owner = sg.owner_of(v);
+    let (dst, gi) = sg.replicas_of(v)[0];
+    let rounds = 200u64;
+    for round in 1..=rounds {
+        let ver = sg.bump_master(v);
+        t.send(owner, v, ver, &(round * 10));
+    }
+    assert!(
+        t.backpressure_stalls() > 0,
+        "a 1-byte window must stall the sender"
+    );
+    t.finalize();
+    let applied = t.drain(dst as usize).applied;
+    assert!(applied >= 1, "at least the newest delta applies");
+    let entry = sg.shard(dst as usize).ghost(gi as usize);
+    assert_eq!(entry.version(), rounds, "the newest version won");
+    assert_eq!(entry.read(), rounds * 10);
 }
