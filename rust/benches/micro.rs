@@ -4,7 +4,10 @@
 //! * scheduler add/pop throughput per scheduler type;
 //! * **multi-threaded scheduler throughput** (tasks/sec at 1/2/4/8
 //!   workers): the lock-free sharded schedulers vs their `Mutex<VecDeque>`
-//!   / `Mutex<BinaryHeap>` strict baselines — results/BENCH_sched.json;
+//!   / `Mutex<BinaryHeap>` strict baselines, plus an injector
+//!   ring-capacity sweep — results/BENCH_sched.json;
+//! * **vertex storage** (SoA slab vs Vec-of-struct): BP belief-sweep and
+//!   delta-capture throughput — joins results/BENCH_shard.json;
 //! * scope lock acquisition per consistency model and degree;
 //! * the atomic lock table itself: uncontended vs conflicted try-acquire
 //!   (the conflict path measures the cost of a failed all-or-nothing
@@ -12,8 +15,9 @@
 //!   per-vertex memory footprint vs the old `RwLock<()>` table;
 //! * end-to-end engine overhead per trivial update (1..4 workers);
 //! * ghost-sync transport throughput: deltas/sec and bytes per delta for
-//!   the direct vs serialized-channel vs unix-socket backends at batch
-//!   windows {1,16,64} — results/BENCH_transport.json;
+//!   the direct vs serialized-channel (raw and compressed "channel-z") vs
+//!   unix-socket backends at batch windows {1,16,64} —
+//!   results/BENCH_transport.json;
 //! * PJRT batched-kernel dispatch latency (if artifacts are built).
 //!
 //! Output: bench table on stdout + results/micro.tsv +
@@ -170,6 +174,53 @@ fn main() {
                 );
                 sched_json.push((format!("{label}_w{workers}_tasks_per_sec"), tps));
             }
+        }
+    }
+
+    // ---- injector ring-capacity sweep ---------------------------------------
+    //
+    // The MPMC injector ring degrades gracefully when the in-flight task set
+    // outgrows its capacity (overflow spills to a mutexed deque); this sweep
+    // pins where the knee sits for a fixed 4096-task working set so the
+    // engine's capacity hint can be judged against data.
+    {
+        use graphlab::scheduler::Injector;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let workers = 4usize;
+        let live = 4096u32;
+        let iters_per_worker = 200_000u64;
+        for cap in [64usize, 512, 4096, 65_536] {
+            let inj: Injector<Task> = Injector::new(cap);
+            for v in 0..live {
+                inj.push(Task::new(v));
+            }
+            let total = AtomicU64::new(0);
+            let timer = Timer::start();
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    let inj = &inj;
+                    let total = &total;
+                    s.spawn(move || {
+                        let mut count = 0u64;
+                        while count < iters_per_worker {
+                            if let Some(t) = inj.pop() {
+                                count += 1;
+                                inj.push(t);
+                            } else {
+                                std::thread::yield_now();
+                            }
+                        }
+                        total.fetch_add(count, Ordering::Relaxed);
+                    });
+                }
+            });
+            let tps = total.load(Ordering::Relaxed) as f64 / timer.elapsed_secs().max(1e-12);
+            println!(
+                "{:<44} {:>12.0} (4096 live tasks, {workers} workers)",
+                format!("sched-throughput/injector/cap{}", inj.capacity()),
+                tps
+            );
+            sched_json.push((format!("injector_cap{}_tasks_per_sec", inj.capacity()), tps));
         }
     }
 
@@ -355,6 +406,103 @@ fn main() {
         }
     }
 
+    // ---- vertex storage: SoA slab vs Vec-of-struct --------------------------
+    //
+    // The flat-storage tentpole, measured head-to-head on the BP vertex
+    // payload (K=3): a belief-update sweep (the BP inner-loop memory access
+    // pattern) and a delta capture (what clone-under-lock costs) on the
+    // contiguous `FlatVertexStore` slabs vs a `Vec<BpVertex>` of heap
+    // `Vec<f32>` fields. Machine-readable rows join BENCH_shard.json.
+    {
+        use graphlab::apps::mrf::BpVertex;
+        use graphlab::graph::FlatVertexStore;
+        let n = 65_536usize;
+        let k = 3usize;
+        let mk = |i: usize| BpVertex {
+            potential: vec![0.3, 0.4, 0.3],
+            belief: vec![1.0 + (i % 7) as f32, 1.0, 2.0],
+            observed: u32::MAX,
+            axis_stats: [0.0; 3],
+        };
+        let mut aos: Vec<BpVertex> = (0..n).map(mk).collect();
+        let mut soa: FlatVertexStore<BpVertex> = FlatVertexStore::new(k, n);
+        for v in 0..n {
+            soa.set(v as u32, &aos[v]);
+        }
+        let sweeps = 30u64;
+        println!(
+            "{:<44} {:>12} (BP belief sweep, K={k}, {n} vertices)",
+            "storage", "verts/s"
+        );
+
+        let timer = Timer::start();
+        for _ in 0..sweeps {
+            for v in aos.iter_mut() {
+                let mut sum = 0.0f32;
+                for j in 0..k {
+                    v.belief[j] = v.potential[j] * (v.belief[j] + 1.0);
+                    sum += v.belief[j];
+                }
+                let inv = 1.0 / sum;
+                for j in 0..k {
+                    v.belief[j] *= inv;
+                }
+            }
+        }
+        let vec_update = (sweeps * n as u64) as f64 / timer.elapsed_secs().max(1e-12);
+        println!("{:<44} {:>12.0}", "storage/update/vec", vec_update);
+
+        let timer = Timer::start();
+        for _ in 0..sweeps {
+            for v in 0..n as u32 {
+                let (floats, _) = soa.row_mut(v);
+                let (pot, rest) = floats.split_at_mut(k);
+                let belief = &mut rest[..k];
+                let mut sum = 0.0f32;
+                for j in 0..k {
+                    belief[j] = pot[j] * (belief[j] + 1.0);
+                    sum += belief[j];
+                }
+                let inv = 1.0 / sum;
+                for j in 0..k {
+                    belief[j] *= inv;
+                }
+            }
+        }
+        let soa_update = (sweeps * n as u64) as f64 / timer.elapsed_secs().max(1e-12);
+        println!("{:<44} {:>12.0}", "storage/update/soa", soa_update);
+
+        // Delta capture: what the engine pays per boundary write to snapshot
+        // vertex data under the lock. Vec-of-struct reuses a slot via
+        // clone_from (still two heap-buffer copies + bookkeeping); the slab
+        // row copy is two contiguous memcpys.
+        let mut snapshot = mk(0);
+        let timer = Timer::start();
+        for _ in 0..sweeps {
+            for v in aos.iter() {
+                snapshot.clone_from(v);
+                std::hint::black_box(&snapshot);
+            }
+        }
+        let vec_capture = (sweeps * n as u64) as f64 / timer.elapsed_secs().max(1e-12);
+        println!("{:<44} {:>12.0}", "storage/capture/vec-clone", vec_capture);
+
+        let mut shadow: FlatVertexStore<BpVertex> = FlatVertexStore::new(k, n);
+        let timer = Timer::start();
+        for _ in 0..sweeps {
+            for v in 0..n as u32 {
+                shadow.copy_row_from(v, &soa, v);
+            }
+        }
+        let soa_capture = (sweeps * n as u64) as f64 / timer.elapsed_secs().max(1e-12);
+        println!("{:<44} {:>12.0}", "storage/capture/soa-row", soa_capture);
+
+        shard_json.push(("vec_update_verts_per_sec".into(), vec_update));
+        shard_json.push(("soa_update_verts_per_sec".into(), soa_update));
+        shard_json.push(("vec_clone_capture_per_sec".into(), vec_capture));
+        shard_json.push(("soa_row_capture_per_sec".into(), soa_capture));
+    }
+
     // ---- transport: Direct vs Channel vs Socket across batch windows --------
     //
     // The ghost-sync transport layer's cost drivers: deltas/sec through the
@@ -384,11 +532,12 @@ fn main() {
             "{:<44} {:>12} {:>14}",
             "transport", "deltas/s", "bytes/delta"
         );
-        for backend in ["direct", "channel", "socket"] {
+        for backend in ["direct", "channel", "channel-z", "socket"] {
             for batch in [1usize, 16, 64] {
                 let transport: Box<dyn GhostTransport<u64> + '_> = match backend {
                     "direct" => Box::new(DirectTransport::new(&sharded)),
                     "channel" => Box::new(ChannelTransport::new(&sharded)),
+                    "channel-z" => Box::new(ChannelTransport::compressed(&sharded)),
                     _ => Box::new(
                         SocketTransport::new(&sharded)
                             .expect("unix-socket transport setup"),
@@ -403,7 +552,7 @@ fn main() {
                         let mut batcher: DeltaBatcher<u64> = DeltaBatcher::new(batch);
                         for &v in owned {
                             let ver = sharded.bump_master(v);
-                            batcher.record(v, ver, round);
+                            batcher.record(v, ver, &round);
                             if batcher.should_flush() {
                                 let r = batcher.flush(shard, transport.as_ref());
                                 deltas += r.deltas;

@@ -9,10 +9,11 @@
 //! bound. Under the **edge consistency** model this update is sequentially
 //! consistent (Prop. 3.1: it modifies only `v` and its adjacent edges).
 
-use super::mrf::{normalize, BpEdge, BpVertex, EdgePotential};
+use super::mrf::{normalize, BpEdge, BpVertex, EdgePotential, FlatTables};
 use crate::engine::{UpdateContext, UpdateFn};
 use crate::consistency::Scope;
 use crate::transport::{put_f32, put_f32s, put_u32, ByteReader, VertexCodec};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// Ghost-sync wire encoding of a BP vertex: both distributions
@@ -51,16 +52,33 @@ pub struct BpUpdate {
     pub bound: f32,
     /// Damping factor in [0, 1): new = (1-d)·computed + d·old.
     pub damping: f32,
-    /// Shared K×K potential tables for `EdgePotential::Table` edges.
-    pub tables: Arc<Vec<Vec<f32>>>,
+    /// Shared K×K potential tables for `EdgePotential::Table` edges,
+    /// flattened into one contiguous slab + offsets so the ψ lookup in
+    /// the message inner loop is a single slab index instead of two
+    /// pointer hops through `Vec<Vec<f32>>`.
+    pub tables: FlatTables,
     /// Cache per-axis smoothness statistics on the vertex for the
     /// parameter-learning sync (§4.1, Alg. 3).
     pub learn_stats: bool,
 }
 
+thread_local! {
+    /// Reused per-thread inner-loop buffers (belief, cavity, outbound
+    /// message): the update runs millions of times per run, and three
+    /// fresh `vec![]`s per call were pure allocator traffic.
+    static BP_SCRATCH: RefCell<(Vec<f32>, Vec<f32>, Vec<f32>)> =
+        RefCell::new((Vec::new(), Vec::new(), Vec::new()));
+}
+
 impl BpUpdate {
     pub fn new(arity: usize, bound: f32, tables: Arc<Vec<Vec<f32>>>) -> BpUpdate {
-        BpUpdate { arity, bound, damping: 0.0, tables, learn_stats: false }
+        BpUpdate {
+            arity,
+            bound,
+            damping: 0.0,
+            tables: FlatTables::from_nested(&tables, arity),
+            learn_stats: false,
+        }
     }
 
     /// ψ(x_src = i, x_dst = j) for the given edge potential.
@@ -71,7 +89,7 @@ impl BpUpdate {
                 let d = (i as f64 - j as f64).abs();
                 (-lambda[axis as usize] * d).exp() as f32
             }
-            EdgePotential::Table(t) => self.tables[t as usize][i * self.arity + j],
+            EdgePotential::Table(t) => self.tables.at(t, i, j),
         }
     }
 }
@@ -80,83 +98,94 @@ impl UpdateFn<BpVertex, BpEdge> for BpUpdate {
     fn update(&self, scope: &mut Scope<'_, BpVertex, BpEdge>, ctx: &mut UpdateContext<'_>) {
         let k = self.arity;
         let lambda = ctx.sdt.get_or::<[f64; 3]>(LAMBDA_KEY, [1.0, 1.0, 1.0]);
+        BP_SCRATCH.with(|scratch| {
+            let (belief, cavity, new_msg) = &mut *scratch.borrow_mut();
 
-        // 1. Local belief b(x_v) ∝ φ_v(x) · Π_{u->v} m_{u->v}(x).
-        let mut belief = scope.vertex().potential.clone();
-        for &e in scope.in_edges() {
-            let msg = &scope.edge_data(e).message;
-            for (b, m) in belief.iter_mut().zip(msg) {
-                *b *= *m;
-            }
-        }
-        normalize(&mut belief);
-
-        // 2. Outbound messages from cavity distributions.
-        let mut new_msg = vec![0.0f32; k];
-        for &e in scope.out_edges() {
-            let t = scope.edge(e).dst;
-            // cavity: divide out t's inbound contribution m_{t->v}
-            let mut cavity = belief.clone();
-            if let Some(rev) = scope.reverse_edge(e) {
-                let m_in = &scope.edge_data(rev).message;
-                for (c, m) in cavity.iter_mut().zip(m_in) {
-                    *c = if *m > 1e-30 { *c / *m } else { 0.0 };
+            // 1. Local belief b(x_v) ∝ φ_v(x) · Π_{u->v} m_{u->v}(x).
+            belief.clear();
+            belief.extend_from_slice(&scope.vertex().potential);
+            for &e in scope.in_edges() {
+                let msg = &scope.edge_data(e).message;
+                for (b, m) in belief.iter_mut().zip(msg) {
+                    *b *= *m;
                 }
             }
-            normalize(&mut cavity);
+            normalize(belief);
 
-            let edge = scope.edge_data(e);
-            let pot = edge.potential;
-            for (j, out) in new_msg.iter_mut().enumerate() {
-                let mut acc = 0.0f32;
-                for (i, c) in cavity.iter().enumerate() {
-                    acc += self.psi(pot, &lambda, i, j) * c;
-                }
-                *out = acc;
-            }
-            normalize(&mut new_msg);
-
-            let edge = scope.edge_data_mut(e);
-            let mut residual = 0.0f32;
-            for (m_old, &m_new) in edge.message.iter_mut().zip(&new_msg) {
-                let blended = self.damping * *m_old + (1.0 - self.damping) * m_new;
-                residual += (blended - *m_old).abs();
-                *m_old = blended;
-            }
-
-            // Residual scheduling (Alg. 2): AddTask(t, residual).
-            if residual > self.bound {
-                ctx.add_task(t, residual as f64);
-            }
-        }
-
-        // 3. Learning statistics: E|x_v - x_u| per axis under the mean-field
-        // pairwise approximation b_v(i)·b_u(j) (cached for Alg. 3's fold).
-        if self.learn_stats {
-            let mut stats = [0.0f32; 3];
-            let mut counts = [0.0f32; 3];
+            // 2. Outbound messages from cavity distributions.
+            new_msg.clear();
+            new_msg.resize(k, 0.0);
             for &e in scope.out_edges() {
-                let edge = scope.edge_data(e);
-                if let EdgePotential::Laplace { axis } = edge.potential {
-                    let u = scope.edge(e).dst;
-                    let nb = &scope.neighbor(u).belief;
-                    let mut exp_absdiff = 0.0f32;
-                    for (i, bi) in belief.iter().enumerate() {
-                        for (j, bj) in nb.iter().enumerate() {
-                            exp_absdiff += bi * bj * (i as f32 - j as f32).abs();
-                        }
+                let t = scope.edge(e).dst;
+                // cavity: divide out t's inbound contribution m_{t->v}
+                cavity.clear();
+                cavity.extend_from_slice(belief);
+                if let Some(rev) = scope.reverse_edge(e) {
+                    let m_in = &scope.edge_data(rev).message;
+                    for (c, m) in cavity.iter_mut().zip(m_in) {
+                        *c = if *m > 1e-30 { *c / *m } else { 0.0 };
                     }
-                    stats[axis as usize] += exp_absdiff;
-                    counts[axis as usize] += 1.0;
+                }
+                normalize(cavity);
+
+                let edge = scope.edge_data(e);
+                let pot = edge.potential;
+                for (j, out) in new_msg.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for (i, c) in cavity.iter().enumerate() {
+                        acc += self.psi(pot, &lambda, i, j) * c;
+                    }
+                    *out = acc;
+                }
+                normalize(new_msg);
+
+                let edge = scope.edge_data_mut(e);
+                let mut residual = 0.0f32;
+                for (m_old, &m_new) in edge.message.iter_mut().zip(new_msg.iter()) {
+                    let blended = self.damping * *m_old + (1.0 - self.damping) * m_new;
+                    residual += (blended - *m_old).abs();
+                    *m_old = blended;
+                }
+
+                // Residual scheduling (Alg. 2): AddTask(t, residual).
+                if residual > self.bound {
+                    ctx.add_task(t, residual as f64);
                 }
             }
-            let vd = scope.vertex_mut();
-            for a in 0..3 {
-                vd.axis_stats[a] = if counts[a] > 0.0 { stats[a] / counts[a] } else { 0.0 };
-            }
-        }
 
-        scope.vertex_mut().belief = belief;
+            // 3. Learning statistics: E|x_v - x_u| per axis under the
+            // mean-field pairwise approximation b_v(i)·b_u(j) (cached for
+            // Alg. 3's fold).
+            if self.learn_stats {
+                let mut stats = [0.0f32; 3];
+                let mut counts = [0.0f32; 3];
+                for &e in scope.out_edges() {
+                    let edge = scope.edge_data(e);
+                    if let EdgePotential::Laplace { axis } = edge.potential {
+                        let u = scope.edge(e).dst;
+                        let nb = &scope.neighbor(u).belief;
+                        let mut exp_absdiff = 0.0f32;
+                        for (i, bi) in belief.iter().enumerate() {
+                            for (j, bj) in nb.iter().enumerate() {
+                                exp_absdiff += bi * bj * (i as f32 - j as f32).abs();
+                            }
+                        }
+                        stats[axis as usize] += exp_absdiff;
+                        counts[axis as usize] += 1.0;
+                    }
+                }
+                let vd = scope.vertex_mut();
+                for a in 0..3 {
+                    vd.axis_stats[a] =
+                        if counts[a] > 0.0 { stats[a] / counts[a] } else { 0.0 };
+                }
+            }
+
+            // Write back into the vertex's existing belief buffer.
+            let vd = scope.vertex_mut();
+            vd.belief.clear();
+            vd.belief.extend_from_slice(belief);
+        });
     }
 
     fn name(&self) -> &'static str {

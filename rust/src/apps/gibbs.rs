@@ -18,16 +18,18 @@
 //! concurrency.
 
 use super::coloring::HasColor;
-use super::mrf::EdgePotential;
+use super::mrf::{EdgePotential, FlatTables};
 use crate::consistency::Scope;
 use crate::engine::{UpdateContext, UpdateFn};
+use crate::graph::FlatVertex;
 use crate::scheduler::FuncId;
 use crate::transport::{put_u32, put_u32s, put_u8, ByteReader, VertexCodec};
 use crate::util::Pcg32;
+use std::cell::RefCell;
 use std::sync::Mutex;
 
 /// Vertex state for the sampler.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct GibbsVertex {
     /// Unnormalized unary potential (length K).
     pub potential: Vec<f32>,
@@ -52,6 +54,56 @@ impl GibbsVertex {
             return vec![1.0 / self.counts.len() as f32; self.counts.len()];
         }
         self.counts.iter().map(|&c| c as f32 / total as f32).collect()
+    }
+}
+
+/// Manual `Clone` so `clone_from` reuses the destination's `Vec` buffers:
+/// ghost-table writes and delta-batcher captures copy Gibbs state on every
+/// boundary sample, and the derive would reallocate both vectors each time.
+impl Clone for GibbsVertex {
+    fn clone(&self) -> GibbsVertex {
+        GibbsVertex {
+            potential: self.potential.clone(),
+            value: self.value,
+            counts: self.counts.clone(),
+            color: self.color,
+        }
+    }
+
+    fn clone_from(&mut self, src: &GibbsVertex) {
+        self.potential.clone_from(&src.potential);
+        self.value = src.value;
+        self.counts.clone_from(&src.counts);
+        self.color = src.color;
+    }
+}
+
+/// SoA view of a Gibbs vertex: floats are `[potential(K)]`, words are
+/// `[value, color, counts(K)]`. See [`crate::graph::FlatVertexStore`].
+impl FlatVertex for GibbsVertex {
+    fn f32_lanes(arity: usize) -> usize {
+        arity
+    }
+
+    fn u32_lanes(arity: usize) -> usize {
+        arity + 2
+    }
+
+    fn write_flat(&self, floats: &mut [f32], words: &mut [u32]) {
+        debug_assert_eq!(self.potential.len(), floats.len());
+        floats.copy_from_slice(&self.potential);
+        words[0] = self.value as u32;
+        words[1] = self.color;
+        words[2..].copy_from_slice(&self.counts);
+    }
+
+    fn read_flat(_arity: usize, floats: &[f32], words: &[u32]) -> GibbsVertex {
+        GibbsVertex {
+            potential: floats.to_vec(),
+            value: words[0] as u8,
+            color: words[1],
+            counts: words[2..].to_vec(),
+        }
     }
 }
 
@@ -94,12 +146,20 @@ pub struct GibbsEdge {
 /// The Gibbs update: sample x_v from P(x_v | x_{N(v)}) and record the visit.
 pub struct GibbsUpdate {
     pub arity: usize,
-    /// Shared K×K tables for `EdgePotential::Table`.
-    pub tables: std::sync::Arc<Vec<Vec<f32>>>,
+    /// Shared K×K tables for `EdgePotential::Table`, flattened into one
+    /// slab + offsets so the conditional's inner loop is a single slab
+    /// index (see [`FlatTables`]).
+    pub tables: FlatTables,
     /// Laplace λ per axis (fixed during sampling).
     pub lambda: [f64; 3],
     /// Per-worker RNG streams (uncontended: each worker uses its own slot).
     pub rngs: Vec<Mutex<Pcg32>>,
+}
+
+thread_local! {
+    /// Reused per-thread conditional-distribution buffer: one fresh
+    /// `Vec<f64>` per sample was pure allocator traffic on the sweep path.
+    static GIBBS_SCRATCH: RefCell<Vec<f64>> = RefCell::new(Vec::new());
 }
 
 impl GibbsUpdate {
@@ -112,7 +172,7 @@ impl GibbsUpdate {
         let mut root = Pcg32::seed_from_u64(seed);
         GibbsUpdate {
             arity,
-            tables,
+            tables: FlatTables::from_nested(&tables, arity),
             lambda: [1.0; 3],
             rngs: (0..workers.max(1)).map(|w| Mutex::new(root.fork(w as u64))).collect(),
         }
@@ -125,7 +185,7 @@ impl GibbsUpdate {
                 let d = (i as f64 - j as f64).abs();
                 (-self.lambda[axis as usize] * d).exp() as f32
             }
-            EdgePotential::Table(t) => self.tables[t as usize][i * self.arity + j],
+            EdgePotential::Table(t) => self.tables.at(t, i, j),
         }
     }
 }
@@ -133,20 +193,22 @@ impl GibbsUpdate {
 impl UpdateFn<GibbsVertex, GibbsEdge> for GibbsUpdate {
     fn update(&self, scope: &mut Scope<'_, GibbsVertex, GibbsEdge>, ctx: &mut UpdateContext<'_>) {
         let k = self.arity;
-        // conditional: φ_v(x) · Π_{u∈N(v)} ψ(x, x_u)
-        let mut cond: Vec<f64> = scope.vertex().potential.iter().map(|&p| p as f64).collect();
-        for &e in scope.out_edges() {
-            let u = scope.edge(e).dst;
-            let xu = scope.neighbor(u).value as usize;
-            let pot = scope.edge_data(e).potential;
-            for (x, c) in cond.iter_mut().enumerate() {
-                *c *= self.psi(pot, x, xu) as f64;
+        let sample = GIBBS_SCRATCH.with(|scratch| {
+            // conditional: φ_v(x) · Π_{u∈N(v)} ψ(x, x_u)
+            let cond = &mut *scratch.borrow_mut();
+            cond.clear();
+            cond.extend(scope.vertex().potential.iter().map(|&p| p as f64));
+            for &e in scope.out_edges() {
+                let u = scope.edge(e).dst;
+                let xu = scope.neighbor(u).value as usize;
+                let pot = scope.edge_data(e).potential;
+                for (x, c) in cond.iter_mut().enumerate() {
+                    *c *= self.psi(pot, x, xu) as f64;
+                }
             }
-        }
-        let sample = {
             let mut rng = self.rngs[ctx.worker % self.rngs.len()].lock().unwrap();
-            rng.sample_discrete(&cond)
-        };
+            rng.sample_discrete(cond)
+        });
         debug_assert!(sample < k);
         let vd = scope.vertex_mut();
         vd.value = sample as u8;

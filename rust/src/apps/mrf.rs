@@ -4,12 +4,13 @@
 //! data holds the BP message `m_{u->v}` — exactly the paper's mapping of
 //! Loopy BP onto the GraphLab data model.
 
-use crate::graph::{DataGraph, GraphBuilder, VertexId};
+use crate::graph::{DataGraph, FlatVertex, GraphBuilder, VertexId};
 use crate::util::Pcg32;
+use std::sync::Arc;
 
 /// Per-vertex BP state: unnormalized node potential and current belief,
 /// plus the fields used by the parameter-learning pipeline (§4.1).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct BpVertex {
     /// Node potential φ_v(x) (length K).
     pub potential: Vec<f32>,
@@ -40,6 +41,108 @@ impl BpVertex {
     /// Expected level under the current belief.
     pub fn expectation(&self) -> f32 {
         self.belief.iter().enumerate().map(|(i, b)| i as f32 * b).sum()
+    }
+}
+
+/// Manual `Clone` so `clone_from` reuses the destination's existing
+/// `Vec` buffers — the ghost tables and the delta batcher capture vertex
+/// state via `clone_from` on every boundary write, and with the derive
+/// each capture would reallocate both distributions.
+impl Clone for BpVertex {
+    fn clone(&self) -> BpVertex {
+        BpVertex {
+            potential: self.potential.clone(),
+            belief: self.belief.clone(),
+            observed: self.observed,
+            axis_stats: self.axis_stats,
+        }
+    }
+
+    fn clone_from(&mut self, src: &BpVertex) {
+        self.potential.clone_from(&src.potential);
+        self.belief.clone_from(&src.belief);
+        self.observed = src.observed;
+        self.axis_stats = src.axis_stats;
+    }
+}
+
+/// SoA view of a BP vertex: floats are `[potential(K), belief(K),
+/// axis_stats(3)]`, words are `[observed]`. See
+/// [`crate::graph::FlatVertexStore`].
+impl FlatVertex for BpVertex {
+    fn f32_lanes(arity: usize) -> usize {
+        2 * arity + 3
+    }
+
+    fn u32_lanes(_arity: usize) -> usize {
+        1
+    }
+
+    fn write_flat(&self, floats: &mut [f32], words: &mut [u32]) {
+        let k = (floats.len() - 3) / 2;
+        debug_assert_eq!(self.potential.len(), k);
+        debug_assert_eq!(self.belief.len(), k);
+        floats[..k].copy_from_slice(&self.potential);
+        floats[k..2 * k].copy_from_slice(&self.belief);
+        floats[2 * k..].copy_from_slice(&self.axis_stats);
+        words[0] = self.observed;
+    }
+
+    fn read_flat(arity: usize, floats: &[f32], words: &[u32]) -> BpVertex {
+        let mut axis_stats = [0.0f32; 3];
+        axis_stats.copy_from_slice(&floats[2 * arity..2 * arity + 3]);
+        BpVertex {
+            potential: floats[..arity].to_vec(),
+            belief: floats[arity..2 * arity].to_vec(),
+            observed: words[0],
+            axis_stats,
+        }
+    }
+}
+
+/// Shared K×K factor tables flattened into one contiguous `Arc<[f32]>`
+/// slab plus an offset table. The nested `Arc<Vec<Vec<f32>>>` form costs
+/// two pointer hops per ψ lookup (outer Vec, inner Vec) on the BP/Gibbs
+/// inner loops; here a lookup is one offset add and one slab index.
+#[derive(Debug, Clone)]
+pub struct FlatTables {
+    data: Arc<[f32]>,
+    offsets: Vec<u32>,
+    arity: usize,
+}
+
+impl FlatTables {
+    /// Flatten row-major K×K `tables` (arity `arity`) into one slab.
+    pub fn from_nested(tables: &[Vec<f32>], arity: usize) -> FlatTables {
+        let mut offsets = Vec::with_capacity(tables.len() + 1);
+        let mut data = Vec::with_capacity(tables.iter().map(Vec::len).sum());
+        offsets.push(0u32);
+        for t in tables {
+            data.extend_from_slice(t);
+            offsets.push(data.len() as u32);
+        }
+        FlatTables { data: data.into(), offsets, arity }
+    }
+
+    /// ψ(i, j) of table `t`: one offset add + one slab index.
+    #[inline]
+    pub fn at(&self, t: u32, i: usize, j: usize) -> f32 {
+        self.data[self.offsets[t as usize] as usize + i * self.arity + j]
+    }
+
+    /// Borrow table `t` as its row-major K×K slice.
+    pub fn table(&self, t: u32) -> &[f32] {
+        &self.data[self.offsets[t as usize] as usize..self.offsets[t as usize + 1] as usize]
+    }
+
+    /// Number of tables.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// No tables at all (Laplace-only models)?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -278,6 +381,50 @@ mod tests {
         let mut d = vec![2.0, 6.0];
         normalize(&mut d);
         assert_eq!(d, vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn flat_tables_match_nested() {
+        let nested = vec![vec![1.0f32, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]];
+        let flat = FlatTables::from_nested(&nested, 2);
+        assert_eq!(flat.len(), 2);
+        assert!(!flat.is_empty());
+        for (t, tab) in nested.iter().enumerate() {
+            assert_eq!(flat.table(t as u32), tab.as_slice());
+            for i in 0..2 {
+                for j in 0..2 {
+                    assert_eq!(flat.at(t as u32, i, j), tab[i * 2 + j]);
+                }
+            }
+        }
+        assert!(FlatTables::from_nested(&[], 2).is_empty());
+    }
+
+    #[test]
+    fn bp_vertex_flat_round_trip_and_clone_from() {
+        let v = BpVertex {
+            potential: vec![0.2, 0.5, 0.3],
+            belief: vec![0.1, 0.6, 0.3],
+            observed: 7,
+            axis_stats: [1.5, -2.0, 0.25],
+        };
+        let mut floats = vec![0.0f32; BpVertex::f32_lanes(3)];
+        let mut words = vec![0u32; BpVertex::u32_lanes(3)];
+        v.write_flat(&mut floats, &mut words);
+        let back = BpVertex::read_flat(3, &floats, &words);
+        assert_eq!(back.potential, v.potential);
+        assert_eq!(back.belief, v.belief);
+        assert_eq!(back.observed, v.observed);
+        assert_eq!(back.axis_stats, v.axis_stats);
+
+        // clone_from copies into the existing buffers (no length change
+        // needed here, and capacity is reused)
+        let mut dst = BpVertex::uniform(3);
+        let cap = dst.belief.capacity();
+        dst.clone_from(&v);
+        assert_eq!(dst.belief, v.belief);
+        assert_eq!(dst.potential, v.potential);
+        assert!(dst.belief.capacity() >= cap);
     }
 
     #[test]

@@ -109,6 +109,15 @@ fn run_channel<V: VertexCodec + Clone + Send + Sync, E: Send + Sync>(
     p.run_on(&ChannelShardedEngine::new(p.config.shards), graph, scheduler, sdt)
 }
 
+fn run_channel_compressed<V: VertexCodec + Clone + Send + Sync, E: Send + Sync>(
+    p: &Program<'_, V, E>,
+    graph: &mut DataGraph<V, E>,
+    scheduler: &dyn Scheduler,
+    sdt: &Sdt,
+) -> RunReport {
+    p.run_on(&ChannelShardedEngine::compressed(p.config.shards), graph, scheduler, sdt)
+}
+
 fn run_socket<V: VertexCodec + Clone + Send + Sync, E: Send + Sync>(
     p: &Program<'_, V, E>,
     graph: &mut DataGraph<V, E>,
@@ -247,7 +256,9 @@ impl<'a, V, E> Program<'a, V, E> {
     /// Select the ghost-sync transport backend for sharded runs
     /// ([`Program::shards`] `> 1`): `"direct"` (default — in-place replica
     /// writes, zero wire bytes), `"channel"` (serializing per-shard-pair
-    /// byte queues), or `"socket"` (real Unix-domain-socket bytes with
+    /// byte queues), `"channel-compressed"` (the same queues carrying
+    /// shadow-diffed varint frames — fewer bytes per delta for converging
+    /// algorithms), or `"socket"` (real Unix-domain-socket bytes with
     /// bounded send windows and backpressure). The serializing backends
     /// require the vertex type to implement
     /// [`VertexCodec`](crate::transport::VertexCodec) — the bound lives on
@@ -270,13 +281,17 @@ impl<'a, V, E> Program<'a, V, E> {
                 self.transport_name = "channel";
                 self.wire = Some(run_channel::<V, E> as WireRunner<V, E>);
             }
+            "channel-compressed" => {
+                self.transport_name = "channel-compressed";
+                self.wire = Some(run_channel_compressed::<V, E> as WireRunner<V, E>);
+            }
             "socket" => {
                 self.transport_name = "socket";
                 self.wire = Some(run_socket::<V, E> as WireRunner<V, E>);
             }
             other => panic!(
                 "unknown ghost transport {other:?} (expected \"direct\", \"channel\", \
-                 or \"socket\")"
+                 \"channel-compressed\", or \"socket\")"
             ),
         }
         self
@@ -562,9 +577,12 @@ mod tests {
     #[test]
     fn transport_knob_routes_to_serializing_backends() {
         let n = 32;
-        for (name, expect_bytes) in
-            [("direct", false), ("channel", true), ("socket", true)]
-        {
+        for (name, expect_bytes) in [
+            ("direct", false),
+            ("channel", true),
+            ("channel-compressed", true),
+            ("socket", true),
+        ] {
             let f = Bump { rounds: 5 };
             let program =
                 Program::new().update_fn(&f).workers(4).shards(2).transport(name);

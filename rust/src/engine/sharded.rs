@@ -145,11 +145,20 @@ impl ShardedEngine {
 #[derive(Debug, Clone, Default)]
 pub struct ChannelShardedEngine {
     pub shards: usize,
+    /// Ship compressed delta frames (varint header + shadow diff) instead
+    /// of raw ones — see [`ChannelTransport::compressed`].
+    pub compress: bool,
 }
 
 impl ChannelShardedEngine {
     pub fn new(shards: usize) -> ChannelShardedEngine {
-        ChannelShardedEngine { shards }
+        ChannelShardedEngine { shards, compress: false }
+    }
+
+    /// Like [`ChannelShardedEngine::new`], but delta lanes carry
+    /// compressed frames (transport name `"channel-z"`).
+    pub fn compressed(shards: usize) -> ChannelShardedEngine {
+        ChannelShardedEngine { shards, compress: true }
     }
 }
 
@@ -173,7 +182,11 @@ where
         let requested = if self.shards > 0 { self.shards } else { config.shards };
         let sharded = ShardedGraph::new(graph, requested.max(1));
         let graph: &DataGraph<V, E> = graph;
-        let transport = ChannelTransport::new(&sharded);
+        let transport = if self.compress {
+            ChannelTransport::compressed(&sharded)
+        } else {
+            ChannelTransport::new(&sharded)
+        };
         run_core(
             graph,
             &sharded,
@@ -787,12 +800,13 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                     fns[task.func as usize].update(&mut scope, &mut ctx);
                     // Ghost propagation while the center write lock is
                     // still held: bump the master version, record the
-                    // versioned delta (clone under the lock), and let the
-                    // batcher decide when it leaves through the transport.
+                    // versioned delta (the batcher copies into a reused
+                    // slot under the lock), and let the batcher decide
+                    // when it leaves through the transport.
                     if k > 1 && sharded.is_boundary(task.vertex) {
                         boundary_updates += 1;
                         let version = sharded.bump_master(task.vertex);
-                        if batcher.record(task.vertex, version, scope.vertex().clone()) {
+                        if batcher.record(task.vertex, version, scope.vertex()) {
                             deltas_coalesced += 1;
                         }
                         if batcher.should_flush() {

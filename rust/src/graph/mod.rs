@@ -11,11 +11,13 @@ mod builder;
 mod partition;
 mod sample;
 mod shard;
+mod soa;
 
 pub use builder::GraphBuilder;
 pub use partition::PartitionMap;
 pub use sample::induced_subgraph;
 pub use shard::{GhostEntry, LocalRef, Shard, ShardedGraph};
+pub use soa::{FlatVertex, FlatVertexStore};
 
 use std::cell::UnsafeCell;
 

@@ -89,11 +89,15 @@ impl<V: Clone> GhostEntry<V> {
     }
 
     /// Overwrite the replica from the owner's data and bump the version.
+    /// `clone_from` rather than `= clone()`: for heap-backed vertex types
+    /// (`Vec<f32>` beliefs) it copies into the replica's existing
+    /// allocation, so a steady-state sync writes bytes instead of
+    /// allocating.
     fn store(&self, value: &V) {
         self.lock.write_spin();
         // SAFETY: exclusive lock held for the duration of the write.
         unsafe {
-            *self.data.get_mut_unchecked() = value.clone();
+            self.data.get_mut_unchecked().clone_from(value);
         }
         self.lock.unlock_write();
         let bumped = self.version.fetch_add(1, Ordering::Release) + 1;
@@ -110,8 +114,9 @@ impl<V: Clone> GhostEntry<V> {
         let newer = version > self.version.load(Ordering::Acquire);
         if newer {
             // SAFETY: exclusive lock held for the duration of the write.
+            // `clone_from` reuses the replica's existing heap allocation.
             unsafe {
-                *self.data.get_mut_unchecked() = value.clone();
+                self.data.get_mut_unchecked().clone_from(value);
             }
             self.version.store(version, Ordering::Release);
         }

@@ -1,0 +1,279 @@
+//! Flat **structure-of-arrays vertex storage** for the numeric hot loops.
+//!
+//! The default [`DataGraph`] attaches one heap-allocated data block per
+//! vertex, which is the right shape for arbitrary user types but the wrong
+//! shape for the BP/Gibbs inner loops: a `Vec<f32>` belief per vertex
+//! scatters the float payloads across the heap, so a sweep over vertices
+//! chases one pointer (and takes one cache miss) per vertex before it
+//! touches a single number. A [`FlatVertexStore`] instead keeps every
+//! vertex's fixed-arity float payload in two contiguous slabs —
+//! `Vec<f32>` for the distributions and `Vec<u32>` for the discrete
+//! fields — indexed by `vid * lanes`, so a sweep is a linear walk and a
+//! clone-under-lock delta capture is a `copy_from_slice` of one row
+//! instead of a deep `Vec` clone.
+//!
+//! The [`FlatVertex`] view trait is the bridge: a vertex type declares how
+//! many f32/u32 lanes it occupies at a given arity and how to scatter
+//! itself into (and gather itself from) a row. The BP and Gibbs vertex
+//! types implement it in `apps/`; the micro benches use the store to
+//! measure the SoA-vs-`Vec`-per-vertex gap (`results/BENCH_shard.json`).
+
+use super::{DataGraph, VertexId};
+use std::marker::PhantomData;
+
+/// A vertex type with a fixed per-arity flat layout: `f32_lanes(k)` floats
+/// plus `u32_lanes(k)` words fully describe one vertex. Implementations
+/// must keep `write_flat` and `read_flat` exact inverses.
+pub trait FlatVertex: Sized {
+    /// Number of `f32` lanes one vertex occupies at arity `arity`.
+    fn f32_lanes(arity: usize) -> usize;
+
+    /// Number of `u32` lanes one vertex occupies at arity `arity`.
+    fn u32_lanes(arity: usize) -> usize;
+
+    /// Scatter this vertex into its row slices. Both slices have exactly
+    /// the lane lengths declared above.
+    fn write_flat(&self, floats: &mut [f32], words: &mut [u32]);
+
+    /// Gather a vertex back from its row slices.
+    fn read_flat(arity: usize, floats: &[f32], words: &[u32]) -> Self;
+}
+
+/// Contiguous structure-of-arrays storage for `n` vertices of a
+/// [`FlatVertex`] type: one `f32` slab and one `u32` slab, row `v` at
+/// `v * lanes .. (v + 1) * lanes`. See the module docs for why this beats
+/// `Vec`-per-vertex on sweep-shaped workloads.
+pub struct FlatVertexStore<V: FlatVertex> {
+    arity: usize,
+    f32_lanes: usize,
+    u32_lanes: usize,
+    floats: Vec<f32>,
+    words: Vec<u32>,
+    len: usize,
+    _marker: PhantomData<fn() -> V>,
+}
+
+impl<V: FlatVertex> FlatVertexStore<V> {
+    /// Zero-initialized store for `len` vertices at arity `arity`.
+    pub fn new(arity: usize, len: usize) -> FlatVertexStore<V> {
+        let f32_lanes = V::f32_lanes(arity);
+        let u32_lanes = V::u32_lanes(arity);
+        FlatVertexStore {
+            arity,
+            f32_lanes,
+            u32_lanes,
+            floats: vec![0.0; len * f32_lanes],
+            words: vec![0; len * u32_lanes],
+            len,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Gather every vertex data block of `graph` into a fresh store.
+    pub fn from_graph<E>(graph: &mut DataGraph<V, E>, arity: usize) -> FlatVertexStore<V> {
+        let mut store = FlatVertexStore::new(arity, graph.num_vertices());
+        graph.for_each_vertex_mut(|v, data| store.set(v, data));
+        store
+    }
+
+    /// Scatter every row back into `graph`'s vertex data blocks.
+    pub fn scatter_to_graph<E>(&self, graph: &mut DataGraph<V, E>) {
+        assert_eq!(self.len, graph.num_vertices(), "store/graph size mismatch");
+        graph.for_each_vertex_mut(|v, data| *data = self.get(v));
+    }
+
+    /// Number of vertices stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Is the store empty?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The arity the store was built for.
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// `f32` lanes per vertex row.
+    pub fn f32_lanes(&self) -> usize {
+        self.f32_lanes
+    }
+
+    /// `u32` lanes per vertex row.
+    pub fn u32_lanes(&self) -> usize {
+        self.u32_lanes
+    }
+
+    /// Vertex `v`'s float row (shared).
+    #[inline]
+    pub fn floats_of(&self, v: VertexId) -> &[f32] {
+        let i = v as usize * self.f32_lanes;
+        &self.floats[i..i + self.f32_lanes]
+    }
+
+    /// Vertex `v`'s float row (exclusive).
+    #[inline]
+    pub fn floats_of_mut(&mut self, v: VertexId) -> &mut [f32] {
+        let i = v as usize * self.f32_lanes;
+        &mut self.floats[i..i + self.f32_lanes]
+    }
+
+    /// Vertex `v`'s word row (shared).
+    #[inline]
+    pub fn words_of(&self, v: VertexId) -> &[u32] {
+        let i = v as usize * self.u32_lanes;
+        &self.words[i..i + self.u32_lanes]
+    }
+
+    /// Vertex `v`'s word row (exclusive).
+    #[inline]
+    pub fn words_of_mut(&mut self, v: VertexId) -> &mut [u32] {
+        let i = v as usize * self.u32_lanes;
+        &mut self.words[i..i + self.u32_lanes]
+    }
+
+    /// Both rows of vertex `v`, exclusively — the shape an update kernel
+    /// wants (beliefs in the float row, discrete state in the word row).
+    #[inline]
+    pub fn row_mut(&mut self, v: VertexId) -> (&mut [f32], &mut [u32]) {
+        let fi = v as usize * self.f32_lanes;
+        let wi = v as usize * self.u32_lanes;
+        (
+            &mut self.floats[fi..fi + self.f32_lanes],
+            &mut self.words[wi..wi + self.u32_lanes],
+        )
+    }
+
+    /// Gather vertex `v` back into its materialized form.
+    pub fn get(&self, v: VertexId) -> V {
+        V::read_flat(self.arity, self.floats_of(v), self.words_of(v))
+    }
+
+    /// Scatter `data` into vertex `v`'s rows.
+    pub fn set(&mut self, v: VertexId, data: &V) {
+        let fi = v as usize * self.f32_lanes;
+        let wi = v as usize * self.u32_lanes;
+        data.write_flat(
+            &mut self.floats[fi..fi + self.f32_lanes],
+            &mut self.words[wi..wi + self.u32_lanes],
+        );
+    }
+
+    /// Copy vertex `src`'s rows out of `from` into this store's vertex
+    /// `dst` — the slab-slice form of clone-under-lock delta capture: two
+    /// `copy_from_slice` calls, no allocation, no pointer chase.
+    pub fn copy_row_from(&mut self, dst: VertexId, from: &FlatVertexStore<V>, src: VertexId) {
+        debug_assert_eq!(self.f32_lanes, from.f32_lanes);
+        debug_assert_eq!(self.u32_lanes, from.u32_lanes);
+        self.floats_of_mut(dst).copy_from_slice(from.floats_of(src));
+        self.words_of_mut(dst).copy_from_slice(from.words_of(src));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// A miniature BP-shaped vertex: one distribution of length `arity`
+    /// plus two discrete fields.
+    #[derive(Debug, Clone, PartialEq)]
+    struct MiniVertex {
+        dist: Vec<f32>,
+        tag: u32,
+        hits: u32,
+    }
+
+    impl FlatVertex for MiniVertex {
+        fn f32_lanes(arity: usize) -> usize {
+            arity
+        }
+        fn u32_lanes(_arity: usize) -> usize {
+            2
+        }
+        fn write_flat(&self, floats: &mut [f32], words: &mut [u32]) {
+            floats.copy_from_slice(&self.dist);
+            words[0] = self.tag;
+            words[1] = self.hits;
+        }
+        fn read_flat(_arity: usize, floats: &[f32], words: &[u32]) -> MiniVertex {
+            MiniVertex { dist: floats.to_vec(), tag: words[0], hits: words[1] }
+        }
+    }
+
+    fn mini(v: u32) -> MiniVertex {
+        MiniVertex {
+            dist: vec![v as f32, v as f32 + 0.5, v as f32 + 0.25],
+            tag: v * 10,
+            hits: v,
+        }
+    }
+
+    #[test]
+    fn set_get_round_trips_and_rows_are_contiguous() {
+        let mut store: FlatVertexStore<MiniVertex> = FlatVertexStore::new(3, 4);
+        assert_eq!(store.len(), 4);
+        assert_eq!(store.f32_lanes(), 3);
+        assert_eq!(store.u32_lanes(), 2);
+        for v in 0..4u32 {
+            store.set(v, &mini(v));
+        }
+        for v in 0..4u32 {
+            assert_eq!(store.get(v), mini(v), "vertex {v}");
+            assert_eq!(store.floats_of(v), mini(v).dist.as_slice());
+            assert_eq!(store.words_of(v), &[v * 10, v]);
+        }
+        // rows really are slab slices at vid * lanes
+        let (f, w) = store.row_mut(2);
+        f[0] = 99.0;
+        w[1] = 77;
+        assert_eq!(store.floats_of(2)[0], 99.0);
+        assert_eq!(store.words_of(2)[1], 77);
+    }
+
+    #[test]
+    fn copy_row_from_is_a_slab_copy() {
+        let mut a: FlatVertexStore<MiniVertex> = FlatVertexStore::new(3, 3);
+        let mut b: FlatVertexStore<MiniVertex> = FlatVertexStore::new(3, 3);
+        for v in 0..3u32 {
+            a.set(v, &mini(v + 1));
+        }
+        b.copy_row_from(0, &a, 2);
+        assert_eq!(b.get(0), mini(3));
+        assert_eq!(b.get(1), MiniVertex { dist: vec![0.0; 3], tag: 0, hits: 0 });
+    }
+
+    #[test]
+    fn graph_gather_scatter_round_trips() {
+        let mut g: DataGraph<MiniVertex, ()> = {
+            let mut b = GraphBuilder::new();
+            for v in 0..5u32 {
+                b.add_vertex(mini(v));
+            }
+            for v in 0..4u32 {
+                b.add_undirected(v, v + 1, (), ());
+            }
+            b.build()
+        };
+        let mut store = FlatVertexStore::from_graph(&mut g, 3);
+        assert_eq!(store.len(), 5);
+        // mutate in flat form, scatter back
+        for v in 0..5u32 {
+            store.floats_of_mut(v)[0] += 100.0;
+            store.words_of_mut(v)[1] += 1;
+        }
+        store.scatter_to_graph(&mut g);
+        for v in 0..5u32 {
+            let want = {
+                let mut m = mini(v);
+                m.dist[0] += 100.0;
+                m.hits += 1;
+                m
+            };
+            assert_eq!(*g.vertex_data(v), want, "vertex {v}");
+        }
+    }
+}

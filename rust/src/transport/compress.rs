@@ -1,0 +1,389 @@
+//! Delta compression for ghost-sync wire frames.
+//!
+//! The raw [`super::GhostDelta`] frame spends a flat 16 bytes of header
+//! (`u32 vertex`, `u64 version`, `u32 len`) plus the full codec payload on
+//! every delta, even when a converging algorithm (residual BP late in its
+//! run) re-ships a payload that is byte-identical to the last one sent on
+//! the same lane, or differs in only one message slot.
+//!
+//! The compressed frame fixes both costs:
+//!
+//! ```text
+//! frame   := varint(vertex) varint(version) tag:u8 varint(payload_len) body
+//! tag 0   => body is `payload_len` literal bytes (raw fallback)
+//! tag 1   => body is a word-run diff against the per-lane shadow copy
+//! diff    := ( varint(skip_words) varint(copy_words) copy_words*4 bytes )*
+//!            until skip+copy words cover payload_len/4, then
+//!            payload_len%4 literal tail bytes
+//! ```
+//!
+//! Varints are LEB128 (7 bits per byte, low group first), so small vertex
+//! ids, versions, and payload lengths take 1–3 bytes instead of 16. The
+//! diff body run-length-skips 4-byte words (one `f32`/`u32` lane each)
+//! that are unchanged since the last frame shipped for the same vertex on
+//! the same lane. The encoder builds the diff into scratch and falls back
+//! to tag 0 whenever the diff would not be strictly smaller, so a
+//! compressed frame is never larger than `header + payload`.
+//!
+//! Both endpoints keep a *shadow* — the payload bytes as of the last frame
+//! for each vertex — and the scheme is only sound if sender and receiver
+//! shadows agree when a diff frame is decoded. The channel transport
+//! guarantees this by encoding and decoding under the per-lane FIFO lock
+//! (see [`super::ChannelTransport`]); this module is pure encoding and
+//! holds no state of its own.
+
+use crate::graph::VertexId;
+
+/// Largest LEB128 encoding we accept: 10 groups covers a full `u64`.
+const MAX_VARINT_BYTES: usize = 10;
+
+/// Append `v` to `out` as a LEB128 varint (1 byte per 7 bits, low first).
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let group = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(group);
+            return;
+        }
+        out.push(group | 0x80);
+    }
+}
+
+/// Read a LEB128 varint from the front of `buf`, returning the value and
+/// the remaining bytes, or `None` if the buffer is truncated or the
+/// encoding overflows a `u64`.
+pub fn read_varint(buf: &[u8]) -> Option<(u64, &[u8])> {
+    let mut v: u64 = 0;
+    for (i, &b) in buf.iter().take(MAX_VARINT_BYTES).enumerate() {
+        let group = (b & 0x7f) as u64;
+        // The 10th group may only carry the top bit of a u64.
+        if i == MAX_VARINT_BYTES - 1 && group > 1 {
+            return None;
+        }
+        v |= group << (7 * i);
+        if b & 0x80 == 0 {
+            return Some((v, &buf[i + 1..]));
+        }
+    }
+    None
+}
+
+/// Header of a decoded compressed frame (everything before the body).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompressedHeader {
+    /// Vertex the delta targets.
+    pub vertex: VertexId,
+    /// Master version of the payload.
+    pub version: u64,
+    /// `true` when the body is a word-run diff against the shadow.
+    pub is_diff: bool,
+    /// Decoded (post-diff) payload length in bytes.
+    pub payload_len: usize,
+}
+
+/// Append one compressed frame for `(vertex, version, payload)` to `out`.
+///
+/// `shadow` is the payload as of the last frame shipped for this vertex on
+/// this lane (`None` for a first ship). The diff path is only attempted
+/// when the shadow has the same length as the payload — codec payloads for
+/// a fixed-arity vertex type are fixed-size, so this is the common case —
+/// and is abandoned for the raw path whenever it would not be strictly
+/// smaller. Returns the encoded frame length in bytes.
+pub fn encode_delta(
+    vertex: VertexId,
+    version: u64,
+    payload: &[u8],
+    shadow: Option<&[u8]>,
+    out: &mut Vec<u8>,
+) -> usize {
+    let start = out.len();
+    put_varint(out, vertex as u64);
+    put_varint(out, version);
+    let body_at = out.len();
+
+    if let Some(prev) = shadow {
+        if prev.len() == payload.len() && try_encode_diff(payload, prev, out, body_at) {
+            return out.len() - start;
+        }
+    }
+    // Raw fallback: tag 0 + literal payload.
+    out.truncate(body_at);
+    out.push(0);
+    put_varint(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    out.len() - start
+}
+
+/// Try the diff body; returns `false` (leaving junk past `body_at` for the
+/// caller to truncate) if the diff is not strictly smaller than raw.
+fn try_encode_diff(payload: &[u8], prev: &[u8], out: &mut Vec<u8>, body_at: usize) -> bool {
+    // Raw body cost we must beat: tag + varint(len) + payload bytes.
+    let mut raw_cost = 1 + payload.len();
+    let mut l = payload.len() as u64;
+    loop {
+        raw_cost += 1;
+        l >>= 7;
+        if l == 0 {
+            break;
+        }
+    }
+
+    out.push(1);
+    put_varint(out, payload.len() as u64);
+    let words = payload.len() / 4;
+    let mut w = 0;
+    while w < words {
+        let mut skip = 0;
+        while w + skip < words && word_eq(payload, prev, w + skip) {
+            skip += 1;
+        }
+        let mut copy = 0;
+        while w + skip + copy < words && !word_eq(payload, prev, w + skip + copy) {
+            copy += 1;
+        }
+        put_varint(out, skip as u64);
+        put_varint(out, copy as u64);
+        let at = (w + skip) * 4;
+        out.extend_from_slice(&payload[at..at + copy * 4]);
+        w += skip + copy;
+        if out.len() - body_at >= raw_cost {
+            return false;
+        }
+    }
+    // Literal tail for payloads that are not a multiple of 4 bytes.
+    out.extend_from_slice(&payload[words * 4..]);
+    out.len() - body_at < raw_cost
+}
+
+#[inline]
+fn word_eq(a: &[u8], b: &[u8], w: usize) -> bool {
+    a[w * 4..w * 4 + 4] == b[w * 4..w * 4 + 4]
+}
+
+/// Decode one frame header from the front of `buf`, returning the header
+/// and the remaining bytes (positioned at the body). `None` on truncation
+/// or a vertex id that does not fit `u32`.
+pub fn decode_header(buf: &[u8]) -> Option<(CompressedHeader, &[u8])> {
+    let (vertex, rest) = read_varint(buf)?;
+    let vertex = VertexId::try_from(vertex).ok()?;
+    let (version, rest) = read_varint(rest)?;
+    let (&tag, rest) = rest.split_first()?;
+    if tag > 1 {
+        return None;
+    }
+    let (payload_len, rest) = read_varint(rest)?;
+    let header = CompressedHeader {
+        vertex,
+        version,
+        is_diff: tag == 1,
+        payload_len: usize::try_from(payload_len).ok()?,
+    };
+    Some((header, rest))
+}
+
+/// Decode the body that follows `header`, writing the reconstructed
+/// payload into `payload` (cleared first) and returning the remaining
+/// bytes past the frame. Diff frames require a `shadow` of exactly
+/// `header.payload_len` bytes. `None` on truncation, run overflow, or a
+/// missing/mismatched shadow.
+pub fn decode_payload<'b>(
+    header: &CompressedHeader,
+    buf: &'b [u8],
+    shadow: Option<&[u8]>,
+    payload: &mut Vec<u8>,
+) -> Option<&'b [u8]> {
+    payload.clear();
+    if !header.is_diff {
+        if buf.len() < header.payload_len {
+            return None;
+        }
+        payload.extend_from_slice(&buf[..header.payload_len]);
+        return Some(&buf[header.payload_len..]);
+    }
+
+    let prev = shadow?;
+    if prev.len() != header.payload_len {
+        return None;
+    }
+    let words = header.payload_len / 4;
+    let mut rest = buf;
+    let mut w = 0;
+    while w < words {
+        let (skip, r) = read_varint(rest)?;
+        let (copy, r) = read_varint(r)?;
+        let skip = usize::try_from(skip).ok()?;
+        let copy = usize::try_from(copy).ok()?;
+        if skip > words - w || copy > words - w - skip {
+            return None;
+        }
+        payload.extend_from_slice(&prev[w * 4..(w + skip) * 4]);
+        if r.len() < copy * 4 {
+            return None;
+        }
+        payload.extend_from_slice(&r[..copy * 4]);
+        rest = &r[copy * 4..];
+        w += skip + copy;
+    }
+    let tail = header.payload_len - words * 4;
+    if rest.len() < tail {
+        return None;
+    }
+    payload.extend_from_slice(&rest[..tail]);
+    Some(&rest[tail..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(
+        vertex: VertexId,
+        version: u64,
+        payload: &[u8],
+        shadow: Option<&[u8]>,
+    ) -> (usize, Vec<u8>) {
+        let mut frame = Vec::new();
+        let n = encode_delta(vertex, version, payload, shadow, &mut frame);
+        assert_eq!(n, frame.len());
+        let (header, body) = decode_header(&frame).expect("header");
+        assert_eq!(header.vertex, vertex);
+        assert_eq!(header.version, version);
+        assert_eq!(header.payload_len, payload.len());
+        let mut decoded = Vec::new();
+        let rest = decode_payload(&header, body, shadow, &mut decoded).expect("payload");
+        assert!(rest.is_empty());
+        assert_eq!(decoded, payload);
+        (n, frame)
+    }
+
+    #[test]
+    fn varint_round_trips_boundaries() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let (back, rest) = read_varint(&buf).unwrap();
+            assert_eq!(back, v);
+            assert!(rest.is_empty());
+        }
+        // Truncated and overlong encodings are rejected.
+        assert!(read_varint(&[0x80]).is_none());
+        assert!(read_varint(&[0xff; 11]).is_none());
+    }
+
+    #[test]
+    fn first_ship_uses_raw_tag_with_small_header() {
+        let payload = [7u8; 24];
+        let (n, frame) = round_trip(3, 1, &payload, None);
+        // varint(3) + varint(1) + tag + varint(24) + 24 literal bytes.
+        assert_eq!(n, 1 + 1 + 1 + 1 + 24);
+        let (header, _) = decode_header(&frame).unwrap();
+        assert!(!header.is_diff);
+    }
+
+    #[test]
+    fn unchanged_payload_compresses_to_one_run() {
+        let payload = [9u8; 24];
+        let (n, frame) = round_trip(3, 2, &payload, Some(&payload.clone()));
+        let (header, _) = decode_header(&frame).unwrap();
+        assert!(header.is_diff);
+        // header(4) + one (skip=6, copy=0) run = 6 bytes total.
+        assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn all_changed_payload_falls_back_to_raw() {
+        let prev = [0u8; 24];
+        let next = [1u8; 24];
+        let (n, frame) = round_trip(5, 3, &next, Some(&prev));
+        let (header, _) = decode_header(&frame).unwrap();
+        // diff = (skip 0, copy 6, 24 bytes) = 27 > raw body 26: raw wins.
+        assert!(!header.is_diff);
+        assert_eq!(n, 1 + 1 + 1 + 1 + 24);
+    }
+
+    #[test]
+    fn alternating_runs_round_trip() {
+        // words: [same, diff, same, same, diff, diff, same, tail...]
+        let mut prev = vec![0u8; 30];
+        let mut next = vec![0u8; 30];
+        for (i, b) in next.iter_mut().enumerate() {
+            *b = i as u8;
+        }
+        for w in [0usize, 2, 3, 6] {
+            prev[w * 4..w * 4 + 4].copy_from_slice(&next[w * 4..w * 4 + 4]);
+        }
+        // Distinct 2-byte tail so the tail path is exercised too.
+        prev[28] = next[28];
+        let (_, frame) = round_trip(1000, 1 << 40, &next, Some(&prev));
+        let (header, _) = decode_header(&frame).unwrap();
+        assert!(header.is_diff);
+    }
+
+    #[test]
+    fn shadow_length_mismatch_forces_raw() {
+        let prev = [1u8; 20];
+        let next = [1u8; 24];
+        let mut frame = Vec::new();
+        encode_delta(9, 4, &next, Some(&prev), &mut frame);
+        let (header, _) = decode_header(&frame).unwrap();
+        assert!(!header.is_diff);
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected_not_misread() {
+        let payload: Vec<u8> = (0..24).collect();
+        // Shadow shares the first two words so the Some case emits a real
+        // diff frame (skip 2, copy 4) rather than falling back to raw.
+        let mut shadow = vec![0u8; 24];
+        shadow[..8].copy_from_slice(&payload[..8]);
+        for sh in [None, Some(shadow.as_slice())] {
+            let mut frame = Vec::new();
+            encode_delta(17, 9, &payload, sh, &mut frame);
+            for cut in 0..frame.len() {
+                let short = &frame[..cut];
+                let ok = match decode_header(short) {
+                    None => false,
+                    Some((h, body)) => {
+                        let mut out = Vec::new();
+                        decode_payload(&h, body, sh, &mut out).is_some()
+                    }
+                };
+                assert!(!ok, "truncated frame at {cut} decoded");
+            }
+        }
+    }
+
+    #[test]
+    fn diff_without_shadow_is_an_error() {
+        let prev = [0u8; 16];
+        let mut next = prev;
+        next[0] = 1;
+        let mut frame = Vec::new();
+        encode_delta(2, 2, &next, Some(&prev), &mut frame);
+        let (header, body) = decode_header(&frame).unwrap();
+        assert!(header.is_diff);
+        let mut out = Vec::new();
+        assert!(decode_payload(&header, body, None, &mut out).is_none());
+        let wrong = [0u8; 12];
+        assert!(decode_payload(&header, body, Some(&wrong), &mut out).is_none());
+    }
+
+    #[test]
+    fn streams_of_frames_decode_back_to_back() {
+        let a = [1u8; 16];
+        let b = [2u8; 16];
+        let mut buf = Vec::new();
+        encode_delta(1, 1, &a, None, &mut buf);
+        encode_delta(1, 2, &b, Some(&a), &mut buf);
+        let (h1, rest) = decode_header(&buf).unwrap();
+        let mut p1 = Vec::new();
+        let rest = decode_payload(&h1, rest, None, &mut p1).unwrap();
+        assert_eq!(p1, a);
+        let (h2, rest) = decode_header(rest).unwrap();
+        let mut p2 = Vec::new();
+        let rest = decode_payload(&h2, rest, Some(&p1), &mut p2).unwrap();
+        assert_eq!(p2, b);
+        assert!(rest.is_empty());
+    }
+}

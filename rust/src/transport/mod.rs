@@ -57,17 +57,29 @@
 //!   bytes); the reply is an ordinary delta frame carrying the owner's
 //!   current data, whose version is `>= min_version` whenever the
 //!   requester froze the master under a read lock.
+//!
+//! The channel backend additionally supports a **compressed** delta frame
+//! (varint header + word-run diff against a per-lane shadow copy, raw
+//! fallback when the diff would not be smaller) for converging algorithms
+//! that re-ship nearly identical payloads — see [`encode_delta`] /
+//! [`decode_header`] / [`decode_payload`] and
+//! [`ChannelTransport::compressed`]. Pull frames stay raw on every
+//! backend.
 
 #![warn(missing_docs)]
 
 mod channel;
 mod codec;
+mod compress;
 mod direct;
 mod socket;
 
 pub use channel::ChannelTransport;
 pub use codec::{
     put_f32, put_f32s, put_f64, put_u32, put_u32s, put_u64, put_u8, ByteReader, VertexCodec,
+};
+pub use compress::{
+    decode_header, decode_payload, encode_delta, put_varint, read_varint, CompressedHeader,
 };
 pub use direct::DirectTransport;
 pub use socket::{SocketTransport, DEFAULT_SEND_BUFFER};
@@ -348,21 +360,27 @@ impl<V> DeltaBatcher<V> {
         self.slots.len()
     }
 
-    /// Record one owned-vertex write (data must be cloned under the
-    /// vertex's write lock). Returns `true` if an existing slot was
-    /// coalesced (same vertex already batched this window).
-    pub fn record(&mut self, vertex: VertexId, version: u64, data: V) -> bool {
+    /// Record one owned-vertex write. Called under the vertex's write
+    /// lock; the batcher copies `data` into its slot itself —
+    /// `clone_from` on a coalescing hit, so a repeatedly-written vertex
+    /// reuses one slot's buffers instead of allocating a fresh deep clone
+    /// per write. Returns `true` if an existing slot was coalesced (same
+    /// vertex already batched this window).
+    pub fn record(&mut self, vertex: VertexId, version: u64, data: &V) -> bool
+    where
+        V: Clone,
+    {
         self.records += 1;
         match self.index.entry(vertex) {
             std::collections::hash_map::Entry::Occupied(e) => {
                 let slot = &mut self.slots[*e.get()];
                 slot.1 = version;
-                slot.2 = data;
+                slot.2.clone_from(data);
                 true
             }
             std::collections::hash_map::Entry::Vacant(e) => {
                 e.insert(self.slots.len());
-                self.slots.push((vertex, version, data));
+                self.slots.push((vertex, version, data.clone()));
                 false
             }
         }
@@ -464,11 +482,11 @@ mod tests {
     fn batcher_coalesces_and_flushes_on_window() {
         let t = Counting { sends: AtomicU64::new(0), last_version: AtomicU64::new(0) };
         let mut b: DeltaBatcher<u64> = DeltaBatcher::new(4);
-        assert!(!b.record(5, 1, 10));
-        assert!(b.record(5, 2, 11), "same vertex coalesces");
-        assert!(!b.record(6, 3, 12));
+        assert!(!b.record(5, 1, &10));
+        assert!(b.record(5, 2, &11), "same vertex coalesces");
+        assert!(!b.record(6, 3, &12));
         assert!(!b.should_flush(), "3 records < window 4");
-        assert!(b.record(5, 4, 13));
+        assert!(b.record(5, 4, &13));
         assert!(b.should_flush());
         assert_eq!(b.len(), 2, "two distinct vertices");
         let r = b.flush(0, &t);
@@ -485,7 +503,7 @@ mod tests {
     fn window_one_is_synchronous() {
         let t = Counting { sends: AtomicU64::new(0), last_version: AtomicU64::new(0) };
         let mut b: DeltaBatcher<u64> = DeltaBatcher::new(0); // clamps to 1
-        b.record(1, 1, 0);
+        b.record(1, 1, &0);
         assert!(b.should_flush(), "window 1 closes on every record");
         b.flush(0, &t);
         assert_eq!(t.sends.load(Ordering::Relaxed), 1);
