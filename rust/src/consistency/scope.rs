@@ -226,6 +226,12 @@ pub(crate) struct GhostRefresh {
     pub bytes: u64,
     /// Max staleness actually observed by this reader, post-pull.
     pub max_lag: u64,
+    /// Pulls re-issued because a prior attempt failed to bring the
+    /// replica inside the bound (lossy or severed transport).
+    pub retries: u64,
+    /// Refreshes abandoned after exhausting the retry budget: the reader
+    /// admitted the stale replica rather than hang on a dead peer.
+    pub timeouts: u64,
 }
 
 impl<'a, V: Clone, E> Scope<'a, V, E> {
@@ -249,11 +255,20 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
     /// the held read locks both make the master read safe and freeze the
     /// master version, so the post-check staleness really is what the
     /// update function reads.
+    ///
+    /// On a faulty wire a pull can fail (severed exchange, dead peer) and
+    /// leave the replica past the bound. The refresh then **retries** the
+    /// pull under exponential spin backoff, up to `retry_limit` times per
+    /// ghost, before giving up and admitting the stale read (a counted
+    /// timeout). A dead peer therefore delays admission by a bounded
+    /// amount, never hangs it — and on a perfect wire the first pull
+    /// always lands, so the retry loop never runs.
     pub(crate) fn refresh_stale_ghosts(
         &self,
         sharded: &ShardedGraph<V>,
         shard: usize,
         bound: u64,
+        retry_limit: u32,
         transport: &dyn GhostTransport<V>,
     ) -> GhostRefresh {
         debug_assert!(
@@ -270,27 +285,44 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
             let master_version = sharded.master_version(u);
             let lag = master_version.saturating_sub(entry.version());
             let observed = if lag > bound {
-                let receipt = transport.pull(
-                    shard,
-                    PullRequest { vertex: u, min_version: master_version },
-                    &|v| {
-                        debug_assert_eq!(v, u, "pull service asked for the wrong vertex");
-                        // SAFETY: Edge/Full scopes hold (at least) a read
-                        // lock on every neighbor, including `u`.
-                        let data = unsafe { graph.vertex_data_unchecked(u) };
-                        (data, sharded.master_version(u))
-                    },
-                );
-                out.pulls += 1;
-                out.served += receipt.served as u64;
-                out.bytes += receipt.bytes;
-                // Re-measure after the pull: this is the staleness the
-                // update function actually reads. The held read lock
-                // freezes the master version, so anything above `bound`
-                // here means the pull machinery itself is broken — the
-                // reported maximum is a real measurement, not an echo of
-                // the branch condition.
-                sharded.master_version(u).saturating_sub(entry.version())
+                let mut attempts = 0u32;
+                loop {
+                    let receipt = transport.pull(
+                        shard,
+                        PullRequest { vertex: u, min_version: master_version },
+                        &|v| {
+                            debug_assert_eq!(v, u, "pull service asked for the wrong vertex");
+                            // SAFETY: Edge/Full scopes hold (at least) a
+                            // read lock on every neighbor, including `u`.
+                            let data = unsafe { graph.vertex_data_unchecked(u) };
+                            (data, sharded.master_version(u))
+                        },
+                    );
+                    out.pulls += 1;
+                    out.served += receipt.served as u64;
+                    out.bytes += receipt.bytes;
+                    // Re-measure after the pull: this is the staleness
+                    // the update function actually reads. The held read
+                    // lock freezes the master version, so anything above
+                    // `bound` here means the pull itself failed (lossy
+                    // or severed transport) — retry with backoff, then
+                    // give up rather than hang on a dead peer.
+                    let now = sharded.master_version(u).saturating_sub(entry.version());
+                    if now <= bound {
+                        break now;
+                    }
+                    attempts += 1;
+                    if attempts > retry_limit {
+                        out.timeouts += 1;
+                        break now;
+                    }
+                    out.retries += 1;
+                    // Exponential spin backoff: deterministic (no sleeps,
+                    // no clocks), bounded at ~32k spins per attempt.
+                    for _ in 0..(32u32 << attempts.min(10)) {
+                        std::hint::spin_loop();
+                    }
+                }
             } else {
                 lag
             };

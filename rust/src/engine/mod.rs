@@ -16,12 +16,14 @@
 pub mod program;
 pub mod sequential;
 pub mod sharded;
+pub mod snapshot;
 pub mod threaded;
 pub mod trace;
 
 pub use program::{Engine, Program};
 pub use sequential::SequentialEngine;
 pub use sharded::{ChannelShardedEngine, ShardedEngine, SocketShardedEngine};
+pub use snapshot::Snapshot;
 pub use threaded::ThreadedEngine;
 
 use crate::consistency::{ConsistencyModel, Scope};
@@ -112,6 +114,25 @@ pub enum StopReason {
     TerminationFn,
     /// The configured update budget was exhausted.
     UpdateLimit,
+    /// A configured [`AbortPlan`] fired: one shard's worker set simulated a
+    /// crash (dying with its batched-but-unflushed deltas) and the rest of
+    /// the engine shut down cleanly behind it. Recovery restarts from the
+    /// latest completed [`Snapshot`] via [`Snapshot::restore_into`].
+    ShardAborted,
+}
+
+/// A scripted mid-run shard crash for fault-tolerance tests: once the
+/// global update count reaches `after_updates`, the workers of `shard`
+/// die *without* flushing their delta batchers (simulated data loss on
+/// the wire) and every other worker shuts down cleanly. The run reports
+/// [`StopReason::ShardAborted`]; all threads still join — the crash is
+/// simulated at the protocol level, never by detaching a thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AbortPlan {
+    /// Index of the shard whose worker set crashes.
+    pub shard: usize,
+    /// Global update count at which the crash fires.
+    pub after_updates: u64,
 }
 
 /// Engine configuration.
@@ -160,6 +181,33 @@ pub struct EngineConfig {
     /// writes to the same vertex and ship fewer, fatter deltas, with
     /// read freshness guarded by [`EngineConfig::ghost_staleness`].
     pub ghost_batch: usize,
+    /// Deterministic fault-injection schedule for the sharded engine's
+    /// ghost transport: when set, every backend is wrapped in a
+    /// [`crate::transport::FaultInjector`] that drops, duplicates, delays
+    /// (reorders) delta frames and severs pull exchanges per the plan's
+    /// seeded per-mille rates. `None` (default) = perfect wire.
+    pub fault_plan: Option<crate::transport::FaultPlan>,
+    /// Consistent-snapshot cadence for the sharded wire engines: capture a
+    /// Chandy–Lamport-style snapshot epoch every `n` global updates
+    /// (0 = never). Completed snapshots are returned in
+    /// [`RunReport::snapshots`]. Only the serializing backends snapshot —
+    /// capture needs the [`crate::transport::VertexCodec`] row encoding.
+    pub snapshot_every: u64,
+    /// When set, each completed snapshot is also written to
+    /// `snapshot-epoch-<e>.bin` under this directory
+    /// ([`Snapshot::write_file`] format).
+    pub snapshot_dir: Option<std::path::PathBuf>,
+    /// Scripted mid-run shard crash (fault-tolerance tests). `None`
+    /// (default) = no crash.
+    pub abort_plan: Option<AbortPlan>,
+    /// Bounded retry budget for a stale-ghost pull at scope admission:
+    /// after a pull fails to bring a replica inside the staleness bound
+    /// (lossy or severed transport), the admitting worker re-pulls with
+    /// exponential spin backoff up to this many times before giving up and
+    /// admitting the stale read (counted as a
+    /// [`ContentionStats::pull_timeouts`]). A dead peer therefore delays
+    /// admission, never hangs it.
+    pub pull_retry_limit: u32,
 }
 
 impl Default for EngineConfig {
@@ -175,6 +223,11 @@ impl Default for EngineConfig {
             steal_half_auto: 0.25,
             ghost_staleness: 0,
             ghost_batch: 1,
+            fault_plan: None,
+            snapshot_every: 0,
+            snapshot_dir: None,
+            abort_plan: None,
+            pull_retry_limit: 8,
         }
     }
 }
@@ -226,6 +279,31 @@ impl EngineConfig {
 
     pub fn with_ghost_batch(mut self, window: usize) -> Self {
         self.ghost_batch = window;
+        self
+    }
+
+    pub fn with_fault_plan(mut self, plan: crate::transport::FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    pub fn with_snapshot_every(mut self, updates: u64) -> Self {
+        self.snapshot_every = updates;
+        self
+    }
+
+    pub fn with_snapshot_dir(mut self, dir: std::path::PathBuf) -> Self {
+        self.snapshot_dir = Some(dir);
+        self
+    }
+
+    pub fn with_abort_plan(mut self, plan: AbortPlan) -> Self {
+        self.abort_plan = Some(plan);
+        self
+    }
+
+    pub fn with_pull_retry_limit(mut self, retries: u32) -> Self {
+        self.pull_retry_limit = retries;
         self
     }
 }
@@ -312,6 +390,27 @@ pub struct ContentionStats {
     /// Workers that auto-flipped their steal scans to steal-half mid-run
     /// (observed steals crossed [`EngineConfig::steal_half_auto`]).
     pub auto_steal_half_flips: u64,
+    /// Faults the transport layer injected or absorbed: deltas dropped,
+    /// duplicated, or delayed and pull exchanges severed by an active
+    /// [`EngineConfig::fault_plan`]. Zero on a perfect wire.
+    pub faults_injected: u64,
+    /// Stale-ghost pulls re-issued at scope admission because a prior pull
+    /// failed to bring the replica inside the staleness bound (lossy or
+    /// severed transport). Zero on a perfect wire.
+    pub pull_retries: u64,
+    /// Pull exchanges that gave up: scope-admission retries that exhausted
+    /// [`EngineConfig::pull_retry_limit`], plus socket pull lanes whose
+    /// read or write timed out against a dead peer. The admitting worker
+    /// proceeds with the stale read instead of hanging.
+    pub pull_timeouts: u64,
+    /// Exponential-backoff waits spent reconnecting a severed socket delta
+    /// connection (one per reconnect attempt; the socket backend's
+    /// capped-backoff path).
+    pub reconnect_backoffs: u64,
+    /// Consistent snapshots completed during the run (every shard
+    /// contributed its part for the epoch); the snapshots themselves are
+    /// in [`RunReport::snapshots`].
+    pub snapshots_taken: u64,
     /// Per-worker conflict counts (index = worker id).
     pub per_worker_conflicts: Vec<u64>,
     /// Per-worker deferral counts (index = worker id).
@@ -337,6 +436,10 @@ pub struct RunReport {
     pub syncs_run: u64,
     /// Scope-lock contention counters (all zero for sequential runs).
     pub contention: ContentionStats,
+    /// Consistent snapshots captured during the run, oldest first (empty
+    /// unless [`EngineConfig::snapshot_every`] was set on a sharded wire
+    /// engine). The last entry is the newest recovery point.
+    pub snapshots: Vec<Snapshot>,
 }
 
 impl RunReport {
@@ -382,5 +485,32 @@ mod tests {
         let d = EngineConfig::default();
         assert_eq!(d.ghost_staleness, 0, "synchronous semantics by default");
         assert_eq!(d.ghost_batch, 1, "per-update flush by default");
+        assert!(d.fault_plan.is_none(), "perfect wire by default");
+        assert_eq!(d.snapshot_every, 0, "no snapshots by default");
+        assert!(d.snapshot_dir.is_none());
+        assert!(d.abort_plan.is_none(), "no scripted crash by default");
+        assert_eq!(d.pull_retry_limit, 8);
+    }
+
+    #[test]
+    fn fault_tolerance_builders() {
+        let plan = crate::transport::FaultPlan {
+            seed: 7,
+            drop_per_mille: 100,
+            dup_per_mille: 50,
+            delay_per_mille: 50,
+            sever_per_mille: 25,
+        };
+        let c = EngineConfig::default()
+            .with_fault_plan(plan)
+            .with_snapshot_every(500)
+            .with_snapshot_dir(std::path::PathBuf::from("/tmp/snaps"))
+            .with_abort_plan(AbortPlan { shard: 1, after_updates: 1_000 })
+            .with_pull_retry_limit(3);
+        assert_eq!(c.fault_plan, Some(plan));
+        assert_eq!(c.snapshot_every, 500);
+        assert_eq!(c.snapshot_dir.as_deref(), Some(std::path::Path::new("/tmp/snaps")));
+        assert_eq!(c.abort_plan, Some(AbortPlan { shard: 1, after_updates: 1_000 }));
+        assert_eq!(c.pull_retry_limit, 3);
     }
 }

@@ -312,6 +312,54 @@ impl<'a, V, E> Program<'a, V, E> {
         self
     }
 
+    /// Run the sharded back-end over a deterministic lossy wire: the
+    /// transport is wrapped in a
+    /// [`FaultInjector`](crate::transport::FaultInjector) that drops,
+    /// duplicates, delays/reorders delta frames and severs staleness
+    /// pulls per `plan`'s seeded schedule (see
+    /// [`EngineConfig::fault_plan`]).
+    pub fn fault_plan(mut self, plan: crate::transport::FaultPlan) -> Self {
+        self.config.fault_plan = Some(plan);
+        self
+    }
+
+    /// Capture a Chandy–Lamport-style snapshot of every shard's master
+    /// rows each `n` global updates on the codec-bearing sharded
+    /// back-ends; completed snapshots land in `RunReport::snapshots`
+    /// (see [`EngineConfig::snapshot_every`]; `0` = off).
+    pub fn snapshot_every(mut self, n: u64) -> Self {
+        self.config.snapshot_every = n;
+        self
+    }
+
+    /// Additionally spill each completed snapshot to
+    /// `dir/snapshot-epoch-<e>.bin` (see [`EngineConfig::snapshot_dir`]).
+    pub fn snapshot_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.config.snapshot_dir = Some(dir.into());
+        self
+    }
+
+    /// Fault-injection hook: kill shard `shard`'s worker set once the
+    /// global update count reaches `after_updates` — the run stops with
+    /// `StopReason::ShardAborted` and the shard's batched deltas are
+    /// lost, as a crashed process would lose them (see
+    /// [`EngineConfig::abort_plan`]). Recover by restoring the latest
+    /// completed snapshot and re-running.
+    pub fn abort_shard(mut self, shard: usize, after_updates: u64) -> Self {
+        self.config.abort_plan = Some(super::AbortPlan { shard, after_updates });
+        self
+    }
+
+    /// Retry budget for staleness-admission pulls on a faulty wire: a
+    /// reader whose pull fails to bring the replica inside the bound
+    /// re-issues it up to this many times (exponential spin backoff)
+    /// before admitting the stale read as a counted `pull_timeout` (see
+    /// [`EngineConfig::pull_retry_limit`]).
+    pub fn pull_retry_limit(mut self, limit: u32) -> Self {
+        self.config.pull_retry_limit = limit;
+        self
+    }
+
     /// Sequential back-end: run on-demand syncs every N updates (0 = only
     /// at the end).
     pub fn sync_every(mut self, every: u64) -> Self {

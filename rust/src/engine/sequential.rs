@@ -140,6 +140,7 @@ impl SequentialEngine {
             syncs_run,
             // single thread: scope conflicts cannot occur
             contention: ContentionStats::default(),
+            snapshots: Vec::new(),
         };
         (report, trace)
     }

@@ -42,11 +42,22 @@
 //! so on a serializing backend admission never reads peer master data
 //! directly (`ContentionStats::pulls_served` counts the wire-served
 //! pulls).
+//!
+//! **Fault tolerance** rides the same seams: [`EngineConfig::fault_plan`]
+//! wraps the chosen backend in a [`crate::transport::FaultInjector`]
+//! (deterministic seeded drops, duplicates, delays/reorders, severed
+//! pulls), [`EngineConfig::snapshot_every`] triggers Chandy–Lamport-style
+//! epoch snapshots of every shard's master rows (see [`super::snapshot`]),
+//! and [`EngineConfig::abort_plan`] kills one shard's worker set mid-run
+//! (surfaced as [`StopReason::ShardAborted`], batched deltas lost) so
+//! recovery via [`ShardedEngine::restore_from_snapshot`] can be exercised
+//! end to end.
 
 use super::threaded::{
     should_auto_steal_half, tune_attempts, ThreadedEngine, LOCAL_DEQUE_CAP, START_ATTEMPTS,
     STEAL_HALF_MAX,
 };
+use super::snapshot::{Snapshot, SnapshotCtl};
 use super::{
     ContentionStats, Engine, EngineConfig, Program, RunReport, StopReason, TerminationFn,
     UpdateContext, UpdateFn,
@@ -56,7 +67,8 @@ use crate::graph::{DataGraph, ShardedGraph};
 use crate::scheduler::{Injector, Scheduler, Task, WorkStealingDeque};
 use crate::sdt::{Sdt, SyncOp};
 use crate::transport::{
-    ChannelTransport, DeltaBatcher, DirectTransport, GhostTransport, SocketTransport, VertexCodec,
+    ChannelTransport, DeltaBatcher, DirectTransport, FaultInjector, GhostTransport,
+    SocketTransport, VertexCodec,
 };
 use crate::util::Timer;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -65,6 +77,7 @@ use std::time::Duration;
 const STOP_NONE: u8 = 0;
 const STOP_TERM_FN: u8 = 1;
 const STOP_LIMIT: u8 = 2;
+const STOP_ABORT: u8 = 3;
 
 /// How many completion attempts a parked split acquisition gets before the
 /// worker releases the remote half and defers the task. Bounded so two
@@ -132,7 +145,38 @@ impl ShardedEngine {
         let sharded = ShardedGraph::new(graph, requested.max(1));
         let graph: &DataGraph<V, E> = graph;
         let transport = DirectTransport::new(&sharded);
-        run_core(graph, &sharded, &transport, scheduler, fns, sdt, syncs, terminators, config)
+        // No snapshot controller on the direct path: snapshots serialize
+        // rows through the vertex codec, which only the codec-bearing
+        // engines require of `V`.
+        run_with_faults(
+            graph,
+            &sharded,
+            &transport,
+            scheduler,
+            fns,
+            sdt,
+            syncs,
+            terminators,
+            config,
+            None,
+        )
+    }
+
+    /// Restore `graph`'s vertex rows from a completed [`Snapshot`] — the
+    /// recovery half of the Chandy–Lamport protocol (see
+    /// [`super::snapshot`]). Returns the number of rows rewound.
+    ///
+    /// Recovery is restore-then-rerun: rewind the graph to the snapshot
+    /// cut, then run the program again with a fresh scheduler seed.
+    /// Update functions are restartable by contract (re-scheduling a
+    /// vertex is always safe), so the re-run converges exactly as an
+    /// uninterrupted run would; ghost tables and transport lanes are
+    /// rebuilt from the restored masters, never restored themselves.
+    pub fn restore_from_snapshot<V: VertexCodec, E>(
+        graph: &mut DataGraph<V, E>,
+        snapshot: &Snapshot,
+    ) -> u64 {
+        snapshot.restore_into(graph)
     }
 }
 
@@ -187,7 +231,8 @@ where
         } else {
             ChannelTransport::new(&sharded)
         };
-        run_core(
+        let snap = SnapshotCtl::from_config(config);
+        run_with_faults(
             graph,
             &sharded,
             &transport,
@@ -197,6 +242,7 @@ where
             &program.syncs,
             &program.terminators,
             config,
+            snap.as_ref(),
         )
     }
 }
@@ -258,7 +304,8 @@ where
             cap => SocketTransport::with_send_buffer(&sharded, cap),
         }
         .expect("failed to set up the unix-socket ghost transport");
-        run_core(
+        let snap = SnapshotCtl::from_config(config);
+        run_with_faults(
             graph,
             &sharded,
             &transport,
@@ -268,6 +315,7 @@ where
             &program.syncs,
             &program.terminators,
             config,
+            snap.as_ref(),
         )
     }
 }
@@ -292,6 +340,63 @@ fn flush_window<V>(
     *bytes_shipped += r.bytes;
 }
 
+/// Resolve the config's fault plan before entering [`run_core`]: with a
+/// plan set, the chosen backend is wrapped in a [`FaultInjector`] so every
+/// delta send and staleness pull crosses the deterministic lossy wire; the
+/// engine core sees only the `GhostTransport` trait either way.
+#[allow(clippy::too_many_arguments)]
+fn run_with_faults<V: Clone + Send + Sync, E: Send + Sync>(
+    graph: &DataGraph<V, E>,
+    sharded: &ShardedGraph<V>,
+    transport: &dyn GhostTransport<V>,
+    scheduler: &dyn Scheduler,
+    fns: &[&dyn UpdateFn<V, E>],
+    sdt: &Sdt,
+    syncs: &[SyncOp<V>],
+    terminators: &[TerminationFn],
+    config: &EngineConfig,
+    snap: Option<&SnapshotCtl<V>>,
+) -> RunReport {
+    match config.fault_plan {
+        Some(plan) => {
+            let injector = FaultInjector::new(transport, plan);
+            run_core(
+                graph, sharded, &injector, scheduler, fns, sdt, syncs, terminators, config, snap,
+            )
+        }
+        None => run_core(
+            graph, sharded, transport, scheduler, fns, sdt, syncs, terminators, config, snap,
+        ),
+    }
+}
+
+/// Serialize one shard's owned master rows for a snapshot epoch: each row
+/// is frozen under its read lock and encoded in the transport's delta
+/// frame format. Locks are taken **one at a time** — the capturer never
+/// holds-and-waits, so capture cannot deadlock against parked split
+/// acquisitions (their holders never block while holding either).
+fn capture_shard_part<V, E>(
+    graph: &DataGraph<V, E>,
+    sharded: &ShardedGraph<V>,
+    locks: &LockTable,
+    shard: usize,
+    ctl: &SnapshotCtl<V>,
+) -> (Vec<u8>, u64) {
+    let sh = sharded.shard(shard);
+    let mut frames = Vec::with_capacity(sh.num_owned() * 16);
+    let mut rows = 0u64;
+    for v in sh.owned_range() {
+        let _guard = locks.read(v);
+        let version = sharded.master_version(v);
+        // Safety: the held read lock excludes the owner's write path, so
+        // the master row is stable for the duration of the encode.
+        let data = unsafe { graph.vertex_data_unchecked(v) };
+        ctl.encode_frame(v, version, data, &mut frames);
+        rows += 1;
+    }
+    (frames, rows)
+}
+
 /// The shared worker-loop core: every ghost write leaves through
 /// `transport`, every ghost read is staleness-checked at scope admission.
 #[allow(clippy::too_many_arguments)]
@@ -305,6 +410,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     syncs: &[SyncOp<V>],
     terminators: &[TerminationFn],
     config: &EngineConfig,
+    snap: Option<&SnapshotCtl<V>>,
 ) -> RunReport {
     let k = sharded.num_shards();
     let locks = LockTable::new(graph.num_vertices());
@@ -343,7 +449,16 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     let total_pulls_served = AtomicU64::new(0);
     let total_max_lag = AtomicU64::new(0);
     let total_auto_flips = AtomicU64::new(0);
+    let total_pull_retries = AtomicU64::new(0);
+    let total_pull_timeouts = AtomicU64::new(0);
     let syncs_run = AtomicU64::new(0);
+    // Snapshot protocol state: the highest epoch announced to the run
+    // (bumped every `snapshot_every` global updates), the highest epoch
+    // each shard has captured (the fetch_max race electing one capturer
+    // per shard per epoch), and the part-assembly store.
+    let epoch_announced = AtomicU64::new(0);
+    let shard_epoch: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
+    let snap_store = snap.map(|ctl| ctl.store(k));
     // Per-worker retry deques (deferred tasks, always shard-local) and
     // per-shard overflow injectors.
     let retry: Vec<WorkStealingDeque<Task>> =
@@ -405,6 +520,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
             let total_pulls_served = &total_pulls_served;
             let total_max_lag = &total_max_lag;
             let total_auto_flips = &total_auto_flips;
+            let total_pull_retries = &total_pull_retries;
+            let total_pull_timeouts = &total_pull_timeouts;
+            let epoch_announced = &epoch_announced;
+            let shard_epoch = &shard_epoch;
+            let snap_store = &snap_store;
             let retry = &retry;
             let overflows = &overflows;
             let rings = &rings;
@@ -433,6 +553,10 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                 let mut staleness_pulls: u64 = 0;
                 let mut pulls_served: u64 = 0;
                 let mut max_lag: u64 = 0;
+                let mut pull_retries: u64 = 0;
+                let mut pull_timeouts: u64 = 0;
+                // Highest snapshot epoch this worker has adopted.
+                let mut my_snap_epoch: u64 = 0;
                 // Adaptive drain tick (worker-local, tuned on queued bytes).
                 let mut drain_tick: u64 = DRAIN_TICK_START;
                 let mut since_drain: u64 = 0;
@@ -454,6 +578,48 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                 loop {
                     if stop.load(Ordering::Acquire) != STOP_NONE {
                         break;
+                    }
+                    // Fault-plan abort: once the global update count
+                    // passes the threshold, the configured shard's
+                    // workers stop dead — no final window flush, so their
+                    // batched deltas are lost exactly as a crashed
+                    // process would lose them.
+                    if let Some(plan) = config.abort_plan {
+                        if plan.shard == my_shard
+                            && total_updates.load(Ordering::Relaxed) >= plan.after_updates
+                        {
+                            stop.store(STOP_ABORT, Ordering::Release);
+                            break;
+                        }
+                    }
+                    // Chandy–Lamport marker step: adopting a newly
+                    // announced snapshot epoch first clears this worker's
+                    // lanes (flush the outgoing window, drain the shard's
+                    // inbox — the lane-clearing a marker frame would
+                    // force), then one worker per shard (the fetch_max
+                    // winner) freezes the shard's owned master rows.
+                    // Deferred while a split acquisition is parked: the
+                    // capturer takes read locks, and a worker holding
+                    // remote halves must never block on locks.
+                    if let (Some(ctl), Some(store)) = (snap, snap_store.as_ref()) {
+                        let e = epoch_announced.load(Ordering::Acquire);
+                        if e > my_snap_epoch && pending.is_none() {
+                            my_snap_epoch = e;
+                            flush_window(
+                                &mut batcher,
+                                my_shard,
+                                transport,
+                                &mut deltas_sent,
+                                &mut ghost_syncs,
+                                &mut bytes_shipped,
+                            );
+                            ghost_syncs += transport.drain(my_shard).applied;
+                            if shard_epoch[my_shard].fetch_max(e, Ordering::AcqRel) < e {
+                                let (frames, rows) =
+                                    capture_shard_part(graph, sharded, locks, my_shard, ctl);
+                                store.add_part(e, my_shard, frames, rows);
+                            }
+                        }
                     }
                     let mut run_now: Option<(Task, Scope<'_, V, E>)> = None;
                     let mut run_from_retry = false;
@@ -787,11 +953,14 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                             sharded,
                             my_shard,
                             config.ghost_staleness,
+                            config.pull_retry_limit,
                             transport,
                         );
                         staleness_pulls += refreshed.pulls;
                         pulls_served += refreshed.served;
                         bytes_shipped += refreshed.bytes;
+                        pull_retries += refreshed.retries;
+                        pull_timeouts += refreshed.timeouts;
                         if refreshed.max_lag > max_lag {
                             max_lag = refreshed.max_lag;
                         }
@@ -852,6 +1021,15 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                         }
                     }
                     let global = total_updates.fetch_add(1, Ordering::Relaxed) + 1;
+                    // Snapshot epoch announcement: every `snapshot_every`
+                    // global updates the due epoch advances; workers pick
+                    // it up at their next loop top (the marker step).
+                    if let Some(ctl) = snap {
+                        let due = global / ctl.every;
+                        if due > 0 {
+                            epoch_announced.fetch_max(due, Ordering::AcqRel);
+                        }
+                    }
                     if let Some(max) = config.max_updates {
                         if global >= max {
                             stop.store(STOP_LIMIT, Ordering::Release);
@@ -867,15 +1045,22 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                         }
                     }
                 }
-                // Worker exit closes its sync window for good.
-                flush_window(
-                    &mut batcher,
-                    my_shard,
-                    transport,
-                    &mut deltas_sent,
-                    &mut ghost_syncs,
-                    &mut bytes_shipped,
-                );
+                // Worker exit closes its sync window for good — unless
+                // this worker belongs to the aborted shard: a crashed
+                // process loses its batched deltas, so the simulation
+                // drops them too.
+                let crashed = stop.load(Ordering::Acquire) == STOP_ABORT
+                    && matches!(config.abort_plan, Some(p) if p.shard == my_shard);
+                if !crashed {
+                    flush_window(
+                        &mut batcher,
+                        my_shard,
+                        transport,
+                        &mut deltas_sent,
+                        &mut ghost_syncs,
+                        &mut bytes_shipped,
+                    );
+                }
                 per_worker[w].store(local_updates, Ordering::Release);
                 per_conflicts[w].store(conflicts, Ordering::Release);
                 per_deferrals[w].store(deferrals, Ordering::Release);
@@ -894,6 +1079,8 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                 total_pulls_served.fetch_add(pulls_served, Ordering::AcqRel);
                 total_max_lag.fetch_max(max_lag, Ordering::AcqRel);
                 total_auto_flips.fetch_add(auto_flips, Ordering::AcqRel);
+                total_pull_retries.fetch_add(pull_retries, Ordering::AcqRel);
+                total_pull_timeouts.fetch_add(pull_timeouts, Ordering::AcqRel);
                 if workers_remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                     engine_done.store(true, Ordering::Release);
                 }
@@ -921,7 +1108,14 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     let stop_reason = match stop.load(Ordering::Acquire) {
         STOP_TERM_FN => StopReason::TerminationFn,
         STOP_LIMIT => StopReason::UpdateLimit,
+        STOP_ABORT => StopReason::ShardAborted,
         _ => StopReason::SchedulerEmpty,
+    };
+    // Incomplete epochs (interrupted by the abort or run end) are dropped
+    // here — only fully assembled snapshots are usable recovery points.
+    let snapshots = match snap_store {
+        Some(store) => store.into_completed(),
+        None => Vec::new(),
     };
     let per_worker_conflicts: Vec<u64> =
         per_conflicts.iter().map(|c| c.load(Ordering::Acquire)).collect();
@@ -954,9 +1148,16 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
             backpressure_stalls: transport.backpressure_stalls(),
             max_ghost_staleness: total_max_lag.load(Ordering::Acquire),
             auto_steal_half_flips: total_auto_flips.load(Ordering::Acquire),
+            faults_injected: transport.faults_injected(),
+            pull_retries: total_pull_retries.load(Ordering::Acquire),
+            pull_timeouts: total_pull_timeouts.load(Ordering::Acquire)
+                + transport.pull_timeouts(),
+            reconnect_backoffs: transport.reconnect_backoffs(),
+            snapshots_taken: snapshots.len() as u64,
             per_worker_conflicts,
             per_worker_deferrals,
         },
+        snapshots,
     }
 }
 

@@ -467,6 +467,7 @@ impl ThreadedEngine {
                 per_worker_deferrals,
                 ..ContentionStats::default()
             },
+            snapshots: Vec::new(),
         }
     }
 

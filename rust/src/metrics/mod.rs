@@ -184,6 +184,21 @@ pub fn run_summary(report: &crate::engine::RunReport) -> String {
                 c.backpressure_stalls
             );
         }
+        if c.faults_injected > 0
+            || c.pull_retries > 0
+            || c.pull_timeouts > 0
+            || c.reconnect_backoffs > 0
+        {
+            let _ = writeln!(
+                out,
+                "faults: {} injected, {} pull retries, {} pull timeouts, \
+                 {} reconnect backoffs",
+                c.faults_injected, c.pull_retries, c.pull_timeouts, c.reconnect_backoffs
+            );
+        }
+        if c.snapshots_taken > 0 {
+            let _ = writeln!(out, "snapshots: {} epochs captured", c.snapshots_taken);
+        }
     }
     if c.auto_steal_half_flips > 0 {
         let _ = writeln!(
@@ -266,6 +281,7 @@ mod tests {
                 per_worker_deferrals: vec![7, 3],
                 ..Default::default()
             },
+            snapshots: Vec::new(),
         };
         let text = run_summary(&report);
         assert!(text.contains("1000 updates"));
@@ -292,6 +308,7 @@ mod tests {
                 has_owner_map: false,
                 ..Default::default()
             },
+            snapshots: Vec::new(),
         };
         let text = run_summary(&report);
         assert!(
@@ -322,6 +339,7 @@ mod tests {
                 max_ghost_staleness: 2,
                 ..Default::default()
             },
+            snapshots: Vec::new(),
         };
         let text = run_summary(&report);
         assert!(text.contains("4 shards"));
@@ -347,6 +365,7 @@ mod tests {
             per_worker: vec![100],
             syncs_run: 0,
             contention: crate::engine::ContentionStats::default(),
+            snapshots: Vec::new(),
         };
         let text = run_summary(&report);
         assert!(!text.contains("transport:"), "unsharded run hides transport line");
@@ -359,6 +378,48 @@ mod tests {
         report.contention.backpressure_stalls = 9;
         let text = run_summary(&report);
         assert!(text.contains("9 sends stalled on a full transport window"));
+    }
+
+    /// The fault and snapshot lines only render for sharded runs whose
+    /// counters are actually nonzero — a clean run's summary is unchanged.
+    #[test]
+    fn run_summary_gates_fault_and_snapshot_lines() {
+        let mut report = crate::engine::RunReport {
+            updates: 100,
+            wall_secs: 0.1,
+            stop: crate::engine::StopReason::SchedulerEmpty,
+            per_worker: vec![100],
+            syncs_run: 0,
+            contention: crate::engine::ContentionStats {
+                shards: 2,
+                ..Default::default()
+            },
+            snapshots: Vec::new(),
+        };
+        let text = run_summary(&report);
+        assert!(!text.contains("faults:"), "clean run hides the fault line");
+        assert!(!text.contains("snapshots:"), "no epochs, no line");
+        report.contention.faults_injected = 17;
+        report.contention.pull_retries = 4;
+        report.contention.pull_timeouts = 1;
+        report.contention.reconnect_backoffs = 2;
+        report.contention.snapshots_taken = 3;
+        let text = run_summary(&report);
+        assert!(text.contains(
+            "faults: 17 injected, 4 pull retries, 1 pull timeouts, 2 reconnect backoffs"
+        ));
+        assert!(text.contains("snapshots: 3 epochs captured"));
+        // pull retries alone are enough to surface the fault line
+        report.contention.faults_injected = 0;
+        report.contention.pull_timeouts = 0;
+        report.contention.reconnect_backoffs = 0;
+        report.contention.snapshots_taken = 0;
+        let text = run_summary(&report);
+        assert!(text.contains("faults: 0 injected, 4 pull retries"));
+        // but never outside a sharded run
+        report.contention.shards = 0;
+        let text = run_summary(&report);
+        assert!(!text.contains("faults:"), "fault line is shard-gated");
     }
 
     #[test]

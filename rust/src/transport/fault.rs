@@ -1,0 +1,382 @@
+//! **Fault injection** for the ghost-sync transport: a [`FaultInjector`]
+//! wraps any [`GhostTransport`] backend and perturbs its traffic on a
+//! deterministic seeded schedule — dropping, duplicating, and delaying
+//! (reordering) delta frames, and severing pull exchanges mid-flight.
+//!
+//! GraphLab in the Cloud (arXiv:1107.0922) motivates the exercise: a
+//! long-running engine on EC2-class infrastructure must survive lost and
+//! delayed messages rather than assume a perfect wire. The transport's
+//! invariants make each fault class survivable by construction:
+//!
+//! * **duplicates / reorders** — replicas apply newest-wins
+//!   (`GhostEntry::store_versioned`), so a stale or repeated delta is a
+//!   no-op;
+//! * **drops** — the master copy is never lost (ghosts are caches); a
+//!   reader that trips the bounded-staleness admission check heals the
+//!   replica with a pull, retrying with backoff if the pull itself is
+//!   faulty (`Scope::refresh_stale_ghosts`);
+//! * **severed pulls** — surface as a failed [`PullReceipt`], which the
+//!   admission path retries up to `EngineConfig::pull_retry_limit` times
+//!   before admitting the stale read; a dead peer delays admission, never
+//!   hangs it.
+//!
+//! All randomness comes from a [`Pcg32`] seeded by the plan — two runs
+//! with the same plan over the same traffic sequence make identical
+//! drop/duplicate/delay/sever decisions. No wall-clock entropy anywhere.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::{DrainReceipt, GhostTransport, PullReceipt, PullRequest, SendReceipt};
+use crate::graph::VertexId;
+use crate::util::Pcg32;
+
+/// A deterministic fault schedule: per-mille rates for each fault class,
+/// rolled from a [`Pcg32`] stream seeded by `seed`. Rates are evaluated
+/// in declaration order against a single roll in `0..1000`, so their sum
+/// must stay `<= 1000`; the remainder passes traffic through untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    /// Seed for the injector's deterministic RNG stream.
+    pub seed: u64,
+    /// Per-mille of delta sends silently dropped (never reach the inner
+    /// backend; healed by staleness pulls).
+    pub drop_per_mille: u32,
+    /// Per-mille of delta sends delivered twice (absorbed by newest-wins
+    /// versioning).
+    pub dup_per_mille: u32,
+    /// Per-mille of delta sends held back and re-injected one to three
+    /// drain ticks later — by which time newer versions have usually
+    /// overtaken them, so a delay is also a reorder.
+    pub delay_per_mille: u32,
+    /// Per-mille of pull exchanges severed mid-flight: the pull returns a
+    /// failed receipt without touching the inner backend (the admission
+    /// path's retry/backoff loop takes it from there).
+    pub sever_per_mille: u32,
+}
+
+impl FaultPlan {
+    fn checked(self) -> FaultPlan {
+        assert!(
+            self.drop_per_mille + self.dup_per_mille + self.delay_per_mille <= 1000,
+            "fault plan delta rates exceed 1000 per mille"
+        );
+        assert!(self.sever_per_mille <= 1000, "fault plan sever rate exceeds 1000 per mille");
+        self
+    }
+}
+
+/// A delta held back by the delay schedule, due for re-injection once the
+/// global drain tick reaches `due_tick`.
+struct Held<V> {
+    src_shard: usize,
+    vertex: VertexId,
+    version: u64,
+    data: V,
+    due_tick: u64,
+}
+
+/// A lossy-wire wrapper around any [`GhostTransport`] backend. See the
+/// [module docs](self) for the fault classes and why each is survivable.
+///
+/// The wrapper always reports [`GhostTransport::applies_at_send`] as
+/// `false`, even over the direct backend: a lossy wire can never prove
+/// replicas fresh at admission, so the engine must keep its per-ghost
+/// staleness scan (the healing path) active.
+pub struct FaultInjector<'a, V> {
+    inner: &'a dyn GhostTransport<V>,
+    plan: FaultPlan,
+    rng: Mutex<Pcg32>,
+    held: Mutex<Vec<Held<V>>>,
+    /// Global drain tick: advances on every `drain` call and schedules
+    /// held-delta release.
+    drains: AtomicU64,
+    faults: AtomicU64,
+}
+
+impl<'a, V> FaultInjector<'a, V> {
+    /// Wrap `inner` under `plan`. Panics if the plan's rates are
+    /// inconsistent (delta rates summing past 1000 per mille).
+    pub fn new(inner: &'a dyn GhostTransport<V>, plan: FaultPlan) -> FaultInjector<'a, V> {
+        let plan = plan.checked();
+        FaultInjector {
+            inner,
+            plan,
+            rng: Mutex::new(Pcg32::seed_from_u64(plan.seed)),
+            held: Mutex::new(Vec::new()),
+            drains: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+        }
+    }
+
+    /// Faults injected so far (drops + duplicates + delays + severs).
+    pub fn faults(&self) -> u64 {
+        self.faults.load(Ordering::Relaxed)
+    }
+
+    /// Deltas currently held back by the delay schedule.
+    pub fn held_len(&self) -> usize {
+        self.held.lock().unwrap().len()
+    }
+
+    /// Roll one fault decision in `0..1000` (plus a hold-ticks roll for
+    /// delays, drawn from the same stream to keep the schedule a single
+    /// deterministic sequence).
+    fn roll(&self) -> (u32, u64) {
+        let mut rng = self.rng.lock().unwrap();
+        (rng.gen_range(1000), 1 + rng.gen_range(3) as u64)
+    }
+
+    /// Re-inject every held delta whose tick has come due.
+    fn release_due(&self, now: u64)
+    where
+        V: Clone + Send + Sync,
+    {
+        let due: Vec<Held<V>> = {
+            let mut held = self.held.lock().unwrap();
+            let mut due = Vec::new();
+            let mut i = 0;
+            while i < held.len() {
+                if held[i].due_tick <= now {
+                    due.push(held.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            due
+        };
+        for d in due {
+            self.inner.send(d.src_shard, d.vertex, d.version, &d.data);
+        }
+    }
+}
+
+impl<V: Clone + Send + Sync> GhostTransport<V> for FaultInjector<'_, V> {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn send(&self, src_shard: usize, vertex: VertexId, version: u64, data: &V) -> SendReceipt {
+        let (roll, hold_ticks) = self.roll();
+        let p = self.plan;
+        if roll < p.drop_per_mille {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            return SendReceipt::default();
+        }
+        if roll < p.drop_per_mille + p.dup_per_mille {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            let first = self.inner.send(src_shard, vertex, version, data);
+            let second = self.inner.send(src_shard, vertex, version, data);
+            return SendReceipt {
+                replicas_now: first.replicas_now + second.replicas_now,
+                bytes: first.bytes + second.bytes,
+            };
+        }
+        if roll < p.drop_per_mille + p.dup_per_mille + p.delay_per_mille {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            let due_tick = self.drains.load(Ordering::Relaxed) + hold_ticks;
+            self.held.lock().unwrap().push(Held {
+                src_shard,
+                vertex,
+                version,
+                data: data.clone(),
+                due_tick,
+            });
+            return SendReceipt::default();
+        }
+        self.inner.send(src_shard, vertex, version, data)
+    }
+
+    fn drain(&self, dst_shard: usize) -> DrainReceipt {
+        let now = self.drains.fetch_add(1, Ordering::Relaxed) + 1;
+        self.release_due(now);
+        self.inner.drain(dst_shard)
+    }
+
+    fn pull<'m>(
+        &self,
+        dst_shard: usize,
+        req: PullRequest,
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> PullReceipt {
+        let (roll, _) = self.roll();
+        if roll < self.plan.sever_per_mille {
+            self.faults.fetch_add(1, Ordering::Relaxed);
+            return PullReceipt::default();
+        }
+        self.inner.pull(dst_shard, req, master)
+    }
+
+    fn applies_at_send(&self) -> bool {
+        // A lossy wire can never prove replicas fresh: keep the engine's
+        // staleness scan (the drop-healing path) active even over the
+        // direct backend.
+        false
+    }
+
+    fn queued_bytes(&self, dst_shard: usize) -> u64 {
+        self.inner.queued_bytes(dst_shard)
+    }
+
+    fn finalize(&self) {
+        // Every held delta is released before the inner barrier so the
+        // engine's final drain pass observes the complete stream.
+        self.release_due(u64::MAX);
+        self.inner.finalize();
+    }
+
+    fn backpressure_stalls(&self) -> u64 {
+        self.inner.backpressure_stalls()
+    }
+
+    fn faults_injected(&self) -> u64 {
+        self.faults.load(Ordering::Relaxed) + self.inner.faults_injected()
+    }
+
+    fn pull_timeouts(&self) -> u64 {
+        self.inner.pull_timeouts()
+    }
+
+    fn reconnect_backoffs(&self) -> u64 {
+        self.inner.reconnect_backoffs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Records every delivery the inner backend sees.
+    #[derive(Default)]
+    struct Recording {
+        delivered: Mutex<Vec<(VertexId, u64)>>,
+        drains: AtomicU64,
+    }
+
+    impl GhostTransport<u64> for Recording {
+        fn name(&self) -> &'static str {
+            "recording"
+        }
+        fn send(&self, _src: usize, vertex: u32, version: u64, _data: &u64) -> SendReceipt {
+            self.delivered.lock().unwrap().push((vertex, version));
+            SendReceipt { replicas_now: 1, bytes: 16 }
+        }
+        fn drain(&self, _dst: usize) -> DrainReceipt {
+            self.drains.fetch_add(1, Ordering::Relaxed);
+            DrainReceipt::default()
+        }
+        fn pull<'m>(
+            &self,
+            _dst: usize,
+            _req: PullRequest,
+            _master: &dyn Fn(u32) -> (&'m u64, u64),
+        ) -> PullReceipt {
+            PullReceipt { applied: true, served: true, bytes: 28 }
+        }
+    }
+
+    fn drive(plan: FaultPlan) -> (Vec<(VertexId, u64)>, u64) {
+        let inner = Recording::default();
+        let injector = FaultInjector::new(&inner, plan);
+        for i in 0..400u32 {
+            injector.send(0, i % 8, u64::from(i) + 1, &7u64);
+            if i % 16 == 0 {
+                injector.drain(1);
+            }
+        }
+        injector.finalize();
+        let faults = injector.faults_injected();
+        (inner.delivered.into_inner().unwrap(), faults)
+    }
+
+    #[test]
+    fn same_seed_same_fault_schedule() {
+        let plan = FaultPlan {
+            seed: 42,
+            drop_per_mille: 150,
+            dup_per_mille: 100,
+            delay_per_mille: 100,
+            sever_per_mille: 0,
+        };
+        let (a, fa) = drive(plan);
+        let (b, fb) = drive(plan);
+        assert_eq!(a, b, "same seed must replay the identical delivery sequence");
+        assert_eq!(fa, fb);
+        assert!(fa > 0, "rates this high must inject on 400 sends");
+        let (c, _) = drive(FaultPlan { seed: 43, ..plan });
+        assert_ne!(a, c, "a different seed must perturb the schedule");
+    }
+
+    #[test]
+    fn drop_only_plan_loses_exactly_the_faulted_sends() {
+        let plan = FaultPlan { seed: 9, drop_per_mille: 250, ..FaultPlan::default() };
+        let (delivered, faults) = drive(plan);
+        assert!(faults > 0);
+        assert_eq!(delivered.len() as u64, 400 - faults, "each fault is one dropped send");
+    }
+
+    #[test]
+    fn delay_only_plan_delivers_everything_by_finalize() {
+        let plan = FaultPlan { seed: 5, delay_per_mille: 400, ..FaultPlan::default() };
+        let inner = Recording::default();
+        let injector = FaultInjector::new(&inner, plan);
+        for i in 0..100u32 {
+            injector.send(0, i, u64::from(i) + 1, &1u64);
+        }
+        assert!(injector.held_len() > 0, "a 40% delay rate must hold some deltas");
+        injector.finalize();
+        assert_eq!(injector.held_len(), 0, "finalize releases every held delta");
+        let delivered = inner.delivered.lock().unwrap();
+        assert_eq!(delivered.len(), 100, "delays lose nothing");
+        let versions: std::collections::BTreeSet<u64> =
+            delivered.iter().map(|&(_, ver)| ver).collect();
+        assert_eq!(versions.len(), 100, "every version arrives exactly once");
+        let in_order = delivered.windows(2).all(|w| w[0].1 <= w[1].1);
+        assert!(!in_order, "held deltas re-inject late: delays are reorders");
+    }
+
+    #[test]
+    fn dup_only_plan_delivers_extra_copies() {
+        let plan = FaultPlan { seed: 11, dup_per_mille: 300, ..FaultPlan::default() };
+        let (delivered, faults) = drive(plan);
+        assert!(faults > 0);
+        assert_eq!(delivered.len() as u64, 400 + faults, "each fault is one extra copy");
+    }
+
+    #[test]
+    fn severed_pulls_fail_without_reaching_the_backend() {
+        let inner = Recording::default();
+        let plan = FaultPlan { seed: 3, sever_per_mille: 1000, ..FaultPlan::default() };
+        let injector = FaultInjector::new(&inner, plan);
+        let master_data = 5u64;
+        let r = injector.pull(1, PullRequest { vertex: 2, min_version: 1 }, &|_| (&master_data, 1));
+        assert!(!r.applied && !r.served && r.bytes == 0, "severed pull is a clean failure");
+        assert_eq!(injector.faults_injected(), 1);
+        let open = FaultInjector::new(&inner, FaultPlan { sever_per_mille: 0, ..plan });
+        let r = open.pull(1, PullRequest { vertex: 2, min_version: 1 }, &|_| (&master_data, 1));
+        assert!(r.applied && r.served, "a zero sever rate passes pulls through");
+    }
+
+    #[test]
+    fn injector_never_claims_apply_at_send() {
+        let inner = Recording::default();
+        let injector = FaultInjector::new(&inner, FaultPlan::default());
+        assert!(!injector.applies_at_send(), "staleness scan must stay active under faults");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed 1000")]
+    fn inconsistent_plan_rejected() {
+        let inner = Recording::default();
+        let _ = FaultInjector::new(
+            &inner,
+            FaultPlan {
+                seed: 0,
+                drop_per_mille: 600,
+                dup_per_mille: 300,
+                delay_per_mille: 200,
+                sever_per_mille: 0,
+            },
+        );
+    }
+}

@@ -41,6 +41,10 @@
 //! [`GhostTransport`] impl — everything above the trait (batching,
 //! staleness, counters) is backend-agnostic; [`SocketTransport`] is
 //! exactly that: the same frames moved as real Unix-domain-socket bytes.
+//! [`FaultInjector`] exploits the same seam in the other direction: it
+//! wraps any backend in a deterministic lossy wire (drops, duplicates,
+//! delays/reorders, severed pulls) to prove the invariants above actually
+//! carry the engine through message loss.
 //!
 //! # Wire format
 //!
@@ -72,6 +76,7 @@ mod channel;
 mod codec;
 mod compress;
 mod direct;
+mod fault;
 mod socket;
 
 pub use channel::ChannelTransport;
@@ -82,6 +87,7 @@ pub use compress::{
     decode_header, decode_payload, encode_delta, put_varint, read_varint, CompressedHeader,
 };
 pub use direct::DirectTransport;
+pub use fault::{FaultInjector, FaultPlan};
 pub use socket::{SocketTransport, DEFAULT_SEND_BUFFER};
 
 use crate::graph::VertexId;
@@ -263,6 +269,27 @@ pub trait GhostTransport<V>: Send + Sync {
     /// Sends that stalled on a full bounded send buffer (backpressure).
     /// Zero for backends without a bounded send window.
     fn backpressure_stalls(&self) -> u64 {
+        0
+    }
+
+    /// Faults this backend injected or absorbed (deltas dropped,
+    /// duplicated, delayed; pulls severed). Zero for every real backend;
+    /// the [`FaultInjector`] wrapper counts its scheduled faults here.
+    fn faults_injected(&self) -> u64 {
+        0
+    }
+
+    /// Pull exchanges that timed out against a dead or severed peer lane
+    /// (the socket backend's bounded-read path). Zero for backends whose
+    /// pulls cannot block.
+    fn pull_timeouts(&self) -> u64 {
+        0
+    }
+
+    /// Exponential-backoff waits spent reconnecting a severed delta
+    /// connection (the socket backend; one count per reconnect attempt).
+    /// Zero for backends without reconnectable connections.
+    fn reconnect_backoffs(&self) -> u64 {
         0
     }
 }

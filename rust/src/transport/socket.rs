@@ -40,8 +40,17 @@
 //! [`GhostTransport::backpressure_stalls`] counter. A frame larger than
 //! the whole window is sent alone once the window is empty, so progress
 //! is always possible. Writes that fail with a broken pipe reconnect to
-//! the endpoint (fresh handshake, bounded retries) and resend the entire
-//! frame.
+//! the endpoint (fresh handshake) under **capped exponential backoff** —
+//! a deterministic 2, 4, 8, …, 64 ms schedule, each wait counted in
+//! [`GhostTransport::reconnect_backoffs`] — and resend the entire frame;
+//! exhausting the attempt budget panics with the vertex and shard pair in
+//! the message, never drops the delta silently. Pull lanes carry read and
+//! write timeouts, so a crashed peer surfaces as a counted
+//! [`GhostTransport::pull_timeouts`] failure (retried by the engine's
+//! scope-admission backoff loop) instead of hanging the admitting worker.
+//! [`SocketTransport::sever_delta_connection`] and
+//! [`SocketTransport::sever_pull_lane`] let fault tests trip both paths
+//! on demand.
 
 use super::{
     ByteReader, DrainReceipt, GhostDelta, GhostTransport, PullReceipt, PullRequest, SendReceipt,
@@ -67,8 +76,18 @@ const FRAME_HEADER: usize = 16;
 /// in a kernel buffer — the exchange can never deadlock on buffer space.
 const PULL_CHUNK: usize = 16 << 10;
 
-/// How many reconnect attempts a broken-pipe send gets before giving up.
-const RECONNECT_ATTEMPTS: u32 = 4;
+/// How many reconnect attempts a broken-pipe send gets before giving up
+/// and panicking with the vertex/shard context.
+const RECONNECT_ATTEMPTS_MAX: u32 = 8;
+
+/// Ceiling of the reconnect backoff schedule: waits double per attempt
+/// (2, 4, 8, … ms) and cap here. Deterministic — no wall-clock jitter.
+const RECONNECT_BACKOFF_CAP_MS: u64 = 64;
+
+/// Read/write timeout on pull-lane sockets: a crashed or severed peer
+/// fails the exchange (counted as a pull timeout) instead of hanging the
+/// admitting worker indefinitely.
+const PULL_IO_TIMEOUT: Duration = Duration::from_millis(500);
 
 /// Upper bound on one send's backpressure stall (64 yields, then 50µs
 /// sleeps — roughly one second). Keeps the soft window bound from ever
@@ -101,15 +120,28 @@ impl Connection {
 
     /// `write_all` with reconnect-on-broken-pipe: the reader forwards only
     /// complete frames, so a torn partial write dies with the old stream
-    /// and the whole frame is resent on the fresh connection. Each retry
-    /// re-adds the frame to `window` — the reader decrements every raw
-    /// byte it receives (including torn tails), so without the re-add a
-    /// resend could drive the window negative and make `finalize` return
-    /// while bytes are still in flight. `write_all` cannot report partial
-    /// progress, so the accounting errs toward a bounded *over*-count per
-    /// reconnect; the send path's stall loop is time-bounded for exactly
-    /// this reason.
-    fn send(&mut self, frame: &[u8], window: &AtomicUsize, reconnects: &AtomicU64) {
+    /// and the whole frame is resent on the fresh connection, after a
+    /// capped-exponential backoff wait (2, 4, 8, …, capped at
+    /// [`RECONNECT_BACKOFF_CAP_MS`] ms — a deterministic schedule, each
+    /// wait counted in `backoffs`). Exhausting the attempt budget panics
+    /// with the vertex and shard pair, never drops the delta silently.
+    /// Each retry re-adds the frame to `window` — the reader decrements
+    /// every raw byte it receives (including torn tails), so without the
+    /// re-add a resend could drive the window negative and make
+    /// `finalize` return while bytes are still in flight. `write_all`
+    /// cannot report partial progress, so the accounting errs toward a
+    /// bounded *over*-count per reconnect; the send path's stall loop is
+    /// time-bounded for exactly this reason.
+    #[allow(clippy::too_many_arguments)]
+    fn send(
+        &mut self,
+        frame: &[u8],
+        vertex: VertexId,
+        dst: usize,
+        window: &AtomicUsize,
+        reconnects: &AtomicU64,
+        backoffs: &AtomicU64,
+    ) {
         let mut attempt = 0u32;
         loop {
             match self.stream.write_all(frame) {
@@ -127,19 +159,25 @@ impl Connection {
                 {
                     attempt += 1;
                     assert!(
-                        attempt <= RECONNECT_ATTEMPTS,
-                        "ghost delta send to {:?} failed after {RECONNECT_ATTEMPTS} \
-                         reconnect attempts: {e}",
-                        self.endpoint
+                        attempt <= RECONNECT_ATTEMPTS_MAX,
+                        "ghost delta for vertex {vertex} (shard {src} -> {dst}) to {:?} \
+                         failed after {RECONNECT_ATTEMPTS_MAX} reconnect attempts: {e}",
+                        self.endpoint,
+                        src = self.src,
                     );
                     reconnects.fetch_add(1, Ordering::Relaxed);
-                    std::thread::sleep(Duration::from_millis(1 << attempt));
+                    backoffs.fetch_add(1, Ordering::Relaxed);
+                    let wait = (1u64 << attempt).min(RECONNECT_BACKOFF_CAP_MS);
+                    std::thread::sleep(Duration::from_millis(wait));
                     if let Ok(fresh) = Connection::open(&self.endpoint, self.src) {
                         self.stream = fresh.stream;
                     }
                     window.fetch_add(frame.len(), Ordering::AcqRel);
                 }
-                Err(e) => panic!("ghost delta send to {:?} failed: {e}", self.endpoint),
+                Err(e) => panic!(
+                    "ghost delta for vertex {vertex} (shard {} -> {dst}) to {:?} failed: {e}",
+                    self.src, self.endpoint
+                ),
             }
         }
     }
@@ -280,6 +318,8 @@ pub struct SocketTransport<'g, V> {
     readers: Vec<std::thread::JoinHandle<()>>,
     backpressure: AtomicU64,
     reconnects: AtomicU64,
+    backoffs: AtomicU64,
+    lane_timeouts: AtomicU64,
 }
 
 impl<'g, V> SocketTransport<'g, V> {
@@ -335,6 +375,13 @@ impl<'g, V> SocketTransport<'g, V> {
                         a as u32,
                     )?)));
                     let (near, far) = UnixStream::pair()?;
+                    // A dead or severed peer must surface as a counted
+                    // pull timeout, never hang the admitting worker:
+                    // bound every lane read and write.
+                    for s in [&near, &far] {
+                        s.set_read_timeout(Some(PULL_IO_TIMEOUT))?;
+                        s.set_write_timeout(Some(PULL_IO_TIMEOUT))?;
+                    }
                     pulls.push(Some(Mutex::new(PullLane { near, far })));
                 }
             }
@@ -352,6 +399,8 @@ impl<'g, V> SocketTransport<'g, V> {
             readers,
             backpressure: AtomicU64::new(0),
             reconnects: AtomicU64::new(0),
+            backoffs: AtomicU64::new(0),
+            lane_timeouts: AtomicU64::new(0),
         })
     }
 
@@ -368,6 +417,28 @@ impl<'g, V> SocketTransport<'g, V> {
     /// Reconnections performed after broken-pipe sends (diagnostics).
     pub fn reconnects(&self) -> u64 {
         self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Fault hook: shut down the `src -> dst` delta connection's stream
+    /// so the next send trips the reconnect-with-backoff path. The
+    /// endpoint stays bound, so the reconnect succeeds — this severs one
+    /// connection, not the peer.
+    pub fn sever_delta_connection(&self, src: usize, dst: usize) {
+        if let Some(conn) = &self.conns[src * self.k + dst] {
+            let conn = conn.lock().unwrap();
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    /// Fault hook: shut down both ends of the `requester -> owner` pull
+    /// lane; subsequent pulls on the lane fail fast and are counted as
+    /// pull timeouts instead of hanging the admitting worker.
+    pub fn sever_pull_lane(&self, requester: usize, owner: usize) {
+        if let Some(lane) = &self.pulls[requester * self.k + owner] {
+            let lane = lane.lock().unwrap();
+            let _ = lane.near.shutdown(std::net::Shutdown::Both);
+            let _ = lane.far.shutdown(std::net::Shutdown::Both);
+        }
     }
 }
 
@@ -438,7 +509,14 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
                 }
             }
             window.fetch_add(frame.len(), Ordering::AcqRel);
-            conn.lock().unwrap().send(&frame, window, &self.reconnects);
+            conn.lock().unwrap().send(
+                &frame,
+                vertex,
+                dst,
+                window,
+                &self.reconnects,
+                &self.backoffs,
+            );
             bytes += frame.len() as u64;
         }
         SendReceipt { replicas_now: 0, bytes }
@@ -489,13 +567,25 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
         };
         let mut lane = lane.lock().unwrap();
         let mut bytes = 0u64;
+        // Any lane IO failure — timeout against a dead peer, or a severed
+        // lane's broken pipe — fails the pull cleanly and is counted; the
+        // engine's scope-admission retry loop owns recovery. A crashed
+        // peer therefore delays the admitting worker, never hangs it.
+        let lane_down = |_e: std::io::Error| {
+            self.lane_timeouts.fetch_add(1, Ordering::Relaxed);
+            PullReceipt::default()
+        };
         // Requester -> owner: the request frame crosses the socket.
         let mut frame = Vec::with_capacity(PullRequest::WIRE_LEN);
         req.encode_into(&mut frame);
-        lane.near.write_all(&frame).expect("pull request write");
+        if let Err(e) = lane.near.write_all(&frame) {
+            return lane_down(e);
+        }
         bytes += frame.len() as u64;
         let mut raw = [0u8; PullRequest::WIRE_LEN];
-        lane.far.read_exact(&mut raw).expect("pull request read");
+        if let Err(e) = lane.far.read_exact(&mut raw) {
+            return lane_down(e);
+        }
         // Owner side: serve the master data as a delta frame. Lock-step
         // chunked exchange — the same thread plays both ends, so at most
         // PULL_CHUNK reply bytes are ever in the kernel buffer.
@@ -507,8 +597,12 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
         let mut off = 0usize;
         while off < reply.len() {
             let end = (off + PULL_CHUNK).min(reply.len());
-            lane.far.write_all(&reply[off..end]).expect("pull reply write");
-            lane.near.read_exact(&mut got[off..end]).expect("pull reply read");
+            if let Err(e) = lane.far.write_all(&reply[off..end]) {
+                return lane_down(e);
+            }
+            if let Err(e) = lane.near.read_exact(&mut got[off..end]) {
+                return lane_down(e);
+            }
             off = end;
         }
         bytes += reply.len() as u64;
@@ -554,6 +648,14 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
     fn backpressure_stalls(&self) -> u64 {
         self.backpressure.load(Ordering::Relaxed)
     }
+
+    fn pull_timeouts(&self) -> u64 {
+        self.lane_timeouts.load(Ordering::Relaxed)
+    }
+
+    fn reconnect_backoffs(&self) -> u64 {
+        self.backoffs.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -598,6 +700,62 @@ mod tests {
         let dir = t.socket_dir().to_path_buf();
         drop(t);
         assert!(!dir.exists(), "socket files cleaned up on drop");
+    }
+
+    #[test]
+    fn severed_delta_connection_reconnects_with_backoff() {
+        let mut g = chain(8);
+        let sg = ShardedGraph::new(&mut g, 2);
+        let t = SocketTransport::new(&sg).expect("socket setup");
+        let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+        let owner = sg.owner_of(v);
+        let (dst, gi) = sg.replicas_of(v)[0];
+        let entry = sg.shard(dst as usize).ghost(gi as usize);
+        t.sever_delta_connection(owner, dst as usize);
+        let r = GhostTransport::send(&t, owner, v, 2, &555u64);
+        assert!(r.bytes > 0);
+        assert!(t.reconnects() >= 1, "a broken pipe must reconnect");
+        assert!(
+            GhostTransport::reconnect_backoffs(&t) >= 1,
+            "each reconnect attempt waits one counted backoff"
+        );
+        // The resent frame lands on the fresh connection; poll the drain
+        // (bounded) rather than finalize — the torn write skews the
+        // window accounting, which finalize only tolerates noisily.
+        let mut applied = 0;
+        for _ in 0..10_000 {
+            applied += GhostTransport::drain(&t, dst as usize).applied;
+            if applied > 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(applied, 1, "the severed frame was resent and applied");
+        assert_eq!(entry.read(), 555);
+        assert_eq!(entry.version(), 2);
+    }
+
+    #[test]
+    fn severed_pull_lane_fails_fast_and_counts_a_timeout() {
+        let mut g = chain(8);
+        let sg = ShardedGraph::new(&mut g, 2);
+        let t = SocketTransport::new(&sg).expect("socket setup");
+        let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+        let owner = sg.owner_of(v);
+        let (dst, _gi) = sg.replicas_of(v)[0];
+        t.sever_pull_lane(dst as usize, owner);
+        let master = 999u64;
+        let r = GhostTransport::pull(
+            &t,
+            dst as usize,
+            PullRequest { vertex: v, min_version: 1 },
+            &|u| {
+                assert_eq!(u, v);
+                (&master, 1)
+            },
+        );
+        assert!(!r.applied && !r.served, "a severed lane fails the pull cleanly");
+        assert_eq!(GhostTransport::pull_timeouts(&t), 1, "the failure is counted");
     }
 
     #[test]

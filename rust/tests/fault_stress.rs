@@ -1,0 +1,400 @@
+//! Fault-tolerance stress tests: the sharded engine run over a
+//! deterministic lossy wire ([`graphlab::transport::FaultInjector`]) must
+//! still produce sequential-equivalent results — drops are healed by
+//! staleness pulls, duplicates and reorders are absorbed by newest-wins
+//! versioning, severed pulls are retried at admission — and a run killed
+//! mid-flight by a shard abort must be recoverable from its latest
+//! Chandy–Lamport snapshot (restore the masters, re-run, converge to the
+//! uninterrupted fixed point).
+//!
+//! Assertions deliberately omitted under faults: `max_ghost_staleness <=
+//! bound` (an exhausted retry budget admits a stale read by design) and
+//! `pulls_served == staleness_pulls` (a severed pull is counted but never
+//! served).
+
+use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
+use graphlab::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
+use graphlab::apps::gibbs::{chromatic_sets, GibbsEdge, GibbsUpdate, GibbsVertex};
+use graphlab::apps::mrf::{random_mrf, BpEdge, BpVertex, Mrf};
+use graphlab::consistency::{ConsistencyModel, Scope};
+use graphlab::engine::{
+    ChannelShardedEngine, Engine, Program, SequentialEngine, ShardedEngine, Snapshot,
+    SocketShardedEngine, StopReason, ThreadedEngine, UpdateContext, UpdateFn,
+};
+use graphlab::graph::{DataGraph, GraphBuilder};
+use graphlab::scheduler::{
+    FifoScheduler, MultiQueueFifo, PriorityScheduler, Scheduler, SetScheduler, Task,
+};
+use graphlab::sdt::Sdt;
+use graphlab::transport::FaultPlan;
+use graphlab::util::Pcg32;
+use std::sync::Arc;
+
+/// The standard lossy wire for the conservation tests: drops, duplicates,
+/// delays/reorders on the delta lanes plus severed staleness pulls, all
+/// from one seed.
+fn lossy_wire(seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        drop_per_mille: 100,
+        dup_per_mille: 60,
+        delay_per_mille: 60,
+        sever_per_mille: 200,
+    }
+}
+
+// ---- BP: lossy wire vs sequential ------------------------------------------
+
+fn run_bp_sequential(mrf: &mut Mrf, bound: f32) {
+    let n = mrf.graph.num_vertices();
+    let sdt = Sdt::new();
+    sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+    let sched = PriorityScheduler::new(n);
+    for v in 0..n as u32 {
+        sched.add_task(Task::with_priority(v, 1.0));
+    }
+    let upd = BpUpdate::new(mrf.arity, bound, Arc::new(mrf.tables.clone()));
+    Program::new()
+        .update_fn(&upd)
+        .model(ConsistencyModel::Edge)
+        .max_updates(200_000)
+        .run_on(&SequentialEngine, &mut mrf.graph, &sched, &sdt);
+}
+
+/// Shared acceptance harness: BP over a seeded lossy wire must still reach
+/// the sequential fixed point — with a tight staleness bound the admission
+/// pulls heal every drop, and the retry loop rides out severed pulls. The
+/// injector must actually have fired (`faults_injected > 0`) and severed
+/// pulls must actually have been retried (`pull_retries > 0`), or the run
+/// proved nothing.
+fn bp_survives_lossy_wire_on<Eng: Engine<BpVertex, BpEdge>>(
+    make: impl Fn(usize) -> Eng,
+    backend: &str,
+    shard_counts: &[usize],
+) {
+    let mk = || {
+        let mut rng = Pcg32::seed_from_u64(42);
+        random_mrf(80, 160, 3, &mut rng)
+    };
+    let mut seq = mk();
+    run_bp_sequential(&mut seq, 1e-6);
+    let reference: Vec<Vec<f32>> =
+        (0..80u32).map(|v| seq.graph.vertex_data(v).belief.clone()).collect();
+
+    for &k in shard_counts {
+        let mut par = mk();
+        let n = par.graph.num_vertices();
+        let sdt = Sdt::new();
+        sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let upd = BpUpdate::new(par.arity, 1e-6, Arc::new(par.tables.clone()));
+        let report = Program::new()
+            .update_fn(&upd)
+            .workers(4)
+            .model(ConsistencyModel::Full)
+            // Tight bound + lazy window: drops leave replicas lagging, so
+            // pulls (the healing path) must fire constantly.
+            .ghost_staleness(1)
+            .ghost_batch(8)
+            .fault_plan(lossy_wire(1234 + k as u64))
+            .max_updates(500_000)
+            .run_on(&make(k), &mut par.graph, &sched, &sdt);
+        assert!(report.updates > 0, "{backend} k={k}");
+        let c = &report.contention;
+        assert_eq!(c.shards, k);
+        assert!(c.faults_injected > 0, "{backend} k={k}: the wire must actually be lossy");
+        assert!(
+            c.pull_retries > 0,
+            "{backend} k={k}: severed pulls must force admission retries: {c:?}"
+        );
+        assert!(c.staleness_pulls > 0, "{backend} k={k}: drops must force pulls");
+        for v in 0..n as u32 {
+            let b = &par.graph.vertex_data(v).belief;
+            for (x, y) in reference[v as usize].iter().zip(b.iter()) {
+                assert!(
+                    (x - y).abs() < 5e-3,
+                    "{backend} k={k} vertex {v}: seq={:?} got={b:?}",
+                    reference[v as usize]
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance: ChannelTransport-backed BP reaches the sequential fixed
+/// point through a seeded drop/duplicate/delay/sever fault plan at
+/// k in {2, 4}.
+#[test]
+fn channel_bp_matches_sequential_beliefs_over_lossy_wire() {
+    bp_survives_lossy_wire_on(ChannelShardedEngine::new, "channel", &[2, 4]);
+}
+
+/// Acceptance: the same lossy wire wrapped around real Unix-socket lanes.
+#[test]
+fn socket_bp_matches_sequential_beliefs_over_lossy_wire() {
+    bp_survives_lossy_wire_on(SocketShardedEngine::new, "socket", &[2]);
+}
+
+// ---- Gibbs: lossy wire conservation ----------------------------------------
+
+fn color_graph(g: &mut DataGraph<GibbsVertex, GibbsEdge>) {
+    let n = g.num_vertices();
+    let sched = FifoScheduler::new(n);
+    for v in 0..n as u32 {
+        sched.add_task(Task::new(v));
+    }
+    let upd = ColoringUpdate;
+    Program::new()
+        .update_fn(&upd)
+        .workers(2)
+        .model(ConsistencyModel::Edge)
+        .run_on(&ThreadedEngine, g, &sched, &Sdt::new());
+}
+
+/// Chromatic Gibbs conserves exactly one sample per vertex per sweep no
+/// matter what the wire drops, duplicates, or reorders: sample counts live
+/// in the master rows, and the scheduler's sweep plan is unaffected by
+/// ghost traffic. The faults only perturb *which* neighbor values a
+/// sampler conditions on — never how often it runs.
+#[test]
+fn channel_gibbs_conserves_sweeps_over_lossy_wire() {
+    use graphlab::apps::mrf::EdgePotential;
+    let sweeps = 300usize;
+    let build = || {
+        let mut b = GraphBuilder::new();
+        for _ in 0..8 {
+            b.add_vertex(GibbsVertex::new(vec![1.0, 1.0]));
+        }
+        let e = GibbsEdge { potential: EdgePotential::Table(0) };
+        for i in 0..7u32 {
+            b.add_undirected(i, i + 1, e, e);
+        }
+        b.build()
+    };
+    let tables = vec![vec![1.5, 0.5, 0.5, 1.5]];
+
+    for k in [2usize, 4] {
+        let mut g = build();
+        color_graph(&mut g);
+        assert!(validate_coloring(&mut g).is_ok());
+        let classes = color_classes(&mut g);
+        let sets = chromatic_sets(&classes, sweeps, 0);
+        let sched = SetScheduler::planned(
+            &sets,
+            g.num_vertices(),
+            |v| g.neighbors(v),
+            ConsistencyModel::Edge,
+        );
+        let upd = GibbsUpdate::new(2, Arc::new(tables.clone()), 4, 9);
+        let report = Program::new()
+            .update_fn(&upd)
+            .workers(4)
+            .model(ConsistencyModel::Full)
+            .ghost_staleness(1)
+            .ghost_batch(4)
+            .fault_plan(lossy_wire(777 + k as u64))
+            .run_on(&ChannelShardedEngine::new(k), &mut g, &sched, &Sdt::new());
+        assert_eq!(report.updates, 8 * sweeps as u64, "k={k}: sweep conservation");
+        let c = &report.contention;
+        assert!(c.faults_injected > 0, "k={k}: the wire must actually be lossy");
+        for v in 0..8u32 {
+            let total: u32 = g.vertex_data(v).counts.iter().sum();
+            assert_eq!(total as usize, sweeps, "k={k} vertex {v}: one sample per sweep");
+        }
+    }
+}
+
+// ---- snapshots + kill-one-shard recovery -----------------------------------
+
+struct SelfBump {
+    rounds: u64,
+}
+impl UpdateFn<u64, ()> for SelfBump {
+    fn update(&self, scope: &mut Scope<'_, u64, ()>, ctx: &mut UpdateContext<'_>) {
+        *scope.vertex_mut() += 1;
+        if *scope.vertex() < self.rounds {
+            ctx.add_task(scope.center(), 1.0);
+        }
+    }
+}
+
+fn chain(n: usize) -> DataGraph<u64, ()> {
+    let mut b: GraphBuilder<u64, ()> = GraphBuilder::new();
+    for _ in 0..n {
+        b.add_vertex(0u64);
+    }
+    for i in 0..n as u32 - 1 {
+        b.add_undirected(i, i + 1, (), ());
+    }
+    b.build()
+}
+
+fn seeded(n: usize, workers: usize) -> MultiQueueFifo {
+    let sched = MultiQueueFifo::new(n, workers);
+    for v in 0..n as u32 {
+        sched.add_task(Task::new(v));
+    }
+    sched
+}
+
+/// A healthy run with `snapshot_every` set captures complete epoch
+/// snapshots: every one holds all master rows, epochs ascend, and the
+/// counter in the report matches.
+#[test]
+fn snapshots_capture_every_master_row_per_epoch() {
+    let n = 16usize;
+    let rounds = 200u64;
+    let f = SelfBump { rounds };
+    let mut g = chain(n);
+    let report = Program::new()
+        .update_fn(&f)
+        .workers(2)
+        .model(ConsistencyModel::Full)
+        .ghost_staleness(4)
+        .ghost_batch(4)
+        .snapshot_every(500)
+        .run_on(&ChannelShardedEngine::new(2), &mut g, &seeded(n, 2), &Sdt::new());
+    assert_eq!(report.updates, n as u64 * rounds, "conservation");
+    assert!(!report.snapshots.is_empty(), "a 3200-update run passes epoch 500 several times");
+    assert_eq!(report.contention.snapshots_taken, report.snapshots.len() as u64);
+    let mut last_epoch = 0;
+    for snap in &report.snapshots {
+        assert!(snap.epoch() > last_epoch, "epochs strictly ascend");
+        last_epoch = snap.epoch();
+        assert_eq!(snap.rows(), n as u64, "a complete snapshot holds every master row");
+        let rows = snap.decode_rows::<u64>().expect("snapshot decodes");
+        for (v, _version, value) in rows {
+            assert!(value <= rounds, "vertex {v} row is a committed counter value");
+        }
+    }
+}
+
+/// The tentpole acceptance: kill one shard mid-run (its batched deltas are
+/// lost, the run stops as `ShardAborted`, every thread still joins — this
+/// test completing at all proves no hang), then restore the latest
+/// completed snapshot and re-run. The recovered run must reach exactly the
+/// sequential fixed point: every counter at `rounds`.
+#[test]
+fn kill_one_shard_then_restore_from_snapshot_reaches_sequential_result() {
+    let n = 16usize;
+    let rounds = 200u64;
+    let f = SelfBump { rounds };
+    let mut g = chain(n);
+
+    let crashed = Program::new()
+        .update_fn(&f)
+        .workers(2)
+        .model(ConsistencyModel::Full)
+        .ghost_staleness(4)
+        .ghost_batch(4)
+        .snapshot_every(100)
+        .abort_shard(1, 800)
+        .run_on(&ChannelShardedEngine::new(2), &mut g, &seeded(n, 2), &Sdt::new());
+    assert_eq!(crashed.stop, StopReason::ShardAborted, "the abort must surface");
+    assert!(
+        crashed.updates < n as u64 * rounds,
+        "the run died mid-flight: {} updates",
+        crashed.updates
+    );
+    assert!(
+        !crashed.snapshots.is_empty(),
+        "epochs completed before the abort: {crashed:?}"
+    );
+    let latest = crashed.snapshots.last().unwrap();
+    assert_eq!(latest.rows(), n as u64);
+
+    // Recovery: rewind the graph to the snapshot cut (shard 0's
+    // post-snapshot progress is rolled back too — the cut is global),
+    // then re-run the same program without the abort.
+    let restored = ShardedEngine::restore_from_snapshot(&mut g, latest);
+    assert_eq!(restored, n as u64);
+    for v in 0..n as u32 {
+        let row = *g.vertex_data(v);
+        assert!(row <= rounds, "restored row {v} = {row} is a committed value");
+    }
+
+    let recovered = Program::new()
+        .update_fn(&f)
+        .workers(2)
+        .model(ConsistencyModel::Full)
+        .ghost_staleness(4)
+        .ghost_batch(4)
+        .run_on(&ChannelShardedEngine::new(2), &mut g, &seeded(n, 2), &Sdt::new());
+    assert_ne!(recovered.stop, StopReason::ShardAborted);
+    for v in 0..n as u32 {
+        assert_eq!(
+            *g.vertex_data(v),
+            rounds,
+            "vertex {v}: restart-from-snapshot reaches the sequential result"
+        );
+    }
+}
+
+/// Recovery still works when the wire that killed the first run stays
+/// lossy for the second: restore + re-run over the same fault plan.
+#[test]
+fn restore_then_rerun_survives_a_still_lossy_wire() {
+    let n = 16usize;
+    let rounds = 200u64;
+    let f = SelfBump { rounds };
+    let mut g = chain(n);
+
+    let crashed = Program::new()
+        .update_fn(&f)
+        .workers(2)
+        .model(ConsistencyModel::Full)
+        .ghost_staleness(2)
+        .ghost_batch(4)
+        .fault_plan(lossy_wire(5150))
+        .snapshot_every(100)
+        .abort_shard(0, 600)
+        .run_on(&ChannelShardedEngine::new(2), &mut g, &seeded(n, 2), &Sdt::new());
+    assert_eq!(crashed.stop, StopReason::ShardAborted);
+    assert!(crashed.contention.faults_injected > 0);
+    assert!(!crashed.snapshots.is_empty());
+
+    ShardedEngine::restore_from_snapshot(&mut g, crashed.snapshots.last().unwrap());
+    let recovered = Program::new()
+        .update_fn(&f)
+        .workers(2)
+        .model(ConsistencyModel::Full)
+        .ghost_staleness(2)
+        .ghost_batch(4)
+        .fault_plan(lossy_wire(5151))
+        .run_on(&ChannelShardedEngine::new(2), &mut g, &seeded(n, 2), &Sdt::new());
+    assert!(recovered.contention.faults_injected > 0, "second wire is lossy too");
+    for v in 0..n as u32 {
+        assert_eq!(*g.vertex_data(v), rounds, "vertex {v}: recovered over a lossy wire");
+    }
+}
+
+/// Snapshots spill to `snapshot_dir` and round-trip through the file
+/// format bit-exactly — the on-disk copy IS the in-report snapshot.
+#[test]
+fn snapshot_dir_spills_files_that_read_back_exactly() {
+    let dir = std::env::temp_dir().join(format!("graphlab-fault-stress-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let n = 16usize;
+    let f = SelfBump { rounds: 200 };
+    let mut g = chain(n);
+    let report = Program::new()
+        .update_fn(&f)
+        .workers(2)
+        .model(ConsistencyModel::Full)
+        .ghost_staleness(4)
+        .ghost_batch(4)
+        .snapshot_every(500)
+        .snapshot_dir(&dir)
+        .run_on(&ChannelShardedEngine::new(2), &mut g, &seeded(n, 2), &Sdt::new());
+    assert!(!report.snapshots.is_empty());
+    for snap in &report.snapshots {
+        let path = dir.join(format!("snapshot-epoch-{}.bin", snap.epoch()));
+        assert!(path.exists(), "epoch {} spilled to disk", snap.epoch());
+        let read = Snapshot::read_file(&path).expect("snapshot file reads back");
+        assert_eq!(&read, snap, "epoch {}: disk copy is bit-exact", snap.epoch());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
