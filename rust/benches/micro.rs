@@ -14,6 +14,9 @@
 //!   acquisition including rollback — the price of a deferral) and the
 //!   per-vertex memory footprint vs the old `RwLock<()>` table;
 //! * end-to-end engine overhead per trivial update (1..4 workers);
+//! * **telemetry overhead**: the same threaded run with event rings +
+//!   sampler off vs on (CI gates on within 5% of off) —
+//!   results/BENCH_telemetry.json;
 //! * ghost-sync transport throughput: deltas/sec and bytes per delta for
 //!   the direct vs serialized-channel (raw and compressed "channel-z") vs
 //!   unix-socket backends at batch windows {1,16,64} —
@@ -22,7 +25,7 @@
 //!
 //! Output: bench table on stdout + results/micro.tsv +
 //! results/BENCH_locks.json + results/BENCH_sched.json +
-//! results/BENCH_transport.json.
+//! results/BENCH_transport.json + results/BENCH_telemetry.json.
 
 use graphlab::consistency::{ConsistencyModel, LockTable, Scope};
 use graphlab::engine::{Program, UpdateContext, UpdateFn};
@@ -364,6 +367,68 @@ fn main() {
         );
     }
 
+    // ---- telemetry overhead -------------------------------------------------
+    //
+    // The observability gate: the same threaded run with and without a
+    // `TelemetryConfig`. Disabled, every emit point is one thread-local
+    // read and a branch; enabled, a task span costs two clock reads and a
+    // ring write. Measured on an update with a small real compute kernel
+    // (a pure no-op would price the probes against nothing). CI gates the
+    // enabled run at >= 95% of the disabled throughput —
+    // results/BENCH_telemetry.json.
+    let mut telemetry_json: Vec<(String, f64)> = Vec::new();
+    {
+        use graphlab::telemetry::TelemetryConfig;
+        struct SmallKernel;
+        impl UpdateFn<u64, ()> for SmallKernel {
+            fn update(&self, scope: &mut Scope<'_, u64, ()>, _ctx: &mut UpdateContext<'_>) {
+                // A handful of LCG steps: enough arithmetic to resemble a
+                // cheap real update, small enough to stay probe-sensitive.
+                let mut acc = *scope.vertex() | 1;
+                for _ in 0..16 {
+                    acc = acc
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1442695040888963407);
+                }
+                *scope.vertex_mut() = acc;
+            }
+        }
+        let kernel = SmallKernel;
+        let run = |telemetry: bool| -> f64 {
+            let n = 65_536usize;
+            let mut g = ring(n, 4);
+            let sched = MultiQueueFifo::new(n, 4);
+            for v in 0..n as u32 {
+                sched.add_task(Task::new(v));
+            }
+            let mut program =
+                Program::new().update_fn(&kernel).workers(4).model(ConsistencyModel::Edge);
+            if telemetry {
+                program = program.telemetry(TelemetryConfig::default());
+            }
+            let timer = Timer::start();
+            let report = program.run_on(
+                &graphlab::engine::ThreadedEngine,
+                &mut g,
+                &sched,
+                &Sdt::new(),
+            );
+            report.updates as f64 / timer.elapsed_secs().max(1e-12)
+        };
+        run(false); // warm the allocator and the page cache
+        let off = run(false);
+        let on = run(true);
+        println!("{:<44} {:>12.0} (telemetry disabled)", "telemetry/off/4w", off);
+        println!(
+            "{:<44} {:>12.0} ({:+.1}% vs off)",
+            "telemetry/on/4w",
+            on,
+            100.0 * (on - off) / off.max(1e-12)
+        );
+        telemetry_json.push(("telemetry_off_tasks_per_sec".into(), off));
+        telemetry_json.push(("telemetry_on_tasks_per_sec".into(), on));
+    }
+
     // ---- sharding: edge-cut ratio + ghost-sync throughput -------------------
     //
     // The sharded-graph layer's two cost drivers: how many edges a k-way
@@ -662,4 +727,14 @@ fn main() {
     }
     writeln!(f, "}}").unwrap();
     println!("wrote results/BENCH_transport.json");
+
+    // Telemetry overhead JSON (off vs on tasks/sec; CI gates on <= 5%).
+    let mut f = std::fs::File::create("results/BENCH_telemetry.json").unwrap();
+    writeln!(f, "{{").unwrap();
+    for (i, (key, value)) in telemetry_json.iter().enumerate() {
+        let comma = if i + 1 == telemetry_json.len() { "" } else { "," };
+        writeln!(f, "  \"{key}\": {value:.0}{comma}").unwrap();
+    }
+    writeln!(f, "}}").unwrap();
+    println!("wrote results/BENCH_telemetry.json");
 }

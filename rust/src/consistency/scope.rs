@@ -301,6 +301,11 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
                     out.pulls += 1;
                     out.served += receipt.served as u64;
                     out.bytes += receipt.bytes;
+                    crate::telemetry::instant(
+                        crate::telemetry::EventKind::StalePull,
+                        u as u64,
+                        lag,
+                    );
                     // Re-measure after the pull: this is the staleness
                     // the update function actually reads. The held read
                     // lock freezes the master version, so anything above
@@ -317,6 +322,11 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
                         break now;
                     }
                     out.retries += 1;
+                    crate::telemetry::instant(
+                        crate::telemetry::EventKind::PullRetry,
+                        u as u64,
+                        attempts as u64,
+                    );
                     // Exponential spin backoff: deterministic (no sleeps,
                     // no clocks), bounded at ~32k spins per attempt.
                     for _ in 0..(32u32 << attempts.min(10)) {
@@ -326,6 +336,7 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
             } else {
                 lag
             };
+            crate::telemetry::observe_lag(observed);
             if observed > out.max_lag {
                 out.max_lag = observed;
             }

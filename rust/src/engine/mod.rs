@@ -208,7 +208,21 @@ pub struct EngineConfig {
     /// [`ContentionStats::pull_timeouts`]). A dead peer therefore delays
     /// admission, never hangs it.
     pub pull_retry_limit: u32,
+    /// Run-time telemetry: when set, the run records per-worker event
+    /// rings, samples a metric time series, and (per the config's paths)
+    /// exports a Chrome trace and a JSONL metrics stream into
+    /// [`RunReport::telemetry`]. `None` (default) = telemetry off, near
+    /// zero cost.
+    pub telemetry: Option<crate::telemetry::TelemetryConfig>,
+    /// App-supplied convergence scalar, probed by the telemetry sampler
+    /// once per sampling interval (e.g. a residual norm maintained by a
+    /// sync). Only observed when [`EngineConfig::telemetry`] is set.
+    pub progress_metric: Option<ProgressFn>,
 }
+
+/// The telemetry sampler's convergence-scalar hook: reads the SDT (where
+/// syncs publish aggregates) and returns the run's progress measure.
+pub type ProgressFn = std::sync::Arc<dyn Fn(&Sdt) -> f64 + Send + Sync>;
 
 impl Default for EngineConfig {
     fn default() -> Self {
@@ -228,6 +242,8 @@ impl Default for EngineConfig {
             snapshot_dir: None,
             abort_plan: None,
             pull_retry_limit: 8,
+            telemetry: None,
+            progress_metric: None,
         }
     }
 }
@@ -304,6 +320,19 @@ impl EngineConfig {
 
     pub fn with_pull_retry_limit(mut self, retries: u32) -> Self {
         self.pull_retry_limit = retries;
+        self
+    }
+
+    pub fn with_telemetry(mut self, cfg: crate::telemetry::TelemetryConfig) -> Self {
+        self.telemetry = Some(cfg);
+        self
+    }
+
+    pub fn with_progress_metric(
+        mut self,
+        f: impl Fn(&Sdt) -> f64 + Send + Sync + 'static,
+    ) -> Self {
+        self.progress_metric = Some(std::sync::Arc::new(f));
         self
     }
 }
@@ -440,6 +469,10 @@ pub struct RunReport {
     /// unless [`EngineConfig::snapshot_every`] was set on a sharded wire
     /// engine). The last entry is the newest recovery point.
     pub snapshots: Vec<Snapshot>,
+    /// Telemetry collected during the run: per-kind event counts, the
+    /// sampled metric time series, and the export paths actually written.
+    /// `None` when [`EngineConfig::telemetry`] was unset.
+    pub telemetry: Option<crate::telemetry::TelemetryReport>,
 }
 
 impl RunReport {
@@ -490,6 +523,18 @@ mod tests {
         assert!(d.snapshot_dir.is_none());
         assert!(d.abort_plan.is_none(), "no scripted crash by default");
         assert_eq!(d.pull_retry_limit, 8);
+        assert!(d.telemetry.is_none(), "telemetry off by default");
+        assert!(d.progress_metric.is_none());
+    }
+
+    #[test]
+    fn telemetry_builders() {
+        let c = EngineConfig::default()
+            .with_telemetry(crate::telemetry::TelemetryConfig::default().with_ring_capacity(64))
+            .with_progress_metric(|_sdt| 0.75);
+        assert_eq!(c.telemetry.as_ref().unwrap().ring_capacity, 64);
+        let sdt = Sdt::new();
+        assert_eq!((c.progress_metric.unwrap())(&sdt), 0.75);
     }
 
     #[test]

@@ -360,6 +360,28 @@ impl<'a, V, E> Program<'a, V, E> {
         self
     }
 
+    /// Enable the runtime-gated [telemetry](crate::telemetry) layer for
+    /// this program's runs: per-worker event rings, the fixed-interval
+    /// metrics sampler, and (when `cfg` carries paths) Chrome-trace /
+    /// JSONL export. The collected [`TelemetryReport`](crate::telemetry::TelemetryReport)
+    /// lands in `RunReport::telemetry` (see [`EngineConfig::telemetry`]).
+    pub fn telemetry(mut self, cfg: crate::telemetry::TelemetryConfig) -> Self {
+        self.config.telemetry = Some(cfg);
+        self
+    }
+
+    /// Register the app-supplied convergence scalar the telemetry sampler
+    /// probes each interval (e.g. residual norm or belief delta read from
+    /// the SDT); it lands in each sample's `progress` field (see
+    /// [`EngineConfig::progress_metric`]).
+    pub fn progress_metric(
+        mut self,
+        f: impl Fn(&Sdt) -> f64 + Send + Sync + 'static,
+    ) -> Self {
+        self.config.progress_metric = Some(std::sync::Arc::new(f));
+        self
+    }
+
     /// Sequential back-end: run on-demand syncs every N updates (0 = only
     /// at the end).
     pub fn sync_every(mut self, every: u64) -> Self {
@@ -645,6 +667,28 @@ mod tests {
                 "{name}: wire bytes"
             );
         }
+    }
+
+    /// `.telemetry(...)` + `.progress_metric(...)` flow through to the
+    /// run: the report carries a telemetry section whose task-span count
+    /// matches the update count and whose samples probed the hook.
+    #[test]
+    fn telemetry_flows_through_program() {
+        use crate::telemetry::{EventKind, TelemetryConfig};
+        let n = 16;
+        let f = Bump { rounds: 3 };
+        let program = Program::new()
+            .update_fn(&f)
+            .workers(1)
+            .telemetry(TelemetryConfig::default())
+            .progress_metric(|sdt: &Sdt| sdt.get_or::<f64>("resid", 0.5));
+        let mut g = ring(n);
+        let sdt = Sdt::new();
+        let report = program.run(&mut g, &seeded_fifo(n), &sdt);
+        let tel = report.telemetry.expect("telemetry enabled");
+        assert_eq!(tel.count(EventKind::TaskExec), report.updates);
+        assert!(!tel.samples.is_empty(), "at least one inline sample");
+        assert_eq!(tel.samples[0].progress, Some(0.5));
     }
 
     #[test]

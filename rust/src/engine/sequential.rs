@@ -12,7 +12,9 @@ use crate::consistency::Scope;
 use crate::graph::DataGraph;
 use crate::scheduler::Scheduler;
 use crate::sdt::{Sdt, SyncOp};
+use crate::telemetry::{self, EventKind, MonoClock, SampleSources, SpanStart, Telemetry};
 use crate::util::Timer;
+use std::time::Instant;
 
 /// Sequential engine. See module docs.
 pub struct SequentialEngine;
@@ -54,6 +56,30 @@ impl SequentialEngine {
         let mut syncs_run: u64 = 0;
         let mut stop = StopReason::SchedulerEmpty;
 
+        // Telemetry (one track — the engine IS the worker) plus the shared
+        // run clock: trace cost capture and telemetry task spans record the
+        // same [`SpanStart`] measurement on the same timeline.
+        let tel = config
+            .telemetry
+            .as_ref()
+            .map(|cfg| Telemetry::new(cfg.clone(), vec!["worker-0".to_string()]));
+        let clock = tel.as_ref().map(Telemetry::clock).unwrap_or_else(MonoClock::start);
+        let bind = tel.as_ref().map(|t| t.bind_worker(0));
+        let measure_cost = opts.capture_trace || tel.is_some();
+        let queue_depth = || scheduler.approx_len() as u64;
+        let retry_depth = || 0u64;
+        let progress_fn = config.progress_metric.clone();
+        let progress = progress_fn.as_ref().map(|f| move || f(sdt));
+        let sources = SampleSources {
+            queue_depth: &queue_depth,
+            retry_depth: &retry_depth,
+            progress: progress.as_ref().map(|f| f as &(dyn Fn() -> f64 + Sync)),
+        };
+        if let Some(t) = &tel {
+            t.sample_now(&sources);
+        }
+        let mut last_sample = Instant::now();
+
         let vworkers = opts.virtual_workers.max(1);
         let mut worker = 0usize;
         let mut idle_polls = 0u64;
@@ -79,13 +105,25 @@ impl SequentialEngine {
 
             let mut ctx = UpdateContext::new(sdt, worker);
             ctx.current_priority = task.priority;
-            let t0 = if opts.capture_trace { Some(Timer::start()) } else { None };
+            let t0 = measure_cost.then(|| SpanStart::begin(&clock));
             {
                 // Externally synchronized: single thread owns the graph.
                 let mut scope = Scope::unlocked(graph, task.vertex, config.model);
                 fns[task.func as usize].update(&mut scope, &mut ctx);
             }
-            let cost_ns = t0.map(|t| t.elapsed_ns()).unwrap_or(0);
+            // One measurement, two consumers: the trace event's cost and
+            // the telemetry task span carry identical numbers.
+            let (start_ns, cost_ns) =
+                t0.map(|t| t.finish(&clock)).unwrap_or((0, 0));
+            if tel.is_some() {
+                telemetry::span_at(
+                    EventKind::TaskExec,
+                    start_ns,
+                    cost_ns,
+                    task.vertex as u64,
+                    task.func as u64,
+                );
+            }
             let spawned = ctx.take_spawned();
             if opts.capture_trace {
                 trace.events.push(TraceEvent {
@@ -102,6 +140,14 @@ impl SequentialEngine {
             scheduler.task_done(task, worker);
             worker = (worker + 1) % vworkers;
             updates += 1;
+
+            if let Some(t) = &tel {
+                // Inline sampling: no threads in this back-end.
+                if last_sample.elapsed() >= t.sample_interval() {
+                    t.sample_now(&sources);
+                    last_sample = Instant::now();
+                }
+            }
 
             if let Some(max) = config.max_updates {
                 if updates >= max {
@@ -132,6 +178,10 @@ impl SequentialEngine {
             syncs_run += 1;
         }
 
+        if let Some(t) = &tel {
+            t.sample_now(&sources);
+        }
+        drop(bind);
         let report = RunReport {
             updates,
             wall_secs: timer.elapsed_secs(),
@@ -141,6 +191,7 @@ impl SequentialEngine {
             // single thread: scope conflicts cannot occur
             contention: ContentionStats::default(),
             snapshots: Vec::new(),
+            telemetry: tel.map(Telemetry::finish),
         };
         (report, trace)
     }
@@ -221,6 +272,40 @@ mod tests {
         }
         // trace causality: first event is the seeded vertex
         assert_eq!(trace.events[0].vertex, 0);
+    }
+
+    /// The trace's measured cost and the telemetry task span are the SAME
+    /// measurement: one [`SpanStart`] on the shared run clock feeds both,
+    /// so the numbers agree exactly, event for event.
+    #[test]
+    fn trace_cost_and_telemetry_span_agree_exactly() {
+        use crate::telemetry::TelemetryConfig;
+        let mut g = chain_graph(4);
+        let sched = FifoScheduler::new(4);
+        sched.add_task(Task::new(0));
+        let sdt = Sdt::new();
+        let f = Increment { bound: 3 };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let mut cfg = EngineConfig::sequential(ConsistencyModel::Edge);
+        cfg.telemetry = Some(TelemetryConfig::default());
+        let (report, trace) = SequentialEngine::run(
+            &mut g,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &cfg,
+            &SeqOptions { capture_trace: true, sync_every: 0, virtual_workers: 1 },
+        );
+        let tel = report.telemetry.expect("telemetry on");
+        let spans = tel.events_of(EventKind::TaskExec);
+        assert_eq!(spans.len() as u64, report.updates, "one span per update");
+        assert_eq!(spans.len(), trace.len());
+        for (span, ev) in spans.iter().zip(&trace.events) {
+            assert_eq!(span.dur_ns, ev.cost_ns, "one measurement, two consumers");
+            assert_eq!(span.a, ev.vertex as u64);
+        }
     }
 
     #[test]

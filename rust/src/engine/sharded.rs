@@ -66,6 +66,7 @@ use crate::consistency::{LockTable, Scope, SplitScope};
 use crate::graph::{DataGraph, ShardedGraph};
 use crate::scheduler::{Injector, Scheduler, Task, WorkStealingDeque};
 use crate::sdt::{Sdt, SyncOp};
+use crate::telemetry::{self, EventKind, SampleSources, Telemetry};
 use crate::transport::{
     ChannelTransport, DeltaBatcher, DirectTransport, FaultInjector, GhostTransport,
     SocketTransport, VertexCodec,
@@ -334,7 +335,10 @@ fn flush_window<V>(
     if batcher.is_empty() {
         return;
     }
+    let span = telemetry::span_start();
     let r = batcher.flush(shard, transport);
+    telemetry::span_end(EventKind::DeltaFlush, span, r.deltas, r.bytes);
+    telemetry::add_ghost_bytes(r.bytes);
     *deltas_sent += r.deltas;
     *ghost_syncs += r.replicas;
     *bytes_shipped += r.bytes;
@@ -473,6 +477,16 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     let defer_age: Vec<AtomicU32> =
         (0..graph.num_vertices()).map(|_| AtomicU32::new(0)).collect();
     let workers_remaining = AtomicUsize::new(workers);
+    // Telemetry: one ring per worker plus the "engine" control track the
+    // main thread binds during the final transport drain (so post-join
+    // wire applies are still recorded).
+    let tel = config.telemetry.as_ref().map(|cfg| {
+        let mut labels: Vec<String> = (0..workers)
+            .map(|w| format!("shard{}-worker{}", w / per_shard, w % per_shard))
+            .collect();
+        labels.push("engine".to_string());
+        Telemetry::new(cfg.clone(), labels)
+    });
 
     std::thread::scope(|s| {
         let has_periodic = syncs.iter().any(|op| op.interval.is_some());
@@ -494,6 +508,25 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                     }
                     std::thread::sleep(Duration::from_micros(200));
                 }
+            });
+        }
+
+        // Sampler thread: collapses the live ring counters into the metric
+        // time series until the last worker exits.
+        if let Some(t) = &tel {
+            let engine_done = &engine_done;
+            let pending_retries = &pending_retries;
+            s.spawn(move || {
+                let queue_depth = || scheduler.approx_len() as u64;
+                let retry_depth = || pending_retries.load(Ordering::Acquire) as u64;
+                let progress_fn = config.progress_metric.clone();
+                let progress = progress_fn.as_ref().map(|f| move || f(sdt));
+                let sources = SampleSources {
+                    queue_depth: &queue_depth,
+                    retry_depth: &retry_depth,
+                    progress: progress.as_ref().map(|f| f as &(dyn Fn() -> f64 + Sync)),
+                };
+                t.sample_loop(engine_done, &sources);
             });
         }
 
@@ -535,7 +568,9 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
             let locks = &locks;
             let transport = transport;
             let sharded = sharded;
+            let tel = &tel;
             s.spawn(move || {
+                let _tel_bind = tel.as_ref().map(|t| t.bind_worker(w));
                 let mut local_updates: u64 = 0;
                 let mut conflicts: u64 = 0;
                 let mut deferrals: u64 = 0;
@@ -605,6 +640,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                         let e = epoch_announced.load(Ordering::Acquire);
                         if e > my_snap_epoch && pending.is_none() {
                             my_snap_epoch = e;
+                            telemetry::instant(
+                                EventKind::SnapshotAdopt,
+                                e,
+                                my_shard as u64,
+                            );
                             flush_window(
                                 &mut batcher,
                                 my_shard,
@@ -615,8 +655,15 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                             );
                             ghost_syncs += transport.drain(my_shard).applied;
                             if shard_epoch[my_shard].fetch_max(e, Ordering::AcqRel) < e {
+                                let cap = telemetry::span_start();
                                 let (frames, rows) =
                                     capture_shard_part(graph, sharded, locks, my_shard, ctl);
+                                telemetry::span_end(
+                                    EventKind::SnapshotCapture,
+                                    cap,
+                                    e,
+                                    rows,
+                                );
                                 store.add_part(e, my_shard, frames, rows);
                             }
                         }
@@ -652,6 +699,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                                     // the remote half, defer the task.
                                     drop(split);
                                     deferrals += 1;
+                                    telemetry::instant(
+                                        EventKind::ScopeDefer,
+                                        task.vertex as u64,
+                                        0,
+                                    );
                                     defer_age[task.vertex as usize]
                                         .fetch_add(1, Ordering::Relaxed);
                                     pending_retries.fetch_add(1, Ordering::AcqRel);
@@ -784,6 +836,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                         let owner_shard = sharded.owner_of(task.vertex);
                         if owner_shard != my_shard {
                             handoffs += 1;
+                            telemetry::instant(
+                                EventKind::Handoff,
+                                task.vertex as u64,
+                                owner_shard as u64,
+                            );
                             flush_window(
                                 &mut batcher,
                                 my_shard,
@@ -809,12 +866,22 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                             {
                                 drop(split);
                                 deferrals += 1;
+                                telemetry::instant(
+                                    EventKind::ScopeDefer,
+                                    ptask.vertex as u64,
+                                    0,
+                                );
                                 defer_age[ptask.vertex as usize]
                                     .fetch_add(1, Ordering::Relaxed);
                                 pending_retries.fetch_add(1, Ordering::AcqRel);
                                 overflows[my_shard].push(ptask);
                             }
                             escalations += 1;
+                            telemetry::instant(
+                                EventKind::ScopeEscalate,
+                                task.vertex as u64,
+                                age as u64,
+                            );
                             run_now = Some((
                                 task,
                                 Scope::lock(graph, locks, task.vertex, config.model),
@@ -854,6 +921,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                                             // working.
                                             conflicts += 1;
                                             stalls += 1;
+                                            telemetry::instant(
+                                                EventKind::SplitStall,
+                                                task.vertex as u64,
+                                                my_shard as u64,
+                                            );
                                             pending = Some(PendingAcquire {
                                                 task,
                                                 split,
@@ -868,6 +940,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                                     // fail fast to a deferral.
                                     conflicts += 1;
                                     deferrals += 1;
+                                    telemetry::instant(
+                                        EventKind::ScopeDefer,
+                                        task.vertex as u64,
+                                        age as u64 + 1,
+                                    );
                                     defer_age[vidx].fetch_add(1, Ordering::Relaxed);
                                     pending_retries.fetch_add(1, Ordering::AcqRel);
                                     if from_retry {
@@ -882,8 +959,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                             }
                         } else {
                             // Interior path: the threaded engine's
-                            // adaptive non-blocking ladder.
+                            // adaptive non-blocking ladder. The contend
+                            // span clock starts at the first failed
+                            // attempt — clean acquires read no clock.
                             let mut scope = None;
+                            let mut contend = telemetry::SPAN_OFF;
                             for attempt in 0..attempts {
                                 match Scope::try_lock(
                                     graph,
@@ -897,16 +977,30 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                                     }
                                     Err(_) => {
                                         conflicts += 1;
+                                        if contend == telemetry::SPAN_OFF {
+                                            contend = telemetry::span_start();
+                                        }
                                         for _ in 0..(16u32 << attempt) {
                                             std::hint::spin_loop();
                                         }
                                     }
                                 }
                             }
+                            telemetry::span_end(
+                                EventKind::ScopeContend,
+                                contend,
+                                task.vertex as u64,
+                                scope.is_some() as u64,
+                            );
                             window_tasks += 1;
                             let Some(scope) = scope else {
                                 deferrals += 1;
                                 window_deferrals += 1;
+                                telemetry::instant(
+                                    EventKind::ScopeDefer,
+                                    task.vertex as u64,
+                                    age as u64 + 1,
+                                );
                                 defer_age[vidx].fetch_add(1, Ordering::Relaxed);
                                 pending_retries.fetch_add(1, Ordering::AcqRel);
                                 if from_retry {
@@ -966,6 +1060,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                         }
                     }
                     ctx.reset(w, task.priority);
+                    let exec = telemetry::span_start();
                     fns[task.func as usize].update(&mut scope, &mut ctx);
                     // Ghost propagation while the center write lock is
                     // still held: bump the master version, record the
@@ -990,6 +1085,12 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                         }
                     }
                     drop(scope);
+                    telemetry::span_end(
+                        EventKind::TaskExec,
+                        exec,
+                        task.vertex as u64,
+                        task.func as u64,
+                    );
                     ctx.drain_spawned(|t| scheduler.add_task(t));
                     scheduler.task_done(task, w);
                     inflight.fetch_sub(1, Ordering::AcqRel);
@@ -1092,13 +1193,17 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     // Final transport drain: every queued delta lands before the caller
     // regains exclusive access to the graph (no-op for direct backends).
     // `finalize` first blocks until asynchronous backends (reader threads,
-    // kernel buffers) have made every sent byte drainable.
+    // kernel buffers) have made every sent byte drainable. The main thread
+    // binds the "engine" control track so the wire applies recorded here —
+    // after every worker ring went quiet — are not lost.
+    let engine_bind = tel.as_ref().map(|t| t.bind_worker(workers));
     transport.finalize();
     let mut drained = 0u64;
     for shard in 0..k {
         drained += transport.drain(shard).applied;
     }
     total_ghost_syncs.fetch_add(drained, Ordering::AcqRel);
+    drop(engine_bind);
 
     for op in syncs {
         ThreadedEngine::locked_sync(graph, &locks, op, sdt);
@@ -1158,6 +1263,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
             per_worker_deferrals,
         },
         snapshots,
+        telemetry: tel.map(Telemetry::finish),
     }
 }
 

@@ -38,6 +38,7 @@ use crate::consistency::{LockTable, Scope};
 use crate::graph::DataGraph;
 use crate::scheduler::{Injector, Scheduler, Task, WorkStealingDeque};
 use crate::sdt::{Sdt, SyncOp};
+use crate::telemetry::{self, EventKind, SampleSources, Telemetry};
 use crate::util::Timer;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::time::Duration;
@@ -161,6 +162,14 @@ impl ThreadedEngine {
         // The last worker to exit flips `engine_done`, releasing the
         // background sync thread (the thread scope joins everything).
         let workers_remaining = AtomicUsize::new(workers);
+        // Telemetry: one ring per worker plus an "engine" control track
+        // (empty on this back-end — kept for track-layout uniformity with
+        // the sharded engine).
+        let tel = config.telemetry.as_ref().map(|cfg| {
+            let mut labels: Vec<String> = (0..workers).map(|w| format!("worker-{w}")).collect();
+            labels.push("engine".to_string());
+            Telemetry::new(cfg.clone(), labels)
+        });
 
         std::thread::scope(|s| {
             // Background sync thread (periodic ops only).
@@ -184,6 +193,25 @@ impl ThreadedEngine {
                 });
             }
 
+            // Sampler thread: collapses the live ring counters into the
+            // metric time series until the last worker exits.
+            if let Some(t) = &tel {
+                let engine_done = &engine_done;
+                let pending_retries = &pending_retries;
+                s.spawn(move || {
+                    let queue_depth = || scheduler.approx_len() as u64;
+                    let retry_depth = || pending_retries.load(Ordering::Acquire) as u64;
+                    let progress_fn = config.progress_metric.clone();
+                    let progress = progress_fn.as_ref().map(|f| move || f(sdt));
+                    let sources = SampleSources {
+                        queue_depth: &queue_depth,
+                        retry_depth: &retry_depth,
+                        progress: progress.as_ref().map(|f| f as &(dyn Fn() -> f64 + Sync)),
+                    };
+                    t.sample_loop(engine_done, &sources);
+                });
+            }
+
             for w in 0..workers {
                 let stop = &stop;
                 let inflight = &inflight;
@@ -202,7 +230,9 @@ impl ThreadedEngine {
                 let defer_age = &defer_age;
                 let workers_remaining = &workers_remaining;
                 let engine_done = &engine_done;
+                let tel = &tel;
                 s.spawn(move || {
+                    let _tel_bind = tel.as_ref().map(|t| t.bind_worker(w));
                     let mut local: u64 = 0;
                     let mut conflicts: u64 = 0;
                     let mut deferrals: u64 = 0;
@@ -334,8 +364,17 @@ impl ThreadedEngine {
                         let mut scope = None;
                         if age >= config.escalate_after {
                             escalations += 1;
+                            telemetry::instant(
+                                EventKind::ScopeEscalate,
+                                task.vertex as u64,
+                                age as u64,
+                            );
                             scope = Some(Scope::lock(graph, locks, task.vertex, config.model));
                         } else {
+                            // The contend span clock starts at the *first*
+                            // failed attempt — a clean acquire costs no
+                            // clock read.
+                            let mut contend = telemetry::SPAN_OFF;
                             for attempt in 0..attempts {
                                 match Scope::try_lock(graph, locks, task.vertex, config.model)
                                 {
@@ -345,12 +384,21 @@ impl ThreadedEngine {
                                     }
                                     Err(_) => {
                                         conflicts += 1;
+                                        if contend == telemetry::SPAN_OFF {
+                                            contend = telemetry::span_start();
+                                        }
                                         for _ in 0..(16u32 << attempt) {
                                             std::hint::spin_loop();
                                         }
                                     }
                                 }
                             }
+                            telemetry::span_end(
+                                EventKind::ScopeContend,
+                                contend,
+                                task.vertex as u64,
+                                scope.is_some() as u64,
+                            );
                         }
                         window_tasks += 1;
                         let Some(mut scope) = scope else {
@@ -359,6 +407,11 @@ impl ThreadedEngine {
                             // while it waits.
                             deferrals += 1;
                             window_deferrals += 1;
+                            telemetry::instant(
+                                EventKind::ScopeDefer,
+                                task.vertex as u64,
+                                age as u64 + 1,
+                            );
                             defer_age[vidx].fetch_add(1, Ordering::Relaxed);
                             pending_retries.fetch_add(1, Ordering::AcqRel);
                             if from_retry {
@@ -394,8 +447,15 @@ impl ThreadedEngine {
                         }
 
                         ctx.reset(w, task.priority);
+                        let exec = telemetry::span_start();
                         fns[task.func as usize].update(&mut scope, &mut ctx);
                         drop(scope); // scope locks released before flushing tasks
+                        telemetry::span_end(
+                            EventKind::TaskExec,
+                            exec,
+                            task.vertex as u64,
+                            task.func as u64,
+                        );
                         ctx.drain_spawned(|t| scheduler.add_task(t));
                         scheduler.task_done(task, w);
                         inflight.fetch_sub(1, Ordering::AcqRel);
@@ -468,6 +528,7 @@ impl ThreadedEngine {
                 ..ContentionStats::default()
             },
             snapshots: Vec::new(),
+            telemetry: tel.map(Telemetry::finish),
         }
     }
 
@@ -764,6 +825,43 @@ mod tests {
         assert_eq!(report.contention.escalations, report.updates);
         assert_eq!(report.contention.deferrals, 0, "blocking path never defers");
         assert_eq!(report.contention.conflicts, 0, "blocking path skips the try ladder");
+    }
+
+    /// Telemetry conservation on the threaded back-end: exactly one task
+    /// span per executed update, one defer/escalate instant per counted
+    /// deferral/escalation, and the sampler produced a series.
+    #[test]
+    fn telemetry_spans_conserve_update_count() {
+        use crate::telemetry::TelemetryConfig;
+        let n = 32;
+        let (g, locks) = ring(n);
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let sdt = Sdt::new();
+        let f = SelfBump { rounds: 10 };
+        let fns: Vec<&dyn UpdateFn<u64, ()>> = vec![&f];
+        let report = ThreadedEngine::run(
+            &g,
+            &locks,
+            &sched,
+            &fns,
+            &sdt,
+            &[],
+            &[],
+            &EngineConfig::default()
+                .with_workers(4)
+                .with_model(ConsistencyModel::Full)
+                .with_telemetry(TelemetryConfig::default()),
+        );
+        assert_eq!(report.updates, n as u64 * 10);
+        let tel = report.telemetry.expect("telemetry enabled");
+        assert_eq!(tel.count(EventKind::TaskExec), report.updates);
+        assert_eq!(tel.count(EventKind::ScopeDefer), report.contention.deferrals);
+        assert_eq!(tel.count(EventKind::ScopeEscalate), report.contention.escalations);
+        assert!(tel.samples.len() >= 2, "first + final sample");
+        assert_eq!(tel.tracks.len(), 5, "4 worker rings + engine control track");
     }
 
     // The contended-hub scenario (nonzero deferrals under Full consistency,

@@ -14,6 +14,10 @@ pub struct TraceEvent {
     /// Priority the task carried when executed.
     pub priority: f64,
     /// Measured execution cost in nanoseconds (scope-locked region only).
+    /// Captured with a [`crate::telemetry::SpanStart`] on the engine's run
+    /// clock; when run-level telemetry is enabled the identical
+    /// measurement is also recorded as the update's `task` span, so trace
+    /// costs and Perfetto slice durations agree exactly.
     pub cost_ns: u64,
     /// Tasks spawned by this update (pre-deduplication).
     pub spawned: Vec<Task>,

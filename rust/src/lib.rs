@@ -13,7 +13,9 @@
 //!   distributed-style locking, pluggable ghost-sync
 //!   [transport](transport) with delta batching and bounded staleness)
 //!   and sequential [engines](engine) behind
-//!   the [`engine::Program`] front-end, the [multicore simulator](sim), and
+//!   the [`engine::Program`] front-end, the runtime-gated [telemetry]
+//!   layer (per-worker event rings, time-series sampler, Perfetto/JSONL
+//!   export), the [multicore simulator](sim), and
 //!   the paper's five
 //!   case-study [applications](apps) with synthetic [workloads](datagen) and
 //!   [baselines](baselines).
@@ -36,5 +38,6 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sdt;
 pub mod sim;
+pub mod telemetry;
 pub mod transport;
 pub mod util;

@@ -207,6 +207,22 @@ pub fn run_summary(report: &crate::engine::RunReport) -> String {
             c.auto_steal_half_flips
         );
     }
+    if let Some(t) = &report.telemetry {
+        let _ = writeln!(
+            out,
+            "telemetry: {} events recorded ({} dropped), {} samples, {} tracks",
+            t.events_recorded,
+            t.events_dropped,
+            t.samples.len(),
+            t.tracks.len()
+        );
+        if let Some(p) = &t.trace_path {
+            let _ = writeln!(out, "telemetry: chrome trace written to {}", p.display());
+        }
+        if let Some(p) = &t.metrics_path {
+            let _ = writeln!(out, "telemetry: metric samples written to {}", p.display());
+        }
+    }
     let _ = writeln!(out, "{:>8} {:>12} {:>12} {:>12}", "worker", "updates", "conflicts", "deferrals");
     for (w, &u) in report.per_worker.iter().enumerate() {
         let conflicts = c.per_worker_conflicts.get(w).copied().unwrap_or(0);
@@ -282,6 +298,7 @@ mod tests {
                 ..Default::default()
             },
             snapshots: Vec::new(),
+            telemetry: None,
         };
         let text = run_summary(&report);
         assert!(text.contains("1000 updates"));
@@ -309,6 +326,7 @@ mod tests {
                 ..Default::default()
             },
             snapshots: Vec::new(),
+            telemetry: None,
         };
         let text = run_summary(&report);
         assert!(
@@ -340,6 +358,7 @@ mod tests {
                 ..Default::default()
             },
             snapshots: Vec::new(),
+            telemetry: None,
         };
         let text = run_summary(&report);
         assert!(text.contains("4 shards"));
@@ -366,6 +385,7 @@ mod tests {
             syncs_run: 0,
             contention: crate::engine::ContentionStats::default(),
             snapshots: Vec::new(),
+            telemetry: None,
         };
         let text = run_summary(&report);
         assert!(!text.contains("transport:"), "unsharded run hides transport line");
@@ -395,6 +415,7 @@ mod tests {
                 ..Default::default()
             },
             snapshots: Vec::new(),
+            telemetry: None,
         };
         let text = run_summary(&report);
         assert!(!text.contains("faults:"), "clean run hides the fault line");
@@ -420,6 +441,92 @@ mod tests {
         report.contention.shards = 0;
         let text = run_summary(&report);
         assert!(!text.contains("faults:"), "fault line is shard-gated");
+    }
+
+    /// Every numeric `ContentionStats` counter must surface in the
+    /// summary text once its gating lines are open: seed each field with
+    /// a distinct magic value, open every gate, and require each value
+    /// verbatim in the rendered block. A counter the engines maintain but
+    /// the summary never prints would fail here — that is how the
+    /// fault-transport counters (`pull_timeouts`, `reconnect_backoffs`)
+    /// stay visible.
+    #[test]
+    fn run_summary_renders_every_nonzero_contention_field() {
+        let c = crate::engine::ContentionStats {
+            conflicts: 4001,
+            deferrals: 4002,
+            retries: 4003,
+            steals: 4004,
+            escalations: 4005,
+            affinity_hits: 4006,
+            has_owner_map: true,
+            shards: 4007,
+            ghost_syncs: 4008,
+            boundary_updates: 4009,
+            handoffs: 4010,
+            pipelined_stalls: 4011,
+            deltas_sent: 4012,
+            deltas_coalesced: 4013,
+            bytes_shipped: 4014,
+            staleness_pulls: 4015,
+            pulls_served: 4016,
+            backpressure_stalls: 4017,
+            max_ghost_staleness: 4018,
+            auto_steal_half_flips: 4019,
+            faults_injected: 4020,
+            pull_retries: 4021,
+            pull_timeouts: 4022,
+            reconnect_backoffs: 4023,
+            snapshots_taken: 4024,
+            per_worker_conflicts: vec![4025, 4026],
+            per_worker_deferrals: vec![4027, 4028],
+        };
+        let report = crate::engine::RunReport {
+            updates: 10000,
+            wall_secs: 0.5,
+            stop: crate::engine::StopReason::SchedulerEmpty,
+            per_worker: vec![6000, 4000],
+            syncs_run: 1,
+            contention: c,
+            snapshots: Vec::new(),
+            telemetry: None,
+        };
+        let text = run_summary(&report);
+        for magic in 4001..=4028u64 {
+            assert!(
+                text.contains(&magic.to_string()),
+                "counter value {magic} missing from summary:\n{text}"
+            );
+        }
+    }
+
+    /// The telemetry block renders only when the run carried a report,
+    /// and names the export files it actually wrote.
+    #[test]
+    fn run_summary_renders_telemetry_section_when_present() {
+        let mut report = crate::engine::RunReport {
+            updates: 10,
+            wall_secs: 0.1,
+            stop: crate::engine::StopReason::SchedulerEmpty,
+            per_worker: vec![10],
+            syncs_run: 0,
+            contention: crate::engine::ContentionStats::default(),
+            snapshots: Vec::new(),
+            telemetry: None,
+        };
+        assert!(!run_summary(&report).contains("telemetry:"), "off -> no line");
+        let tel = crate::telemetry::Telemetry::new(
+            crate::telemetry::TelemetryConfig::default(),
+            vec!["worker-0".into()],
+        );
+        {
+            let _bind = tel.bind_worker(0);
+            crate::telemetry::instant(crate::telemetry::EventKind::TaskExec, 0, 0);
+        }
+        report.telemetry = Some(tel.finish());
+        let text = run_summary(&report);
+        assert!(text.contains("telemetry: 1 events recorded (0 dropped)"));
+        assert!(!text.contains("chrome trace"), "no export configured");
     }
 
     #[test]

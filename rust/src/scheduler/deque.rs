@@ -281,7 +281,12 @@ impl<T: PackWords> Injector<T> {
     }
 
     fn spill(&self, value: T) {
-        self.overflow_len.fetch_add(1, Ordering::AcqRel);
+        let depth = self.overflow_len.fetch_add(1, Ordering::AcqRel) + 1;
+        crate::telemetry::instant(
+            crate::telemetry::EventKind::InjectorOverflow,
+            depth as u64,
+            self.slots.len() as u64,
+        );
         self.overflow.lock().unwrap().push_back(value);
     }
 

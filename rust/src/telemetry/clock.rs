@@ -1,0 +1,95 @@
+//! The telemetry **monotonic clock**: one [`Instant`] origin per run, all
+//! timestamps expressed as nanoseconds since that origin. Every timing the
+//! engine takes — ring span events, sampler tick stamps, and the
+//! sequential engine's [`crate::engine::trace::TraceEvent`] cost
+//! measurement — derives from the same [`MonoClock`], so a simulator
+//! replay and a telemetry trace of the same run can never disagree about
+//! what a task cost.
+
+use std::time::Instant;
+
+/// A monotonic run clock: nanoseconds since a fixed [`Instant`] origin.
+/// Copyable, so the one origin can be handed to every worker and helper
+/// that needs to stamp an event on the same timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct MonoClock {
+    origin: Instant,
+}
+
+impl MonoClock {
+    /// Start a new clock at "now".
+    pub fn start() -> MonoClock {
+        MonoClock { origin: Instant::now() }
+    }
+
+    /// Rebuild a clock from an existing origin (shares a timeline).
+    pub(crate) fn from_origin(origin: Instant) -> MonoClock {
+        MonoClock { origin }
+    }
+
+    /// The shared origin instant.
+    pub(crate) fn origin(&self) -> Instant {
+        self.origin
+    }
+
+    /// Nanoseconds elapsed since the origin.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// A span in flight on a [`MonoClock`] timeline: the start stamp of a
+/// timed region. This is the one span helper both the telemetry rings and
+/// the sequential engine's trace cost measurement ride (see
+/// [`crate::engine::trace`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanStart {
+    start_ns: u64,
+}
+
+impl SpanStart {
+    /// Open a span at the clock's current time.
+    #[inline]
+    pub fn begin(clock: &MonoClock) -> SpanStart {
+        SpanStart { start_ns: clock.now_ns() }
+    }
+
+    /// The span's opening timestamp (ns since the clock origin).
+    #[inline]
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
+    }
+
+    /// Close the span: `(start_ns, duration_ns)` against the same clock.
+    #[inline]
+    pub fn finish(&self, clock: &MonoClock) -> (u64, u64) {
+        let now = clock.now_ns();
+        (self.start_ns, now.saturating_sub(self.start_ns))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotone() {
+        let c = MonoClock::start();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a, "monotonic clock must never step back");
+    }
+
+    #[test]
+    fn span_measures_on_the_shared_timeline() {
+        let c = MonoClock::start();
+        let s = SpanStart::begin(&c);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let (start, dur) = s.finish(&c);
+        assert_eq!(start, s.start_ns());
+        assert!(dur >= 1_000_000, "a 2ms sleep must cost at least 1ms");
+        let copy = MonoClock::from_origin(c.origin());
+        assert!(copy.now_ns() >= start + dur, "same origin, same timeline");
+    }
+}

@@ -1,0 +1,298 @@
+//! Telemetry **exporters**, both hand-written (the crate deliberately has
+//! no JSON dependency):
+//!
+//! * [`write_chrome_trace`] — Chrome `trace_event` JSON, loadable in
+//!   Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`: one
+//!   track (`tid`) per worker ring, spans as `"X"` complete events,
+//!   instants as `"i"` events, and cross-shard delta→apply edges as
+//!   `"s"`/`"f"` async flow arrows paired by `(vertex, version)`.
+//!   `wire_send`/`wire_apply` instants are widened to 1µs `"X"` slices so
+//!   the flow arrows have slices to anchor to. Within a track every
+//!   slice/instant is written in non-decreasing `ts` order.
+//! * [`write_metrics_jsonl`] — one JSON object per line per
+//!   [`MetricSample`], ready for `jq`/pandas.
+
+use super::ring::{Event, EventKind, ALL_KINDS};
+use super::sampler::MetricSample;
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Escape a string for a JSON string literal (labels are the only
+/// caller-controlled strings in the trace).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Microseconds (3 decimals — full ns precision) for a ns timestamp.
+fn us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1e3)
+}
+
+fn ensure_parent(path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    Ok(())
+}
+
+fn kind_of(ev: &Event) -> EventKind {
+    ALL_KINDS[ev.kind as usize]
+}
+
+/// Write `tracks` (label + time-sorted events per ring) as Chrome
+/// `trace_event` JSON. `flow_cap` bounds the delta→apply arrow count.
+pub(crate) fn write_chrome_trace(
+    path: &Path,
+    tracks: &[(String, Vec<Event>)],
+    flow_cap: usize,
+) -> std::io::Result<()> {
+    ensure_parent(path)?;
+    let mut out = BufWriter::new(File::create(path)?);
+    out.write_all(b"{\"traceEvents\":[\n")?;
+    let mut first = true;
+    let mut emit = |out: &mut BufWriter<File>, line: &str| -> std::io::Result<()> {
+        if first {
+            first = false;
+        } else {
+            out.write_all(b",\n")?;
+        }
+        out.write_all(line.as_bytes())
+    };
+    emit(
+        &mut out,
+        "{\"ph\":\"M\",\"pid\":0,\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"graphlab\"}}",
+    )?;
+    for (tid, (label, _)) in tracks.iter().enumerate() {
+        emit(
+            &mut out,
+            &format!(
+                "{{\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                escape(label)
+            ),
+        )?;
+    }
+    for (tid, (_, events)) in tracks.iter().enumerate() {
+        for ev in events {
+            let kind = kind_of(ev);
+            let (name, cat) = (kind.name(), kind.category());
+            let args = format!("{{\"a\":{},\"b\":{}}}", ev.a, ev.b);
+            let line = if kind.is_span() {
+                format!(
+                    "{{\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\"ts\":{},\"dur\":{},\
+                     \"name\":\"{name}\",\"cat\":\"{cat}\",\"args\":{args}}}",
+                    us(ev.t_ns),
+                    us(ev.dur_ns.max(1)),
+                )
+            } else if matches!(kind, EventKind::WireSend | EventKind::WireApply) {
+                // Widened to a 1µs slice so flow arrows have an anchor.
+                format!(
+                    "{{\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\"ts\":{},\"dur\":1.000,\
+                     \"name\":\"{name}\",\"cat\":\"{cat}\",\"args\":{args}}}",
+                    us(ev.t_ns),
+                )
+            } else {
+                format!(
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{tid},\"ts\":{},\
+                     \"name\":\"{name}\",\"cat\":\"{cat}\",\"args\":{args}}}",
+                    us(ev.t_ns),
+                )
+            };
+            emit(&mut out, &line)?;
+        }
+    }
+    // Cross-shard delta→apply flow arrows: pair the first send of a
+    // (vertex, version) with its first not-earlier apply on another
+    // track.
+    let mut sends: HashMap<(u64, u64), (usize, u64)> = HashMap::new();
+    for (tid, (_, events)) in tracks.iter().enumerate() {
+        for ev in events {
+            if kind_of(ev) == EventKind::WireSend {
+                sends.entry((ev.a, ev.b)).or_insert((tid, ev.t_ns));
+            }
+        }
+    }
+    let mut arrows = 0usize;
+    'outer: for (tid, (_, events)) in tracks.iter().enumerate() {
+        for ev in events {
+            if kind_of(ev) != EventKind::WireApply {
+                continue;
+            }
+            let Some(&(src_tid, src_ns)) = sends.get(&(ev.a, ev.b)) else { continue };
+            if src_tid == tid || ev.t_ns < src_ns {
+                continue;
+            }
+            sends.remove(&(ev.a, ev.b));
+            emit(
+                &mut out,
+                &format!(
+                    "{{\"ph\":\"s\",\"id\":{arrows},\"pid\":0,\"tid\":{src_tid},\
+                     \"ts\":{},\"name\":\"delta\",\"cat\":\"wire\"}}",
+                    us(src_ns),
+                ),
+            )?;
+            emit(
+                &mut out,
+                &format!(
+                    "{{\"ph\":\"f\",\"bp\":\"e\",\"id\":{arrows},\"pid\":0,\"tid\":{tid},\
+                     \"ts\":{},\"name\":\"delta\",\"cat\":\"wire\"}}",
+                    us(ev.t_ns),
+                ),
+            )?;
+            arrows += 1;
+            if arrows >= flow_cap {
+                break 'outer;
+            }
+        }
+    }
+    out.write_all(b"\n]}\n")?;
+    out.flush()
+}
+
+/// Write the sampled time series as JSONL: one object per sample.
+pub(crate) fn write_metrics_jsonl(
+    path: &Path,
+    samples: &[MetricSample],
+) -> std::io::Result<()> {
+    ensure_parent(path)?;
+    let mut out = BufWriter::new(File::create(path)?);
+    for s in samples {
+        let hist: Vec<String> = s.lag_hist.iter().map(u64::to_string).collect();
+        let progress = match s.progress {
+            Some(p) if p.is_finite() => format!("{p}"),
+            _ => "null".to_string(),
+        };
+        writeln!(
+            out,
+            "{{\"t_ms\":{:.3},\"tasks\":{},\"tasks_per_sec\":{:.3},\
+             \"queue_depth\":{},\"retry_depth\":{},\"ghost_bytes\":{},\
+             \"lag_hist\":[{}],\"progress\":{}}}",
+            s.t_ms,
+            s.tasks,
+            s.tasks_per_sec,
+            s.queue_depth,
+            s.retry_depth,
+            s.ghost_bytes,
+            hist.join(","),
+            progress,
+        )?;
+    }
+    out.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::ring::LAG_BUCKETS;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("graphlab-telemetry-{}-{name}", std::process::id()))
+    }
+
+    fn ev(kind: EventKind, t_ns: u64, dur_ns: u64, a: u64, b: u64) -> Event {
+        Event { kind: kind as u8, t_ns, dur_ns, a, b }
+    }
+
+    #[test]
+    fn chrome_trace_structure_and_flow_arrows() {
+        let tracks = vec![
+            (
+                "worker-0".to_string(),
+                vec![
+                    ev(EventKind::TaskExec, 1_000, 2_000, 5, 0),
+                    ev(EventKind::WireSend, 4_000, 0, 7, 3),
+                ],
+            ),
+            (
+                "worker-1".to_string(),
+                vec![
+                    ev(EventKind::ScopeDefer, 2_000, 0, 9, 1),
+                    ev(EventKind::WireApply, 9_000, 0, 7, 3),
+                ],
+            ),
+        ];
+        let path = tmp("trace.json");
+        write_chrome_trace(&path, &tracks, 16).expect("trace export");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\"traceEvents\":[\n"));
+        assert!(text.trim_end().ends_with("]}"));
+        assert!(text.contains("\"thread_name\""), "track metadata present");
+        assert!(text.contains("\"name\":\"worker-1\""));
+        assert!(text.contains("\"ph\":\"X\"") && text.contains("\"name\":\"task\""));
+        assert!(text.contains("\"ph\":\"i\"") && text.contains("\"name\":\"scope_defer\""));
+        assert!(text.contains("\"ph\":\"s\""), "flow start for the delta edge");
+        assert!(text.contains("\"ph\":\"f\""), "flow finish for the delta edge");
+        assert_eq!(text.matches("\"id\":0").count(), 2, "one arrow, both endpoints");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flow_cap_bounds_the_arrow_count() {
+        let sends: Vec<Event> =
+            (0..10).map(|i| ev(EventKind::WireSend, 10 * i, 0, i, 1)).collect();
+        let applies: Vec<Event> =
+            (0..10).map(|i| ev(EventKind::WireApply, 1_000 + 10 * i, 0, i, 1)).collect();
+        let tracks = vec![("a".to_string(), sends), ("b".to_string(), applies)];
+        let path = tmp("trace-cap.json");
+        write_chrome_trace(&path, &tracks, 3).expect("trace export");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.matches("\"ph\":\"s\"").count(), 3, "arrows capped");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn metrics_jsonl_one_object_per_sample() {
+        let samples = vec![
+            MetricSample {
+                t_ms: 0.5,
+                tasks: 0,
+                tasks_per_sec: 0.0,
+                queue_depth: 10,
+                retry_depth: 0,
+                ghost_bytes: 0,
+                lag_hist: [0; LAG_BUCKETS],
+                progress: None,
+            },
+            MetricSample {
+                t_ms: 10.5,
+                tasks: 100,
+                tasks_per_sec: 10_000.0,
+                queue_depth: 4,
+                retry_depth: 2,
+                ghost_bytes: 640,
+                lag_hist: [1, 2, 0, 0, 0, 0, 0, 0],
+                progress: Some(0.25),
+            },
+        ];
+        let path = tmp("metrics.jsonl");
+        write_metrics_jsonl(&path, &samples).expect("metrics export");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"progress\":null"));
+        assert!(lines[1].contains("\"progress\":0.25"));
+        assert!(lines[1].contains("\"lag_hist\":[1,2,0,0,0,0,0,0]"));
+        assert!(lines[1].contains("\"ghost_bytes\":640"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        assert_eq!(escape("worker \"0\"\\n"), "worker \\\"0\\\"\\\\n");
+        assert_eq!(escape("tab\tend"), "tab\\u0009end");
+    }
+}

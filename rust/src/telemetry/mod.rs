@@ -1,0 +1,500 @@
+//! **Engine telemetry**: always-compiled, runtime-gated tracing for every
+//! engine back-end.
+//!
+//! Three pieces (see `docs/ARCHITECTURE.md` § Observability):
+//!
+//! * [`ring`] — per-worker bounded lock-free event rings of timestamped
+//!   spans and instants ([`EventKind`] is the taxonomy), with a drop
+//!   counter on overflow and per-kind atomic counts the sampler reads
+//!   live;
+//! * [`sampler`] — fixed-interval collapse of the rings into a
+//!   [`MetricSample`] time series (tasks/sec, queue/retry depth, ghost
+//!   bytes, staleness distribution, and the app's convergence scalar via
+//!   [`Program::progress_metric`](crate::engine::Program::progress_metric));
+//! * [`export`] — Chrome `trace_event` JSON (one track per worker, async
+//!   arrows for cross-shard delta→apply edges; loadable in Perfetto or
+//!   `chrome://tracing`) plus a JSONL metrics stream.
+//!
+//! The whole subsystem is off unless the run carries a
+//! [`TelemetryConfig`] (via
+//! [`Program::telemetry`](crate::engine::Program::telemetry)): engines
+//! then build one [`Telemetry`] per run, bind each worker thread to its
+//! ring, and the emit points scattered through the engines, scheduler,
+//! scope admission, and transports record through a thread-local binding
+//! — a disabled run allocates nothing and every emit call collapses to
+//! one thread-local read and a branch.
+
+pub mod clock;
+pub mod export;
+pub mod ring;
+pub mod sampler;
+
+pub use clock::{MonoClock, SpanStart};
+pub use ring::{Event, EventKind, WorkerRing, ALL_KINDS, KIND_COUNT, LAG_BUCKETS};
+pub use sampler::{MetricSample, SampleSources};
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Runtime telemetry knobs, handed to
+/// [`Program::telemetry`](crate::engine::Program::telemetry). Presence of
+/// a config is the enable switch — a run without one pays nothing.
+#[derive(Clone, Debug)]
+pub struct TelemetryConfig {
+    /// Events retained per worker ring; overflow drops (counted).
+    pub ring_capacity: usize,
+    /// Sampler cadence (a first and a final sample always happen, so even
+    /// runs shorter than one interval produce a usable series).
+    pub sample_interval: Duration,
+    /// When set, the run writes a Chrome `trace_event` JSON file here.
+    pub trace_path: Option<PathBuf>,
+    /// When set, the run writes the metric samples as JSONL here.
+    pub metrics_path: Option<PathBuf>,
+    /// Cap on exported delta→apply flow arrows (bounds trace file size).
+    pub flow_arrow_cap: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            ring_capacity: 1 << 15,
+            sample_interval: Duration::from_millis(10),
+            trace_path: None,
+            metrics_path: None,
+            flow_arrow_cap: 2048,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    /// Set the per-worker ring capacity (events).
+    pub fn with_ring_capacity(mut self, events: usize) -> Self {
+        self.ring_capacity = events;
+        self
+    }
+
+    /// Set the sampler cadence.
+    pub fn with_sample_interval(mut self, interval: Duration) -> Self {
+        self.sample_interval = interval;
+        self
+    }
+
+    /// Write a Chrome `trace_event` JSON file at run end.
+    pub fn with_trace_path(mut self, path: PathBuf) -> Self {
+        self.trace_path = Some(path);
+        self
+    }
+
+    /// Write the metric samples as JSONL at run end.
+    pub fn with_metrics_path(mut self, path: PathBuf) -> Self {
+        self.metrics_path = Some(path);
+        self
+    }
+
+    /// Cap exported delta→apply flow arrows.
+    pub fn with_flow_arrow_cap(mut self, arrows: usize) -> Self {
+        self.flow_arrow_cap = arrows;
+        self
+    }
+}
+
+/// What a worker thread's emit calls resolve against: its ring and the
+/// run clock origin.
+#[derive(Clone, Copy)]
+struct Bound {
+    ring: *const WorkerRing,
+    origin: Instant,
+}
+
+thread_local! {
+    static CURRENT: Cell<Option<Bound>> = const { Cell::new(None) };
+}
+
+/// Sentinel [`span_start`] returns when telemetry is unbound on this
+/// thread; [`span_end`] treats it as "no span open".
+pub const SPAN_OFF: u64 = u64::MAX;
+
+/// Open a span: the current run-clock time, or [`SPAN_OFF`] when this
+/// thread has no telemetry binding (the disabled fast path: one
+/// thread-local read and a branch).
+#[inline]
+pub fn span_start() -> u64 {
+    CURRENT.with(|c| match c.get() {
+        Some(b) => b.origin.elapsed().as_nanos() as u64,
+        None => SPAN_OFF,
+    })
+}
+
+/// Close a span opened by [`span_start`] and record it.
+#[inline]
+pub fn span_end(kind: EventKind, start_ns: u64, a: u64, b: u64) {
+    if start_ns == SPAN_OFF {
+        return;
+    }
+    CURRENT.with(|c| {
+        if let Some(bound) = c.get() {
+            let now = bound.origin.elapsed().as_nanos() as u64;
+            // SAFETY: the binding guard keeps the ring alive and bound to
+            // this thread (see `WorkerBinding`).
+            let ring = unsafe { &*bound.ring };
+            ring.push(Event {
+                kind: kind as u8,
+                t_ns: start_ns,
+                dur_ns: now.saturating_sub(start_ns),
+                a,
+                b,
+            });
+        }
+    });
+}
+
+/// Record a span whose timing was measured externally on the same run
+/// clock (the sequential engine's trace-cost path: one measurement feeds
+/// both the [`crate::engine::trace::TraceEvent`] and this ring).
+#[inline]
+pub fn span_at(kind: EventKind, start_ns: u64, dur_ns: u64, a: u64, b: u64) {
+    CURRENT.with(|c| {
+        if let Some(bound) = c.get() {
+            // SAFETY: as in `span_end`.
+            let ring = unsafe { &*bound.ring };
+            ring.push(Event { kind: kind as u8, t_ns: start_ns, dur_ns, a, b });
+        }
+    });
+}
+
+/// Record an instant event at the current run-clock time.
+#[inline]
+pub fn instant(kind: EventKind, a: u64, b: u64) {
+    CURRENT.with(|c| {
+        if let Some(bound) = c.get() {
+            let now = bound.origin.elapsed().as_nanos() as u64;
+            // SAFETY: as in `span_end`.
+            let ring = unsafe { &*bound.ring };
+            ring.push(Event { kind: kind as u8, t_ns: now, dur_ns: 0, a, b });
+        }
+    });
+}
+
+/// Add to the bound ring's ghost-bytes-shipped gauge (sampler input).
+#[inline]
+pub fn add_ghost_bytes(n: u64) {
+    CURRENT.with(|c| {
+        if let Some(bound) = c.get() {
+            // SAFETY: as in `span_end`.
+            unsafe { &*bound.ring }.add_ghost_bytes(n);
+        }
+    });
+}
+
+/// Record one observed replica staleness in the bound ring's histogram.
+#[inline]
+pub fn observe_lag(lag: u64) {
+    CURRENT.with(|c| {
+        if let Some(bound) = c.get() {
+            // SAFETY: as in `span_end`.
+            unsafe { &*bound.ring }.observe_lag(lag);
+        }
+    });
+}
+
+/// RAII guard for a worker thread's ring binding: restores the previous
+/// binding on drop. Deliberately `!Send` (the binding is thread-local).
+pub struct WorkerBinding {
+    prev: Option<Bound>,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Drop for WorkerBinding {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// One run's telemetry state: the config, the run clock, one ring per
+/// track (workers plus one "engine" control track), and the sampled time
+/// series. Engines create it when the run config carries a
+/// [`TelemetryConfig`], bind worker threads to rings for the run's
+/// duration, and [`Telemetry::finish`] it into the
+/// [`RunReport`](crate::engine::RunReport) after the workers joined.
+pub struct Telemetry {
+    cfg: TelemetryConfig,
+    clock: MonoClock,
+    rings: Vec<WorkerRing>,
+    labels: Vec<String>,
+    samples: Mutex<Vec<MetricSample>>,
+}
+
+impl Telemetry {
+    /// One ring per entry of `labels` (track names in the trace export).
+    pub fn new(cfg: TelemetryConfig, labels: Vec<String>) -> Telemetry {
+        assert!(!labels.is_empty(), "telemetry needs at least one track");
+        let rings = labels.iter().map(|_| WorkerRing::new(cfg.ring_capacity)).collect();
+        Telemetry { cfg, clock: MonoClock::start(), rings, labels, samples: Mutex::new(Vec::new()) }
+    }
+
+    /// The run clock (copy; same timeline as every recorded event).
+    pub fn clock(&self) -> MonoClock {
+        self.clock
+    }
+
+    /// Number of tracks (rings).
+    pub fn tracks(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// The configured sampler cadence (inline samplers honor it too).
+    pub fn sample_interval(&self) -> Duration {
+        self.cfg.sample_interval
+    }
+
+    /// Direct ring access (tests and live diagnostics).
+    pub fn ring(&self, track: usize) -> &WorkerRing {
+        &self.rings[track]
+    }
+
+    /// Bind the calling thread to track `track`'s ring until the returned
+    /// guard drops. At most one thread may be bound to a given ring at a
+    /// time — that is the rings' single-producer contract.
+    pub fn bind_worker(&self, track: usize) -> WorkerBinding {
+        let bound = Bound { ring: &self.rings[track], origin: self.clock.origin() };
+        let prev = CURRENT.with(|c| c.replace(Some(bound)));
+        WorkerBinding { prev, _not_send: PhantomData }
+    }
+
+    /// Live sum of `kind` counts across every ring.
+    pub fn total_count(&self, kind: EventKind) -> u64 {
+        self.rings.iter().map(|r| r.count(kind)).sum()
+    }
+
+    /// Take one metric sample right now (also used by the sequential
+    /// engine, which samples inline instead of from a thread).
+    pub fn sample_now(&self, sources: &SampleSources<'_>) {
+        let t_ms = self.clock.now_ns() as f64 / 1e6;
+        let tasks = self.total_count(EventKind::TaskExec);
+        let ghost_bytes: u64 = self.rings.iter().map(WorkerRing::ghost_bytes).sum();
+        let mut lag_hist = [0u64; LAG_BUCKETS];
+        for ring in &self.rings {
+            for (acc, n) in lag_hist.iter_mut().zip(ring.lag_hist()) {
+                *acc += n;
+            }
+        }
+        let queue_depth = (sources.queue_depth)();
+        let retry_depth = (sources.retry_depth)();
+        let progress = sources.progress.map(|f| f());
+        let mut samples = self.samples.lock().unwrap();
+        let tasks_per_sec = match samples.last() {
+            Some(prev) if t_ms > prev.t_ms => {
+                (tasks - prev.tasks) as f64 / ((t_ms - prev.t_ms) / 1e3)
+            }
+            _ => 0.0,
+        };
+        samples.push(MetricSample {
+            t_ms,
+            tasks,
+            tasks_per_sec,
+            queue_depth,
+            retry_depth,
+            ghost_bytes,
+            lag_hist,
+            progress,
+        });
+    }
+
+    /// The sampler loop: an immediate sample, one per
+    /// [`TelemetryConfig::sample_interval`] until `done`, and a final
+    /// sample on the way out. Engines run this on a dedicated thread
+    /// inside their worker scope.
+    pub fn sample_loop(&self, done: &AtomicBool, sources: &SampleSources<'_>) {
+        self.sample_now(sources);
+        let mut last = Instant::now();
+        while !done.load(Ordering::Acquire) {
+            std::thread::sleep(Duration::from_micros(500));
+            if last.elapsed() >= self.cfg.sample_interval {
+                self.sample_now(sources);
+                last = Instant::now();
+            }
+        }
+        self.sample_now(sources);
+    }
+
+    /// Collapse the run's telemetry into a [`TelemetryReport`], writing
+    /// the configured trace/metrics exports. Call after every bound
+    /// thread has joined (the rings' read-after-join contract). Export IO
+    /// failures are reported on stderr and leave the corresponding path
+    /// unset in the report — telemetry must never fail a run.
+    pub fn finish(self) -> TelemetryReport {
+        let mut counts = [0u64; KIND_COUNT];
+        let mut events_dropped = 0u64;
+        let mut events_recorded = 0u64;
+        let mut tracks: Vec<(String, Vec<Event>)> = Vec::with_capacity(self.rings.len());
+        for (label, ring) in self.labels.iter().zip(&self.rings) {
+            for kind in ALL_KINDS {
+                counts[kind as usize] += ring.count(kind);
+            }
+            events_dropped += ring.dropped();
+            let mut events = ring.snapshot_events();
+            events_recorded += events.len() as u64;
+            events.sort_by_key(|e| e.t_ns);
+            tracks.push((label.clone(), events));
+        }
+        let samples = self.samples.into_inner().unwrap();
+        let mut trace_path = None;
+        if let Some(path) = &self.cfg.trace_path {
+            match export::write_chrome_trace(path, &tracks, self.cfg.flow_arrow_cap) {
+                Ok(()) => trace_path = Some(path.clone()),
+                Err(e) => eprintln!("graphlab telemetry: writing trace {path:?} failed: {e}"),
+            }
+        }
+        let mut metrics_path = None;
+        if let Some(path) = &self.cfg.metrics_path {
+            match export::write_metrics_jsonl(path, &samples) {
+                Ok(()) => metrics_path = Some(path.clone()),
+                Err(e) => eprintln!("graphlab telemetry: writing metrics {path:?} failed: {e}"),
+            }
+        }
+        TelemetryReport {
+            events_recorded,
+            events_dropped,
+            counts,
+            samples,
+            trace_path,
+            metrics_path,
+            tracks,
+        }
+    }
+}
+
+/// The telemetry section of a [`RunReport`](crate::engine::RunReport):
+/// per-kind event counts, the sampled time series, and where the exports
+/// landed. `None` in the report means telemetry was off for the run.
+#[derive(Debug, Clone)]
+pub struct TelemetryReport {
+    /// Events retained in the rings.
+    pub events_recorded: u64,
+    /// Events dropped on ring overflow (counted, never silent).
+    pub events_dropped: u64,
+    /// Per-kind emit counts, indexed by [`EventKind`] (dropped events
+    /// still count — conservation checks rely on it).
+    counts: [u64; KIND_COUNT],
+    /// The sampled time series, in time order.
+    pub samples: Vec<MetricSample>,
+    /// Chrome trace file actually written (unset on IO failure or when
+    /// not configured).
+    pub trace_path: Option<PathBuf>,
+    /// JSONL metrics file actually written.
+    pub metrics_path: Option<PathBuf>,
+    /// The retained events, per track (worker rings plus the engine
+    /// control track), each sorted by start time — the same view the
+    /// trace exporter wrote.
+    pub tracks: Vec<(String, Vec<Event>)>,
+}
+
+impl TelemetryReport {
+    /// Events emitted for `kind` (including dropped ring slots).
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.counts[kind as usize]
+    }
+
+    /// Total events emitted (recorded + dropped).
+    pub fn total_events(&self) -> u64 {
+        self.events_recorded + self.events_dropped
+    }
+
+    /// All retained events of `kind`, across tracks, in track order.
+    pub fn events_of(&self, kind: EventKind) -> Vec<Event> {
+        self.tracks
+            .iter()
+            .flat_map(|(_, events)| events.iter())
+            .filter(|e| e.kind == kind as u8)
+            .copied()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbound_thread_emits_nothing() {
+        assert_eq!(span_start(), SPAN_OFF, "no binding, no clock read result");
+        // None of these may panic or record anywhere.
+        span_end(EventKind::TaskExec, SPAN_OFF, 0, 0);
+        span_at(EventKind::TaskExec, 1, 2, 0, 0);
+        instant(EventKind::ScopeDefer, 0, 0);
+        add_ghost_bytes(64);
+        observe_lag(3);
+    }
+
+    #[test]
+    fn bound_emits_land_in_the_right_ring() {
+        let tel = Telemetry::new(
+            TelemetryConfig::default(),
+            vec!["worker-0".into(), "engine".into()],
+        );
+        {
+            let _bind = tel.bind_worker(0);
+            let t0 = span_start();
+            assert_ne!(t0, SPAN_OFF);
+            span_end(EventKind::TaskExec, t0, 7, 1);
+            instant(EventKind::ScopeDefer, 9, 2);
+            add_ghost_bytes(100);
+            observe_lag(2);
+        }
+        assert_eq!(span_start(), SPAN_OFF, "guard drop unbinds the thread");
+        assert_eq!(tel.ring(0).count(EventKind::TaskExec), 1);
+        assert_eq!(tel.ring(0).count(EventKind::ScopeDefer), 1);
+        assert_eq!(tel.ring(1).count(EventKind::TaskExec), 0, "other tracks untouched");
+        assert_eq!(tel.ring(0).ghost_bytes(), 100);
+        let report = tel.finish();
+        assert_eq!(report.count(EventKind::TaskExec), 1);
+        assert_eq!(report.events_recorded, 2);
+        assert_eq!(report.events_dropped, 0);
+        assert_eq!(report.tracks.len(), 2);
+        assert_eq!(report.events_of(EventKind::TaskExec).len(), 1);
+        assert!(report.trace_path.is_none(), "no export configured");
+    }
+
+    #[test]
+    fn nested_bindings_restore_on_drop() {
+        let tel = Telemetry::new(TelemetryConfig::default(), vec!["a".into(), "b".into()]);
+        let _outer = tel.bind_worker(0);
+        {
+            let _inner = tel.bind_worker(1);
+            instant(EventKind::Handoff, 1, 1);
+        }
+        instant(EventKind::Handoff, 2, 2);
+        assert_eq!(tel.ring(1).count(EventKind::Handoff), 1);
+        assert_eq!(tel.ring(0).count(EventKind::Handoff), 1, "outer binding restored");
+    }
+
+    #[test]
+    fn sampler_series_is_cumulative_and_stamped() {
+        let tel = Telemetry::new(TelemetryConfig::default(), vec!["w".into()]);
+        let _bind = tel.bind_worker(0);
+        let q = || 4u64;
+        let r = || 1u64;
+        let p = || 0.5f64;
+        let sources = SampleSources { queue_depth: &q, retry_depth: &r, progress: Some(&p) };
+        tel.sample_now(&sources);
+        instant(EventKind::TaskExec, 0, 0);
+        instant(EventKind::TaskExec, 1, 0);
+        std::thread::sleep(Duration::from_millis(2));
+        tel.sample_now(&sources);
+        drop(_bind);
+        let report = tel.finish();
+        assert_eq!(report.samples.len(), 2);
+        let (s0, s1) = (&report.samples[0], &report.samples[1]);
+        assert_eq!(s0.tasks, 0);
+        assert_eq!(s1.tasks, 2, "task counter is cumulative");
+        assert!(s1.t_ms > s0.t_ms, "samples advance on the run clock");
+        assert!(s1.tasks_per_sec > 0.0, "rate derived from the previous sample");
+        assert_eq!(s1.queue_depth, 4);
+        assert_eq!(s1.retry_depth, 1);
+        assert_eq!(s1.progress, Some(0.5), "convergence scalar probed per sample");
+    }
+}

@@ -1,0 +1,327 @@
+//! Per-worker **bounded event rings**: fixed-capacity, single-producer
+//! append buffers of timestamped [`Event`]s, written lock-free by the one
+//! worker thread bound to the ring and read only after that worker has
+//! been joined (the exporter) or through its atomic side counters (the
+//! sampler). On overflow the ring *drops* the event — never blocks, never
+//! overwrites — and counts the drop, so a trace can say exactly how much
+//! it is missing.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Staleness-distribution buckets: `log2(lag + 1)` clamped to the last
+/// bucket (lags of 0, 1, 2–3, 4–7, … master versions).
+pub const LAG_BUCKETS: usize = 8;
+
+/// Every instrumented event category. The discriminant doubles as the
+/// index into per-ring and report-level count arrays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Span: one update-function execution under its acquired scope
+    /// (`a` = vertex, `b` = update-function id).
+    TaskExec = 0,
+    /// Span: a scope acquisition that did **not** succeed first try — the
+    /// in-place conflict re-attempt ladder, timed from the first failed
+    /// try-acquire to the dispatch outcome (`a` = vertex).
+    ScopeContend = 1,
+    /// Instant: a task pushed to a retry deque after exhausting its
+    /// adaptive re-attempts (`a` = vertex, `b` = deferral age).
+    ScopeDefer = 2,
+    /// Instant: a deferral-fairness escalation — the task's next dispatch
+    /// used a blocking acquisition (`a` = vertex, `b` = deferral age).
+    ScopeEscalate = 3,
+    /// Instant: a pipelined split acquisition went pending — remote half
+    /// granted, local half conflicted, remote locks parked (`a` = vertex).
+    SplitStall = 4,
+    /// Span: one delta-batcher window flushed through the transport
+    /// (`a` = deltas shipped, `b` = bytes shipped).
+    DeltaFlush = 5,
+    /// Instant: one ghost delta handed to the transport's send path
+    /// (`a` = vertex, `b` = version; paired with [`EventKind::WireApply`]
+    /// by the exporter into a cross-shard delta→apply flow arrow).
+    WireSend = 6,
+    /// Instant: one ghost delta applied to a replica at drain
+    /// (`a` = vertex, `b` = version).
+    WireApply = 7,
+    /// Instant: a bounded-staleness admission pull (`a` = vertex,
+    /// `b` = observed lag in master versions before the pull).
+    StalePull = 8,
+    /// Instant: a failed admission pull re-issued under backoff
+    /// (`a` = vertex, `b` = attempt number).
+    PullRetry = 9,
+    /// Instant: a socket delta connection reconnected after a broken
+    /// pipe (`a` = vertex mid-send, `b` = attempt number).
+    SocketReconnect = 10,
+    /// Span: a send stalled on a full bounded send window — the socket
+    /// backend's backpressure (`a` = frame bytes).
+    Backpressure = 11,
+    /// Instant: a worker observed a newly announced snapshot epoch and
+    /// performed its marker step (`a` = epoch).
+    SnapshotAdopt = 12,
+    /// Span: one shard's owned rows serialized for a snapshot epoch
+    /// (`a` = epoch, `b` = rows captured).
+    SnapshotCapture = 13,
+    /// Instant: a task popped by the wrong shard's worker and handed off
+    /// to the owner shard (`a` = vertex, `b` = destination shard).
+    Handoff = 14,
+    /// Instant: an injector push spilled past the lock-free ring into the
+    /// mutex overflow list (scheduler layer; `a` = overflow depth).
+    InjectorOverflow = 15,
+    /// Instant: the fault injector perturbed traffic (`a` = fault class:
+    /// 0 drop, 1 duplicate, 2 delay, 3 severed pull).
+    Fault = 16,
+}
+
+/// Number of event categories (array sizes for per-kind counters).
+pub const KIND_COUNT: usize = 17;
+
+/// All kinds, in discriminant order (taxonomy iteration for exporters,
+/// summaries, and conservation tests).
+pub const ALL_KINDS: [EventKind; KIND_COUNT] = [
+    EventKind::TaskExec,
+    EventKind::ScopeContend,
+    EventKind::ScopeDefer,
+    EventKind::ScopeEscalate,
+    EventKind::SplitStall,
+    EventKind::DeltaFlush,
+    EventKind::WireSend,
+    EventKind::WireApply,
+    EventKind::StalePull,
+    EventKind::PullRetry,
+    EventKind::SocketReconnect,
+    EventKind::Backpressure,
+    EventKind::SnapshotAdopt,
+    EventKind::SnapshotCapture,
+    EventKind::Handoff,
+    EventKind::InjectorOverflow,
+    EventKind::Fault,
+];
+
+impl EventKind {
+    /// Short name used in trace exports and summaries.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::TaskExec => "task",
+            EventKind::ScopeContend => "scope_contend",
+            EventKind::ScopeDefer => "scope_defer",
+            EventKind::ScopeEscalate => "scope_escalate",
+            EventKind::SplitStall => "split_stall",
+            EventKind::DeltaFlush => "delta_flush",
+            EventKind::WireSend => "wire_send",
+            EventKind::WireApply => "wire_apply",
+            EventKind::StalePull => "stale_pull",
+            EventKind::PullRetry => "pull_retry",
+            EventKind::SocketReconnect => "reconnect",
+            EventKind::Backpressure => "backpressure",
+            EventKind::SnapshotAdopt => "snapshot_adopt",
+            EventKind::SnapshotCapture => "snapshot_capture",
+            EventKind::Handoff => "handoff",
+            EventKind::InjectorOverflow => "injector_overflow",
+            EventKind::Fault => "fault",
+        }
+    }
+
+    /// Whether events of this kind are timed spans (the rest are
+    /// instants, recorded with `dur_ns == 0`).
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            EventKind::TaskExec
+                | EventKind::ScopeContend
+                | EventKind::DeltaFlush
+                | EventKind::Backpressure
+                | EventKind::SnapshotCapture
+        )
+    }
+
+    /// Trace category group ("engine", "wire", "snapshot", "sched").
+    pub fn category(self) -> &'static str {
+        match self {
+            EventKind::TaskExec
+            | EventKind::ScopeContend
+            | EventKind::ScopeDefer
+            | EventKind::ScopeEscalate
+            | EventKind::SplitStall
+            | EventKind::Handoff => "engine",
+            EventKind::DeltaFlush
+            | EventKind::WireSend
+            | EventKind::WireApply
+            | EventKind::StalePull
+            | EventKind::PullRetry
+            | EventKind::SocketReconnect
+            | EventKind::Backpressure
+            | EventKind::Fault => "wire",
+            EventKind::SnapshotAdopt | EventKind::SnapshotCapture => "snapshot",
+            EventKind::InjectorOverflow => "sched",
+        }
+    }
+}
+
+/// One recorded event: a span when `dur_ns > 0` semantics apply (spans
+/// record their opening timestamp in `t_ns`), an instant otherwise. `a`
+/// and `b` are kind-specific payload words (see [`EventKind`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Event {
+    /// [`EventKind`] discriminant.
+    pub kind: u8,
+    /// Nanoseconds since the run clock origin (span start for spans).
+    pub t_ns: u64,
+    /// Span duration in ns; 0 for instants.
+    pub dur_ns: u64,
+    /// First payload word (kind-specific).
+    pub a: u64,
+    /// Second payload word (kind-specific).
+    pub b: u64,
+}
+
+/// A single-producer bounded event buffer plus the atomic side counters
+/// the sampler reads live.
+///
+/// Safety contract (why the `unsafe impl Sync` below is sound): the
+/// `events` slots are written through `&self` only by the one thread the
+/// ring is bound to ([`crate::telemetry::Telemetry::bind_worker`] hands
+/// out the binding and the engines bind each ring to exactly one worker);
+/// `len` is published with release ordering and readers load it with
+/// acquire before touching slots, and the exporter additionally reads
+/// only after the producing thread has been joined.
+pub struct WorkerRing {
+    events: UnsafeCell<Box<[Event]>>,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+    counts: [AtomicU64; KIND_COUNT],
+    ghost_bytes: AtomicU64,
+    lag_hist: [AtomicU64; LAG_BUCKETS],
+}
+
+unsafe impl Sync for WorkerRing {}
+
+impl WorkerRing {
+    /// A ring holding up to `capacity` events (at least 1).
+    pub fn new(capacity: usize) -> WorkerRing {
+        WorkerRing {
+            events: UnsafeCell::new(vec![Event::default(); capacity.max(1)].into_boxed_slice()),
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            ghost_bytes: AtomicU64::new(0),
+            lag_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Append `ev` (single producer: only the bound worker thread). The
+    /// per-kind count always advances — a conservation check can rely on
+    /// it even when the slot itself is dropped on overflow.
+    #[inline]
+    pub fn push(&self, ev: Event) {
+        self.counts[ev.kind as usize].fetch_add(1, Ordering::Relaxed);
+        let len = self.len.load(Ordering::Relaxed);
+        // SAFETY: single-producer contract (see type docs); `len` is this
+        // thread's own high-water mark, so the slot is unaliased.
+        let slots = unsafe { &mut *self.events.get() };
+        if len >= slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        slots[len] = ev;
+        self.len.store(len + 1, Ordering::Release);
+    }
+
+    /// Add to the ring's ghost-bytes-shipped gauge (sampler input).
+    #[inline]
+    pub fn add_ghost_bytes(&self, n: u64) {
+        self.ghost_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one observed replica staleness in the lag histogram.
+    #[inline]
+    pub fn observe_lag(&self, lag: u64) {
+        let bucket = (63 - lag.saturating_add(1).leading_zeros()).min(LAG_BUCKETS as u32 - 1);
+        self.lag_hist[bucket as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Events recorded for `kind` so far (live; includes dropped slots).
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.counts[kind as usize].load(Ordering::Relaxed)
+    }
+
+    /// Events whose ring slot was dropped on overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Ghost bytes gauge (live).
+    pub fn ghost_bytes(&self) -> u64 {
+        self.ghost_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the lag histogram (live).
+    pub fn lag_hist(&self) -> [u64; LAG_BUCKETS] {
+        std::array::from_fn(|i| self.lag_hist[i].load(Ordering::Relaxed))
+    }
+
+    /// Copy out the recorded events. Safe to call while the producer may
+    /// still be appending (acquire on `len` covers every published slot);
+    /// the exporter calls it after the producer joined, so it sees all.
+    pub fn snapshot_events(&self) -> Vec<Event> {
+        let len = self.len.load(Ordering::Acquire);
+        // SAFETY: slots below `len` were published with release ordering
+        // and are never rewritten (append-only, drop-on-overflow).
+        let slots = unsafe { &*self.events.get() };
+        slots[..len].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_records_and_counts() {
+        let r = WorkerRing::new(4);
+        r.push(Event { kind: EventKind::TaskExec as u8, t_ns: 5, dur_ns: 2, a: 1, b: 0 });
+        r.push(Event { kind: EventKind::ScopeDefer as u8, t_ns: 9, dur_ns: 0, a: 3, b: 1 });
+        assert_eq!(r.count(EventKind::TaskExec), 1);
+        assert_eq!(r.count(EventKind::ScopeDefer), 1);
+        assert_eq!(r.count(EventKind::Handoff), 0);
+        assert_eq!(r.dropped(), 0);
+        let evs = r.snapshot_events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].t_ns, 5);
+        assert_eq!(evs[1].a, 3);
+    }
+
+    #[test]
+    fn overflow_drops_are_counted_not_lost_silently() {
+        let r = WorkerRing::new(2);
+        for i in 0..5 {
+            r.push(Event { kind: EventKind::TaskExec as u8, t_ns: i, ..Event::default() });
+        }
+        assert_eq!(r.snapshot_events().len(), 2, "capacity bounds the ring");
+        assert_eq!(r.dropped(), 3, "every overflowed event is counted");
+        assert_eq!(r.count(EventKind::TaskExec), 5, "counts include dropped events");
+    }
+
+    #[test]
+    fn lag_histogram_buckets_by_log2() {
+        let r = WorkerRing::new(1);
+        for lag in [0, 1, 2, 3, 4, 1_000_000] {
+            r.observe_lag(lag);
+        }
+        let h = r.lag_hist();
+        assert_eq!(h[0], 1, "lag 0");
+        assert_eq!(h[1], 2, "lags 1..=2");
+        assert_eq!(h[2], 2, "lags 3..=6");
+        assert_eq!(h[LAG_BUCKETS - 1], 1, "huge lags clamp to the last bucket");
+        assert_eq!(h.iter().sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn taxonomy_is_dense_and_named() {
+        for (i, k) in ALL_KINDS.iter().enumerate() {
+            assert_eq!(*k as usize, i, "discriminants must be dense for array indexing");
+            assert!(!k.name().is_empty());
+            assert!(!k.category().is_empty());
+        }
+    }
+}

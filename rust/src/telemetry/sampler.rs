@@ -1,0 +1,48 @@
+//! The telemetry **sampler**: on a fixed cadence, collapse the live ring
+//! counters into one [`MetricSample`] — tasks executed (cumulative and as
+//! a rate against the previous sample), scheduler queue depth, retry-deque
+//! depth, ghost bytes shipped, the observed-staleness histogram, and the
+//! app-supplied convergence scalar. The threaded and sharded engines run
+//! [`crate::telemetry::Telemetry::sample_loop`] on a dedicated thread
+//! inside their worker scope; the sequential engine samples inline on its
+//! update loop. The series exports as JSONL
+//! ([`super::export::write_metrics_jsonl`]).
+
+use super::ring::LAG_BUCKETS;
+
+/// One fixed-interval observation of the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricSample {
+    /// Milliseconds since the run clock origin.
+    pub t_ms: f64,
+    /// Tasks executed so far (cumulative; monotone across the series).
+    pub tasks: u64,
+    /// Task rate derived against the previous sample (0 for the first).
+    pub tasks_per_sec: f64,
+    /// Scheduler pending-task depth ([`crate::scheduler::Scheduler::approx_len`]).
+    pub queue_depth: u64,
+    /// Tasks parked in retry deques / overflow injectors at sample time.
+    pub retry_depth: u64,
+    /// Ghost bytes shipped so far (cumulative).
+    pub ghost_bytes: u64,
+    /// Observed replica-staleness histogram: bucket `i` counts reads that
+    /// saw a lag in `[2^i - 1, 2^(i+1) - 2]` master versions (cumulative).
+    pub lag_hist: [u64; LAG_BUCKETS],
+    /// The app's convergence scalar
+    /// ([`crate::engine::Program::progress_metric`]), probed at sample
+    /// time; `None` when no hook is registered.
+    pub progress: Option<f64>,
+}
+
+/// Where a sample's non-ring inputs come from. The closures are borrowed
+/// from the engine's run scope (they typically capture the scheduler, the
+/// retry-depth counter, and the SDT for the progress hook) and must be
+/// callable from the sampler thread.
+pub struct SampleSources<'a> {
+    /// Pending tasks in the scheduler.
+    pub queue_depth: &'a (dyn Fn() -> u64 + Sync),
+    /// Tasks parked in retry deques / overflow injectors.
+    pub retry_depth: &'a (dyn Fn() -> u64 + Sync),
+    /// The convergence scalar, when the program registered one.
+    pub progress: Option<&'a (dyn Fn() -> f64 + Sync)>,
+}

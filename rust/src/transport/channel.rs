@@ -133,6 +133,11 @@ impl<V: VertexCodec + Clone + Send + Sync> ChannelTransport<'_, V> {
             if let Some(entry) = shard.ghost_of(header.vertex) {
                 if entry.store_versioned(&value, header.version) {
                     out.applied += 1;
+                    crate::telemetry::instant(
+                        crate::telemetry::EventKind::WireApply,
+                        header.vertex as u64,
+                        header.version,
+                    );
                 }
             }
         }
@@ -154,6 +159,11 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for ChannelTranspor
         if sites.is_empty() {
             return SendReceipt::default();
         }
+        crate::telemetry::instant(
+            crate::telemetry::EventKind::WireSend,
+            vertex as u64,
+            version,
+        );
         let mut bytes = 0u64;
         if self.compress {
             let mut payload = Vec::new();
@@ -220,6 +230,11 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for ChannelTranspor
                 if let Some(entry) = shard.ghost_of(delta.vertex) {
                     if entry.store_versioned(&value, delta.version) {
                         out.applied += 1;
+                        crate::telemetry::instant(
+                            crate::telemetry::EventKind::WireApply,
+                            delta.vertex as u64,
+                            delta.version,
+                        );
                     }
                 }
             }

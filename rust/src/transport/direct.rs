@@ -34,6 +34,11 @@ impl<V: Clone + Send + Sync> GhostTransport<V> for DirectTransport<'_, V> {
     }
 
     fn send(&self, _src_shard: usize, vertex: VertexId, version: u64, data: &V) -> SendReceipt {
+        crate::telemetry::instant(
+            crate::telemetry::EventKind::WireSend,
+            vertex as u64,
+            version,
+        );
         SendReceipt {
             replicas_now: self.graph.sync_vertex_versioned(vertex, data, version),
             bytes: 0,

@@ -161,10 +161,12 @@ impl<V: Clone + Send + Sync> GhostTransport<V> for FaultInjector<'_, V> {
         let p = self.plan;
         if roll < p.drop_per_mille {
             self.faults.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::instant(crate::telemetry::EventKind::Fault, 0, vertex as u64);
             return SendReceipt::default();
         }
         if roll < p.drop_per_mille + p.dup_per_mille {
             self.faults.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::instant(crate::telemetry::EventKind::Fault, 1, vertex as u64);
             let first = self.inner.send(src_shard, vertex, version, data);
             let second = self.inner.send(src_shard, vertex, version, data);
             return SendReceipt {
@@ -174,6 +176,7 @@ impl<V: Clone + Send + Sync> GhostTransport<V> for FaultInjector<'_, V> {
         }
         if roll < p.drop_per_mille + p.dup_per_mille + p.delay_per_mille {
             self.faults.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::instant(crate::telemetry::EventKind::Fault, 2, vertex as u64);
             let due_tick = self.drains.load(Ordering::Relaxed) + hold_ticks;
             self.held.lock().unwrap().push(Held {
                 src_shard,
@@ -202,6 +205,7 @@ impl<V: Clone + Send + Sync> GhostTransport<V> for FaultInjector<'_, V> {
         let (roll, _) = self.roll();
         if roll < self.plan.sever_per_mille {
             self.faults.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::instant(crate::telemetry::EventKind::Fault, 3, req.vertex as u64);
             return PullReceipt::default();
         }
         self.inner.pull(dst_shard, req, master)

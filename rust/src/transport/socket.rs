@@ -167,6 +167,11 @@ impl Connection {
                     );
                     reconnects.fetch_add(1, Ordering::Relaxed);
                     backoffs.fetch_add(1, Ordering::Relaxed);
+                    crate::telemetry::instant(
+                        crate::telemetry::EventKind::SocketReconnect,
+                        vertex as u64,
+                        attempt as u64,
+                    );
                     let wait = (1u64 << attempt).min(RECONNECT_BACKOFF_CAP_MS);
                     std::thread::sleep(Duration::from_millis(wait));
                     if let Ok(fresh) = Connection::open(&self.endpoint, self.src) {
@@ -466,6 +471,11 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
         if sites.is_empty() {
             return SendReceipt::default();
         }
+        crate::telemetry::instant(
+            crate::telemetry::EventKind::WireSend,
+            vertex as u64,
+            version,
+        );
         let delta = GhostDelta::from_vertex(vertex, version, data);
         let mut frame = Vec::with_capacity(delta.wire_len());
         delta.encode_into(&mut frame);
@@ -488,6 +498,9 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
             // a sender but never livelock it.
             let window = &self.window[idx];
             let mut stalled = false;
+            // The stall-span clock starts only once the sender actually
+            // stalls — the unstalled fast path reads no clock.
+            let mut stall_span = crate::telemetry::SPAN_OFF;
             let mut spins = 0u32;
             loop {
                 let inflight = window.load(Ordering::Acquire);
@@ -497,6 +510,7 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
                 if !stalled {
                     stalled = true;
                     self.backpressure.fetch_add(1, Ordering::Relaxed);
+                    stall_span = crate::telemetry::span_start();
                 }
                 spins += 1;
                 if spins > STALL_ITERS_MAX {
@@ -507,6 +521,14 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
                 } else {
                     std::thread::sleep(Duration::from_micros(50));
                 }
+            }
+            if stalled {
+                crate::telemetry::span_end(
+                    crate::telemetry::EventKind::Backpressure,
+                    stall_span,
+                    vertex as u64,
+                    dst as u64,
+                );
             }
             window.fetch_add(frame.len(), Ordering::AcqRel);
             conn.lock().unwrap().send(
@@ -549,6 +571,11 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
             if let Some(entry) = shard.ghost_of(delta.vertex) {
                 if entry.store_versioned(&value, delta.version) {
                     out.applied += 1;
+                    crate::telemetry::instant(
+                        crate::telemetry::EventKind::WireApply,
+                        delta.vertex as u64,
+                        delta.version,
+                    );
                 }
             }
         }

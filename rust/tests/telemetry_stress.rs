@@ -1,0 +1,349 @@
+//! Stress tests for the telemetry subsystem: event conservation against
+//! the engines' own contention counters (threaded and sharded), ring
+//! overflow accounting (drops are counted, never silent), the
+//! disabled-mode contract (no report, no clock reads), and the acceptance
+//! path — a sharded socket-backend BP run whose exported Chrome trace is
+//! structurally valid (per-worker tracks, non-decreasing timestamps per
+//! track, every key event category present) and whose JSONL metrics carry
+//! the app-supplied convergence scalar.
+
+use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
+use graphlab::apps::mrf::random_mrf;
+use graphlab::consistency::{ConsistencyModel, Scope};
+use graphlab::engine::{Program, UpdateContext, UpdateFn};
+use graphlab::graph::{DataGraph, GraphBuilder};
+use graphlab::scheduler::{FifoScheduler, MultiQueueFifo, Task};
+use graphlab::sdt::Sdt;
+use graphlab::telemetry::{EventKind, TelemetryConfig, ALL_KINDS, SPAN_OFF};
+use graphlab::util::Pcg32;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+struct SelfBump {
+    rounds: u64,
+}
+impl UpdateFn<u64, ()> for SelfBump {
+    fn update(&self, scope: &mut Scope<'_, u64, ()>, ctx: &mut UpdateContext<'_>) {
+        *scope.vertex_mut() += 1;
+        if *scope.vertex() < self.rounds {
+            ctx.add_task(scope.center(), 1.0);
+        }
+    }
+}
+
+fn ring_graph(n: usize) -> DataGraph<u64, ()> {
+    let mut b = GraphBuilder::new();
+    for _ in 0..n {
+        b.add_vertex(0u64);
+    }
+    for i in 0..n {
+        b.add_undirected(i as u32, ((i + 1) % n) as u32, (), ());
+    }
+    b.build()
+}
+
+fn grid(side: u32) -> DataGraph<u64, ()> {
+    let mut b = GraphBuilder::new();
+    for _ in 0..side * side {
+        b.add_vertex(0u64);
+    }
+    for y in 0..side {
+        for x in 0..side {
+            let v = y * side + x;
+            if x + 1 < side {
+                b.add_undirected(v, v + 1, (), ());
+            }
+            if y + 1 < side {
+                b.add_undirected(v, v + side, (), ());
+            }
+        }
+    }
+    b.build()
+}
+
+fn seeded_fifo(n: usize) -> FifoScheduler {
+    let sched = FifoScheduler::new(n);
+    for v in 0..n as u32 {
+        sched.add_task(Task::new(v));
+    }
+    sched
+}
+
+fn seeded_mq(n: usize, workers: usize) -> MultiQueueFifo {
+    let sched = MultiQueueFifo::new(n, workers);
+    for v in 0..n as u32 {
+        sched.add_task(Task::new(v));
+    }
+    sched
+}
+
+// ---- conservation against the engines' own counters ----------------------
+
+/// Threaded back-end: every update is exactly one `task` span, every
+/// counted deferral/escalation is exactly one matching instant — the
+/// telemetry stream and the contention counters are two views of the same
+/// events and may never disagree.
+#[test]
+fn threaded_telemetry_conserves_engine_counters() {
+    let n = 64;
+    let f = SelfBump { rounds: 50 };
+    let mut g = ring_graph(n);
+    let report = Program::new()
+        .update_fn(&f)
+        .workers(4)
+        .model(ConsistencyModel::Full)
+        .telemetry(TelemetryConfig::default())
+        .run(&mut g, &seeded_fifo(n), &Sdt::new());
+    assert_eq!(report.updates, n as u64 * 50, "conservation");
+    let c = &report.contention;
+    let tel = report.telemetry.as_ref().expect("telemetry enabled");
+    assert_eq!(tel.count(EventKind::TaskExec), report.updates);
+    assert_eq!(tel.count(EventKind::ScopeDefer), c.deferrals);
+    assert_eq!(tel.count(EventKind::ScopeEscalate), c.escalations);
+    assert_eq!(tel.tracks.len(), 5, "4 worker tracks + the engine track");
+    assert!(tel.samples.len() >= 2, "an immediate and a final sample");
+    assert_eq!(tel.events_dropped, 0, "default capacity holds this run");
+}
+
+/// Sharded channel back-end under a lazy flush window: every counted
+/// staleness pull / pull retry is exactly one instant, flush spans carry
+/// the shipped deltas, and wire send/apply events exist on both ends.
+#[test]
+fn sharded_telemetry_conserves_pull_and_flush_counters() {
+    let side = 12u32;
+    let rounds = 200u64;
+    let f = SelfBump { rounds };
+    let mut g = grid(side);
+    let n = g.num_vertices();
+    let report = Program::new()
+        .update_fn(&f)
+        .workers(4)
+        .shards(2)
+        .model(ConsistencyModel::Full)
+        .ghost_staleness(2)
+        .ghost_batch(1_000_000)
+        .transport("channel")
+        // Big enough that nothing drops: the flush-span sum below reads
+        // retained events, not just counters.
+        .telemetry(TelemetryConfig::default().with_ring_capacity(1 << 17))
+        .run(&mut g, &seeded_mq(n, 4), &Sdt::new());
+    assert_eq!(report.updates, n as u64 * rounds, "conservation");
+    let c = &report.contention;
+    let tel = report.telemetry.as_ref().expect("telemetry enabled");
+    assert_eq!(tel.count(EventKind::TaskExec), report.updates);
+    assert!(c.staleness_pulls > 0, "lazy flushes force admission pulls");
+    assert_eq!(tel.count(EventKind::StalePull), c.staleness_pulls);
+    assert_eq!(tel.count(EventKind::PullRetry), c.pull_retries);
+    assert!(tel.count(EventKind::DeltaFlush) > 0, "flush windows are spanned");
+    assert!(tel.count(EventKind::WireSend) > 0);
+    assert!(tel.count(EventKind::WireApply) > 0);
+    // Flush spans account every shipped delta: `a` carries the count.
+    assert_eq!(tel.events_dropped, 0, "ring sized to retain the whole run");
+    let flushed: u64 = tel.events_of(EventKind::DeltaFlush).iter().map(|e| e.a).sum();
+    assert_eq!(flushed, c.deltas_sent, "flush spans account every delta");
+}
+
+// ---- ring overflow --------------------------------------------------------
+
+/// A deliberately tiny ring must drop most events — but count every drop,
+/// keep the per-kind counts exact (conservation still holds against the
+/// update count), and retain exactly `capacity` events.
+#[test]
+fn ring_overflow_drops_are_counted_not_lost() {
+    let n = 32;
+    let f = SelfBump { rounds: 20 };
+    let mut g = ring_graph(n);
+    let report = Program::new()
+        .update_fn(&f)
+        .workers(1)
+        .telemetry(TelemetryConfig::default().with_ring_capacity(8))
+        .run(&mut g, &seeded_fifo(n), &Sdt::new());
+    assert_eq!(report.updates, n as u64 * 20);
+    let tel = report.telemetry.as_ref().expect("telemetry enabled");
+    assert_eq!(
+        tel.count(EventKind::TaskExec),
+        report.updates,
+        "per-kind counts include dropped events"
+    );
+    assert!(tel.events_dropped > 0, "an 8-slot ring cannot hold 640 spans");
+    assert_eq!(tel.events_recorded, 8, "exactly the ring capacity retained");
+    let total: u64 = ALL_KINDS.iter().map(|&k| tel.count(k)).sum();
+    assert_eq!(total, tel.total_events(), "recorded + dropped == emitted");
+}
+
+// ---- disabled mode --------------------------------------------------------
+
+/// Without a [`TelemetryConfig`] the run carries no telemetry section and
+/// an unbound thread's span open is the no-clock-read sentinel — the
+/// disabled path must stay one thread-local read and a branch.
+#[test]
+fn disabled_runs_record_nothing() {
+    let n = 16;
+    let f = SelfBump { rounds: 5 };
+    let mut g = ring_graph(n);
+    let report =
+        Program::new().update_fn(&f).workers(2).run(&mut g, &seeded_fifo(n), &Sdt::new());
+    assert_eq!(report.updates, n as u64 * 5);
+    assert!(report.telemetry.is_none(), "no config, no telemetry section");
+    assert_eq!(
+        graphlab::telemetry::span_start(),
+        SPAN_OFF,
+        "unbound thread opens no span and reads no clock"
+    );
+}
+
+// ---- acceptance: Perfetto-loadable trace + JSONL metrics ------------------
+
+/// Leading number right after `"key":` in a single-line JSON object.
+fn num_field(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find([',', '}', ']']).unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+/// String value right after `"key":"` in a single-line JSON object.
+fn str_field<'l>(line: &'l str, key: &str) -> Option<&'l str> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    Some(&rest[..rest.find('"')?])
+}
+
+/// Acceptance: a sharded socket-backend BP run with telemetry enabled
+/// must export a structurally valid Chrome trace — one named track per
+/// worker plus the engine track, at least one event in every key
+/// instrumented category, non-decreasing timestamps within each track —
+/// and a JSONL metrics series carrying the app's convergence scalar.
+#[test]
+fn socket_bp_trace_export_is_perfetto_loadable() {
+    let mut mrf = {
+        let mut rng = Pcg32::seed_from_u64(7);
+        random_mrf(80, 160, 3, &mut rng)
+    };
+    let n = mrf.graph.num_vertices();
+    let sdt = Sdt::new();
+    sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+    sdt.set("resid", 0.75f64);
+    let upd = BpUpdate::new(mrf.arity, 1e-6, Arc::new(mrf.tables.clone()));
+    let trace_path = PathBuf::from("target/telemetry/stress-trace.json");
+    let metrics_path = PathBuf::from("target/telemetry/stress-metrics.jsonl");
+    let report = Program::new()
+        .update_fn(&upd)
+        .workers(4)
+        .shards(2)
+        .model(ConsistencyModel::Full)
+        .ghost_staleness(4)
+        .ghost_batch(8)
+        .max_updates(500_000)
+        .transport("socket")
+        .telemetry(
+            TelemetryConfig::default()
+                // Bounded trace size; overflow is fine here (counts stay
+                // exact and every category shows up early in the run).
+                .with_ring_capacity(1 << 13)
+                .with_sample_interval(Duration::from_millis(2))
+                .with_trace_path(trace_path.clone())
+                .with_metrics_path(metrics_path.clone()),
+        )
+        .progress_metric(|sdt: &Sdt| sdt.get_or::<f64>("resid", f64::NAN))
+        .run(&mut mrf.graph, &seeded_mq(n, 4), &sdt);
+    assert!(report.updates > 0);
+    let tel = report.telemetry.as_ref().expect("telemetry enabled");
+    assert_eq!(tel.count(EventKind::TaskExec), report.updates);
+    assert_eq!(tel.count(EventKind::StalePull), report.contention.staleness_pulls);
+    assert_eq!(tel.tracks.len(), 5, "4 worker tracks + the engine track");
+    assert_eq!(tel.trace_path.as_deref(), Some(trace_path.as_path()));
+    assert_eq!(tel.metrics_path.as_deref(), Some(metrics_path.as_path()));
+
+    // -- Chrome trace structure --------------------------------------------
+    let text = std::fs::read_to_string(&trace_path).expect("trace written");
+    assert!(text.starts_with("{\"traceEvents\":[\n"), "trace_event envelope");
+    assert!(text.trim_end().ends_with("]}"), "envelope closed");
+    let mut track_names = Vec::new();
+    let mut category_counts: HashMap<&str, u64> = HashMap::new();
+    let mut last_ts: HashMap<u64, f64> = HashMap::new();
+    let mut flow_starts = 0u64;
+    let mut flow_ends = 0u64;
+    for raw in text.lines() {
+        let line = raw.trim_end_matches(',');
+        // Skip the envelope lines; every event line opens with its phase.
+        if !line.starts_with("{\"ph\"") {
+            continue;
+        }
+        let ph = str_field(line, "ph").expect("every event has a phase");
+        assert_eq!(num_field(line, "pid"), Some(0.0), "single process");
+        match ph {
+            "M" => {
+                if str_field(line, "name") == Some("thread_name") {
+                    // the args object holds the track label
+                    let label = &line[line.find("\"args\"").unwrap()..];
+                    track_names.push(str_field(label, "name").unwrap().to_string());
+                }
+            }
+            "X" | "i" => {
+                let tid = num_field(line, "tid").expect("track id") as u64;
+                let ts = num_field(line, "ts").expect("timestamp");
+                let prev = last_ts.entry(tid).or_insert(f64::MIN);
+                assert!(
+                    ts >= *prev,
+                    "track {tid}: ts {ts} decreased below {prev}"
+                );
+                *prev = ts;
+                *category_counts.entry(str_field(line, "name").unwrap()).or_insert(0) +=
+                    1;
+                if ph == "X" {
+                    assert!(num_field(line, "dur").unwrap() > 0.0, "spans have width");
+                }
+            }
+            "s" => flow_starts += 1,
+            "f" => flow_ends += 1,
+            other => panic!("unexpected phase {other:?} in {line}"),
+        }
+    }
+    for expect in ["shard0-worker0", "shard0-worker1", "shard1-worker0", "shard1-worker1", "engine"]
+    {
+        assert!(
+            track_names.iter().any(|t| t == expect),
+            "track {expect} missing from {track_names:?}"
+        );
+    }
+    for expect in ["task", "delta_flush", "wire_send", "wire_apply", "stale_pull"] {
+        assert!(
+            category_counts.get(expect).copied().unwrap_or(0) > 0,
+            "no {expect} events in trace: {category_counts:?}"
+        );
+    }
+    assert_eq!(flow_starts, flow_ends, "every delta arrow has both endpoints");
+
+    // -- JSONL metrics ------------------------------------------------------
+    let metrics = std::fs::read_to_string(&metrics_path).expect("metrics written");
+    let lines: Vec<&str> = metrics.lines().collect();
+    assert_eq!(lines.len(), tel.samples.len(), "one line per sample");
+    assert!(lines.len() >= 2, "an immediate and a final sample");
+    let mut prev_t = f64::MIN;
+    let mut prev_tasks = 0.0;
+    for line in &lines {
+        let t = num_field(line, "t_ms").expect("sample timestamp");
+        assert!(t >= prev_t, "samples in time order");
+        prev_t = t;
+        let tasks = num_field(line, "tasks").expect("cumulative task count");
+        assert!(tasks >= prev_tasks, "task counter is cumulative");
+        prev_tasks = tasks;
+        assert!(line.contains("\"progress\":0.75"), "convergence scalar probed");
+        assert!(line.contains("\"lag_hist\":["), "staleness distribution present");
+    }
+    let last = lines.last().unwrap();
+    assert_eq!(
+        num_field(last, "tasks"),
+        Some(report.updates as f64),
+        "final sample saw every task span"
+    );
+    assert!(
+        num_field(last, "ghost_bytes").unwrap() > 0.0,
+        "socket run shipped ghost bytes"
+    );
+}
