@@ -19,7 +19,8 @@
 //!   results/BENCH_telemetry.json;
 //! * ghost-sync transport throughput: deltas/sec and bytes per delta for
 //!   the direct vs serialized-channel (raw and compressed "channel-z") vs
-//!   unix-socket backends at batch windows {1,16,64} —
+//!   shared-memory SPSC ring ("shm") vs unix-socket (raw and compressed
+//!   "socket-z") backends at batch windows {1,16,64} —
 //!   results/BENCH_transport.json;
 //! * PJRT batched-kernel dispatch latency (if artifacts are built).
 //!
@@ -579,7 +580,8 @@ fn main() {
     let mut transport_json: Vec<(String, f64)> = Vec::new();
     {
         use graphlab::transport::{
-            ChannelTransport, DeltaBatcher, DirectTransport, GhostTransport, SocketTransport,
+            ChannelTransport, DeltaBatcher, DirectTransport, GhostTransport, ShmTransport,
+            SocketTransport,
         };
         let side = 64u32;
         let mut g = grid2d(side);
@@ -597,12 +599,17 @@ fn main() {
             "{:<44} {:>12} {:>14}",
             "transport", "deltas/s", "bytes/delta"
         );
-        for backend in ["direct", "channel", "channel-z", "socket"] {
+        for backend in ["direct", "channel", "channel-z", "shm", "socket", "socket-z"] {
             for batch in [1usize, 16, 64] {
                 let transport: Box<dyn GhostTransport<u64> + '_> = match backend {
                     "direct" => Box::new(DirectTransport::new(&sharded)),
                     "channel" => Box::new(ChannelTransport::new(&sharded)),
                     "channel-z" => Box::new(ChannelTransport::compressed(&sharded)),
+                    "shm" => Box::new(ShmTransport::new(&sharded)),
+                    "socket-z" => Box::new(
+                        SocketTransport::compressed(&sharded)
+                            .expect("unix-socket transport setup"),
+                    ),
                     _ => Box::new(
                         SocketTransport::new(&sharded)
                             .expect("unix-socket transport setup"),

@@ -243,13 +243,16 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
     /// 0` forces replicas exactly current at every admission (the
     /// synchronous semantics of the per-update flush).
     ///
-    /// The pull is issued through `transport`'s **request/reply path**
-    /// ([`GhostTransport::pull`]): a [`PullRequest`] frame crosses to the
-    /// owner and the encoded-vertex reply crosses back, so on a
-    /// serializing backend scope admission never touches peer master data
-    /// directly — the owner-side service closure this method supplies is
-    /// the single place the master is read, and it runs under the locks
-    /// described below.
+    /// The pulls are issued through `transport`'s **request/reply path**:
+    /// all stale ghosts of the scope are collected first and refreshed
+    /// with one batched [`GhostTransport::pull_many`] call, so pipelining
+    /// backends (shm, socket) overlap the request/reply round-trips
+    /// instead of lock-stepping one frame per exchange. [`PullRequest`]
+    /// frames cross to the owner and the encoded-vertex replies cross
+    /// back, so on a serializing backend scope admission never touches
+    /// peer master data directly — the owner-side service closure this
+    /// method supplies is the single place the master is read, and it
+    /// runs under the locks described below.
     ///
     /// Must run with the scope's neighbor locks held (Edge/Full models):
     /// the held read locks both make the master read safe and freeze the
@@ -278,67 +281,96 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
         let sh = sharded.shard(shard);
         let graph = self.graph;
         let mut out = GhostRefresh::default();
+        // Phase 1: measure every ghost neighbor, collecting the ones past
+        // the bound. Fresh replicas are observed and admitted immediately.
+        let mut stale: Vec<(usize, VertexId, u64)> = Vec::new();
         for &code in sh.local_neighbors(self.center) {
             let LocalRef::Ghost(gi) = sh.resolve(code) else { continue };
             let entry = sh.ghost(gi as usize);
             let u = entry.global();
-            let master_version = sharded.master_version(u);
-            let lag = master_version.saturating_sub(entry.version());
-            let observed = if lag > bound {
-                let mut attempts = 0u32;
-                loop {
-                    let receipt = transport.pull(
-                        shard,
-                        PullRequest { vertex: u, min_version: master_version },
-                        &|v| {
-                            debug_assert_eq!(v, u, "pull service asked for the wrong vertex");
-                            // SAFETY: Edge/Full scopes hold (at least) a
-                            // read lock on every neighbor, including `u`.
-                            let data = unsafe { graph.vertex_data_unchecked(u) };
-                            (data, sharded.master_version(u))
-                        },
-                    );
-                    out.pulls += 1;
-                    out.served += receipt.served as u64;
-                    out.bytes += receipt.bytes;
-                    crate::telemetry::instant(
-                        crate::telemetry::EventKind::StalePull,
-                        u as u64,
-                        lag,
-                    );
-                    // Re-measure after the pull: this is the staleness
-                    // the update function actually reads. The held read
-                    // lock freezes the master version, so anything above
-                    // `bound` here means the pull itself failed (lossy
-                    // or severed transport) — retry with backoff, then
-                    // give up rather than hang on a dead peer.
-                    let now = sharded.master_version(u).saturating_sub(entry.version());
-                    if now <= bound {
-                        break now;
-                    }
-                    attempts += 1;
-                    if attempts > retry_limit {
-                        out.timeouts += 1;
-                        break now;
-                    }
-                    out.retries += 1;
-                    crate::telemetry::instant(
-                        crate::telemetry::EventKind::PullRetry,
-                        u as u64,
-                        attempts as u64,
-                    );
-                    // Exponential spin backoff: deterministic (no sleeps,
-                    // no clocks), bounded at ~32k spins per attempt.
-                    for _ in 0..(32u32 << attempts.min(10)) {
-                        std::hint::spin_loop();
-                    }
-                }
+            let lag = sharded.master_version(u).saturating_sub(entry.version());
+            if lag > bound {
+                stale.push((gi as usize, u, lag));
             } else {
-                lag
-            };
-            crate::telemetry::observe_lag(observed);
-            if observed > out.max_lag {
-                out.max_lag = observed;
+                crate::telemetry::observe_lag(lag);
+                if lag > out.max_lag {
+                    out.max_lag = lag;
+                }
+            }
+        }
+        if stale.is_empty() {
+            return out;
+        }
+        // The owner-side pull service: the single place peer master data
+        // is read, shared by the batched pull and the retry fallback.
+        let master = |v: VertexId| {
+            // SAFETY: Edge/Full scopes hold (at least) a read lock on
+            // every neighbor, and only this scope's ghost neighbors are
+            // ever requested.
+            let data = unsafe { graph.vertex_data_unchecked(v) };
+            (data, sharded.master_version(v))
+        };
+        // Phase 2: one batched pull for the whole stale set — pipelining
+        // backends put every request on the wire before collecting the
+        // replies, overlapping the round-trips.
+        let reqs: Vec<PullRequest> = stale
+            .iter()
+            .map(|&(_, u, _)| PullRequest { vertex: u, min_version: sharded.master_version(u) })
+            .collect();
+        let receipts = transport.pull_many(shard, &reqs, &master);
+        for (i, &(gi, u, lag)) in stale.iter().enumerate() {
+            let receipt = &receipts[i];
+            out.pulls += 1;
+            out.served += receipt.served as u64;
+            out.bytes += receipt.bytes;
+            crate::telemetry::instant(
+                crate::telemetry::EventKind::StalePull,
+                u as u64,
+                lag,
+            );
+            let entry = sh.ghost(gi);
+            // Re-measure after the pull: this is the staleness the update
+            // function actually reads. The held read lock freezes the
+            // master version, so anything above `bound` here means the
+            // pull itself failed (lossy or severed transport) — retry
+            // with backoff, then give up rather than hang on a dead peer.
+            let mut now = sharded.master_version(u).saturating_sub(entry.version());
+            let mut attempts = 0u32;
+            while now > bound {
+                attempts += 1;
+                if attempts > retry_limit {
+                    out.timeouts += 1;
+                    break;
+                }
+                out.retries += 1;
+                crate::telemetry::instant(
+                    crate::telemetry::EventKind::PullRetry,
+                    u as u64,
+                    attempts as u64,
+                );
+                // Exponential spin backoff: deterministic (no sleeps,
+                // no clocks), bounded at ~32k spins per attempt.
+                for _ in 0..(32u32 << attempts.min(10)) {
+                    std::hint::spin_loop();
+                }
+                let receipt = transport.pull(
+                    shard,
+                    PullRequest { vertex: u, min_version: sharded.master_version(u) },
+                    &master,
+                );
+                out.pulls += 1;
+                out.served += receipt.served as u64;
+                out.bytes += receipt.bytes;
+                crate::telemetry::instant(
+                    crate::telemetry::EventKind::StalePull,
+                    u as u64,
+                    now,
+                );
+                now = sharded.master_version(u).saturating_sub(entry.version());
+            }
+            crate::telemetry::observe_lag(now);
+            if now > out.max_lag {
+                out.max_lag = now;
             }
         }
         out

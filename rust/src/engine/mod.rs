@@ -22,7 +22,9 @@ pub mod trace;
 
 pub use program::{Engine, Program};
 pub use sequential::SequentialEngine;
-pub use sharded::{ChannelShardedEngine, ShardedEngine, SocketShardedEngine};
+pub use sharded::{
+    ChannelShardedEngine, ShardedEngine, ShmShardedEngine, SocketShardedEngine,
+};
 pub use snapshot::Snapshot;
 pub use threaded::ThreadedEngine;
 
@@ -218,6 +220,18 @@ pub struct EngineConfig {
     /// once per sampling interval (e.g. a residual norm maintained by a
     /// sync). Only observed when [`EngineConfig::telemetry`] is set.
     pub progress_metric: Option<ProgressFn>,
+    /// Lock-free slot count of the per-shard injector rings (overflow and
+    /// cross-shard handoff). The `BENCH_sched.json` capacity sweep showed
+    /// a 6× throughput win moving 64 → 4096, so 4096 is the default; the
+    /// injector's mutex spill list still absorbs anything past the ring, so
+    /// small graphs only pay the (bounded) slot allocation.
+    pub injector_capacity: usize,
+    /// Pin each worker thread to a core (Linux `sched_setaffinity`): shard
+    /// `s`'s worker set maps onto a contiguous core block, so a shard's
+    /// workers share cache instead of migrating. No-op with a one-time
+    /// warning on other platforms. Successful pins are counted in
+    /// [`ContentionStats::pinned_workers`].
+    pub pin_workers: bool,
 }
 
 /// The telemetry sampler's convergence-scalar hook: reads the SDT (where
@@ -244,6 +258,8 @@ impl Default for EngineConfig {
             pull_retry_limit: 8,
             telemetry: None,
             progress_metric: None,
+            injector_capacity: 4096,
+            pin_workers: false,
         }
     }
 }
@@ -333,6 +349,16 @@ impl EngineConfig {
         f: impl Fn(&Sdt) -> f64 + Send + Sync + 'static,
     ) -> Self {
         self.progress_metric = Some(std::sync::Arc::new(f));
+        self
+    }
+
+    pub fn with_injector_capacity(mut self, slots: usize) -> Self {
+        self.injector_capacity = slots;
+        self
+    }
+
+    pub fn with_pin_workers(mut self, on: bool) -> Self {
+        self.pin_workers = on;
         self
     }
 }
@@ -440,6 +466,10 @@ pub struct ContentionStats {
     /// contributed its part for the epoch); the snapshots themselves are
     /// in [`RunReport::snapshots`].
     pub snapshots_taken: u64,
+    /// Worker threads successfully pinned to a core via
+    /// [`EngineConfig::pin_workers`]. Zero when pinning is off or
+    /// unsupported on this platform.
+    pub pinned_workers: u64,
     /// Per-worker conflict counts (index = worker id).
     pub per_worker_conflicts: Vec<u64>,
     /// Per-worker deferral counts (index = worker id).
@@ -525,6 +555,13 @@ mod tests {
         assert_eq!(d.pull_retry_limit, 8);
         assert!(d.telemetry.is_none(), "telemetry off by default");
         assert!(d.progress_metric.is_none());
+        assert_eq!(d.injector_capacity, 4096, "BENCH_sched cap-sweep default");
+        assert!(!d.pin_workers, "unpinned by default");
+        let e = EngineConfig::default()
+            .with_injector_capacity(64)
+            .with_pin_workers(true);
+        assert_eq!(e.injector_capacity, 64);
+        assert!(e.pin_workers);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //! ```
 
 use super::sequential::{SeqOptions, SequentialEngine};
-use super::sharded::{ChannelShardedEngine, ShardedEngine, SocketShardedEngine};
+use super::sharded::{
+    ChannelShardedEngine, ShardedEngine, ShmShardedEngine, SocketShardedEngine,
+};
 use super::threaded::ThreadedEngine;
 use super::trace::TaskTrace;
 use super::{EngineConfig, RunReport, TerminationFn, UpdateFn};
@@ -125,6 +127,24 @@ fn run_socket<V: VertexCodec + Clone + Send + Sync, E: Send + Sync>(
     sdt: &Sdt,
 ) -> RunReport {
     p.run_on(&SocketShardedEngine::new(p.config.shards), graph, scheduler, sdt)
+}
+
+fn run_socket_z<V: VertexCodec + Clone + Send + Sync, E: Send + Sync>(
+    p: &Program<'_, V, E>,
+    graph: &mut DataGraph<V, E>,
+    scheduler: &dyn Scheduler,
+    sdt: &Sdt,
+) -> RunReport {
+    p.run_on(&SocketShardedEngine::compressed(p.config.shards), graph, scheduler, sdt)
+}
+
+fn run_shm<V: VertexCodec + Clone + Send + Sync, E: Send + Sync>(
+    p: &Program<'_, V, E>,
+    graph: &mut DataGraph<V, E>,
+    scheduler: &dyn Scheduler,
+    sdt: &Sdt,
+) -> RunReport {
+    p.run_on(&ShmShardedEngine::new(p.config.shards), graph, scheduler, sdt)
 }
 
 /// A complete GraphLab program: graph-independent logic (update functions,
@@ -258,8 +278,11 @@ impl<'a, V, E> Program<'a, V, E> {
     /// writes, zero wire bytes), `"channel"` (serializing per-shard-pair
     /// byte queues), `"channel-compressed"` (the same queues carrying
     /// shadow-diffed varint frames — fewer bytes per delta for converging
-    /// algorithms), or `"socket"` (real Unix-domain-socket bytes with
-    /// bounded send windows and backpressure). The serializing backends
+    /// algorithms), `"shm"` (per-shard-pair lock-free SPSC byte rings over
+    /// process-shareable memory — the same-host fast lane), `"socket"`
+    /// (real Unix-domain-socket bytes with bounded send windows and
+    /// backpressure), or `"socket-z"` (the socket path carrying
+    /// shadow-diffed frames). The serializing backends
     /// require the vertex type to implement
     /// [`VertexCodec`](crate::transport::VertexCodec) — the bound lives on
     /// this setter, so programs that never call it keep the loose
@@ -285,13 +308,21 @@ impl<'a, V, E> Program<'a, V, E> {
                 self.transport_name = "channel-compressed";
                 self.wire = Some(run_channel_compressed::<V, E> as WireRunner<V, E>);
             }
+            "shm" => {
+                self.transport_name = "shm";
+                self.wire = Some(run_shm::<V, E> as WireRunner<V, E>);
+            }
             "socket" => {
                 self.transport_name = "socket";
                 self.wire = Some(run_socket::<V, E> as WireRunner<V, E>);
             }
+            "socket-z" => {
+                self.transport_name = "socket-z";
+                self.wire = Some(run_socket_z::<V, E> as WireRunner<V, E>);
+            }
             other => panic!(
                 "unknown ghost transport {other:?} (expected \"direct\", \"channel\", \
-                 \"channel-compressed\", or \"socket\")"
+                 \"channel-compressed\", \"shm\", \"socket\", or \"socket-z\")"
             ),
         }
         self
@@ -309,6 +340,23 @@ impl<'a, V, E> Program<'a, V, E> {
     /// [`EngineConfig::ghost_batch`]; `1` = synchronous per-update flush).
     pub fn ghost_batch(mut self, window: usize) -> Self {
         self.config.ghost_batch = window;
+        self
+    }
+
+    /// Lock-free slot count of the engines' injector rings (see
+    /// [`EngineConfig::injector_capacity`]; default 4096 per the
+    /// `BENCH_sched.json` capacity sweep). Overflow still spills to the
+    /// injector's mutex list, so any value is safe.
+    pub fn injector_capacity(mut self, slots: usize) -> Self {
+        self.config.injector_capacity = slots;
+        self
+    }
+
+    /// Pin worker threads to contiguous cores per shard (Linux
+    /// `sched_setaffinity`; no-op + warning elsewhere — see
+    /// [`EngineConfig::pin_workers`]).
+    pub fn pin_workers(mut self, on: bool) -> Self {
+        self.config.pin_workers = on;
         self
     }
 
@@ -651,7 +699,9 @@ mod tests {
             ("direct", false),
             ("channel", true),
             ("channel-compressed", true),
+            ("shm", true),
             ("socket", true),
+            ("socket-z", true),
         ] {
             let f = Bump { rounds: 5 };
             let program =

@@ -68,7 +68,7 @@ use crate::scheduler::{Injector, Scheduler, Task, WorkStealingDeque};
 use crate::sdt::{Sdt, SyncOp};
 use crate::telemetry::{self, EventKind, SampleSources, Telemetry};
 use crate::transport::{
-    ChannelTransport, DeltaBatcher, DirectTransport, FaultInjector, GhostTransport,
+    ChannelTransport, DeltaBatcher, DirectTransport, FaultInjector, GhostTransport, ShmTransport,
     SocketTransport, VertexCodec,
 };
 use crate::util::Timer;
@@ -89,21 +89,15 @@ const PENDING_ATTEMPTS: u32 = 16;
 /// Starting drain tick: a worker consults its shard's incoming transport
 /// queues every this many completed updates (on top of the
 /// idle/handoff/final drains), then adapts the tick per worker on the
-/// queued byte depth — see the drain logic in [`run_core`].
+/// queued byte depth — see the drain logic in [`run_core`]. Clamped into
+/// the backend's [`GhostTransport::drain_tick_bounds`] at run start: the
+/// socket-era `(8, 512)` default backs far off between inbox sweeps,
+/// while the shm rings advertise tight bounds so a cheap `pop_all` drain
+/// is never throttled into stale-replica churn.
 const DRAIN_TICK_START: u64 = 64;
 
-/// Tightest adaptive drain tick, selected while the queued bytes toward
-/// the worker's shard exceed [`DRAIN_HIGH_BYTES`]: bounds a queueing
-/// backend's buffers under sustained load.
-const DRAIN_TICK_MIN: u64 = 8;
-
-/// Loosest adaptive drain tick, reached by repeated empty checks: for
-/// apply-at-send backends (queued bytes structurally 0) the periodic
-/// drain decays to one cheap atomic read per 512 updates.
-const DRAIN_TICK_MAX: u64 = 512;
-
 /// Queued-byte watermark above which a worker drops its drain tick to
-/// [`DRAIN_TICK_MIN`].
+/// the backend's minimum bound.
 const DRAIN_HIGH_BYTES: u64 = 64 << 10;
 
 /// A split acquisition whose remote half is held while the local half was
@@ -263,14 +257,24 @@ pub struct SocketShardedEngine {
     /// Per-connection bounded send window in bytes (`0` = the transport
     /// default, [`crate::transport::DEFAULT_SEND_BUFFER`]). Senders that
     /// would overflow it stall — counted in
-    /// `ContentionStats::backpressure_stalls`.
+    /// `ContentionStats::backpressure_stalls`. Applies to the raw
+    /// variant; the compressed variant uses the default window.
     pub send_buffer: usize,
+    /// Ship shadow-diff compressed delta frames instead of raw ones —
+    /// see [`SocketTransport::compressed`] (transport name `"socket-z"`).
+    pub compress: bool,
 }
 
 impl SocketShardedEngine {
     /// Engine over `shards` shards with the default send window.
     pub fn new(shards: usize) -> SocketShardedEngine {
-        SocketShardedEngine { shards, send_buffer: 0 }
+        SocketShardedEngine { shards, send_buffer: 0, compress: false }
+    }
+
+    /// Like [`SocketShardedEngine::new`], but delta frames cross the
+    /// sockets shadow-diff compressed (transport name `"socket-z"`).
+    pub fn compressed(shards: usize) -> SocketShardedEngine {
+        SocketShardedEngine { shards, send_buffer: 0, compress: true }
     }
 
     /// Override the per-connection bounded send window (bytes).
@@ -286,7 +290,11 @@ where
     E: Send + Sync,
 {
     fn name(&self) -> &'static str {
-        "sharded-socket"
+        if self.compress {
+            "sharded-socket-z"
+        } else {
+            "sharded-socket"
+        }
     }
 
     fn execute(
@@ -300,9 +308,13 @@ where
         let requested = if self.shards > 0 { self.shards } else { config.shards };
         let sharded = ShardedGraph::new(graph, requested.max(1));
         let graph: &DataGraph<V, E> = graph;
-        let transport = match self.send_buffer {
-            0 => SocketTransport::new(&sharded),
-            cap => SocketTransport::with_send_buffer(&sharded, cap),
+        let transport = if self.compress {
+            SocketTransport::compressed(&sharded)
+        } else {
+            match self.send_buffer {
+                0 => SocketTransport::new(&sharded),
+                cap => SocketTransport::with_send_buffer(&sharded, cap),
+            }
         }
         .expect("failed to set up the unix-socket ghost transport");
         let snap = SnapshotCtl::from_config(config);
@@ -319,6 +331,97 @@ where
             snap.as_ref(),
         )
     }
+}
+
+/// Sharded engine back-end whose ghost traffic rides the [`ShmTransport`]:
+/// every delta crosses a per-shard-pair lock-free SPSC byte ring over
+/// process-shareable memory — the same-host fast lane a forked-shard
+/// topology would use, selected via `Program::transport("shm")`. Drains
+/// are a `memcpy` off the ring rather than an inbox sweep, so the
+/// transport advertises tight [`GhostTransport::drain_tick_bounds`] and
+/// the adaptive drain tick stays hot. Everything above the transport
+/// (scheduling, locking, batching, staleness) is identical to
+/// [`ShardedEngine`].
+#[derive(Debug, Clone, Default)]
+pub struct ShmShardedEngine {
+    /// Shard count (`0` defers to `EngineConfig::shards` at run time).
+    pub shards: usize,
+}
+
+impl ShmShardedEngine {
+    /// Engine over `shards` shards with the default ring capacity.
+    pub fn new(shards: usize) -> ShmShardedEngine {
+        ShmShardedEngine { shards }
+    }
+}
+
+impl<V, E> Engine<V, E> for ShmShardedEngine
+where
+    V: VertexCodec + Clone + Send + Sync,
+    E: Send + Sync,
+{
+    fn name(&self) -> &'static str {
+        "sharded-shm"
+    }
+
+    fn execute(
+        &self,
+        program: &Program<'_, V, E>,
+        graph: &mut DataGraph<V, E>,
+        scheduler: &dyn Scheduler,
+        sdt: &Sdt,
+    ) -> RunReport {
+        let config = &program.config;
+        let requested = if self.shards > 0 { self.shards } else { config.shards };
+        let sharded = ShardedGraph::new(graph, requested.max(1));
+        let graph: &DataGraph<V, E> = graph;
+        let transport = ShmTransport::new(&sharded);
+        let snap = SnapshotCtl::from_config(config);
+        run_with_faults(
+            graph,
+            &sharded,
+            &transport,
+            scheduler,
+            &program.fns,
+            sdt,
+            &program.syncs,
+            &program.terminators,
+            config,
+            snap.as_ref(),
+        )
+    }
+}
+
+/// Pin the calling worker thread to one CPU core (Linux
+/// `sched_setaffinity`; no-op elsewhere, with a one-time warning so a
+/// `pin_workers(true)` run on another platform is loud about ignoring the
+/// knob). Returns whether the pin took.
+#[cfg(target_os = "linux")]
+fn pin_worker_to_core(core: usize) -> bool {
+    // Hand-declared to stay std-only: pid 0 = the calling thread. The
+    // 1024-bit mask matches glibc's `cpu_set_t`.
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const usize) -> i32;
+    }
+    const MASK_WORDS: usize = 1024 / (usize::BITS as usize);
+    let mut mask = [0usize; MASK_WORDS];
+    let bit = core % 1024;
+    mask[bit / (usize::BITS as usize)] = 1usize << (bit % (usize::BITS as usize));
+    unsafe {
+        sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_worker_to_core(_core: usize) -> bool {
+    static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+    WARN_ONCE.call_once(|| {
+        eprintln!(
+            "graphlab: pin_workers is only implemented on Linux \
+             (sched_setaffinity); running unpinned"
+        );
+    });
+    false
 }
 
 /// Close a worker's sync window: ship every batched delta and fold the
@@ -467,16 +570,31 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     // per-shard overflow injectors.
     let retry: Vec<WorkStealingDeque<Task>> =
         (0..workers).map(|_| WorkStealingDeque::new(LOCAL_DEQUE_CAP)).collect();
+    // Ring capacity from config (default 4096 per the BENCH_sched cap
+    // sweep); the injector's overflow list still absorbs anything past
+    // it, so small graphs only pay the slot allocation.
     let overflows: Vec<Injector<Task>> =
-        (0..k).map(|_| Injector::new(LOCAL_DEQUE_CAP * per_shard)).collect();
+        (0..k).map(|_| Injector::new(config.injector_capacity)).collect();
     // Cross-shard handoff rings: tasks popped by the wrong shard's
     // worker ride these to the owner shard (the emulated network hop).
     let rings: Vec<Injector<Task>> =
-        (0..k).map(|_| Injector::new(LOCAL_DEQUE_CAP * per_shard)).collect();
+        (0..k).map(|_| Injector::new(config.injector_capacity)).collect();
     let pending_retries = AtomicUsize::new(0);
     let defer_age: Vec<AtomicU32> =
         (0..graph.num_vertices()).map(|_| AtomicU32::new(0)).collect();
     let workers_remaining = AtomicUsize::new(workers);
+    // Worker-core pinning (opt-in): shard `s`'s worker set maps onto the
+    // contiguous core block starting at `s * per_shard`, wrapping at the
+    // machine's core count — the owner-affinity layout, so a shard's
+    // workers share cache with each other (and with their block of vertex
+    // data) instead of migrating.
+    let total_pinned = AtomicU64::new(0);
+    let ncores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // The backend's adaptive drain-tick bounds (satellite of the wire
+    // fast path): cheap-drain backends advertise tight bounds, so the
+    // clamp below keeps them from inheriting socket-era backoff.
+    let (tick_min, tick_max) = transport.drain_tick_bounds();
+    let tick_start = DRAIN_TICK_START.clamp(tick_min, tick_max);
     // Telemetry: one ring per worker plus the "engine" control track the
     // main thread binds during the final transport drain (so post-join
     // wire applies are still recorded).
@@ -569,8 +687,12 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
             let transport = transport;
             let sharded = sharded;
             let tel = &tel;
+            let total_pinned = &total_pinned;
             s.spawn(move || {
                 let _tel_bind = tel.as_ref().map(|t| t.bind_worker(w));
+                if config.pin_workers && pin_worker_to_core(w % ncores) {
+                    total_pinned.fetch_add(1, Ordering::Relaxed);
+                }
                 let mut local_updates: u64 = 0;
                 let mut conflicts: u64 = 0;
                 let mut deferrals: u64 = 0;
@@ -593,7 +715,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                 // Highest snapshot epoch this worker has adopted.
                 let mut my_snap_epoch: u64 = 0;
                 // Adaptive drain tick (worker-local, tuned on queued bytes).
-                let mut drain_tick: u64 = DRAIN_TICK_START;
+                let mut drain_tick: u64 = tick_start;
                 let mut since_drain: u64 = 0;
                 let mut idle_spins: u32 = 0;
                 // Interior-path adaptive ladder (worker-local).
@@ -1100,23 +1222,26 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                     // this shard even when the worker never idles, so a
                     // queueing backend's buffers stay bounded under
                     // sustained load. The tick adapts to the queued byte
-                    // depth — empty checks back it off toward
-                    // DRAIN_TICK_MAX (apply-at-send backends decay to a
+                    // depth within the backend's advertised
+                    // `drain_tick_bounds` — empty checks back it off toward
+                    // `tick_max` (apply-at-send backends decay to a
                     // cheap no-op), a backlog past DRAIN_HIGH_BYTES
-                    // tightens it to DRAIN_TICK_MIN.
+                    // tightens it to `tick_min`. Cheap-drain backends like
+                    // shm advertise tight bounds so they are never stuck
+                    // in socket-era backoff.
                     if k > 1 {
                         since_drain += 1;
                         if since_drain >= drain_tick {
                             since_drain = 0;
                             let queued = transport.queued_bytes(my_shard);
                             if queued == 0 {
-                                drain_tick = (drain_tick * 2).min(DRAIN_TICK_MAX);
+                                drain_tick = (drain_tick * 2).min(tick_max);
                             } else {
                                 ghost_syncs += transport.drain(my_shard).applied;
                                 drain_tick = if queued >= DRAIN_HIGH_BYTES {
-                                    DRAIN_TICK_MIN
+                                    tick_min
                                 } else {
-                                    drain_tick.min(DRAIN_TICK_START)
+                                    drain_tick.min(tick_start)
                                 };
                             }
                         }
@@ -1259,6 +1384,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                 + transport.pull_timeouts(),
             reconnect_backoffs: transport.reconnect_backoffs(),
             snapshots_taken: snapshots.len() as u64,
+            pinned_workers: total_pinned.load(Ordering::Acquire),
             per_worker_conflicts,
             per_worker_deferrals,
         },
@@ -1421,6 +1547,34 @@ mod tests {
         assert!(c.bytes_shipped > 0, "socket backend really ships bytes");
         assert!(c.ghost_syncs <= 80);
         assert_eq!(c.pulls_served, c.staleness_pulls, "pulls ride the socket");
+    }
+
+    #[test]
+    fn shm_backend_matches_direct_on_ring() {
+        let n = 64;
+        let f = SelfBump { rounds: 10 };
+        let program = Program::new()
+            .update_fn(&f)
+            .workers(4)
+            .model(ConsistencyModel::Full);
+        let mut g = ring(n);
+        let sched = MultiQueueFifo::new(n, 4);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let report =
+            program.run_on(&ShmShardedEngine::new(4), &mut g, &sched, &Sdt::new());
+        assert_eq!(report.updates, n as u64 * 10);
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), 10, "vertex {v}");
+        }
+        let c = &report.contention;
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.boundary_updates, 80);
+        assert_eq!(c.deltas_sent, 80);
+        assert!(c.bytes_shipped > 0, "shm backend really ships bytes");
+        assert!(c.ghost_syncs <= 80);
+        assert_eq!(c.pulls_served, c.staleness_pulls, "pulls ride the rings");
     }
 
     #[test]

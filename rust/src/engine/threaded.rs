@@ -152,7 +152,8 @@ impl ThreadedEngine {
         // absorbs overflow from a saturated deque.
         let retry: Vec<WorkStealingDeque<Task>> =
             (0..workers).map(|_| WorkStealingDeque::new(LOCAL_DEQUE_CAP)).collect();
-        let overflow: Injector<Task> = Injector::new(LOCAL_DEQUE_CAP * workers);
+        let overflow: Injector<Task> =
+            Injector::new(config.injector_capacity.max(LOCAL_DEQUE_CAP * workers));
         // Deferred tasks currently waiting in a deque or the injector
         // (conservative upper bound; gates the steal scan).
         let pending_retries = AtomicUsize::new(0);

@@ -207,6 +207,9 @@ pub fn run_summary(report: &crate::engine::RunReport) -> String {
             c.auto_steal_half_flips
         );
     }
+    if c.pinned_workers > 0 {
+        let _ = writeln!(out, "pinning: {} workers pinned to cores", c.pinned_workers);
+    }
     if let Some(t) = &report.telemetry {
         let _ = writeln!(
             out,
@@ -478,8 +481,9 @@ mod tests {
             pull_timeouts: 4022,
             reconnect_backoffs: 4023,
             snapshots_taken: 4024,
-            per_worker_conflicts: vec![4025, 4026],
-            per_worker_deferrals: vec![4027, 4028],
+            pinned_workers: 4025,
+            per_worker_conflicts: vec![4026, 4027],
+            per_worker_deferrals: vec![4028, 4029],
         };
         let report = crate::engine::RunReport {
             updates: 10000,
@@ -492,7 +496,7 @@ mod tests {
             telemetry: None,
         };
         let text = run_summary(&report);
-        for magic in 4001..=4028u64 {
+        for magic in 4001..=4029u64 {
             assert!(
                 text.contains(&magic.to_string()),
                 "counter value {magic} missing from summary:\n{text}"

@@ -40,7 +40,11 @@
 //! peer master data directly. A new backend slots in with one
 //! [`GhostTransport`] impl — everything above the trait (batching,
 //! staleness, counters) is backend-agnostic; [`SocketTransport`] is
-//! exactly that: the same frames moved as real Unix-domain-socket bytes.
+//! exactly that: the same frames moved as real Unix-domain-socket bytes
+//! (with vectored `writev` flushes batching every staged frame for a
+//! destination into one syscall), and [`ShmTransport`] is the same-host
+//! fast lane: per-shard-pair lock-free SPSC byte rings over
+//! process-shareable memory (see [`ShmTransport`] for the ring layout).
 //! [`FaultInjector`] exploits the same seam in the other direction: it
 //! wraps any backend in a deterministic lossy wire (drops, duplicates,
 //! delays/reorders, severed pulls) to prove the invariants above actually
@@ -67,8 +71,12 @@
 //! fallback when the diff would not be smaller) for converging algorithms
 //! that re-ship nearly identical payloads — see [`encode_delta`] /
 //! [`decode_header`] / [`decode_payload`] and
-//! [`ChannelTransport::compressed`]. Pull frames stay raw on every
-//! backend.
+//! [`ChannelTransport::compressed`]. The socket backend supports the same
+//! compressed frames over real kernel bytes
+//! ([`SocketTransport::compressed`], exposed as `"socket-z"`), wrapped in
+//! a `u32 src, u32 len` envelope with an in-band shadow-reset marker so a
+//! reconnect can never desync the diff shadows. Pull frames stay raw on
+//! every backend.
 
 #![warn(missing_docs)]
 
@@ -77,6 +85,7 @@ mod codec;
 mod compress;
 mod direct;
 mod fault;
+mod shm;
 mod socket;
 
 pub use channel::ChannelTransport;
@@ -88,6 +97,7 @@ pub use compress::{
 };
 pub use direct::DirectTransport;
 pub use fault::{FaultInjector, FaultPlan};
+pub use shm::{shm_ring, ShmConsumer, ShmProducer, ShmTransport, DEFAULT_RING_CAPACITY};
 pub use socket::{SocketTransport, DEFAULT_SEND_BUFFER};
 
 use crate::graph::VertexId;
@@ -242,6 +252,33 @@ pub trait GhostTransport<V>: Send + Sync {
         req: PullRequest,
         master: &dyn Fn(VertexId) -> (&'m V, u64),
     ) -> PullReceipt;
+
+    /// Issue a batch of staleness pulls. The default loops
+    /// [`GhostTransport::pull`] one request at a time; backends with real
+    /// request/reply lanes override this to **pipeline**: every request
+    /// frame crosses toward its owner before the first reply is read, so
+    /// a scope with many stale ghosts pays one lane acquisition instead
+    /// of N lock-step round-trips. Receipts are returned in request
+    /// order; a request whose vertex is owned by `dst_shard` itself gets
+    /// a default (unserved) receipt.
+    fn pull_many<'m>(
+        &self,
+        dst_shard: usize,
+        reqs: &[PullRequest],
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> Vec<PullReceipt> {
+        reqs.iter().map(|req| self.pull(dst_shard, *req, master)).collect()
+    }
+
+    /// `(min, max)` bounds for the sharded engine's adaptive drain tick:
+    /// how many interior tasks a worker may run between `queued_bytes`
+    /// probes. The defaults are the socket-era bounds (drains cost a
+    /// syscall-ish inbox sweep, so backing off far is worth it); cheap
+    /// backends like the shm rings override with much tighter bounds so
+    /// the adaptive tick cannot throttle them into stale-replica churn.
+    fn drain_tick_bounds(&self) -> (u64, u64) {
+        (8, 512)
+    }
 
     /// Does `send` apply replicas synchronously in place? When true and
     /// the engine runs in synchronous mode (sync window 1, staleness

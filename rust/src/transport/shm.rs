@@ -1,0 +1,775 @@
+//! The **shared-memory ring backend**: per-shard-pair lock-free SPSC byte
+//! rings over process-shareable memory — the same-host fast lane between
+//! the in-process [`ChannelTransport`](super::ChannelTransport) and the
+//! kernel-socket [`SocketTransport`](super::SocketTransport).
+//!
+//! Each ordered shard pair `src → dst` owns one [`ShmRing`]: a
+//! power-of-two byte ring whose backing region is a memory-mapped shared
+//! file on Linux (`MAP_SHARED`, unlinked immediately after mapping — the
+//! layout a forked-shard topology can adopt unchanged), with an aligned
+//! heap allocation as the portable fallback. The region starts with two
+//! cache-line-padded monotonic `u64` cursors:
+//!
+//! ```text
+//! | head (consumer, 64 B line) | tail (producer, 64 B line) | data: 2^n bytes |
+//! ```
+//!
+//! The producer copies a whole frame in (two-part copy across the wrap
+//! seam) and only then advances `tail` with a release store — **batch
+//! publication of whole frames**, so the consumer's acquire load of
+//! `tail` can never observe a torn frame. The consumer copies every
+//! published byte out and retires it with a release store of `head`.
+//! Between the two sides the ring is lock-free; because several workers
+//! of one shard share each side, the transport serializes *same-side*
+//! access with a per-ring producer mutex and consumer mutex (never held
+//! across the ring — producer and consumer still run concurrently).
+//!
+//! A full ring is **backpressure**: the sender spins, then yields, then
+//! sleeps (counted in [`GhostTransport::backpressure_stalls`]), and
+//! periodically drains its own shard's inbound rings while it waits so
+//! two shards saturating each other's rings cannot deadlock. Staleness
+//! pulls ride dedicated request/reply ring pairs per ordered shard pair,
+//! and [`GhostTransport::pull_many`] pipelines a batch: every request
+//! frame crosses the request ring before the first reply is served, so a
+//! batch of stale ghosts costs one lane acquisition instead of N
+//! round-trips ([`ShmTransport::pulls_pipelined`] counts the batched
+//! requests).
+//!
+//! Delta frames are the raw wire format (`u32 vertex, u64 version, u32
+//! len, payload`); pull frames are raw on every backend. Frames are
+//! self-contained, so `drain` moves the published bytes out under the
+//! consumer mutex and decodes outside it, exactly like the raw channel
+//! and socket paths.
+
+use super::{
+    ByteReader, DrainReceipt, GhostDelta, GhostTransport, PullReceipt, PullRequest, SendReceipt,
+    VertexCodec,
+};
+use crate::graph::{ShardedGraph, VertexId};
+use crate::telemetry::{self, EventKind};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Default per-pair delta-ring capacity (bytes, power of two). Small
+/// enough that a `k × k` mesh stays modest, large enough that the
+/// periodic drain tick — not ring exhaustion — is the normal consumer.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 18;
+
+/// Pull request/reply rings are small: requests are fixed 12-byte frames
+/// and replies are drained by the same thread that serves them.
+const PULL_RING_CAPACITY: usize = 1 << 16;
+
+/// Pull requests put in flight per pipelined wave — bounded so a wave of
+/// encoded requests always fits the request ring with room to spare.
+const PULL_PIPELINE_MAX: usize = 256;
+
+/// Spin iterations in a backpressure stall before each sleep; every
+/// [`STALL_SELF_DRAIN`] iterations the stalled sender drains its own
+/// shard's inbound rings to break send/send cycles between shard pairs.
+const STALL_SPINS: u32 = 64;
+const STALL_SELF_DRAIN: u32 = 256;
+
+/// Bytes reserved at the start of the shared region for the two
+/// cache-line-padded cursors.
+const HEADER_BYTES: usize = 128;
+const CACHE_LINE: usize = 64;
+
+#[cfg(target_os = "linux")]
+mod mm {
+    //! Minimal `mmap` shim over the libc the Rust runtime already links.
+    //! No new dependency: just the two syscall wrappers and the three
+    //! flag constants the ring needs.
+    use std::fs::OpenOptions;
+    use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    const PROT_READ: i32 = 0x1;
+    const PROT_WRITE: i32 = 0x2;
+    const MAP_SHARED: i32 = 0x01;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+
+    /// Map `len` zeroed, process-shareable bytes backed by an unlinked
+    /// temp file. `None` on any failure (the caller falls back to heap).
+    pub(super) fn map_shared(len: usize) -> Option<*mut u8> {
+        let path = std::env::temp_dir().join(format!(
+            "graphlab-shm-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .ok()?;
+        let mapped = file.set_len(len as u64).ok().map(|()| unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        });
+        // The path only exists to establish the mapping: unlink it now so
+        // nothing leaks even on abort. The mapping survives both the
+        // unlink and the fd close.
+        let _ = std::fs::remove_file(&path);
+        let ptr = mapped?;
+        if ptr as isize == -1 {
+            return None;
+        }
+        Some(ptr as *mut u8)
+    }
+
+    pub(super) fn unmap(ptr: *mut u8, len: usize) {
+        unsafe { munmap(ptr as *mut core::ffi::c_void, len) };
+    }
+}
+
+/// How the shared region is backed.
+enum Backing {
+    /// Memory-mapped shared file (Linux fast path).
+    #[cfg(target_os = "linux")]
+    Mapped { len: usize },
+    /// Cache-line-aligned heap allocation (portable fallback).
+    Heap { layout: std::alloc::Layout },
+}
+
+/// The region shared by one producer/consumer pair: two padded cursors
+/// plus the data bytes. Only ever touched through the split handles.
+struct RingShared {
+    base: *mut u8,
+    cap: usize,
+    backing: Backing,
+}
+
+// SAFETY: the region is plain bytes plus two AtomicU64 cursors; all
+// cross-thread publication goes through those atomics (release stores of
+// `tail`/`head`, acquire loads on the opposite side), and the split
+// handles guarantee a single producer and a single consumer (`&mut self`
+// on every mutating method).
+unsafe impl Send for RingShared {}
+unsafe impl Sync for RingShared {}
+
+impl RingShared {
+    fn new(capacity: usize) -> RingShared {
+        let cap = capacity.next_power_of_two().max(4096);
+        let len = HEADER_BYTES + cap;
+        #[cfg(target_os = "linux")]
+        if let Some(base) = mm::map_shared(len) {
+            return RingShared { base, cap, backing: Backing::Mapped { len } };
+        }
+        let layout = std::alloc::Layout::from_size_align(len, CACHE_LINE).unwrap();
+        let base = unsafe { std::alloc::alloc_zeroed(layout) };
+        assert!(!base.is_null(), "shm ring allocation failed");
+        RingShared { base, cap, backing: Backing::Heap { layout } }
+    }
+
+    fn head(&self) -> &AtomicU64 {
+        // SAFETY: base is valid for the whole region, 64-byte aligned
+        // (page-aligned mmap or CACHE_LINE-aligned alloc), and offset 0
+        // holds the consumer cursor.
+        unsafe { &*(self.base as *const AtomicU64) }
+    }
+
+    fn tail(&self) -> &AtomicU64 {
+        // SAFETY: as `head`, one cache line in.
+        unsafe { &*(self.base.add(CACHE_LINE) as *const AtomicU64) }
+    }
+
+    fn data(&self) -> *mut u8 {
+        // SAFETY: the data region starts after the two cursor lines.
+        unsafe { self.base.add(HEADER_BYTES) }
+    }
+
+    fn readable(&self) -> usize {
+        let tail = self.tail().load(Ordering::Acquire);
+        let head = self.head().load(Ordering::Acquire);
+        (tail - head) as usize
+    }
+}
+
+impl Drop for RingShared {
+    fn drop(&mut self) {
+        match self.backing {
+            #[cfg(target_os = "linux")]
+            Backing::Mapped { len } => mm::unmap(self.base, len),
+            Backing::Heap { layout } => unsafe { std::alloc::dealloc(self.base, layout) },
+        }
+    }
+}
+
+/// Producer half of an SPSC [`ShmRing`]. `&mut self` on the mutating
+/// method keeps the single-producer contract in the type system; clone-
+/// free whole-frame publication means a reader never sees a torn frame.
+pub struct ShmProducer {
+    ring: Arc<RingShared>,
+}
+
+/// Consumer half of an SPSC [`ShmRing`].
+pub struct ShmConsumer {
+    ring: Arc<RingShared>,
+}
+
+/// Create one shared-memory SPSC byte ring of (at least) `capacity`
+/// bytes — rounded up to a power of two — and split it into its producer
+/// and consumer handles. The backing region is a memory-mapped shared
+/// file on Linux, an aligned heap block elsewhere.
+pub fn shm_ring(capacity: usize) -> (ShmProducer, ShmConsumer) {
+    let ring = Arc::new(RingShared::new(capacity));
+    (ShmProducer { ring: Arc::clone(&ring) }, ShmConsumer { ring })
+}
+
+impl ShmProducer {
+    /// Data capacity in bytes (power of two).
+    pub fn capacity(&self) -> usize {
+        self.ring.cap
+    }
+
+    /// Bytes currently published and not yet consumed.
+    pub fn readable_bytes(&self) -> usize {
+        self.ring.readable()
+    }
+
+    /// Publish one whole frame. Returns `false` (publishing nothing) when
+    /// the frame does not currently fit — the caller's backpressure path.
+    /// A frame larger than the ring capacity can never fit.
+    pub fn try_push(&mut self, frame: &[u8]) -> bool {
+        let r = &*self.ring;
+        if frame.len() > r.cap {
+            return false;
+        }
+        let head = r.head().load(Ordering::Acquire);
+        // Relaxed: this handle is the only writer of `tail`.
+        let tail = r.tail().load(Ordering::Relaxed);
+        let free = r.cap - (tail - head) as usize;
+        if frame.len() > free {
+            return false;
+        }
+        let at = tail as usize & (r.cap - 1);
+        let first = frame.len().min(r.cap - at);
+        // SAFETY: [at, at + first) and [0, len - first) are inside the
+        // data region, and the occupancy check above proves the consumer
+        // is not reading them.
+        unsafe {
+            std::ptr::copy_nonoverlapping(frame.as_ptr(), r.data().add(at), first);
+            std::ptr::copy_nonoverlapping(
+                frame.as_ptr().add(first),
+                r.data(),
+                frame.len() - first,
+            );
+        }
+        // Whole-frame publication: the release store is the only point
+        // the consumer can observe the new bytes.
+        r.tail().store(tail + frame.len() as u64, Ordering::Release);
+        true
+    }
+}
+
+impl ShmConsumer {
+    /// Data capacity in bytes (power of two).
+    pub fn capacity(&self) -> usize {
+        self.ring.cap
+    }
+
+    /// Bytes currently published and not yet consumed.
+    pub fn readable_bytes(&self) -> usize {
+        self.ring.readable()
+    }
+
+    /// Move every published byte into `out` (appending) and retire it.
+    /// Returns the bytes moved. Because producers publish whole frames,
+    /// the bytes always parse as a sequence of complete frames.
+    pub fn pop_all(&mut self, out: &mut Vec<u8>) -> usize {
+        let r = &*self.ring;
+        let tail = r.tail().load(Ordering::Acquire);
+        // Relaxed: this handle is the only writer of `head`.
+        let head = r.head().load(Ordering::Relaxed);
+        let avail = (tail - head) as usize;
+        if avail == 0 {
+            return 0;
+        }
+        let at = head as usize & (r.cap - 1);
+        let first = avail.min(r.cap - at);
+        // SAFETY: the published range is initialized and the producer
+        // never overwrites bytes the consumer has not retired.
+        unsafe {
+            out.extend_from_slice(std::slice::from_raw_parts(r.data().add(at), first));
+            out.extend_from_slice(std::slice::from_raw_parts(r.data(), avail - first));
+        }
+        // Retire: the release store lets the producer reuse the space.
+        r.head().store(tail, Ordering::Release);
+        avail
+    }
+}
+
+/// One ordered-pair pull lane: a request ring and a reply ring plus the
+/// scratch buffers both ends reuse. The lane mutex serializes whole
+/// exchanges; the rings still move every byte through the shared region.
+struct PullLane {
+    req_tx: ShmProducer,
+    req_rx: ShmConsumer,
+    rep_tx: ShmProducer,
+    rep_rx: ShmConsumer,
+    req_buf: Vec<u8>,
+    rep_buf: Vec<u8>,
+}
+
+impl PullLane {
+    fn new() -> PullLane {
+        let (req_tx, req_rx) = shm_ring(PULL_RING_CAPACITY);
+        let (rep_tx, rep_rx) = shm_ring(PULL_RING_CAPACITY);
+        PullLane { req_tx, req_rx, rep_tx, rep_rx, req_buf: Vec::new(), rep_buf: Vec::new() }
+    }
+}
+
+/// Push a frame onto a pull-lane ring, spinning if it is momentarily
+/// full. Pull lanes are drained by the same locked exchange that fills
+/// them, so a full ring here is transient by construction.
+fn lane_push(tx: &mut ShmProducer, frame: &[u8]) {
+    while !tx.try_push(frame) {
+        std::hint::spin_loop();
+    }
+}
+
+/// Ghost transport over `k × k` shared-memory SPSC rings
+/// (`ring[src * k + dst]`) plus per-ordered-pair pull lanes. See the
+/// module docs for the ring layout and backpressure semantics.
+pub struct ShmTransport<'g, V> {
+    graph: &'g ShardedGraph<V>,
+    k: usize,
+    /// Producer halves, indexed `src * k + dst`; the mutex serializes the
+    /// sending shard's workers, not the ring's two sides.
+    producers: Vec<Mutex<ShmProducer>>,
+    /// Consumer halves, indexed `src * k + dst`; the mutex serializes the
+    /// receiving shard's workers.
+    consumers: Vec<Mutex<ShmConsumer>>,
+    /// Pull lanes, indexed `requester * k + owner`.
+    pulls: Vec<Mutex<PullLane>>,
+    backpressure: AtomicU64,
+    pipelined: AtomicU64,
+}
+
+impl<'g, V> ShmTransport<'g, V> {
+    /// Set up the `k × k` delta rings and pull lanes for `graph` with the
+    /// default ring capacity.
+    pub fn new(graph: &'g ShardedGraph<V>) -> ShmTransport<'g, V> {
+        ShmTransport::with_ring_capacity(graph, DEFAULT_RING_CAPACITY)
+    }
+
+    /// Like [`ShmTransport::new`] with an explicit per-pair delta-ring
+    /// capacity (rounded up to a power of two). Small rings exercise the
+    /// wraparound and backpressure paths; the capacity must exceed the
+    /// largest delta frame.
+    pub fn with_ring_capacity(graph: &'g ShardedGraph<V>, capacity: usize) -> ShmTransport<'g, V> {
+        let k = graph.num_shards();
+        let mut producers = Vec::with_capacity(k * k);
+        let mut consumers = Vec::with_capacity(k * k);
+        for _ in 0..k * k {
+            let (tx, rx) = shm_ring(capacity);
+            producers.push(Mutex::new(tx));
+            consumers.push(Mutex::new(rx));
+        }
+        ShmTransport {
+            graph,
+            k,
+            producers,
+            consumers,
+            pulls: (0..k * k).map(|_| Mutex::new(PullLane::new())).collect(),
+            backpressure: AtomicU64::new(0),
+            pipelined: AtomicU64::new(0),
+        }
+    }
+
+    /// Pull requests that crossed a lane as part of a pipelined wave
+    /// (more than one request in flight on the lane at once).
+    pub fn pulls_pipelined(&self) -> u64 {
+        self.pipelined.load(Ordering::Relaxed)
+    }
+}
+
+impl<V: VertexCodec + Clone + Send + Sync> ShmTransport<'_, V> {
+    /// Decode and apply one batch of raw delta frames to `dst_shard`'s
+    /// ghost table (newest version wins).
+    fn apply_frames(&self, dst_shard: usize, buf: &[u8], out: &mut DrainReceipt) {
+        let shard = self.graph.shard(dst_shard);
+        out.bytes += buf.len() as u64;
+        let mut r = ByteReader::new(buf);
+        while !r.is_empty() {
+            let Some(delta) = GhostDelta::decode_from(&mut r) else {
+                debug_assert!(false, "torn frame left the shm ring toward {dst_shard}");
+                break;
+            };
+            let Some(value) = delta.decode_vertex::<V>() else {
+                debug_assert!(false, "codec round-trip failed for vertex {}", delta.vertex);
+                continue;
+            };
+            if let Some(entry) = shard.ghost_of(delta.vertex) {
+                if entry.store_versioned(&value, delta.version) {
+                    out.applied += 1;
+                    telemetry::instant(EventKind::WireApply, delta.vertex as u64, delta.version);
+                }
+            }
+        }
+    }
+
+    /// One owner-group pipelined pull wave: every request frame crosses
+    /// the request ring before the first reply is served, then replies
+    /// stream back through the reply ring and apply in request order.
+    fn pull_wave<'m>(
+        &self,
+        dst_shard: usize,
+        owner: usize,
+        reqs: &[PullRequest],
+        receipts: &mut [PullReceipt],
+        idxs: &[usize],
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) {
+        let mut lane = self.pulls[dst_shard * self.k + owner].lock().unwrap();
+        for wave in idxs.chunks(PULL_PIPELINE_MAX) {
+            // Phase 1 — requester side: put the whole wave in flight.
+            let mut frame = Vec::with_capacity(PullRequest::WIRE_LEN);
+            for &i in wave {
+                frame.clear();
+                reqs[i].encode_into(&mut frame);
+                lane_push(&mut lane.req_tx, &frame);
+                receipts[i].bytes += PullRequest::WIRE_LEN as u64;
+            }
+            if wave.len() > 1 {
+                self.pipelined.fetch_add(wave.len() as u64, Ordering::Relaxed);
+            }
+            // Phase 2 — owner side: drain the request batch off the ring
+            // and serve each fixed-size request in order.
+            lane.req_buf.clear();
+            let PullLane { req_tx: _, req_rx, rep_tx, rep_rx, req_buf, rep_buf } = &mut *lane;
+            req_rx.pop_all(req_buf);
+            debug_assert_eq!(req_buf.len(), wave.len() * PullRequest::WIRE_LEN);
+            rep_buf.clear();
+            for raw in req_buf.chunks_exact(PullRequest::WIRE_LEN) {
+                let Some(reply) = super::serve_pull::<V>(raw, master) else {
+                    debug_assert!(false, "corrupt pull request on {dst_shard}->{owner}");
+                    continue;
+                };
+                lane_push(rep_tx, &reply);
+                // Requester side drains eagerly (same thread plays both
+                // ends), so the reply ring never fills mid-wave.
+                rep_rx.pop_all(rep_buf);
+            }
+            // Phase 3 — requester side: apply the reply stream in order.
+            let mut rest: &[u8] = rep_buf;
+            for &i in wave {
+                if rest.len() < 16 {
+                    debug_assert!(rest.is_empty(), "truncated pull reply on {owner}->{dst_shard}");
+                    break;
+                }
+                let payload_len =
+                    u32::from_le_bytes([rest[12], rest[13], rest[14], rest[15]]) as usize;
+                let frame_len = 16 + payload_len;
+                let (raw, after) = rest.split_at(frame_len.min(rest.len()));
+                rest = after;
+                let Some(applied) = super::apply_pull_reply(self.graph, dst_shard, raw) else {
+                    debug_assert!(false, "corrupt pull reply on {owner}->{dst_shard}");
+                    continue;
+                };
+                receipts[i].applied = applied;
+                receipts[i].served = true;
+                receipts[i].bytes += raw.len() as u64;
+            }
+        }
+    }
+}
+
+impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for ShmTransport<'_, V> {
+    fn name(&self) -> &'static str {
+        "shm"
+    }
+
+    fn send(&self, src_shard: usize, vertex: VertexId, version: u64, data: &V) -> SendReceipt {
+        let sites = self.graph.replicas_of(vertex);
+        if sites.is_empty() {
+            return SendReceipt::default();
+        }
+        telemetry::instant(EventKind::WireSend, vertex as u64, version);
+        let delta = GhostDelta::from_vertex(vertex, version, data);
+        let mut frame = Vec::with_capacity(delta.wire_len());
+        delta.encode_into(&mut frame);
+        let mut bytes = 0u64;
+        for &(s, gi) in sites {
+            // Advance the pending slot before the bytes are published so
+            // a staleness probe never sees an unaccounted in-flight
+            // version.
+            self.graph.shard(s as usize).ghost(gi as usize).note_pending(version);
+            let mut tx = self.producers[src_shard * self.k + s as usize].lock().unwrap();
+            assert!(
+                frame.len() <= tx.capacity(),
+                "delta frame ({} B) exceeds shm ring capacity ({} B)",
+                frame.len(),
+                tx.capacity()
+            );
+            if !tx.try_push(&frame) {
+                // Backpressure: spin, then yield, then sleep; drain our
+                // own inbound rings periodically so two shards saturating
+                // each other's rings cannot deadlock.
+                self.backpressure.fetch_add(1, Ordering::Relaxed);
+                let span = telemetry::span_start();
+                let mut iters = 0u32;
+                while !tx.try_push(&frame) {
+                    iters += 1;
+                    if iters % STALL_SELF_DRAIN == 0 {
+                        self.drain(src_shard);
+                    }
+                    if iters < STALL_SPINS {
+                        std::hint::spin_loop();
+                    } else if iters < STALL_SPINS * 2 {
+                        std::thread::yield_now();
+                    } else {
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                }
+                telemetry::span_end(
+                    EventKind::Backpressure,
+                    span,
+                    vertex as u64,
+                    frame.len() as u64,
+                );
+            }
+            bytes += frame.len() as u64;
+        }
+        SendReceipt { replicas_now: 0, bytes }
+    }
+
+    fn drain(&self, dst_shard: usize) -> DrainReceipt {
+        let mut out = DrainReceipt::default();
+        let mut buf = Vec::new();
+        for src in 0..self.k {
+            buf.clear();
+            {
+                let mut rx = self.consumers[src * self.k + dst_shard].lock().unwrap();
+                rx.pop_all(&mut buf);
+            }
+            if buf.is_empty() {
+                continue;
+            }
+            // Raw frames are self-contained: decode outside the consumer
+            // mutex (newest-wins makes cross-worker interleaving safe).
+            self.apply_frames(dst_shard, &buf, &mut out);
+        }
+        out
+    }
+
+    fn pull<'m>(
+        &self,
+        dst_shard: usize,
+        req: PullRequest,
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> PullReceipt {
+        let owner = self.graph.owner_of(req.vertex);
+        if owner == dst_shard {
+            return PullReceipt::default();
+        }
+        let mut receipts = [PullReceipt::default()];
+        self.pull_wave(dst_shard, owner, &[req], &mut receipts, &[0], master);
+        receipts[0]
+    }
+
+    fn pull_many<'m>(
+        &self,
+        dst_shard: usize,
+        reqs: &[PullRequest],
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> Vec<PullReceipt> {
+        let mut receipts = vec![PullReceipt::default(); reqs.len()];
+        let mut by_owner: Vec<Vec<usize>> = vec![Vec::new(); self.k];
+        for (i, req) in reqs.iter().enumerate() {
+            let owner = self.graph.owner_of(req.vertex);
+            if owner != dst_shard {
+                by_owner[owner].push(i);
+            }
+        }
+        for (owner, idxs) in by_owner.iter().enumerate() {
+            if !idxs.is_empty() {
+                self.pull_wave(dst_shard, owner, reqs, &mut receipts, idxs, master);
+            }
+        }
+        receipts
+    }
+
+    fn queued_bytes(&self, dst_shard: usize) -> u64 {
+        (0..self.k)
+            .map(|src| {
+                self.consumers[src * self.k + dst_shard].lock().unwrap().readable_bytes() as u64
+            })
+            .sum()
+    }
+
+    // Publication is synchronous — `send` returns only after the frame is
+    // drainable — so the default no-op `finalize` is already a barrier.
+
+    fn backpressure_stalls(&self) -> u64 {
+        self.backpressure.load(Ordering::Relaxed)
+    }
+
+    fn drain_tick_bounds(&self) -> (u64, u64) {
+        // Draining an shm ring is two atomic loads plus a memcpy — far
+        // cheaper than the socket's inbox path — so the adaptive tick may
+        // both start and stay much tighter without throttling senders.
+        (4, 64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DataGraph, GraphBuilder};
+
+    fn chain(n: usize) -> DataGraph<u64, ()> {
+        let mut b = GraphBuilder::new();
+        for i in 0..n {
+            b.add_vertex(i as u64);
+        }
+        for i in 0..n - 1 {
+            b.add_undirected(i as u32, i as u32 + 1, (), ());
+        }
+        b.build()
+    }
+
+    #[test]
+    fn ring_round_trips_across_the_wrap_seam() {
+        let (mut tx, mut rx) = shm_ring(4096);
+        assert_eq!(tx.capacity(), 4096);
+        // Frames of a length coprime to the capacity force every wrap
+        // offset over enough iterations.
+        let frame: Vec<u8> = (0..96u8).map(|b| b ^ 0x5a).collect();
+        let mut out = Vec::new();
+        for round in 0..200 {
+            for _ in 0..3 {
+                assert!(tx.try_push(&frame));
+            }
+            out.clear();
+            assert_eq!(rx.pop_all(&mut out), 3 * frame.len(), "round {round}");
+            for got in out.chunks_exact(frame.len()) {
+                assert_eq!(got, &frame[..]);
+            }
+        }
+        assert_eq!(rx.readable_bytes(), 0);
+    }
+
+    #[test]
+    fn full_ring_rejects_then_accepts_after_pop() {
+        let (mut tx, mut rx) = shm_ring(4096);
+        let frame = [7u8; 1024];
+        assert!(tx.try_push(&frame));
+        assert!(tx.try_push(&frame));
+        assert!(tx.try_push(&frame));
+        assert!(tx.try_push(&frame));
+        assert!(!tx.try_push(&frame), "ring full");
+        assert!(!tx.try_push(&[0u8; 8192]), "frame larger than capacity never fits");
+        let mut out = Vec::new();
+        assert_eq!(rx.pop_all(&mut out), 4096);
+        assert!(tx.try_push(&frame), "space reclaimed after pop");
+    }
+
+    #[test]
+    fn deltas_cross_the_ring_and_apply_on_drain() {
+        let mut g = chain(8);
+        let sg = crate::graph::ShardedGraph::new(&mut g, 2);
+        let t = ShmTransport::new(&sg);
+        assert_eq!(GhostTransport::name(&t), "shm");
+        let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+        let owner = sg.owner_of(v);
+        let (dst, gi) = sg.replicas_of(v)[0];
+        let entry = sg.shard(dst as usize).ghost(gi as usize);
+
+        let r = t.send(owner, v, 4, &777u64);
+        assert_eq!(r.replicas_now, 0, "shm applies at drain, not send");
+        assert_eq!(r.bytes, 24);
+        assert_eq!(entry.version(), 0, "not yet applied");
+        assert_eq!(entry.pending_version(), 4, "in-flight version visible");
+        assert_eq!(GhostTransport::queued_bytes(&t, dst as usize), 24);
+
+        let d = t.drain(dst as usize);
+        assert_eq!(d.applied, 1);
+        assert_eq!(d.bytes, 24);
+        assert_eq!(entry.read(), 777, "payload round-tripped through the codec");
+        assert_eq!(entry.version(), 4);
+        assert_eq!(GhostTransport::queued_bytes(&t, dst as usize), 0);
+        assert_eq!(t.drain(dst as usize).applied, 0, "ring drained");
+    }
+
+    #[test]
+    fn tiny_ring_backpressures_until_the_consumer_drains() {
+        let mut g = chain(8);
+        let sg = crate::graph::ShardedGraph::new(&mut g, 2);
+        // 4096 B is the minimum ring; fill it so the next send stalls.
+        let t = std::sync::Arc::new(ShmTransport::with_ring_capacity(&sg, 4096));
+        let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+        let owner = sg.owner_of(v);
+        let dst = sg.replicas_of(v)[0].0 as usize;
+        for ver in 0..4096 / 24 {
+            t.send(owner, v, ver + 1, &ver);
+        }
+        assert_eq!(t.backpressure_stalls(), 0, "ring exactly at capacity, no stall yet");
+        std::thread::scope(|s| {
+            let tt = std::sync::Arc::clone(&t);
+            let h = s.spawn(move || tt.send(owner, v, 9999, &9999u64));
+            while t.backpressure_stalls() == 0 {
+                std::thread::yield_now();
+            }
+            let d = t.drain(dst);
+            assert!(d.applied >= 1);
+            h.join().unwrap();
+        });
+        assert!(t.backpressure_stalls() >= 1);
+        t.drain(dst);
+    }
+
+    #[test]
+    fn pull_round_trips_request_and_reply_frames() {
+        let mut g = chain(8);
+        let sg = crate::graph::ShardedGraph::new(&mut g, 2);
+        let t = ShmTransport::new(&sg);
+        let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+        let owner = sg.owner_of(v);
+        let (dst, gi) = sg.replicas_of(v)[0];
+        let entry = sg.shard(dst as usize).ghost(gi as usize);
+        let master_val = 4242u64;
+        let r = t.pull(dst as usize, PullRequest { vertex: v, min_version: 6 }, &|u| {
+            assert_eq!(u, v);
+            (&master_val, 6)
+        });
+        assert!(r.served, "request and reply crossed the rings");
+        assert!(r.applied);
+        assert_eq!(r.bytes, 12 + 24);
+        assert_eq!(entry.read(), 4242);
+        assert_eq!(entry.version(), 6);
+        // same-shard pulls never touch a lane
+        let r = t.pull(owner, PullRequest { vertex: v, min_version: 0 }, &|_| (&master_val, 0));
+        assert!(!r.served);
+    }
+
+    #[test]
+    fn shm_drain_tick_bounds_are_tighter_than_the_socket_default() {
+        let mut g = chain(8);
+        let sg = crate::graph::ShardedGraph::new(&mut g, 2);
+        let t = ShmTransport::new(&sg);
+        let (min, max) = GhostTransport::drain_tick_bounds(&t);
+        assert!(max < 512, "shm must not inherit socket-era drain backoff");
+        assert!(min <= 8);
+    }
+}

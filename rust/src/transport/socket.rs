@@ -6,7 +6,8 @@
 //!
 //! # Wire format
 //!
-//! Exactly the parent `transport` module's two frame kinds, byte-for-byte:
+//! The raw backend (`"socket"`) ships exactly the parent `transport`
+//! module's two frame kinds, byte-for-byte:
 //!
 //! * **delta frames** (`u32 vertex, u64 version, u32 len, payload`) flow
 //!   over one `UnixStream` per ordered shard pair into the destination
@@ -17,6 +18,23 @@
 //!   [`PullRequest::WIRE_LEN`] bytes) cross a dedicated request/reply
 //!   socketpair lane per ordered shard pair; the reply is an ordinary
 //!   delta frame carrying the owner's current master data.
+//!
+//! The compressed backend ([`SocketTransport::compressed`], exposed as
+//! `"socket-z"`) replaces the delta frame with the shadow-diff frame of
+//! [`super::encode_delta`] wrapped in an 8-byte envelope:
+//!
+//! ```text
+//! envelope := u32 src_shard, u32 body_len, body
+//! body     := one compressed delta frame (varint header + diff/raw body)
+//! reset    := u32 src_shard, u32 0xFFFF_FFFF   (no body)
+//! ```
+//!
+//! The `src` field keys the receiver's per-`(src, vertex)` diff shadows
+//! (one inbox mixes every source), and the in-band **reset marker** voids
+//! every shadow for its source — the sender emits one after a reconnect
+//! and re-ships everything staged since its last complete flush as raw
+//! frames, so a dropped connection can never desync the diff shadows.
+//! Pull frames stay raw on both variants.
 //!
 //! # Topology & delivery
 //!
@@ -30,6 +48,18 @@
 //! reconnect lands cleanly. Workers apply inboxed frames on their normal
 //! [`GhostTransport::drain`] cadence.
 //!
+//! # Vectored writes
+//!
+//! Sends do not hit the kernel one frame at a time: each connection
+//! **stages** encoded frames in a queue and flushes them with a single
+//! `write_vectored` (writev) syscall once [`STAGE_MAX_BYTES`] /
+//! [`STAGE_MAX_FRAMES`] accumulate — or earlier, when the destination
+//! drains (senders are in-process, so [`GhostTransport::drain`] first
+//! pushes everything still staged toward it), at [`GhostTransport::finalize`],
+//! and from inside a backpressured sender's own stall loop (a sender must
+//! be able to land the bytes it itself staged, or a tiny send window
+//! would deadlock).
+//!
 //! # Backpressure & reconnect
 //!
 //! Every connection has a **bounded send window** (default
@@ -39,25 +69,36 @@
 //! reader lands enough bytes, and each stalled send increments the
 //! [`GhostTransport::backpressure_stalls`] counter. A frame larger than
 //! the whole window is sent alone once the window is empty, so progress
-//! is always possible. Writes that fail with a broken pipe reconnect to
+//! is always possible. Flushes that fail with a broken pipe reconnect to
 //! the endpoint (fresh handshake) under **capped exponential backoff** —
 //! a deterministic 2, 4, 8, …, 64 ms schedule, each wait counted in
-//! [`GhostTransport::reconnect_backoffs`] — and resend the entire frame;
-//! exhausting the attempt budget panics with the vertex and shard pair in
-//! the message, never drops the delta silently. Pull lanes carry read and
+//! [`GhostTransport::reconnect_backoffs`] — and resend every frame staged
+//! since the last complete flush (raw mode resends the staged queue
+//! verbatim; compressed mode re-encodes it raw behind a shadow-reset
+//! marker); exhausting the attempt budget panics with the shard pair in
+//! the message, never drops a delta silently. Pull lanes carry read and
 //! write timeouts, so a crashed peer surfaces as a counted
 //! [`GhostTransport::pull_timeouts`] failure (retried by the engine's
 //! scope-admission backoff loop) instead of hanging the admitting worker.
 //! [`SocketTransport::sever_delta_connection`] and
 //! [`SocketTransport::sever_pull_lane`] let fault tests trip both paths
 //! on demand.
+//!
+//! # Pull pipelining
+//!
+//! [`GhostTransport::pull_many`] batches a scope's stale-ghost refreshes:
+//! all request frames bound for one owner cross the lane in a single
+//! write before the first reply is served, so N staleness pulls cost one
+//! lane acquisition and one request syscall instead of N lock-step
+//! round-trips ([`SocketTransport::pulls_pipelined`] counts them).
 
 use super::{
-    ByteReader, DrainReceipt, GhostDelta, GhostTransport, PullReceipt, PullRequest, SendReceipt,
-    VertexCodec,
+    decode_header, decode_payload, encode_delta, put_u32, ByteReader, DrainReceipt, GhostDelta,
+    GhostTransport, PullReceipt, PullRequest, SendReceipt, VertexCodec,
 };
 use crate::graph::{ShardedGraph, VertexId};
-use std::io::{ErrorKind, Read, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, IoSlice, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -71,13 +112,35 @@ pub const DEFAULT_SEND_BUFFER: usize = 1 << 20;
 /// Delta frame header size: `u32 vertex + u64 version + u32 payload_len`.
 const FRAME_HEADER: usize = 16;
 
+/// Compressed-mode envelope header: `u32 src_shard + u32 body_len`.
+const ENVELOPE_HEADER: usize = 8;
+
+/// Sentinel `body_len` marking a shadow-reset envelope (no body): the
+/// receiver voids every diff shadow for the envelope's source shard. A
+/// real body can never reach this length.
+const SHADOW_RESET: u32 = u32::MAX;
+
+/// Flush the staged frame queue to the kernel (one writev) once it holds
+/// this many bytes.
+const STAGE_MAX_BYTES: usize = 32 << 10;
+
+/// Flush the staged frame queue once it holds this many frames, whatever
+/// their byte total — bounds the iovec length handed to `write_vectored`.
+const STAGE_MAX_FRAMES: usize = 64;
+
+/// Max pull requests in flight on one lane per pipelined wave: bounds the
+/// kernel buffer the batched request write can occupy (the requester
+/// thread plays both lane ends, so unread requests sit in the socketpair
+/// buffer until phase 2 serves them).
+const PULL_WAVE_MAX: usize = 64;
+
 /// Chunk size for the lock-step pull exchange: the requester thread plays
 /// both ends of the lane, so no more than this many reply bytes are ever
 /// in a kernel buffer — the exchange can never deadlock on buffer space.
 const PULL_CHUNK: usize = 16 << 10;
 
-/// How many reconnect attempts a broken-pipe send gets before giving up
-/// and panicking with the vertex/shard context.
+/// How many reconnect attempts a broken-pipe flush gets before giving up
+/// and panicking with the shard-pair context.
 const RECONNECT_ATTEMPTS_MAX: u32 = 8;
 
 /// Ceiling of the reconnect backoff schedule: waits double per attempt
@@ -104,48 +167,112 @@ fn next_socket_dir() -> PathBuf {
     std::env::temp_dir().join(format!("graphlab-sock-{}-{seq}", std::process::id()))
 }
 
-/// Write half of one `src -> dst` delta connection.
+/// Write half of one `src -> dst` delta connection, with its staged-frame
+/// queue and (compressed mode) the sender-side diff shadows.
 struct Connection {
     stream: UnixStream,
     endpoint: PathBuf,
     src: u32,
+    compress: bool,
+    /// Whole encoded frames (raw delta frames, or compressed envelopes)
+    /// staged but not yet handed to the kernel.
+    staged: VecDeque<Vec<u8>>,
+    staged_bytes: usize,
+    /// Compressed mode: payload as of the last frame encoded per vertex —
+    /// the diff base the receiver's shadow mirrors.
+    shadow: HashMap<VertexId, Vec<u8>>,
+    /// Compressed mode: `(vertex, version, payload)` of every frame staged
+    /// since the last complete flush — the raw resend set after a
+    /// reconnect (cleared once a flush fully lands).
+    meta: Vec<(VertexId, u64, Vec<u8>)>,
 }
 
 impl Connection {
-    fn open(endpoint: &Path, src: u32) -> std::io::Result<Connection> {
+    fn open(endpoint: &Path, src: u32, compress: bool) -> std::io::Result<Connection> {
         let mut stream = UnixStream::connect(endpoint)?;
         stream.write_all(&src.to_le_bytes())?;
-        Ok(Connection { stream, endpoint: endpoint.to_path_buf(), src })
+        Ok(Connection {
+            stream,
+            endpoint: endpoint.to_path_buf(),
+            src,
+            compress,
+            staged: VecDeque::new(),
+            staged_bytes: 0,
+            shadow: HashMap::new(),
+            meta: Vec::new(),
+        })
     }
 
-    /// `write_all` with reconnect-on-broken-pipe: the reader forwards only
-    /// complete frames, so a torn partial write dies with the old stream
-    /// and the whole frame is resent on the fresh connection, after a
-    /// capped-exponential backoff wait (2, 4, 8, …, capped at
-    /// [`RECONNECT_BACKOFF_CAP_MS`] ms — a deterministic schedule, each
-    /// wait counted in `backoffs`). Exhausting the attempt budget panics
-    /// with the vertex and shard pair, never drops the delta silently.
-    /// Each retry re-adds the frame to `window` — the reader decrements
-    /// every raw byte it receives (including torn tails), so without the
-    /// re-add a resend could drive the window negative and make
-    /// `finalize` return while bytes are still in flight. `write_all`
-    /// cannot report partial progress, so the accounting errs toward a
-    /// bounded *over*-count per reconnect; the send path's stall loop is
-    /// time-bounded for exactly this reason.
-    #[allow(clippy::too_many_arguments)]
-    fn send(
+    /// Queue one whole encoded frame for the next flush.
+    fn stage(&mut self, frame: Vec<u8>) {
+        self.staged_bytes += frame.len();
+        self.staged.push_back(frame);
+    }
+
+    /// Compressed mode: encode `(vertex, version, payload)` as a diff
+    /// against this lane's shadow (raw on first ship), wrap it in the
+    /// `u32 src, u32 body_len` envelope, advance the shadow, and stage
+    /// it. Returns the staged envelope length.
+    fn stage_compressed(&mut self, vertex: VertexId, version: u64, payload: &[u8]) -> usize {
+        let mut envelope = Vec::with_capacity(ENVELOPE_HEADER + payload.len() + 21);
+        put_u32(&mut envelope, self.src);
+        put_u32(&mut envelope, 0); // body_len, patched below
+        let body_len =
+            encode_delta(vertex, version, payload, self.shadow.get(&vertex).map(|s| s.as_slice()), &mut envelope);
+        debug_assert!((body_len as u32) < SHADOW_RESET);
+        envelope[4..8].copy_from_slice(&(body_len as u32).to_le_bytes());
+        self.shadow
+            .entry(vertex)
+            .and_modify(|p| {
+                p.clear();
+                p.extend_from_slice(payload);
+            })
+            .or_insert_with(|| payload.to_vec());
+        self.meta.push((vertex, version, payload.to_vec()));
+        let n = envelope.len();
+        self.stage(envelope);
+        n
+    }
+
+    /// Hand the whole staged queue to the kernel with as few
+    /// `write_vectored` (writev) syscalls as it takes, reconnecting with
+    /// capped backoff on a broken pipe. Frames the kernel accepted only
+    /// partially stay at the queue front minus the written prefix — the
+    /// reader forwards only complete frames, so a torn tail that dies
+    /// with a dropped connection is simply resent whole. On return the
+    /// queue is empty and (compressed mode) the resend set is cleared.
+    fn flush(
         &mut self,
-        frame: &[u8],
-        vertex: VertexId,
         dst: usize,
         window: &AtomicUsize,
         reconnects: &AtomicU64,
         backoffs: &AtomicU64,
     ) {
         let mut attempt = 0u32;
-        loop {
-            match self.stream.write_all(frame) {
-                Ok(()) => return,
+        while !self.staged.is_empty() {
+            let res = {
+                let slices: Vec<IoSlice<'_>> =
+                    self.staged.iter().map(|f| IoSlice::new(f.as_slice())).collect();
+                self.stream.write_vectored(&slices)
+            };
+            match res {
+                // A zero-length write with frames still staged cannot make
+                // progress: treat it like a dead connection.
+                Ok(0) => self.reconnect_and_restage(dst, window, reconnects, backoffs, &mut attempt),
+                Ok(n) => {
+                    self.staged_bytes -= n;
+                    let mut left = n;
+                    while left > 0 {
+                        let front = self.staged.front_mut().unwrap();
+                        if left >= front.len() {
+                            left -= front.len();
+                            self.staged.pop_front();
+                        } else {
+                            front.drain(..left);
+                            left = 0;
+                        }
+                    }
+                }
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
                 Err(e)
                     if matches!(
@@ -157,33 +284,86 @@ impl Connection {
                             | ErrorKind::WriteZero
                     ) =>
                 {
-                    attempt += 1;
-                    assert!(
-                        attempt <= RECONNECT_ATTEMPTS_MAX,
-                        "ghost delta for vertex {vertex} (shard {src} -> {dst}) to {:?} \
-                         failed after {RECONNECT_ATTEMPTS_MAX} reconnect attempts: {e}",
-                        self.endpoint,
-                        src = self.src,
-                    );
-                    reconnects.fetch_add(1, Ordering::Relaxed);
-                    backoffs.fetch_add(1, Ordering::Relaxed);
-                    crate::telemetry::instant(
-                        crate::telemetry::EventKind::SocketReconnect,
-                        vertex as u64,
-                        attempt as u64,
-                    );
-                    let wait = (1u64 << attempt).min(RECONNECT_BACKOFF_CAP_MS);
-                    std::thread::sleep(Duration::from_millis(wait));
-                    if let Ok(fresh) = Connection::open(&self.endpoint, self.src) {
-                        self.stream = fresh.stream;
-                    }
-                    window.fetch_add(frame.len(), Ordering::AcqRel);
+                    self.reconnect_and_restage(dst, window, reconnects, backoffs, &mut attempt)
                 }
                 Err(e) => panic!(
-                    "ghost delta for vertex {vertex} (shard {} -> {dst}) to {:?} failed: {e}",
+                    "ghost delta flush (shard {} -> {dst}) to {:?} failed: {e}",
                     self.src, self.endpoint
                 ),
             }
+        }
+        self.meta.clear();
+    }
+
+    /// Reconnect after a broken-pipe flush (counted, capped-exponential
+    /// backoff) and rebuild the staged queue for the fresh connection.
+    ///
+    /// Raw mode keeps the queue verbatim — raw frames are self-contained
+    /// and newest-wins makes duplicates harmless. Compressed mode must
+    /// also repair the diff shadows: the receiver may have applied some,
+    /// none, or all of the staged diffs before the connection died, so
+    /// the resend is one contiguous buffer of a shadow-reset marker
+    /// followed by every frame staged since the last complete flush,
+    /// re-encoded **raw** — after which both ends' shadows agree again
+    /// (exactly the resend set, last write per vertex).
+    ///
+    /// Each reconnect re-adds the resend bytes to `window`: the reader
+    /// decremented every raw byte it received off the old connection
+    /// (including torn tails), so without the re-add a resend could drive
+    /// the window negative and let `finalize` return with bytes still in
+    /// flight. The accounting errs toward a bounded *over*-count per
+    /// reconnect; the send path's stall loop is time-bounded for exactly
+    /// this reason.
+    fn reconnect_and_restage(
+        &mut self,
+        dst: usize,
+        window: &AtomicUsize,
+        reconnects: &AtomicU64,
+        backoffs: &AtomicU64,
+        attempt: &mut u32,
+    ) {
+        *attempt += 1;
+        assert!(
+            *attempt <= RECONNECT_ATTEMPTS_MAX,
+            "ghost delta flush (shard {src} -> {dst}) to {:?} failed after \
+             {RECONNECT_ATTEMPTS_MAX} reconnect attempts with {} staged frames",
+            self.endpoint,
+            self.staged.len(),
+            src = self.src,
+        );
+        reconnects.fetch_add(1, Ordering::Relaxed);
+        backoffs.fetch_add(1, Ordering::Relaxed);
+        crate::telemetry::instant(
+            crate::telemetry::EventKind::SocketReconnect,
+            dst as u64,
+            *attempt as u64,
+        );
+        let wait = (1u64 << *attempt).min(RECONNECT_BACKOFF_CAP_MS);
+        std::thread::sleep(Duration::from_millis(wait));
+        if let Ok(fresh) = Connection::open(&self.endpoint, self.src, self.compress) {
+            self.stream = fresh.stream;
+        }
+        if self.compress {
+            let mut resend = Vec::new();
+            put_u32(&mut resend, self.src);
+            put_u32(&mut resend, SHADOW_RESET);
+            for (vertex, version, payload) in &self.meta {
+                let at = resend.len();
+                put_u32(&mut resend, self.src);
+                put_u32(&mut resend, 0);
+                let body_len = encode_delta(*vertex, *version, payload, None, &mut resend);
+                resend[at + 4..at + 8].copy_from_slice(&(body_len as u32).to_le_bytes());
+            }
+            self.shadow.clear();
+            for (vertex, _, payload) in &self.meta {
+                self.shadow.insert(*vertex, payload.clone());
+            }
+            window.fetch_add(resend.len(), Ordering::AcqRel);
+            self.staged_bytes = resend.len();
+            self.staged.clear();
+            self.staged.push_back(resend);
+        } else {
+            window.fetch_add(self.staged_bytes, Ordering::AcqRel);
         }
     }
 }
@@ -221,17 +401,34 @@ fn handshake(mut stream: UnixStream, k: usize) -> Option<Rx> {
     Some(Rx { stream, src, staging: Vec::new() })
 }
 
-/// Move every complete delta frame at the front of `staging` into the
-/// endpoint inbox, leaving a partial frame (if any) in place.
-fn forward_frames(staging: &mut Vec<u8>, inbox: &Mutex<Vec<u8>>) {
+/// Move every complete frame at the front of `staging` into the endpoint
+/// inbox, leaving a partial frame (if any) in place. Raw mode walks delta
+/// frames (`len` at bytes 12..16); compressed mode walks envelopes (`len`
+/// at bytes 4..8, [`SHADOW_RESET`] marking a body-less reset).
+fn forward_frames(staging: &mut Vec<u8>, inbox: &Mutex<Vec<u8>>, compress: bool) {
     let mut end = 0usize;
-    while staging.len() - end >= FRAME_HEADER {
-        let len =
-            u32::from_le_bytes(staging[end + 12..end + 16].try_into().unwrap()) as usize;
-        if staging.len() - end < FRAME_HEADER + len {
-            break;
+    if compress {
+        while staging.len() - end >= ENVELOPE_HEADER {
+            let len = u32::from_le_bytes(staging[end + 4..end + 8].try_into().unwrap());
+            let total = if len == SHADOW_RESET {
+                ENVELOPE_HEADER
+            } else {
+                ENVELOPE_HEADER + len as usize
+            };
+            if staging.len() - end < total {
+                break;
+            }
+            end += total;
         }
-        end += FRAME_HEADER + len;
+    } else {
+        while staging.len() - end >= FRAME_HEADER {
+            let len =
+                u32::from_le_bytes(staging[end + 12..end + 16].try_into().unwrap()) as usize;
+            if staging.len() - end < FRAME_HEADER + len {
+                break;
+            }
+            end += FRAME_HEADER + len;
+        }
     }
     if end > 0 {
         inbox.lock().unwrap().extend_from_slice(&staging[..end]);
@@ -249,6 +446,7 @@ fn reader_loop(
     inboxes: Arc<Vec<Mutex<Vec<u8>>>>,
     window: Arc<Vec<AtomicUsize>>,
     shutdown: Arc<AtomicBool>,
+    compress: bool,
 ) {
     let _ = listener.set_nonblocking(true);
     let mut streams: Vec<Rx> = Vec::new();
@@ -271,7 +469,7 @@ fn reader_loop(
                 // window never under-counts what is still invisible to
                 // `drain`.
                 rx.staging.extend_from_slice(&buf[..n]);
-                forward_frames(&mut rx.staging, &inboxes[dst]);
+                forward_frames(&mut rx.staging, &inboxes[dst], compress);
                 let _ = window[rx.src * k + dst].fetch_update(
                     Ordering::AcqRel,
                     Ordering::Acquire,
@@ -301,21 +499,33 @@ fn reader_loop(
 
 /// Ghost transport over Unix-domain sockets: one bound endpoint per shard
 /// in a per-run temp directory, one delta connection plus one pull lane
-/// per ordered shard pair, one reader thread per endpoint. Borrows the
-/// shard view for the duration of the run; dropping it joins the reader
-/// threads and removes the socket directory.
+/// per ordered shard pair, one reader thread per endpoint. Frames are
+/// staged per connection and flushed with vectored writes; the
+/// [`SocketTransport::compressed`] variant (`"socket-z"`) ships
+/// shadow-diff frames instead of raw deltas. Borrows the shard view for
+/// the duration of the run; dropping it joins the reader threads and
+/// removes the socket directory.
 pub struct SocketTransport<'g, V> {
     graph: &'g ShardedGraph<V>,
     k: usize,
     dir: PathBuf,
+    compress: bool,
     /// Delta write halves, indexed `src * k + dst` (`None` on the
     /// diagonal and for single-shard graphs).
     conns: Vec<Option<Mutex<Connection>>>,
-    /// In-flight bytes per connection (written, not yet landed in the
-    /// destination inbox): the bounded send window.
+    /// Staged-bytes hint per connection, maintained under the connection
+    /// lock: lets `flush_toward` and the drain path skip connections with
+    /// nothing staged without taking their locks.
+    staged_hint: Vec<AtomicUsize>,
+    /// In-flight bytes per connection (staged or written, not yet landed
+    /// in the destination inbox): the bounded send window.
     window: Arc<Vec<AtomicUsize>>,
-    /// Per-destination inbox of complete delta frames.
+    /// Per-destination inbox of complete delta frames (raw) or envelopes
+    /// (compressed).
     inboxes: Arc<Vec<Mutex<Vec<u8>>>>,
+    /// Compressed mode: receiver-side diff shadows per destination, keyed
+    /// `(src_shard, vertex)` — one inbox mixes every source's lanes.
+    rx_shadow: Vec<Mutex<HashMap<(u32, VertexId), Vec<u8>>>>,
     /// Pull lanes, indexed `requester * k + owner`.
     pulls: Vec<Option<Mutex<PullLane>>>,
     send_cap: usize,
@@ -325,13 +535,14 @@ pub struct SocketTransport<'g, V> {
     reconnects: AtomicU64,
     backoffs: AtomicU64,
     lane_timeouts: AtomicU64,
+    pipelined: AtomicU64,
 }
 
 impl<'g, V> SocketTransport<'g, V> {
     /// Bind the endpoints, connect every shard pair, and spawn the reader
-    /// threads, with the default send window.
+    /// threads, with the default send window and raw frames.
     pub fn new(graph: &'g ShardedGraph<V>) -> std::io::Result<SocketTransport<'g, V>> {
-        SocketTransport::with_send_buffer(graph, DEFAULT_SEND_BUFFER)
+        SocketTransport::with_options(graph, DEFAULT_SEND_BUFFER, false)
     }
 
     /// Like [`SocketTransport::new`] with an explicit per-connection send
@@ -340,6 +551,22 @@ impl<'g, V> SocketTransport<'g, V> {
     pub fn with_send_buffer(
         graph: &'g ShardedGraph<V>,
         send_cap: usize,
+    ) -> std::io::Result<SocketTransport<'g, V>> {
+        SocketTransport::with_options(graph, send_cap, false)
+    }
+
+    /// The `"socket-z"` variant: delta frames are shadow-diff compressed
+    /// ([`super::encode_delta`]) inside `u32 src, u32 len` envelopes, with
+    /// an in-band shadow-reset marker keeping reconnects sound. Pull
+    /// frames stay raw.
+    pub fn compressed(graph: &'g ShardedGraph<V>) -> std::io::Result<SocketTransport<'g, V>> {
+        SocketTransport::with_options(graph, DEFAULT_SEND_BUFFER, true)
+    }
+
+    fn with_options(
+        graph: &'g ShardedGraph<V>,
+        send_cap: usize,
+        compress: bool,
     ) -> std::io::Result<SocketTransport<'g, V>> {
         let k = graph.num_shards();
         let dir = next_socket_dir();
@@ -362,7 +589,7 @@ impl<'g, V> SocketTransport<'g, V> {
                     std::thread::Builder::new()
                         .name(format!("ghost-rx-{dst}"))
                         .spawn(move || {
-                            reader_loop(listener, dst, k, inboxes, window, shutdown)
+                            reader_loop(listener, dst, k, inboxes, window, shutdown, compress)
                         })?,
                 );
             }
@@ -378,6 +605,7 @@ impl<'g, V> SocketTransport<'g, V> {
                     conns.push(Some(Mutex::new(Connection::open(
                         &Self::endpoint(&dir, b),
                         a as u32,
+                        compress,
                     )?)));
                     let (near, far) = UnixStream::pair()?;
                     // A dead or severed peer must surface as a counted
@@ -395,9 +623,12 @@ impl<'g, V> SocketTransport<'g, V> {
             graph,
             k,
             dir,
+            compress,
             conns,
+            staged_hint: (0..k * k).map(|_| AtomicUsize::new(0)).collect(),
             window,
             inboxes,
+            rx_shadow: (0..k).map(|_| Mutex::new(HashMap::new())).collect(),
             pulls,
             send_cap: send_cap.max(1),
             shutdown,
@@ -406,6 +637,7 @@ impl<'g, V> SocketTransport<'g, V> {
             reconnects: AtomicU64::new(0),
             backoffs: AtomicU64::new(0),
             lane_timeouts: AtomicU64::new(0),
+            pipelined: AtomicU64::new(0),
         })
     }
 
@@ -419,13 +651,38 @@ impl<'g, V> SocketTransport<'g, V> {
         &self.dir
     }
 
-    /// Reconnections performed after broken-pipe sends (diagnostics).
+    /// Reconnections performed after broken-pipe flushes (diagnostics).
     pub fn reconnects(&self) -> u64 {
         self.reconnects.load(Ordering::Relaxed)
     }
 
+    /// Pull requests that crossed a lane as part of a multi-request
+    /// pipelined wave (diagnostics; see [`GhostTransport::pull_many`]).
+    pub fn pulls_pipelined(&self) -> u64 {
+        self.pipelined.load(Ordering::Relaxed)
+    }
+
+    /// Push every frame still staged toward `dst_shard` into the kernel.
+    /// Senders are in-process, so the drain path calls this before
+    /// sweeping the inbox — a staged frame must never outwait the drain
+    /// that would apply it.
+    fn flush_toward(&self, dst_shard: usize) {
+        for src in 0..self.k {
+            let idx = src * self.k + dst_shard;
+            if self.staged_hint[idx].load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            let Some(conn) = &self.conns[idx] else { continue };
+            let mut c = conn.lock().unwrap();
+            if c.staged_bytes > 0 {
+                c.flush(dst_shard, &self.window[idx], &self.reconnects, &self.backoffs);
+            }
+            self.staged_hint[idx].store(0, Ordering::Release);
+        }
+    }
+
     /// Fault hook: shut down the `src -> dst` delta connection's stream
-    /// so the next send trips the reconnect-with-backoff path. The
+    /// so the next flush trips the reconnect-with-backoff path. The
     /// endpoint stays bound, so the reconnect succeeds — this severs one
     /// connection, not the peer.
     pub fn sever_delta_connection(&self, src: usize, dst: usize) {
@@ -447,6 +704,119 @@ impl<'g, V> SocketTransport<'g, V> {
     }
 }
 
+impl<'g, V: VertexCodec + Clone + Send + Sync> SocketTransport<'g, V> {
+    /// Compressed-mode drain: decode envelopes under **both** the inbox
+    /// lock and the shadow lock — a diff body is only sound against the
+    /// shadow state as of its position in the stream, so a concurrent
+    /// drain of the same shard must not decode newer envelopes before
+    /// these advance the shadows (the channel-z lane discipline).
+    fn drain_compressed(&self, dst_shard: usize) -> DrainReceipt {
+        let mut out = DrainReceipt::default();
+        let mut inbox = self.inboxes[dst_shard].lock().unwrap();
+        if inbox.is_empty() {
+            return out;
+        }
+        let buf = std::mem::take(&mut *inbox);
+        let mut shadows = self.rx_shadow[dst_shard].lock().unwrap();
+        out.bytes = buf.len() as u64;
+        let shard = self.graph.shard(dst_shard);
+        let mut rest: &[u8] = &buf;
+        let mut payload = Vec::new();
+        while rest.len() >= ENVELOPE_HEADER {
+            let src = u32::from_le_bytes(rest[..4].try_into().unwrap());
+            let len = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+            if len == SHADOW_RESET {
+                // In-band reset: the sender reconnected and will re-ship
+                // its resend set raw; every shadow for it is void.
+                shadows.retain(|&(s, _), _| s != src);
+                rest = &rest[ENVELOPE_HEADER..];
+                continue;
+            }
+            if rest.len() < ENVELOPE_HEADER + len as usize {
+                debug_assert!(false, "torn envelope reached the inbox of shard {dst_shard}");
+                break;
+            }
+            let body = &rest[ENVELOPE_HEADER..ENVELOPE_HEADER + len as usize];
+            rest = &rest[ENVELOPE_HEADER + len as usize..];
+            let Some((header, after)) = decode_header(body) else {
+                debug_assert!(false, "corrupt envelope body on shard {dst_shard}");
+                continue;
+            };
+            let key = (src, header.vertex);
+            if decode_payload(&header, after, shadows.get(&key).map(|s| s.as_slice()), &mut payload)
+                .is_none()
+            {
+                debug_assert!(false, "undecodable diff for vertex {} on {dst_shard}", header.vertex);
+                continue;
+            }
+            // The shadow advances on EVERY frame — including ones
+            // newest-wins rejects below — mirroring the sender's
+            // per-encode advance, or the next diff desyncs.
+            shadows
+                .entry(key)
+                .and_modify(|p| {
+                    p.clear();
+                    p.extend_from_slice(&payload);
+                })
+                .or_insert_with(|| payload.clone());
+            let Some(value) = V::decode(&payload) else {
+                debug_assert!(false, "codec round-trip failed for vertex {}", header.vertex);
+                continue;
+            };
+            if let Some(entry) = shard.ghost_of(header.vertex) {
+                if entry.store_versioned(&value, header.version) {
+                    out.applied += 1;
+                    crate::telemetry::instant(
+                        crate::telemetry::EventKind::WireApply,
+                        header.vertex as u64,
+                        header.version,
+                    );
+                }
+            }
+        }
+        debug_assert!(rest.is_empty(), "trailing bytes in the inbox of shard {dst_shard}");
+        // `inbox` stays locked to here so the shadow advance above is
+        // ordered against the reader's next append.
+        drop(inbox);
+        out
+    }
+
+    /// Owner+requester halves of one pull whose request frame already
+    /// crossed the lane: read it at the owner end, serve the reply, move
+    /// it back in lock-step chunks (the same thread plays both ends, so
+    /// at most [`PULL_CHUNK`] reply bytes ever sit in a kernel buffer),
+    /// and apply it. `Err` means the lane is down (timeout or sever); the
+    /// caller counts it.
+    fn finish_pull_exchange<'m>(
+        &self,
+        lane: &mut PullLane,
+        dst_shard: usize,
+        owner: usize,
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> std::io::Result<PullReceipt> {
+        let mut raw = [0u8; PullRequest::WIRE_LEN];
+        lane.far.read_exact(&mut raw)?;
+        let Some(reply) = super::serve_pull(&raw, master) else {
+            debug_assert!(false, "corrupt pull request on {dst_shard}->{owner}");
+            return Ok(PullReceipt { applied: false, served: true, bytes: 0 });
+        };
+        let mut got = vec![0u8; reply.len()];
+        let mut off = 0usize;
+        while off < reply.len() {
+            let end = (off + PULL_CHUNK).min(reply.len());
+            lane.far.write_all(&reply[off..end])?;
+            lane.near.read_exact(&mut got[off..end])?;
+            off = end;
+        }
+        // Requester side: decode the reply and apply it (newest wins).
+        let Some(applied) = super::apply_pull_reply(self.graph, dst_shard, &got) else {
+            debug_assert!(false, "corrupt pull reply on {owner}->{dst_shard}");
+            return Ok(PullReceipt { applied: false, served: true, bytes: reply.len() as u64 });
+        };
+        Ok(PullReceipt { applied, served: true, bytes: reply.len() as u64 })
+    }
+}
+
 impl<V> Drop for SocketTransport<'_, V> {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::Release);
@@ -463,7 +833,11 @@ impl<V> Drop for SocketTransport<'_, V> {
 
 impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport<'_, V> {
     fn name(&self) -> &'static str {
-        "socket"
+        if self.compress {
+            "socket-z"
+        } else {
+            "socket"
+        }
     }
 
     fn send(&self, src_shard: usize, vertex: VertexId, version: u64, data: &V) -> SendReceipt {
@@ -476,9 +850,20 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
             vertex as u64,
             version,
         );
-        let delta = GhostDelta::from_vertex(vertex, version, data);
-        let mut frame = Vec::with_capacity(delta.wire_len());
-        delta.encode_into(&mut frame);
+        // Encode once per send, not per replica site.
+        let mut payload = Vec::new();
+        let mut frame = Vec::new();
+        if self.compress {
+            data.encode(&mut payload);
+        } else {
+            let delta = GhostDelta::from_vertex(vertex, version, data);
+            frame.reserve(delta.wire_len());
+            delta.encode_into(&mut frame);
+        }
+        // Window-admission estimate: the compressed frame size depends on
+        // the per-lane shadow, but is bounded by envelope + varint header
+        // + raw payload.
+        let est = if self.compress { ENVELOPE_HEADER + payload.len() + 21 } else { frame.len() };
         let mut bytes = 0u64;
         for &(s, gi) in sites {
             let dst = s as usize;
@@ -504,13 +889,23 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
             let mut spins = 0u32;
             loop {
                 let inflight = window.load(Ordering::Acquire);
-                if inflight == 0 || inflight + frame.len() <= self.send_cap {
+                if inflight == 0 || inflight + est <= self.send_cap {
                     break;
                 }
                 if !stalled {
                     stalled = true;
                     self.backpressure.fetch_add(1, Ordering::Relaxed);
                     stall_span = crate::telemetry::span_start();
+                }
+                // The window only shrinks once staged bytes reach the
+                // kernel and land at the reader: flush our own staged
+                // queue from inside the stall, or a sender could block
+                // forever on frames it itself staged.
+                if let Ok(mut c) = conn.try_lock() {
+                    if c.staged_bytes > 0 {
+                        c.flush(dst, window, &self.reconnects, &self.backoffs);
+                        self.staged_hint[idx].store(0, Ordering::Release);
+                    }
                 }
                 spins += 1;
                 if spins > STALL_ITERS_MAX {
@@ -530,16 +925,22 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
                     dst as u64,
                 );
             }
-            window.fetch_add(frame.len(), Ordering::AcqRel);
-            conn.lock().unwrap().send(
-                &frame,
-                vertex,
-                dst,
-                window,
-                &self.reconnects,
-                &self.backoffs,
-            );
-            bytes += frame.len() as u64;
+            let mut c = conn.lock().unwrap();
+            let n = if self.compress {
+                c.stage_compressed(vertex, version, &payload)
+            } else {
+                let n = frame.len();
+                c.stage(frame.clone());
+                n
+            };
+            window.fetch_add(n, Ordering::AcqRel);
+            if c.staged_bytes >= STAGE_MAX_BYTES || c.staged.len() >= STAGE_MAX_FRAMES {
+                c.flush(dst, window, &self.reconnects, &self.backoffs);
+                self.staged_hint[idx].store(0, Ordering::Release);
+            } else {
+                self.staged_hint[idx].store(c.staged_bytes, Ordering::Release);
+            }
+            bytes += n as u64;
         }
         SendReceipt { replicas_now: 0, bytes }
     }
@@ -548,6 +949,12 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
         let mut out = DrainReceipt::default();
         if self.k < 2 {
             return out;
+        }
+        // Senders are in-process: staged frames bound for this shard must
+        // not outwait the drain that would apply them.
+        self.flush_toward(dst_shard);
+        if self.compress {
+            return self.drain_compressed(dst_shard);
         }
         let buf = {
             let mut q = self.inboxes[dst_shard].lock().unwrap();
@@ -593,52 +1000,85 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
             return PullReceipt::default();
         };
         let mut lane = lane.lock().unwrap();
-        let mut bytes = 0u64;
-        // Any lane IO failure — timeout against a dead peer, or a severed
+        // Requester -> owner: the request frame crosses the socket. Any
+        // lane IO failure — timeout against a dead peer, or a severed
         // lane's broken pipe — fails the pull cleanly and is counted; the
-        // engine's scope-admission retry loop owns recovery. A crashed
-        // peer therefore delays the admitting worker, never hangs it.
-        let lane_down = |_e: std::io::Error| {
-            self.lane_timeouts.fetch_add(1, Ordering::Relaxed);
-            PullReceipt::default()
-        };
-        // Requester -> owner: the request frame crosses the socket.
+        // engine's scope-admission retry loop owns recovery.
         let mut frame = Vec::with_capacity(PullRequest::WIRE_LEN);
         req.encode_into(&mut frame);
-        if let Err(e) = lane.near.write_all(&frame) {
-            return lane_down(e);
+        if lane.near.write_all(&frame).is_err() {
+            self.lane_timeouts.fetch_add(1, Ordering::Relaxed);
+            return PullReceipt::default();
         }
-        bytes += frame.len() as u64;
-        let mut raw = [0u8; PullRequest::WIRE_LEN];
-        if let Err(e) = lane.far.read_exact(&mut raw) {
-            return lane_down(e);
-        }
-        // Owner side: serve the master data as a delta frame. Lock-step
-        // chunked exchange — the same thread plays both ends, so at most
-        // PULL_CHUNK reply bytes are ever in the kernel buffer.
-        let Some(reply) = super::serve_pull(&raw, master) else {
-            debug_assert!(false, "corrupt pull request on {dst_shard}->{owner}");
-            return PullReceipt { applied: false, served: true, bytes };
-        };
-        let mut got = vec![0u8; reply.len()];
-        let mut off = 0usize;
-        while off < reply.len() {
-            let end = (off + PULL_CHUNK).min(reply.len());
-            if let Err(e) = lane.far.write_all(&reply[off..end]) {
-                return lane_down(e);
+        match self.finish_pull_exchange(&mut lane, dst_shard, owner, master) {
+            Ok(mut r) => {
+                r.bytes += PullRequest::WIRE_LEN as u64;
+                r
             }
-            if let Err(e) = lane.near.read_exact(&mut got[off..end]) {
-                return lane_down(e);
+            Err(_) => {
+                self.lane_timeouts.fetch_add(1, Ordering::Relaxed);
+                PullReceipt::default()
             }
-            off = end;
         }
-        bytes += reply.len() as u64;
-        // Requester side: decode the reply and apply it (newest wins).
-        let Some(applied) = super::apply_pull_reply(self.graph, dst_shard, &got) else {
-            debug_assert!(false, "corrupt pull reply on {owner}->{dst_shard}");
-            return PullReceipt { applied: false, served: true, bytes };
-        };
-        PullReceipt { applied, served: true, bytes }
+    }
+
+    fn pull_many<'m>(
+        &self,
+        dst_shard: usize,
+        reqs: &[PullRequest],
+        master: &dyn Fn(VertexId) -> (&'m V, u64),
+    ) -> Vec<PullReceipt> {
+        let mut receipts = vec![PullReceipt::default(); reqs.len()];
+        if self.k < 2 {
+            return receipts;
+        }
+        let mut by_owner: Vec<Vec<usize>> = vec![Vec::new(); self.k];
+        for (i, req) in reqs.iter().enumerate() {
+            let owner = self.graph.owner_of(req.vertex);
+            if owner != dst_shard {
+                by_owner[owner].push(i);
+            }
+        }
+        for (owner, idxs) in by_owner.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let Some(lane) = &self.pulls[dst_shard * self.k + owner] else { continue };
+            let mut lane = lane.lock().unwrap();
+            'waves: for wave in idxs.chunks(PULL_WAVE_MAX) {
+                // Phase 1: every request frame in the wave crosses the
+                // lane in one write before the first reply is served — N
+                // pulls pay one syscall and one lane acquisition.
+                let mut batch = Vec::with_capacity(wave.len() * PullRequest::WIRE_LEN);
+                for &i in wave {
+                    reqs[i].encode_into(&mut batch);
+                }
+                if lane.near.write_all(&batch).is_err() {
+                    self.lane_timeouts.fetch_add(1, Ordering::Relaxed);
+                    break 'waves;
+                }
+                if wave.len() > 1 {
+                    self.pipelined.fetch_add(wave.len() as u64, Ordering::Relaxed);
+                }
+                // Phase 2: serve, return, and apply the replies in
+                // request order. A lane failure abandons the rest of this
+                // owner's requests (default receipts); the engine's
+                // per-ghost retry loop owns recovery.
+                for &i in wave {
+                    match self.finish_pull_exchange(&mut lane, dst_shard, owner, master) {
+                        Ok(mut r) => {
+                            r.bytes += PullRequest::WIRE_LEN as u64;
+                            receipts[i] = r;
+                        }
+                        Err(_) => {
+                            self.lane_timeouts.fetch_add(1, Ordering::Relaxed);
+                            break 'waves;
+                        }
+                    }
+                }
+            }
+        }
+        receipts
     }
 
     fn queued_bytes(&self, dst_shard: usize) -> u64 {
@@ -650,6 +1090,11 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
     }
 
     fn finalize(&self) {
+        // Push every staged frame into the kernel first — the window
+        // below cannot drain bytes that never left a staging queue.
+        for dst in 0..self.k {
+            self.flush_toward(dst);
+        }
         // Wait (bounded, ~10s) until every written byte has landed in an
         // inbox: senders only write whole frames, so a zero window means
         // the inboxes hold the complete, frame-aligned stream. On timeout
@@ -701,6 +1146,39 @@ mod tests {
         b.build()
     }
 
+    /// A bipartite cross: edges (i, n/2 + i). However the partitioner
+    /// splits it, two shards end up with several boundary vertices each —
+    /// the shape the pull-pipelining test needs.
+    fn cross(n: usize) -> DataGraph<u64, ()> {
+        let mut b = GraphBuilder::new();
+        for i in 0..n {
+            b.add_vertex(i as u64);
+        }
+        let h = n / 2;
+        for i in 0..h {
+            b.add_undirected(i as u32, (h + i) as u32, (), ());
+        }
+        b.build()
+    }
+
+    /// Poll `drain` until `want` applies land (bounded): flushes are
+    /// asynchronous to the reader thread, so tests wait rather than race.
+    fn drain_until<V: VertexCodec + Clone + Send + Sync>(
+        t: &SocketTransport<'_, V>,
+        dst: usize,
+        want: u64,
+    ) -> u64 {
+        let mut applied = 0;
+        for _ in 0..10_000 {
+            applied += GhostTransport::drain(t, dst).applied;
+            if applied >= want {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        applied
+    }
+
     #[test]
     fn deltas_cross_the_socket_and_apply_on_drain() {
         let mut g = chain(8);
@@ -741,23 +1219,16 @@ mod tests {
         t.sever_delta_connection(owner, dst as usize);
         let r = GhostTransport::send(&t, owner, v, 2, &555u64);
         assert!(r.bytes > 0);
+        // The send only *staged* the frame; the drain's flush hits the
+        // severed stream and must reconnect. Poll the drain (bounded)
+        // rather than finalize — the torn write skews the window
+        // accounting, which finalize only tolerates noisily.
+        assert_eq!(drain_until(&t, dst as usize, 1), 1, "severed frame resent and applied");
         assert!(t.reconnects() >= 1, "a broken pipe must reconnect");
         assert!(
             GhostTransport::reconnect_backoffs(&t) >= 1,
             "each reconnect attempt waits one counted backoff"
         );
-        // The resent frame lands on the fresh connection; poll the drain
-        // (bounded) rather than finalize — the torn write skews the
-        // window accounting, which finalize only tolerates noisily.
-        let mut applied = 0;
-        for _ in 0..10_000 {
-            applied += GhostTransport::drain(&t, dst as usize).applied;
-            if applied > 0 {
-                break;
-            }
-            std::thread::sleep(Duration::from_millis(1));
-        }
-        assert_eq!(applied, 1, "the severed frame was resent and applied");
         assert_eq!(entry.read(), 555);
         assert_eq!(entry.version(), 2);
     }
@@ -795,14 +1266,140 @@ mod tests {
         // final fragment completes it.
         let mut staging = Vec::new();
         staging.extend_from_slice(&frame[..10]);
-        forward_frames(&mut staging, &inbox);
+        forward_frames(&mut staging, &inbox, false);
         assert!(inbox.lock().unwrap().is_empty());
         staging.extend_from_slice(&frame[10..frame.len() - 1]);
-        forward_frames(&mut staging, &inbox);
+        forward_frames(&mut staging, &inbox, false);
         assert!(inbox.lock().unwrap().is_empty());
         staging.extend_from_slice(&frame[frame.len() - 1..]);
-        forward_frames(&mut staging, &inbox);
+        forward_frames(&mut staging, &inbox, false);
         assert_eq!(*inbox.lock().unwrap(), frame);
         assert!(staging.is_empty());
+    }
+
+    #[test]
+    fn partial_envelopes_never_reach_the_inbox() {
+        let inbox = Mutex::new(Vec::new());
+        // A reset marker followed by one compressed envelope.
+        let mut stream = Vec::new();
+        put_u32(&mut stream, 1);
+        put_u32(&mut stream, SHADOW_RESET);
+        let at = stream.len();
+        put_u32(&mut stream, 1);
+        put_u32(&mut stream, 0);
+        let payload = [7u8; 24];
+        let body_len = encode_delta(3, 9, &payload, None, &mut stream);
+        stream[at + 4..at + 8].copy_from_slice(&(body_len as u32).to_le_bytes());
+        // Cut inside the second envelope's body: only the reset (a
+        // complete, body-less envelope) may forward.
+        let cut = at + ENVELOPE_HEADER + 2;
+        let mut staging = Vec::new();
+        staging.extend_from_slice(&stream[..cut]);
+        forward_frames(&mut staging, &inbox, true);
+        assert_eq!(inbox.lock().unwrap().len(), ENVELOPE_HEADER, "only the reset forwards");
+        staging.extend_from_slice(&stream[cut..]);
+        forward_frames(&mut staging, &inbox, true);
+        assert_eq!(*inbox.lock().unwrap(), stream);
+        assert!(staging.is_empty());
+    }
+
+    #[test]
+    fn socket_z_round_trips_and_shrinks_repeat_frames() {
+        let mut g = chain(8);
+        let sg = ShardedGraph::new(&mut g, 2);
+        let t = SocketTransport::compressed(&sg).expect("socket setup");
+        assert_eq!(GhostTransport::name(&t), "socket-z");
+        let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+        let owner = sg.owner_of(v);
+        let (dst, gi) = sg.replicas_of(v)[0];
+        let entry = sg.shard(dst as usize).ghost(gi as usize);
+
+        // First ship is raw (no shadow yet); the re-ship of an identical
+        // payload diffs down to a few bytes.
+        let r1 = GhostTransport::send(&t, owner, v, 1, &777u64);
+        let r2 = GhostTransport::send(&t, owner, v, 2, &777u64);
+        assert!(r1.bytes > 0 && r2.bytes > 0);
+        assert!(
+            r2.bytes < r1.bytes,
+            "unchanged payload must diff smaller ({} vs {})",
+            r2.bytes,
+            r1.bytes
+        );
+        let raw_wire = GhostDelta::from_vertex(v, 2, &777u64).wire_len() as u64;
+        assert!(r2.bytes < raw_wire, "diff frame beats the raw wire frame");
+        GhostTransport::finalize(&t);
+        let d = GhostTransport::drain(&t, dst as usize);
+        assert_eq!(d.applied, 2, "both versions apply in order");
+        assert_eq!(d.bytes, r1.bytes + r2.bytes, "every shipped byte consumed");
+        assert_eq!(entry.read(), 777);
+        assert_eq!(entry.version(), 2);
+        assert_eq!(GhostTransport::queued_bytes(&t, dst as usize), 0);
+    }
+
+    #[test]
+    fn socket_z_reconnect_resets_diff_shadows() {
+        let mut g = chain(8);
+        let sg = ShardedGraph::new(&mut g, 2);
+        let t = SocketTransport::compressed(&sg).expect("socket setup");
+        let v: u32 = (0..8u32).find(|&v| !sg.replicas_of(v).is_empty()).unwrap();
+        let owner = sg.owner_of(v);
+        let (dst, gi) = sg.replicas_of(v)[0];
+        let entry = sg.shard(dst as usize).ghost(gi as usize);
+
+        // Establish diff shadows on both ends, then kill the connection:
+        // the resend must cross as reset + raw and still reconstruct.
+        let _ = GhostTransport::send(&t, owner, v, 1, &111u64);
+        GhostTransport::finalize(&t);
+        assert_eq!(drain_until(&t, dst as usize, 1), 1);
+        assert_eq!(entry.read(), 111);
+        t.sever_delta_connection(owner, dst as usize);
+        let _ = GhostTransport::send(&t, owner, v, 2, &222u64);
+        assert_eq!(drain_until(&t, dst as usize, 1), 1, "resent frame applies");
+        assert!(t.reconnects() >= 1, "the severed flush reconnected");
+        assert_eq!(entry.read(), 222, "payload reconstructed after the shadow reset");
+        assert_eq!(entry.version(), 2);
+    }
+
+    #[test]
+    fn pull_many_pipelines_requests_toward_each_owner() {
+        let mut g = cross(8);
+        let sg = ShardedGraph::new(&mut g, 2);
+        let t = SocketTransport::new(&sg).expect("socket setup");
+        let masters: Vec<u64> = (0..8u64).map(|i| 1000 + i).collect();
+        let mut tested = false;
+        for dst in 0..2usize {
+            let reqs: Vec<PullRequest> = (0..8u32)
+                .filter(|&v| {
+                    sg.owner_of(v) != dst
+                        && sg.replicas_of(v).iter().any(|&(s, _)| s as usize == dst)
+                })
+                .map(|v| PullRequest { vertex: v, min_version: 1 })
+                .collect();
+            if reqs.len() < 2 {
+                continue;
+            }
+            tested = true;
+            let before = t.pulls_pipelined();
+            let receipts =
+                GhostTransport::pull_many(&t, dst, &reqs, &|u| (&masters[u as usize], 1));
+            assert_eq!(receipts.len(), reqs.len());
+            for (req, r) in reqs.iter().zip(&receipts) {
+                assert!(r.served, "vertex {} served", req.vertex);
+                assert!(r.applied, "vertex {} applied", req.vertex);
+                assert!(r.bytes > PullRequest::WIRE_LEN as u64);
+                let (s, gi) = *sg
+                    .replicas_of(req.vertex)
+                    .iter()
+                    .find(|&&(s, _)| s as usize == dst)
+                    .unwrap();
+                let entry = sg.shard(s as usize).ghost(gi as usize);
+                assert_eq!(entry.read(), masters[req.vertex as usize]);
+            }
+            assert!(
+                t.pulls_pipelined() - before >= reqs.len() as u64,
+                "more than one pull was in flight on the lane"
+            );
+        }
+        assert!(tested, "the cross graph must yield a shard with >= 2 remote ghosts");
     }
 }

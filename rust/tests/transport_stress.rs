@@ -1,12 +1,15 @@
 //! Stress tests for the ghost-sync transport layer: codec round-trips for
-//! every app vertex type, Channel/Socket vs Direct conservation
+//! every app vertex type, Channel/Shm/Socket vs Direct conservation
 //! equivalence for BP and Gibbs across shard counts and staleness bounds,
 //! delta coalescing on repeat-writer workloads, the bounded-staleness
 //! admission semantics (`s = 0` reproduces PR 3's synchronous flush
 //! accounting exactly; `s > 0` never lets a reader observe a replica more
 //! than `s` versions behind), the pull request/reply path (serializing
 //! backends serve every admission pull through the wire, never a direct
-//! master read), and socket-backend backpressure on a tiny send window.
+//! master read, and pipelining backends batch >1 pull in flight per
+//! lane), SPSC shm-ring integrity under concurrent wraparound (whole
+//! frames only, never torn), socket-z vs raw-socket wire-byte accounting,
+//! and socket-backend backpressure on a tiny send window.
 
 use graphlab::apps::bp::{BpUpdate, LAMBDA_KEY};
 use graphlab::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
@@ -15,7 +18,7 @@ use graphlab::apps::mrf::{random_mrf, BpEdge, BpVertex, EdgePotential, Mrf};
 use graphlab::consistency::{ConsistencyModel, Scope};
 use graphlab::engine::{
     ChannelShardedEngine, Engine, Program, SequentialEngine, ShardedEngine,
-    SocketShardedEngine, ThreadedEngine, UpdateContext, UpdateFn,
+    ShmShardedEngine, SocketShardedEngine, ThreadedEngine, UpdateContext, UpdateFn,
 };
 use graphlab::graph::{DataGraph, GraphBuilder, ShardedGraph};
 use graphlab::scheduler::{
@@ -23,8 +26,8 @@ use graphlab::scheduler::{
 };
 use graphlab::sdt::Sdt;
 use graphlab::transport::{
-    ChannelTransport, DirectTransport, GhostTransport, PullRequest, SocketTransport,
-    VertexCodec,
+    shm_ring, ChannelTransport, DirectTransport, GhostTransport, PullRequest,
+    ShmTransport, SocketTransport, VertexCodec,
 };
 use graphlab::util::Pcg32;
 use std::sync::Arc;
@@ -240,6 +243,22 @@ fn socket_bp_matches_sequential_beliefs_under_staleness() {
     bp_matches_sequential_on(SocketShardedEngine::new, "socket");
 }
 
+/// Acceptance: ShmTransport-backed BP (deltas and pulls crossing
+/// shared-memory SPSC rings) matches the sequential fixed point at k in
+/// {2, 4} with staleness in {0, 4}.
+#[test]
+fn shm_bp_matches_sequential_beliefs_under_staleness() {
+    bp_matches_sequential_on(ShmShardedEngine::new, "shm");
+}
+
+/// Acceptance: compressed-socket ("socket-z") BP — shadow-diffed varint
+/// envelopes over real Unix sockets — matches the sequential fixed point
+/// at k in {2, 4} with staleness in {0, 4}.
+#[test]
+fn socket_z_bp_matches_sequential_beliefs_under_staleness() {
+    bp_matches_sequential_on(SocketShardedEngine::compressed, "socket-z");
+}
+
 // ---- Gibbs: channel conservation -----------------------------------------
 
 fn color_graph(g: &mut DataGraph<GibbsVertex, GibbsEdge>) {
@@ -340,6 +359,21 @@ fn channel_gibbs_conserves_sweeps_under_staleness() {
 #[test]
 fn socket_gibbs_conserves_sweeps_under_staleness() {
     gibbs_conserves_sweeps_on(SocketShardedEngine::new, "socket");
+}
+
+/// Acceptance: ShmTransport-backed chromatic Gibbs conserves exactly one
+/// sample per vertex per sweep at k in {2, 4} with staleness in {0, 4}.
+#[test]
+fn shm_gibbs_conserves_sweeps_under_staleness() {
+    gibbs_conserves_sweeps_on(ShmShardedEngine::new, "shm");
+}
+
+/// Acceptance: compressed-socket ("socket-z") chromatic Gibbs conserves
+/// exactly one sample per vertex per sweep at k in {2, 4} with staleness
+/// in {0, 4}.
+#[test]
+fn socket_z_gibbs_conserves_sweeps_under_staleness() {
+    gibbs_conserves_sweeps_on(SocketShardedEngine::compressed, "socket-z");
 }
 
 // ---- compressed channel ---------------------------------------------------
@@ -880,4 +914,239 @@ fn socket_backpressure_blocks_flush_and_counts_stalls() {
     let entry = sg.shard(dst as usize).ghost(gi as usize);
     assert_eq!(entry.version(), rounds, "the newest version won");
     assert_eq!(entry.read(), rounds * 10);
+}
+
+// ---- shm backend: ring integrity, pipelining, socket-z wire bytes --------
+
+/// Concurrent SPSC torn-frame/wraparound stress: a producer thread pushes
+/// 20k self-describing frames of rotating sizes through a 256-byte ring —
+/// every frame boundary wraps the ring at some point — while the consumer
+/// pops concurrently. Whole-frame publication means the consumer must see
+/// every frame exactly once, in order, with every payload byte intact:
+/// a torn header, torn payload, or resurfaced stale byte fails loudly.
+#[test]
+fn shm_ring_never_yields_torn_frames_across_wraparound() {
+    let frames = 20_000u32;
+    let (mut tx, mut rx) = shm_ring(256);
+    assert!(tx.capacity() >= 256, "capacity rounds up, never down");
+    let producer = std::thread::spawn(move || {
+        for seq in 0..frames {
+            // Sizes 1..=53 are coprime with the power-of-two capacity, so
+            // frames straddle the wrap point at every possible offset.
+            let len = (seq % 53 + 1) as usize;
+            let mut frame = Vec::with_capacity(8 + len);
+            frame.extend_from_slice(&seq.to_le_bytes());
+            frame.extend_from_slice(&(len as u32).to_le_bytes());
+            frame.resize(8 + len, seq as u8);
+            while !tx.try_push(&frame) {
+                // Ring full: the concurrent consumer frees space.
+                std::thread::yield_now();
+            }
+        }
+    });
+    let mut buf = Vec::new();
+    let mut seen = 0u32;
+    while seen < frames {
+        buf.clear();
+        if rx.pop_all(&mut buf) == 0 {
+            std::thread::yield_now();
+            continue;
+        }
+        let mut at = 0usize;
+        while at < buf.len() {
+            assert!(buf.len() - at >= 8, "header never torn");
+            let seq = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+            let len =
+                u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap()) as usize;
+            assert_eq!(seq, seen, "frames arrive exactly once, in order");
+            assert_eq!(len, (seq % 53 + 1) as usize, "length survived the wire");
+            assert!(buf.len() - at - 8 >= len, "payload never torn");
+            assert!(
+                buf[at + 8..at + 8 + len].iter().all(|&b| b == seq as u8),
+                "payload bytes are the published ones (frame {seq})"
+            );
+            at += 8 + len;
+            seen += 1;
+        }
+    }
+    producer.join().unwrap();
+}
+
+/// A star cut: vertex 0 (shard 0 under the contiguous block partition)
+/// adjacent to four shard-1 vertices, so shard 0 holds four ghosts of the
+/// same remote owner — the shape that lets one admission batch >1 pull.
+fn star_cut() -> DataGraph<u64, ()> {
+    let mut b: GraphBuilder<u64, ()> = GraphBuilder::new();
+    for i in 0..16 {
+        b.add_vertex(i as u64);
+    }
+    for i in 0..4u32 {
+        b.add_undirected(0, 8 + i, (), ());
+    }
+    b.build()
+}
+
+/// Unit-level pull pipelining: `pull_many` toward one owner must put every
+/// request on the lane before collecting the replies — both pipelining
+/// backends count the whole wave as pipelined, serve every request through
+/// request/reply bytes, and land the served data in the ghost table.
+#[test]
+fn pull_many_overlaps_requests_on_shm_and_socket_lanes() {
+    fn stale_wave(g: &mut DataGraph<u64, ()>, sg: &ShardedGraph<u64>) -> Vec<PullRequest> {
+        let reqs: Vec<PullRequest> = (8..12u32)
+            .map(|v| {
+                *g.vertex_data(v) = 700 + v as u64;
+                sg.bump_master(v);
+                PullRequest { vertex: v, min_version: sg.master_version(v) }
+            })
+            .collect();
+        assert!(reqs.len() > 1, "a wave needs more than one pull in flight");
+        reqs
+    }
+    fn check_wave(
+        backend: &str,
+        sg: &ShardedGraph<u64>,
+        reqs: &[PullRequest],
+        transport: &dyn GhostTransport<u64>,
+    ) {
+        let served: Vec<u64> = (0..16).map(|v| 700 + v).collect();
+        let receipts = transport.pull_many(0, reqs, &|u| {
+            (&served[u as usize], sg.master_version(u))
+        });
+        assert_eq!(receipts.len(), reqs.len());
+        for (i, r) in receipts.iter().enumerate() {
+            assert!(r.served, "{backend} pull {i}: rides request/reply");
+            assert!(r.applied, "{backend} pull {i}: lagging replica refreshed");
+            assert!(
+                r.bytes > PullRequest::WIRE_LEN as u64,
+                "{backend} pull {i}: request + reply bytes counted"
+            );
+        }
+        for v in 8..12u32 {
+            let (dst, gi) = sg.replicas_of(v)[0];
+            assert_eq!(dst, 0, "star ghosts live on shard 0");
+            let e = sg.shard(0).ghost(gi as usize);
+            assert_eq!(e.read(), 700 + v as u64, "{backend}: served data landed");
+            assert_eq!(e.version(), 1, "{backend}: served version landed");
+        }
+    }
+
+    {
+        let mut g = star_cut();
+        let sg = ShardedGraph::new(&mut g, 2);
+        let reqs = stale_wave(&mut g, &sg);
+        let t = ShmTransport::new(&sg);
+        let before = t.pulls_pipelined();
+        check_wave("shm", &sg, &reqs, &t);
+        assert!(
+            t.pulls_pipelined() - before >= reqs.len() as u64,
+            "shm: the whole wave was in flight together"
+        );
+    }
+    {
+        let mut g = star_cut();
+        let sg = ShardedGraph::new(&mut g, 2);
+        let reqs = stale_wave(&mut g, &sg);
+        let t = SocketTransport::new(&sg).expect("socket setup");
+        let before = t.pulls_pipelined();
+        check_wave("socket", &sg, &reqs, &t);
+        assert!(
+            t.pulls_pipelined() - before >= reqs.len() as u64,
+            "socket: the whole wave was in flight together"
+        );
+    }
+}
+
+/// Engine-level pipelining acceptance: on the star cut with a
+/// never-closing sync window, one admission refresh at vertex 0 batches
+/// all four stale ghosts into a single `pull_many` wave — and every one
+/// of those pulls must still ride the request/reply path
+/// (`pulls_served == staleness_pulls`), with the bound enforced.
+#[test]
+fn batched_admission_pulls_keep_request_reply_accounting_on_shm_and_socket_z() {
+    let rounds = 50u64;
+    let f = SelfBump { rounds };
+    for backend in ["shm", "socket-z"] {
+        let mut g = star_cut();
+        let n = g.num_vertices();
+        let report = Program::new()
+            .update_fn(&f)
+            .model(ConsistencyModel::Full)
+            .workers(4)
+            .shards(2)
+            .ghost_staleness(1)
+            // Window far beyond the run: freshness rides on pulls alone.
+            .ghost_batch(1_000_000)
+            .transport(backend)
+            .run(&mut g, &seeded(n, 4), &Sdt::new());
+        assert_eq!(report.updates, n as u64 * rounds, "{backend}: conservation");
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), rounds, "{backend} vertex {v}");
+        }
+        let c = &report.contention;
+        assert!(c.staleness_pulls > 0, "{backend}: lazy window forces pulls");
+        assert_eq!(
+            c.pulls_served, c.staleness_pulls,
+            "{backend}: batched admission pulls all ride request/reply"
+        );
+        assert!(c.max_ghost_staleness <= 1, "{backend}: bound enforced");
+    }
+}
+
+/// Deterministic socket-z byte comparison (the socket twin of the
+/// channel-z test above): identical synchronous u64 delta streams with no
+/// pull traffic — the raw socket ships a flat 24 B frame per delta, and
+/// socket-z's varint envelope body must undercut it strictly, per delta
+/// and in total.
+#[test]
+fn socket_z_strictly_cuts_bytes_shipped_vs_raw_socket() {
+    let n = 16usize;
+    let rounds = 100u64;
+    let f = SelfBump { rounds };
+    let run = |compress: bool| {
+        let mut b: GraphBuilder<u64, ()> = GraphBuilder::new();
+        for _ in 0..n {
+            b.add_vertex(0u64);
+        }
+        for i in 0..n as u32 - 1 {
+            b.add_undirected(i, i + 1, (), ());
+        }
+        let mut g = b.build();
+        let eng = if compress {
+            SocketShardedEngine::compressed(2)
+        } else {
+            SocketShardedEngine::new(2)
+        };
+        let report = Program::new()
+            .update_fn(&f)
+            .workers(2)
+            .model(ConsistencyModel::Full)
+            .ghost_staleness(1_000_000)
+            .ghost_batch(1)
+            .run_on(&eng, &mut g, &seeded(n, 2), &Sdt::new());
+        assert_eq!(report.updates, n as u64 * rounds, "compress={compress}");
+        for v in 0..n as u32 {
+            assert_eq!(*g.vertex_data(v), rounds, "compress={compress} vertex {v}");
+        }
+        let c = &report.contention;
+        assert_eq!(c.staleness_pulls, 0, "huge bound leaves nothing to pull");
+        assert_eq!(c.deltas_coalesced, 0, "window 1 ships every record");
+        assert_eq!(c.deltas_sent, c.boundary_updates);
+        report
+    };
+    let raw = run(false).contention;
+    let z = run(true).contention;
+    assert_eq!(raw.deltas_sent, z.deltas_sent, "identical synchronous delta streams");
+    assert_eq!(raw.bytes_shipped, raw.deltas_sent * 24, "raw u64 frame is a flat 24 B");
+    assert!(
+        z.bytes_shipped < raw.bytes_shipped,
+        "socket-z must strictly cut the wire bytes: {} vs {}",
+        z.bytes_shipped,
+        raw.bytes_shipped
+    );
+    let z_per_delta = z.bytes_shipped as f64 / z.deltas_sent as f64;
+    assert!(
+        z_per_delta < 24.0,
+        "socket-z bytes/delta {z_per_delta:.1} must undercut the 24 B raw frame"
+    );
 }
