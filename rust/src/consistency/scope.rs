@@ -3,7 +3,7 @@
 //! update function, with the consistency-model locks held for its lifetime.
 
 use super::{Conflict, ConsistencyModel, LockTable, ScopeGuard};
-use crate::graph::{DataGraph, Edge, EdgeId, LocalRef, ShardedGraph, VertexId};
+use crate::graph::{DataGraph, Edge, EdgeId, LocalRef, Shard, ShardedGraph, VertexId};
 use crate::transport::{GhostTransport, PullRequest};
 
 /// Locked neighborhood view passed to update functions:
@@ -266,6 +266,15 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
     /// timeout). A dead peer therefore delays admission by a bounded
     /// amount, never hangs it — and on a perfect wire the first pull
     /// always lands, so the retry loop never runs.
+    ///
+    /// With `sync_rows` (resident mode, one shard per process) the
+    /// refresh finishes by copying every ghost neighbor's replica into
+    /// the process-local [`DataGraph`] row of that vertex — the rows
+    /// update functions actually read, which in one address space are
+    /// the shared masters but in a resident process are stale snapshots
+    /// from partition time. Requires the Full model: the held neighbor
+    /// **write** locks make the row overwrite invisible to concurrent
+    /// readers.
     pub(crate) fn refresh_stale_ghosts(
         &self,
         sharded: &ShardedGraph<V>,
@@ -273,6 +282,7 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
         bound: u64,
         retry_limit: u32,
         transport: &dyn GhostTransport<V>,
+        sync_rows: bool,
     ) -> GhostRefresh {
         debug_assert!(
             self.model.excludes_neighbors(),
@@ -288,7 +298,14 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
             let LocalRef::Ghost(gi) = sh.resolve(code) else { continue };
             let entry = sh.ghost(gi as usize);
             let u = entry.global();
-            let lag = sharded.master_version(u).saturating_sub(entry.version());
+            // Version source: the local master table, upgraded by whatever
+            // the transport has *heard* from remote owners — in one address
+            // space the hook is the identity, but a resident (one shard per
+            // process) backend folds in peer version announcements, the
+            // only signal that a remote master moved.
+            let lag = transport
+                .known_master_version(u, sharded.master_version(u))
+                .saturating_sub(entry.version());
             if lag > bound {
                 stale.push((gi as usize, u, lag));
             } else {
@@ -299,6 +316,9 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
             }
         }
         if stale.is_empty() {
+            if sync_rows {
+                self.sync_ghost_rows(sh);
+            }
             return out;
         }
         // The owner-side pull service: the single place peer master data
@@ -315,7 +335,10 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
         // replies, overlapping the round-trips.
         let reqs: Vec<PullRequest> = stale
             .iter()
-            .map(|&(_, u, _)| PullRequest { vertex: u, min_version: sharded.master_version(u) })
+            .map(|&(_, u, _)| PullRequest {
+                vertex: u,
+                min_version: transport.known_master_version(u, sharded.master_version(u)),
+            })
             .collect();
         let receipts = transport.pull_many(shard, &reqs, &master);
         for (i, &(gi, u, lag)) in stale.iter().enumerate() {
@@ -330,11 +353,15 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
             );
             let entry = sh.ghost(gi);
             // Re-measure after the pull: this is the staleness the update
-            // function actually reads. The held read lock freezes the
-            // master version, so anything above `bound` here means the
-            // pull itself failed (lossy or severed transport) — retry
-            // with backoff, then give up rather than hang on a dead peer.
-            let mut now = sharded.master_version(u).saturating_sub(entry.version());
+            // function actually reads. In one address space the held read
+            // lock freezes the master version, so anything above `bound`
+            // here means the pull itself failed (lossy or severed
+            // transport); cross-process the remote master can also have
+            // moved again meanwhile — either way: retry with backoff,
+            // then give up rather than hang on a dead peer.
+            let mut now = transport
+                .known_master_version(u, sharded.master_version(u))
+                .saturating_sub(entry.version());
             let mut attempts = 0u32;
             while now > bound {
                 attempts += 1;
@@ -355,7 +382,11 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
                 }
                 let receipt = transport.pull(
                     shard,
-                    PullRequest { vertex: u, min_version: sharded.master_version(u) },
+                    PullRequest {
+                        vertex: u,
+                        min_version: transport
+                            .known_master_version(u, sharded.master_version(u)),
+                    },
                     &master,
                 );
                 out.pulls += 1;
@@ -366,14 +397,39 @@ impl<'a, V: Clone, E> Scope<'a, V, E> {
                     u as u64,
                     now,
                 );
-                now = sharded.master_version(u).saturating_sub(entry.version());
+                now = transport
+                    .known_master_version(u, sharded.master_version(u))
+                    .saturating_sub(entry.version());
             }
             crate::telemetry::observe_lag(now);
             if now > out.max_lag {
                 out.max_lag = now;
             }
         }
+        if sync_rows {
+            self.sync_ghost_rows(sh);
+        }
         out
+    }
+
+    /// Resident-mode write-back: bring the process-local [`DataGraph`]
+    /// rows of this scope's ghost neighbors up to their replicas, so the
+    /// update function reads what the pull (or a drained delta) just
+    /// delivered instead of the row's partition-time snapshot. No-op for
+    /// rows already at the replica's version.
+    fn sync_ghost_rows(&self, sh: &Shard<V>) {
+        let graph = self.graph;
+        for &code in sh.local_neighbors(self.center) {
+            let LocalRef::Ghost(gi) = sh.resolve(code) else { continue };
+            let entry = sh.ghost(gi as usize);
+            let u = entry.global();
+            // SAFETY: Full-model scopes hold a write lock on every
+            // neighbor, so no concurrent reader (or writer) can observe
+            // the row while it is overwritten.
+            entry.sync_row(|data| unsafe {
+                graph.vertex_data_mut_unchecked(u).clone_from(data);
+            });
+        }
     }
 }
 
@@ -441,7 +497,8 @@ mod tests {
         let (g, locks) = path3();
         let held = Scope::try_lock(&g, &locks, 1, ConsistencyModel::Full).unwrap();
         // Any scope overlapping {0,1,2} must conflict rather than block.
-        let c = Scope::try_lock(&g, &locks, 0, ConsistencyModel::Edge).err().expect("must conflict");
+        let c =
+            Scope::try_lock(&g, &locks, 0, ConsistencyModel::Edge).err().expect("must conflict");
         assert_eq!(c.vertex, 0);
         drop(held);
         let s = Scope::try_lock(&g, &locks, 0, ConsistencyModel::Edge).unwrap();

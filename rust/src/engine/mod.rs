@@ -13,6 +13,7 @@
 //!   capture a [task trace](trace::TaskTrace) consumed by the multicore
 //!   simulator ([`crate::sim`]) that regenerates the paper's speedup figures.
 
+pub mod process;
 pub mod program;
 pub mod sequential;
 pub mod sharded;
@@ -20,6 +21,7 @@ pub mod snapshot;
 pub mod threaded;
 pub mod trace;
 
+pub use process::{ProcessHarness, ProcessRun, ShardReport};
 pub use program::{Engine, Program};
 pub use sequential::SequentialEngine;
 pub use sharded::{
@@ -232,6 +234,24 @@ pub struct EngineConfig {
     /// warning on other platforms. Successful pins are counted in
     /// [`ContentionStats::pinned_workers`].
     pub pin_workers: bool,
+    /// Resident-shard mode for true multi-process runs: when set, this
+    /// process hosts exactly the named shard of a `shards`-way partition —
+    /// `workers` threads all serve that one shard, ghost traffic crosses
+    /// the rendezvous sockets of [`crate::transport::SocketTransport`]'s
+    /// resident mode, staleness pulls are answered by each owner's
+    /// in-process pull service, and cross-shard task spawns are dropped
+    /// (every process seeds its own owned vertices). `None` (default) =
+    /// all shards in one process. Set by the `graphlab shard` child
+    /// entrypoint via [`process::ProcessHarness`]; not useful standalone.
+    pub resident_shard: Option<usize>,
+    /// Requested process count for a true multi-process deployment: the
+    /// number of `graphlab shard` children a
+    /// [`process::ProcessHarness::from_config`] fleet launches (each
+    /// hosting one shard). `0` (default) = in-process execution.
+    /// [`Program::run`](program::Program::run) itself never forks —
+    /// update-function closures cannot cross `exec`, so multi-process runs
+    /// go through the harness and its preset workloads.
+    pub processes: usize,
 }
 
 /// The telemetry sampler's convergence-scalar hook: reads the SDT (where
@@ -260,6 +280,8 @@ impl Default for EngineConfig {
             progress_metric: None,
             injector_capacity: 4096,
             pin_workers: false,
+            resident_shard: None,
+            processes: 0,
         }
     }
 }
@@ -359,6 +381,19 @@ impl EngineConfig {
 
     pub fn with_pin_workers(mut self, on: bool) -> Self {
         self.pin_workers = on;
+        self
+    }
+
+    pub fn with_resident_shard(mut self, shard: usize) -> Self {
+        self.resident_shard = Some(shard);
+        self
+    }
+
+    pub fn with_processes(mut self, n: usize) -> Self {
+        self.processes = n;
+        if self.shards <= 1 {
+            self.shards = n;
+        }
         self
     }
 }
@@ -557,11 +592,20 @@ mod tests {
         assert!(d.progress_metric.is_none());
         assert_eq!(d.injector_capacity, 4096, "BENCH_sched cap-sweep default");
         assert!(!d.pin_workers, "unpinned by default");
+        assert!(d.resident_shard.is_none(), "single-process by default");
+        assert_eq!(d.processes, 0, "in-process execution by default");
         let e = EngineConfig::default()
             .with_injector_capacity(64)
-            .with_pin_workers(true);
+            .with_pin_workers(true)
+            .with_resident_shard(2);
         assert_eq!(e.injector_capacity, 64);
         assert!(e.pin_workers);
+        assert_eq!(e.resident_shard, Some(2));
+        let p = EngineConfig::default().with_processes(4);
+        assert_eq!(p.processes, 4);
+        assert_eq!(p.shards, 4, "processes implies a matching cut");
+        let q = EngineConfig::default().with_shards(8).with_processes(4);
+        assert_eq!(q.shards, 8, "an explicit cut is not overridden");
     }
 
     #[test]

@@ -1,0 +1,1115 @@
+//! True **multi-process** sharded deployment: one OS process per shard.
+//!
+//! [`ProcessHarness`] forks/execs N children of the `graphlab` binary
+//! (the `graphlab shard` entrypoint, [`shard_child_main`]), hands every
+//! child the same **rendezvous directory**, and joins them collecting one
+//! [`ShardReport`] per shard. Inside each child:
+//!
+//! 1. The partition's data graph is rebuilt **identically** from the
+//!    workload's deterministic generator (same seed in every process — the
+//!    multi-process analogue of every node loading the same graph).
+//! 2. The scheduler is seeded with the shard's **owned vertices only**
+//!    (dynamic workloads) or the full deterministic plan (set-scheduled
+//!    workloads, where the resident engine drops non-owned tasks through
+//!    the handoff path, keeping DAG dependencies releasing).
+//! 3. [`super::sharded::run_resident_shard`] binds the shard's
+//!    [`crate::transport::SocketTransport`] endpoints under the rendezvous
+//!    directory, connects to every peer, and runs the shared engine core
+//!    with [`super::EngineConfig::resident_shard`] set — ghost deltas,
+//!    version announcements, and owner-served staleness pulls all cross
+//!    real kernel sockets between address spaces.
+//! 4. The child serializes its [`super::RunReport`] counters plus its
+//!    owned master rows into `report-<shard>.bin` (tmp + rename, so the
+//!    parent never reads a torn file).
+//!
+//! The parent aggregates the per-shard reports: cross-process conservation
+//! (`sum(updates)`, delta/byte accounting, `pulls_served ==
+//! staleness_pulls`) and the merged owned rows are checked against a
+//! sequential run in `rust/tests/process_stress.rs`.
+//!
+//! **What does and does not cross the wire.** Vertex data is ghost-
+//! replicated and, under the Full model, written back into the
+//! process-local rows at scope admission ([`crate::graph::GhostEntry`]
+//! row sync) — so neighbor *vertex* reads see pulled data. Edge data is
+//! **not** replicated: each process keeps its partition-time copy of
+//! cut-edge data, so workloads whose state lives on edges (BP messages)
+//! are exercised for *conservation* (exact update/delta/pull accounting),
+//! not for cross-process value equivalence. Vertex-state workloads (the
+//! counter) reach the exact sequential fixed point.
+
+use super::snapshot::latest_complete_parts;
+use super::{EngineConfig, Program, RunReport, StopReason, UpdateContext, UpdateFn};
+use crate::apps::bp::{BpUpdate, LAMBDA_KEY};
+use crate::apps::coloring::{color_classes, validate_coloring, ColoringUpdate};
+use crate::apps::gibbs::{chromatic_sets, GibbsEdge, GibbsUpdate, GibbsVertex};
+use crate::apps::mrf::{random_mrf, EdgePotential};
+use crate::consistency::{ConsistencyModel, Scope};
+use crate::graph::{DataGraph, GraphBuilder, PartitionMap, VertexId};
+use crate::scheduler::{FifoScheduler, MultiQueueFifo, Scheduler, SetScheduler, Task};
+use crate::sdt::Sdt;
+use crate::transport::{put_u32, put_u64, ByteReader, GhostDelta, VertexCodec};
+use crate::util::Pcg32;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Magic header of a `report-<shard>.bin` file (`"GLSR"`).
+const REPORT_MAGIC: u32 = 0x474C_5352;
+
+/// File a shard child leaves in the rendezvous directory for the parent.
+fn report_name(shard: usize) -> String {
+    format!("report-{shard}.bin")
+}
+
+// ---------------------------------------------------------------------------
+// Preset workloads
+// ---------------------------------------------------------------------------
+
+/// The preset multi-process workloads a `graphlab shard` child can run.
+///
+/// Each builds its data graph from a fixed seed so every process holds an
+/// identical copy, making the k-way cut (and therefore the ghost/boundary
+/// sets) identical across the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// Self-rescheduling per-vertex counter on a chain: every vertex must
+    /// reach exactly `sweeps` — the exact-fixed-point workload (vertex
+    /// state only, so restored/recovered runs are value-checkable).
+    Counter,
+    /// Loopy BP on a seeded random MRF, driven by a full-sweep set plan:
+    /// exercised for cross-process conservation accounting.
+    Bp,
+    /// Chromatic Gibbs on an 8-vertex chain: one sample per vertex per
+    /// sweep, conserved no matter how the wire interleaves.
+    Gibbs,
+}
+
+impl Workload {
+    fn parse(s: &str) -> Option<Workload> {
+        match s {
+            "counter" => Some(Workload::Counter),
+            "bp" => Some(Workload::Bp),
+            "gibbs" => Some(Workload::Gibbs),
+            _ => None,
+        }
+    }
+
+    fn as_str(self) -> &'static str {
+        match self {
+            Workload::Counter => "counter",
+            Workload::Bp => "bp",
+            Workload::Gibbs => "gibbs",
+        }
+    }
+
+    /// Default sweep/round count when the caller does not override it.
+    fn default_sweeps(self) -> usize {
+        match self {
+            Workload::Counter => 200,
+            Workload::Bp => 3,
+            Workload::Gibbs => 40,
+        }
+    }
+
+    /// Vertices in the workload's (fixed, deterministic) data graph.
+    pub fn num_vertices(self) -> usize {
+        match self {
+            Workload::Counter => 32,
+            Workload::Bp => 80,
+            Workload::Gibbs => 8,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Child-side argument surface
+// ---------------------------------------------------------------------------
+
+/// Parsed `graphlab shard` command line (see [`shard_child_main`]).
+#[derive(Debug)]
+struct ShardArgs {
+    dir: PathBuf,
+    shard: usize,
+    shards: usize,
+    workload: Workload,
+    workers: usize,
+    staleness: u64,
+    batch: usize,
+    sweeps: usize,
+    snapshot_every: u64,
+    snapshot_dir: Option<PathBuf>,
+    restore: bool,
+}
+
+impl ShardArgs {
+    fn parse(args: &[String]) -> Result<ShardArgs, String> {
+        let mut dir = None;
+        let mut shard = None;
+        let mut shards = None;
+        let mut workload = None;
+        let mut workers = 2usize;
+        let mut staleness = 0u64;
+        let mut batch = 1usize;
+        let mut sweeps = 0usize;
+        let mut snapshot_every = 0u64;
+        let mut snapshot_dir = None;
+        let mut restore = false;
+
+        let mut it = args.iter();
+        while let Some(flag) = it.next() {
+            let mut val = |name: &str| {
+                it.next().map(|s| s.to_owned()).ok_or_else(|| format!("{name} needs a value"))
+            };
+            match flag.as_str() {
+                "--dir" => dir = Some(PathBuf::from(val("--dir")?)),
+                "--shard" => {
+                    shard = Some(val("--shard")?.parse().map_err(|e| format!("--shard: {e}"))?)
+                }
+                "--shards" => {
+                    shards = Some(val("--shards")?.parse().map_err(|e| format!("--shards: {e}"))?)
+                }
+                "--workload" => {
+                    let w = val("--workload")?;
+                    workload =
+                        Some(Workload::parse(&w).ok_or_else(|| format!("unknown workload `{w}`"))?)
+                }
+                "--workers" => {
+                    workers = val("--workers")?.parse().map_err(|e| format!("--workers: {e}"))?
+                }
+                "--staleness" => {
+                    staleness =
+                        val("--staleness")?.parse().map_err(|e| format!("--staleness: {e}"))?
+                }
+                "--batch" => {
+                    batch = val("--batch")?.parse().map_err(|e| format!("--batch: {e}"))?
+                }
+                "--sweeps" => {
+                    sweeps = val("--sweeps")?.parse().map_err(|e| format!("--sweeps: {e}"))?
+                }
+                "--snapshot-every" => {
+                    snapshot_every = val("--snapshot-every")?
+                        .parse()
+                        .map_err(|e| format!("--snapshot-every: {e}"))?
+                }
+                "--snapshot-dir" => {
+                    snapshot_dir = Some(PathBuf::from(val("--snapshot-dir")?))
+                }
+                "--restore" => restore = true,
+                other => return Err(format!("unknown flag `{other}`")),
+            }
+        }
+        let dir = dir.ok_or("--dir is required")?;
+        let shard = shard.ok_or("--shard is required")?;
+        let shards: usize = shards.ok_or("--shards is required")?;
+        let workload = workload.ok_or("--workload is required")?;
+        if shards < 2 {
+            return Err("--shards must be at least 2".into());
+        }
+        if shard >= shards {
+            return Err(format!("--shard {shard} out of range for --shards {shards}"));
+        }
+        if sweeps == 0 {
+            sweeps = workload.default_sweeps();
+        }
+        Ok(ShardArgs {
+            dir,
+            shard,
+            shards,
+            workload,
+            workers,
+            staleness,
+            batch,
+            sweeps,
+            snapshot_every,
+            snapshot_dir,
+            restore,
+        })
+    }
+}
+
+/// The `graphlab shard` child entrypoint: run one resident shard of a
+/// preset [`Workload`] against the rendezvous directory, write the
+/// [`ShardReport`], and return the process exit code. Spawned by
+/// [`ProcessHarness::launch`]; never meant to be invoked by hand (but
+/// harmless if it is — it only touches the directories it is given).
+pub fn shard_child_main(args: &[String]) -> i32 {
+    let args = match ShardArgs::parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("graphlab shard: {e}");
+            eprintln!(
+                "USAGE: graphlab shard --dir <rendezvous> --shard <r> --shards <k> \
+                 --workload <counter|bp|gibbs> [--workers n] [--staleness s] [--batch b] \
+                 [--sweeps n] [--snapshot-every n] [--snapshot-dir p] [--restore]"
+            );
+            return 2;
+        }
+    };
+    let report = match args.workload {
+        Workload::Counter => run_counter_child(&args),
+        Workload::Bp => run_bp_child(&args),
+        Workload::Gibbs => run_gibbs_child(&args),
+    };
+    let path = args.dir.join(report_name(args.shard));
+    if let Err(e) = report.write_file(&path) {
+        eprintln!("graphlab shard {}: cannot write report: {e}", args.shard);
+        return 1;
+    }
+    0
+}
+
+/// Self-rescheduling counter, restart-safe: a plain `+1 until rounds`
+/// overshoots when re-run over restored (already advanced) rows, so both
+/// the bump and the respawn are guarded by the target.
+struct GuardedBump {
+    rounds: u64,
+}
+
+impl UpdateFn<u64, ()> for GuardedBump {
+    fn update(&self, scope: &mut Scope<'_, u64, ()>, ctx: &mut UpdateContext<'_>) {
+        if *scope.vertex() < self.rounds {
+            *scope.vertex_mut() += 1;
+        }
+        if *scope.vertex() < self.rounds {
+            ctx.add_task(scope.center(), 1.0);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "guarded-bump"
+    }
+}
+
+fn counter_chain(n: usize) -> DataGraph<u64, ()> {
+    let mut b: GraphBuilder<u64, ()> = GraphBuilder::new();
+    for _ in 0..n {
+        b.add_vertex(0u64);
+    }
+    for i in 0..n as u32 - 1 {
+        b.add_undirected(i, i + 1, (), ());
+    }
+    b.build()
+}
+
+/// Apply `--restore`: rewind the graph to the newest snapshot epoch for
+/// which **every** shard's part is present and readable. All children pick
+/// the same epoch (the choice is a pure function of the directory
+/// listing), so the fleet restarts from one consistent cut.
+fn restore_latest<V: VertexCodec, E>(
+    args: &ShardArgs,
+    graph: &mut DataGraph<V, E>,
+) -> Option<u64> {
+    let dir = args.snapshot_dir.as_deref()?;
+    let (epoch, parts) = latest_complete_parts(dir, args.shards)?;
+    for part in &parts {
+        part.restore_into(graph);
+    }
+    Some(epoch)
+}
+
+/// Shared child tail: configure the program for resident execution and
+/// enter the engine core.
+fn run_resident<V, E>(
+    mut prog: Program<'_, V, E>,
+    args: &ShardArgs,
+    graph: &mut DataGraph<V, E>,
+    scheduler: &dyn Scheduler,
+    sdt: &Sdt,
+) -> RunReport
+where
+    V: VertexCodec + Clone + Send + Sync,
+    E: Send + Sync,
+{
+    prog = prog
+        .workers(args.workers)
+        .shards(args.shards)
+        .model(ConsistencyModel::Full)
+        .ghost_staleness(args.staleness)
+        .ghost_batch(args.batch);
+    if args.snapshot_every > 0 {
+        prog = prog.snapshot_every(args.snapshot_every);
+        if let Some(dir) = &args.snapshot_dir {
+            prog = prog.snapshot_dir(dir);
+        }
+    }
+    prog.config.resident_shard = Some(args.shard);
+    super::sharded::run_resident_shard(&prog, graph, scheduler, sdt, &args.dir, args.shard)
+}
+
+/// Encode this shard's **owned** master rows as [`GhostDelta`] frames for
+/// the report file — the parent merges them into the global result.
+fn encode_owned_rows<V: VertexCodec, E>(
+    graph: &mut DataGraph<V, E>,
+    shard: usize,
+    shards: usize,
+) -> Vec<u8> {
+    let part = PartitionMap::new(graph.num_vertices(), shards);
+    let mut buf = Vec::new();
+    for v in part.range(shard) {
+        GhostDelta::from_vertex(v, 0, graph.vertex_data_ref(v)).encode_into(&mut buf);
+    }
+    buf
+}
+
+fn run_counter_child(args: &ShardArgs) -> ShardReport {
+    let n = Workload::Counter.num_vertices();
+    let rounds = args.sweeps as u64;
+    let mut g = counter_chain(n);
+    if args.restore {
+        restore_latest(args, &mut g);
+    }
+    // Dynamic scheduler, seeded with this shard's owned vertices only —
+    // peers seed their own ranges; the counter never spawns across the cut.
+    let part = PartitionMap::new(n, args.shards);
+    let sched = MultiQueueFifo::new(n, args.workers.max(1));
+    for v in part.range(args.shard) {
+        sched.add_task(Task::new(v));
+    }
+    let f = GuardedBump { rounds };
+    let report = run_resident(Program::new().update_fn(&f), args, &mut g, &sched, &Sdt::new());
+    let rows = encode_owned_rows(&mut g, args.shard, args.shards);
+    ShardReport::from_run(args.shard, &report, rows)
+}
+
+fn run_bp_child(args: &ShardArgs) -> ShardReport {
+    let mut rng = Pcg32::seed_from_u64(42);
+    let mut mrf = random_mrf(80, 160, 3, &mut rng);
+    let n = mrf.graph.num_vertices();
+    let sdt = Sdt::new();
+    sdt.set(LAMBDA_KEY, [1.0f64; 3]);
+    // Full-sweep set plan, identical in every process: `sweeps` passes over
+    // all vertices. The set scheduler ignores BP's residual respawns, so
+    // the executed task count is exact — each plan task runs once, in the
+    // owner's process (non-owned pops are dropped through the resident
+    // handoff, which still releases the plan's DAG dependencies).
+    let sets: Vec<(Vec<u32>, crate::scheduler::FuncId)> =
+        (0..args.sweeps).map(|_| ((0..n as u32).collect(), 0)).collect();
+    let sched = SetScheduler::planned(&sets, n, |v| mrf.graph.neighbors(v), ConsistencyModel::Edge);
+    let upd = BpUpdate::new(mrf.arity, 1e-6, Arc::new(mrf.tables.clone()));
+    let report = run_resident(Program::new().update_fn(&upd), args, &mut mrf.graph, &sched, &sdt);
+    let rows = encode_owned_rows(&mut mrf.graph, args.shard, args.shards);
+    ShardReport::from_run(args.shard, &report, rows)
+}
+
+fn gibbs_chain() -> DataGraph<GibbsVertex, GibbsEdge> {
+    let mut b = GraphBuilder::new();
+    for _ in 0..8 {
+        b.add_vertex(GibbsVertex::new(vec![1.0, 1.0]));
+    }
+    let e = GibbsEdge { potential: EdgePotential::Table(0) };
+    for i in 0..7u32 {
+        b.add_undirected(i, i + 1, e, e);
+    }
+    b.build()
+}
+
+fn run_gibbs_child(args: &ShardArgs) -> ShardReport {
+    let mut g = gibbs_chain();
+    // Color sequentially so every process derives the *same* coloring (and
+    // therefore the same chromatic plan) from its identical graph copy.
+    {
+        let n = g.num_vertices();
+        let sched = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            sched.add_task(Task::new(v));
+        }
+        let upd = ColoringUpdate;
+        Program::new()
+            .update_fn(&upd)
+            .model(ConsistencyModel::Edge)
+            .run_on(&super::SequentialEngine, &mut g, &sched, &Sdt::new());
+    }
+    validate_coloring(&mut g).expect("sequential coloring is proper");
+    let classes = color_classes(&mut g);
+    let sets = chromatic_sets(&classes, args.sweeps, 0);
+    let sched =
+        SetScheduler::planned(&sets, g.num_vertices(), |v| g.neighbors(v), ConsistencyModel::Edge);
+    let tables = vec![vec![1.5, 0.5, 0.5, 1.5]];
+    let upd = GibbsUpdate::new(2, Arc::new(tables), args.workers.max(1), 9);
+    let report = run_resident(Program::new().update_fn(&upd), args, &mut g, &sched, &Sdt::new());
+    let rows = encode_owned_rows(&mut g, args.shard, args.shards);
+    ShardReport::from_run(args.shard, &report, rows)
+}
+
+// ---------------------------------------------------------------------------
+// Per-shard report (child -> parent)
+// ---------------------------------------------------------------------------
+
+/// One shard child's run outcome, serialized into the rendezvous directory
+/// as `report-<shard>.bin` and read back by [`ProcessHarness::join`].
+///
+/// Carries the conservation-relevant [`super::ContentionStats`] counters
+/// plus the shard's owned master rows ([`GhostDelta`]-framed), so the
+/// parent can both audit the cross-process accounting and reassemble the
+/// global result without shared memory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardReport {
+    /// Which shard of the fleet produced this report.
+    pub shard: usize,
+    /// Why the child's engine stopped.
+    pub stop: StopReason,
+    /// Updates executed in this process (owned tasks only — dropped
+    /// cross-shard pops count as `handoffs`, never as updates).
+    pub updates: u64,
+    /// Boundary (ghost-replicated) vertex updates.
+    pub boundary_updates: u64,
+    /// Tasks popped but not owned here, dropped to the owning process.
+    pub handoffs: u64,
+    /// Ghost replica writes applied from peer deltas.
+    pub ghost_syncs: u64,
+    /// Delta frames shipped to peers.
+    pub deltas_sent: u64,
+    /// Boundary updates coalesced into a not-yet-flushed delta.
+    pub deltas_coalesced: u64,
+    /// Bytes moved through the socket transport.
+    pub bytes_shipped: u64,
+    /// Staleness pulls issued at scope admission.
+    pub staleness_pulls: u64,
+    /// Pulls answered through a peer's owner-side pull service.
+    pub pulls_served: u64,
+    /// Admission retries after a pull left the replica past the bound.
+    pub pull_retries: u64,
+    /// Pulls abandoned after the retry budget (stale read admitted).
+    pub pull_timeouts: u64,
+    /// Worst replica lag (versions) any admitted scope observed.
+    pub max_ghost_staleness: u64,
+    /// Chandy–Lamport snapshot parts this shard contributed.
+    pub snapshots_taken: u64,
+    /// This shard's owned master rows as [`GhostDelta`] wire frames.
+    pub rows: Vec<u8>,
+}
+
+impl ShardReport {
+    /// Project the conservation-relevant counters out of a child's
+    /// [`RunReport`], attaching the encoded owned rows.
+    pub fn from_run(shard: usize, report: &RunReport, rows: Vec<u8>) -> ShardReport {
+        let c = &report.contention;
+        ShardReport {
+            shard,
+            stop: report.stop,
+            updates: report.updates,
+            boundary_updates: c.boundary_updates,
+            handoffs: c.handoffs,
+            ghost_syncs: c.ghost_syncs,
+            deltas_sent: c.deltas_sent,
+            deltas_coalesced: c.deltas_coalesced,
+            bytes_shipped: c.bytes_shipped,
+            staleness_pulls: c.staleness_pulls,
+            pulls_served: c.pulls_served,
+            pull_retries: c.pull_retries,
+            pull_timeouts: c.pull_timeouts,
+            max_ghost_staleness: c.max_ghost_staleness,
+            snapshots_taken: c.snapshots_taken,
+            rows,
+        }
+    }
+
+    /// Decode the owned master rows back into `(vertex, version, data)`
+    /// triples. `None` if the payloads do not decode as `V`.
+    pub fn decode_rows<V: VertexCodec>(&self) -> Option<Vec<(VertexId, u64, V)>> {
+        let mut r = ByteReader::new(&self.rows);
+        let mut out = Vec::new();
+        while !r.is_empty() {
+            let d = GhostDelta::decode_from(&mut r)?;
+            out.push((d.vertex, d.version, d.decode_vertex::<V>()?));
+        }
+        Some(out)
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(128 + self.rows.len());
+        put_u32(&mut buf, REPORT_MAGIC);
+        put_u32(&mut buf, self.shard as u32);
+        put_u32(
+            &mut buf,
+            match self.stop {
+                StopReason::SchedulerEmpty => 0,
+                StopReason::TerminationFn => 1,
+                StopReason::UpdateLimit => 2,
+                StopReason::ShardAborted => 3,
+            },
+        );
+        for c in [
+            self.updates,
+            self.boundary_updates,
+            self.handoffs,
+            self.ghost_syncs,
+            self.deltas_sent,
+            self.deltas_coalesced,
+            self.bytes_shipped,
+            self.staleness_pulls,
+            self.pulls_served,
+            self.pull_retries,
+            self.pull_timeouts,
+            self.max_ghost_staleness,
+            self.snapshots_taken,
+        ] {
+            put_u64(&mut buf, c);
+        }
+        put_u64(&mut buf, self.rows.len() as u64);
+        buf.extend_from_slice(&self.rows);
+        buf
+    }
+
+    fn decode(bytes: &[u8]) -> Option<ShardReport> {
+        let mut r = ByteReader::new(bytes);
+        if r.u32()? != REPORT_MAGIC {
+            return None;
+        }
+        let shard = r.u32()? as usize;
+        let stop = match r.u32()? {
+            0 => StopReason::SchedulerEmpty,
+            1 => StopReason::TerminationFn,
+            2 => StopReason::UpdateLimit,
+            3 => StopReason::ShardAborted,
+            _ => return None,
+        };
+        let mut c = [0u64; 13];
+        for slot in &mut c {
+            *slot = r.u64()?;
+        }
+        let row_len = r.u64()? as usize;
+        let rows = r.take(row_len)?.to_vec();
+        r.is_empty().then_some(ShardReport {
+            shard,
+            stop,
+            updates: c[0],
+            boundary_updates: c[1],
+            handoffs: c[2],
+            ghost_syncs: c[3],
+            deltas_sent: c[4],
+            deltas_coalesced: c[5],
+            bytes_shipped: c[6],
+            staleness_pulls: c[7],
+            pulls_served: c[8],
+            pull_retries: c[9],
+            pull_timeouts: c[10],
+            max_ghost_staleness: c[11],
+            snapshots_taken: c[12],
+            rows,
+        })
+    }
+
+    /// Serialize to `path` atomically (tmp + rename): the parent either
+    /// sees no report or a complete one, never a torn write.
+    pub fn write_file(&self, path: &Path) -> std::io::Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.encode())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Read a report back; `InvalidData` if the file does not decode.
+    pub fn read_file(path: &Path) -> std::io::Result<ShardReport> {
+        let bytes = std::fs::read(path)?;
+        ShardReport::decode(&bytes).ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{} is not a shard report", path.display()),
+            )
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The joined fleet
+// ---------------------------------------------------------------------------
+
+/// Outcome of one multi-process run: one [`ShardReport`] slot per shard,
+/// `None` where a child died without reporting (killed, crashed, or
+/// timed out).
+#[derive(Debug)]
+pub struct ProcessRun {
+    /// Per-shard reports, indexed by shard id.
+    pub reports: Vec<Option<ShardReport>>,
+}
+
+impl ProcessRun {
+    /// Did every shard finish and report a drained scheduler?
+    pub fn all_finished(&self) -> bool {
+        !self.reports.is_empty()
+            && self
+                .reports
+                .iter()
+                .all(|r| matches!(r, Some(r) if r.stop == StopReason::SchedulerEmpty))
+    }
+
+    fn sum(&self, f: impl Fn(&ShardReport) -> u64) -> u64 {
+        self.reports.iter().flatten().map(f).sum()
+    }
+
+    /// Updates executed across the fleet.
+    pub fn updates(&self) -> u64 {
+        self.sum(|r| r.updates)
+    }
+
+    /// Boundary updates across the fleet.
+    pub fn boundary_updates(&self) -> u64 {
+        self.sum(|r| r.boundary_updates)
+    }
+
+    /// Delta frames shipped across the fleet.
+    pub fn deltas_sent(&self) -> u64 {
+        self.sum(|r| r.deltas_sent)
+    }
+
+    /// Deltas coalesced into pending frames across the fleet.
+    pub fn deltas_coalesced(&self) -> u64 {
+        self.sum(|r| r.deltas_coalesced)
+    }
+
+    /// Socket bytes moved across the fleet.
+    pub fn bytes_shipped(&self) -> u64 {
+        self.sum(|r| r.bytes_shipped)
+    }
+
+    /// Staleness pulls issued across the fleet.
+    pub fn staleness_pulls(&self) -> u64 {
+        self.sum(|r| r.staleness_pulls)
+    }
+
+    /// Owner-served pulls across the fleet.
+    pub fn pulls_served(&self) -> u64 {
+        self.sum(|r| r.pulls_served)
+    }
+
+    /// Pulls abandoned past the retry budget across the fleet.
+    pub fn pull_timeouts(&self) -> u64 {
+        self.sum(|r| r.pull_timeouts)
+    }
+
+    /// Merge every reporting shard's owned rows into `(vertex, data)`
+    /// pairs, sorted by vertex id. Owned ranges are disjoint, so the merge
+    /// is a concatenation. `None` if any report's rows fail to decode.
+    pub fn merged_rows<V: VertexCodec>(&self) -> Option<Vec<(VertexId, V)>> {
+        let mut out = Vec::new();
+        for r in self.reports.iter().flatten() {
+            out.extend(r.decode_rows::<V>()?.into_iter().map(|(v, _, d)| (v, d)));
+        }
+        out.sort_by_key(|&(v, _)| v);
+        Some(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The parent-side harness
+// ---------------------------------------------------------------------------
+
+/// Launches and joins a fleet of `graphlab shard` child processes — the
+/// real multi-process deployment of the sharded engine.
+///
+/// ```no_run
+/// use graphlab::engine::ProcessHarness;
+/// let dir = std::env::temp_dir().join("graphlab-fleet");
+/// let run = ProcessHarness::new(&dir, 2)
+///     .workload("counter")
+///     .sweeps(100)
+///     .launch()
+///     .expect("fleet launches")
+///     .join()
+///     .expect("fleet joins");
+/// assert!(run.all_finished());
+/// ```
+///
+/// The harness owns child lifetime: [`ProcessHarness::join`] bounds the
+/// wait (default 180 s) and SIGKILLs stragglers rather than hanging the
+/// parent, and `Drop` kills anything still running.
+pub struct ProcessHarness {
+    dir: PathBuf,
+    shards: usize,
+    workload: Workload,
+    workers: usize,
+    staleness: u64,
+    batch: usize,
+    sweeps: usize,
+    snapshot_every: u64,
+    snapshot_dir: Option<PathBuf>,
+    restore: bool,
+    binary: PathBuf,
+    join_timeout: Duration,
+    children: Vec<Option<Child>>,
+}
+
+impl ProcessHarness {
+    /// A fleet of `shards` processes rendezvousing under `dir` (created if
+    /// missing; each child binds its socket endpoints and leaves its
+    /// report there). The child binary defaults to the current executable
+    /// — override with [`ProcessHarness::binary`] when the caller is not
+    /// the `graphlab` binary itself (tests use `CARGO_BIN_EXE_graphlab`).
+    pub fn new(dir: impl Into<PathBuf>, shards: usize) -> ProcessHarness {
+        ProcessHarness {
+            dir: dir.into(),
+            shards,
+            workload: Workload::Counter,
+            workers: 2,
+            staleness: 0,
+            batch: 1,
+            sweeps: 0,
+            snapshot_every: 0,
+            snapshot_dir: None,
+            restore: false,
+            binary: std::env::current_exe().unwrap_or_else(|_| PathBuf::from("graphlab")),
+            join_timeout: Duration::from_secs(180),
+            children: Vec::new(),
+        }
+    }
+
+    /// Derive a harness from a [`Program`]-built [`EngineConfig`]: shard
+    /// count from [`EngineConfig::processes`], worker count and
+    /// ghost/snapshot knobs carried over. The workloads stay the preset
+    /// ones — update-function closures cannot cross `exec`.
+    pub fn from_config(dir: impl Into<PathBuf>, config: &EngineConfig) -> ProcessHarness {
+        let mut h = ProcessHarness::new(dir, config.processes.max(2));
+        h.workers = config.workers.max(1);
+        h.staleness = config.ghost_staleness;
+        h.batch = config.ghost_batch;
+        h.snapshot_every = config.snapshot_every;
+        h.snapshot_dir = config.snapshot_dir.clone();
+        h
+    }
+
+    /// Select the preset workload (`counter`, `bp`, or `gibbs`).
+    /// Panics on an unknown name — the set is closed.
+    pub fn workload(mut self, name: &str) -> Self {
+        self.workload =
+            Workload::parse(name).unwrap_or_else(|| panic!("unknown workload `{name}`"));
+        self
+    }
+
+    /// Worker threads per child process.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Ghost staleness bound handed to every child.
+    pub fn staleness(mut self, s: u64) -> Self {
+        self.staleness = s;
+        self
+    }
+
+    /// Delta batching window handed to every child.
+    pub fn batch(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
+
+    /// Sweeps (set workloads) or per-vertex rounds (counter); 0 keeps the
+    /// workload default.
+    pub fn sweeps(mut self, n: usize) -> Self {
+        self.sweeps = n;
+        self
+    }
+
+    /// Snapshot epoch length (0 disables snapshots).
+    pub fn snapshot_every(mut self, n: u64) -> Self {
+        self.snapshot_every = n;
+        self
+    }
+
+    /// Directory the children spill snapshot parts into (and restore
+    /// from, with [`ProcessHarness::restore`]).
+    pub fn snapshot_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.snapshot_dir = Some(dir.into());
+        self
+    }
+
+    /// Start every child from the newest complete snapshot epoch in the
+    /// snapshot directory instead of from the initial graph.
+    pub fn restore(mut self, yes: bool) -> Self {
+        self.restore = yes;
+        self
+    }
+
+    /// Path of the `graphlab` binary to exec for each shard.
+    pub fn binary(mut self, path: impl Into<PathBuf>) -> Self {
+        self.binary = path.into();
+        self
+    }
+
+    /// Cap on [`ProcessHarness::join`]'s wait before stragglers are
+    /// SIGKILLed.
+    pub fn join_timeout(mut self, t: Duration) -> Self {
+        self.join_timeout = t;
+        self
+    }
+
+    /// Spawn the fleet: one `graphlab shard` child per shard, all pointed
+    /// at the rendezvous directory. Returns with the children running.
+    pub fn launch(mut self) -> std::io::Result<ProcessHarness> {
+        std::fs::create_dir_all(&self.dir)?;
+        if let Some(snap) = &self.snapshot_dir {
+            std::fs::create_dir_all(snap)?;
+        }
+        self.children = Vec::with_capacity(self.shards);
+        for shard in 0..self.shards {
+            let mut cmd = Command::new(&self.binary);
+            cmd.arg("shard")
+                .arg("--dir")
+                .arg(&self.dir)
+                .arg("--shard")
+                .arg(shard.to_string())
+                .arg("--shards")
+                .arg(self.shards.to_string())
+                .arg("--workload")
+                .arg(self.workload.as_str())
+                .arg("--workers")
+                .arg(self.workers.to_string())
+                .arg("--staleness")
+                .arg(self.staleness.to_string())
+                .arg("--batch")
+                .arg(self.batch.to_string())
+                .arg("--sweeps")
+                .arg(self.sweeps.to_string());
+            if self.snapshot_every > 0 {
+                cmd.arg("--snapshot-every").arg(self.snapshot_every.to_string());
+            }
+            if let Some(snap) = &self.snapshot_dir {
+                cmd.arg("--snapshot-dir").arg(snap);
+            }
+            if self.restore {
+                cmd.arg("--restore");
+            }
+            cmd.stdin(std::process::Stdio::null());
+            match cmd.spawn() {
+                Ok(child) => self.children.push(Some(child)),
+                Err(e) => {
+                    // Abort the partial fleet before surfacing the error.
+                    self.kill_all();
+                    return Err(e);
+                }
+            }
+        }
+        Ok(self)
+    }
+
+    /// SIGKILL one shard's child (`Child::kill` is SIGKILL on Unix): the
+    /// mid-run crash of the recovery tests. No-op if it already exited.
+    pub fn kill(&mut self, shard: usize) -> std::io::Result<()> {
+        match self.children.get_mut(shard).and_then(|c| c.as_mut()) {
+            Some(child) => {
+                child.kill()?;
+                let _ = child.wait();
+                self.children[shard] = None;
+                Ok(())
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// True once `snapshot_dir` holds at least one epoch with every
+    /// shard's part present — the earliest point a kill is recoverable.
+    pub fn snapshot_ready(&self) -> bool {
+        self.snapshot_dir
+            .as_deref()
+            .and_then(|d| latest_complete_parts(d, self.shards))
+            .is_some()
+    }
+
+    /// Poll [`ProcessHarness::snapshot_ready`] until it holds or
+    /// `timeout` elapses.
+    pub fn wait_for_snapshot(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.snapshot_ready() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        false
+    }
+
+    /// Wait for every child (bounded by the join timeout — stragglers are
+    /// SIGKILLed, never waited on forever), then collect the per-shard
+    /// reports. A shard that died without writing its report yields
+    /// `None` in [`ProcessRun::reports`]; launch-time kills via
+    /// [`ProcessHarness::kill`] land there too.
+    pub fn join(mut self) -> std::io::Result<ProcessRun> {
+        let deadline = Instant::now() + self.join_timeout;
+        loop {
+            let mut running = false;
+            for slot in &mut self.children {
+                if let Some(child) = slot {
+                    match child.try_wait()? {
+                        Some(_) => *slot = None,
+                        None => running = true,
+                    }
+                }
+            }
+            if !running {
+                break;
+            }
+            if Instant::now() >= deadline {
+                self.kill_all();
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        let mut reports = Vec::with_capacity(self.shards);
+        for shard in 0..self.shards {
+            reports.push(ShardReport::read_file(&self.dir.join(report_name(shard))).ok());
+        }
+        Ok(ProcessRun { reports })
+    }
+
+    fn kill_all(&mut self) {
+        for slot in &mut self.children {
+            if let Some(mut child) = slot.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+impl Drop for ProcessHarness {
+    fn drop(&mut self) {
+        self.kill_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn shard_args_parse_roundtrip() {
+        let args = ShardArgs::parse(&strs(&[
+            "--dir", "/tmp/rdv", "--shard", "1", "--shards", "4", "--workload", "bp",
+            "--workers", "3", "--staleness", "4", "--batch", "8", "--sweeps", "5",
+            "--snapshot-every", "100", "--snapshot-dir", "/tmp/snap", "--restore",
+        ]))
+        .expect("full flag set parses");
+        assert_eq!(args.shard, 1);
+        assert_eq!(args.shards, 4);
+        assert_eq!(args.workload, Workload::Bp);
+        assert_eq!(args.workers, 3);
+        assert_eq!(args.staleness, 4);
+        assert_eq!(args.batch, 8);
+        assert_eq!(args.sweeps, 5);
+        assert_eq!(args.snapshot_every, 100);
+        assert_eq!(args.snapshot_dir.as_deref(), Some(Path::new("/tmp/snap")));
+        assert!(args.restore);
+    }
+
+    #[test]
+    fn shard_args_defaults_and_validation() {
+        let ok = ShardArgs::parse(&strs(&[
+            "--dir", "/tmp/rdv", "--shard", "0", "--shards", "2", "--workload", "counter",
+        ]))
+        .expect("minimal flag set parses");
+        assert_eq!(ok.workers, 2);
+        assert_eq!(ok.staleness, 0);
+        assert_eq!(ok.batch, 1);
+        assert_eq!(ok.sweeps, Workload::Counter.default_sweeps());
+        assert!(!ok.restore);
+
+        for bad in [
+            &strs(&["--shard", "0", "--shards", "2", "--workload", "counter"])[..],
+            &strs(&["--dir", "d", "--shard", "2", "--shards", "2", "--workload", "counter"]),
+            &strs(&["--dir", "d", "--shard", "0", "--shards", "1", "--workload", "counter"]),
+            &strs(&["--dir", "d", "--shard", "0", "--shards", "2", "--workload", "nope"]),
+            &strs(&["--dir", "d", "--shard", "0", "--shards", "2", "--bogus", "x"]),
+        ] {
+            assert!(ShardArgs::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn shard_report_file_roundtrip() {
+        let mut rows = Vec::new();
+        for v in 0..4u32 {
+            GhostDelta::from_vertex(v, 7, &(v as u64 * 10)).encode_into(&mut rows);
+        }
+        let report = ShardReport {
+            shard: 2,
+            stop: StopReason::SchedulerEmpty,
+            updates: 123,
+            boundary_updates: 45,
+            handoffs: 6,
+            ghost_syncs: 78,
+            deltas_sent: 40,
+            deltas_coalesced: 5,
+            bytes_shipped: 9001,
+            staleness_pulls: 17,
+            pulls_served: 17,
+            pull_retries: 2,
+            pull_timeouts: 0,
+            max_ghost_staleness: 3,
+            snapshots_taken: 4,
+            rows,
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("graphlab-report-roundtrip-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(report_name(2));
+        report.write_file(&path).expect("report writes");
+        let back = ShardReport::read_file(&path).expect("report reads back");
+        assert_eq!(back, report, "disk roundtrip is exact");
+        let decoded = back.decode_rows::<u64>().expect("rows decode");
+        assert_eq!(decoded.len(), 4);
+        assert_eq!(decoded[3], (3, 7, 30));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn process_run_aggregates_and_merges() {
+        let mk = |shard: usize, updates: u64, vals: &[(u32, u64)]| {
+            let mut rows = Vec::new();
+            for &(v, x) in vals {
+                GhostDelta::from_vertex(v, 1, &x).encode_into(&mut rows);
+            }
+            ShardReport {
+                shard,
+                stop: StopReason::SchedulerEmpty,
+                updates,
+                boundary_updates: 10,
+                handoffs: 0,
+                ghost_syncs: 0,
+                deltas_sent: 8,
+                deltas_coalesced: 2,
+                bytes_shipped: 100,
+                staleness_pulls: 5,
+                pulls_served: 5,
+                pull_retries: 0,
+                pull_timeouts: 0,
+                max_ghost_staleness: 1,
+                snapshots_taken: 0,
+                rows,
+            }
+        };
+        let run = ProcessRun {
+            reports: vec![
+                Some(mk(0, 100, &[(0, 7), (1, 7)])),
+                Some(mk(1, 50, &[(2, 7), (3, 7)])),
+            ],
+        };
+        assert!(run.all_finished());
+        assert_eq!(run.updates(), 150);
+        assert_eq!(run.deltas_sent() + run.deltas_coalesced(), 20);
+        assert_eq!(run.staleness_pulls(), run.pulls_served());
+        let rows = run.merged_rows::<u64>().expect("rows merge");
+        assert_eq!(rows, vec![(0, 7), (1, 7), (2, 7), (3, 7)]);
+
+        let dead = ProcessRun { reports: vec![Some(mk(0, 1, &[])), None] };
+        assert!(!dead.all_finished(), "a dead shard fails the fleet check");
+        assert_eq!(dead.updates(), 1, "aggregation skips dead shards");
+    }
+
+    #[test]
+    fn workload_presets_are_stable() {
+        for (name, w) in
+            [("counter", Workload::Counter), ("bp", Workload::Bp), ("gibbs", Workload::Gibbs)]
+        {
+            assert_eq!(Workload::parse(name), Some(w));
+            assert_eq!(w.as_str(), name);
+            assert!(w.default_sweeps() > 0);
+            assert!(w.num_vertices() > 0);
+        }
+        assert_eq!(Workload::parse("pagerank"), None);
+    }
+}

@@ -249,6 +249,20 @@ impl<'a, V, E> Program<'a, V, E> {
         self
     }
 
+    /// Request a true **multi-process** deployment of `n` single-shard
+    /// processes (implies a `n`-way cut unless [`Program::shards`] was set
+    /// explicitly). [`Program::run`] itself stays in-process — update
+    /// functions are closures and cannot cross `exec` — so the configured
+    /// program is handed to
+    /// [`ProcessHarness::from_config`](super::process::ProcessHarness::from_config),
+    /// which launches `graphlab shard` children running the preset
+    /// workloads against a shared rendezvous directory (see
+    /// [`EngineConfig::processes`]).
+    pub fn processes(mut self, n: usize) -> Self {
+        self.config = self.config.with_processes(n);
+        self
+    }
+
     /// Switch the retry-deque steal policy from steal-one to steal-half
     /// (see [`EngineConfig::steal_half`]).
     pub fn steal_half(mut self, on: bool) -> Self {

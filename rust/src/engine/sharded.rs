@@ -333,6 +333,53 @@ where
     }
 }
 
+/// Run one **resident shard** of a k-way multi-process deployment to
+/// completion inside this process: cut the (identically rebuilt) data
+/// graph, bring up the [`SocketTransport`] in resident mode against the
+/// shared rendezvous directory (bind own endpoints first, then connect
+/// out to every peer with bounded retry), and enter the shared engine
+/// core with [`EngineConfig::resident_shard`] set — one shard's worker
+/// set, owner-side pull service, cross-shard spawns dropped. Called by
+/// the `graphlab shard` child entrypoint ([`super::process`]); the
+/// scheduler must be seeded with this shard's **owned vertices only**
+/// (peers seed their own).
+pub(crate) fn run_resident_shard<V, E>(
+    program: &Program<'_, V, E>,
+    graph: &mut DataGraph<V, E>,
+    scheduler: &dyn Scheduler,
+    sdt: &Sdt,
+    dir: &std::path::Path,
+    shard: usize,
+) -> RunReport
+where
+    V: VertexCodec + Clone + Send + Sync,
+    E: Send + Sync,
+{
+    let config = &program.config;
+    debug_assert_eq!(
+        config.resident_shard,
+        Some(shard),
+        "resident run entered without the resident-shard config"
+    );
+    let sharded = ShardedGraph::new(graph, config.shards.max(1));
+    let graph: &DataGraph<V, E> = graph;
+    let transport = SocketTransport::resident(&sharded, dir, shard)
+        .expect("failed to set up the resident rendezvous transport");
+    let snap = SnapshotCtl::from_config(config);
+    run_with_faults(
+        graph,
+        &sharded,
+        &transport,
+        scheduler,
+        &program.fns,
+        sdt,
+        &program.syncs,
+        &program.terminators,
+        config,
+        snap.as_ref(),
+    )
+}
+
 /// Sharded engine back-end whose ghost traffic rides the [`ShmTransport`]:
 /// every delta crosses a per-shard-pair lock-free SPSC byte ring over
 /// process-shareable memory — the same-host fast lane a forked-shard
@@ -504,6 +551,31 @@ fn capture_shard_part<V, E>(
     (frames, rows)
 }
 
+/// Resident-mode snapshot persistence: a process hosting one shard cannot
+/// assemble its peers' parts, so it writes its own captured part straight
+/// to the snapshot directory as `snapshot-epoch-<e>-shard-<r>.bin`
+/// (atomically, tmp + rename, so a kill-9 mid-write never leaves a
+/// half-part that recovery would mistake for a complete one). Recovery
+/// scans the directory for the newest epoch with all `k` parts present
+/// ([`super::snapshot::latest_complete_parts`]). Without a snapshot
+/// directory configured there is nowhere to persist — the capture is
+/// dropped (resident snapshots are only meaningful on disk).
+fn write_resident_part<V>(
+    ctl: &SnapshotCtl<V>,
+    epoch: u64,
+    shard: usize,
+    frames: Vec<u8>,
+    rows: u64,
+) {
+    let Some(dir) = ctl.dir() else { return };
+    let part = Snapshot::from_parts(epoch, rows, frames);
+    let path = dir.join(super::snapshot::shard_part_name(epoch, shard));
+    let tmp = path.with_extension("tmp");
+    if part.write_file(&tmp).is_ok() {
+        let _ = std::fs::rename(&tmp, &path);
+    }
+}
+
 /// The shared worker-loop core: every ghost write leaves through
 /// `transport`, every ghost read is staleness-checked at scope admission.
 #[allow(clippy::too_many_arguments)]
@@ -534,8 +606,26 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     let engine_done = AtomicBool::new(false);
     let inflight = AtomicUsize::new(0);
     let total_updates = AtomicU64::new(0);
-    let per_shard = (config.workers / k).max(1);
-    let workers = per_shard * k;
+    // Resident-shard mode: this process hosts exactly one shard of the
+    // k-way partition — every worker thread serves it, peers live in
+    // other processes behind the transport's rendezvous sockets.
+    let resident = config.resident_shard;
+    debug_assert!(resident.map_or(true, |r| r < k), "resident shard out of range");
+    // Resident row write-back: in one address space ghost vertices' rows
+    // ARE the shared masters, but a resident process only has its
+    // partition-time snapshot of them — after a pull, copy the replica
+    // back into the row the update function reads. Needs the neighbor
+    // write locks of the Full model to overwrite rows safely.
+    let sync_rows =
+        resident.is_some() && config.model == crate::consistency::ConsistencyModel::Full;
+    let per_shard = match resident {
+        Some(_) => config.workers.max(1),
+        None => (config.workers / k).max(1),
+    };
+    let workers = match resident {
+        Some(_) => per_shard,
+        None => per_shard * k,
+    };
     let per_worker: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
     let per_conflicts: Vec<AtomicU64> =
         (0..workers).map(|_| AtomicU64::new(0)).collect();
@@ -565,7 +655,14 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     // per shard per epoch), and the part-assembly store.
     let epoch_announced = AtomicU64::new(0);
     let shard_epoch: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
-    let snap_store = snap.map(|ctl| ctl.store(k));
+    // A resident process can never assemble the other shards' parts, so it
+    // skips the in-process store and writes its own part file per epoch
+    // (`snapshot-epoch-<e>-shard-<r>.bin`); recovery reassembles the
+    // newest epoch with all k parts present via `latest_complete_parts`.
+    let snap_store = match resident {
+        Some(_) => None,
+        None => snap.map(|ctl| ctl.store(k)),
+    };
     // Per-worker retry deques (deferred tasks, always shard-local) and
     // per-shard overflow injectors.
     let retry: Vec<WorkStealingDeque<Task>> =
@@ -600,13 +697,40 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     // wire applies are still recorded).
     let tel = config.telemetry.as_ref().map(|cfg| {
         let mut labels: Vec<String> = (0..workers)
-            .map(|w| format!("shard{}-worker{}", w / per_shard, w % per_shard))
+            .map(|w| {
+                format!(
+                    "shard{}-worker{}",
+                    resident.unwrap_or(w / per_shard),
+                    w % per_shard
+                )
+            })
             .collect();
         labels.push("engine".to_string());
         Telemetry::new(cfg.clone(), labels)
     });
 
+    // Owner-side master-row reader for the transport's pull service
+    // (resident mode): freezes one owned row under its read lock — the
+    // same one-lock-at-a-time discipline as `capture_shard_part`, so the
+    // service thread can never deadlock against parked split
+    // acquisitions — and hands the borrow to the service's encode
+    // callback. Built before the thread scope so the scoped service
+    // thread's borrow outlives the scope.
+    let locks_ref = &locks;
+    let master_serve = move |v: crate::graph::VertexId,
+                             sink: &mut dyn FnMut(&V, u64)| {
+        let _guard = locks_ref.read(v);
+        let version = sharded.master_version(v);
+        // Safety: the held read lock excludes the owner's write path, so
+        // the master row is stable while the callback encodes it.
+        let data = unsafe { graph.vertex_data_unchecked(v) };
+        sink(data, version);
+    };
+
     std::thread::scope(|s| {
+        // Resident mode: answer peers' staleness pulls from this owner's
+        // address space for the whole run (no-op on in-process backends).
+        transport.serve_pulls(s, &master_serve, &engine_done);
         let has_periodic = syncs.iter().any(|op| op.interval.is_some());
         if has_periodic {
             let engine_done = &engine_done;
@@ -649,7 +773,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
         }
 
         for w in 0..workers {
-            let my_shard = w / per_shard;
+            let my_shard = resident.unwrap_or(w / per_shard);
             let stop = &stop;
             let inflight = &inflight;
             let total_updates = &total_updates;
@@ -690,7 +814,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
             let total_pinned = &total_pinned;
             s.spawn(move || {
                 let _tel_bind = tel.as_ref().map(|t| t.bind_worker(w));
-                if config.pin_workers && pin_worker_to_core(w % ncores) {
+                // Resident processes offset into the machine's core map by
+                // their shard index so k sibling processes tile the cores
+                // instead of all pinning to the same leading block.
+                let core = resident.map_or(w, |r| r * per_shard + w) % ncores;
+                if config.pin_workers && pin_worker_to_core(core) {
                     total_pinned.fetch_add(1, Ordering::Relaxed);
                 }
                 let mut local_updates: u64 = 0;
@@ -758,7 +886,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                     // Deferred while a split acquisition is parked: the
                     // capturer takes read locks, and a worker holding
                     // remote halves must never block on locks.
-                    if let (Some(ctl), Some(store)) = (snap, snap_store.as_ref()) {
+                    if let Some(ctl) = snap {
                         let e = epoch_announced.load(Ordering::Acquire);
                         if e > my_snap_epoch && pending.is_none() {
                             my_snap_epoch = e;
@@ -786,7 +914,21 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                                     e,
                                     rows,
                                 );
-                                store.add_part(e, my_shard, frames, rows);
+                                match snap_store.as_ref() {
+                                    // In-process: hand the part to the
+                                    // epoch-assembly store shared by all
+                                    // k shards.
+                                    Some(store) => {
+                                        store.add_part(e, my_shard, frames, rows);
+                                    }
+                                    // Resident: peers are other processes
+                                    // — persist this shard's part file
+                                    // directly and let recovery reassemble
+                                    // complete epochs from the directory.
+                                    None => write_resident_part(
+                                        ctl, e, my_shard, frames, rows,
+                                    ),
+                                }
                             }
                         }
                     }
@@ -880,7 +1022,11 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                                 task = Some(t);
                                 from_retry = true;
                             } else {
-                                let base = my_shard * per_shard;
+                                // First worker index of this worker's own
+                                // group — NOT `my_shard * per_shard`: a
+                                // resident process numbers its workers
+                                // 0..per_shard while serving shard r.
+                                let base = (w / per_shard) * per_shard;
                                 for i in 1..per_shard {
                                     let peer = base + (w - base + i) % per_shard;
                                     let got = if use_steal_half {
@@ -971,7 +1117,21 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                                 &mut ghost_syncs,
                                 &mut bytes_shipped,
                             );
-                            rings[owner_shard].push(task);
+                            if resident.is_none() {
+                                rings[owner_shard].push(task);
+                            } else {
+                                // Resident mode ships no tasks between
+                                // processes: each process seeds and
+                                // re-schedules only its owned vertices, so
+                                // a cross-shard spawn (an update poking a
+                                // remote neighbor) is dropped here — the
+                                // owner's own schedule covers that vertex.
+                                // Retire it like an executed task so the
+                                // in-flight count and the scheduler's
+                                // termination check stay balanced.
+                                scheduler.task_done(task, w);
+                                inflight.fetch_sub(1, Ordering::AcqRel);
+                            }
                             continue;
                         }
 
@@ -1171,6 +1331,7 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
                             config.ghost_staleness,
                             config.pull_retry_limit,
                             transport,
+                            sync_rows,
                         );
                         staleness_pulls += refreshed.pulls;
                         pulls_served += refreshed.served;
@@ -1324,8 +1485,15 @@ fn run_core<V: Clone + Send + Sync, E: Send + Sync>(
     let engine_bind = tel.as_ref().map(|t| t.bind_worker(workers));
     transport.finalize();
     let mut drained = 0u64;
-    for shard in 0..k {
-        drained += transport.drain(shard).applied;
+    match resident {
+        // A resident process only ever drains its own shard's inbox —
+        // the other shards' inboxes belong to other processes.
+        Some(r) => drained += transport.drain(r).applied,
+        None => {
+            for shard in 0..k {
+                drained += transport.drain(shard).applied;
+            }
+        }
     }
     total_ghost_syncs.fetch_add(drained, Ordering::AcqRel);
     drop(engine_bind);

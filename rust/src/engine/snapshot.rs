@@ -123,6 +123,64 @@ impl Snapshot {
         f.read_to_end(&mut frames)?;
         Ok(Snapshot { epoch, rows, frames })
     }
+
+    /// Assemble a snapshot from already-encoded row frames. The resident
+    /// (multi-process) engine uses this to persist a single shard's part
+    /// directly — the in-process `SnapshotStore` assembly never sees all
+    /// `k` parts when each shard lives in its own process, so each child
+    /// writes `snapshot-epoch-<e>-shard-<r>.bin` and recovery treats an
+    /// epoch as complete only when every shard's file exists.
+    pub(crate) fn from_parts(epoch: u64, rows: u64, frames: Vec<u8>) -> Snapshot {
+        Snapshot { epoch, rows, frames }
+    }
+}
+
+/// File name of one shard's snapshot part in resident (multi-process)
+/// runs: recovery considers epoch `e` restorable only when the file
+/// exists for every shard.
+pub(crate) fn shard_part_name(epoch: u64, shard: usize) -> String {
+    format!("snapshot-epoch-{epoch}-shard-{shard}.bin")
+}
+
+/// Scan `dir` for the newest epoch whose shard-part files are complete
+/// (all `k` present) and read them back in shard order. Returns `None`
+/// when no epoch is complete — partially written epochs (a shard died
+/// mid-capture) are skipped per the completion rule.
+pub(crate) fn latest_complete_parts(dir: &Path, shards: usize) -> Option<(u64, Vec<Snapshot>)> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    let mut epochs: Vec<u64> = entries
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name().into_string().ok()?;
+            let rest = name.strip_prefix("snapshot-epoch-")?;
+            let (epoch, _) = rest.split_once("-shard-")?;
+            epoch.parse::<u64>().ok()
+        })
+        .collect();
+    epochs.sort_unstable();
+    epochs.dedup();
+    for &epoch in epochs.iter().rev() {
+        let paths: Vec<PathBuf> =
+            (0..shards).map(|r| dir.join(shard_part_name(epoch, r))).collect();
+        if !paths.iter().all(|p| p.exists()) {
+            continue;
+        }
+        let mut parts = Vec::with_capacity(shards);
+        let mut ok = true;
+        for path in &paths {
+            match Snapshot::read_file(path) {
+                Ok(part) => parts.push(part),
+                Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if ok {
+            return Some((epoch, parts));
+        }
+    }
+    None
 }
 
 /// Per-run snapshot controls resolved from the engine config by the
@@ -168,6 +226,13 @@ impl<V> SnapshotCtl<V> {
         (self.encode)(data, frames);
         let len = (frames.len() - len_at - 4) as u32;
         frames[len_at..len_at + 4].copy_from_slice(&len.to_le_bytes());
+    }
+
+    /// The configured spill directory, if any — the resident engine
+    /// writes its per-shard part files here directly instead of going
+    /// through a [`SnapshotStore`].
+    pub(crate) fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
     }
 
     /// Build the run's part-assembly store (shares the config's optional
@@ -321,6 +386,34 @@ mod tests {
         assert!(path.exists(), "completed snapshots spill to the configured dir");
         let read = Snapshot::read_file(&path).expect("reads back");
         assert_eq!(read, snap, "disk round-trip is exact");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_part_scan_skips_incomplete_epochs() {
+        let dir = std::env::temp_dir()
+            .join(format!("graphlab-snap-parts-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = ctl(10, None);
+        let mut frames = Vec::new();
+        c.encode_frame(0, 1, &7, &mut frames);
+        // Epoch 3: both shard parts present. Epoch 5: only shard 0's part
+        // landed before the "crash" — it must be skipped.
+        for (epoch, shard) in [(3u64, 0usize), (3, 1), (5, 0)] {
+            Snapshot::from_parts(epoch, 1, frames.clone())
+                .write_file(&dir.join(shard_part_name(epoch, shard)))
+                .unwrap();
+        }
+        let (epoch, parts) =
+            latest_complete_parts(&dir, 2).expect("epoch 3 is complete");
+        assert_eq!(epoch, 3, "the incomplete newer epoch is skipped");
+        assert_eq!(parts.len(), 2);
+        assert!(parts.iter().all(|p| p.epoch() == 3 && p.rows() == 1));
+        assert!(
+            latest_complete_parts(&dir, 3).is_none(),
+            "a third shard's missing files leave no complete epoch"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -45,6 +45,11 @@ pub struct GhostEntry<V> {
     /// replica (possibly still queued in a transport). Always `>=
     /// version()`; the gap is the in-flight delta window.
     pending: AtomicU64,
+    /// Newest version copied into the process-local [`DataGraph`] row of
+    /// this vertex (resident mode only — see [`GhostEntry::sync_row`]).
+    /// In-process sharded runs share one `DataGraph`, so the row is always
+    /// current and this stays 0.
+    row: AtomicU64,
     /// Guards `data`: readers share, a sync holds it exclusively.
     lock: ScopeLock,
     data: DataCell<V>,
@@ -75,6 +80,33 @@ impl<V> GhostEntry<V> {
     /// Advance the pending-delta slot (called by transports at send time).
     pub(crate) fn note_pending(&self, version: u64) {
         self.pending.fetch_max(version, Ordering::AcqRel);
+    }
+}
+
+impl<V: Clone> GhostEntry<V> {
+    /// Copy the replica into the caller's process-local master row if the
+    /// row has fallen behind the replica — the resident-mode bridge
+    /// between the versioned ghost table (where pulled and drained deltas
+    /// land) and the `DataGraph` rows update functions actually read. In
+    /// one address space the row IS the remote owner's live master and
+    /// this is never called; in a resident process the row is a dead copy
+    /// unless refreshed here.
+    ///
+    /// `apply` receives the replica under its read lock and must
+    /// `clone_from` it into the row. The caller must hold the vertex's
+    /// **write** lock (a Full-model scope), so no concurrent reader can
+    /// observe the row mid-write.
+    pub(crate) fn sync_row(&self, apply: impl FnOnce(&V)) {
+        if self.version.load(Ordering::Acquire) <= self.row.load(Ordering::Acquire) {
+            return;
+        }
+        self.lock.read_spin();
+        // Re-read under the lock: the version the row will now reflect.
+        let version = self.version.load(Ordering::Acquire);
+        // SAFETY: read lock held for the duration of the copy-out.
+        apply(unsafe { self.data.get_ref() });
+        self.lock.unlock_read();
+        self.row.fetch_max(version, Ordering::AcqRel);
     }
 }
 
@@ -291,6 +323,7 @@ impl<V: Clone> ShardedGraph<V> {
                     owner: part.owner_of(u),
                     version: AtomicU64::new(0),
                     pending: AtomicU64::new(0),
+                    row: AtomicU64::new(0),
                     lock: ScopeLock::new(),
                     data: DataCell::new(graph.vertex_data_ref(u).clone()),
                 });

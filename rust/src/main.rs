@@ -5,6 +5,8 @@
 //!   smoke       run a fast end-to-end self-check across every subsystem
 //!   artifacts   list and compile-check the AOT artifacts (PJRT)
 //!   examples    list the runnable examples and benches
+//!   shard       run one resident shard of a multi-process fleet (spawned
+//!               by `engine::ProcessHarness`, not meant for manual use)
 //!
 //! The full experiment drivers live in `examples/` (runnable scenarios) and
 //! `rust/benches/` (per-figure reproduction harnesses, `cargo bench`).
@@ -25,7 +27,8 @@ fn usage() -> ! {
          info        build/artifact status\n  \
          smoke       fast end-to-end self check\n  \
          artifacts   compile-check every AOT artifact via PJRT\n  \
-         examples    list runnable examples and figure benches"
+         examples    list runnable examples and figure benches\n  \
+         shard       one resident shard of a multi-process fleet (internal)"
     );
     std::process::exit(2);
 }
@@ -160,6 +163,9 @@ fn main() {
         Some("smoke") => smoke(),
         Some("artifacts") => artifacts(),
         Some("examples") => examples(),
+        Some("shard") => {
+            std::process::exit(graphlab::engine::process::shard_child_main(&args[1..]))
+        }
         _ => usage(),
     }
 }

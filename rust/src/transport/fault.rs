@@ -244,6 +244,21 @@ impl<V: Clone + Send + Sync> GhostTransport<V> for FaultInjector<'_, V> {
     fn reconnect_backoffs(&self) -> u64 {
         self.inner.reconnect_backoffs()
     }
+
+    fn known_master_version(&self, vertex: VertexId, local: u64) -> u64 {
+        // Version announcements are control-plane metadata, not ghost
+        // traffic: the lossy schedule never perturbs them.
+        self.inner.known_master_version(vertex, local)
+    }
+
+    fn serve_pulls<'scope, 'env>(
+        &'scope self,
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        master: super::MasterServe<'scope, V>,
+        local_done: &'scope std::sync::atomic::AtomicBool,
+    ) -> bool {
+        self.inner.serve_pulls(scope, master, local_done)
+    }
 }
 
 #[cfg(test)]

@@ -329,7 +329,55 @@ pub trait GhostTransport<V>: Send + Sync {
     fn reconnect_backoffs(&self) -> u64 {
         0
     }
+
+    /// Best master version this backend **knows about** for `vertex`,
+    /// given the locally observable master version `local`. In one
+    /// address space `local` (the shared `master_versions` table) is
+    /// authoritative and the default returns it unchanged. A
+    /// cross-process backend overrides this with the maximum of `local`
+    /// and the versions its peers have *announced* on the wire — that is
+    /// the only way a resident shard can ever observe that a
+    /// remote-owned master moved, so the engine's bounded-staleness
+    /// admission check sources versions through this hook.
+    fn known_master_version(&self, vertex: VertexId, local: u64) -> u64 {
+        let _ = vertex;
+        local
+    }
+
+    /// Start this backend's **owner-side pull service** inside the
+    /// engine's thread scope, if it has one. A cross-process backend
+    /// spawns a scoped thread that accepts peer pull connections, decodes
+    /// [`PullRequest`] frames, reads the requested master row through
+    /// `master` (which takes the vertex's read lock around the supplied
+    /// callback), and writes the reply delta frame back — so pulls are
+    /// answered from the **owner's own address space**, never by the
+    /// requester reaching into peer memory. `local_done` flips true when
+    /// every engine worker has exited; the service drains in-flight
+    /// requests, coordinates shutdown with its peers, and returns.
+    ///
+    /// Returns whether a service thread was actually started. The
+    /// default (every in-process backend) starts nothing: their pulls
+    /// are served on the requester's thread against shared memory.
+    fn serve_pulls<'scope, 'env>(
+        &'scope self,
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        master: MasterServe<'scope, V>,
+        local_done: &'scope std::sync::atomic::AtomicBool,
+    ) -> bool {
+        let _ = (scope, master, local_done);
+        false
+    }
 }
+
+/// The owner-side master-row reader handed to
+/// [`GhostTransport::serve_pulls`]: invoked with a locally-owned vertex
+/// id, it acquires that vertex's read lock, then calls the supplied
+/// callback with a borrow of the master data and the current master
+/// version (releasing the lock when the callback returns). The
+/// continuation shape keeps the vertex-codec bound off the engine core:
+/// the service thread encodes the row inside the callback and does its
+/// socket writes after the lock is released.
+pub type MasterServe<'a, V> = &'a (dyn Fn(VertexId, &mut dyn FnMut(&V, u64)) + Sync);
 
 /// Owner-side half of a pull exchange, shared by the serializing
 /// backends: decode the request frame off `raw`, serve it from the

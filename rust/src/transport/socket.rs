@@ -91,6 +91,45 @@
 //! write before the first reply is served, so N staleness pulls cost one
 //! lane acquisition and one request syscall instead of N lock-step
 //! round-trips ([`SocketTransport::pulls_pipelined`] counts them).
+//!
+//! # Resident (multi-process) mode
+//!
+//! Everything above describes the **in-process** topology: one transport
+//! instance owns every endpoint and the requester thread plays both ends
+//! of each pull lane. [`SocketTransport::resident`] is the real thing —
+//! one transport instance per OS process, running exactly one shard, all
+//! instances rendezvousing through a shared directory
+//! ([`SocketTransport::with_rendezvous_dir`] is the same naming fix for
+//! the in-process case). A resident instance:
+//!
+//! * binds its delta endpoint `shard-<r>.sock` **and** its pull-service
+//!   endpoint `pull-<r>.sock` before connecting out to any peer (with
+//!   bounded retry), so fleet launch order cannot deadlock;
+//! * ships **raw frames only** (the shadow-diff variant stays
+//!   in-process) and skips send-window accounting — the decrementing
+//!   reader lives in the peer's process, so flow control falls back to
+//!   the kernel's socket buffers;
+//! * writes an eager 16-byte **version-announce** frame per delta send
+//!   (`u32 vertex, u64 version, u32` [`ANNOUNCE_LEN`], no payload)
+//!   straight to the stream, decoupling the version signal from batched
+//!   data delivery: the peer's reader records announced versions on a
+//!   per-vertex **version board**, which
+//!   [`GhostTransport::known_master_version`] folds into the engine's
+//!   staleness admission — the only way one process can observe that a
+//!   remote master moved;
+//! * answers peer pulls from an **owner-side pull service thread**
+//!   ([`GhostTransport::serve_pulls`]): requesters hold persistent
+//!   clients to each owner's service, ship pipelined request waves, and
+//!   apply the reply delta frames — no process ever reads another's
+//!   master memory. After its engine finishes, the service writes a
+//!   `done-<r>` marker in the rendezvous dir and lingers (still
+//!   serving) until every peer's marker exists, so a fast shard cannot
+//!   strand a slow peer's last admission pulls;
+//! * survives a kill -9'd peer: delta flushes toward a dead endpoint
+//!   burn a short reconnect budget and then go dark (dropping their
+//!   staged frames — recovery is the snapshot-restore restart), and
+//!   pull clients fail fast after a few consecutive failures instead of
+//!   paying the IO timeout on every admission.
 
 use super::{
     decode_header, decode_payload, encode_delta, put_u32, ByteReader, DrainReceipt, GhostDelta,
@@ -158,13 +197,84 @@ const PULL_IO_TIMEOUT: Duration = Duration::from_millis(500);
 /// shut.
 const STALL_ITERS_MAX: u32 = 20_000;
 
+/// Payload-length sentinel marking a **version-announce** frame: a
+/// header-only delta frame (`u32 vertex, u64 version, u32 ANNOUNCE_LEN`)
+/// a resident sender writes straight to the stream at send time, before
+/// the staged data frame ships, so the peer process learns the master
+/// moved without waiting on batched data delivery. Announce frames feed
+/// the receiver's version board and never reach the inbox. A real
+/// payload can never reach this length.
+const ANNOUNCE_LEN: u32 = u32::MAX;
+
+/// Rendezvous connect retry budget: a resident child may come up seconds
+/// before its peers bind their endpoints, so outward connects retry this
+/// many times at [`CONNECT_RETRY_WAIT`] intervals (~10 s total) before
+/// failing the constructor.
+const CONNECT_RETRIES: u32 = 500;
+
+/// Pause between rendezvous connect attempts.
+const CONNECT_RETRY_WAIT: Duration = Duration::from_millis(20);
+
+/// Read/write timeout on resident pull clients: tighter than the
+/// in-process lane timeout so a kill -9'd owner costs a surviving
+/// requester a fraction of a second per admission, not half of one.
+const RESIDENT_PULL_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// Consecutive failures against one owner's pull service before the
+/// client is marked dead and later pulls fail fast (counted as pull
+/// timeouts) instead of paying the IO timeout every time.
+const PULL_CLIENT_FAILS_MAX: u32 = 3;
+
+/// Resident reconnect budget for a delta connection before it is written
+/// off as dead and its staged frames dropped: a kill -9'd peer must not
+/// panic the survivors (recovery is the snapshot-restore restart, not
+/// this connection).
+const RESIDENT_RECONNECT_MAX: u32 = 4;
+
+/// How long a finished resident pull service lingers — still serving —
+/// for peers that have not yet written their done markers.
+const DONE_LINGER: Duration = Duration::from_secs(10);
+
 /// A unique socket directory per transport instance: process id plus an
 /// in-process sequence number, so parallel test binaries (and parallel
-/// tests within one binary) never collide on socket paths.
+/// tests within one binary) never collide on socket paths. This is the
+/// **in-process fallback** — cross-process topologies must share an
+/// explicit rendezvous dir instead ([`SocketTransport::resident`],
+/// [`SocketTransport::with_rendezvous_dir`]), because parent and
+/// children would compute different pid-based paths.
 fn next_socket_dir() -> PathBuf {
     static SEQ: AtomicUsize = AtomicUsize::new(0);
     let seq = SEQ.fetch_add(1, Ordering::Relaxed);
     std::env::temp_dir().join(format!("graphlab-sock-{}-{seq}", std::process::id()))
+}
+
+/// Pull-service endpoint of `shard` inside a rendezvous/socket dir.
+fn pull_endpoint(dir: &Path, shard: usize) -> PathBuf {
+    dir.join(format!("pull-{shard}.sock"))
+}
+
+/// Done-marker path of `shard` inside a rendezvous dir: written by the
+/// shard's pull service once its local engine finished, read by every
+/// peer's service to decide when lingering may end.
+fn done_marker(dir: &Path, shard: usize) -> PathBuf {
+    dir.join(format!("done-{shard}"))
+}
+
+/// Connect with bounded retry: rendezvous peers bind their endpoints at
+/// their own pace, so the first connects of a fast-launching child race
+/// a slow sibling's bind.
+fn connect_retry(endpoint: &Path) -> std::io::Result<UnixStream> {
+    let mut last = None;
+    for _ in 0..CONNECT_RETRIES {
+        match UnixStream::connect(endpoint) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => last = Some(e),
+        }
+        std::thread::sleep(CONNECT_RETRY_WAIT);
+    }
+    Err(last.unwrap_or_else(|| {
+        std::io::Error::new(ErrorKind::NotFound, "rendezvous peer never bound its endpoint")
+    }))
 }
 
 /// Write half of one `src -> dst` delta connection, with its staged-frame
@@ -185,6 +295,14 @@ struct Connection {
     /// since the last complete flush — the raw resend set after a
     /// reconnect (cleared once a flush fully lands).
     meta: Vec<(VertexId, u64, Vec<u8>)>,
+    /// Resident mode: flush failures toward this peer are survivable —
+    /// after [`RESIDENT_RECONNECT_MAX`] reconnect attempts the connection
+    /// goes dead and staged frames are dropped, because a kill -9'd peer
+    /// must not panic the survivors.
+    best_effort: bool,
+    /// Set once a best-effort connection exhausts its reconnect budget;
+    /// every later stage/flush toward it is a cheap no-op.
+    dead: bool,
 }
 
 impl Connection {
@@ -200,6 +318,28 @@ impl Connection {
             staged_bytes: 0,
             shadow: HashMap::new(),
             meta: Vec::new(),
+            best_effort: false,
+            dead: false,
+        })
+    }
+
+    /// Rendezvous variant of [`Connection::open`]: bounded-retry connect
+    /// (the peer process may not have bound yet), raw frames only, and
+    /// best-effort flushes — peers in other processes can die for real.
+    fn open_rendezvous(endpoint: &Path, src: u32) -> std::io::Result<Connection> {
+        let mut stream = connect_retry(endpoint)?;
+        stream.write_all(&src.to_le_bytes())?;
+        Ok(Connection {
+            stream,
+            endpoint: endpoint.to_path_buf(),
+            src,
+            compress: false,
+            staged: VecDeque::new(),
+            staged_bytes: 0,
+            shadow: HashMap::new(),
+            meta: Vec::new(),
+            best_effort: true,
+            dead: false,
         })
     }
 
@@ -217,8 +357,8 @@ impl Connection {
         let mut envelope = Vec::with_capacity(ENVELOPE_HEADER + payload.len() + 21);
         put_u32(&mut envelope, self.src);
         put_u32(&mut envelope, 0); // body_len, patched below
-        let body_len =
-            encode_delta(vertex, version, payload, self.shadow.get(&vertex).map(|s| s.as_slice()), &mut envelope);
+        let shadow = self.shadow.get(&vertex).map(|s| s.as_slice());
+        let body_len = encode_delta(vertex, version, payload, shadow, &mut envelope);
         debug_assert!((body_len as u32) < SHADOW_RESET);
         envelope[4..8].copy_from_slice(&(body_len as u32).to_le_bytes());
         self.shadow
@@ -248,6 +388,12 @@ impl Connection {
         reconnects: &AtomicU64,
         backoffs: &AtomicU64,
     ) {
+        if self.dead {
+            self.staged.clear();
+            self.staged_bytes = 0;
+            self.meta.clear();
+            return;
+        }
         let mut attempt = 0u32;
         while !self.staged.is_empty() {
             let res = {
@@ -258,7 +404,9 @@ impl Connection {
             match res {
                 // A zero-length write with frames still staged cannot make
                 // progress: treat it like a dead connection.
-                Ok(0) => self.reconnect_and_restage(dst, window, reconnects, backoffs, &mut attempt),
+                Ok(0) => {
+                    self.reconnect_and_restage(dst, window, reconnects, backoffs, &mut attempt)
+                }
                 Ok(n) => {
                     self.staged_bytes -= n;
                     let mut left = n;
@@ -323,6 +471,16 @@ impl Connection {
         attempt: &mut u32,
     ) {
         *attempt += 1;
+        if self.best_effort && *attempt > RESIDENT_RECONNECT_MAX {
+            // The peer process is gone (kill -9 or crash): drop the
+            // staged frames and go dead rather than panic the survivor —
+            // correctness comes back via snapshot-restore restart.
+            self.dead = true;
+            self.staged.clear();
+            self.staged_bytes = 0;
+            self.meta.clear();
+            return;
+        }
         assert!(
             *attempt <= RECONNECT_ATTEMPTS_MAX,
             "ghost delta flush (shard {src} -> {dst}) to {:?} failed after \
@@ -373,6 +531,42 @@ impl Connection {
 struct PullLane {
     near: UnixStream,
     far: UnixStream,
+}
+
+/// Resident-mode requester half toward one remote owner's pull service:
+/// a persistent stream with bounded IO timeouts, replaced wholesale
+/// after any failed exchange (a timed-out exchange can leave half a
+/// frame on the stream, so reuse would desync the protocol) and marked
+/// dead after [`PULL_CLIENT_FAILS_MAX`] consecutive failures so a
+/// kill -9'd owner fails admissions fast instead of stalling each one
+/// on the timeout.
+struct PullClient {
+    stream: Option<UnixStream>,
+    endpoint: PathBuf,
+    fails: u32,
+}
+
+impl PullClient {
+    fn dead(&self) -> bool {
+        self.fails >= PULL_CLIENT_FAILS_MAX
+    }
+
+    /// Record an IO failure: drop the (possibly desynced) stream and try
+    /// one fresh connect for the next exchange.
+    fn fail_and_reconnect(&mut self) {
+        self.fails += 1;
+        self.stream = None;
+        if self.dead() {
+            return;
+        }
+        if let Ok(stream) = UnixStream::connect(&self.endpoint) {
+            if stream.set_read_timeout(Some(RESIDENT_PULL_TIMEOUT)).is_ok()
+                && stream.set_write_timeout(Some(RESIDENT_PULL_TIMEOUT)).is_ok()
+            {
+                self.stream = Some(stream);
+            }
+        }
+    }
 }
 
 /// One accepted inbound stream at an endpoint, with its frame-staging
@@ -497,6 +691,117 @@ fn reader_loop(
     }
 }
 
+/// Resident-mode variant of [`forward_frames`]: walks raw delta frames,
+/// records every frame header's `(vertex, version)` on the version board
+/// (`fetch_max` — announce/data ordering is free), consumes announce
+/// frames (board-only, never forwarded), and moves complete data frames
+/// into the inbox.
+fn resident_forward_frames(staging: &mut Vec<u8>, inbox: &Mutex<Vec<u8>>, board: &[AtomicU64]) {
+    let mut out: Vec<u8> = Vec::new();
+    let mut pos = 0usize;
+    while staging.len() - pos >= FRAME_HEADER {
+        let vertex = u32::from_le_bytes(staging[pos..pos + 4].try_into().unwrap()) as usize;
+        let version = u64::from_le_bytes(staging[pos + 4..pos + 12].try_into().unwrap());
+        let len = u32::from_le_bytes(staging[pos + 12..pos + 16].try_into().unwrap());
+        if len == ANNOUNCE_LEN {
+            if let Some(slot) = board.get(vertex) {
+                slot.fetch_max(version, Ordering::AcqRel);
+            }
+            pos += FRAME_HEADER;
+            continue;
+        }
+        let total = FRAME_HEADER + len as usize;
+        if staging.len() - pos < total {
+            break;
+        }
+        if let Some(slot) = board.get(vertex) {
+            slot.fetch_max(version, Ordering::AcqRel);
+        }
+        out.extend_from_slice(&staging[pos..pos + total]);
+        pos += total;
+    }
+    if pos > 0 {
+        if !out.is_empty() {
+            inbox.lock().unwrap().extend_from_slice(&out);
+        }
+        staging.drain(..pos);
+    }
+}
+
+/// The reader loop of a **resident** endpoint: like [`reader_loop`] but
+/// with no send-window accounting (the senders live in other processes,
+/// whose own windows this process cannot decrement) and the version
+/// board fed from every frame header. Exits as soon as shutdown is
+/// raised — peer processes own their streams' lifecycles, so waiting for
+/// them to close would hang the drop.
+fn resident_reader_loop(
+    listener: UnixListener,
+    me: usize,
+    k: usize,
+    inboxes: Arc<Vec<Mutex<Vec<u8>>>>,
+    board: Arc<Vec<AtomicU64>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let _ = listener.set_nonblocking(true);
+    let mut streams: Vec<Rx> = Vec::new();
+    let mut buf = vec![0u8; 16 << 10];
+    loop {
+        while let Ok((stream, _)) = listener.accept() {
+            if let Some(rx) = handshake(stream, k) {
+                streams.push(rx);
+            }
+        }
+        let mut moved = false;
+        streams.retain_mut(|rx| match rx.stream.read(&mut buf) {
+            Ok(0) => false,
+            Ok(n) => {
+                rx.staging.extend_from_slice(&buf[..n]);
+                resident_forward_frames(&mut rx.staging, &inboxes[me], &board);
+                moved = true;
+                true
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                true
+            }
+            Err(_) => false,
+        });
+        if shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        if !moved {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}
+
+/// `write_all` over a nonblocking stream: spins through `WouldBlock`
+/// (bounded) instead of failing, because the pull service keeps its
+/// accepted connections nonblocking for cheap request polling but still
+/// needs whole reply frames on the wire.
+fn write_all_spin(stream: &mut UnixStream, mut buf: &[u8]) -> std::io::Result<()> {
+    let mut spins = 0u32;
+    while !buf.is_empty() {
+        match stream.write(buf) {
+            Ok(0) => return Err(std::io::Error::from(ErrorKind::WriteZero)),
+            Ok(n) => buf = &buf[n..],
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::Interrupted) => {
+                spins += 1;
+                if spins > 1_000_000 {
+                    return Err(std::io::Error::from(ErrorKind::TimedOut));
+                }
+                std::thread::yield_now();
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
 /// Ghost transport over Unix-domain sockets: one bound endpoint per shard
 /// in a per-run temp directory, one delta connection plus one pull lane
 /// per ordered shard pair, one reader thread per endpoint. Frames are
@@ -536,13 +841,30 @@ pub struct SocketTransport<'g, V> {
     backoffs: AtomicU64,
     lane_timeouts: AtomicU64,
     pipelined: AtomicU64,
+    /// `Some(r)` when this instance is the **resident** transport of one
+    /// shard inside its own OS process; `None` for the in-process
+    /// all-shards topology.
+    resident: Option<usize>,
+    /// Whether this instance generated (and therefore owns) its socket
+    /// dir. A rendezvous dir handed in from outside outlives the drop —
+    /// its creator removes it.
+    owns_dir: bool,
+    /// Resident mode: best master version *announced* per vertex (see
+    /// [`ANNOUNCE_LEN`]), behind `known_master_version`. Empty in-process.
+    board: Arc<Vec<AtomicU64>>,
+    /// Resident mode: the bound owner-side pull-service listener, taken
+    /// by `serve_pulls` when the engine starts its service thread.
+    pull_listener: Mutex<Option<UnixListener>>,
+    /// Resident mode: pull clients toward each remote owner's service,
+    /// indexed by owner shard (`None` on the diagonal and in-process).
+    pull_clients: Vec<Option<Mutex<PullClient>>>,
 }
 
 impl<'g, V> SocketTransport<'g, V> {
     /// Bind the endpoints, connect every shard pair, and spawn the reader
     /// threads, with the default send window and raw frames.
     pub fn new(graph: &'g ShardedGraph<V>) -> std::io::Result<SocketTransport<'g, V>> {
-        SocketTransport::with_options(graph, DEFAULT_SEND_BUFFER, false)
+        SocketTransport::with_options(graph, DEFAULT_SEND_BUFFER, false, None)
     }
 
     /// Like [`SocketTransport::new`] with an explicit per-connection send
@@ -552,7 +874,7 @@ impl<'g, V> SocketTransport<'g, V> {
         graph: &'g ShardedGraph<V>,
         send_cap: usize,
     ) -> std::io::Result<SocketTransport<'g, V>> {
-        SocketTransport::with_options(graph, send_cap, false)
+        SocketTransport::with_options(graph, send_cap, false, None)
     }
 
     /// The `"socket-z"` variant: delta frames are shadow-diff compressed
@@ -560,19 +882,47 @@ impl<'g, V> SocketTransport<'g, V> {
     /// an in-band shadow-reset marker keeping reconnects sound. Pull
     /// frames stay raw.
     pub fn compressed(graph: &'g ShardedGraph<V>) -> std::io::Result<SocketTransport<'g, V>> {
-        SocketTransport::with_options(graph, DEFAULT_SEND_BUFFER, true)
+        SocketTransport::with_options(graph, DEFAULT_SEND_BUFFER, true, None)
+    }
+
+    /// Like [`SocketTransport::new`] but binding every endpoint inside an
+    /// explicit rendezvous directory instead of the generated
+    /// `graphlab-sock-<pid>-<seq>` temp dir. This is the naming half of
+    /// the cross-process story: a parent harness and its children compute
+    /// identical socket paths from the shared dir, where the pid-based
+    /// scheme (kept as the in-process fallback) diverges per process. The
+    /// directory is created if missing and **not** removed on drop — its
+    /// creator owns its lifetime.
+    pub fn with_rendezvous_dir(
+        graph: &'g ShardedGraph<V>,
+        dir: impl Into<PathBuf>,
+    ) -> std::io::Result<SocketTransport<'g, V>> {
+        SocketTransport::with_options(graph, DEFAULT_SEND_BUFFER, false, Some(dir.into()))
     }
 
     fn with_options(
         graph: &'g ShardedGraph<V>,
         send_cap: usize,
         compress: bool,
+        rendezvous: Option<PathBuf>,
     ) -> std::io::Result<SocketTransport<'g, V>> {
         let k = graph.num_shards();
-        let dir = next_socket_dir();
-        // A stale dir from a crashed run (pid reuse) would fail the binds.
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir)?;
+        let (dir, owns_dir) = match rendezvous {
+            Some(dir) => {
+                // An explicit rendezvous dir belongs to whoever made it;
+                // never wipe it, just make sure it exists.
+                std::fs::create_dir_all(&dir)?;
+                (dir, false)
+            }
+            None => {
+                let dir = next_socket_dir();
+                // A stale dir from a crashed run (pid reuse) would fail
+                // the binds.
+                let _ = std::fs::remove_dir_all(&dir);
+                std::fs::create_dir_all(&dir)?;
+                (dir, true)
+            }
+        };
         let shutdown = Arc::new(AtomicBool::new(false));
         let window: Arc<Vec<AtomicUsize>> =
             Arc::new((0..k * k).map(|_| AtomicUsize::new(0)).collect());
@@ -638,6 +988,108 @@ impl<'g, V> SocketTransport<'g, V> {
             backoffs: AtomicU64::new(0),
             lane_timeouts: AtomicU64::new(0),
             pipelined: AtomicU64::new(0),
+            resident: None,
+            owns_dir,
+            board: Arc::new(Vec::new()),
+            pull_listener: Mutex::new(None),
+            pull_clients: (0..k).map(|_| None).collect(),
+        })
+    }
+
+    /// The **resident** constructor: this process runs exactly shard
+    /// `my_shard` of `graph`'s partition and every peer shard lives in
+    /// its own process, all rendezvousing through `dir` (see the module
+    /// docs' "Resident (multi-process) mode"). Binds `shard-<r>.sock`
+    /// and `pull-<r>.sock` **before** connecting out to any peer — early
+    /// peer connects land in the listen backlog, so fleet launch order
+    /// cannot deadlock — then connects a delta connection and a pull
+    /// client toward every peer with bounded retry. Resident mode ships
+    /// raw frames only; the rendezvous dir belongs to the parent harness
+    /// and survives the drop.
+    pub fn resident(
+        graph: &'g ShardedGraph<V>,
+        dir: impl Into<PathBuf>,
+        my_shard: usize,
+    ) -> std::io::Result<SocketTransport<'g, V>> {
+        let k = graph.num_shards();
+        assert!(my_shard < k, "resident shard {my_shard} out of range for {k} shards");
+        let dir: PathBuf = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let window: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..k * k).map(|_| AtomicUsize::new(0)).collect());
+        let inboxes: Arc<Vec<Mutex<Vec<u8>>>> =
+            Arc::new((0..k).map(|_| Mutex::new(Vec::new())).collect());
+        let board: Arc<Vec<AtomicU64>> =
+            Arc::new((0..graph.num_vertices()).map(|_| AtomicU64::new(0)).collect());
+        let delta_listener = UnixListener::bind(Self::endpoint(&dir, my_shard))?;
+        let pull_listener = UnixListener::bind(pull_endpoint(&dir, my_shard))?;
+        let mut readers = Vec::new();
+        {
+            let inboxes = Arc::clone(&inboxes);
+            let board = Arc::clone(&board);
+            let shutdown = Arc::clone(&shutdown);
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("ghost-rx-{my_shard}"))
+                    .spawn(move || {
+                        resident_reader_loop(delta_listener, my_shard, k, inboxes, board, shutdown)
+                    })?,
+            );
+        }
+        let mut conns = Vec::with_capacity(k * k);
+        for a in 0..k {
+            for b in 0..k {
+                if a != my_shard || a == b {
+                    conns.push(None);
+                } else {
+                    conns.push(Some(Mutex::new(Connection::open_rendezvous(
+                        &Self::endpoint(&dir, b),
+                        a as u32,
+                    )?)));
+                }
+            }
+        }
+        let mut pull_clients = Vec::with_capacity(k);
+        for b in 0..k {
+            if b == my_shard {
+                pull_clients.push(None);
+                continue;
+            }
+            let endpoint = pull_endpoint(&dir, b);
+            let stream = connect_retry(&endpoint)?;
+            stream.set_read_timeout(Some(RESIDENT_PULL_TIMEOUT))?;
+            stream.set_write_timeout(Some(RESIDENT_PULL_TIMEOUT))?;
+            pull_clients.push(Some(Mutex::new(PullClient {
+                stream: Some(stream),
+                endpoint,
+                fails: 0,
+            })));
+        }
+        Ok(SocketTransport {
+            graph,
+            k,
+            dir,
+            compress: false,
+            conns,
+            staged_hint: (0..k * k).map(|_| AtomicUsize::new(0)).collect(),
+            window,
+            inboxes,
+            rx_shadow: (0..k).map(|_| Mutex::new(HashMap::new())).collect(),
+            pulls: (0..k * k).map(|_| None).collect(),
+            send_cap: DEFAULT_SEND_BUFFER.max(1),
+            shutdown,
+            readers,
+            backpressure: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            backoffs: AtomicU64::new(0),
+            lane_timeouts: AtomicU64::new(0),
+            pipelined: AtomicU64::new(0),
+            resident: Some(my_shard),
+            owns_dir: false,
+            board,
+            pull_listener: Mutex::new(Some(pull_listener)),
+            pull_clients,
         })
     }
 
@@ -746,7 +1198,11 @@ impl<'g, V: VertexCodec + Clone + Send + Sync> SocketTransport<'g, V> {
             if decode_payload(&header, after, shadows.get(&key).map(|s| s.as_slice()), &mut payload)
                 .is_none()
             {
-                debug_assert!(false, "undecodable diff for vertex {} on {dst_shard}", header.vertex);
+                debug_assert!(
+                    false,
+                    "undecodable diff for vertex {} on {dst_shard}",
+                    header.vertex
+                );
                 continue;
             }
             // The shadow advances on EVERY frame — including ones
@@ -815,6 +1271,221 @@ impl<'g, V: VertexCodec + Clone + Send + Sync> SocketTransport<'g, V> {
         };
         Ok(PullReceipt { applied, served: true, bytes: reply.len() as u64 })
     }
+
+    /// Resident mode: one request/reply wave with a remote owner's pull
+    /// service over the persistent pull client — all requests in one
+    /// batched write, replies read back in order and applied (newest
+    /// wins), every reply's version folded into the version board.
+    /// Returns `None` on a lane failure: the failure is counted, the
+    /// client reconnects (or goes dead after [`PULL_CLIENT_FAILS_MAX`]
+    /// strikes), and the wave's remaining receipts stay default.
+    fn pull_exchange(
+        &self,
+        client: &mut PullClient,
+        dst_shard: usize,
+        reqs: &[PullRequest],
+    ) -> Option<Vec<PullReceipt>> {
+        if client.dead() || client.stream.is_none() {
+            self.lane_timeouts.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+            return None;
+        }
+        let mut batch = Vec::with_capacity(reqs.len() * PullRequest::WIRE_LEN);
+        for req in reqs {
+            req.encode_into(&mut batch);
+        }
+        let exchanged = {
+            let stream = client.stream.as_mut().unwrap();
+            (|| -> std::io::Result<Vec<PullReceipt>> {
+                stream.write_all(&batch)?;
+                let mut receipts = Vec::with_capacity(reqs.len());
+                for _ in reqs {
+                    let mut header = [0u8; FRAME_HEADER];
+                    stream.read_exact(&mut header)?;
+                    let len =
+                        u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
+                    let mut whole = vec![0u8; FRAME_HEADER + len];
+                    whole[..FRAME_HEADER].copy_from_slice(&header);
+                    stream.read_exact(&mut whole[FRAME_HEADER..])?;
+                    let vertex =
+                        u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+                    let version = u64::from_le_bytes(header[4..12].try_into().unwrap());
+                    if let Some(slot) = self.board.get(vertex) {
+                        slot.fetch_max(version, Ordering::AcqRel);
+                    }
+                    let applied =
+                        super::apply_pull_reply(self.graph, dst_shard, &whole).unwrap_or(false);
+                    receipts.push(PullReceipt {
+                        applied,
+                        served: true,
+                        bytes: (PullRequest::WIRE_LEN + whole.len()) as u64,
+                    });
+                }
+                Ok(receipts)
+            })()
+        };
+        match exchanged {
+            Ok(receipts) => {
+                client.fails = 0;
+                Some(receipts)
+            }
+            Err(_) => {
+                self.lane_timeouts.fetch_add(1, Ordering::Relaxed);
+                client.fail_and_reconnect();
+                None
+            }
+        }
+    }
+
+    /// Resident-mode pull path shared by `pull` and `pull_many`: group by
+    /// owner, ship [`PULL_WAVE_MAX`]-sized pipelined waves per owner.
+    fn resident_pull_many(&self, dst_shard: usize, reqs: &[PullRequest]) -> Vec<PullReceipt> {
+        let mut receipts = vec![PullReceipt::default(); reqs.len()];
+        let mut by_owner: Vec<Vec<usize>> = vec![Vec::new(); self.k];
+        for (i, req) in reqs.iter().enumerate() {
+            let owner = self.graph.owner_of(req.vertex);
+            if owner != dst_shard {
+                by_owner[owner].push(i);
+            }
+        }
+        for (owner, idxs) in by_owner.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let Some(client) = self.pull_clients[owner].as_ref() else { continue };
+            let mut client = client.lock().unwrap();
+            for wave in idxs.chunks(PULL_WAVE_MAX) {
+                let wave_reqs: Vec<PullRequest> = wave.iter().map(|&i| reqs[i]).collect();
+                match self.pull_exchange(&mut client, dst_shard, &wave_reqs) {
+                    Some(rs) => {
+                        if wave.len() > 1 {
+                            self.pipelined.fetch_add(wave.len() as u64, Ordering::Relaxed);
+                        }
+                        for (&i, r) in wave.iter().zip(rs) {
+                            receipts[i] = r;
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+        receipts
+    }
+
+    /// The owner-side pull service loop (resident mode; spawned by
+    /// `serve_pulls`): accept requester connections on `pull-<r>.sock`,
+    /// decode pipelined [`PullRequest`] frames off per-connection staging
+    /// buffers, read each requested master row through the engine's
+    /// `master` closure (the row lock is held only around the encode
+    /// callback, never around socket IO), and write the reply delta frame
+    /// back. A connection dying mid-request is dropped; the loop
+    /// survives. Once `local_done` flips — every local engine worker
+    /// exited — the service writes its `done-<r>` marker and lingers,
+    /// still serving, until every peer's marker exists or [`DONE_LINGER`]
+    /// expires, so a fast shard cannot strand a slow peer's last
+    /// admission pulls.
+    fn run_pull_service(
+        &self,
+        listener: UnixListener,
+        master: super::MasterServe<'_, V>,
+        local_done: &AtomicBool,
+    ) {
+        struct Requester {
+            stream: UnixStream,
+            staging: Vec<u8>,
+        }
+        let me = self.resident.unwrap_or(0);
+        let _ = listener.set_nonblocking(true);
+        let mut clients: Vec<Requester> = Vec::new();
+        let mut done_since: Option<std::time::Instant> = None;
+        let mut ticks = 0u64;
+        let mut buf = [0u8; 4096];
+        loop {
+            while let Ok((stream, _)) = listener.accept() {
+                let _ = stream.set_nonblocking(true);
+                clients.push(Requester { stream, staging: Vec::new() });
+            }
+            let mut moved = false;
+            clients.retain_mut(|c| {
+                match c.stream.read(&mut buf) {
+                    // Requester closed (or died): a torn request tail in
+                    // staging dies with the connection.
+                    Ok(0) => return false,
+                    Ok(n) => {
+                        c.staging.extend_from_slice(&buf[..n]);
+                        moved = true;
+                    }
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            ErrorKind::WouldBlock
+                                | ErrorKind::TimedOut
+                                | ErrorKind::Interrupted
+                        ) => {}
+                    Err(_) => return false,
+                }
+                // Serve every complete request staged so far — a
+                // pipelined wave arrives as one batch.
+                let mut off = 0usize;
+                let mut alive = true;
+                while c.staging.len() - off >= PullRequest::WIRE_LEN {
+                    let raw = &c.staging[off..off + PullRequest::WIRE_LEN];
+                    off += PullRequest::WIRE_LEN;
+                    let mut rd = ByteReader::new(raw);
+                    let Some(req) = PullRequest::decode_from(&mut rd) else {
+                        continue;
+                    };
+                    debug_assert_eq!(
+                        self.graph.owner_of(req.vertex),
+                        me,
+                        "pull for vertex {} reached non-owner shard {me}",
+                        req.vertex
+                    );
+                    let mut reply = Vec::new();
+                    master(req.vertex, &mut |data, version| {
+                        debug_assert!(
+                            version >= req.min_version,
+                            "owner {me} would serve vertex {} at {version}, below the \
+                             announced {}",
+                            req.vertex,
+                            req.min_version
+                        );
+                        let delta = GhostDelta::from_vertex(req.vertex, version, data);
+                        reply.reserve(delta.wire_len());
+                        delta.encode_into(&mut reply);
+                    });
+                    // The row lock dropped with the callback; only now
+                    // touch the socket.
+                    if write_all_spin(&mut c.stream, &reply).is_err() {
+                        alive = false;
+                        break;
+                    }
+                    moved = true;
+                }
+                if off > 0 {
+                    c.staging.drain(..off);
+                }
+                alive
+            });
+            if local_done.load(Ordering::Acquire) {
+                if done_since.is_none() {
+                    let _ = std::fs::write(done_marker(&self.dir, me), b"done");
+                    done_since = Some(std::time::Instant::now());
+                }
+                ticks += 1;
+                // Peer-marker sweep, throttled: it is a filesystem scan.
+                if ticks % 64 == 0 {
+                    let all_done = (0..self.k).all(|r| done_marker(&self.dir, r).exists());
+                    if all_done || done_since.map(|t| t.elapsed() > DONE_LINGER).unwrap_or(false)
+                    {
+                        return;
+                    }
+                }
+            }
+            if !moved {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    }
 }
 
 impl<V> Drop for SocketTransport<'_, V> {
@@ -824,10 +1495,20 @@ impl<V> Drop for SocketTransport<'_, V> {
             let conn = conn.lock().unwrap_or_else(|p| p.into_inner());
             let _ = conn.stream.shutdown(std::net::Shutdown::Both);
         }
+        for client in self.pull_clients.iter().flatten() {
+            let client = client.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(stream) = &client.stream {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+            }
+        }
         for r in self.readers.drain(..) {
             let _ = r.join();
         }
-        let _ = std::fs::remove_dir_all(&self.dir);
+        // A rendezvous dir handed in from outside (resident mode, or the
+        // explicit in-process variant) belongs to its creator.
+        if self.owns_dir {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
     }
 }
 
@@ -873,6 +1554,35 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
             self.graph.shard(dst).ghost(gi as usize).note_pending(version);
             let idx = src_shard * self.k + dst;
             let Some(conn) = &self.conns[idx] else { continue };
+            if self.resident.is_some() {
+                // Resident fast path: no window accounting (the
+                // decrementing reader lives in the peer's process — the
+                // kernel's socket buffers are the flow control), and an
+                // eager version-announce frame written straight to the
+                // stream. The direct write cannot tear frames: every
+                // prior write under this lock was a complete frame
+                // (`flush` always runs the staged queue to empty), so
+                // the stream is frame-aligned at every lock acquisition.
+                let mut c = conn.lock().unwrap();
+                if c.dead {
+                    continue;
+                }
+                let n = frame.len();
+                c.stage(frame.clone());
+                let mut announce = [0u8; FRAME_HEADER];
+                announce[..4].copy_from_slice(&vertex.to_le_bytes());
+                announce[4..12].copy_from_slice(&version.to_le_bytes());
+                announce[12..16].copy_from_slice(&ANNOUNCE_LEN.to_le_bytes());
+                let _ = c.stream.write_all(&announce);
+                if c.staged_bytes >= STAGE_MAX_BYTES || c.staged.len() >= STAGE_MAX_FRAMES {
+                    c.flush(dst, &self.window[idx], &self.reconnects, &self.backoffs);
+                    self.staged_hint[idx].store(0, Ordering::Release);
+                } else {
+                    self.staged_hint[idx].store(c.staged_bytes, Ordering::Release);
+                }
+                bytes += (n + FRAME_HEADER) as u64;
+                continue;
+            }
             // Bounded send window: block the flush (backpressure) until
             // the reader lands enough in-flight bytes. An empty window
             // always admits the frame, so frames larger than the whole
@@ -950,11 +1660,25 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
         if self.k < 2 {
             return out;
         }
-        // Senders are in-process: staged frames bound for this shard must
-        // not outwait the drain that would apply them.
-        self.flush_toward(dst_shard);
-        if self.compress {
-            return self.drain_compressed(dst_shard);
+        if let Some(me) = self.resident {
+            debug_assert_eq!(dst_shard, me, "a resident transport only drains its own shard");
+            // Cross-process, the senders that need nudging are OUR staged
+            // frames toward the peers (the in-process trick of flushing
+            // every sender toward `dst` does nothing from here): push
+            // them out on every drain tick so peer replicas never wait on
+            // a lazy stage queue.
+            for peer in 0..self.k {
+                if peer != me {
+                    self.flush_toward(peer);
+                }
+            }
+        } else {
+            // Senders are in-process: staged frames bound for this shard
+            // must not outwait the drain that would apply them.
+            self.flush_toward(dst_shard);
+            if self.compress {
+                return self.drain_compressed(dst_shard);
+            }
         }
         let buf = {
             let mut q = self.inboxes[dst_shard].lock().unwrap();
@@ -995,6 +1719,16 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
         req: PullRequest,
         master: &dyn Fn(VertexId) -> (&'m V, u64),
     ) -> PullReceipt {
+        if self.resident.is_some() {
+            // Resident mode: the owner's master row lives in another
+            // process — the exchange goes through its pull service, and
+            // the local `master` closure is never consulted.
+            let _ = master;
+            return self
+                .resident_pull_many(dst_shard, std::slice::from_ref(&req))
+                .pop()
+                .unwrap_or_default();
+        }
         let owner = self.graph.owner_of(req.vertex);
         let Some(lane) = &self.pulls[dst_shard * self.k + owner] else {
             return PullReceipt::default();
@@ -1031,6 +1765,10 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
         let mut receipts = vec![PullReceipt::default(); reqs.len()];
         if self.k < 2 {
             return receipts;
+        }
+        if self.resident.is_some() {
+            let _ = master;
+            return self.resident_pull_many(dst_shard, reqs);
         }
         let mut by_owner: Vec<Vec<usize>> = vec![Vec::new(); self.k];
         for (i, req) in reqs.iter().enumerate() {
@@ -1082,6 +1820,11 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
     }
 
     fn queued_bytes(&self, dst_shard: usize) -> u64 {
+        if self.resident.is_some() {
+            // The send windows are unaccounted cross-process; only the
+            // local inbox depth is observable.
+            return self.inboxes[dst_shard].lock().unwrap().len() as u64;
+        }
         let mut total = self.inboxes[dst_shard].lock().unwrap().len() as u64;
         for src in 0..self.k {
             total += self.window[src * self.k + dst_shard].load(Ordering::Acquire) as u64;
@@ -1090,6 +1833,18 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
     }
 
     fn finalize(&self) {
+        if let Some(me) = self.resident {
+            // Ship everything still staged; the landing acknowledgment
+            // lives in the peers' processes, so there is no window to
+            // wait on — the done-marker barrier in the pull service is
+            // the cross-process rendezvous for run completion.
+            for peer in 0..self.k {
+                if peer != me {
+                    self.flush_toward(peer);
+                }
+            }
+            return;
+        }
         // Push every staged frame into the kernel first — the window
         // below cannot drain bytes that never left a staging queue.
         for dst in 0..self.k {
@@ -1127,6 +1882,38 @@ impl<V: VertexCodec + Clone + Send + Sync> GhostTransport<V> for SocketTransport
 
     fn reconnect_backoffs(&self) -> u64 {
         self.backoffs.load(Ordering::Relaxed)
+    }
+
+    fn known_master_version(&self, vertex: VertexId, local: u64) -> u64 {
+        if self.resident.is_none() {
+            return local;
+        }
+        // Resident mode: the local `master_versions` row of a remote
+        // owner never moves — the version board (announce frames + data
+        // frame headers + pull replies) is the only witness that the
+        // remote master did.
+        match self.board.get(vertex as usize) {
+            Some(slot) => local.max(slot.load(Ordering::Acquire)),
+            None => local,
+        }
+    }
+
+    fn serve_pulls<'scope, 'env>(
+        &'scope self,
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        master: super::MasterServe<'scope, V>,
+        local_done: &'scope AtomicBool,
+    ) -> bool {
+        if self.resident.is_none() {
+            return false;
+        }
+        let Some(listener) = self.pull_listener.lock().unwrap().take() else {
+            return false;
+        };
+        std::thread::Builder::new()
+            .name(format!("pull-service-{}", self.resident.unwrap_or(0)))
+            .spawn_scoped(scope, move || self.run_pull_service(listener, master, local_done))
+            .is_ok()
     }
 }
 
@@ -1401,5 +2188,198 @@ mod tests {
             );
         }
         assert!(tested, "the cross graph must yield a shard with >= 2 remote ghosts");
+    }
+
+    /// A fresh rendezvous dir for resident-mode tests, in the role of the
+    /// parent harness (which owns the dir's lifetime).
+    fn fresh_rendezvous(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("graphlab-rdv-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Read one pull-reply delta frame off a raw requester stream and
+    /// decode its `u64` payload.
+    fn read_reply(stream: &mut UnixStream) -> (u32, u64, u64) {
+        let mut header = [0u8; FRAME_HEADER];
+        stream.read_exact(&mut header).expect("reply header");
+        let vertex = u32::from_le_bytes(header[..4].try_into().unwrap());
+        let version = u64::from_le_bytes(header[4..12].try_into().unwrap());
+        let len = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
+        let mut whole = vec![0u8; FRAME_HEADER + len];
+        whole[..FRAME_HEADER].copy_from_slice(&header);
+        stream.read_exact(&mut whole[FRAME_HEADER..]).expect("reply payload");
+        let mut r = ByteReader::new(&whole);
+        let delta = GhostDelta::decode_from(&mut r).expect("reply frame decodes");
+        (vertex, version, delta.decode_vertex::<u64>().expect("payload decodes"))
+    }
+
+    #[test]
+    fn pull_service_serves_concurrent_waves_and_survives_torn_requesters() {
+        let dir = fresh_rendezvous("service");
+        let mut g = chain(8);
+        let sg = ShardedGraph::new(&mut g, 1);
+        let t = SocketTransport::resident(&sg, &dir, 0).expect("resident setup");
+        let masters: Vec<u64> = (0..8u64).map(|i| 5000 + i).collect();
+        let master_fn = |u: VertexId, out: &mut dyn FnMut(&u64, u64)| {
+            out(&masters[u as usize], 7);
+        };
+        let done = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let master: crate::transport::MasterServe<'_, u64> = &master_fn;
+            assert!(
+                GhostTransport::serve_pulls(&t, scope, master, &done),
+                "a resident transport spawns its pull service"
+            );
+            // A requester that dies mid-request: five bytes of a twelve
+            // byte frame, then gone. The service must shrug it off.
+            {
+                let mut torn = UnixStream::connect(pull_endpoint(&dir, 0)).unwrap();
+                torn.write_all(&[1, 2, 3, 4, 5]).unwrap();
+                let _ = torn.shutdown(std::net::Shutdown::Both);
+            }
+            // Two concurrent fake requester processes, each shipping one
+            // pipelined wave and reading the replies back in order.
+            let waves: [Vec<u32>; 2] = [vec![0, 1, 2, 3], vec![4, 5, 6, 7]];
+            let mut requesters = Vec::new();
+            for wave in &waves {
+                let masters = &masters;
+                let dir = &dir;
+                requesters.push(scope.spawn(move || {
+                    let mut stream = UnixStream::connect(pull_endpoint(dir, 0)).unwrap();
+                    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+                    let mut batch = Vec::new();
+                    for &u in wave {
+                        PullRequest { vertex: u, min_version: 7 }.encode_into(&mut batch);
+                    }
+                    stream.write_all(&batch).unwrap();
+                    for &u in wave {
+                        let (vertex, version, value) = read_reply(&mut stream);
+                        assert_eq!(vertex, u, "replies come back in request order");
+                        assert_eq!(version, 7);
+                        assert_eq!(value, masters[u as usize]);
+                    }
+                }));
+            }
+            for r in requesters {
+                r.join().expect("requester thread");
+            }
+            // One more requester after the torn one proves the loop is
+            // still alive and serving.
+            let mut late = UnixStream::connect(pull_endpoint(&dir, 0)).unwrap();
+            late.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            let mut one = Vec::new();
+            PullRequest { vertex: 3, min_version: 7 }.encode_into(&mut one);
+            late.write_all(&one).unwrap();
+            assert_eq!(read_reply(&mut late).2, masters[3]);
+            // Clean shutdown: the engine's workers finishing flips the
+            // done flag (run_core does this right before `finalize`);
+            // with k = 1 the service's own marker completes the fleet and
+            // the scope join below proves the thread exited.
+            done.store(true, Ordering::Release);
+        });
+        assert!(done_marker(&dir, 0).exists(), "the service wrote its done marker");
+        drop(t);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resident_pair_announces_versions_and_pulls_through_owner_service() {
+        let dir = fresh_rendezvous("pair");
+        let mut g1 = chain(8);
+        let mut g2 = chain(8);
+        // Each "process" builds the partition independently and
+        // deterministically, exactly like real resident children.
+        let sg1 = ShardedGraph::new(&mut g1, 2);
+        let sg2 = ShardedGraph::new(&mut g2, 2);
+        let barrier = std::sync::Barrier::new(2);
+        std::thread::scope(|s| {
+            // Owner side: shard 0's resident transport plus its pull
+            // service, the only path to shard 0's master rows.
+            s.spawn(|| {
+                let v = (0..8u32)
+                    .find(|&u| {
+                        sg1.owner_of(u) == 0
+                            && sg1.replicas_of(u).iter().any(|&(sh, _)| sh == 1)
+                    })
+                    .expect("a shard-0-owned boundary vertex");
+                let t0 = SocketTransport::resident(&sg1, &dir, 0).expect("resident 0");
+                let val = AtomicU64::new(999);
+                let ver = AtomicU64::new(5);
+                let master_fn = |u: VertexId, out: &mut dyn FnMut(&u64, u64)| {
+                    let _ = u;
+                    let snapshot = val.load(Ordering::Acquire);
+                    out(&snapshot, ver.load(Ordering::Acquire));
+                };
+                let done = AtomicBool::new(false);
+                std::thread::scope(|scope| {
+                    let master: crate::transport::MasterServe<'_, u64> = &master_fn;
+                    assert!(GhostTransport::serve_pulls(&t0, scope, master, &done));
+                    let r = GhostTransport::send(&t0, 0, v, 5, &999u64);
+                    assert!(r.bytes > 0);
+                    barrier.wait(); // announce is on the wire
+                    barrier.wait(); // peer finished its pull
+                    val.store(1234, Ordering::Release);
+                    ver.store(6, Ordering::Release);
+                    let _ = GhostTransport::send(&t0, 0, v, 6, &1234u64);
+                    // A resident drain flushes this shard's staged frames
+                    // toward every peer.
+                    let _ = GhostTransport::drain(&t0, 0);
+                    barrier.wait(); // data frames flushed
+                    barrier.wait(); // peer drained and wrote done-1
+                    done.store(true, Ordering::Release);
+                });
+            });
+            // Requester side: shard 1's resident transport.
+            s.spawn(|| {
+                let v = (0..8u32)
+                    .find(|&u| {
+                        sg2.owner_of(u) == 0
+                            && sg2.replicas_of(u).iter().any(|&(sh, _)| sh == 1)
+                    })
+                    .expect("a shard-0-owned boundary vertex");
+                let t1 = SocketTransport::resident(&sg2, &dir, 1).expect("resident 1");
+                barrier.wait(); // announce is on the wire
+                // The eager announce frame raises the version board while
+                // the data frame itself is still staged in the peer.
+                let mut known = 0;
+                for _ in 0..10_000 {
+                    known = GhostTransport::known_master_version(&t1, v, 0);
+                    if known >= 5 {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                assert_eq!(known, 5, "announce frame fed the version board before any flush");
+                static ZERO: u64 = 0;
+                let receipt = GhostTransport::pull(
+                    &t1,
+                    1,
+                    PullRequest { vertex: v, min_version: 5 },
+                    &|_| (&ZERO, 0),
+                );
+                assert!(receipt.served, "the owner-side service answered");
+                assert!(receipt.applied, "the reply applied to the ghost");
+                assert!(receipt.bytes > PullRequest::WIRE_LEN as u64);
+                let (_, gi) = *sg2
+                    .replicas_of(v)
+                    .iter()
+                    .find(|&&(sh, _)| sh == 1)
+                    .unwrap();
+                let entry = sg2.shard(1).ghost(gi as usize);
+                assert_eq!(entry.read(), 999, "pull fetched the owner's master row");
+                assert_eq!(entry.version(), 5);
+                barrier.wait(); // tell the owner the pull landed
+                barrier.wait(); // data frames flushed
+                let applied = drain_until(&t1, 1, 1);
+                assert!(applied >= 1, "flushed delta frames apply on a resident drain");
+                assert_eq!(entry.read(), 1234);
+                assert_eq!(entry.version(), 6);
+                std::fs::write(done_marker(&dir, 1), b"done").unwrap();
+                barrier.wait();
+            });
+        });
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
